@@ -1,0 +1,42 @@
+//! Calibration probe: run one benchmark baseline-vs-fused with ad-hoc
+//! profile-knob overrides (`key=val` args: shared, stream, scatter, bcast,
+//! ld, ws, div, regs, region, ctas). The tool used to fit the workload
+//! profiles to the paper's characterisation — see DESIGN.md "Calibration".
+//!
+//! Run: `cargo run --release --example calibration_probe SM ws=244 ld=0.42`
+
+use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::sim::gpu::run_benchmark_seeded;
+use amoeba_gpu::workload::bench;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let name = args.first().cloned().unwrap_or("SM".into());
+    let cfg = SystemConfig::gtx480();
+    let mut p = bench(&name).unwrap();
+    // knob overrides: key=val pairs
+    for kv in &args[1..] {
+        let (k, v) = kv.split_once('=').unwrap();
+        let f: f64 = v.parse().unwrap();
+        match k {
+            "shared" => p.shared_frac = f,
+            "stream" => p.stream_frac = f,
+            "scatter" => p.scatter_frac = f,
+            "bcast" => p.broadcast_frac = f,
+            "ld" => p.frac_ld = f,
+            "ws" => p.working_set_lines = f as u32,
+            "div" => p.div_prob = f,
+            "regs" => p.regs_per_thread = f as u32,
+            "region" => p.div_region = f as u16,
+            "ctas" => p.num_ctas = f as u32,
+            _ => panic!("unknown knob {k}"),
+        }
+    }
+    for scheme in [Scheme::Baseline, Scheme::ScaleUp] {
+        let t0 = std::time::Instant::now();
+        let r = run_benchmark_seeded(&cfg, &p, scheme, 9);
+        println!("{scheme:12}: cycles={} ipc={:.2} l1d_miss={:.3} noc_lat={:.0} mc_stall={:.3} ctrl={:.3} mem_stall={} wall={:.1}s",
+            r.cycles, r.ipc(), r.sm.l1d_miss_rate(), r.sm.avg_noc_latency(),
+            r.chip.mc_inject_stall_rate(), r.sm.control_stall_rate(), r.sm.stall_memory, t0.elapsed().as_secs_f32());
+    }
+}

@@ -1,0 +1,40 @@
+//! Fuse/split dynamics trace (the Fig 19 experiment): run RAY under
+//! warp-regrouping and render each cluster's fuse/split phases over time
+//! as an ASCII timeline.
+//!
+//! Run: `cargo run --release --example dynamics_trace [BENCH]`
+
+use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::sim::core::ClusterMode;
+use amoeba_gpu::sim::gpu::run_benchmark;
+use amoeba_gpu::workload::bench;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "RAY".to_string());
+    let profile = bench(&name).ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}'"))?;
+    let cfg = SystemConfig::gtx480();
+    println!("tracing {name} under warp_regrouping ({} clusters)...", cfg.num_sms / 2);
+    let r = run_benchmark(&cfg, &profile, Scheme::WarpRegroup);
+
+    // Render the first 5 clusters (as the paper's Fig 19 does).
+    let shown = 5.min(cfg.num_sms / 2);
+    println!("\nlegend: F=fused  s=split  .=private/baseline   (one column per sample)\n");
+    for sm in 0..shown {
+        let line: String = r
+            .phases
+            .iter()
+            .map(|p| match p.modes.get(sm) {
+                Some(ClusterMode::Fused) => 'F',
+                Some(ClusterMode::FusedSplit) => 's',
+                _ => '.',
+            })
+            .collect();
+        println!("SM{sm:02} |{line}|");
+    }
+    let splits = r.sm.split_events;
+    let fuses = r.sm.fuse_events;
+    println!("\nsplit events: {splits}, re-fuse events: {fuses}");
+    println!("fused cycles: {}, split cycles: {}", r.sm.fused_cycles, r.sm.split_cycles);
+    println!("IPC: {:.2}", r.ipc());
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Full evaluation: the Fig 12 headline experiment — every benchmark of
+//! the paper's main suite under every scheme, with speedups over the
+//! scale-out baseline and the geometric mean.
+//!
+//! Run: `cargo run --release --example full_eval [--quick]`
+
+use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::sim::gpu::run_benchmark_seeded;
+use amoeba_gpu::stats::Table;
+use amoeba_gpu::workload::{bench, FIG12_SET};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut cfg = SystemConfig::gtx480();
+    if quick {
+        cfg.num_sms = 8;
+        cfg.num_mcs = 4;
+    }
+    let mut t = Table::new(
+        "Fig 12 — IPC speedup over scale-out baseline",
+        &["bench", "scale_up", "static_fuse", "direct_split", "warp_regrouping", "dws"],
+    );
+    for name in FIG12_SET {
+        let mut p = bench(name).unwrap();
+        if quick {
+            p.num_ctas = p.num_ctas.min(12);
+            p.insns_per_thread = p.insns_per_thread.min(100);
+            p.num_kernels = 1;
+        }
+        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 0xF16).ipc().max(1e-9);
+        let row: Vec<f64> = [
+            Scheme::ScaleUp,
+            Scheme::StaticFuse,
+            Scheme::DirectSplit,
+            Scheme::WarpRegroup,
+            Scheme::Dws,
+        ]
+        .iter()
+        .map(|s| run_benchmark_seeded(&cfg, &p, *s, 0xF16).ipc() / base)
+        .collect();
+        eprintln!("{name:6}: {row:.2?}");
+        t.row(name, row);
+    }
+    let g = t.geomean_row();
+    t.row("GEOMEAN", g);
+    println!("\n{}", t.render());
+    Ok(())
+}

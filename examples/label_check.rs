@@ -1,0 +1,28 @@
+//! Label check: measure baseline-vs-fused IPC for every benchmark and
+//! compare the measured winner against the paper's ground-truth label
+//! (`scale_up_expected`). The suite-level calibration acceptance test.
+//!
+//! Run: `cargo run --release --example label_check`
+
+use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::sim::gpu::run_benchmark_seeded;
+use amoeba_gpu::workload::all_benchmarks;
+
+fn main() {
+    let cfg = SystemConfig::gtx480();
+    println!("{:6} {:>8} {:>8} {:>7} {:>9} {:>6}", "bench", "base", "fused", "ratio", "expected", "match");
+    let mut ok = 0;
+    let mut n = 0;
+    for p in all_benchmarks() {
+        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9).ipc();
+        let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, 9).ipc();
+        let ratio = fused / base;
+        let measured_up = ratio > 1.02;
+        let m = measured_up == p.scale_up_expected;
+        ok += m as u32;
+        n += 1;
+        println!("{:6} {:8.1} {:8.1} {:7.2} {:>9} {:>6}", p.name, base, fused, ratio,
+            if p.scale_up_expected { "up" } else { "out" }, if m { "OK" } else { "MISS" });
+    }
+    println!("label match: {ok}/{n}");
+}

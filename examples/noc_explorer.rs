@@ -1,0 +1,44 @@
+//! NoC scaling explorer: reproduce the Fig 3 methodology interactively —
+//! sweep SM counts under mesh vs perfect NoC and print normalised IPC.
+//!
+//! Run: `cargo run --release --example noc_explorer [BENCH...]`
+
+use amoeba_gpu::config::{NocMode, Scheme, SystemConfig};
+use amoeba_gpu::sim::gpu::run_benchmark;
+use amoeba_gpu::stats::Table;
+use amoeba_gpu::workload::bench;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let names: Vec<String> = if args.is_empty() {
+        ["CP", "RAY", "MUM", "SC"].iter().map(|s| s.to_string()).collect()
+    } else {
+        args
+    };
+    let sm_counts = [16usize, 24, 36, 64];
+
+    for mode in [NocMode::Mesh, NocMode::Perfect] {
+        let mut t = Table::new(
+            format!("IPC vs SM count ({mode} NoC), normalised to 16 SMs"),
+            &["bench", "16", "24", "36", "64"],
+        );
+        for name in &names {
+            let profile = bench(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}'"))?;
+            let mut row = Vec::new();
+            let mut base = None;
+            for n in sm_counts {
+                let mut cfg = SystemConfig::gtx480().with_sm_count(n);
+                cfg.noc_mode = mode;
+                let ipc = run_benchmark(&cfg, &profile, Scheme::Baseline).ipc();
+                let b = *base.get_or_insert(ipc);
+                row.push(ipc / b);
+            }
+            t.row(name.clone(), row);
+            eprint!(".");
+        }
+        eprintln!();
+        println!("{}", t.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Quickstart: simulate one benchmark under the baseline and under full
+//! AMOEBA (warp regrouping), and print the speedup.
+//!
+//! Run: `cargo run --release --example quickstart [BENCH]`
+
+use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::sim::gpu::run_benchmark;
+use amoeba_gpu::workload::bench;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "SM".to_string());
+    let profile =
+        bench(&name).ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}' (try: amoeba list)"))?;
+    let cfg = SystemConfig::gtx480();
+
+    println!("simulating {name} on the Table-1 machine ({} SMs)...", cfg.num_sms);
+    let base = run_benchmark(&cfg, &profile, Scheme::Baseline);
+    println!("  baseline        : IPC {:.2} ({} cycles)", base.ipc(), base.cycles);
+
+    let amoeba = run_benchmark(&cfg, &profile, Scheme::WarpRegroup);
+    println!("  AMOEBA(regroup) : IPC {:.2} ({} cycles)", amoeba.ipc(), amoeba.cycles);
+    for (i, d) in amoeba.decisions.iter().enumerate() {
+        println!(
+            "    kernel {i}: P(scale-up)={:.3} -> {}",
+            d.probability,
+            if d.scale_up { "FUSE" } else { "stay scaled out" }
+        );
+    }
+    println!("  speedup         : {:.2}x", amoeba.ipc() / base.ipc().max(1e-9));
+    Ok(())
+}

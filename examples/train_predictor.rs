@@ -1,0 +1,132 @@
+//! End-to-end driver: the full offline-training + online-inference loop
+//! of the AMOEBA scalability predictor, exercising all three layers.
+//!
+//! 1. **Data generation (L3)**: run every benchmark in the suite under
+//!    both the scale-out baseline and the fused scale-up machine, collect
+//!    the profiling-window metric sample, and label it with which machine
+//!    actually won (measured IPC).
+//! 2. **Training (L2+L1 via PJRT)**: drive the AOT-compiled
+//!    `predictor_train.hlo.txt` (JAX train step wrapping the Pallas
+//!    gradient kernel) from rust — SGD epochs entirely through PJRT.
+//! 3. **Evaluation**: report training accuracy, compare against the
+//!    native-rust predictor, and run a full AMOEBA simulation using the
+//!    *learned* model through the compiled `predictor_infer` path.
+//!
+//! Run: `make artifacts && cargo run --release --example train_predictor`
+//! The headline numbers are recorded in EXPERIMENTS.md.
+
+use amoeba_gpu::amoeba::{Controller, MetricsSample, ScalePredictor, NUM_FEATURES};
+use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::runtime::{HloPredictor, HloTrainer, Runtime};
+use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_with_controller};
+use amoeba_gpu::workload::all_benchmarks;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut cfg = SystemConfig::gtx480();
+    if quick {
+        cfg.num_sms = 8;
+        cfg.num_mcs = 4;
+    }
+
+    // ---------------- Phase 1: generate labelled samples -----------------
+    println!("== phase 1: generating training data from simulations ==");
+    let mut xs: Vec<[f32; NUM_FEATURES]> = Vec::new();
+    let mut ys: Vec<f32> = Vec::new();
+    let seeds: &[u64] = if quick { &[1] } else { &[1, 2, 3] };
+    for profile in all_benchmarks() {
+        let mut p = profile.clone();
+        if quick {
+            p.num_ctas = p.num_ctas.min(12);
+            p.insns_per_thread = p.insns_per_thread.min(100);
+            p.num_kernels = 1;
+        }
+        for &seed in seeds {
+            // The profiling sample comes from a StaticFuse run (it always
+            // profiles in scale-out mode first).
+            let probe = run_benchmark_seeded(&cfg, &p, Scheme::StaticFuse, seed);
+            let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, seed);
+            let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, seed);
+            let label = (fused.ipc() > base.ipc()) as u8 as f32;
+            for s in &probe.samples {
+                xs.push(s.as_f32());
+                ys.push(label);
+            }
+            println!(
+                "  {:6} seed={seed}: base={:.2} fused={:.2} -> label={}",
+                p.name,
+                base.ipc(),
+                fused.ipc(),
+                if label > 0.5 { "scale-up" } else { "scale-out" }
+            );
+        }
+    }
+    println!("  collected {} samples", xs.len());
+
+    // ---------------- Phase 2: train via the compiled HLO ----------------
+    println!("\n== phase 2: SGD through predictor_train.hlo.txt (PJRT) ==");
+    let rt = Runtime::new()?;
+    println!("  PJRT platform: {}", rt.platform());
+    let mut trainer = HloTrainer::new(&rt)?;
+    let batch = trainer.batch;
+    // Tile the dataset up to the fixed batch (with replication).
+    let mut x_flat = vec![0f32; batch * NUM_FEATURES];
+    let mut y_flat = vec![0f32; batch];
+    for i in 0..batch {
+        let j = i % xs.len();
+        x_flat[i * NUM_FEATURES..(i + 1) * NUM_FEATURES].copy_from_slice(&xs[j]);
+        y_flat[i] = ys[j];
+    }
+    let epochs = if quick { 200 } else { 800 };
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for e in 0..epochs {
+        last_loss = trainer.step(&x_flat, &y_flat, 0.8)?;
+        first_loss.get_or_insert(last_loss);
+        if e % (epochs / 8).max(1) == 0 {
+            println!("  epoch {e:4}: loss {last_loss:.4}");
+        }
+    }
+    println!("  loss: {:.4} -> {last_loss:.4}", first_loss.unwrap_or(0.0));
+    println!("  learned weights: {:?}", trainer.weights);
+    println!("  learned intercept: {:.4}", trainer.intercept);
+
+    // ---------------- Phase 3: evaluate ----------------------------------
+    println!("\n== phase 3: evaluation ==");
+    let mut w = [0f32; NUM_FEATURES];
+    w.copy_from_slice(&trainer.weights);
+    let mut hlo = HloPredictor::new(&rt, w, trainer.intercept)?;
+    let mut correct = 0;
+    for (x, y) in xs.iter().zip(&ys) {
+        let mut f = [0f64; NUM_FEATURES];
+        for (o, v) in f.iter_mut().zip(x) {
+            *o = *v as f64;
+        }
+        let s = MetricsSample { features: f };
+        let pred = hlo.scale_up(&s);
+        correct += (pred == (*y > 0.5)) as u32;
+    }
+    let acc = correct as f64 / xs.len().max(1) as f64;
+    println!("  training accuracy (HLO inference path): {:.1}%", acc * 100.0);
+
+    // Full AMOEBA run with the learned model through PJRT on a benchmark
+    // with a strong fuse signal.
+    let mut p = all_benchmarks().into_iter().find(|b| b.name == "SM").unwrap();
+    if quick {
+        p.num_ctas = 12;
+        p.insns_per_thread = 100;
+        p.num_kernels = 1;
+    }
+    let predictor = HloPredictor::new(&rt, w, trainer.intercept)?;
+    let controller = Controller::with_predictor(Box::new(predictor));
+    let amoeba = run_benchmark_with_controller(&cfg, &p, Scheme::WarpRegroup, controller, 7);
+    let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 7);
+    println!(
+        "  SM with learned predictor through PJRT: {:.2}x over baseline",
+        amoeba.ipc() / base.ipc().max(1e-9)
+    );
+    for (i, d) in amoeba.decisions.iter().enumerate() {
+        println!("    kernel {i}: P={:.3} -> {}", d.probability, if d.scale_up { "FUSE" } else { "out" });
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+"""AOT: lower the Layer-2 model to HLO *text* artifacts for the rust runtime.
+
+HLO text — NOT ``HloModuleProto.serialize()`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/): ``python -m compile.aot --out-dir ../artifacts``
+Invoked by ``make artifacts``; a no-op when outputs are newer than inputs
+(handled by make). Python never runs on the rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, fn, example_args in model.specs():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text)} chars -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import predictor, ref  # noqa: F401

@@ -1,0 +1,188 @@
+"""Layer-1 Pallas kernels for the AMOEBA scalability predictor.
+
+The paper (§5.5) evaluates its binary-logistic predictor in a pipelined
+Booth-Wallace MAC IP block fed by per-SM performance counters. On a
+TPU-class target the natural re-expression (DESIGN.md §Hardware-Adaptation)
+is a *batched* fused MAC + sigmoid: one MXU-shaped pass evaluates a whole
+batch of pending per-kernel decisions (and, offline, the whole training
+set). The batch dimension is tiled with BlockSpec so the HBM->VMEM schedule
+streams metric rows through VMEM exactly like the paper's counter buffer
+streamed into the MAC.
+
+Kernels (all checked against ``ref.py`` by pytest/hypothesis):
+
+* ``mac_sigmoid_kernel``  — P = sigmoid(X @ w + b) over a (block_b, F) tile.
+* ``bce_grad_kernel``     — per-tile contribution to (dw, db, loss) of the
+                            batch-mean binary cross entropy, accumulated
+                            across sequential grid steps.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU lowering is treated as compile-only
+(DESIGN.md). Numerics are identical either way.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile. 128 matches the MXU systolic dimension; the feature
+# dimension (10 metrics, padded by the caller if desired) always stays
+# resident in VMEM.
+DEFAULT_BLOCK_B = 128
+
+
+def _pad_batch(a: jnp.ndarray, block_b: int) -> jnp.ndarray:
+    """Pad the leading (batch) dim of ``a`` up to a multiple of block_b."""
+    n = a.shape[0]
+    rem = (-n) % block_b
+    if rem == 0:
+        return a
+    pad = [(0, rem)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad)
+
+
+# ---------------------------------------------------------------------------
+# Forward: P = sigmoid(X @ w + b)
+# ---------------------------------------------------------------------------
+
+def mac_sigmoid_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One batch tile of the fused MAC + sigmoid.
+
+    x_ref: (block_b, F) metric rows      (VMEM tile of the batch)
+    w_ref: (F, 1)       coefficients     (fully VMEM-resident)
+    b_ref: (1, 1)       intercept
+    o_ref: (block_b, 1) probabilities
+    """
+    # MXU-shaped matmul; accumulate in f32 regardless of input dtype.
+    logit = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) + b_ref[0, 0].astype(jnp.float32)
+    o_ref[...] = (1.0 / (1.0 + jnp.exp(-logit))).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def logistic_forward(x, w, b, *, block_b: int = DEFAULT_BLOCK_B):
+    """P = sigmoid(x @ w + b) via the Pallas MAC kernel.
+
+    x: (batch, F) float; w: (F,) or (F,1); b: scalar or (1,1).
+    Returns (batch,) float32 probabilities.
+    """
+    n, f = x.shape
+    w2 = jnp.asarray(w, jnp.float32).reshape(f, 1)
+    b2 = jnp.asarray(b, jnp.float32).reshape(1, 1)
+    xp = _pad_batch(jnp.asarray(x), block_b)
+    grid = (xp.shape[0] // block_b,)
+    out = pl.pallas_call(
+        mac_sigmoid_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.float32),
+        interpret=True,
+    )(xp, w2, b2)
+    return out[:n, 0]
+
+
+# ---------------------------------------------------------------------------
+# Backward: batch-mean BCE gradient, tile-accumulated
+# ---------------------------------------------------------------------------
+
+def bce_grad_kernel(x_ref, w_ref, b_ref, y_ref, nvalid_ref,
+                    gw_ref, gb_ref, loss_ref):
+    """Accumulate one batch tile's contribution to (dw, db, loss).
+
+    The grid walks batch tiles sequentially (Pallas guarantees sequential
+    grid execution on TPU/interpret), so accumulation into the output refs
+    is safe: tile 0 initialises, later tiles add. Padded rows are masked
+    with a global-row iota against ``nvalid``.
+    """
+    i = pl.program_id(0)
+    block_b = x_ref.shape[0]
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    nvalid = nvalid_ref[0, 0]
+
+    z = jnp.dot(x, w_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32) + b_ref[0, 0]
+    row = jax.lax.broadcasted_iota(jnp.float32, (block_b, 1), 0) + i * block_b
+    valid = (row < nvalid).astype(jnp.float32)
+
+    p = 1.0 / (1.0 + jnp.exp(-z))
+    dz = valid * (p - y) / nvalid
+    # Stable BCE: max(z,0) - z*y + log1p(exp(-|z|)), masked then tile-summed.
+    bce = valid * (jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+    gw_tile = jnp.dot(x.T, dz, preferred_element_type=jnp.float32)
+    gb_tile = jnp.sum(dz, keepdims=True).reshape(1, 1)
+    loss_tile = (jnp.sum(bce, keepdims=True) / nvalid).reshape(1, 1)
+
+    @pl.when(i == 0)
+    def _init():
+        gw_ref[...] = gw_tile
+        gb_ref[...] = gb_tile
+        loss_ref[...] = loss_tile
+
+    @pl.when(i > 0)
+    def _acc():
+        gw_ref[...] += gw_tile
+        gb_ref[...] += gb_tile
+        loss_ref[...] += loss_tile
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def bce_grads(x, w, b, y, *, block_b: int = DEFAULT_BLOCK_B):
+    """(dw, db, loss) of mean-BCE via the Pallas gradient kernel.
+
+    x: (batch, F); w: (F,)/(F,1); b: scalar; y: (batch,)/(batch,1) in {0,1}.
+    Returns dw (F,), db scalar, loss scalar — all float32.
+    """
+    n, f = x.shape
+    w2 = jnp.asarray(w, jnp.float32).reshape(f, 1)
+    b2 = jnp.asarray(b, jnp.float32).reshape(1, 1)
+    y2 = jnp.asarray(y, jnp.float32).reshape(n, 1)
+    xp = _pad_batch(jnp.asarray(x), block_b)
+    yp = _pad_batch(y2, block_b)
+    nvalid = jnp.full((1, 1), float(n), jnp.float32)
+    grid = (xp.shape[0] // block_b,)
+    gw, gb, loss = pl.pallas_call(
+        bce_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((f, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, w2, b2, yp, nvalid)
+    return gw[:, 0], gb[0, 0], loss[0, 0]
+
+
+def vmem_footprint_bytes(block_b: int, f: int) -> int:
+    """Analytic VMEM footprint of one forward tile (DESIGN.md §Perf L1).
+
+    x tile + w + b + out tile, all f32. Used by the perf report, and by
+    tests asserting we stay far under the ~16 MiB/core VMEM budget.
+    """
+    return 4 * (block_b * f + f * 1 + 1 + block_b * 1)

@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for the Pallas predictor kernels.
+
+These are the *correctness ground truth* for the Layer-1 kernels in
+``predictor.py``. They implement the paper's binary-logistic scalability
+predictor (AMOEBA §4.1.3) in straight-line jax.numpy with no Pallas:
+
+    logit  = X @ w + b                     (the Booth-Wallace MAC IP, §5.5)
+    P      = sigmoid(logit)                (eq. 2/5)
+    decide = P > 0.5  <=>  logit > 0       (fuse / don't-fuse)
+
+plus the training-step math (gradient of the batch-mean binary cross
+entropy over eq.-5 logits, fitted by SGD).
+
+Everything here is deliberately trivial jnp so that pytest/hypothesis can
+assert_allclose the Pallas kernels against it across shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def logistic_logits(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Raw logits (log-odds, paper eq. 1). Sign(logit) is the fuse decision.
+
+    x: (batch, features) profiled metric vectors (one row per kernel sample)
+    w: (features,)       trained coefficients (paper Table 2)
+    b: ()                intercept
+    """
+    return x @ w + b
+
+
+def logistic_forward(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """P = sigmoid(x @ w + b), shape (batch,) — probability to scale up."""
+    return 1.0 / (1.0 + jnp.exp(-logistic_logits(x, w, b)))
+
+
+def bce_loss(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean binary cross-entropy of the predictor on labelled samples.
+
+    Numerically stable: BCE(z, y) = max(z,0) - z*y + log1p(exp(-|z|)).
+    """
+    z = logistic_logits(x, w, b)
+    return jnp.mean(jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def bce_grads(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, y: jnp.ndarray):
+    """Analytic gradients of ``bce_loss`` w.r.t. (w, b).
+
+    dL/dz = (sigmoid(z) - y) / batch;  dL/dw = x^T dL/dz;  dL/db = sum dL/dz.
+    """
+    p = logistic_forward(x, w, b)
+    dz = (p - y) / x.shape[0]
+    return x.T @ dz, jnp.sum(dz)
+
+
+def sgd_train_step(x, w, b, y, lr):
+    """One SGD step on (w, b); returns (w', b', loss)."""
+    gw, gb = bce_grads(x, w, b, y)
+    loss = bce_loss(x, w, b, y)
+    return w - lr * gw, b - lr * gb, loss

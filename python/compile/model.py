@@ -1,0 +1,94 @@
+"""Layer-2 JAX model: the AMOEBA scalability predictor (paper §4.1.3).
+
+This module is the build-time compute-graph definition. It composes the
+Layer-1 Pallas kernels (``kernels.predictor``) into the three functions the
+rust coordinator executes through PJRT:
+
+* ``infer``       — one decision: P(scale-up) for a single 10-metric row.
+* ``infer_batch`` — a batch of decisions (offline sweeps, Fig 20 analysis).
+* ``train_step``  — one SGD step of the offline training pipeline
+                    (examples/train_predictor.rs drives the epoch loop from
+                    rust; weight buffers are donated so XLA updates them
+                    in place).
+
+Feature order — MUST match ``rust/src/amoeba/metrics.rs::FEATURES``:
+
+    0 control_divergent   inactive-thread rate from control divergence
+    1 coalescing          coalescing rate (actual/requested accesses)
+    2 l1d_miss            L1 data cache miss rate
+    3 l1i_miss            L1 instruction cache miss rate
+    4 l1c_miss            L1 constant cache miss rate
+    5 mshr                MSHR merge rate
+    6 load_inst_rate      fraction of load instructions
+    7 store_inst_rate     fraction of store instructions
+    8 noc                 NoC intensity (latency-weighted throughput)
+    9 concurrent_cta      concurrently resident CTAs (normalised)
+
+Paper Table 2 ships the authors' trained coefficients in this order; they
+are the default weights in rust (``predictor::PAPER_COEFFS``) and the
+regression target of the parity tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import predictor as K
+
+NUM_FEATURES = 10
+TRAIN_BATCH = 256
+INFER_BATCH = 64
+
+
+def infer(x, w, b):
+    """P(scale-up) for a single metrics row. x: (1, F) -> (1,) f32."""
+    return (K.logistic_forward(x, w, b, block_b=8),)
+
+
+def infer_batch(x, w, b):
+    """P(scale-up) for a batch of metric rows. x: (B, F) -> (B,) f32."""
+    return (K.logistic_forward(x, w, b, block_b=64),)
+
+
+def train_step(x, y, w, b, lr):
+    """One SGD step on (w, b); returns (w', b', loss).
+
+    x: (TRAIN_BATCH, F); y: (TRAIN_BATCH,); lr: scalar (1,1).
+    The gradient is the Pallas ``bce_grad_kernel``; the update is plain jnp
+    so XLA fuses the whole step into one executable.
+    """
+    gw, gb, loss = K.bce_grads(x, w, b, y, block_b=64)
+    lr_s = jnp.asarray(lr, jnp.float32).reshape(())
+    w2 = jnp.asarray(w, jnp.float32).reshape(-1)
+    b2 = jnp.asarray(b, jnp.float32).reshape(())
+    return w2 - lr_s * gw, b2 - lr_s * gb, loss
+
+
+def specs():
+    """(name, fn, example-arg ShapeDtypeStructs, donate) for every artifact."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return [
+        (
+            "predictor_infer",
+            infer,
+            (s((1, NUM_FEATURES), f32), s((NUM_FEATURES,), f32), s((), f32)),
+        ),
+        (
+            "predictor_batch",
+            infer_batch,
+            (s((INFER_BATCH, NUM_FEATURES), f32), s((NUM_FEATURES,), f32), s((), f32)),
+        ),
+        (
+            "predictor_train",
+            train_step,
+            (
+                s((TRAIN_BATCH, NUM_FEATURES), f32),
+                s((TRAIN_BATCH,), f32),
+                s((NUM_FEATURES,), f32),
+                s((), f32),
+                s((), f32),
+            ),
+        ),
+    ]

@@ -1,0 +1,143 @@
+"""Pallas predictor kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE Layer-1 correctness signal: hypothesis sweeps shapes and
+value ranges; every case asserts allclose against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import predictor as K
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-5, 1e-6
+
+
+def _case(rng, n, f, scale=1.0):
+    x = rng.normal(size=(n, f)).astype(np.float32) * scale
+    w = rng.normal(size=(f,)).astype(np.float32) * scale
+    b = np.float32(rng.normal() * scale)
+    y = (rng.random(size=(n,)) > 0.5).astype(np.float32)
+    return x, w, b, y
+
+
+# ---------------------------------------------------------------- forward
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    f=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([8, 32, 64, 128]),
+)
+def test_forward_matches_ref(n, f, seed, block):
+    rng = np.random.default_rng(seed)
+    x, w, b, _ = _case(rng, n, f)
+    got = K.logistic_forward(x, w, b, block_b=block)
+    want = ref.logistic_forward(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    assert got.shape == (n,)
+    assert got.dtype == jnp.float32
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([1e-3, 1.0, 30.0]))
+def test_forward_value_ranges(seed, scale):
+    """Probabilities stay in [0,1] even for large |logit| (no NaN/Inf)."""
+    rng = np.random.default_rng(seed)
+    x, w, b, _ = _case(rng, 50, 10, scale=scale)
+    p = np.asarray(K.logistic_forward(x, w, b))
+    assert np.all(np.isfinite(p))
+    assert np.all((p >= 0.0) & (p <= 1.0))
+
+
+def test_forward_bf16_inputs():
+    """Kernel accumulates in f32 even when fed bfloat16 metric rows."""
+    rng = np.random.default_rng(0)
+    x, w, b, _ = _case(rng, 17, 10)
+    got = K.logistic_forward(jnp.asarray(x, jnp.bfloat16), w, b)
+    want = ref.logistic_forward(
+        jnp.asarray(x, jnp.bfloat16).astype(jnp.float32), jnp.asarray(w), jnp.asarray(b)
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_forward_decision_sign_equivalence():
+    """P > 0.5 iff logit > 0 — the rust fast path relies on this."""
+    rng = np.random.default_rng(7)
+    x, w, b, _ = _case(rng, 200, 10)
+    p = np.asarray(K.logistic_forward(x, w, b))
+    z = np.asarray(ref.logistic_logits(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)))
+    np.testing.assert_array_equal(p > 0.5, z > 0)
+
+
+# ---------------------------------------------------------------- backward
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    f=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([16, 64, 128]),
+)
+def test_grads_match_ref(n, f, seed, block):
+    rng = np.random.default_rng(seed)
+    x, w, b, y = _case(rng, n, f)
+    gw, gb, loss = K.bce_grads(x, w, b, y, block_b=block)
+    rgw, rgb = ref.bce_grads(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), jnp.asarray(y))
+    rloss = ref.bce_loss(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), jnp.asarray(y))
+    np.testing.assert_allclose(gw, rgw, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gb, rgb, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(loss, rloss, rtol=1e-4, atol=1e-5)
+
+
+def test_grads_zero_at_perfect_fit():
+    """If the model already separates the labels with huge margin, grads ~ 0."""
+    x = np.array([[10.0], [-10.0]], np.float32)
+    w = np.array([10.0], np.float32)
+    b = np.float32(0.0)
+    y = np.array([1.0, 0.0], np.float32)
+    gw, gb, loss = K.bce_grads(x, w, b, y, block_b=16)
+    assert abs(float(gw[0])) < 1e-6 and abs(float(gb)) < 1e-6
+    assert float(loss) < 1e-6
+
+
+def test_grad_descent_reduces_loss():
+    """A few SGD steps with the Pallas grads must reduce the ref loss."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(128, 10)).astype(np.float32)
+    true_w = rng.normal(size=(10,)).astype(np.float32)
+    y = (x @ true_w > 0).astype(np.float32)
+    w = np.zeros(10, np.float32)
+    b = np.float32(0.0)
+    l0 = float(ref.bce_loss(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), jnp.asarray(y)))
+    for _ in range(50):
+        gw, gb, _ = K.bce_grads(x, w, b, y)
+        w = w - 0.5 * np.asarray(gw)
+        b = np.float32(b - 0.5 * float(gb))
+    l1 = float(ref.bce_loss(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), jnp.asarray(y)))
+    assert l1 < l0 * 0.5
+
+
+# ---------------------------------------------------------------- misc
+
+def test_vmem_footprint_within_budget():
+    """Forward tile must fit comfortably in a 16 MiB VMEM core budget."""
+    assert K.vmem_footprint_bytes(K.DEFAULT_BLOCK_B, 10) < 1 << 20
+    assert K.vmem_footprint_bytes(128, 128) < 1 << 20
+
+
+@pytest.mark.parametrize("n", [1, 7, 8, 9, 127, 128, 129])
+def test_padding_boundaries(n):
+    """Batch sizes straddling the tile boundary are exact (masking works)."""
+    rng = np.random.default_rng(n)
+    x, w, b, y = _case(rng, n, 10)
+    got = K.logistic_forward(x, w, b, block_b=8)
+    want = ref.logistic_forward(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    gw, gb, loss = K.bce_grads(x, w, b, y, block_b=8)
+    rgw, rgb = ref.bce_grads(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), jnp.asarray(y))
+    np.testing.assert_allclose(gw, rgw, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gb, rgb, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,67 @@
+"""Layer-2 model shape/semantics tests + AOT artifact smoke checks."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_infer_shapes():
+    x = np.zeros((1, model.NUM_FEATURES), np.float32)
+    w = np.zeros((model.NUM_FEATURES,), np.float32)
+    (p,) = model.infer(x, w, np.float32(0.0))
+    assert p.shape == (1,)
+    np.testing.assert_allclose(p, [0.5], atol=1e-6)  # zero logit => 0.5
+
+
+def test_infer_batch_shapes():
+    x = np.random.default_rng(0).normal(size=(model.INFER_BATCH, model.NUM_FEATURES)).astype(np.float32)
+    w = np.ones((model.NUM_FEATURES,), np.float32)
+    (p,) = model.infer_batch(x, w, np.float32(0.1))
+    assert p.shape == (model.INFER_BATCH,)
+    want = ref.logistic_forward(jnp.asarray(x), jnp.ones(model.NUM_FEATURES), jnp.float32(0.1))
+    np.testing.assert_allclose(p, want, rtol=1e-5, atol=1e-6)
+
+
+def test_train_step_learns_synthetic_rule():
+    """Driving train_step must fit a linearly-separable synthetic ruleset."""
+    rng = np.random.default_rng(42)
+    true_w = rng.normal(size=(model.NUM_FEATURES,)).astype(np.float32) * 2
+    x = rng.normal(size=(model.TRAIN_BATCH, model.NUM_FEATURES)).astype(np.float32)
+    y = (x @ true_w > 0).astype(np.float32)
+    w = jnp.zeros(model.NUM_FEATURES, jnp.float32)
+    b = jnp.float32(0.0)
+    losses = []
+    step = jax.jit(model.train_step)
+    for _ in range(200):
+        w, b, loss = step(x, y, w, b, jnp.float32(1.0))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.2
+    pred = np.asarray(ref.logistic_forward(jnp.asarray(x), w, b)) > 0.5
+    acc = float(np.mean(pred == (y > 0.5)))
+    assert acc > 0.95
+
+
+def test_feature_order_matches_design():
+    """Pin the feature count + ordering contract shared with rust."""
+    assert model.NUM_FEATURES == 10
+    names = [s[0] for s in model.specs()]
+    assert names == ["predictor_infer", "predictor_batch", "predictor_train"]
+
+
+def test_artifacts_exist_and_are_hlo_text():
+    """make artifacts output must be parseable-looking HLO text modules."""
+    adir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(adir):
+        import pytest
+
+        pytest.skip("artifacts/ not built")
+    for name in ("predictor_infer", "predictor_batch", "predictor_train"):
+        path = os.path.join(adir, f"{name}.hlo.txt")
+        assert os.path.exists(path), f"missing {path} (run make artifacts)"
+        head = open(path).read(200)
+        assert "HloModule" in head

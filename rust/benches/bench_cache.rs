@@ -1,0 +1,50 @@
+//! Cache + MSHR hot path (L1 access mix under reuse/streaming).
+//! Run: `cargo bench --bench bench_cache`
+
+use amoeba_gpu::harness::Bencher;
+use amoeba_gpu::sim::mem::{Access, Cache};
+
+fn main() {
+    let b = Bencher::new("cache");
+
+    b.bench_batched(
+        "l1_reuse_hits_512acc",
+        || {
+            let mut cache = Cache::new(16 << 10, 4, 128, 1, 64);
+            for i in 0..64u64 {
+                cache.access(i * 128);
+                cache.fill(i * 128);
+            }
+            cache
+        },
+        |mut cache| {
+            for r in 0..8u64 {
+                for i in 0..64u64 {
+                    let _ = cache.access(((i * 7 + r) % 64) * 128);
+                }
+            }
+            cache
+        },
+    );
+
+    b.bench_batched(
+        "l1_streaming_misses_512acc",
+        || Cache::new(16 << 10, 4, 128, 1, 64),
+        |mut cache| {
+            let mut addr = 0u64;
+            for _ in 0..512 {
+                match cache.access(addr) {
+                    Access::MissNew => {
+                        cache.fill(addr);
+                    }
+                    Access::MshrFull => {
+                        cache.fill(addr - 128);
+                    }
+                    _ => {}
+                }
+                addr += 128;
+            }
+            cache
+        },
+    );
+}

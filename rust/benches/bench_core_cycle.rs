@@ -1,0 +1,37 @@
+//! SM-cluster cycle-loop throughput (the L3 hot path).
+//! Run: `cargo bench --bench bench_core_cycle`
+
+use amoeba_gpu::config::SystemConfig;
+use amoeba_gpu::harness::Bencher;
+use amoeba_gpu::sim::core::{ClusterMode, SmCluster};
+use amoeba_gpu::sim::noc::Noc;
+use amoeba_gpu::workload::{bench, kernel_launches, TraceGen};
+
+fn main() {
+    let cfg = SystemConfig::tiny();
+    let profile = bench("CP").unwrap();
+    let k = kernel_launches(&profile, 1)[0].clone();
+    let gen = TraceGen::new(&profile, &k);
+    let b = Bencher::new("core_cycle");
+
+    for (label, mode) in [
+        ("private_pair_512cyc", ClusterMode::PrivatePair),
+        ("fused_512cyc", ClusterMode::Fused),
+        ("fused_split_512cyc", ClusterMode::FusedSplit),
+    ] {
+        b.bench_batched(
+            label,
+            || {
+                let mut cl = SmCluster::new(0, &cfg, mode);
+                cl.dispatch_cta(&k, 0, &gen);
+                (cl, Noc::new(&cfg, 6))
+            },
+            |(mut cl, mut noc)| {
+                for now in 0..512u64 {
+                    cl.tick(now, &mut noc, [0, 1], &gen);
+                }
+                (cl, noc)
+            },
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! End-to-end simulation throughput for the Fig 12 headline
+//! configurations (shrunken workloads — this measures *simulator* speed;
+//! the per-scheme IPC tables come from `figures --fig 12`).
+//! Run: `cargo bench --bench bench_fig12_headline`
+
+use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::harness::Bencher;
+use amoeba_gpu::sim::gpu::run_benchmark_seeded;
+use amoeba_gpu::workload::bench;
+
+fn main() {
+    let mut cfg = SystemConfig::gtx480();
+    cfg.num_sms = 16;
+    cfg.num_mcs = 4;
+    let mut b = Bencher::new("fig12_headline");
+    b.iters = 5;
+    b.warmup = 1;
+    for scheme in [Scheme::Baseline, Scheme::ScaleUp, Scheme::WarpRegroup] {
+        for name in ["SM", "RAY"] {
+            let mut p = bench(name).unwrap();
+            p.num_ctas = 24;
+            p.insns_per_thread = 100;
+            p.num_kernels = 1;
+            let label = format!("{name}_{scheme}");
+            let r = b.bench(&label, || run_benchmark_seeded(&cfg, &p, scheme, 0xBE7C));
+            // Report simulated-cycles/sec as the throughput figure.
+            let report = run_benchmark_seeded(&cfg, &p, scheme, 0xBE7C);
+            let cps = report.cycles as f64 / r.median.as_secs_f64();
+            println!("    -> {:.2} Mcycles/s simulated ({} cycles)", cps / 1e6, report.cycles);
+        }
+    }
+}

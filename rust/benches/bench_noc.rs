@@ -1,0 +1,44 @@
+//! Mesh NoC routing throughput under load (Fig 17/18 substrate).
+//! Run: `cargo bench --bench bench_noc`
+
+use amoeba_gpu::config::SystemConfig;
+use amoeba_gpu::harness::Bencher;
+use amoeba_gpu::sim::noc::{Noc, Packet, Payload, Subnet};
+
+fn main() {
+    let cfg = SystemConfig::gtx480();
+    let b = Bencher::new("noc");
+    for (label, nodes) in [("mesh56_baseline_256cyc", 56usize), ("mesh32_fused_256cyc", 32)] {
+        b.bench_batched(
+            label,
+            || Noc::new(&cfg, nodes),
+            |mut noc| {
+                let mcs = 8;
+                for t in 0..256u64 {
+                    for src in 0..nodes - mcs {
+                        let dst = nodes - mcs + (src % mcs);
+                        let _ = noc.inject(
+                            Subnet::Request,
+                            Packet {
+                                src,
+                                dst,
+                                flits: 1,
+                                born: t,
+                                payload: Payload::MemRequest {
+                                    line: src as u64 * 128,
+                                    requester: src as u32,
+                                    is_write: false,
+                                },
+                            },
+                        );
+                    }
+                    noc.tick(t);
+                    for n in nodes - mcs..nodes {
+                        while noc.eject(Subnet::Request, n).is_some() {}
+                    }
+                }
+                noc
+            },
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Predictor latency — native logistic vs the PJRT-compiled HLO path.
+//! The controller runs once per kernel launch; the paper claims a
+//! negligible decision overhead (§5.5), which this verifies.
+//! Run: `make artifacts && cargo bench --bench bench_predictor`
+
+use amoeba_gpu::amoeba::{MetricsSample, NativePredictor, ScalePredictor, NUM_FEATURES};
+use amoeba_gpu::harness::Bencher;
+use amoeba_gpu::runtime::{HloPredictor, Runtime};
+
+fn main() {
+    let sample = MetricsSample { features: [0.25; NUM_FEATURES] };
+    let mut b = Bencher::new("predictor");
+    b.iters = 100;
+
+    let mut native = NativePredictor::new();
+    b.bench("native", || native.probability(std::hint::black_box(&sample)));
+
+    match Runtime::new().and_then(|rt| HloPredictor::new(&rt, [0.5; NUM_FEATURES], -1.0)) {
+        Ok(mut hlo) => {
+            b.bench("hlo_pjrt", || hlo.probability(std::hint::black_box(&sample)));
+        }
+        Err(e) => eprintln!("skipping hlo_pjrt (artifacts missing?): {e}"),
+    }
+}

@@ -1,0 +1,103 @@
+//! The online reconfiguration controller (paper §4.1, Fig 7).
+//!
+//! Per kernel launch: sample the scalability metrics over a short
+//! profiling window (CTAs track their kernel's scaling behaviour, §4.1.1),
+//! run the logistic predictor, and reconfigure the SM fabric accordingly.
+//! The GPU cycle loop in [`crate::sim::gpu`] drives the phases; this type
+//! owns the predictor and records decisions.
+
+use crate::config::SystemConfig;
+
+use super::metrics::MetricsSample;
+use super::predictor::{NativePredictor, ScalePredictor};
+
+/// One per-kernel decision record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelDecision {
+    /// Predictor probability of scale-up winning.
+    pub probability: f64,
+    /// The decision taken (P > 0.5).
+    pub scale_up: bool,
+}
+
+/// The reconfiguration controller: predictor + decision log.
+pub struct Controller {
+    predictor: Box<dyn ScalePredictor>,
+    /// Decision history (one entry per kernel).
+    pub history: Vec<KernelDecision>,
+    /// Force a fixed decision (ablations / ScaleUp scheme plumbing).
+    pub force: Option<bool>,
+}
+
+impl Controller {
+    /// Controller backed by the native rust logistic predictor.
+    pub fn native(_cfg: &SystemConfig) -> Self {
+        Controller { predictor: Box::new(NativePredictor::new()), history: Vec::new(), force: None }
+    }
+
+    /// Controller backed by an arbitrary predictor (e.g. the PJRT HLO
+    /// predictor from [`crate::runtime`]).
+    pub fn with_predictor(predictor: Box<dyn ScalePredictor>) -> Self {
+        Controller { predictor, history: Vec::new(), force: None }
+    }
+
+    /// Controller that always answers `fuse` (ablation baseline).
+    pub fn forced(fuse: bool) -> Self {
+        Controller {
+            predictor: Box::new(NativePredictor::new()),
+            history: Vec::new(),
+            force: Some(fuse),
+        }
+    }
+
+    /// Decide whether the current kernel should run on fused SMs.
+    pub fn decide(&mut self, sample: &MetricsSample) -> KernelDecision {
+        let d = match self.force {
+            Some(f) => KernelDecision { probability: if f { 1.0 } else { 0.0 }, scale_up: f },
+            None => {
+                let p = self.predictor.probability(sample);
+                KernelDecision { probability: p, scale_up: p > 0.5 }
+            }
+        };
+        self.history.push(d);
+        d
+    }
+}
+
+impl std::fmt::Debug for Controller {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Controller")
+            .field("history", &self.history)
+            .field("force", &self.force)
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amoeba::metrics::NUM_FEATURES;
+
+    #[test]
+    fn decisions_are_logged() {
+        let cfg = SystemConfig::tiny();
+        let mut c = Controller::native(&cfg);
+        let s = MetricsSample { features: [0.0; NUM_FEATURES] };
+        let d = c.decide(&s);
+        assert_eq!(c.history.len(), 1);
+        assert_eq!(c.history[0], d);
+        assert_eq!(d.scale_up, d.probability > 0.5);
+    }
+
+    #[test]
+    fn forced_controller_ignores_metrics() {
+        let mut c = Controller::forced(true);
+        let mut f = [0.0; NUM_FEATURES];
+        f[0] = 1.0; // heavy divergence would normally say "scale out"
+        assert!(c.decide(&MetricsSample { features: f }).scale_up);
+        let mut c = Controller::forced(false);
+        let mut f = [0.0; NUM_FEATURES];
+        f[2] = 1.0;
+        assert!(!c.decide(&MetricsSample { features: f }).scale_up);
+    }
+}

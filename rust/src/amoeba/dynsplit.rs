@@ -1,0 +1,225 @@
+//! Dynamic SM splitting and re-fusing (paper §4.3, Figs 10/11).
+//!
+//! Each fused cluster is watched independently: when the divergent-warp
+//! ratio exceeds the configured threshold, the cluster splits — divergent
+//! work moves to the second half per the active policy (direct split or
+//! warp regrouping) while fast warps keep the first half busy. When the
+//! second half drains, the cluster re-fuses. A periodic rebalance donates
+//! fast warps to an under-utilised slow half so its issue slots are not
+//! wasted while slow warps stall (§4.3 last paragraph).
+
+use crate::config::{SplitPolicy, SystemConfig};
+use crate::sim::core::{ClusterMode, SmCluster};
+
+/// The per-cluster split/fuse state machine driver.
+#[derive(Debug, Clone)]
+pub struct DynSplit {
+    threshold: f32,
+    rebalance_period: u64,
+    last_rebalance: u64,
+}
+
+impl DynSplit {
+    /// Build from the system config knobs.
+    pub fn new(cfg: &SystemConfig) -> Self {
+        DynSplit {
+            threshold: cfg.split_threshold,
+            rebalance_period: cfg.rebalance_period,
+            last_rebalance: 0,
+        }
+    }
+
+    /// Evaluate one cluster: split, re-fuse, or rebalance as needed.
+    /// Called periodically (every `split_check_period` cycles) by the GPU.
+    pub fn check(&mut self, now: u64, cluster: &mut SmCluster) {
+        match cluster.mode() {
+            ClusterMode::Fused => {
+                if cluster.split_policy.is_some()
+                    && cluster.divergent_ratio() > self.threshold
+                    && cluster.live_warps() > 1
+                {
+                    self.split(cluster);
+                    cluster.stats.split_events += 1;
+                }
+            }
+            ClusterMode::FusedSplit => {
+                self.restore_reconverged(cluster);
+                if self.slow_half_drained(cluster) {
+                    self.refuse(cluster);
+                    cluster.stats.fuse_events += 1;
+                } else if now.saturating_sub(self.last_rebalance) >= self.rebalance_period {
+                    self.last_rebalance = now;
+                    self.rebalance(cluster);
+                }
+            }
+            ClusterMode::PrivatePair => {}
+        }
+    }
+
+    /// Enter split mode and distribute currently-divergent warps per the
+    /// policy. New divergences are handled at issue time by the cluster
+    /// (see `SmCluster::handle_divergence`).
+    fn split(&self, cluster: &mut SmCluster) {
+        let policy = cluster.split_policy.expect("split checked only with a policy");
+        cluster.set_mode(ClusterMode::FusedSplit);
+        match policy {
+            SplitPolicy::Direct => {
+                // Move every divergent warp wholesale to the slow half.
+                for w in cluster.warps.iter_mut().filter(|w| !w.finished && w.divergent) {
+                    w.home = 1;
+                }
+            }
+            SplitPolicy::Regroup => {
+                // Divergent warps stay on the fast half; their slow passes
+                // become shadows on half 1 as they are (re-)issued. Warps
+                // already in a serial second pass migrate like direct
+                // split (their fast threads are already done).
+                for w in cluster.warps.iter_mut().filter(|w| !w.finished && w.divergent) {
+                    if w.replay.map(|r| r.in_second_pass).unwrap_or(false) {
+                        w.home = 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Move reconverged warps back to the fast half.
+    fn restore_reconverged(&self, cluster: &mut SmCluster) {
+        for w in cluster.warps.iter_mut() {
+            if w.home == 1 && !w.divergent && !w.finished {
+                w.home = 0;
+            }
+        }
+    }
+
+    /// Slow half fully drained (no divergent residents, no live shadows)?
+    fn slow_half_drained(&self, cluster: &SmCluster) -> bool {
+        let resident =
+            cluster.warps.iter().any(|w| !w.finished && (w.home == 1 || w.divergent));
+        !resident && !cluster.shadows_active()
+    }
+
+    /// Re-fuse the cluster (keeps merged caches warm).
+    fn refuse(&self, cluster: &mut SmCluster) {
+        cluster.reap_shadows();
+        for w in cluster.warps.iter_mut() {
+            w.home = 0;
+        }
+        cluster.set_mode(ClusterMode::Fused);
+    }
+
+    /// Donate one fast warp to the slow half if it is starving (§4.3:
+    /// "periodically move some fast warps to them so that the resources
+    /// are not wasted when the slow warps cause stalls").
+    fn rebalance(&self, cluster: &mut SmCluster) {
+        let slow_issuable = cluster
+            .warps
+            .iter()
+            .filter(|w| w.home == 1 && w.issuable())
+            .count()
+            + cluster.shadows.iter().filter(|s| s.issuable()).count();
+        if slow_issuable > 0 {
+            return; // slow half has work
+        }
+        let fast_live: Vec<usize> = cluster
+            .warps
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.home == 0 && !w.finished && !w.divergent)
+            .map(|(i, _)| i)
+            .collect();
+        if fast_live.len() > 1 {
+            let donate = fast_live[fast_live.len() / 2];
+            cluster.warps[donate].home = 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{bench, kernel_launches, TraceGen};
+
+    fn fused_cluster_with_cta(policy: SplitPolicy) -> (SmCluster, TraceGen) {
+        let cfg = SystemConfig::tiny();
+        let mut c = SmCluster::new(0, &cfg, ClusterMode::Fused);
+        c.split_policy = Some(policy);
+        let p = bench("RAY").unwrap();
+        let k = kernel_launches(&p, 5)[0].clone();
+        let gen = TraceGen::new(&p, &k);
+        c.dispatch_cta(&k, 0, &gen);
+        (c, gen)
+    }
+
+    #[test]
+    fn split_triggers_on_divergence_ratio() {
+        let cfg = SystemConfig::tiny();
+        let mut ds = DynSplit::new(&cfg);
+        let (mut c, _) = fused_cluster_with_cta(SplitPolicy::Direct);
+        // Below threshold: stays fused.
+        ds.check(0, &mut c);
+        assert_eq!(c.mode(), ClusterMode::Fused);
+        // Push most warps divergent.
+        let n = c.warps.len();
+        for w in c.warps.iter_mut().take(n / 2 + 1) {
+            w.divergent = true;
+        }
+        ds.check(1, &mut c);
+        assert_eq!(c.mode(), ClusterMode::FusedSplit);
+        assert_eq!(c.stats.split_events, 1);
+        // Direct policy: divergent warps moved to half 1.
+        assert!(c.warps.iter().filter(|w| w.divergent).all(|w| w.home == 1));
+    }
+
+    #[test]
+    fn refuse_when_slow_half_drains() {
+        let cfg = SystemConfig::tiny();
+        let mut ds = DynSplit::new(&cfg);
+        let (mut c, _) = fused_cluster_with_cta(SplitPolicy::Direct);
+        for w in c.warps.iter_mut() {
+            w.divergent = true;
+        }
+        ds.check(0, &mut c);
+        assert_eq!(c.mode(), ClusterMode::FusedSplit);
+        // Divergence resolves.
+        for w in c.warps.iter_mut() {
+            w.divergent = false;
+        }
+        ds.check(1, &mut c);
+        assert_eq!(c.mode(), ClusterMode::Fused, "re-fused after drain");
+        assert_eq!(c.stats.fuse_events, 1);
+        assert!(c.warps.iter().all(|w| w.home == 0));
+    }
+
+    #[test]
+    fn regroup_keeps_first_pass_warps_on_fast_half() {
+        let cfg = SystemConfig::tiny();
+        let mut ds = DynSplit::new(&cfg);
+        let (mut c, _) = fused_cluster_with_cta(SplitPolicy::Regroup);
+        for w in c.warps.iter_mut() {
+            w.divergent = true; // divergent but not yet in second pass
+        }
+        ds.check(0, &mut c);
+        assert_eq!(c.mode(), ClusterMode::FusedSplit);
+        assert!(c.warps.iter().all(|w| w.home == 0), "fast passes stay");
+    }
+
+    #[test]
+    fn rebalance_donates_a_fast_warp() {
+        let cfg = SystemConfig::tiny();
+        let mut ds = DynSplit::new(&cfg);
+        let (mut c, _) = fused_cluster_with_cta(SplitPolicy::Direct);
+        // Enter split with one divergent warp that then blocks on memory.
+        c.warps[0].divergent = true;
+        for w in c.warps.iter_mut().skip(1) {
+            w.divergent = false;
+        }
+        c.set_mode(ClusterMode::FusedSplit);
+        c.warps[0].home = 1;
+        c.warps[0].outstanding_loads = 5; // slow half stalled
+        ds.last_rebalance = 0;
+        ds.rebalance(&mut c);
+        let on_slow = c.warps.iter().filter(|w| w.home == 1).count();
+        assert_eq!(on_slow, 2, "one fast warp donated");
+    }
+}

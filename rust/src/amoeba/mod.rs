@@ -1,0 +1,21 @@
+//! AMOEBA: the paper's contribution — the online reconfiguration
+//! controller, scalability metrics, the logistic predictor, and the
+//! dynamic split/fuse machinery that creates heterogeneous SM populations
+//! at runtime.
+//!
+//! The SM-fusion *mechanism* itself (merged L1s, single scheduler over
+//! both datapaths, shared coalescer, NoC router bypass) lives in
+//! [`crate::sim::core::cluster`] since it is part of the reconfigurable
+//! hardware model; this module holds the *policy* layers on top.
+
+pub mod controller;
+pub mod dynsplit;
+pub mod metrics;
+pub mod predictor;
+
+pub use controller::{Controller, KernelDecision};
+pub use dynsplit::DynSplit;
+pub use metrics::{MetricsSample, FEATURES, NUM_FEATURES};
+pub use predictor::{
+    sigmoid, Coefficients, NativePredictor, ScalePredictor, DEFAULT_COEFFS, PAPER_COEFFS,
+};

@@ -1,0 +1,217 @@
+//! The binary-logistic scalability predictor (paper §4.1.3, Table 2).
+//!
+//! Two interchangeable backends implement [`ScalePredictor`]:
+//!
+//! * [`NativePredictor`] — the logistic evaluated directly in rust. Always
+//!   available; used as the default and as the parity oracle.
+//! * `runtime::HloPredictor` — the AOT-compiled JAX/Pallas model executed
+//!   through the PJRT CPU client (the reproduction of the paper's MAC IP
+//!   block). Numerical parity with the native path is asserted by
+//!   integration tests.
+//!
+//! The decision rule is `P(scale-up) > 0.5`, equivalently `logit > 0`.
+
+use super::metrics::{MetricsSample, NUM_FEATURES};
+
+/// A scalability predictor: metrics in, fuse decision out.
+pub trait ScalePredictor {
+    /// Probability in [0,1] that scale-up (fusing) wins for this sample.
+    fn probability(&mut self, sample: &MetricsSample) -> f64;
+
+    /// Fuse decision (P > 0.5).
+    fn scale_up(&mut self, sample: &MetricsSample) -> bool {
+        self.probability(sample) > 0.5
+    }
+}
+
+/// Trained logistic coefficients: weights (feature order of
+/// [`super::metrics::FEATURES`]) plus the intercept.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Coefficients {
+    /// Per-feature weights.
+    pub weights: [f64; NUM_FEATURES],
+    /// Intercept (bias).
+    pub intercept: f64,
+}
+
+/// The paper's Table 2 coefficients, in our feature order. These were
+/// fitted to the authors' GPGPU-Sim feature scaling and are shipped for
+/// the Fig 20 / Table 2 reproductions; the *default decision weights* are
+/// [`DEFAULT_COEFFS`], trained on this simulator's own profiling windows
+/// (see `examples/train_predictor.rs`).
+pub const PAPER_COEFFS: Coefficients = Coefficients {
+    weights: [
+        444.628,   // control divergent
+        2057.050,  // coalescing
+        -313.838,  // L1D miss rate
+        1674.513,  // L1I miss rate
+        -67.277,   // L1C miss rate
+        -102.971,  // MSHR
+        -680.786,  // load inst rate
+        -804.7,    // store inst rate
+        -8.301,    // NoC
+        1.414,     // concurrent cta
+    ],
+    intercept: -73.635,
+};
+
+/// Default coefficients for this simulator's feature scaling, fitted by
+/// `examples/train_predictor.rs`: 132 profiling-window samples from the
+/// full 21-benchmark suite x 3 seeds, labelled with measured
+/// baseline-vs-scale-up IPC, trained by SGD *through the compiled PJRT
+/// train step* (800 epochs, lr 0.8, final BCE 0.565, training accuracy
+/// 70.5% via the HLO inference path — see EXPERIMENTS.md §Table 2).
+///
+/// The dominant learned signal is memory pressure (load-instruction rate
+/// + MSHR/coalescing structure): on this substrate the capacity-crossover
+/// benchmarks are exactly the load-heavy shared-table ones, matching the
+/// paper's observation that memory-locality metrics drive the fuse
+/// decision, while divergence and streaming push toward scale-out.
+pub const DEFAULT_COEFFS: Coefficients = Coefficients {
+    weights: [
+        -0.226_396_83, // control divergent
+        -2.285_68,     // coalescing (actual-access rate)
+        -0.349_336_8,  // L1D miss (cold-dominated in the probe window)
+        -0.762_929_7,  // L1I miss
+        -0.132_789_63, // L1C miss
+        -1.056_968_2,  // MSHR merge rate
+        6.160_763_3,   // load-instruction rate
+        2.053_589_3,   // store-instruction rate
+        -0.065_658_96, // NoC latency-weighted throughput
+        0.0,           // concurrent CTAs (constant in probe windows)
+    ],
+    intercept: -0.697_3,
+};
+
+/// Native rust logistic predictor.
+#[derive(Debug, Clone)]
+pub struct NativePredictor {
+    coeffs: Coefficients,
+}
+
+impl NativePredictor {
+    /// Predictor with the repo-trained default coefficients.
+    pub fn new() -> Self {
+        NativePredictor { coeffs: DEFAULT_COEFFS }
+    }
+
+    /// Predictor with explicit coefficients (tests, training loops).
+    pub fn with_coeffs(coeffs: Coefficients) -> Self {
+        NativePredictor { coeffs }
+    }
+
+    /// Raw logit (log-odds, paper eq. 1).
+    pub fn logit(&self, sample: &MetricsSample) -> f64 {
+        let mut z = self.coeffs.intercept;
+        for (w, x) in self.coeffs.weights.iter().zip(sample.features) {
+            z += w * x;
+        }
+        z
+    }
+
+    /// Per-feature impact magnitudes (coefficient x measured value) — the
+    /// Fig 20 decomposition.
+    pub fn impacts(&self, sample: &MetricsSample) -> [f64; NUM_FEATURES] {
+        let mut out = [0.0; NUM_FEATURES];
+        for (o, (w, x)) in out.iter_mut().zip(self.coeffs.weights.iter().zip(sample.features)) {
+            *o = w * x;
+        }
+        out
+    }
+
+    /// The active coefficient set.
+    pub fn coeffs(&self) -> &Coefficients {
+        &self.coeffs
+    }
+}
+
+impl Default for NativePredictor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScalePredictor for NativePredictor {
+    fn probability(&mut self, sample: &MetricsSample) -> f64 {
+        sigmoid(self.logit(sample))
+    }
+}
+
+/// Numerically-stable logistic function.
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(features: [f64; NUM_FEATURES]) -> MetricsSample {
+        MetricsSample { features }
+    }
+
+    #[test]
+    fn sigmoid_properties() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(50.0) > 0.999999);
+        assert!(sigmoid(-50.0) < 1e-6);
+        assert!((sigmoid(2.0) + sigmoid(-2.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decision_sign_equivalence() {
+        let mut p = NativePredictor::new();
+        for i in 0..NUM_FEATURES {
+            let mut f = [0.1; NUM_FEATURES];
+            f[i] = 0.9;
+            let s = sample(f);
+            assert_eq!(p.scale_up(&s), p.logit(&s) > 0.0);
+        }
+    }
+
+    #[test]
+    fn shared_table_signature_fuses() {
+        // The SM/MUM signature the trained model keys on: load-heavy,
+        // well-coalesced table walking with L1 pressure.
+        let mut f = [0.0; NUM_FEATURES];
+        f[6] = 0.32; // load instruction rate
+        f[7] = 0.10; // store rate
+        f[1] = 0.10; // well coalesced (low actual-access rate)
+        f[2] = 0.45; // l1d miss
+        f[5] = 0.40; // mshr merges
+        let mut p = NativePredictor::new();
+        assert!(p.scale_up(&sample(f)), "logit={}", p.logit(&sample(f)));
+    }
+
+    #[test]
+    fn compute_divergent_signature_scales_out() {
+        // CP/WP-like: light memory traffic, divergence, streaming.
+        let mut f = [0.0; NUM_FEATURES];
+        f[0] = 0.30; // control divergence
+        f[1] = 0.50; // poor coalescing (high actual-access rate)
+        f[6] = 0.08; // few loads
+        f[2] = 0.25;
+        let mut p = NativePredictor::new();
+        assert!(!p.scale_up(&sample(f)), "logit={}", p.logit(&sample(f)));
+    }
+
+    #[test]
+    fn impacts_decompose_logit() {
+        let s = sample([0.3; NUM_FEATURES]);
+        let p = NativePredictor::new();
+        let total: f64 = p.impacts(&s).iter().sum::<f64>() + p.coeffs().intercept;
+        assert!((total - p.logit(&s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_coefficients_are_table2() {
+        assert_eq!(PAPER_COEFFS.intercept, -73.635);
+        assert_eq!(PAPER_COEFFS.weights[1], 2057.050);
+        assert_eq!(PAPER_COEFFS.weights[9], 1.414);
+    }
+}

@@ -1,0 +1,10 @@
+//! Comparator schemes the paper evaluates against.
+//!
+//! * **Scale-out baseline** and **direct scale-up** are machine layouts:
+//!   `Scheme::Baseline` / `Scheme::ScaleUp` (see [`crate::config`]).
+//! * **DWS** — Dynamic Warp Subdivision (Meng et al., Fig 21) — is the
+//!   intra-SM divergence-tolerance baseline, implemented here.
+
+pub mod dws;
+
+pub use dws::dws_description;

@@ -1,0 +1,46 @@
+//! `figures` — regenerate every table and figure of the paper's
+//! evaluation section (DESIGN.md §3 maps ids to experiments).
+//!
+//! Usage:
+//!   figures --fig 12            # one figure (full workloads)
+//!   figures --all --quick       # everything, shrunken workloads
+//!   figures --fig 12 --tsv      # machine-readable output
+
+use anyhow::{anyhow, Result};
+
+use amoeba_gpu::harness::{figure, ALL_FIGURES};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let tsv = args.iter().any(|a| a == "--tsv");
+    let all = args.iter().any(|a| a == "--all");
+    let fig = args
+        .iter()
+        .position(|a| a == "--fig")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let ids: Vec<String> = if all {
+        ALL_FIGURES.iter().map(|s| s.to_string()).collect()
+    } else if let Some(f) = fig {
+        vec![f]
+    } else {
+        return Err(anyhow!(
+            "usage: figures --fig <id> [--quick] [--tsv] | figures --all [--quick]\nids: {}",
+            ALL_FIGURES.join(", ")
+        ));
+    };
+    for id in ids {
+        eprintln!("[figures] generating {id}...");
+        let t = figure(&id, quick)
+            .ok_or_else(|| anyhow!("unknown figure id '{id}' (ids: {})", ALL_FIGURES.join(", ")))?;
+        if tsv {
+            println!("# {id}");
+            print!("{}", t.to_tsv());
+        } else {
+            println!("{}", t.render());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,349 @@
+//! System configuration (paper Table 1) and experiment knobs.
+//!
+//! The defaults reproduce the GPGPU-Sim v3.2.2 GTX480-style setup the paper
+//! simulates: 48 scale-out SMs (warp size 32, SIMD pipeline width 8), 8
+//! memory controllers, a 2-stage-router 128-bit mesh NoC with separate
+//! request/reply subnets, GTO warp scheduling and FR-FCFS memory scheduling.
+
+mod scheme;
+
+pub use scheme::{NocMode, Scheme, SplitPolicy};
+
+/// Full system configuration. One instance describes one simulated machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    // ---- SM fabric ----------------------------------------------------
+    /// Number of baseline (scale-out) SMs on the chip.
+    pub num_sms: usize,
+    /// Threads per warp in a baseline SM (paper: 32; fused SMs run 64).
+    pub warp_size: usize,
+    /// SIMD pipeline width (lanes issued per cycle; paper: 8).
+    pub simd_width: usize,
+    /// Maximum resident threads per SM (paper: 1024).
+    pub max_threads_per_sm: usize,
+    /// Maximum resident CTAs per SM (paper: 8).
+    pub max_ctas_per_sm: usize,
+    /// Registers per SM (paper: 16384).
+    pub registers_per_sm: usize,
+    /// Shared memory per SM in bytes (paper: 48 KB).
+    pub shared_mem_bytes: usize,
+    /// Warp schedulers per SM (GTO policy).
+    pub schedulers_per_sm: usize,
+
+    // ---- Caches -------------------------------------------------------
+    /// L1 data cache size per SM in bytes (paper: 16 KB).
+    pub l1d_bytes: usize,
+    /// L1 instruction cache size per SM in bytes.
+    pub l1i_bytes: usize,
+    /// L1 constant cache size per SM in bytes (paper: 8 KB).
+    pub l1c_bytes: usize,
+    /// L1 texture cache size per SM in bytes (paper: 8 KB).
+    pub l1t_bytes: usize,
+    /// Cache line size in bytes (all levels).
+    pub line_bytes: usize,
+    /// L1 associativity (baseline; fusion doubles it).
+    pub l1_assoc: usize,
+    /// L1 hit latency in cycles.
+    pub l1_hit_latency: u32,
+    /// Extra L1 hit latency when two SMs' L1s are fused (paper: +1).
+    pub fused_l1_extra_latency: u32,
+    /// MSHR entries per SM (paper: 64).
+    pub mshr_per_sm: usize,
+    /// L2 cache size per memory controller slice (paper: 128 KB/core-slice).
+    pub l2_slice_bytes: usize,
+    /// L2 associativity.
+    pub l2_assoc: usize,
+    /// L2 hit latency in cycles (includes slice pipeline).
+    pub l2_hit_latency: u32,
+
+    // ---- Memory system -------------------------------------------------
+    /// Number of memory controllers (paper: 8).
+    pub num_mcs: usize,
+    /// DRAM banks per memory controller.
+    pub dram_banks_per_mc: usize,
+    /// Row-hit access latency (GPU cycles).
+    pub dram_row_hit_latency: u32,
+    /// Row-miss (activate+precharge) access latency (GPU cycles).
+    pub dram_row_miss_latency: u32,
+    /// DRAM row size in bytes (for FR-FCFS row-hit detection).
+    pub dram_row_bytes: usize,
+    /// Memory-controller request queue depth.
+    pub mc_queue_depth: usize,
+
+    // ---- NoC ------------------------------------------------------------
+    /// Channel width in bits (paper: 128).
+    pub noc_channel_bits: usize,
+    /// Router pipeline stages (paper: 2).
+    pub noc_router_stages: u32,
+    /// Per-port input queue depth in flits.
+    pub noc_queue_depth: usize,
+    /// Injection queue depth (SM/MC -> network; Fig 17's stall source).
+    pub noc_inject_depth: usize,
+    /// Mesh vs. ideal interconnect (Fig 3a vs 3b).
+    pub noc_mode: NocMode,
+
+    // ---- Pipeline latencies ----------------------------------------------
+    /// Integer ALU latency in cycles.
+    pub ialu_latency: u32,
+    /// FP ALU latency in cycles.
+    pub falu_latency: u32,
+    /// SFU (transcendental) latency in cycles.
+    pub sfu_latency: u32,
+    /// Shared-memory access latency in cycles.
+    pub smem_latency: u32,
+
+    // ---- AMOEBA ----------------------------------------------------------
+    /// Cycles of the online profiling window at kernel start (§4.1.1).
+    pub profile_window: u64,
+    /// Pipeline-drain + reconfiguration cost in cycles when fusing/unfusing.
+    pub reconfig_cost: u64,
+    /// Divergent-warp ratio threshold that triggers a dynamic split (§4.3).
+    pub split_threshold: f32,
+    /// Cycles between divergence-ratio evaluations on a fused SM.
+    pub split_check_period: u64,
+    /// Thread-group granularity for warp regrouping (threads per group).
+    pub regroup_granularity: usize,
+    /// Periodic fast-warp rebalance interval for split SMs (cycles).
+    pub rebalance_period: u64,
+
+    // ---- Simulation -------------------------------------------------------
+    /// Hard cycle limit per kernel (safety net; 0 = unlimited).
+    pub max_cycles: u64,
+}
+
+impl SystemConfig {
+    /// Paper Table 1: the GTX480-style 48-SM baseline.
+    pub fn gtx480() -> Self {
+        SystemConfig {
+            num_sms: 48,
+            warp_size: 32,
+            simd_width: 8,
+            max_threads_per_sm: 1024,
+            max_ctas_per_sm: 8,
+            registers_per_sm: 16384,
+            shared_mem_bytes: 48 << 10,
+            schedulers_per_sm: 1,
+
+            l1d_bytes: 16 << 10,
+            l1i_bytes: 4 << 10,
+            l1c_bytes: 8 << 10,
+            l1t_bytes: 8 << 10,
+            line_bytes: 128,
+            l1_assoc: 4,
+            l1_hit_latency: 1,
+            fused_l1_extra_latency: 1,
+            mshr_per_sm: 64,
+            l2_slice_bytes: 128 << 10,
+            l2_assoc: 8,
+            l2_hit_latency: 8,
+
+            num_mcs: 8,
+            dram_banks_per_mc: 8,
+            dram_row_hit_latency: 40,
+            dram_row_miss_latency: 110,
+            dram_row_bytes: 2048,
+            mc_queue_depth: 32,
+
+            noc_channel_bits: 128,
+            noc_router_stages: 2,
+            noc_queue_depth: 8,
+            noc_inject_depth: 8,
+            noc_mode: NocMode::Mesh,
+
+            ialu_latency: 4,
+            falu_latency: 4,
+            sfu_latency: 16,
+            smem_latency: 3,
+
+            profile_window: 2_000,
+            reconfig_cost: 500,
+            split_threshold: 0.25,
+            split_check_period: 512,
+            regroup_granularity: 4,
+            rebalance_period: 2_048,
+
+            max_cycles: 3_000_000,
+        }
+    }
+
+    /// A small configuration for fast unit tests (4 SMs, 2 MCs).
+    pub fn tiny() -> Self {
+        let mut c = Self::gtx480();
+        c.num_sms = 4;
+        c.num_mcs = 2;
+        c.max_cycles = 400_000;
+        c
+    }
+
+    /// Resource-fixed rescale used by the Fig 3/4 scaling sweeps: keep the
+    /// total number of lanes, registers, L1 capacity and thread slots on the
+    /// chip constant while varying the SM count (`n`). This mirrors the
+    /// paper's "fit the total amount of chip resources but vary the size and
+    /// the number of SMs" methodology.
+    pub fn with_sm_count(&self, n: usize) -> Self {
+        assert!(n > 0, "need at least one SM");
+        let total_lanes = self.num_sms * self.simd_width;
+        let total_threads = self.num_sms * self.max_threads_per_sm;
+        let total_regs = self.num_sms * self.registers_per_sm;
+        let total_l1d = self.num_sms * self.l1d_bytes;
+        let total_smem = self.num_sms * self.shared_mem_bytes;
+        let mut c = self.clone();
+        c.num_sms = n;
+        // SIMD width: largest power of two not exceeding the fair lane
+        // share (power-of-two keeps warp_size % simd_width == 0; lane
+        // totals are preserved up to that rounding, like the paper's
+        // 16/25/36/64 grid which cannot split resources exactly either).
+        let fair_lanes = (total_lanes / n).max(1);
+        c.simd_width = if fair_lanes.is_power_of_two() {
+            fair_lanes
+        } else {
+            (fair_lanes.next_power_of_two() / 2).max(1)
+        };
+        // Warp size tracks SM width at the baseline 4:1 ratio (what fusion
+        // does too: 8 lanes/32-wide -> 16 lanes/64-wide).
+        c.warp_size = (c.simd_width * (self.warp_size / self.simd_width)).clamp(8, 64);
+        c.max_threads_per_sm = (total_threads / n).max(c.warp_size);
+        c.registers_per_sm = (total_regs / n).max(1024);
+        c.l1d_bytes = (total_l1d / n).max(self.line_bytes * self.l1_assoc);
+        c.shared_mem_bytes = (total_smem / n).max(1 << 10);
+        c
+    }
+
+    /// Number of scale-up SMs when every neighboring pair is fused.
+    pub fn fused_sm_count(&self) -> usize {
+        self.num_sms / 2
+    }
+
+    /// Flits needed for a payload of `bytes` on this NoC. The 128-bit
+    /// channel is double-pumped (router clock = 2x core clock, as in
+    /// GPGPU-Sim's GTX480 interconnect config), so one core-cycle flit
+    /// carries 32 bytes.
+    pub fn flits_for(&self, bytes: usize) -> usize {
+        let flit_bytes = self.noc_channel_bits / 8 * 2;
+        bytes.div_ceil(flit_bytes).max(1)
+    }
+
+    /// Sets in an L1 cache of `bytes` with this config's line/assoc.
+    pub fn l1_sets(&self, bytes: usize) -> usize {
+        (bytes / self.line_bytes / self.l1_assoc).max(1)
+    }
+
+    /// Validate internal consistency; returns a human-readable complaint.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.warp_size.is_power_of_two() {
+            return Err(format!("warp_size {} must be a power of two", self.warp_size));
+        }
+        if self.warp_size > 64 {
+            return Err("warp_size > 64 unsupported (mask is u64)".into());
+        }
+        if self.simd_width == 0 || self.warp_size % self.simd_width != 0 {
+            return Err(format!(
+                "simd_width {} must divide warp_size {}",
+                self.simd_width, self.warp_size
+            ));
+        }
+        if self.num_sms == 0 || self.num_mcs == 0 {
+            return Err("need at least one SM and one MC".into());
+        }
+        if self.line_bytes == 0 || !self.line_bytes.is_power_of_two() {
+            return Err("line_bytes must be a power of two".into());
+        }
+        if self.l1d_bytes < self.line_bytes * self.l1_assoc {
+            return Err("L1D smaller than one set".into());
+        }
+        if !(0.0..=1.0).contains(&self.split_threshold) {
+            return Err("split_threshold must be in [0,1]".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self::gtx480()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gtx480_matches_table1() {
+        let c = SystemConfig::gtx480();
+        assert_eq!(c.num_sms, 48);
+        assert_eq!(c.num_mcs, 8);
+        assert_eq!(c.warp_size, 32);
+        assert_eq!(c.simd_width, 8);
+        assert_eq!(c.max_threads_per_sm, 1024);
+        assert_eq!(c.max_ctas_per_sm, 8);
+        assert_eq!(c.registers_per_sm, 16384);
+        assert_eq!(c.mshr_per_sm, 64);
+        assert_eq!(c.l1d_bytes, 16 << 10);
+        assert_eq!(c.l2_slice_bytes, 128 << 10);
+        assert_eq!(c.shared_mem_bytes, 48 << 10);
+        assert_eq!(c.noc_channel_bits, 128);
+        assert_eq!(c.noc_router_stages, 2);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn rescale_preserves_total_resources() {
+        let base = SystemConfig::gtx480();
+        let base_lanes = base.num_sms * base.simd_width;
+        for n in [16usize, 24, 36, 48, 64] {
+            let c = base.with_sm_count(n);
+            // Lanes preserved up to power-of-two rounding of the SIMD
+            // width (exact when n divides the total).
+            let lanes = c.num_sms * c.simd_width;
+            assert!(
+                lanes <= base_lanes && lanes * 2 > base_lanes,
+                "lanes at n={n}: {lanes} vs {base_lanes}"
+            );
+            // L1 capacity preserved up to integer division (< 1 line/SM).
+            let l1_total = c.num_sms * c.l1d_bytes;
+            let base_l1 = base.num_sms * base.l1d_bytes;
+            assert!(
+                base_l1 - l1_total < n * base.line_bytes,
+                "l1 at n={n}: {l1_total} vs {base_l1}"
+            );
+            assert!(c.validate().is_ok(), "valid at n={n}: {:?}", c.validate());
+        }
+        // Exact-divisor case is exactly preserved.
+        let c = base.with_sm_count(24);
+        assert_eq!(c.num_sms * c.simd_width, base_lanes);
+    }
+
+    #[test]
+    fn rescale_adjusts_warp_size() {
+        let base = SystemConfig::gtx480();
+        let up = base.with_sm_count(24); // scale-up: half the SMs
+        assert_eq!(up.warp_size, 64);
+        assert_eq!(up.simd_width, 16);
+        let same = base.with_sm_count(48);
+        assert_eq!(same.warp_size, 32);
+        assert_eq!(same.simd_width, 8);
+    }
+
+    #[test]
+    fn flit_math() {
+        let c = SystemConfig::gtx480();
+        assert_eq!(c.flits_for(8), 1); // 32-byte flits (double-pumped)
+        assert_eq!(c.flits_for(32), 1);
+        assert_eq!(c.flits_for(33), 2);
+        assert_eq!(c.flits_for(128 + 16), 5); // data reply: line + header
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = SystemConfig::gtx480();
+        c.warp_size = 48;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::gtx480();
+        c.simd_width = 7;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::gtx480();
+        c.split_threshold = 1.5;
+        assert!(c.validate().is_err());
+    }
+}

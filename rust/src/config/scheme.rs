@@ -1,0 +1,159 @@
+//! Execution schemes (the bars of Fig 12/13/21) and interconnect modes.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Which machine / reconfiguration scheme a simulation runs under.
+///
+/// These correspond one-to-one to the configurations the paper evaluates:
+/// the scale-out `Baseline`, a statically fused `ScaleUp` machine, AMOEBA's
+/// predictor-driven `StaticFuse`, the two dynamic heterogeneous schemes
+/// (`DirectSplit`, `WarpRegroup`) and the `Dws` comparator of Fig 21.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Paper baseline: 48 scale-out SMs, no reconfiguration.
+    Baseline,
+    /// All neighboring SM pairs fused for the whole run (direct scale_up).
+    ScaleUp,
+    /// AMOEBA static fuse: profile + predict once per kernel, then fuse
+    /// every pair (or none) for the kernel's lifetime (§4.1).
+    StaticFuse,
+    /// StaticFuse + dynamic splitting with the *direct split* policy (§4.3):
+    /// a divergent fused warp is cut in the middle into two halves.
+    DirectSplit,
+    /// StaticFuse + dynamic splitting with the *warp regrouping* policy:
+    /// thread groups are sorted into a fast warp and a slow warp.
+    WarpRegroup,
+    /// Dynamic Warp Subdivision (Meng et al.) — intra-SM baseline of Fig 21.
+    Dws,
+}
+
+impl Scheme {
+    /// All schemes in the order the paper's figures plot them.
+    pub const ALL: [Scheme; 6] = [
+        Scheme::Baseline,
+        Scheme::ScaleUp,
+        Scheme::StaticFuse,
+        Scheme::DirectSplit,
+        Scheme::WarpRegroup,
+        Scheme::Dws,
+    ];
+
+    /// The four AMOEBA-vs-baseline bars of Fig 12.
+    pub const FIG12: [Scheme; 5] = [
+        Scheme::Baseline,
+        Scheme::ScaleUp,
+        Scheme::StaticFuse,
+        Scheme::DirectSplit,
+        Scheme::WarpRegroup,
+    ];
+
+    /// Does this scheme ever fuse SM pairs?
+    pub fn can_fuse(&self) -> bool {
+        !matches!(self, Scheme::Baseline | Scheme::Dws)
+    }
+
+    /// Does this scheme dynamically split fused SMs?
+    pub fn splits(&self) -> Option<SplitPolicy> {
+        match self {
+            Scheme::DirectSplit => Some(SplitPolicy::Direct),
+            Scheme::WarpRegroup => Some(SplitPolicy::Regroup),
+            _ => None,
+        }
+    }
+
+    /// Does the scheme consult the scalability predictor per kernel?
+    pub fn uses_predictor(&self) -> bool {
+        matches!(
+            self,
+            Scheme::StaticFuse | Scheme::DirectSplit | Scheme::WarpRegroup
+        )
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Scheme::Baseline => "baseline",
+            Scheme::ScaleUp => "scale_up",
+            Scheme::StaticFuse => "static_fuse",
+            Scheme::DirectSplit => "direct_split",
+            Scheme::WarpRegroup => "warp_regrouping",
+            Scheme::Dws => "dws",
+        };
+        f.write_str(s)
+    }
+}
+
+impl FromStr for Scheme {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" | "scale_out" => Ok(Scheme::Baseline),
+            "scale_up" | "scaleup" => Ok(Scheme::ScaleUp),
+            "static_fuse" | "staticfuse" | "fuse" => Ok(Scheme::StaticFuse),
+            "direct_split" | "directsplit" => Ok(Scheme::DirectSplit),
+            "warp_regrouping" | "warp_regroup" | "regroup" => Ok(Scheme::WarpRegroup),
+            "dws" => Ok(Scheme::Dws),
+            other => Err(format!("unknown scheme '{other}'")),
+        }
+    }
+}
+
+/// How a fused SM distributes warps when it dynamically splits (§4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SplitPolicy {
+    /// Cut the divergent 64-wide warp in the middle; both halves move to
+    /// the second SM. Cheap, but fast and slow threads may stay mixed.
+    Direct,
+    /// Sort `regroup_granularity`-sized thread groups by divergence into a
+    /// fast warp (stays) and a slow warp (moves). The paper's best scheme.
+    Regroup,
+}
+
+/// Interconnect model selector (Fig 3a vs Fig 3b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NocMode {
+    /// Cycle-modelled 2D mesh with 2-stage routers and bounded queues.
+    Mesh,
+    /// Ideal interconnect: zero latency, infinite bandwidth.
+    Perfect,
+}
+
+impl fmt::Display for NocMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            NocMode::Mesh => "mesh",
+            NocMode::Perfect => "perfect",
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_roundtrip() {
+        for s in Scheme::ALL {
+            assert_eq!(s.to_string().parse::<Scheme>().unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn scheme_properties() {
+        assert!(!Scheme::Baseline.can_fuse());
+        assert!(!Scheme::Dws.can_fuse());
+        assert!(Scheme::ScaleUp.can_fuse());
+        assert!(!Scheme::ScaleUp.uses_predictor());
+        assert!(Scheme::StaticFuse.uses_predictor());
+        assert_eq!(Scheme::DirectSplit.splits(), Some(SplitPolicy::Direct));
+        assert_eq!(Scheme::WarpRegroup.splits(), Some(SplitPolicy::Regroup));
+        assert_eq!(Scheme::StaticFuse.splits(), None);
+    }
+
+    #[test]
+    fn unknown_scheme_rejected() {
+        assert!("bogus".parse::<Scheme>().is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal in-repo micro-benchmark harness (criterion is not available in
+//! the offline vendored registry). Measures wall-clock per iteration with
+//! warmup, reports min/median/mean, and supports setup-per-batch like
+//! criterion's `iter_batched`.
+
+use std::time::{Duration, Instant};
+
+/// A named benchmark group printing aligned results.
+pub struct Bencher {
+    group: String,
+    /// Target measurement iterations per benchmark.
+    pub iters: usize,
+    /// Warmup iterations.
+    pub warmup: usize,
+}
+
+impl Bencher {
+    /// New group with sensible defaults (tune with `iters`/`warmup`).
+    pub fn new(group: impl Into<String>) -> Self {
+        Bencher { group: group.into(), iters: 30, warmup: 3 }
+    }
+
+    /// Benchmark `f` (the closure result is kept alive to prevent the
+    /// optimizer from deleting the work).
+    pub fn bench<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let r = BenchResult::from_samples(&self.group, name, samples);
+        println!("{r}");
+        r
+    }
+
+    /// Benchmark with per-iteration setup excluded from timing.
+    pub fn bench_batched<S, R>(
+        &self,
+        name: &str,
+        mut setup: impl FnMut() -> S,
+        mut f: impl FnMut(S) -> R,
+    ) -> BenchResult {
+        for _ in 0..self.warmup {
+            let s = setup();
+            std::hint::black_box(f(s));
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let s = setup();
+            let t0 = Instant::now();
+            std::hint::black_box(f(s));
+            samples.push(t0.elapsed());
+        }
+        let r = BenchResult::from_samples(&self.group, name, samples);
+        println!("{r}");
+        r
+    }
+}
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// "group/name" label.
+    pub label: String,
+    /// Fastest observed iteration.
+    pub min: Duration,
+    /// Median iteration.
+    pub median: Duration,
+    /// Mean iteration.
+    pub mean: Duration,
+    /// Number of samples.
+    pub n: usize,
+}
+
+impl BenchResult {
+    fn from_samples(group: &str, name: &str, mut samples: Vec<Duration>) -> Self {
+        samples.sort_unstable();
+        let n = samples.len();
+        let min = samples[0];
+        let median = samples[n / 2];
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        BenchResult { label: format!("{group}/{name}"), min, median, mean, n }
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:40} min {:>12} | median {:>12} | mean {:>12} | n={}",
+            self.label,
+            fmt_duration(self.min),
+            fmt_duration(self.median),
+            fmt_duration(self.mean),
+            self.n
+        )
+    }
+}
+
+/// Human-friendly duration formatting (ns/us/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new("test");
+        b.iters = 5;
+        b.warmup = 1;
+        let r = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000u64 {
+                x = x.wrapping_add(i * i);
+            }
+            x
+        });
+        assert!(r.min.as_nanos() > 0);
+        assert!(r.median >= r.min);
+        assert_eq!(r.n, 5);
+    }
+
+    #[test]
+    fn batched_excludes_setup() {
+        let mut b = Bencher::new("test");
+        b.iters = 3;
+        b.warmup = 0;
+        let r = b.bench_batched(
+            "noop",
+            || std::thread::sleep(std::time::Duration::from_millis(2)),
+            |_| 42,
+        );
+        // Setup sleeps 2ms but timed body is ~instant.
+        assert!(r.median < Duration::from_millis(1), "median={:?}", r.median);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,42 @@
+//! Static datasets used by figures that do not require simulation.
+
+use crate::stats::Table;
+
+/// Fig 2: NVIDIA GTX SM-scaling trend — SM count vs cores/SM over the
+/// product generations the paper plots (public spec data, techpowerup).
+/// Reprinted as a dataset; no simulation involved.
+pub fn gtx_scaling_trend() -> Table {
+    let mut t = Table::new("Fig 2 — GTX SM scaling trend", &["gpu", "year", "num_sms", "cores_per_sm"]);
+    // (name, year, SMs, CUDA cores per SM)
+    let data: [(&str, f64, f64, f64); 8] = [
+        ("GTX 280", 2008.0, 30.0, 8.0),
+        ("GTX 480", 2010.0, 15.0, 32.0),
+        ("GTX 580", 2011.0, 16.0, 32.0),
+        ("GTX 680", 2012.0, 8.0, 192.0),
+        ("GTX 780", 2013.0, 12.0, 192.0),
+        ("GTX 980", 2014.0, 16.0, 128.0),
+        ("GTX 1080", 2016.0, 20.0, 128.0),
+        ("GTX 2080", 2018.0, 46.0, 64.0),
+    ];
+    for (name, year, sms, cores) in data {
+        t.row(name, vec![year, sms, cores]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trend_shows_recent_scale_out() {
+        let t = gtx_scaling_trend();
+        assert_eq!(t.rows.len(), 8);
+        // The most recent part (2018) has more SMs with fewer cores than
+        // the 2012 peak scale-up design — the paper's §2.2 observation.
+        let r2012 = &t.rows.iter().find(|(n, _)| n == "GTX 680").unwrap().1;
+        let r2018 = &t.rows.iter().find(|(n, _)| n == "GTX 2080").unwrap().1;
+        assert!(r2018[1] > r2012[1], "more SMs in 2018");
+        assert!(r2018[2] < r2012[2], "fewer cores/SM in 2018");
+    }
+}

@@ -1,0 +1,46 @@
+//! Figure/table regeneration harness: one entry point per table and
+//! figure of the paper's evaluation section (see DESIGN.md §3 for the
+//! full index). Each function returns a [`Table`] whose rows/series match
+//! the paper's plot axes.
+
+pub mod bencher;
+mod figdata;
+mod figures;
+
+pub use bencher::{BenchResult, Bencher};
+pub use figdata::gtx_scaling_trend;
+pub use figures::*;
+
+use crate::stats::Table;
+
+/// All figure ids the harness can regenerate.
+pub const ALL_FIGURES: [&str; 19] = [
+    "2", "3a", "3b", "4", "5", "6", "8", "12", "13", "14", "15", "16", "17", "18", "19", "20",
+    "21", "t1", "t2",
+];
+
+/// Regenerate one figure/table by id. `quick` shrinks workloads for CI.
+pub fn figure(id: &str, quick: bool) -> Option<Table> {
+    match id {
+        "2" => Some(gtx_scaling_trend()),
+        "3a" => Some(fig3_scaling(false, quick)),
+        "3b" => Some(fig3_scaling(true, quick)),
+        "4" => Some(fig4_coalescing(quick)),
+        "5" => Some(fig5_l1_sharing(quick)),
+        "6" => Some(fig6_control_stalls(quick)),
+        "8" => Some(fig8_cta_consistency(quick)),
+        "12" => Some(fig12_performance(quick)),
+        "13" => Some(fig13_control_stalls(quick)),
+        "14" => Some(fig14_l1i_miss(quick)),
+        "15" => Some(fig15_l1d_miss(quick)),
+        "16" => Some(fig16_mem_access(quick)),
+        "17" => Some(fig17_icnt_stalls(quick)),
+        "18" => Some(fig18_injection(quick)),
+        "19" => Some(fig19_phases(quick)),
+        "20" => Some(fig20_impacts(quick)),
+        "21" => Some(fig21_vs_dws(quick)),
+        "t1" => Some(table1_config()),
+        "t2" => Some(table2_coefficients()),
+        _ => None,
+    }
+}

@@ -1,0 +1,136 @@
+//! Active-thread masks for warps up to 64 lanes (fused warp width).
+
+/// A per-lane activity bitmask. Bit `i` set means lane `i` executes.
+///
+/// Baseline warps use the low 32 bits; fused (64-wide) warps use all 64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ActiveMask(pub u64);
+
+impl ActiveMask {
+    /// All lanes of a `width`-wide warp active.
+    pub fn full(width: usize) -> Self {
+        debug_assert!(width <= 64 && width > 0);
+        if width == 64 {
+            ActiveMask(u64::MAX)
+        } else {
+            ActiveMask((1u64 << width) - 1)
+        }
+    }
+
+    /// No lanes active.
+    pub fn empty() -> Self {
+        ActiveMask(0)
+    }
+
+    /// Number of active lanes.
+    pub fn count(&self) -> u32 {
+        self.0.count_ones()
+    }
+
+    /// Is lane `i` active?
+    pub fn lane(&self, i: usize) -> bool {
+        debug_assert!(i < 64);
+        self.0 >> i & 1 == 1
+    }
+
+    /// Set lane `i`.
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < 64);
+        self.0 |= 1 << i;
+    }
+
+    /// Clear lane `i`.
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < 64);
+        self.0 &= !(1 << i);
+    }
+
+    /// Iterator over active lane indices, ascending.
+    pub fn lanes(&self) -> impl Iterator<Item = usize> + '_ {
+        let m = self.0;
+        (0..64usize).filter(move |i| m >> i & 1 == 1)
+    }
+
+    /// Lower half (lanes [0, width/2)) of a `width`-wide warp's mask.
+    pub fn low_half(&self, width: usize) -> ActiveMask {
+        let half = width / 2;
+        ActiveMask(self.0 & (if half == 64 { u64::MAX } else { (1u64 << half) - 1 }))
+    }
+
+    /// Upper half, shifted down so it becomes a `width/2`-wide mask.
+    pub fn high_half(&self, width: usize) -> ActiveMask {
+        let half = width / 2;
+        ActiveMask(self.0 >> half & (if half == 64 { u64::MAX } else { (1u64 << half) - 1 }))
+    }
+
+    /// Fraction of a `width`-wide warp that is active.
+    pub fn occupancy(&self, width: usize) -> f64 {
+        self.count() as f64 / width as f64
+    }
+}
+
+impl std::ops::BitAnd for ActiveMask {
+    type Output = ActiveMask;
+    fn bitand(self, rhs: Self) -> Self {
+        ActiveMask(self.0 & rhs.0)
+    }
+}
+
+impl std::ops::BitOr for ActiveMask {
+    type Output = ActiveMask;
+    fn bitor(self, rhs: Self) -> Self {
+        ActiveMask(self.0 | rhs.0)
+    }
+}
+
+impl std::ops::Not for ActiveMask {
+    type Output = ActiveMask;
+    fn not(self) -> Self {
+        ActiveMask(!self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_masks() {
+        assert_eq!(ActiveMask::full(32).count(), 32);
+        assert_eq!(ActiveMask::full(64).count(), 64);
+        assert_eq!(ActiveMask::full(8).0, 0xFF);
+        assert_eq!(ActiveMask::empty().count(), 0);
+    }
+
+    #[test]
+    fn lane_ops() {
+        let mut m = ActiveMask::empty();
+        m.set(0);
+        m.set(33);
+        assert!(m.lane(0) && m.lane(33) && !m.lane(1));
+        assert_eq!(m.lanes().collect::<Vec<_>>(), vec![0, 33]);
+        m.clear(0);
+        assert_eq!(m.count(), 1);
+    }
+
+    #[test]
+    fn halves() {
+        let m = ActiveMask::full(64);
+        assert_eq!(m.low_half(64).count(), 32);
+        assert_eq!(m.high_half(64).count(), 32);
+        let mut m = ActiveMask::empty();
+        m.set(0);
+        m.set(40);
+        assert_eq!(m.low_half(64).lanes().collect::<Vec<_>>(), vec![0]);
+        assert_eq!(m.high_half(64).lanes().collect::<Vec<_>>(), vec![8]); // 40-32
+    }
+
+    #[test]
+    fn occupancy_and_bitops() {
+        let m = ActiveMask::full(32);
+        assert!((m.occupancy(32) - 1.0).abs() < 1e-12);
+        assert_eq!((m & ActiveMask::empty()).count(), 0);
+        assert_eq!((m | ActiveMask::empty()).count(), 32);
+        assert_eq!((!ActiveMask(0)).count(), 64);
+    }
+}

@@ -1,0 +1,196 @@
+//! SIMT execution-model types: kernels, CTAs, warps, instructions, masks.
+//!
+//! The simulator executes *procedurally generated* instruction traces: a
+//! warp's instruction at a given PC is produced deterministically by the
+//! workload model ([`crate::workload`]) from `(kernel seed, cta, warp, pc)`.
+//! This keeps memory bounded (no stored traces) while remaining exactly
+//! reproducible.
+
+mod mask;
+
+pub use mask::ActiveMask;
+
+/// Memory space an access targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemSpace {
+    /// Global memory: L1D -> NoC -> L2/DRAM.
+    Global,
+    /// Shared (scratchpad) memory: on-SM, fixed latency, no NoC.
+    Shared,
+    /// Constant memory: L1C, read-only.
+    Const,
+    /// Texture memory: L1T, read-only.
+    Texture,
+}
+
+/// One warp-level dynamic instruction (the unit the pipeline issues).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    /// Integer ALU operation.
+    IAlu,
+    /// Floating-point ALU operation.
+    FAlu,
+    /// Special-function unit op (transcendental, rsqrt, ...).
+    Sfu,
+    /// Memory load. `pattern` drives per-thread address generation.
+    Ld { space: MemSpace, pattern: AccessPattern },
+    /// Memory store.
+    St { space: MemSpace, pattern: AccessPattern },
+    /// Conditional branch. `diverges` is resolved by the workload model;
+    /// a divergent branch serialises `region_len` instructions per path.
+    Branch { diverges: bool, region_len: u16 },
+    /// CTA-wide barrier.
+    Bar,
+    /// Thread-block exit (the warp is done when every instr is consumed).
+    Exit,
+}
+
+impl Op {
+    /// Is this op a global/texture/const load or store (i.e. may miss L1)?
+    pub fn is_cached_mem(&self) -> bool {
+        matches!(
+            self,
+            Op::Ld { space: MemSpace::Global | MemSpace::Const | MemSpace::Texture, .. }
+                | Op::St { space: MemSpace::Global, .. }
+        )
+    }
+
+    /// Is this op any kind of load?
+    pub fn is_load(&self) -> bool {
+        matches!(self, Op::Ld { .. })
+    }
+
+    /// Is this op any kind of store?
+    pub fn is_store(&self) -> bool {
+        matches!(self, Op::St { .. })
+    }
+}
+
+/// Per-thread address-generation pattern for one memory instruction.
+///
+/// `base` is a byte address inside the benchmark's modelled footprint; the
+/// pattern determines each active lane's address, which the coalescer then
+/// folds into cache-line transactions. The patterns are chosen to span the
+/// paper's characterisation space (Fig 4: coalescing; Fig 5: inter-SM
+/// sharing; §3.1(2) locality).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AccessPattern {
+    /// `addr(lane) = base + lane * stride` — coalesces into few lines when
+    /// `stride` is small (the classic "nice" GPU access).
+    Strided { base: u64, stride: u32 },
+    /// All lanes read the same line (broadcast; coalesces to 1 transaction).
+    Broadcast { base: u64 },
+    /// Each lane hits an independent pseudo-random line (worst case:
+    /// one transaction per lane). `seed` makes it deterministic.
+    Scatter { base: u64, seed: u64 },
+}
+
+impl AccessPattern {
+    /// Byte address accessed by `lane` under this pattern.
+    pub fn lane_addr(&self, lane: usize) -> u64 {
+        match *self {
+            AccessPattern::Strided { base, stride } => base + lane as u64 * stride as u64,
+            AccessPattern::Broadcast { base } => base,
+            AccessPattern::Scatter { base, seed } => {
+                // splitmix64 on (seed, lane): deterministic scatter.
+                let mut z = seed ^ (lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+                base + (z ^ (z >> 31)) % (64 << 20) // within a 64 MiB window
+            }
+        }
+    }
+}
+
+/// Static identity of a warp within the launched grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WarpId {
+    /// Kernel launch ordinal.
+    pub kernel: u32,
+    /// CTA index within the grid.
+    pub cta: u32,
+    /// Warp index within the CTA.
+    pub warp: u32,
+}
+
+/// A kernel launch: how much work and under which workload profile.
+#[derive(Debug, Clone)]
+pub struct KernelLaunch {
+    /// Kernel ordinal within the application (keys the trace generator).
+    pub id: u32,
+    /// Number of CTAs in the grid.
+    pub num_ctas: u32,
+    /// Threads per CTA.
+    pub cta_threads: u32,
+    /// Dynamic instructions each thread executes (trace length).
+    pub insns_per_thread: u32,
+    /// Registers per thread (occupancy limiter).
+    pub regs_per_thread: u32,
+    /// Shared memory per CTA in bytes (occupancy limiter).
+    pub smem_per_cta: u32,
+    /// Seed deriving every per-warp instruction stream of this kernel.
+    pub seed: u64,
+}
+
+impl KernelLaunch {
+    /// Warps per CTA for a machine with `warp_size`-wide warps.
+    pub fn warps_per_cta(&self, warp_size: usize) -> u32 {
+        (self.cta_threads as usize).div_ceil(warp_size) as u32
+    }
+
+    /// Total dynamic warp-instructions this kernel will execute (used for
+    /// IPC bookkeeping and progress checks).
+    pub fn total_warp_insns(&self, warp_size: usize) -> u64 {
+        self.num_ctas as u64
+            * self.warps_per_cta(warp_size) as u64
+            * self.insns_per_thread as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_addresses_are_deterministic() {
+        let p = AccessPattern::Scatter { base: 0x1000, seed: 42 };
+        let a = p.lane_addr(5);
+        assert_eq!(a, p.lane_addr(5));
+        assert_ne!(a, p.lane_addr(6));
+        let s = AccessPattern::Strided { base: 0x100, stride: 4 };
+        assert_eq!(s.lane_addr(0), 0x100);
+        assert_eq!(s.lane_addr(3), 0x10C);
+        let b = AccessPattern::Broadcast { base: 0x80 };
+        assert_eq!(b.lane_addr(0), b.lane_addr(31));
+    }
+
+    #[test]
+    fn kernel_warp_math() {
+        let k = KernelLaunch {
+            id: 0,
+            num_ctas: 10,
+            cta_threads: 256,
+            insns_per_thread: 100,
+            regs_per_thread: 16,
+            smem_per_cta: 0,
+            seed: 1,
+        };
+        assert_eq!(k.warps_per_cta(32), 8);
+        assert_eq!(k.warps_per_cta(64), 4);
+        assert_eq!(k.total_warp_insns(32), 10 * 8 * 100);
+        // Non-multiple thread count rounds up.
+        let k2 = KernelLaunch { cta_threads: 100, ..k };
+        assert_eq!(k2.warps_per_cta(32), 4);
+    }
+
+    #[test]
+    fn op_classification() {
+        let ld = Op::Ld { space: MemSpace::Global, pattern: AccessPattern::Broadcast { base: 0 } };
+        assert!(ld.is_cached_mem() && ld.is_load() && !ld.is_store());
+        let sm = Op::Ld { space: MemSpace::Shared, pattern: AccessPattern::Broadcast { base: 0 } };
+        assert!(!sm.is_cached_mem());
+        let st = Op::St { space: MemSpace::Global, pattern: AccessPattern::Broadcast { base: 0 } };
+        assert!(st.is_cached_mem() && st.is_store());
+        assert!(!Op::Bar.is_cached_mem());
+    }
+}

@@ -1,0 +1,47 @@
+//! # amoeba-gpu — AMOEBA paper reproduction
+//!
+//! A cycle-level GPU simulator plus the AMOEBA coarse-grained reconfigurable
+//! SM architecture from *"AMOEBA: A Coarse Grained Reconfigurable
+//! Architecture for Dynamic GPU Scaling"* (Cheng et al., cs.AR 2019).
+//!
+//! The crate is organised in three layers (see `DESIGN.md`):
+//!
+//! * **Substrates** — everything the paper's evaluation assumed from
+//!   GPGPU-Sim, rebuilt here: SIMT cores ([`sim::core`]), the memory system
+//!   ([`sim::mem`]), a mesh NoC ([`sim::noc`]), the top-level GPU
+//!   ([`sim::gpu`]) and synthetic workload models ([`workload`]).
+//! * **Contribution** — the AMOEBA reconfiguration machinery ([`amoeba`]):
+//!   the online controller, scalability metrics, the binary-logistic
+//!   predictor (native + PJRT-compiled HLO), SM fusion and the dynamic
+//!   split/fuse policies; baselines (incl. DWS) live in [`baselines`].
+//! * **Runtime & harness** — [`runtime`] wraps the `xla` PJRT client that
+//!   executes the AOT-compiled predictor artifacts; [`harness`] regenerates
+//!   every table and figure of the paper's evaluation section.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use amoeba_gpu::prelude::*;
+//!
+//! let cfg = SystemConfig::gtx480();
+//! let bench = workload::bench("RAY").expect("known benchmark");
+//! let report = sim::gpu::run_benchmark(&cfg, &bench, Scheme::WarpRegroup);
+//! println!("IPC = {:.2}", report.ipc());
+//! ```
+
+pub mod amoeba;
+pub mod baselines;
+pub mod config;
+pub mod harness;
+pub mod isa;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod workload;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{NocMode, Scheme, SystemConfig};
+    pub use crate::sim::{self, gpu::SimReport};
+    pub use crate::workload::{self, BenchProfile};
+}

@@ -1,0 +1,171 @@
+//! `amoeba` CLI — simulate benchmarks under any scheme, sweep the suite,
+//! or inspect the machine configuration.
+//!
+//! Argument parsing is hand-rolled (the offline vendored registry ships no
+//! CLI crates); see `usage()` for the grammar.
+
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Result};
+
+use amoeba_gpu::config::{NocMode, Scheme, SystemConfig};
+use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_with_controller};
+use amoeba_gpu::stats::Table;
+use amoeba_gpu::workload::{all_benchmarks, bench};
+
+fn usage() -> &'static str {
+    "amoeba — AMOEBA reconfigurable-GPU simulator (paper reproduction)
+
+USAGE:
+  amoeba run <BENCH> [--scheme S] [--sms N] [--perfect-noc] [--seed N]
+                     [--hlo-predictor]
+  amoeba sweep [--quick]
+  amoeba list
+  amoeba config
+
+SCHEMES: baseline | scale_up | static_fuse | direct_split |
+         warp_regrouping | dws"
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "run" => cmd_run(&args[1..]),
+        "sweep" => cmd_sweep(&args[1..]),
+        "list" => cmd_list(),
+        "config" => {
+            println!("{}", amoeba_gpu::harness::figure("t1", true).unwrap().render());
+            Ok(())
+        }
+        "-h" | "--help" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{}", usage()),
+    }
+}
+
+/// Fetch the value following a `--flag`.
+fn opt_value<'a>(args: &'a [String], flag: &str) -> Result<Option<&'a str>> {
+    match args.iter().position(|a| a == flag) {
+        None => Ok(None),
+        Some(i) => args
+            .get(i + 1)
+            .map(|s| Some(s.as_str()))
+            .ok_or_else(|| anyhow!("{flag} needs a value")),
+    }
+}
+
+fn has_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let name = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .ok_or_else(|| anyhow!("run needs a benchmark name\n\n{}", usage()))?;
+    let profile =
+        bench(name).ok_or_else(|| anyhow!("unknown benchmark '{name}' (try `amoeba list`)"))?;
+    let scheme = match opt_value(args, "--scheme")? {
+        Some(s) => Scheme::from_str(s).map_err(|e| anyhow!(e))?,
+        None => Scheme::WarpRegroup,
+    };
+    let mut cfg = SystemConfig::gtx480();
+    if let Some(n) = opt_value(args, "--sms")? {
+        cfg = cfg.with_sm_count(n.parse()?);
+    }
+    if has_flag(args, "--perfect-noc") {
+        cfg.noc_mode = NocMode::Perfect;
+    }
+    let seed: u64 = match opt_value(args, "--seed")? {
+        Some(s) => s.parse()?,
+        None => 0xAB0EBA,
+    };
+
+    let report = if has_flag(args, "--hlo-predictor") {
+        let rt = amoeba_gpu::runtime::Runtime::new()?;
+        let coeffs = amoeba_gpu::amoeba::DEFAULT_COEFFS;
+        let mut w = [0f32; amoeba_gpu::amoeba::NUM_FEATURES];
+        for (o, c) in w.iter_mut().zip(coeffs.weights) {
+            *o = c as f32;
+        }
+        let predictor = amoeba_gpu::runtime::HloPredictor::new(&rt, w, coeffs.intercept as f32)?;
+        let controller = amoeba_gpu::amoeba::Controller::with_predictor(Box::new(predictor));
+        run_benchmark_with_controller(&cfg, &profile, scheme, controller, seed)
+    } else {
+        run_benchmark_seeded(&cfg, &profile, scheme, seed)
+    };
+
+    println!("benchmark       : {}", report.bench);
+    println!("scheme          : {}", report.scheme);
+    println!("cycles          : {}", report.cycles);
+    println!("thread insns    : {}", report.sm.thread_insns);
+    println!("IPC             : {:.3}", report.ipc());
+    println!("L1D miss rate   : {:.4}", report.sm.l1d_miss_rate());
+    println!("L1I miss rate   : {:.4}", report.sm.l1i_miss_rate());
+    println!("actual mem rate : {:.4}", report.sm.actual_access_rate());
+    println!("MSHR merge rate : {:.4}", report.sm.mshr_rate());
+    println!("control stalls  : {:.4}", report.sm.control_stall_rate());
+    println!("inactive threads: {:.4}", report.sm.inactive_thread_rate());
+    println!("avg NoC latency : {:.1}", report.sm.avg_noc_latency());
+    println!("MC inject stall : {:.4}", report.chip.mc_inject_stall_rate());
+    println!("L2 miss rate    : {:.4}", report.chip.l2_miss_rate());
+    println!("DRAM row hits   : {:.4}", report.chip.dram_row_hit_rate());
+    println!("fuse/split evts : {}/{}", report.sm.fuse_events, report.sm.split_events);
+    for (i, d) in report.decisions.iter().enumerate() {
+        println!(
+            "kernel {i}: P(scale-up)={:.3} -> {}",
+            d.probability,
+            if d.scale_up { "FUSE" } else { "scale-out" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let quick = has_flag(args, "--quick");
+    let mut cfg = SystemConfig::gtx480();
+    if quick {
+        cfg.num_sms = 8;
+        cfg.num_mcs = 4;
+    }
+    let mut t = Table::new(
+        "IPC by scheme",
+        &["bench", "baseline", "scale_up", "static_fuse", "direct_split", "warp_regrouping", "dws"],
+    );
+    for mut p in all_benchmarks() {
+        if quick {
+            p.num_ctas = p.num_ctas.min(12);
+            p.insns_per_thread = p.insns_per_thread.min(100);
+            p.num_kernels = 1;
+        }
+        let row: Vec<f64> = Scheme::ALL
+            .iter()
+            .map(|s| run_benchmark_seeded(&cfg, &p, *s, 0xAB0EBA).ipc())
+            .collect();
+        t.row(p.name, row);
+        eprint!(".");
+    }
+    eprintln!();
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    for b in all_benchmarks() {
+        println!(
+            "{:6} [{}] ctas={} insns/thread={} expected={}",
+            b.name,
+            b.suite,
+            b.num_ctas,
+            b.insns_per_thread,
+            if b.scale_up_expected { "scale-up" } else { "scale-out" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,273 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas predictor artifacts and
+//! executes them from the rust request path.
+//!
+//! Interchange format is HLO **text** (`artifacts/*.hlo.txt`), produced by
+//! `python/compile/aot.py`. Text is used instead of a serialized
+//! `HloModuleProto` because jax >= 0.5 emits 64-bit instruction ids that
+//! the crate's bundled XLA rejects; the text parser reassigns ids and
+//! round-trips cleanly.
+//!
+//! Python never runs here: the artifacts are built once by
+//! `make artifacts` and the rust binary is self-contained afterwards.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow as eyre, Context, Result};
+
+use crate::amoeba::metrics::{MetricsSample, NUM_FEATURES};
+use crate::amoeba::predictor::ScalePredictor;
+
+/// Default artifact directory relative to the repo root.
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$AMOEBA_ARTIFACTS`, else `artifacts/`
+/// relative to the working directory, else relative to the crate root.
+pub fn artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("AMOEBA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = PathBuf::from(ARTIFACT_DIR);
+    if cwd.is_dir() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(ARTIFACT_DIR)
+}
+
+/// A compiled HLO executable on the PJRT CPU client.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path (diagnostics).
+    pub path: PathBuf,
+}
+
+/// The PJRT runtime: one CPU client, executables loaded on demand.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the default artifact dir.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(artifact_dir())
+    }
+
+    /// Create a CPU PJRT client rooted at `dir`.
+    pub fn with_dir(dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir: dir.into() })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `name` (e.g. "predictor_infer") from the artifact
+    /// directory.
+    pub fn load(&self, name: &str) -> Result<HloExecutable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        self.load_path(&path)
+    }
+
+    /// Load and compile an HLO-text file.
+    pub fn load_path(&self, path: &Path) -> Result<HloExecutable> {
+        if !path.exists() {
+            return Err(eyre!(
+                "artifact {} missing — run `make artifacts` first",
+                path.display()
+            ));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| eyre!("non-utf8 path"))?,
+        )
+        .map_err(|e| eyre!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| eyre!("compile {}: {e:?}", path.display()))?;
+        Ok(HloExecutable { exe, path: path.to_path_buf() })
+    }
+}
+
+impl HloExecutable {
+    /// Execute with literal inputs; returns the elements of the output
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| eyre!("execute {}: {e:?}", self.path.display()))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("fetch result: {e:?}"))?;
+        decompose_tuple(out)
+    }
+}
+
+/// Split a (possibly 1-ary) tuple literal into its elements.
+fn decompose_tuple(mut lit: xla::Literal) -> Result<Vec<xla::Literal>> {
+    match lit.decompose_tuple() {
+        Ok(parts) if !parts.is_empty() => Ok(parts),
+        _ => Ok(vec![lit]),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Predictor backend
+// ---------------------------------------------------------------------
+
+/// The scalability predictor executed through the compiled HLO — the
+/// reproduction of the paper's MAC-IP decision block, running the same
+/// numerics as the Pallas kernel (verified against `NativePredictor`).
+pub struct HloPredictor {
+    exe: HloExecutable,
+    weights: Vec<f32>,
+    intercept: f32,
+}
+
+impl HloPredictor {
+    /// Load `predictor_infer.hlo.txt` with the given coefficients.
+    pub fn new(rt: &Runtime, weights: [f32; NUM_FEATURES], intercept: f32) -> Result<Self> {
+        let exe = rt.load("predictor_infer")?;
+        Ok(HloPredictor { exe, weights: weights.to_vec(), intercept })
+    }
+
+    /// Run one inference; returns P(scale-up).
+    pub fn infer(&self, features: &[f32; NUM_FEATURES]) -> Result<f64> {
+        let x = xla::Literal::vec1(&features[..]).reshape(&[1, NUM_FEATURES as i64])?;
+        let w = xla::Literal::vec1(&self.weights[..]);
+        let b = xla::Literal::scalar(self.intercept);
+        let out = self.exe.run(&[x, w, b])?;
+        let p: Vec<f32> = out[0].to_vec()?;
+        Ok(p[0] as f64)
+    }
+}
+
+impl ScalePredictor for HloPredictor {
+    fn probability(&mut self, sample: &MetricsSample) -> f64 {
+        // A failed PJRT execution is a deployment error; fall back to 0.5
+        // (no-reconfigure) rather than crashing the simulation loop.
+        self.infer(&sample.as_f32()).unwrap_or(0.5)
+    }
+}
+
+/// A batched trainer driving `predictor_train.hlo.txt` (one SGD step per
+/// call; the epoch loop lives in `examples/train_predictor.rs`).
+pub struct HloTrainer {
+    exe: HloExecutable,
+    /// Current weights.
+    pub weights: Vec<f32>,
+    /// Current intercept.
+    pub intercept: f32,
+    /// Training batch size baked into the artifact.
+    pub batch: usize,
+}
+
+impl HloTrainer {
+    /// Expected batch size of the compiled train step (matches
+    /// `python/compile/model.py::TRAIN_BATCH`).
+    pub const TRAIN_BATCH: usize = 256;
+
+    /// Load the train-step artifact with zero-initialised parameters.
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        let exe = rt.load("predictor_train")?;
+        Ok(HloTrainer {
+            exe,
+            weights: vec![0.0; NUM_FEATURES],
+            intercept: 0.0,
+            batch: Self::TRAIN_BATCH,
+        })
+    }
+
+    /// One SGD step over a fixed-size batch; returns the loss.
+    /// `x` is row-major `[batch][NUM_FEATURES]`, `y` in {0,1}.
+    pub fn step(&mut self, x: &[f32], y: &[f32], lr: f32) -> Result<f32> {
+        if x.len() != self.batch * NUM_FEATURES || y.len() != self.batch {
+            return Err(eyre!(
+                "train step needs exactly {} samples (got x={} y={})",
+                self.batch,
+                x.len() / NUM_FEATURES,
+                y.len()
+            ));
+        }
+        let xl = xla::Literal::vec1(x).reshape(&[self.batch as i64, NUM_FEATURES as i64])?;
+        let yl = xla::Literal::vec1(y);
+        let wl = xla::Literal::vec1(&self.weights[..]);
+        let bl = xla::Literal::scalar(self.intercept);
+        let lrl = xla::Literal::scalar(lr);
+        let out = self.exe.run(&[xl, yl, wl, bl, lrl])?;
+        if out.len() != 3 {
+            return Err(eyre!("train step returned {} outputs, want 3", out.len()));
+        }
+        self.weights = out[0].to_vec::<f32>().context("weights out")?;
+        let b: Vec<f32> = out[1].to_vec().context("bias out")?;
+        let loss: Vec<f32> = out[2].to_vec().context("loss out")?;
+        self.intercept = b[0];
+        Ok(loss[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let rt = Runtime::new().ok()?;
+        if rt.load("predictor_infer").is_ok() {
+            Some(rt)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn hlo_infer_matches_native_sigmoid() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let weights = [0.5f32; NUM_FEATURES];
+        let p = HloPredictor::new(&rt, weights, -1.0).unwrap();
+        let features = [0.2f32; NUM_FEATURES];
+        let got = p.infer(&features).unwrap();
+        // logit = 10 * 0.5 * 0.2 - 1.0 = 0.0 => P = 0.5.
+        assert!((got - 0.5).abs() < 1e-6, "got {got}");
+    }
+
+    #[test]
+    fn hlo_train_reduces_loss() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut t = HloTrainer::new(&rt).unwrap();
+        // Learnable rule: label = (feature0 > 0.5).
+        let n = t.batch;
+        let mut x = vec![0f32; n * NUM_FEATURES];
+        let mut y = vec![0f32; n];
+        for i in 0..n {
+            let v = (i % 100) as f32 / 100.0;
+            x[i * NUM_FEATURES] = v;
+            y[i] = (v > 0.5) as u8 as f32;
+        }
+        let first = t.step(&x, &y, 1.0).unwrap();
+        let mut last = first;
+        for _ in 0..60 {
+            last = t.step(&x, &y, 1.0).unwrap();
+        }
+        assert!(last < first * 0.6, "loss {first} -> {last}");
+        assert!(t.weights[0] > 0.0, "learned positive weight on feature0");
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let rt = Runtime::with_dir("/nonexistent-dir-for-test").unwrap();
+        let err = match rt.load("predictor_infer") {
+            Err(e) => e,
+            Ok(_) => panic!("load from a nonexistent dir must fail"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

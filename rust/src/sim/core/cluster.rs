@@ -1,0 +1,1164 @@
+//! An SM *cluster*: two neighbouring baseline SMs and the machinery to run
+//! them privately (baseline), fused (scale-up), or dynamically split.
+//!
+//! The cluster is the reconfiguration unit of AMOEBA (§4.2): fusing merges
+//! the pair's L1s (double associativity, +1 cycle), keeps one warp
+//! scheduler walking both datapaths (64-wide warps), shares one coalescing
+//! unit and bypasses the second NoC router. Dynamic splitting (§4.3)
+//! re-separates the schedulers/datapaths while *keeping* the merged L1s
+//! and the single NoC interface.
+
+use std::collections::HashMap;
+
+use crate::config::{SplitPolicy, SystemConfig};
+use crate::isa::{ActiveMask, KernelLaunch, MemSpace, Op, WarpId};
+use crate::sim::mem::{coalesce, coalesce_fused, Access, Cache};
+use crate::sim::noc::{Noc, Packet, Payload, Subnet};
+use crate::stats::{SmStats, StallReason};
+use crate::workload::TraceGen;
+
+use super::warp::{CtaState, ShadowWarp, WarpCtx};
+
+/// How a divergent branch is handled at issue time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DivergenceMode {
+    /// Serialise both paths on the issuing warp (baseline GPUs).
+    Serial,
+    /// Run the slow path as an independently-schedulable shadow warp
+    /// (DWS on a baseline SM; warp-regrouping on a split cluster).
+    Shadowed,
+}
+
+/// Execution mode of a cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterMode {
+    /// Baseline: two independent 32-wide SMs with private L1s and their
+    /// own NoC routers.
+    PrivatePair,
+    /// Fused scale-up SM: one scheduler, 64-wide warps, merged L1s, one
+    /// NoC interface.
+    Fused,
+    /// Dynamically split fused SM: two schedulers / datapaths, but the
+    /// L1s and NoC interface remain merged (paper §4.3).
+    FusedSplit,
+}
+
+/// Which cache a transaction belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CacheKind {
+    Data = 0,
+    Instr = 1,
+    Const = 2,
+    Texture = 3,
+}
+
+/// A memory client waiting on a line fill.
+#[derive(Debug, Clone, Copy)]
+enum Waiter {
+    /// Load scoreboard release for a warp (by table index).
+    Warp(usize),
+    /// Load scoreboard release for a shadow warp.
+    Shadow(usize),
+    /// Instruction-fetch release for a warp.
+    IFetchWarp(usize),
+    /// Instruction-fetch release for a shadow warp.
+    IFetchShadow(usize),
+    /// Store/write-through (no one waits).
+    None,
+}
+
+/// One line in flight beyond L1 and everyone waiting on it.
+#[derive(Debug)]
+struct PendingLine {
+    kind: CacheKind,
+    half: u8,
+    waiters: Vec<Waiter>,
+    /// Cycle the NoC request left (latency accounting); set on injection.
+    sent: u64,
+    /// Request actually injected into the NoC yet?
+    injected: bool,
+}
+
+/// An LSU queue entry: one post-coalescing transaction.
+#[derive(Debug, Clone, Copy)]
+struct Transaction {
+    line: u64,
+    kind: CacheKind,
+    is_write: bool,
+    waiter: Waiter,
+    /// Which half issued it (selects the L1 in PrivatePair mode).
+    half: u8,
+    /// The L1 lookup already happened (MissNew) and only the NoC injection
+    /// remains. Guarantees `Cache::access` runs exactly once per txn.
+    needs_inject: bool,
+}
+
+/// Per-half scheduler state.
+#[derive(Debug, Default, Clone)]
+struct HalfSched {
+    /// Exec pipeline busy until this cycle (initiation interval).
+    busy_until: u64,
+    /// Greedy-then-oldest: last issued warp table index.
+    greedy: Option<usize>,
+    /// Greedy shadow index.
+    greedy_shadow: Option<usize>,
+}
+
+/// The reconfigurable SM cluster.
+pub struct SmCluster {
+    /// Cluster index on the chip.
+    pub id: usize,
+    mode: ClusterMode,
+    cfg: SystemConfig,
+
+    /// All resident warps (both halves; `home` selects the scheduler).
+    pub warps: Vec<WarpCtx>,
+    /// Shadow warps (regroup slow passes / DWS subdivisions).
+    pub shadows: Vec<ShadowWarp>,
+    /// Resident CTAs.
+    pub ctas: Vec<CtaState>,
+
+    /// L1 caches. In PrivatePair mode index [0]/[1] are the two private
+    /// sets; in Fused/FusedSplit only index [0] is live (merged).
+    l1d: [Cache; 2],
+    l1i: [Cache; 2],
+    l1c: [Cache; 2],
+    l1t: [Cache; 2],
+
+    /// LSU: post-coalescing transactions awaiting cache/NoC processing.
+    lsu: std::collections::VecDeque<Transaction>,
+    /// Lines in flight beyond L1, keyed by line|kind|cache-index (the low
+    /// 7 bits of a line address are zero, so the key packing is lossless).
+    pending: HashMap<u64, PendingLine>,
+
+    sched: [HalfSched; 2],
+    age_counter: u64,
+
+    /// Statistics (aggregated over both halves).
+    pub stats: SmStats,
+    /// Reconfiguration drain: no issue until this cycle.
+    pub frozen_until: u64,
+    /// Divergence handling (DWS sets `Shadowed` machine-wide).
+    pub divergence_mode: DivergenceMode,
+    /// Split policy active while in `FusedSplit` (None otherwise).
+    pub split_policy: Option<SplitPolicy>,
+
+    // Cached per-kernel CTA resource costs (set at dispatch; all CTAs of a
+    // kernel are identical).
+    cta_threads: u32,
+    cta_regs: u32,
+    cta_smem: u32,
+}
+
+/// LSU transactions processed per cycle (one per original SM port).
+const LSU_WIDTH: usize = 2;
+/// LSU queue length at which memory instructions stop issuing.
+pub const LSU_QUEUE_CAP: usize = 96;
+
+impl SmCluster {
+    /// Build a cluster in the given mode.
+    pub fn new(id: usize, cfg: &SystemConfig, mode: ClusterMode) -> Self {
+        let mk = |bytes: usize| {
+            Cache::new(bytes, cfg.l1_assoc, cfg.line_bytes, cfg.l1_hit_latency, cfg.mshr_per_sm)
+        };
+        let mut c = SmCluster {
+            id,
+            mode: ClusterMode::PrivatePair,
+            cfg: cfg.clone(),
+            warps: Vec::new(),
+            shadows: Vec::new(),
+            ctas: Vec::new(),
+            l1d: [mk(cfg.l1d_bytes), mk(cfg.l1d_bytes)],
+            l1i: [mk(cfg.l1i_bytes), mk(cfg.l1i_bytes)],
+            l1c: [mk(cfg.l1c_bytes), mk(cfg.l1c_bytes)],
+            l1t: [mk(cfg.l1t_bytes), mk(cfg.l1t_bytes)],
+            lsu: std::collections::VecDeque::new(),
+            pending: HashMap::new(),
+            sched: [HalfSched::default(), HalfSched::default()],
+            age_counter: 0,
+            stats: SmStats::default(),
+            frozen_until: 0,
+            divergence_mode: DivergenceMode::Serial,
+            split_policy: None,
+            cta_threads: 0,
+            cta_regs: 0,
+            cta_smem: 0,
+        };
+        c.apply_cache_layout(mode);
+        c.mode = mode;
+        c
+    }
+
+    /// Current execution mode.
+    pub fn mode(&self) -> ClusterMode {
+        self.mode
+    }
+
+    /// Switch mode. Cache geometry is rebuilt only when crossing the
+    /// merged/private boundary; Fused <-> FusedSplit keeps the merged L1s
+    /// warm (paper: split SMs share the fused L1).
+    pub fn set_mode(&mut self, mode: ClusterMode) {
+        let was_merged = matches!(self.mode, ClusterMode::Fused | ClusterMode::FusedSplit);
+        let now_merged = matches!(mode, ClusterMode::Fused | ClusterMode::FusedSplit);
+        if was_merged != now_merged {
+            self.apply_cache_layout(mode);
+        }
+        self.mode = mode;
+    }
+
+    fn apply_cache_layout(&mut self, mode: ClusterMode) {
+        let cfg = &self.cfg;
+        let merged = matches!(mode, ClusterMode::Fused | ClusterMode::FusedSplit);
+        if merged {
+            let lat = cfg.l1_hit_latency + cfg.fused_l1_extra_latency;
+            self.l1d[0].resize(cfg.l1d_bytes * 2, cfg.l1_assoc * 2, lat, cfg.mshr_per_sm * 2);
+            self.l1i[0].resize(cfg.l1i_bytes * 2, cfg.l1_assoc * 2, lat, cfg.mshr_per_sm);
+            self.l1c[0].resize(cfg.l1c_bytes * 2, cfg.l1_assoc * 2, lat, cfg.mshr_per_sm);
+            self.l1t[0].resize(cfg.l1t_bytes * 2, cfg.l1_assoc * 2, lat, cfg.mshr_per_sm);
+        } else {
+            let lat = cfg.l1_hit_latency;
+            for i in 0..2 {
+                self.l1d[i].resize(cfg.l1d_bytes, cfg.l1_assoc, lat, cfg.mshr_per_sm);
+                self.l1i[i].resize(cfg.l1i_bytes, cfg.l1_assoc, lat, cfg.mshr_per_sm);
+                self.l1c[i].resize(cfg.l1c_bytes, cfg.l1_assoc, lat, cfg.mshr_per_sm);
+                self.l1t[i].resize(cfg.l1t_bytes, cfg.l1_assoc, lat, cfg.mshr_per_sm);
+            }
+        }
+        self.pending.clear();
+        self.lsu.clear();
+    }
+
+    /// Cache index serving `half` in the current mode.
+    fn cache_idx(&self, half: u8) -> usize {
+        match self.mode {
+            ClusterMode::PrivatePair => half as usize,
+            _ => 0,
+        }
+    }
+
+    fn pending_key(line: u64, kind: CacheKind, ci: usize) -> u64 {
+        debug_assert_eq!(line & 0x7, 0, "line addresses are >=8B aligned");
+        line | (kind as u64) << 1 | ci as u64
+    }
+
+    // ------------------------------------------------------------------
+    // Occupancy & dispatch
+    // ------------------------------------------------------------------
+
+    /// Warp width this cluster runs in its current mode.
+    pub fn warp_width(&self) -> usize {
+        match self.mode {
+            ClusterMode::Fused => self.cfg.warp_size * 2,
+            _ => self.cfg.warp_size,
+        }
+    }
+
+    /// Can a CTA of `kernel` be accepted right now?
+    pub fn can_accept_cta(&self, kernel: &KernelLaunch) -> bool {
+        let need_regs = (kernel.cta_threads * kernel.regs_per_thread) as usize;
+        if self.mode == ClusterMode::PrivatePair {
+            let h = self.lighter_half();
+            let (t, c, r, s) = self.occupancy_half(h, kernel);
+            t + kernel.cta_threads as usize <= self.cfg.max_threads_per_sm
+                && c < self.cfg.max_ctas_per_sm
+                && r + need_regs <= self.cfg.registers_per_sm
+                && s + kernel.smem_per_cta as usize <= self.cfg.shared_mem_bytes
+        } else {
+            let (t0, c0, r0, s0) = self.occupancy_half(0, kernel);
+            let (t1, c1, r1, s1) = self.occupancy_half(1, kernel);
+            t0 + t1 + kernel.cta_threads as usize <= self.cfg.max_threads_per_sm * 2
+                && c0 + c1 < self.cfg.max_ctas_per_sm * 2
+                && r0 + r1 + need_regs <= self.cfg.registers_per_sm * 2
+                && s0 + s1 + kernel.smem_per_cta as usize <= self.cfg.shared_mem_bytes * 2
+        }
+    }
+
+    fn lighter_half(&self) -> u8 {
+        let c0 = self.ctas.iter().filter(|c| c.home == 0 && !c.complete()).count();
+        let c1 = self.ctas.iter().filter(|c| c.home == 1 && !c.complete()).count();
+        u8::from(c1 < c0)
+    }
+
+    fn occupancy_half(&self, half: u8, kernel: &KernelLaunch) -> (usize, usize, usize, usize) {
+        let mut threads = 0;
+        let mut ctas = 0;
+        let mut regs = 0;
+        let mut smem = 0;
+        for c in self.ctas.iter().filter(|c| !c.complete()) {
+            if self.mode == ClusterMode::PrivatePair && c.home != half {
+                continue;
+            }
+            // Merged modes pool both halves: attribute whole CTAs.
+            let div = if self.mode == ClusterMode::PrivatePair { 1 } else { 2 };
+            threads += kernel.cta_threads as usize / div;
+            ctas += 1;
+            regs += (kernel.cta_threads * kernel.regs_per_thread) as usize / div;
+            smem += kernel.smem_per_cta as usize / div;
+        }
+        // In merged modes each "half" reports half the pooled usage; the
+        // caller sums both halves against the doubled capacity.
+        let _ = self.cta_threads;
+        let _ = self.cta_regs;
+        let _ = self.cta_smem;
+        let cta_div: usize = if self.mode == ClusterMode::PrivatePair { 1 } else { 2 };
+        (threads, (ctas as usize).div_ceil(cta_div), regs, smem)
+    }
+
+    /// Dispatch a CTA onto the cluster.
+    pub fn dispatch_cta(&mut self, kernel: &KernelLaunch, cta: u32, _gen: &TraceGen) {
+        let width = self.warp_width();
+        let subwarps_total = kernel.warps_per_cta(self.cfg.warp_size);
+        let home = if self.mode == ClusterMode::PrivatePair { self.lighter_half() } else { 0 };
+        let slot = self.ctas.len();
+        let mut warps_made = 0;
+        if width == self.cfg.warp_size {
+            for sw in 0..subwarps_total {
+                self.age_counter += 1;
+                self.warps.push(Self::fresh_warp(
+                    kernel, cta, sw, [sw, u32::MAX], 1, width, slot, self.age_counter, home,
+                ));
+                warps_made += 1;
+            }
+        } else {
+            // Fused 64-wide warps: pair consecutive sub-warps.
+            let mut sw = 0;
+            while sw < subwarps_total {
+                let hi = if sw + 1 < subwarps_total { sw + 1 } else { u32::MAX };
+                let n = if hi == u32::MAX { 1 } else { 2 };
+                let w = if n == 2 { width } else { self.cfg.warp_size };
+                self.age_counter += 1;
+                let mut warp = Self::fresh_warp(
+                    kernel, cta, sw / 2, [sw, hi], n, width, slot, self.age_counter, 0,
+                );
+                warp.mask = ActiveMask::full(w);
+                warp.full_mask = warp.mask;
+                self.warps.push(warp);
+                warps_made += 1;
+                sw += 2;
+            }
+        }
+        self.ctas.push(CtaState { cta, warps_total: warps_made, warps_done: 0, barrier_count: 0, home });
+        self.cta_threads = kernel.cta_threads;
+        self.cta_regs = kernel.cta_threads * kernel.regs_per_thread;
+        self.cta_smem = kernel.smem_per_cta;
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn fresh_warp(
+        kernel: &KernelLaunch,
+        cta: u32,
+        warp: u32,
+        subwarps: [u32; 2],
+        n_subwarps: u8,
+        width: usize,
+        slot: usize,
+        age: u64,
+        home: u8,
+    ) -> WarpCtx {
+        WarpCtx {
+            id: WarpId { kernel: kernel.id, cta, warp },
+            subwarps,
+            n_subwarps,
+            width,
+            pc: 0,
+            trace_len: kernel.insns_per_thread,
+            mask: ActiveMask::full(width),
+            full_mask: ActiveMask::full(width),
+            outstanding_loads: 0,
+            at_barrier: false,
+            ifetch_pending: false,
+            finished: false,
+            replay: None,
+            shadow_outstanding: false,
+            cta_slot: slot,
+            age,
+            divergent: false,
+            home,
+        }
+    }
+
+    /// All work (warps + shadows + memory) fully drained?
+    pub fn idle(&self) -> bool {
+        self.warps.iter().all(|w| w.finished)
+            && self.shadows.iter().all(|s| s.complete())
+            && self.lsu.is_empty()
+            && self.pending.is_empty()
+    }
+
+    /// Number of unfinished warps.
+    pub fn live_warps(&self) -> usize {
+        self.warps.iter().filter(|w| !w.finished).count()
+    }
+
+    /// Retired-CTA count.
+    pub fn completed_ctas(&self) -> usize {
+        self.ctas.iter().filter(|c| c.complete()).count()
+    }
+
+    /// Remove retired state between kernels (when fully drained).
+    pub fn reap(&mut self) {
+        if self.idle() {
+            self.warps.clear();
+            self.shadows.clear();
+            self.ctas.clear();
+            self.sched = [HalfSched::default(), HalfSched::default()];
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Cycle
+    // ------------------------------------------------------------------
+
+    /// Advance one cycle. `noc_nodes` are this cluster's NoC endpoints
+    /// ([half0, half1] in per-SM layouts; both equal in fused layouts).
+    pub fn tick(&mut self, now: u64, noc: &mut Noc, noc_nodes: [usize; 2], gen: &TraceGen) {
+        self.stats.cycles += 1;
+        match self.mode {
+            ClusterMode::Fused => self.stats.fused_cycles += 1,
+            ClusterMode::FusedSplit => self.stats.split_cycles += 1,
+            ClusterMode::PrivatePair => {}
+        }
+        if now < self.frozen_until {
+            return;
+        }
+        self.process_lsu(now, noc, noc_nodes);
+        match self.mode {
+            ClusterMode::Fused => {
+                self.issue_half(now, 0, true, gen);
+            }
+            ClusterMode::PrivatePair | ClusterMode::FusedSplit => {
+                self.issue_half(now, 0, false, gen);
+                self.issue_half(now, 1, false, gen);
+            }
+        }
+    }
+
+    /// GTO pick for `half` (greedy last-issued, else oldest issuable).
+    fn pick(&self, half: u8, all_homes: bool) -> Option<Pick> {
+        let sched = &self.sched[half as usize];
+        let eligible = |w: &WarpCtx| (all_homes || w.home == half) && w.issuable();
+        if let Some(g) = sched.greedy {
+            if g < self.warps.len() && eligible(&self.warps[g]) {
+                return Some(Pick::Warp(g));
+            }
+        }
+        // Oldest issuable warp: ages are assigned in dispatch order and
+        // warps are appended in dispatch order, so the first eligible
+        // entry in table order *is* the oldest (hot-loop early exit).
+        debug_assert!(self.warps.windows(2).all(|w| w[0].age <= w[1].age));
+        if let Some(i) = self.warps.iter().position(eligible) {
+            return Some(Pick::Warp(i));
+        }
+        if let Some(g) = sched.greedy_shadow {
+            if g < self.shadows.len()
+                && self.shadows[g].issuable()
+                && (all_homes || self.shadow_eligible(g, half))
+            {
+                return Some(Pick::Shadow(g));
+            }
+        }
+        self.shadows
+            .iter()
+            .enumerate()
+            .find(|(i, s)| s.issuable() && (all_homes || self.shadow_eligible(*i, half)))
+            .map(|(i, _)| Pick::Shadow(i))
+    }
+
+    /// May `half`'s scheduler issue shadow `idx`?
+    ///
+    /// On a split cluster, slow warps belong to the second half (§4.3) but
+    /// shadows are picked *after* warps, so the first half only reaches
+    /// them in otherwise-idle slots — this is the paper's "periodically
+    /// move some fast warps so the resources are not wasted" in reverse:
+    /// spare fast-half slots drain the slow bin instead of idling.
+    fn shadow_eligible(&self, idx: usize, half: u8) -> bool {
+        match self.mode {
+            ClusterMode::FusedSplit => true,
+            // DWS / others: same half as the parent warp.
+            _ => self.warps[self.shadows[idx].parent].home == half,
+        }
+    }
+
+    fn issue_half(&mut self, now: u64, half: u8, all_homes: bool, gen: &TraceGen) {
+        if self.sched[half as usize].busy_until > now {
+            self.stats.stall(StallReason::ExecBusy);
+            return;
+        }
+        let Some(pick) = self.pick(half, all_homes) else {
+            self.account_stall(half, all_homes);
+            return;
+        };
+        match pick {
+            Pick::Warp(i) => self.issue_warp(now, half, i, gen),
+            Pick::Shadow(i) => self.issue_shadow(now, half, i, gen),
+        }
+    }
+
+    /// Classify why nothing was issuable (stall breakdown, Fig 6/13).
+    fn account_stall(&mut self, half: u8, all_homes: bool) {
+        let mut any = false;
+        let mut mem = false;
+        let mut bar = false;
+        let mut ctrl = false;
+        for w in &self.warps {
+            if w.finished || (!all_homes && w.home != half) {
+                continue;
+            }
+            any = true;
+            if w.waiting_on_shadow() {
+                ctrl = true;
+            } else if w.at_barrier {
+                bar = true;
+            } else if w.outstanding_loads > 0 || w.ifetch_pending {
+                mem = true;
+            }
+        }
+        for (i, s) in self.shadows.iter().enumerate() {
+            if s.complete() || (!all_homes && !self.shadow_eligible(i, half)) {
+                continue;
+            }
+            any = true;
+            if s.outstanding_loads > 0 || s.ifetch_pending {
+                mem = true;
+            }
+        }
+        if !any {
+            self.stats.stall(StallReason::Idle);
+        } else if ctrl {
+            self.stats.stall(StallReason::Control);
+        } else if mem {
+            self.stats.stall(StallReason::Memory);
+        } else if bar {
+            self.stats.stall(StallReason::Barrier);
+        } else {
+            self.stats.stall(StallReason::ExecBusy);
+        }
+    }
+
+    /// Initiation interval: cycles the issue port is held per instruction.
+    fn ii(&self, width: usize) -> u64 {
+        let lanes = match self.mode {
+            ClusterMode::Fused => self.cfg.simd_width * 2,
+            _ => self.cfg.simd_width,
+        };
+        width.div_ceil(lanes) as u64
+    }
+
+    /// Is the LSU too full to accept another memory instruction?
+    fn lsu_full(&self) -> bool {
+        self.lsu.len() >= LSU_QUEUE_CAP
+    }
+
+    fn issue_warp(&mut self, now: u64, half: u8, wi: usize, gen: &TraceGen) {
+        let pc = self.warps[wi].pc;
+        // Memory-instruction backpressure: peek the op kind first.
+        let cta = self.warps[wi].id.cta;
+        let sub0 = self.warps[wi].subwarps[0];
+        let op0 = gen.resolve(cta, sub0, pc);
+        if op0.is_cached_mem() && self.lsu_full() {
+            self.stats.stall(StallReason::MemStructFull);
+            self.stats.mem_struct_stall_cycles += 1;
+            return;
+        }
+        // Instruction fetch.
+        if !self.fetch(self.cache_idx(half), half, gen.code_addr(pc), Waiter::IFetchWarp(wi)) {
+            return;
+        }
+        let w = &self.warps[wi];
+        let width = w.width;
+        let sub1 = w.subwarps[1];
+        let n_sub = w.n_subwarps;
+        let in_replay = w.replay.is_some();
+        let mask = w.mask;
+        let ii = self.ii(width);
+
+        self.stats.warp_insns += 1;
+        self.stats.thread_insns += mask.count() as u64;
+        self.stats.total_lane_cycles += (width as u64) * ii;
+        self.stats.inactive_lane_cycles += (width as u64 - mask.count() as u64) * ii;
+        if in_replay {
+            // Replay passes are the control-divergence serialisation cost.
+            self.stats.stall_control += ii;
+        }
+        self.sched[half as usize].busy_until = now + ii;
+        self.sched[half as usize].greedy = Some(wi);
+
+        match op0 {
+            Op::IAlu | Op::FAlu | Op::Sfu => {}
+            Op::Ld { space: MemSpace::Shared, .. } | Op::St { space: MemSpace::Shared, .. } => {}
+            Op::Ld { space, pattern } => {
+                let res = self.coalesce_for(gen, cta, sub1, n_sub, pc, &pattern, mask, width);
+                self.stats.mem_insns += 1;
+                self.stats.mem_requests += res.requests as u64;
+                self.stats.mem_transactions += res.lines.len() as u64;
+                let kind = match space {
+                    MemSpace::Const => CacheKind::Const,
+                    MemSpace::Texture => CacheKind::Texture,
+                    _ => CacheKind::Data,
+                };
+                self.warps[wi].outstanding_loads += res.lines.len() as u32;
+                for line in res.lines {
+                    self.lsu.push_back(Transaction {
+                        line,
+                        kind,
+                        is_write: false,
+                        waiter: Waiter::Warp(wi),
+                        half,
+                        needs_inject: false,
+                    });
+                }
+            }
+            Op::St { pattern, .. } => {
+                let res = self.coalesce_for(gen, cta, sub1, n_sub, pc, &pattern, mask, width);
+                self.stats.mem_insns += 1;
+                self.stats.mem_requests += res.requests as u64;
+                self.stats.mem_transactions += res.lines.len() as u64;
+                for line in res.lines {
+                    self.lsu.push_back(Transaction {
+                        line,
+                        kind: CacheKind::Data,
+                        is_write: true,
+                        waiter: Waiter::None,
+                        half,
+                        needs_inject: false,
+                    });
+                }
+            }
+            Op::Branch { diverges, region_len } => {
+                self.stats.branches += 1;
+                if !in_replay && region_len > 0 {
+                    // A fused warp diverges if EITHER sub-warp diverges —
+                    // the wider-pipeline penalty of §3.1(3).
+                    let div1 = n_sub == 2
+                        && matches!(gen.resolve(cta, sub1, pc), Op::Branch { diverges: true, .. });
+                    if diverges || div1 {
+                        self.stats.divergent_branches += 1;
+                        let slow =
+                            self.slow_mask(gen, cta, sub0, sub1, n_sub, pc, diverges, div1, width);
+                        self.handle_divergence(wi, pc, region_len, slow, cta, sub0, width);
+                    }
+                }
+            }
+            Op::Bar => {
+                let slot = self.warps[wi].cta_slot;
+                self.warps[wi].at_barrier = true;
+                self.ctas[slot].barrier_count += 1;
+                let live = self
+                    .warps
+                    .iter()
+                    .filter(|w| w.cta_slot == slot && !w.finished)
+                    .count() as u32;
+                if self.ctas[slot].barrier_count >= live {
+                    self.ctas[slot].barrier_count = 0;
+                    for w in self.warps.iter_mut().filter(|w| w.cta_slot == slot) {
+                        w.at_barrier = false;
+                    }
+                }
+            }
+            Op::Exit => {}
+        }
+
+        if self.warps[wi].advance() {
+            let slot = self.warps[wi].cta_slot;
+            self.ctas[slot].warps_done += 1;
+            self.stats.warps_retired += 1;
+            if self.ctas[slot].complete() {
+                self.stats.ctas_retired += 1;
+            }
+            // Barrier bookkeeping: a retiring warp lowers the live count;
+            // re-check release for its CTA.
+            let live = self
+                .warps
+                .iter()
+                .filter(|w| w.cta_slot == slot && !w.finished)
+                .count() as u32;
+            if live > 0 && self.ctas[slot].barrier_count >= live {
+                self.ctas[slot].barrier_count = 0;
+                for w in self.warps.iter_mut().filter(|w| w.cta_slot == slot) {
+                    w.at_barrier = false;
+                }
+            }
+        }
+    }
+
+    /// Route a fresh divergence through the active policy:
+    ///
+    /// * `Shadowed` divergence mode (DWS machine-wide, or warp-regrouping
+    ///   on a split cluster): the slow pass becomes an independently
+    ///   schedulable [`ShadowWarp`]; the issuing warp runs only the fast
+    ///   pass and waits at the reconvergence point.
+    /// * `FusedSplit` + direct-split policy: the whole warp migrates to
+    ///   the second half (SM_1) and serialises both paths there (§4.3).
+    /// * otherwise: classic serial two-pass replay.
+    #[allow(clippy::too_many_arguments)]
+    fn handle_divergence(
+        &mut self,
+        wi: usize,
+        pc: u32,
+        region_len: u16,
+        slow: ActiveMask,
+        cta: u32,
+        sub0: u32,
+        width: usize,
+    ) {
+        let shadowed = self.divergence_mode == DivergenceMode::Shadowed
+            || (self.mode == ClusterMode::FusedSplit
+                && self.split_policy == Some(SplitPolicy::Regroup));
+        if shadowed && slow.count() > 0 && slow.count() < width as u32 {
+            self.warps[wi].begin_divergence(region_len, slow, true);
+            self.spawn_shadow(ShadowWarp {
+                parent: wi,
+                cta,
+                subwarp: sub0,
+                pc: pc + 1,
+                end_pc: pc + 1 + region_len as u32,
+                mask: slow,
+                width,
+                outstanding_loads: 0,
+                ifetch_pending: false,
+                done: false,
+            });
+        } else {
+            self.warps[wi].begin_divergence(region_len, slow, false);
+            if self.mode == ClusterMode::FusedSplit
+                && self.split_policy == Some(SplitPolicy::Direct)
+            {
+                // Move the divergent warp to the slow half.
+                self.warps[wi].home = 1;
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn coalesce_for(
+        &self,
+        gen: &TraceGen,
+        cta: u32,
+        sub1: u32,
+        n_sub: u8,
+        pc: u32,
+        pattern: &crate::isa::AccessPattern,
+        mask: ActiveMask,
+        width: usize,
+    ) -> crate::sim::mem::CoalesceResult {
+        if n_sub == 2 {
+            let pat1 = match gen.resolve(cta, sub1, pc) {
+                Op::Ld { pattern, .. } | Op::St { pattern, .. } => pattern,
+                _ => *pattern,
+            };
+            coalesce_fused(pattern, &pat1, mask, self.cfg.line_bytes)
+        } else {
+            coalesce(pattern, mask, width, self.cfg.line_bytes)
+        }
+    }
+
+    /// Build the slow-lane mask for a diverging (possibly fused) warp.
+    #[allow(clippy::too_many_arguments)]
+    fn slow_mask(
+        &self,
+        gen: &TraceGen,
+        cta: u32,
+        sub0: u32,
+        sub1: u32,
+        n_sub: u8,
+        pc: u32,
+        div0: bool,
+        div1: bool,
+        width: usize,
+    ) -> ActiveMask {
+        let mut slow = ActiveMask::empty();
+        let half_w = if n_sub == 2 { width / 2 } else { width };
+        if div0 {
+            let frac = gen.divergence_split(cta, sub0, pc);
+            let n = ((half_w as f64 * frac).round() as usize).clamp(1, half_w - 1);
+            for i in 0..n {
+                slow.set(i);
+            }
+        }
+        if n_sub == 2 && div1 {
+            let frac = gen.divergence_split(cta, sub1, pc);
+            let n = ((half_w as f64 * frac).round() as usize).clamp(1, half_w - 1);
+            for i in 0..n {
+                slow.set(half_w + i);
+            }
+        }
+        slow
+    }
+
+    fn issue_shadow(&mut self, now: u64, half: u8, si: usize, gen: &TraceGen) {
+        let pc = self.shadows[si].pc;
+        let cta = self.shadows[si].cta;
+        let sub = self.shadows[si].subwarp;
+        let op = gen.resolve(cta, sub, pc);
+        if op.is_cached_mem() && self.lsu_full() {
+            self.stats.stall(StallReason::MemStructFull);
+            self.stats.mem_struct_stall_cycles += 1;
+            return;
+        }
+        if !self.fetch(self.cache_idx(half), half, gen.code_addr(pc), Waiter::IFetchShadow(si)) {
+            return;
+        }
+        let s = &self.shadows[si];
+        let (mask, width) = (s.mask, s.width);
+        let ii = self.ii(self.cfg.warp_size);
+        self.stats.warp_insns += 1;
+        self.stats.thread_insns += mask.count() as u64;
+        self.stats.total_lane_cycles += (self.cfg.warp_size as u64) * ii;
+        self.stats.inactive_lane_cycles +=
+            (self.cfg.warp_size as u64).saturating_sub(mask.count() as u64) * ii;
+        self.sched[half as usize].busy_until = now + ii;
+        self.sched[half as usize].greedy_shadow = Some(si);
+
+        match op {
+            Op::Ld { space, pattern } if space != MemSpace::Shared => {
+                let res = coalesce(&pattern, mask, width.min(64), self.cfg.line_bytes);
+                self.stats.mem_insns += 1;
+                self.stats.mem_requests += res.requests as u64;
+                self.stats.mem_transactions += res.lines.len() as u64;
+                let kind = match space {
+                    MemSpace::Const => CacheKind::Const,
+                    MemSpace::Texture => CacheKind::Texture,
+                    _ => CacheKind::Data,
+                };
+                self.shadows[si].outstanding_loads += res.lines.len() as u32;
+                for line in res.lines {
+                    self.lsu.push_back(Transaction {
+                        line,
+                        kind,
+                        is_write: false,
+                        waiter: Waiter::Shadow(si),
+                        half,
+                        needs_inject: false,
+                    });
+                }
+            }
+            Op::St { space, pattern } if space != MemSpace::Shared => {
+                let res = coalesce(&pattern, mask, width.min(64), self.cfg.line_bytes);
+                self.stats.mem_insns += 1;
+                self.stats.mem_requests += res.requests as u64;
+                self.stats.mem_transactions += res.lines.len() as u64;
+                for line in res.lines {
+                    self.lsu.push_back(Transaction {
+                        line,
+                        kind: CacheKind::Data,
+                        is_write: true,
+                        waiter: Waiter::None,
+                        half,
+                        needs_inject: false,
+                    });
+                }
+            }
+            _ => {}
+        }
+        if self.shadows[si].advance() && self.shadows[si].complete() {
+            self.reconverge_shadow(si);
+        }
+    }
+
+    /// Instruction fetch: probe the L1I; on a hit, touch LRU and proceed.
+    /// On a miss, park the requester and enqueue a fill transaction.
+    fn fetch(&mut self, ci: usize, half: u8, code_line: u64, waiter: Waiter) -> bool {
+        self.stats.l1i_accesses += 1;
+        if self.l1i[ci].probe(code_line) {
+            let r = self.l1i[ci].access(code_line);
+            debug_assert_eq!(r, Access::Hit);
+            return true;
+        }
+        self.stats.l1i_misses += 1;
+        match waiter {
+            Waiter::IFetchWarp(i) => self.warps[i].ifetch_pending = true,
+            Waiter::IFetchShadow(i) => self.shadows[i].ifetch_pending = true,
+            _ => {}
+        }
+        self.lsu.push_back(Transaction {
+            line: code_line,
+            kind: CacheKind::Instr,
+            is_write: false,
+            waiter,
+            half,
+            needs_inject: false,
+        });
+        false
+    }
+
+    // ------------------------------------------------------------------
+    // Memory pipeline
+    // ------------------------------------------------------------------
+
+    /// Process LSU transactions: exactly one `Cache::access` per
+    /// transaction, with injection retried in a separate state.
+    fn process_lsu(&mut self, now: u64, noc: &mut Noc, noc_nodes: [usize; 2]) {
+        for _ in 0..LSU_WIDTH {
+            let Some(tx) = self.lsu.front().copied() else { break };
+            let ci = self.cache_idx(tx.half);
+            if tx.needs_inject {
+                let node = self.node_for(tx.half, noc_nodes);
+                if self.inject_request(now, noc, node, tx.line, tx.is_write) {
+                    let key = Self::pending_key(tx.line, tx.kind, ci);
+                    if let Some(p) = self.pending.get_mut(&key) {
+                        p.injected = true;
+                        p.sent = now;
+                    }
+                    self.lsu.pop_front();
+                } else {
+                    self.stats.stall(StallReason::MemStructFull);
+                    self.stats.mem_struct_stall_cycles += 1;
+                    break;
+                }
+                continue;
+            }
+            if tx.is_write {
+                // Write-through, no-allocate: straight to the NoC.
+                let node = self.node_for(tx.half, noc_nodes);
+                if self.inject_request(now, noc, node, tx.line, true) {
+                    self.count_access(tx.kind, false);
+                    self.lsu.pop_front();
+                } else {
+                    self.stats.stall(StallReason::MemStructFull);
+                    self.stats.mem_struct_stall_cycles += 1;
+                    break;
+                }
+                continue;
+            }
+            let cache = self.cache_mut(tx.kind, ci);
+            match cache.access(tx.line) {
+                Access::Hit => {
+                    self.count_access(tx.kind, false);
+                    self.release(tx.waiter);
+                    self.lsu.pop_front();
+                }
+                Access::MissMerged => {
+                    self.count_access(tx.kind, true);
+                    self.stats.mshr_merges += 1;
+                    let key = Self::pending_key(tx.line, tx.kind, ci);
+                    let p = self
+                        .pending
+                        .get_mut(&key)
+                        .expect("MissMerged implies a pending entry (MissNew creates it)");
+                    p.waiters.push(tx.waiter);
+                    self.lsu.pop_front();
+                }
+                Access::MissNew => {
+                    self.count_access(tx.kind, true);
+                    self.stats.mshr_allocs += 1;
+                    let key = Self::pending_key(tx.line, tx.kind, ci);
+                    let prev = self.pending.insert(
+                        key,
+                        PendingLine {
+                            kind: tx.kind,
+                            half: tx.half,
+                            waiters: vec![tx.waiter],
+                            sent: now,
+                            injected: false,
+                        },
+                    );
+                    debug_assert!(prev.is_none(), "MissNew on an already-pending line");
+                    // Transition to the injection state (retries at front).
+                    if let Some(front) = self.lsu.front_mut() {
+                        front.needs_inject = true;
+                    }
+                }
+                Access::MshrFull => {
+                    self.stats.stall(StallReason::MemStructFull);
+                    self.stats.mem_struct_stall_cycles += 1;
+                    break;
+                }
+            }
+        }
+    }
+
+    fn cache_mut(&mut self, kind: CacheKind, ci: usize) -> &mut Cache {
+        match kind {
+            CacheKind::Data => &mut self.l1d[ci],
+            CacheKind::Instr => &mut self.l1i[ci],
+            CacheKind::Const => &mut self.l1c[ci],
+            CacheKind::Texture => &mut self.l1t[ci],
+        }
+    }
+
+    fn count_access(&mut self, kind: CacheKind, miss: bool) {
+        match kind {
+            CacheKind::Data => {
+                self.stats.l1d_accesses += 1;
+                self.stats.l1d_misses += miss as u64;
+            }
+            // I-cache accesses/misses are counted at fetch time.
+            CacheKind::Instr => {}
+            CacheKind::Const => {
+                self.stats.l1c_accesses += 1;
+                self.stats.l1c_misses += miss as u64;
+            }
+            CacheKind::Texture => {
+                self.stats.l1t_accesses += 1;
+                self.stats.l1t_misses += miss as u64;
+            }
+        }
+    }
+
+    /// NoC node used by `half` in the current machine layout.
+    fn node_for(&self, half: u8, noc_nodes: [usize; 2]) -> usize {
+        match self.mode {
+            ClusterMode::PrivatePair => noc_nodes[half as usize],
+            // Fused/FusedSplit: single shared interface (router bypass).
+            _ => noc_nodes[0],
+        }
+    }
+
+    fn inject_request(&mut self, now: u64, noc: &mut Noc, node: usize, line: u64, is_write: bool) -> bool {
+        let num_mcs = self.cfg.num_mcs;
+        let mc = crate::sim::mem::partition_of(line, self.cfg.line_bytes, num_mcs);
+        let dst = noc.nodes() - num_mcs + mc;
+        let flits = if is_write {
+            self.cfg.flits_for(self.cfg.line_bytes + 16) as u32
+        } else {
+            1
+        };
+        let pkt = Packet {
+            src: node,
+            dst,
+            flits,
+            born: now,
+            payload: Payload::MemRequest { line, requester: self.id as u32, is_write },
+        };
+        if noc.inject(Subnet::Request, pkt) {
+            self.stats.noc_packets += 1;
+            self.stats.noc_flits += flits as u64;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A reply line arrived from the NoC at this cluster.
+    pub fn on_reply(&mut self, now: u64, line: u64, is_write: bool) {
+        if is_write {
+            return; // write-through acks carry no waiters
+        }
+        // Locate the pending entry: try all (kind, ci) key combinations.
+        let mut found = None;
+        'outer: for kind in [CacheKind::Data, CacheKind::Instr, CacheKind::Const, CacheKind::Texture]
+        {
+            for ci in 0..2 {
+                let key = Self::pending_key(line, kind, ci);
+                if let Some(p) = self.pending.get(&key) {
+                    if p.injected {
+                        found = Some(key);
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        let Some(key) = found else { return };
+        let p = self.pending.remove(&key).unwrap();
+        self.stats.noc_latency_sum += now.saturating_sub(p.sent);
+        self.stats.noc_latency_samples += 1;
+        let ci = self.cache_idx(p.half);
+        self.cache_mut(p.kind, ci).fill(line);
+        for w in p.waiters {
+            self.release(w);
+        }
+    }
+
+    fn release(&mut self, w: Waiter) {
+        match w {
+            Waiter::Warp(i) => {
+                let wp = &mut self.warps[i];
+                wp.outstanding_loads = wp.outstanding_loads.saturating_sub(1);
+            }
+            Waiter::Shadow(i) => {
+                let s = &mut self.shadows[i];
+                s.outstanding_loads = s.outstanding_loads.saturating_sub(1);
+                if s.complete() {
+                    self.reconverge_shadow(i);
+                }
+            }
+            Waiter::IFetchWarp(i) => self.warps[i].ifetch_pending = false,
+            Waiter::IFetchShadow(i) => self.shadows[i].ifetch_pending = false,
+            Waiter::None => {}
+        }
+    }
+
+    fn reconverge_shadow(&mut self, si: usize) {
+        let parent = self.shadows[si].parent;
+        if self.warps[parent].shadow_outstanding {
+            self.warps[parent].shadow_done();
+        }
+    }
+
+    /// Remove fully-complete shadows when no references remain.
+    pub fn reap_shadows(&mut self) {
+        if self.shadows.iter().all(|s| s.complete())
+            && !self
+                .pending
+                .values()
+                .any(|p| p.waiters.iter().any(|w| matches!(w, Waiter::Shadow(_) | Waiter::IFetchShadow(_))))
+            && !self
+                .lsu
+                .iter()
+                .any(|t| matches!(t.waiter, Waiter::Shadow(_) | Waiter::IFetchShadow(_)))
+        {
+            self.shadows.clear();
+            self.sched[0].greedy_shadow = None;
+            self.sched[1].greedy_shadow = None;
+        }
+    }
+
+    /// Spawn a shadow warp (regroup slow pass / DWS subdivision).
+    pub fn spawn_shadow(&mut self, shadow: ShadowWarp) {
+        self.shadows.push(shadow);
+    }
+
+    /// Any shadows still executing?
+    pub fn shadows_active(&self) -> bool {
+        self.shadows.iter().any(|s| !s.complete())
+    }
+
+    /// Fraction of live warps currently flagged divergent (the split
+    /// trigger metric of §4.3).
+    pub fn divergent_ratio(&self) -> f32 {
+        let live = self.live_warps();
+        if live == 0 {
+            return 0.0;
+        }
+        let div = self.warps.iter().filter(|w| !w.finished && w.divergent).count();
+        div as f32 / live as f32
+    }
+
+    /// One-line state summary for deadlock diagnostics.
+    pub fn debug_state(&self) -> String {
+        let live = self.live_warps();
+        let blocked_mem = self.warps.iter().filter(|w| !w.finished && w.outstanding_loads > 0).count();
+        let blocked_if = self.warps.iter().filter(|w| !w.finished && w.ifetch_pending).count();
+        let front = self.lsu.front().map(|t| {
+            format!("line={:#x} kind={:?} w={} inj={}", t.line, t.kind, t.is_write, t.needs_inject)
+        });
+        format!(
+            "mode={:?} live={live} mem_blocked={blocked_mem} if_blocked={blocked_if} lsu={} pending={} shadows={} front={:?}",
+            self.mode,
+            self.lsu.len(),
+            self.pending.len(),
+            self.shadows.len(),
+            front
+        )
+    }
+
+    /// Kernel-boundary cleanup (caches cold-start per kernel, as in the
+    /// paper's per-kernel reconfiguration loop).
+    pub fn flush_caches(&mut self) {
+        for i in 0..2 {
+            self.l1d[i].flush();
+            self.l1i[i].flush();
+            self.l1c[i].flush();
+            self.l1t[i].flush();
+        }
+        self.pending.clear();
+        self.lsu.clear();
+    }
+}
+
+/// Scheduler pick.
+#[derive(Debug, Clone, Copy)]
+enum Pick {
+    Warp(usize),
+    Shadow(usize),
+}

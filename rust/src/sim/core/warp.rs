@@ -1,0 +1,338 @@
+//! Warp execution contexts: the schedulable entities of an SM.
+//!
+//! A `WarpCtx` is a (possibly fused, 64-wide) warp walking its procedural
+//! trace. Control divergence is modelled by *replay*: a divergent branch
+//! splits the active mask and serialises the divergent region once per
+//! path. Under the warp-regrouping policy (and DWS) the second path runs
+//! concurrently as a [`ShadowWarp`] on another scheduler instead.
+
+use crate::isa::{ActiveMask, WarpId};
+
+/// Divergent-region replay state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Replay {
+    /// First PC of the divergent region.
+    pub start_pc: u32,
+    /// One past the last PC of the region (reconvergence point).
+    pub end_pc: u32,
+    /// Mask of the second (slow) pass.
+    pub second_mask: ActiveMask,
+    /// Currently executing the second pass?
+    pub in_second_pass: bool,
+}
+
+/// A resident warp.
+#[derive(Debug, Clone)]
+pub struct WarpCtx {
+    /// Grid identity (kernel, cta, fused-warp index).
+    pub id: WarpId,
+    /// Sub-warp indices within the CTA this context covers. Baseline warps
+    /// cover one; fused 64-wide warps cover two (lanes 0-31 / 32-63).
+    pub subwarps: [u32; 2],
+    /// Number of sub-warps (1 or 2).
+    pub n_subwarps: u8,
+    /// Warp width in lanes (32 baseline, 64 fused).
+    pub width: usize,
+    /// Next trace PC.
+    pub pc: u32,
+    /// Per-thread trace length (warp retires at `pc == trace_len`).
+    pub trace_len: u32,
+    /// Current active mask.
+    pub mask: ActiveMask,
+    /// Mask with every existing lane active.
+    pub full_mask: ActiveMask,
+    /// Outstanding load transactions (scoreboard; warp blocks until 0).
+    pub outstanding_loads: u32,
+    /// Waiting at a CTA barrier?
+    pub at_barrier: bool,
+    /// Waiting for an instruction-cache fill?
+    pub ifetch_pending: bool,
+    /// All instructions consumed?
+    pub finished: bool,
+    /// Active divergence replay, if any.
+    pub replay: Option<Replay>,
+    /// Outstanding shadow warp (regroup/DWS second path), if any.
+    pub shadow_outstanding: bool,
+    /// Resident-CTA slot index on the owning cluster.
+    pub cta_slot: usize,
+    /// Dispatch order stamp (GTO "oldest" tiebreak).
+    pub age: u64,
+    /// True while the warp is in (or heading into) divergence handling —
+    /// the signal the split controller and policies act on (§4.3).
+    pub divergent: bool,
+    /// Which half of the cluster currently executes this warp (0/1); used
+    /// by the dynamic-split machinery to migrate warps.
+    pub home: u8,
+}
+
+impl WarpCtx {
+    /// Can the scheduler consider this warp this cycle?
+    pub fn issuable(&self) -> bool {
+        !self.finished
+            && !self.at_barrier
+            && !self.ifetch_pending
+            && self.outstanding_loads == 0
+            && !(self.shadow_outstanding && self.at_reconvergence())
+    }
+
+    /// Is the warp blocked only because its shadow has not reconverged?
+    pub fn waiting_on_shadow(&self) -> bool {
+        self.shadow_outstanding && self.at_reconvergence() && !self.finished
+    }
+
+    /// Has the warp reached the reconvergence point of its current region?
+    fn at_reconvergence(&self) -> bool {
+        match self.replay {
+            Some(r) => self.pc >= r.end_pc,
+            // Shadow without replay state: the fast pass already finished
+            // its region; the warp waits at the current pc.
+            None => true,
+        }
+    }
+
+    /// Advance the PC after an issue, handling replay wrap-around.
+    /// Returns true if the warp just retired.
+    pub fn advance(&mut self) -> bool {
+        self.pc += 1;
+        if let Some(r) = self.replay {
+            if self.pc >= r.end_pc {
+                if r.in_second_pass {
+                    // Both paths done: reconverge.
+                    self.replay = None;
+                    self.mask = self.full_mask;
+                    self.divergent = false;
+                } else if self.shadow_outstanding {
+                    // Second pass runs elsewhere (shadow); wait for it at
+                    // the reconvergence point (issuable() gates on it).
+                    self.replay = None;
+                    self.mask = self.full_mask;
+                    // divergent stays true until the shadow returns.
+                } else {
+                    // Serial second pass: rewind with the slow mask.
+                    self.pc = r.start_pc;
+                    self.mask = r.second_mask;
+                    self.replay = Some(Replay { in_second_pass: true, ..r });
+                }
+            }
+        }
+        if self.pc >= self.trace_len && self.replay.is_none() {
+            self.finished = true;
+        }
+        self.finished
+    }
+
+    /// Enter a divergent region at `pc+1` of `region_len` instructions.
+    /// `slow_mask` is the set of lanes taking the slow path. If
+    /// `shadowed`, the slow pass will execute as a shadow warp and this
+    /// context only runs the fast pass.
+    pub fn begin_divergence(&mut self, region_len: u16, slow_mask: ActiveMask, shadowed: bool) {
+        let fast = ActiveMask(self.full_mask.0 & !slow_mask.0);
+        self.replay = Some(Replay {
+            start_pc: self.pc + 1,
+            end_pc: self.pc + 1 + region_len as u32,
+            second_mask: slow_mask,
+            in_second_pass: false,
+        });
+        self.mask = if fast.count() == 0 { self.full_mask } else { fast };
+        self.divergent = true;
+        self.shadow_outstanding = shadowed;
+    }
+
+    /// The shadow warp completed: reconverge.
+    pub fn shadow_done(&mut self) {
+        self.shadow_outstanding = false;
+        self.divergent = false;
+        if self.pc >= self.trace_len && self.replay.is_none() {
+            self.finished = true;
+        }
+    }
+}
+
+/// The slow-path pass of a divergent warp, scheduled independently
+/// (on the split half under warp-regrouping; on the same SM under DWS).
+#[derive(Debug, Clone)]
+pub struct ShadowWarp {
+    /// Index of the parent warp in the cluster warp table.
+    pub parent: usize,
+    /// Sub-warp (for trace resolution) — inherits the parent's first.
+    pub cta: u32,
+    pub subwarp: u32,
+    /// Current PC within the divergent region.
+    pub pc: u32,
+    /// One past the region's last PC.
+    pub end_pc: u32,
+    /// Lanes this shadow executes.
+    pub mask: ActiveMask,
+    /// Width for accounting (same as parent).
+    pub width: usize,
+    /// Outstanding load transactions.
+    pub outstanding_loads: u32,
+    /// Waiting for an I-fetch fill?
+    pub ifetch_pending: bool,
+    /// Done executing (waiting only for loads to drain)?
+    pub done: bool,
+}
+
+impl ShadowWarp {
+    /// Schedulable this cycle?
+    pub fn issuable(&self) -> bool {
+        !self.done && !self.ifetch_pending && self.outstanding_loads == 0
+    }
+
+    /// Fully complete (retired + memory drained)?
+    pub fn complete(&self) -> bool {
+        self.done && self.outstanding_loads == 0
+    }
+
+    /// Advance past one instruction; returns true when the region ends.
+    pub fn advance(&mut self) -> bool {
+        self.pc += 1;
+        if self.pc >= self.end_pc {
+            self.done = true;
+        }
+        self.done
+    }
+}
+
+/// A CTA resident on a cluster.
+#[derive(Debug, Clone)]
+pub struct CtaState {
+    /// Grid CTA index.
+    pub cta: u32,
+    /// Warps this CTA contributed (cluster warp-table indices).
+    pub warps_total: u32,
+    /// Retired warps.
+    pub warps_done: u32,
+    /// Warps currently parked at the barrier.
+    pub barrier_count: u32,
+    /// Which half the CTA was dispatched to (PrivatePair mode), 0/1.
+    pub home: u8,
+}
+
+impl CtaState {
+    /// All warps retired?
+    pub fn complete(&self) -> bool {
+        self.warps_done >= self.warps_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn warp(width: usize, len: u32) -> WarpCtx {
+        WarpCtx {
+            id: WarpId { kernel: 0, cta: 0, warp: 0 },
+            subwarps: [0, 1],
+            n_subwarps: if width == 64 { 2 } else { 1 },
+            width,
+            pc: 0,
+            trace_len: len,
+            mask: ActiveMask::full(width),
+            full_mask: ActiveMask::full(width),
+            outstanding_loads: 0,
+            at_barrier: false,
+            ifetch_pending: false,
+            finished: false,
+            replay: None,
+            shadow_outstanding: false,
+            cta_slot: 0,
+            age: 0,
+            divergent: false,
+            home: 0,
+        }
+    }
+
+    #[test]
+    fn linear_execution_retires() {
+        let mut w = warp(32, 3);
+        assert!(w.issuable());
+        assert!(!w.advance());
+        assert!(!w.advance());
+        assert!(w.advance());
+        assert!(w.finished && !w.issuable());
+    }
+
+    #[test]
+    fn serial_divergence_replays_region_twice() {
+        let mut w = warp(32, 20);
+        w.pc = 4;
+        let slow = ActiveMask(0xFF); // lanes 0-7 slow
+        w.begin_divergence(3, slow, false);
+        assert_eq!(w.mask.count(), 24, "fast pass: 32-8 lanes");
+        assert!(w.divergent);
+        // Advance past the branch itself, then the fast pass: pcs 5,6,7.
+        for _ in 0..4 {
+            assert!(!w.advance());
+        }
+        // Rewound for the slow pass.
+        assert_eq!(w.pc, 5);
+        assert_eq!(w.mask.count(), 8);
+        for _ in 0..3 {
+            w.advance();
+        }
+        assert_eq!(w.pc, 8);
+        assert_eq!(w.mask.count(), 32, "reconverged");
+        assert!(!w.divergent);
+        // Total extra issues = region length (3).
+    }
+
+    #[test]
+    fn shadowed_divergence_waits_at_reconvergence() {
+        let mut w = warp(64, 20);
+        w.pc = 2;
+        w.begin_divergence(2, ActiveMask(0xF), true);
+        assert!(w.shadow_outstanding);
+        // Branch advance, then fast pass 3,4; waits at pc 5.
+        w.advance();
+        w.advance();
+        w.advance();
+        assert_eq!(w.pc, 5);
+        assert!(w.waiting_on_shadow());
+        assert!(!w.issuable());
+        w.shadow_done();
+        assert!(w.issuable());
+        assert!(!w.divergent);
+    }
+
+    #[test]
+    fn full_slow_mask_does_not_deadlock() {
+        // Degenerate draw: every lane slow — fast pass must keep full mask.
+        let mut w = warp(32, 10);
+        w.begin_divergence(2, ActiveMask::full(32), false);
+        assert_eq!(w.mask.count(), 32);
+    }
+
+    #[test]
+    fn shadow_lifecycle() {
+        let mut s = ShadowWarp {
+            parent: 3,
+            cta: 0,
+            subwarp: 1,
+            pc: 5,
+            end_pc: 7,
+            mask: ActiveMask(0b11),
+            width: 64,
+            outstanding_loads: 0,
+            ifetch_pending: false,
+            done: false,
+        };
+        assert!(s.issuable());
+        assert!(!s.advance());
+        assert!(s.advance());
+        assert!(s.complete());
+        s.outstanding_loads = 1;
+        assert!(!s.complete());
+    }
+
+    #[test]
+    fn scoreboard_blocks_issue() {
+        let mut w = warp(32, 10);
+        w.outstanding_loads = 2;
+        assert!(!w.issuable());
+        w.outstanding_loads = 0;
+        assert!(w.issuable());
+        w.at_barrier = true;
+        assert!(!w.issuable());
+    }
+}

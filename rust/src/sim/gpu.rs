@@ -1,0 +1,557 @@
+//! Top-level GPU: clusters + NoC + memory partitions + CTA dispatcher +
+//! the per-kernel AMOEBA reconfiguration loop (Fig 7).
+//!
+//! Machine layouts:
+//!
+//! * **per-SM layout** (baseline / scale-out): every baseline SM has its
+//!   own NoC router — `num_sms + num_mcs` nodes; cluster `i`'s halves sit
+//!   at nodes `2i` and `2i+1`.
+//! * **fused layout** (scale-up): the second router of each pair is
+//!   bypassed — `num_sms/2 + num_mcs` nodes; cluster `i` sits at node `i`.
+//!
+//! The NoC is rebuilt when the layout changes (kernel boundaries only;
+//! dynamic split keeps the fused NoC interface, §4.3).
+
+use crate::amoeba::controller::{Controller, KernelDecision};
+use crate::amoeba::dynsplit::DynSplit;
+use crate::amoeba::metrics::MetricsSample;
+use crate::config::{Scheme, SystemConfig};
+use crate::isa::KernelLaunch;
+use crate::sim::core::{ClusterMode, DivergenceMode, SmCluster};
+use crate::sim::mem::{MemPartition, PartitionReply};
+use crate::sim::noc::{Noc, Packet, Payload, Subnet};
+use crate::stats::{ChipStats, SmStats};
+use crate::workload::{kernel_launches, BenchProfile, TraceGen};
+
+/// One Fig 19 sample: cycle + per-cluster mode snapshot.
+#[derive(Debug, Clone)]
+pub struct PhaseSample {
+    /// Sample cycle.
+    pub cycle: u64,
+    /// Mode of every cluster at that cycle.
+    pub modes: Vec<ClusterMode>,
+}
+
+/// Result of simulating one application under one scheme.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Benchmark name.
+    pub bench: String,
+    /// Scheme simulated.
+    pub scheme: Scheme,
+    /// Total GPU cycles.
+    pub cycles: u64,
+    /// Aggregated SM statistics (all clusters).
+    pub sm: SmStats,
+    /// Chip-level statistics.
+    pub chip: ChipStats,
+    /// Per-kernel fuse decisions taken.
+    pub decisions: Vec<KernelDecision>,
+    /// Periodic cluster-mode snapshots (Fig 19).
+    pub phases: Vec<PhaseSample>,
+    /// Metric sample collected during each kernel's profiling window
+    /// (empty for schemes that do not profile).
+    pub samples: Vec<MetricsSample>,
+}
+
+impl SimReport {
+    /// Thread-instructions per cycle — the paper's headline metric.
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.sm.thread_insns as f64 / self.cycles as f64
+        }
+    }
+}
+
+/// Dispatch at most this many CTAs per cycle (kernel-launch engine rate).
+const DISPATCH_PER_CYCLE: usize = 2;
+/// Fig 19 phase-sampling period in cycles.
+const PHASE_SAMPLE_PERIOD: u64 = 512;
+/// Replies an MC can inject per cycle (the L2 slice has two reply ports,
+/// matching GPGPU-Sim's icnt-to-shader interface width).
+const MC_REPLY_BUDGET: usize = 2;
+
+/// The machine under simulation.
+pub struct Gpu {
+    cfg: SystemConfig,
+    scheme: Scheme,
+    clusters: Vec<SmCluster>,
+    partitions: Vec<MemPartition>,
+    noc: Noc,
+    /// Current layout is fused (one router per cluster)?
+    fused_layout: bool,
+    now: u64,
+    chip: ChipStats,
+    /// Per-MC replies awaiting injection (bounded by MC_REPLY_BUDGET).
+    reply_retry: Vec<std::collections::VecDeque<PartitionReply>>,
+    /// Per-MC requests ejected from the NoC but rejected by the partition
+    /// (queue/MSHR full); retried before new ejections. Bounded so NoC
+    /// backpressure is preserved.
+    req_backlog: Vec<std::collections::VecDeque<Packet>>,
+    controller: Controller,
+    dynsplit: DynSplit,
+    phases: Vec<PhaseSample>,
+    samples: Vec<MetricsSample>,
+    decisions: Vec<KernelDecision>,
+}
+
+impl Gpu {
+    /// Build a machine for `scheme` under `cfg`.
+    pub fn new(cfg: &SystemConfig, scheme: Scheme, controller: Controller) -> Self {
+        cfg.validate().expect("invalid system config");
+        let n_clusters = cfg.num_sms / 2;
+        assert!(n_clusters > 0, "need at least 2 SMs (one cluster)");
+        let initial_fused = scheme == Scheme::ScaleUp;
+        let mode = if initial_fused { ClusterMode::Fused } else { ClusterMode::PrivatePair };
+        let mut clusters: Vec<SmCluster> =
+            (0..n_clusters).map(|i| SmCluster::new(i, cfg, mode)).collect();
+        if scheme == Scheme::Dws {
+            for c in &mut clusters {
+                c.divergence_mode = DivergenceMode::Shadowed;
+            }
+        }
+        let nodes = Self::node_count(cfg, initial_fused);
+        Gpu {
+            cfg: cfg.clone(),
+            scheme,
+            clusters,
+            partitions: (0..cfg.num_mcs).map(|_| MemPartition::new(cfg)).collect(),
+            noc: Noc::new(cfg, nodes),
+            fused_layout: initial_fused,
+            now: 0,
+            chip: ChipStats::default(),
+            reply_retry: (0..cfg.num_mcs).map(|_| std::collections::VecDeque::new()).collect(),
+            req_backlog: (0..cfg.num_mcs).map(|_| std::collections::VecDeque::new()).collect(),
+            controller,
+            dynsplit: DynSplit::new(cfg),
+            phases: Vec::new(),
+            samples: Vec::new(),
+            decisions: Vec::new(),
+        }
+    }
+
+    fn node_count(cfg: &SystemConfig, fused: bool) -> usize {
+        let sm_nodes = if fused { cfg.num_sms / 2 } else { cfg.num_sms };
+        sm_nodes + cfg.num_mcs
+    }
+
+    /// NoC nodes for cluster `ci` in the current layout.
+    fn nodes_of(&self, ci: usize) -> [usize; 2] {
+        if self.fused_layout {
+            [ci, ci]
+        } else {
+            [2 * ci, 2 * ci + 1]
+        }
+    }
+
+    /// Cluster owning NoC node `n` (inverse of `nodes_of`).
+    fn cluster_of_node(&self, n: usize) -> usize {
+        if self.fused_layout {
+            n
+        } else {
+            n / 2
+        }
+    }
+
+    fn mc_node(&self, mc: usize) -> usize {
+        self.noc.nodes() - self.cfg.num_mcs + mc
+    }
+
+    /// Rebuild the NoC for a new layout and flush cluster caches (the
+    /// paper drains pipelines and pays a reconfiguration cost).
+    fn reconfigure(&mut self, fused: bool) {
+        self.fused_layout = fused;
+        let mode = if fused { ClusterMode::Fused } else { ClusterMode::PrivatePair };
+        for c in &mut self.clusters {
+            c.set_mode(mode);
+            c.flush_caches();
+            c.frozen_until = self.now + self.cfg.reconfig_cost;
+        }
+        self.noc = Noc::new(&self.cfg, Self::node_count(&self.cfg, fused));
+        self.chip.reconfig_events += 1;
+        self.chip.reconfig_cycles += self.cfg.reconfig_cost;
+    }
+
+    /// Advance the whole machine one cycle; `gen` resolves traces of the
+    /// kernel currently executing.
+    fn tick(&mut self, gen: &TraceGen) {
+        let now = self.now;
+        self.chip.cycles += 1;
+
+        // 1. SM clusters (issue + LSU + NoC injection).
+        for ci in 0..self.clusters.len() {
+            let nodes = self.nodes_of(ci);
+            self.clusters[ci].tick(now, &mut self.noc, nodes, gen);
+        }
+
+        // 2. Interconnect.
+        self.noc.tick(now);
+
+        // 3. Memory side: requests into partitions. A rejected request
+        // (queue/MSHR full) parks in a bounded per-MC backlog and is
+        // retried before new ejections — its src (the reply address) is
+        // preserved.
+        const BACKLOG_CAP: usize = 16;
+        for mc in 0..self.partitions.len() {
+            let node = self.mc_node(mc);
+            // Retry the backlog first (FIFO).
+            while let Some(pkt) = self.req_backlog[mc].front().copied() {
+                if self.offer_to_partition(mc, now, &pkt) {
+                    self.req_backlog[mc].pop_front();
+                } else {
+                    break;
+                }
+            }
+            // New ejections, bounded by backlog space.
+            while self.req_backlog[mc].len() < BACKLOG_CAP {
+                let Some(pkt) = self.noc.eject(Subnet::Request, node) else { break };
+                if !self.offer_to_partition(mc, now, &pkt) {
+                    self.req_backlog[mc].push_back(pkt);
+                }
+            }
+        }
+
+        // 4. Partitions tick; replies head for the reply subnet.
+        for mc in 0..self.partitions.len() {
+            self.chip.mc_cycles += 1;
+            let node = self.mc_node(mc);
+            let mut stalled = false;
+            // Retry previously blocked replies first (FIFO; preserve all).
+            while let Some(r) = self.reply_retry[mc].front().copied() {
+                if self.try_inject_reply(now, node, &r) {
+                    self.reply_retry[mc].pop_front();
+                } else {
+                    stalled = true;
+                    break;
+                }
+            }
+            let budget = MC_REPLY_BUDGET.saturating_sub(self.reply_retry[mc].len());
+            let mut out: Vec<PartitionReply> = Vec::with_capacity(budget);
+            let emit_stalled = self.partitions[mc].tick(now, &mut out, budget);
+            for r in out {
+                if !self.try_inject_reply(now, node, &r) {
+                    self.reply_retry[mc].push_back(r);
+                    stalled = true;
+                }
+            }
+            if stalled || emit_stalled {
+                // Fig 17: a reply was ready but could not enter the NoC.
+                self.chip.mc_inject_stall_cycles += 1;
+            }
+        }
+
+        // 5. SM side: reply delivery.
+        let sm_nodes = self.noc.nodes() - self.cfg.num_mcs;
+        for node in 0..sm_nodes {
+            while let Some(pkt) = self.noc.eject(Subnet::Reply, node) {
+                if let Payload::MemReply { line, is_write, .. } = pkt.payload {
+                    let ci = self.cluster_of_node(node);
+                    self.clusters[ci].on_reply(now, line, is_write);
+                }
+            }
+        }
+
+        self.now += 1;
+    }
+
+    /// Offer one ejected request packet to partition `mc`; false = retry.
+    fn offer_to_partition(&mut self, mc: usize, now: u64, pkt: &Packet) -> bool {
+        let Payload::MemRequest { line, requester, is_write } = pkt.payload else {
+            return true; // stray reply payload: drop (cannot happen)
+        };
+        let tag = (pkt.src as u64) << 32 | requester as u64;
+        self.partitions[mc].request(now, line, tag, is_write, self.cfg.l2_hit_latency as u64)
+    }
+
+    fn try_inject_reply(&mut self, now: u64, mc_node: usize, r: &PartitionReply) -> bool {
+        let dst = (r.tag >> 32) as usize;
+        let requester = (r.tag & 0xFFFF_FFFF) as u32;
+        let flits = if r.is_write {
+            1
+        } else {
+            self.cfg.flits_for(self.cfg.line_bytes + 16) as u32
+        };
+        let pkt = Packet {
+            src: mc_node,
+            dst,
+            flits,
+            born: now,
+            payload: Payload::MemReply { line: r.line, requester, is_write: r.is_write },
+        };
+        self.noc.inject(Subnet::Reply, pkt)
+    }
+
+    /// Is every cluster + partition + the NoC fully drained?
+    fn drained(&self) -> bool {
+        self.clusters.iter().all(|c| c.idle())
+            && self.partitions.iter().all(|p| !p.busy())
+            && !self.noc.busy()
+            && self.reply_retry.iter().all(|r| r.is_empty())
+            && self.req_backlog.iter().all(|b| b.is_empty())
+    }
+
+    /// Execute one kernel to completion, including the per-kernel AMOEBA
+    /// controller loop: profile -> predict -> reconfigure -> run (Fig 7).
+    fn run_kernel(&mut self, profile: &BenchProfile, kernel: &KernelLaunch) {
+        let gen = TraceGen::new(profile, kernel);
+        let mut next_cta: u32 = 0;
+        let total_ctas = kernel.num_ctas;
+
+        // -------- Phase 1: profiling window (predictor schemes only).
+        let mut profiling = self.scheme.uses_predictor();
+        let profile_start = self.now;
+        let base_stats = self.aggregate_sm();
+        let base_chip = self.chip.clone();
+
+        // Predictor schemes always profile in the scale-out layout.
+        if profiling && self.fused_layout {
+            self.reconfigure(false);
+        }
+
+        let deadline = self.now + self.cfg.max_cycles.max(1);
+        let mut split_check_at = self.now + self.cfg.split_check_period;
+
+        // While profiling, only a probe wave of CTAs is dispatched (one per
+        // cluster — §4.1.1: a CTA tracks its kernel's scaling behaviour);
+        // the rest of the grid launches after the reconfiguration decision,
+        // so the bulk of the kernel runs in the chosen configuration.
+        let probe_cap = self.clusters.len() as u32;
+
+        loop {
+            // CTA dispatch.
+            let cap = if profiling { probe_cap.min(total_ctas) } else { total_ctas };
+            let mut dispatched = 0;
+            'dispatch: for ci in 0..self.clusters.len() {
+                while next_cta < cap && self.clusters[ci].can_accept_cta(kernel) {
+                    self.clusters[ci].dispatch_cta(kernel, next_cta, &gen);
+                    next_cta += 1;
+                    dispatched += 1;
+                    if dispatched >= DISPATCH_PER_CYCLE {
+                        break 'dispatch;
+                    }
+                }
+            }
+
+            self.tick(&gen);
+
+            // Profiling window complete: predict and reconfigure.
+            if profiling && self.now >= profile_start + self.cfg.profile_window {
+                profiling = false;
+                let cur = self.aggregate_sm();
+                let sample =
+                    MetricsSample::from_window(&base_stats, &cur, &base_chip, &self.chip, &self.cfg);
+                let fuse = self.controller.decide(&sample);
+                self.samples.push(sample);
+                self.decisions.push(fuse);
+                if fuse.scale_up {
+                    self.chip.predictor_scale_up += 1;
+                    // Drain resident work, then fuse. We stop dispatching
+                    // during the drain by entering a drain loop here.
+                    while !self.drained() && self.now < deadline {
+                        self.tick(&gen);
+                    }
+                    for c in &mut self.clusters {
+                        c.reap();
+                    }
+                    self.reconfigure(true);
+                    if let Some(policy) = self.scheme.splits() {
+                        for c in &mut self.clusters {
+                            c.split_policy = Some(policy);
+                        }
+                    }
+                } else {
+                    self.chip.predictor_scale_out += 1;
+                }
+            }
+
+            // Dynamic split/fuse checks (only meaningful on fused layouts).
+            if self.scheme.splits().is_some()
+                && self.fused_layout
+                && self.now >= split_check_at
+            {
+                split_check_at = self.now + self.cfg.split_check_period;
+                for c in &mut self.clusters {
+                    self.dynsplit.check(self.now, c);
+                }
+            }
+
+            // Fig 19 phase sampling.
+            if self.now % PHASE_SAMPLE_PERIOD == 0 {
+                self.phases.push(PhaseSample {
+                    cycle: self.now,
+                    modes: self.clusters.iter().map(|c| c.mode()).collect(),
+                });
+            }
+
+            if next_cta >= total_ctas && self.drained() {
+                break;
+            }
+            if self.now >= deadline {
+                // Safety net: dump state and bail (tests assert on IPC, so
+                // a deadline hit is loudly visible).
+                if std::env::var("AMOEBA_DEBUG").is_ok() {
+                    eprintln!("[deadline] cycle {} kernel {}", self.now, kernel.id);
+                    eprintln!("  noc busy: {} | {}", self.noc.busy(), self.noc.debug_state());
+                    for (i, c) in self.clusters.iter().enumerate() {
+                        eprintln!("  cluster {i}: {}", c.debug_state());
+                    }
+                    for (i, p) in self.partitions.iter().enumerate() {
+                        eprintln!("  partition {i}: busy={}", p.busy());
+                    }
+                }
+                break;
+            }
+        }
+
+        for c in &mut self.clusters {
+            c.reap();
+            c.flush_caches();
+        }
+        for p in &mut self.partitions {
+            p.flush();
+        }
+        self.chip.kernels_completed += 1;
+    }
+
+    fn aggregate_sm(&self) -> SmStats {
+        let mut acc = SmStats::default();
+        for c in &self.clusters {
+            acc.absorb(&c.stats);
+        }
+        acc
+    }
+
+    /// Run a full application (all kernels) and report.
+    pub fn run(&mut self, profile: &BenchProfile, seed: u64) -> SimReport {
+        for kernel in kernel_launches(profile, seed) {
+            self.run_kernel(profile, &kernel);
+        }
+        // Fold partition-side stats into the chip counters.
+        for p in &self.partitions {
+            self.chip.l2_accesses += p.accesses;
+            self.chip.l2_misses += p.misses;
+            self.chip.dram_reads += p.mc.reads;
+            self.chip.dram_writes += p.mc.writes;
+            self.chip.dram_row_hits += p.mc.row_hits;
+            self.chip.dram_row_misses += p.mc.row_misses;
+        }
+        self.chip.noc_flits_routed = self.noc.flits_routed;
+        SimReport {
+            bench: profile.name.to_string(),
+            scheme: self.scheme,
+            cycles: self.now,
+            sm: self.aggregate_sm(),
+            chip: self.chip.clone(),
+            decisions: self.decisions.clone(),
+            phases: self.phases.clone(),
+            samples: self.samples.clone(),
+        }
+    }
+}
+
+/// Simulate `profile` under `scheme` with the default controller.
+pub fn run_benchmark(cfg: &SystemConfig, profile: &BenchProfile, scheme: Scheme) -> SimReport {
+    run_benchmark_seeded(cfg, profile, scheme, 0xAB0EBA)
+}
+
+/// Seeded variant (distinct workload instance per seed).
+pub fn run_benchmark_seeded(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+) -> SimReport {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, scheme, controller);
+    gpu.run(profile, seed)
+}
+
+/// Simulate with a caller-supplied controller (e.g. the PJRT-HLO-backed
+/// predictor from [`crate::runtime`]).
+pub fn run_benchmark_with_controller(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    controller: Controller,
+    seed: u64,
+) -> SimReport {
+    let mut gpu = Gpu::new(cfg, scheme, controller);
+    gpu.run(profile, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::bench;
+
+    fn quick(profile: &str, scheme: Scheme) -> SimReport {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let mut p = bench(profile).unwrap();
+        // Shrink for unit-test speed.
+        p.num_ctas = 12;
+        p.insns_per_thread = 120;
+        p.num_kernels = 1;
+        run_benchmark(&cfg, &p, scheme)
+    }
+
+    #[test]
+    fn baseline_completes_and_counts() {
+        let r = quick("CP", Scheme::Baseline);
+        assert_eq!(r.chip.kernels_completed, 1);
+        assert!(r.ipc() > 0.5, "ipc={}", r.ipc());
+        assert!(r.sm.thread_insns >= 12 * 256 * 120);
+        assert!(r.sm.l1d_accesses > 0);
+        assert!(r.chip.dram_reads > 0 || r.chip.l2_accesses > 0 || r.sm.noc_packets > 0);
+    }
+
+    #[test]
+    fn scale_up_completes() {
+        let r = quick("CP", Scheme::ScaleUp);
+        assert_eq!(r.chip.kernels_completed, 1);
+        assert!(r.sm.fused_cycles > 0);
+        assert!(r.ipc() > 0.1);
+    }
+
+    #[test]
+    fn static_fuse_profiles_and_decides() {
+        let r = quick("SM", Scheme::StaticFuse);
+        assert_eq!(r.decisions.len(), 1);
+        assert_eq!(r.samples.len(), 1);
+        assert_eq!(r.chip.kernels_completed, 1);
+    }
+
+    #[test]
+    fn dynamic_schemes_complete() {
+        for s in [Scheme::DirectSplit, Scheme::WarpRegroup, Scheme::Dws] {
+            let r = quick("RAY", s);
+            assert_eq!(r.chip.kernels_completed, 1, "{s}");
+            assert!(r.ipc() > 0.1, "{s}: ipc={}", r.ipc());
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SystemConfig::tiny();
+        let mut p = bench("BFS").unwrap();
+        p.num_ctas = 8;
+        p.insns_per_thread = 80;
+        p.num_kernels = 1;
+        let a = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9);
+        let b = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.sm.thread_insns, b.sm.thread_insns);
+        assert_eq!(a.sm.l1d_misses, b.sm.l1d_misses);
+        let c = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 10);
+        assert_ne!(a.cycles, c.cycles, "different seeds should differ");
+    }
+
+    #[test]
+    fn phase_trace_is_sampled() {
+        let r = quick("RAY", Scheme::WarpRegroup);
+        assert!(!r.phases.is_empty());
+        assert_eq!(r.phases[0].modes.len(), SystemConfig::tiny().num_sms / 2);
+    }
+}

@@ -1,0 +1,301 @@
+//! Set-associative tag-array cache model with MSHRs.
+//!
+//! Models timing-relevant behaviour only (tags, LRU, miss tracking) — no
+//! data storage. Used for L1D/L1I/L1C/L1T (write-through, no write
+//! allocate, GPU-style) and for the L2 slices at the memory controllers
+//! (write-back approximated as write-through for timing).
+//!
+//! SM fusion merges two L1s by doubling associativity at +1 cycle hit
+//! latency (paper §4.2); [`Cache::resize`] implements that reconfiguration
+//! (tags are flushed — the paper drains the pipeline on reconfigure).
+
+/// Outcome of a cache access attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    /// Tag present: hit with the cache's current latency.
+    Hit,
+    /// Miss; a new MSHR was allocated — caller must send a fill request.
+    MissNew,
+    /// Miss on a line already being fetched: merged into its MSHR, no new
+    /// request leaves the cache (the paper's "MSHR rate" metric, §4.1.2(5)).
+    MissMerged,
+    /// Miss, but the MSHR table is full: the access must be retried later
+    /// (upstream structural stall).
+    MshrFull,
+}
+
+/// One MSHR entry: an in-flight line and how many warp-accesses merged.
+#[derive(Debug, Clone)]
+struct Mshr {
+    line: u64,
+    merged: u32,
+}
+
+/// Set-associative tag cache + MSHR table.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    sets: usize,
+    assoc: usize,
+    line_bytes: usize,
+    /// tags[set * assoc + way] = Some(line address).
+    tags: Vec<Option<u64>>,
+    /// LRU stamps parallel to `tags` (higher = more recent).
+    stamps: Vec<u64>,
+    clock: u64,
+    mshrs: Vec<Mshr>,
+    mshr_capacity: usize,
+    /// Hit latency in cycles (fusion adds 1).
+    pub hit_latency: u32,
+}
+
+impl Cache {
+    /// Build a cache of `bytes` capacity with `assoc` ways.
+    pub fn new(bytes: usize, assoc: usize, line_bytes: usize, hit_latency: u32, mshrs: usize) -> Self {
+        let sets = (bytes / line_bytes / assoc).max(1);
+        Cache {
+            sets,
+            assoc,
+            line_bytes,
+            tags: vec![None; sets * assoc],
+            stamps: vec![0; sets * assoc],
+            clock: 0,
+            mshrs: Vec::with_capacity(mshrs),
+            mshr_capacity: mshrs,
+            hit_latency,
+        }
+    }
+
+    /// Capacity in bytes.
+    pub fn bytes(&self) -> usize {
+        self.sets * self.assoc * self.line_bytes
+    }
+
+    /// Number of sets (exposed for tests / occupancy probes).
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    /// Associativity.
+    pub fn assoc(&self) -> usize {
+        self.assoc
+    }
+
+    /// MSHR entries currently in flight.
+    pub fn mshrs_in_flight(&self) -> usize {
+        self.mshrs.len()
+    }
+
+    /// Reconfigure (fusion/unfusion): change geometry, flush tags & MSHRs.
+    /// In-flight fills are dropped — the GPU drains SMs before reconfiguring
+    /// so this never loses live requests in practice.
+    pub fn resize(&mut self, bytes: usize, assoc: usize, hit_latency: u32, mshrs: usize) {
+        let sets = (bytes / self.line_bytes / assoc).max(1);
+        self.sets = sets;
+        self.assoc = assoc;
+        self.hit_latency = hit_latency;
+        self.tags = vec![None; sets * assoc];
+        self.stamps = vec![0; sets * assoc];
+        self.mshrs.clear();
+        self.mshr_capacity = mshrs;
+    }
+
+    fn set_of(&self, line: u64) -> usize {
+        // XOR-folded set hash (GPGPU-Sim-style "ipoly/hash" indexing):
+        // large power-of-two-aligned structures (per-CTA regions, row
+        // buffers) would otherwise pile into a handful of sets.
+        let idx = line / self.line_bytes as u64;
+        let h = idx ^ (idx >> 7) ^ (idx >> 15) ^ (idx >> 23);
+        (h % self.sets as u64) as usize
+    }
+
+    /// Probe only (no state change): would `line` hit?
+    pub fn probe(&self, addr: u64) -> bool {
+        let line = self.line_of(addr);
+        let set = self.set_of(line);
+        self.tags[set * self.assoc..(set + 1) * self.assoc]
+            .iter()
+            .any(|t| *t == Some(line))
+    }
+
+    /// Line base address containing `addr`.
+    pub fn line_of(&self, addr: u64) -> u64 {
+        addr / self.line_bytes as u64 * self.line_bytes as u64
+    }
+
+    /// Access `addr` (read or write-through). On `MissNew` the caller sends
+    /// a fill to the next level and later calls [`Cache::fill`].
+    pub fn access(&mut self, addr: u64) -> Access {
+        self.clock += 1;
+        let line = self.line_of(addr);
+        let set = self.set_of(line);
+        let base = set * self.assoc;
+        // Hit path.
+        for way in 0..self.assoc {
+            if self.tags[base + way] == Some(line) {
+                self.stamps[base + way] = self.clock;
+                return Access::Hit;
+            }
+        }
+        // Merge into an in-flight fetch of the same line.
+        if let Some(m) = self.mshrs.iter_mut().find(|m| m.line == line) {
+            m.merged += 1;
+            return Access::MissMerged;
+        }
+        if self.mshrs.len() >= self.mshr_capacity {
+            return Access::MshrFull;
+        }
+        self.mshrs.push(Mshr { line, merged: 0 });
+        Access::MissNew
+    }
+
+    /// A fill returned for `line`: install the tag (LRU victim), release
+    /// the MSHR, and return how many merged accesses it unblocks (>= 1).
+    pub fn fill(&mut self, addr: u64) -> u32 {
+        self.clock += 1;
+        let line = self.line_of(addr);
+        let set = self.set_of(line);
+        let base = set * self.assoc;
+        // Install into an empty or LRU way (unless already present).
+        if !self.tags[base..base + self.assoc].contains(&Some(line)) {
+            let mut victim = 0;
+            let mut oldest = u64::MAX;
+            for way in 0..self.assoc {
+                match self.tags[base + way] {
+                    None => {
+                        victim = way;
+                        oldest = 0;
+                        break;
+                    }
+                    Some(_) if self.stamps[base + way] < oldest => {
+                        oldest = self.stamps[base + way];
+                        victim = way;
+                    }
+                    _ => {}
+                }
+            }
+            self.tags[base + victim] = Some(line);
+            self.stamps[base + victim] = self.clock;
+        }
+        match self.mshrs.iter().position(|m| m.line == line) {
+            Some(i) => self.mshrs.swap_remove(i).merged + 1,
+            None => 1, // fill without MSHR (e.g. after a resize flush)
+        }
+    }
+
+    /// Invalidate everything (kernel boundary, reconfiguration drain).
+    pub fn flush(&mut self) {
+        self.tags.fill(None);
+        self.stamps.fill(0);
+        self.mshrs.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cache {
+        // 4 sets x 2 ways x 128B = 1 KiB.
+        Cache::new(1024, 2, 128, 1, 4)
+    }
+
+    #[test]
+    fn geometry() {
+        let c = small();
+        assert_eq!(c.sets(), 4);
+        assert_eq!(c.assoc(), 2);
+        assert_eq!(c.bytes(), 1024);
+    }
+
+    #[test]
+    fn miss_then_fill_then_hit() {
+        let mut c = small();
+        assert_eq!(c.access(0x1000), Access::MissNew);
+        assert_eq!(c.fill(0x1000), 1);
+        assert_eq!(c.access(0x1000), Access::Hit);
+        assert_eq!(c.access(0x1004), Access::Hit, "same line");
+    }
+
+    #[test]
+    fn mshr_merging_counts() {
+        let mut c = small();
+        assert_eq!(c.access(0x2000), Access::MissNew);
+        assert_eq!(c.access(0x2000), Access::MissMerged);
+        assert_eq!(c.access(0x2040), Access::MissMerged, "same 128B line");
+        assert_eq!(c.fill(0x2000), 3, "fill releases 1 alloc + 2 merges");
+        assert_eq!(c.mshrs_in_flight(), 0);
+    }
+
+    #[test]
+    fn mshr_capacity_limits() {
+        let mut c = small();
+        for i in 0..4 {
+            assert_eq!(c.access(0x10_000 + i * 0x1000), Access::MissNew);
+        }
+        assert_eq!(c.access(0x50_000), Access::MshrFull);
+        c.fill(0x10_000);
+        assert_eq!(c.access(0x50_000), Access::MissNew, "slot freed by fill");
+    }
+
+    #[test]
+    fn lru_eviction_within_set() {
+        let mut c = small();
+        // Three lines mapping to the same set (set = line/128 % 4 == 0).
+        let a = 0x0000; // set 0
+        let b = 0x0200; // 512 -> set 0
+        let d = 0x0400; // 1024 -> set 0 (wraps)
+        for addr in [a, b] {
+            c.access(addr);
+            c.fill(addr);
+        }
+        assert_eq!(c.access(a), Access::Hit);
+        assert_eq!(c.access(b), Access::Hit);
+        // Touch a to make b the LRU victim, then install d.
+        c.access(a);
+        c.access(d);
+        c.fill(d);
+        assert_eq!(c.access(a), Access::Hit, "a kept (MRU)");
+        assert_eq!(c.access(d), Access::Hit, "d installed");
+        assert_ne!(c.access(b), Access::Hit, "b evicted (LRU)");
+    }
+
+    #[test]
+    fn resize_doubles_assoc_and_flushes() {
+        let mut c = small();
+        c.access(0x1000);
+        c.fill(0x1000);
+        c.resize(2048, 4, 2, 8);
+        assert_eq!(c.assoc(), 4);
+        assert_eq!(c.bytes(), 2048);
+        assert_eq!(c.hit_latency, 2);
+        assert_ne!(c.access(0x1000), Access::Hit, "tags flushed on resize");
+    }
+
+    #[test]
+    fn working_set_capacity_effect() {
+        // The mechanism behind the paper's SM benchmark (Fig 15): a working
+        // set that thrashes one L1 but fits the fused (2x) L1.
+        let lines = 12u64;
+        let mut small_c = Cache::new(1024, 2, 128, 1, 64); // 8 lines
+        let mut big_c = Cache::new(2048, 4, 128, 1, 64); // 16 lines
+        let mut misses = (0u32, 0u32);
+        for round in 0..50 {
+            for i in 0..lines {
+                let addr = i * 128;
+                for (c, m) in [(&mut small_c, &mut misses.0), (&mut big_c, &mut misses.1)] {
+                    match c.access(addr) {
+                        Access::Hit => {}
+                        _ => {
+                            if round > 0 {
+                                *m += 1; // ignore cold-start misses
+                            }
+                            c.fill(addr);
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(misses.1, 0, "fits the doubled cache");
+        assert!(misses.0 > 100, "thrashes the small cache: {}", misses.0);
+    }
+}

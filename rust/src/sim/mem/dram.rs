@@ -1,0 +1,274 @@
+//! DRAM / memory-controller model with FR-FCFS scheduling.
+//!
+//! Each memory controller owns a request queue and a set of banks with one
+//! open row each. The scheduler is First-Ready FR-FCFS: among queued
+//! requests whose bank is free, row hits are served before older row
+//! misses. Latencies are expressed in GPU core cycles (single clock
+//! domain; see DESIGN.md "fidelity notes").
+
+/// A memory request queued at a controller.
+#[derive(Debug, Clone)]
+pub struct DramRequest {
+    /// Line address.
+    pub addr: u64,
+    /// True for writes (stores / L2 writebacks).
+    pub is_write: bool,
+    /// Opaque tag the owner uses to route the reply.
+    pub tag: u64,
+}
+
+/// A completed request ready to be returned.
+#[derive(Debug, Clone)]
+pub struct DramReply {
+    /// Line address.
+    pub addr: u64,
+    /// Whether the original request was a write.
+    pub is_write: bool,
+    /// Original tag.
+    pub tag: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Bank {
+    open_row: Option<u64>,
+    busy_until: u64,
+    /// Request currently being serviced (returned when `busy_until` hits).
+    in_service: Option<(DramRequest, u64)>, // (req, finish_cycle)
+}
+
+/// One memory controller: FR-FCFS queue + banks.
+#[derive(Debug, Clone)]
+pub struct MemoryController {
+    queue: Vec<DramRequest>,
+    banks: Vec<Bank>,
+    row_bytes: u64,
+    row_hit_latency: u64,
+    row_miss_latency: u64,
+    queue_capacity: usize,
+    /// Completed replies awaiting pickup (bounded by caller draining).
+    ready: Vec<DramReply>,
+    /// Stats: row hits / misses scheduled.
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl MemoryController {
+    /// Build a controller with `banks` banks.
+    pub fn new(banks: usize, row_bytes: usize, row_hit: u32, row_miss: u32, queue: usize) -> Self {
+        MemoryController {
+            queue: Vec::with_capacity(queue),
+            banks: vec![
+                Bank { open_row: None, busy_until: 0, in_service: None };
+                banks.max(1)
+            ],
+            row_bytes: row_bytes as u64,
+            row_hit_latency: row_hit as u64,
+            row_miss_latency: row_miss as u64,
+            queue_capacity: queue,
+            ready: Vec::new(),
+            row_hits: 0,
+            row_misses: 0,
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    fn bank_of(&self, addr: u64) -> usize {
+        ((addr / self.row_bytes) % self.banks.len() as u64) as usize
+    }
+
+    fn row_of(&self, addr: u64) -> u64 {
+        addr / self.row_bytes / self.banks.len() as u64
+    }
+
+    /// Can another request be queued this cycle?
+    pub fn can_accept(&self) -> bool {
+        self.queue.len() < self.queue_capacity
+    }
+
+    /// Queue a request. Returns false (rejected) when the queue is full.
+    pub fn push(&mut self, req: DramRequest) -> bool {
+        if !self.can_accept() {
+            return false;
+        }
+        self.queue.push(req);
+        true
+    }
+
+    /// Outstanding work (queued + in service + ready)?
+    pub fn busy(&self) -> bool {
+        !self.queue.is_empty()
+            || !self.ready.is_empty()
+            || self.banks.iter().any(|b| b.in_service.is_some())
+    }
+
+    /// Advance one cycle: complete service, schedule FR-FCFS.
+    pub fn tick(&mut self, now: u64) {
+        // Completions.
+        for bank in &mut self.banks {
+            if let Some((_, finish)) = bank.in_service {
+                if now >= finish {
+                    let (req, _) = bank.in_service.take().unwrap();
+                    self.ready.push(DramReply {
+                        addr: req.addr,
+                        is_write: req.is_write,
+                        tag: req.tag,
+                    });
+                }
+            }
+        }
+        // FR-FCFS issue: for each idle bank, prefer the oldest row-hit
+        // request; otherwise the oldest request for that bank.
+        for b in 0..self.banks.len() {
+            if self.banks[b].in_service.is_some() || self.banks[b].busy_until > now {
+                continue;
+            }
+            let open = self.banks[b].open_row;
+            let mut pick: Option<usize> = None;
+            for (i, r) in self.queue.iter().enumerate() {
+                if self.bank_of(r.addr) != b {
+                    continue;
+                }
+                let row = self.row_of(r.addr);
+                if Some(row) == open {
+                    pick = Some(i); // first-ready row hit (oldest first)
+                    break;
+                }
+                if pick.is_none() {
+                    pick = Some(i); // fallback: oldest for this bank
+                }
+            }
+            if let Some(i) = pick {
+                let req = self.queue.remove(i);
+                let row = self.row_of(req.addr);
+                let hit = Some(row) == open;
+                let lat = if hit {
+                    self.row_hits += 1;
+                    self.row_hit_latency
+                } else {
+                    self.row_misses += 1;
+                    self.row_miss_latency
+                };
+                if req.is_write {
+                    self.writes += 1;
+                } else {
+                    self.reads += 1;
+                }
+                self.banks[b].open_row = Some(row);
+                self.banks[b].busy_until = now + lat;
+                self.banks[b].in_service = Some((req, now + lat));
+            }
+        }
+    }
+
+    /// Pop one completed reply, if any.
+    pub fn pop_reply(&mut self) -> Option<DramReply> {
+        if self.ready.is_empty() {
+            None
+        } else {
+            Some(self.ready.remove(0))
+        }
+    }
+
+    /// Peek whether a reply is waiting (used to account injection stalls).
+    pub fn has_reply(&self) -> bool {
+        !self.ready.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc() -> MemoryController {
+        MemoryController::new(2, 2048, 40, 110, 8)
+    }
+
+    fn run_until_reply(m: &mut MemoryController, start: u64, limit: u64) -> (DramReply, u64) {
+        for t in start..start + limit {
+            m.tick(t);
+            if let Some(r) = m.pop_reply() {
+                return (r, t);
+            }
+        }
+        panic!("no reply within {limit} cycles");
+    }
+
+    #[test]
+    fn single_read_row_miss_latency() {
+        let mut m = mc();
+        assert!(m.push(DramRequest { addr: 0x1000, is_write: false, tag: 7 }));
+        let (r, t) = run_until_reply(&mut m, 0, 200);
+        assert_eq!(r.tag, 7);
+        assert!(!r.is_write);
+        assert!(t >= 110, "cold access is a row miss: t={t}");
+        assert_eq!(m.row_misses, 1);
+    }
+
+    #[test]
+    fn row_hit_is_faster() {
+        let mut m = mc();
+        m.push(DramRequest { addr: 0x0, is_write: false, tag: 1 });
+        let (_, t1) = run_until_reply(&mut m, 0, 200);
+        // Same row again.
+        m.push(DramRequest { addr: 0x80, is_write: false, tag: 2 });
+        let (_, t2) = run_until_reply(&mut m, t1 + 1, 200);
+        assert_eq!(m.row_hits, 1);
+        assert!(t2 - t1 < 110, "row hit should be fast: {}", t2 - t1);
+    }
+
+    #[test]
+    fn frfcfs_prefers_row_hit_over_older_miss() {
+        let mut m = mc();
+        // Open row 0 on bank 0.
+        m.push(DramRequest { addr: 0x0, is_write: false, tag: 0 });
+        let (_, t) = run_until_reply(&mut m, 0, 200);
+        // Queue: first an (older) row-miss to a different row on bank 0,
+        // then a row-hit to the open row — the hit must be served first.
+        let other_row = 2 * 2048 * 2; // bank 0, row 2
+        m.push(DramRequest { addr: other_row, is_write: false, tag: 10 });
+        m.push(DramRequest { addr: 0x100, is_write: false, tag: 11 });
+        let (first, _) = run_until_reply(&mut m, t + 1, 400);
+        assert_eq!(first.tag, 11, "row hit bypasses older miss");
+    }
+
+    #[test]
+    fn queue_capacity_enforced() {
+        let mut m = mc();
+        for i in 0..8 {
+            assert!(m.push(DramRequest { addr: i * 4096, is_write: false, tag: i }));
+        }
+        assert!(!m.push(DramRequest { addr: 99999, is_write: false, tag: 99 }));
+        assert!(!m.can_accept());
+    }
+
+    #[test]
+    fn banks_service_in_parallel() {
+        let mut m = mc();
+        // Two requests on different banks complete in ~one row-miss time.
+        m.push(DramRequest { addr: 0, is_write: false, tag: 0 }); // bank 0
+        m.push(DramRequest { addr: 2048, is_write: true, tag: 1 }); // bank 1
+        let mut done = 0;
+        for t in 0..130 {
+            m.tick(t);
+            while m.pop_reply().is_some() {
+                done += 1;
+            }
+        }
+        assert_eq!(done, 2, "parallel banks overlap latency");
+        assert_eq!(m.writes, 1);
+        assert_eq!(m.reads, 1);
+    }
+
+    #[test]
+    fn busy_tracks_lifecycle() {
+        let mut m = mc();
+        assert!(!m.busy());
+        m.push(DramRequest { addr: 0, is_write: false, tag: 0 });
+        assert!(m.busy());
+        let _ = run_until_reply(&mut m, 0, 200);
+        assert!(!m.busy());
+    }
+}

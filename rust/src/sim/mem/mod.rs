@@ -1,0 +1,255 @@
+//! Memory-system substrates: coalescer, caches + MSHRs, L2 slices, DRAM.
+
+pub mod cache;
+pub mod coalesce;
+pub mod dram;
+
+pub use cache::{Access, Cache};
+pub use coalesce::{coalesce, coalesce_fused, CoalesceResult};
+pub use dram::{DramReply, DramRequest, MemoryController};
+
+use crate::config::SystemConfig;
+
+/// An L2 slice + its memory controller: the memory partition that sits at
+/// one NoC memory node (the paper couples the unified L2 with the MCs).
+#[derive(Debug, Clone)]
+pub struct MemPartition {
+    /// The L2 tag array for this slice.
+    pub l2: Cache,
+    /// The DRAM controller behind it.
+    pub mc: MemoryController,
+    /// Requests that L2-missed and are waiting on DRAM: tag -> requester.
+    /// (tag is the line address; value counts merged L2 misses.)
+    pending_fills: Vec<(u64, u32)>,
+    /// L2 latency pipeline: (ready_cycle, line, requester_tag, is_write).
+    hit_pipe: Vec<(u64, u64, u64, bool)>,
+    /// Stats.
+    pub accesses: u64,
+    pub misses: u64,
+}
+
+/// A reply leaving the partition toward an SM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionReply {
+    /// Line address served.
+    pub line: u64,
+    /// Opaque requester tag (SM id etc.) carried through.
+    pub tag: u64,
+    /// Whether this answered a write (write-ack) or a read (data).
+    pub is_write: bool,
+}
+
+impl MemPartition {
+    /// Build one partition per the system config.
+    pub fn new(cfg: &SystemConfig) -> Self {
+        MemPartition {
+            l2: Cache::new(
+                cfg.l2_slice_bytes,
+                cfg.l2_assoc,
+                cfg.line_bytes,
+                cfg.l2_hit_latency,
+                cfg.mshr_per_sm, // generous L2 MSHR pool
+            ),
+            mc: MemoryController::new(
+                cfg.dram_banks_per_mc,
+                cfg.dram_row_bytes,
+                cfg.dram_row_hit_latency,
+                cfg.dram_row_miss_latency,
+                cfg.mc_queue_depth,
+            ),
+            pending_fills: Vec::new(),
+            hit_pipe: Vec::new(),
+            accesses: 0,
+            misses: 0,
+        }
+    }
+
+    /// Present a request (read or write-through) to the slice. Returns
+    /// false if it must be retried (MSHR/queue full — backpressure).
+    /// `Cache::access` runs at most once per accepted request: a miss that
+    /// cannot be queued at DRAM is rejected *before* touching the tags.
+    pub fn request(&mut self, now: u64, line: u64, tag: u64, is_write: bool, l2_latency: u64) -> bool {
+        if self.l2.probe(line) {
+            let r = self.l2.access(line);
+            debug_assert_eq!(r, Access::Hit);
+            self.accesses += 1;
+            self.hit_pipe.push((now + l2_latency, line, tag, is_write));
+            return true;
+        }
+        // Miss path: require DRAM queue space up front so the access never
+        // strands an MSHR without a fill request behind it.
+        if !self.mc.can_accept() {
+            return false;
+        }
+        match self.l2.access(line) {
+            Access::MissMerged => {
+                self.accesses += 1;
+                self.misses += 1;
+                // Park; woken when the original fill returns.
+                self.hit_pipe.push((u64::MAX, line, tag, is_write));
+                match self.pending_fills.iter_mut().find(|(l, _)| *l == line) {
+                    Some((_, n)) => *n += 1,
+                    None => self.pending_fills.push((line, 1)),
+                }
+                true
+            }
+            Access::MissNew => {
+                self.accesses += 1;
+                self.misses += 1;
+                let ok = self.mc.push(DramRequest { addr: line, is_write, tag });
+                debug_assert!(ok, "can_accept checked above");
+                self.hit_pipe.push((u64::MAX, line, tag, is_write));
+                true
+            }
+            Access::MshrFull => false,
+            Access::Hit => {
+                // Race between probe and access cannot happen single-
+                // threaded, but keep the path total.
+                self.accesses += 1;
+                self.hit_pipe.push((now + l2_latency, line, tag, is_write));
+                true
+            }
+        }
+    }
+
+    /// Advance one cycle; emit replies ready to leave toward the NoC.
+    /// `out` is appended with at most `max_out` replies (injection limit).
+    pub fn tick(&mut self, now: u64, out: &mut Vec<PartitionReply>, max_out: usize) -> bool {
+        self.mc.tick(now);
+        // DRAM fills: install in L2, release parked requesters.
+        while let Some(fill) = self.mc.pop_reply() {
+            let _merged = self.l2.fill(fill.addr);
+            // Wake every parked entry for this line.
+            for entry in self.hit_pipe.iter_mut() {
+                if entry.0 == u64::MAX && entry.1 == fill.addr {
+                    entry.0 = now; // ready now
+                }
+            }
+        }
+        // Emit ready replies, bounded by the injection budget.
+        let mut emitted = 0;
+        let mut stalled = false;
+        let mut i = 0;
+        while i < self.hit_pipe.len() {
+            let (ready, line, tag, is_write) = self.hit_pipe[i];
+            if ready <= now {
+                if emitted >= max_out {
+                    stalled = true; // reply ready but injection budget spent
+                    break;
+                }
+                out.push(PartitionReply { line, tag, is_write });
+                self.hit_pipe.swap_remove(i);
+                emitted += 1;
+            } else {
+                i += 1;
+            }
+        }
+        stalled
+    }
+
+    /// Any outstanding work?
+    pub fn busy(&self) -> bool {
+        !self.hit_pipe.is_empty() || self.mc.busy()
+    }
+
+    /// Kernel-boundary flush.
+    pub fn flush(&mut self) {
+        self.l2.flush();
+        self.pending_fills.clear();
+        self.hit_pipe.clear();
+    }
+}
+
+/// Which memory partition serves a line (low-order line-interleaving,
+/// GPGPU-Sim style: spreads traffic across MCs).
+pub fn partition_of(line: u64, line_bytes: usize, num_mcs: usize) -> usize {
+    ((line / line_bytes as u64) % num_mcs as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part() -> MemPartition {
+        MemPartition::new(&SystemConfig::tiny())
+    }
+
+    #[test]
+    fn l2_hit_replies_after_latency() {
+        let mut p = part();
+        // Prime the line via DRAM.
+        assert!(p.request(0, 0x1000, 5, false, 8));
+        let mut out = Vec::new();
+        let mut t = 0;
+        while out.is_empty() && t < 500 {
+            p.tick(t, &mut out, 4);
+            t += 1;
+        }
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 0x1000);
+        let miss_t = t;
+        // Now a hit: should reply in ~l2 latency cycles.
+        out.clear();
+        assert!(p.request(t, 0x1000, 6, false, 8));
+        while out.is_empty() && t < miss_t + 50 {
+            p.tick(t, &mut out, 4);
+            t += 1;
+        }
+        assert_eq!(out.len(), 1, "l2 hit fast path");
+        assert!(t - miss_t <= 10, "hit latency ~8: {}", t - miss_t);
+    }
+
+    #[test]
+    fn injection_budget_reports_stall() {
+        let mut p = part();
+        // Two hits ready in the same cycle, budget 1 => stall flag.
+        for (i, line) in [0x2000u64, 0x2080].iter().enumerate() {
+            assert!(p.request(0, *line, i as u64, false, 1));
+        }
+        // Drain DRAM until both lines are L2-resident and replies emitted.
+        let mut out = Vec::new();
+        let mut stalled_any = false;
+        for t in 0..600 {
+            stalled_any |= p.tick(t, &mut out, 1);
+        }
+        assert_eq!(out.len(), 2);
+        // Re-request both in the same cycle: now they are hits with the
+        // same ready time; budget 1 must stall one of them.
+        out.clear();
+        assert!(p.request(600, 0x2000, 1, false, 1));
+        assert!(p.request(600, 0x2080, 2, false, 1));
+        let mut stalls = 0;
+        for t in 601..650 {
+            if p.tick(t, &mut out, 1) {
+                stalls += 1;
+            }
+        }
+        assert_eq!(out.len(), 2);
+        assert!(stalls >= 1, "budget-1 must stall at least one cycle");
+        let _ = stalled_any;
+    }
+
+    #[test]
+    fn partition_interleaving_spreads_lines() {
+        let mut counts = [0usize; 4];
+        for i in 0..1024u64 {
+            counts[partition_of(i * 128, 128, 4)] += 1;
+        }
+        for c in counts {
+            assert_eq!(c, 256);
+        }
+    }
+
+    #[test]
+    fn write_through_acks() {
+        let mut p = part();
+        assert!(p.request(0, 0x3000, 9, true, 8));
+        let mut out = Vec::new();
+        for t in 0..500 {
+            p.tick(t, &mut out, 4);
+        }
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_write);
+        assert!(!p.busy());
+    }
+}

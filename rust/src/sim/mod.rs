@@ -1,0 +1,7 @@
+//! Simulation substrates: SM cores, memory system, NoC, and the top-level
+//! GPU cycle loop.
+
+pub mod core;
+pub mod gpu;
+pub mod mem;
+pub mod noc;

@@ -1,0 +1,332 @@
+//! Network-on-chip: 2D mesh with XY routing, 2-stage routers, bounded
+//! queues and two subnets (request / reply) to avoid protocol deadlock —
+//! the paper's Table 1 interconnect. A `Perfect` mode (zero latency,
+//! infinite bandwidth) reproduces the Fig 3(b) methodology.
+//!
+//! Fusion interacts with the NoC by *shrinking* it: AMOEBA bypasses the
+//! router of the second SM in each fused pair, so the fused machine builds
+//! a smaller mesh (fewer nodes -> fewer hops, more bandwidth per SM —
+//! Fig 17/18). The GPU rebuilds the NoC at reconfiguration boundaries.
+
+mod router;
+
+pub use router::Router;
+
+use std::collections::VecDeque;
+
+use crate::config::{NocMode, SystemConfig};
+
+/// What a packet carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Payload {
+    /// SM -> memory partition: fetch or write-through of a line.
+    MemRequest { line: u64, requester: u32, is_write: bool },
+    /// Memory partition -> SM: data or write-ack for a line.
+    MemReply { line: u64, requester: u32, is_write: bool },
+}
+
+/// One NoC packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Packet {
+    /// Source node index.
+    pub src: usize,
+    /// Destination node index.
+    pub dst: usize,
+    /// Size in flits (header + payload on the 128-bit channel).
+    pub flits: u32,
+    /// Injection cycle (for latency accounting).
+    pub born: u64,
+    /// Payload.
+    pub payload: Payload,
+}
+
+/// Subnet selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Subnet {
+    /// SM -> MC traffic.
+    Request = 0,
+    /// MC -> SM traffic.
+    Reply = 1,
+}
+
+/// The interconnect: a mesh (or ideal fabric) over `nodes` endpoints.
+#[derive(Debug)]
+pub struct Noc {
+    mode: NocMode,
+    width: usize,
+    height: usize,
+    nodes: usize,
+    /// Routers indexed [subnet][node].
+    routers: [Vec<Router>; 2],
+    /// Ejection queues per [subnet][node].
+    eject: [Vec<VecDeque<Packet>>; 2],
+    /// Perfect-mode delivery (bypasses routers entirely).
+    /// Stats: total flit-hops routed.
+    pub flits_routed: u64,
+    /// Stats: packets delivered.
+    pub packets_delivered: u64,
+    inject_depth: usize,
+}
+
+impl Noc {
+    /// Build an interconnect over `nodes` endpoints per `cfg`.
+    pub fn new(cfg: &SystemConfig, nodes: usize) -> Self {
+        let width = (nodes as f64).sqrt().ceil() as usize;
+        let height = nodes.div_ceil(width);
+        let mk = |n: usize| -> Vec<Router> {
+            (0..n).map(|_| Router::new(cfg.noc_queue_depth, cfg.noc_router_stages as u64)).collect()
+        };
+        Noc {
+            mode: cfg.noc_mode,
+            width,
+            height,
+            nodes,
+            routers: [mk(width * height), mk(width * height)],
+            eject: [
+                (0..nodes).map(|_| VecDeque::new()).collect(),
+                (0..nodes).map(|_| VecDeque::new()).collect(),
+            ],
+            flits_routed: 0,
+            packets_delivered: 0,
+            inject_depth: cfg.noc_inject_depth,
+        }
+    }
+
+    /// Mesh dimensions (width, height).
+    pub fn dims(&self) -> (usize, usize) {
+        (self.width, self.height)
+    }
+
+    /// Endpoint count.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn coords(&self, node: usize) -> (usize, usize) {
+        (node % self.width, node / self.width)
+    }
+
+    /// XY-routing hop count between two nodes.
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// Try to inject `pkt` at its source node. Returns false when the
+    /// injection queue is full (the Fig 17 stall condition at MCs).
+    pub fn inject(&mut self, subnet: Subnet, pkt: Packet) -> bool {
+        debug_assert!(pkt.src < self.nodes && pkt.dst < self.nodes);
+        match self.mode {
+            NocMode::Perfect => {
+                // Ideal fabric: instant delivery.
+                self.eject[subnet as usize][pkt.dst].push_back(pkt);
+                self.packets_delivered += 1;
+                true
+            }
+            NocMode::Mesh => {
+                if pkt.src == pkt.dst {
+                    self.eject[subnet as usize][pkt.dst].push_back(pkt);
+                    self.packets_delivered += 1;
+                    return true;
+                }
+                self.routers[subnet as usize][pkt.src].inject(pkt, self.inject_depth)
+            }
+        }
+    }
+
+    /// Space available in the source injection queue?
+    pub fn can_inject(&self, subnet: Subnet, node: usize) -> bool {
+        match self.mode {
+            NocMode::Perfect => true,
+            NocMode::Mesh => self.routers[subnet as usize][node].inject_space(self.inject_depth),
+        }
+    }
+
+    /// Advance both subnets one cycle.
+    pub fn tick(&mut self, now: u64) {
+        if self.mode == NocMode::Perfect {
+            return;
+        }
+        for subnet in 0..2 {
+            self.tick_subnet(subnet, now);
+        }
+    }
+
+    fn tick_subnet(&mut self, subnet: usize, now: u64) {
+        let width = self.width;
+        let n_routers = self.routers[subnet].len();
+        // Each router forwards at most one packet per output direction per
+        // cycle. We sweep routers in a rotating order (based on cycle) to
+        // avoid systematic unfairness toward low-indexed nodes.
+        let start = (now as usize) % n_routers;
+        for step in 0..n_routers {
+            let r = (start + step) % n_routers;
+            // Decide moves out of router r.
+            let moves = {
+                let router = &mut self.routers[subnet][r];
+                router.plan_moves(now, r, width, self.height)
+            };
+            for (pkt, next) in moves {
+                if next == usize::MAX {
+                    // Arrived: eject (bounded only by consumer draining).
+                    self.eject[subnet][pkt.dst].push_back(pkt);
+                    self.packets_delivered += 1;
+                    self.flits_routed += pkt.flits as u64;
+                } else {
+                    // Hop latency: pipeline stages + serialization.
+                    let ready = now + self.routers[subnet][r].stages + pkt.flits as u64;
+                    self.routers[subnet][next].accept(pkt, ready);
+                    self.flits_routed += pkt.flits as u64;
+                }
+            }
+        }
+    }
+
+    /// Pop one delivered packet at `node`, if any.
+    pub fn eject(&mut self, subnet: Subnet, node: usize) -> Option<Packet> {
+        self.eject[subnet as usize][node].pop_front()
+    }
+
+    /// Any packets still in flight anywhere?
+    pub fn busy(&self) -> bool {
+        self.eject.iter().any(|e| e.iter().any(|q| !q.is_empty()))
+            || self.routers.iter().any(|rs| rs.iter().any(|r| r.busy()))
+    }
+
+    /// Per-router queue occupancy summary (deadlock diagnostics).
+    pub fn debug_state(&self) -> String {
+        let mut out = String::new();
+        for (s, label) in [(0usize, "req"), (1, "rep")] {
+            let qs: Vec<usize> = self.routers[s].iter().map(|r| r.queue_len()).collect();
+            let es: Vec<usize> = self.eject[s].iter().map(|q| q.len()).collect();
+            out.push_str(&format!("{label}: routers={qs:?} eject={es:?}  "));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::tiny()
+    }
+
+    fn pkt(src: usize, dst: usize, flits: u32, born: u64) -> Packet {
+        Packet {
+            src,
+            dst,
+            flits,
+            born,
+            payload: Payload::MemRequest { line: 0, requester: 0, is_write: false },
+        }
+    }
+
+    fn deliver(noc: &mut Noc, p: Packet, limit: u64) -> u64 {
+        assert!(noc.inject(Subnet::Request, p));
+        for t in p.born..p.born + limit {
+            noc.tick(t);
+            if noc.eject(Subnet::Request, p.dst).is_some() {
+                return t - p.born;
+            }
+        }
+        panic!("packet not delivered in {limit} cycles");
+    }
+
+    #[test]
+    fn mesh_dims_cover_nodes() {
+        let n = Noc::new(&cfg(), 6);
+        let (w, h) = n.dims();
+        assert!(w * h >= 6);
+        assert_eq!(n.nodes(), 6);
+    }
+
+    #[test]
+    fn delivery_latency_scales_with_hops() {
+        let mut noc = Noc::new(&cfg(), 6); // 3x2 mesh
+        let near = deliver(&mut noc, pkt(0, 1, 1, 0), 100);
+        let far = deliver(&mut noc, pkt(0, 5, 1, 1000), 100);
+        assert!(far > near, "far={far} near={near}");
+        assert_eq!(noc.hops(0, 5), 3);
+        assert_eq!(noc.hops(0, 1), 1);
+    }
+
+    #[test]
+    fn bigger_packets_take_longer() {
+        let mut noc = Noc::new(&cfg(), 6);
+        let small = deliver(&mut noc, pkt(0, 5, 1, 0), 200);
+        let big = deliver(&mut noc, pkt(0, 5, 9, 1000), 200);
+        assert!(big > small, "big={big} small={small}");
+    }
+
+    #[test]
+    fn perfect_mode_is_instant() {
+        let mut c = cfg();
+        c.noc_mode = NocMode::Perfect;
+        let mut noc = Noc::new(&c, 6);
+        assert!(noc.inject(Subnet::Reply, pkt(0, 5, 9, 0)));
+        assert!(noc.eject(Subnet::Reply, 5).is_some(), "no tick needed");
+    }
+
+    #[test]
+    fn injection_backpressure() {
+        let mut noc = Noc::new(&cfg(), 6);
+        let mut accepted = 0;
+        for i in 0..100 {
+            if noc.inject(Subnet::Request, pkt(0, 5, 4, i)) {
+                accepted += 1;
+            }
+        }
+        assert!(accepted < 100, "bounded queues must reject eventually");
+        assert!(accepted >= cfg().noc_inject_depth as i32 as usize);
+    }
+
+    #[test]
+    fn subnets_are_independent() {
+        let mut noc = Noc::new(&cfg(), 6);
+        assert!(noc.inject(Subnet::Request, pkt(0, 3, 1, 0)));
+        assert!(noc.inject(Subnet::Reply, pkt(3, 0, 1, 0)));
+        for t in 0..100 {
+            noc.tick(t);
+        }
+        assert!(noc.eject(Subnet::Request, 3).is_some());
+        assert!(noc.eject(Subnet::Reply, 0).is_some());
+        assert!(noc.eject(Subnet::Request, 0).is_none());
+    }
+
+    #[test]
+    fn all_packets_eventually_delivered_under_load() {
+        let mut noc = Noc::new(&cfg(), 9);
+        let mut sent = 0u32;
+        let mut got = 0u32;
+        let mut t = 0u64;
+        // Saturate from every node toward node 4 (center) and drain.
+        while t < 5_000 {
+            for src in 0..9 {
+                if src != 4 && sent < 300 && noc.inject(Subnet::Request, pkt(src, 4, 2, t)) {
+                    sent += 1;
+                }
+            }
+            noc.tick(t);
+            while noc.eject(Subnet::Request, 4).is_some() {
+                got += 1;
+            }
+            t += 1;
+        }
+        assert_eq!(got, sent, "conservation: every injected packet ejects");
+        assert!(sent >= 290, "should accept most offered load: {sent}");
+        assert!(!noc.busy());
+    }
+
+    #[test]
+    fn smaller_mesh_has_shorter_paths() {
+        // The fusion effect (Fig 17/18): halving nodes shrinks the mesh.
+        let big = Noc::new(&cfg(), 56); // 48 SMs + 8 MCs
+        let small = Noc::new(&cfg(), 32); // 24 fused + 8 MCs
+        let max_hops_big = (0..56).map(|n| big.hops(0, n)).max().unwrap();
+        let max_hops_small = (0..32).map(|n| small.hops(0, n)).max().unwrap();
+        assert!(max_hops_small < max_hops_big);
+    }
+}

@@ -1,0 +1,283 @@
+//! Simulation statistics: per-SM and machine-wide counters, and the derived
+//! metrics every paper figure reports.
+
+mod report;
+
+pub use report::{fmt_row, Table};
+
+/// Why an SM scheduler failed to issue in a cycle (stall breakdown).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallReason {
+    /// No resident warps at all (SM idle).
+    Idle,
+    /// All warps waiting on memory (scoreboard).
+    Memory,
+    /// All warps held by divergence-serialisation (control stall, Fig 6/13).
+    Control,
+    /// Warps waiting at a CTA barrier.
+    Barrier,
+    /// Execution unit busy (initiation interval not elapsed).
+    ExecBusy,
+    /// Downstream memory structure full (MSHR / miss queue / NoC inject).
+    MemStructFull,
+}
+
+/// Counters for one SM (or one fused SM cluster half).
+#[derive(Debug, Clone, Default)]
+pub struct SmStats {
+    /// Cycles this SM was powered (driven by the cycle loop).
+    pub cycles: u64,
+    /// Warp-instructions issued.
+    pub warp_insns: u64,
+    /// Thread-instructions committed (sum of active lanes over issues).
+    pub thread_insns: u64,
+    /// Issue-slot cycles lost, by reason.
+    pub stall_idle: u64,
+    pub stall_memory: u64,
+    pub stall_control: u64,
+    pub stall_barrier: u64,
+    pub stall_exec: u64,
+    pub stall_mem_struct: u64,
+    /// Lane-cycles lost to inactive lanes during divergent execution
+    /// (the paper's "inactive thread rate" numerator).
+    pub inactive_lane_cycles: u64,
+    /// Lane-cycles available (width x issue cycles).
+    pub total_lane_cycles: u64,
+    /// Branch instructions executed / those that diverged.
+    pub branches: u64,
+    pub divergent_branches: u64,
+    /// Memory-instruction accounting before/after coalescing (Fig 4/16).
+    pub mem_insns: u64,
+    pub mem_requests: u64,
+    pub mem_transactions: u64,
+    /// L1 data cache.
+    pub l1d_accesses: u64,
+    pub l1d_misses: u64,
+    /// L1 instruction cache.
+    pub l1i_accesses: u64,
+    pub l1i_misses: u64,
+    /// L1 constant cache.
+    pub l1c_accesses: u64,
+    pub l1c_misses: u64,
+    /// L1 texture cache.
+    pub l1t_accesses: u64,
+    pub l1t_misses: u64,
+    /// MSHR: misses merged into an in-flight entry / total miss attempts.
+    pub mshr_merges: u64,
+    pub mshr_allocs: u64,
+    /// Cycles where an L1 miss could not proceed (MSHR full / inject full).
+    pub mem_struct_stall_cycles: u64,
+    /// NoC packets/flits injected by this SM and reply latency samples.
+    pub noc_packets: u64,
+    pub noc_flits: u64,
+    pub noc_latency_sum: u64,
+    pub noc_latency_samples: u64,
+    /// CTAs and warps retired.
+    pub ctas_retired: u64,
+    pub warps_retired: u64,
+    /// Cycles spent fused / split (for Fig 19-style accounting).
+    pub fused_cycles: u64,
+    pub split_cycles: u64,
+    /// Fuse/split transitions performed by the dynamic controller.
+    pub fuse_events: u64,
+    pub split_events: u64,
+}
+
+impl SmStats {
+    /// Record an issue-slot stall.
+    pub fn stall(&mut self, r: StallReason) {
+        match r {
+            StallReason::Idle => self.stall_idle += 1,
+            StallReason::Memory => self.stall_memory += 1,
+            StallReason::Control => self.stall_control += 1,
+            StallReason::Barrier => self.stall_barrier += 1,
+            StallReason::ExecBusy => self.stall_exec += 1,
+            StallReason::MemStructFull => self.stall_mem_struct += 1,
+        }
+    }
+
+    /// L1D miss rate in [0,1].
+    pub fn l1d_miss_rate(&self) -> f64 {
+        ratio(self.l1d_misses, self.l1d_accesses)
+    }
+
+    /// L1I miss rate in [0,1].
+    pub fn l1i_miss_rate(&self) -> f64 {
+        ratio(self.l1i_misses, self.l1i_accesses)
+    }
+
+    /// L1C miss rate in [0,1].
+    pub fn l1c_miss_rate(&self) -> f64 {
+        ratio(self.l1c_misses, self.l1c_accesses)
+    }
+
+    /// Actual-memory-access rate after coalescing (Fig 4/16): transactions
+    /// issued to the memory system / lane-level requests in instructions.
+    pub fn actual_access_rate(&self) -> f64 {
+        ratio(self.mem_transactions, self.mem_requests)
+    }
+
+    /// MSHR merge rate: merged misses / all missing accesses.
+    pub fn mshr_rate(&self) -> f64 {
+        ratio(self.mshr_merges, self.mshr_merges + self.mshr_allocs)
+    }
+
+    /// Inactive-thread rate from control divergence (§4.1.2 metric 6).
+    pub fn inactive_thread_rate(&self) -> f64 {
+        ratio(self.inactive_lane_cycles, self.total_lane_cycles)
+    }
+
+    /// Control-stall rate (Fig 6/13): issue cycles lost to divergence
+    /// serialisation over total cycles.
+    pub fn control_stall_rate(&self) -> f64 {
+        ratio(self.stall_control, self.cycles)
+    }
+
+    /// Mean NoC round-trip latency observed by this SM's requests.
+    pub fn avg_noc_latency(&self) -> f64 {
+        ratio(self.noc_latency_sum, self.noc_latency_samples)
+    }
+
+    /// Merge another SM's counters into this one (suite aggregation).
+    pub fn absorb(&mut self, o: &SmStats) {
+        macro_rules! add {
+            ($($f:ident),+ $(,)?) => { $( self.$f += o.$f; )+ };
+        }
+        add!(
+            cycles, warp_insns, thread_insns, stall_idle, stall_memory, stall_control,
+            stall_barrier, stall_exec, stall_mem_struct, inactive_lane_cycles,
+            total_lane_cycles, branches, divergent_branches, mem_insns, mem_requests,
+            mem_transactions, l1d_accesses, l1d_misses, l1i_accesses, l1i_misses,
+            l1c_accesses, l1c_misses, l1t_accesses, l1t_misses, mshr_merges, mshr_allocs,
+            mem_struct_stall_cycles, noc_packets, noc_flits, noc_latency_sum,
+            noc_latency_samples, ctas_retired, warps_retired, fused_cycles, split_cycles,
+            fuse_events, split_events,
+        );
+    }
+}
+
+/// Machine-wide counters outside the SMs.
+#[derive(Debug, Clone, Default)]
+pub struct ChipStats {
+    /// Total GPU cycles simulated.
+    pub cycles: u64,
+    /// L2 accesses/misses summed over slices.
+    pub l2_accesses: u64,
+    pub l2_misses: u64,
+    /// DRAM reads/writes and row hit/miss counts.
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub dram_row_hits: u64,
+    pub dram_row_misses: u64,
+    /// Cycles an MC had a reply ready but its injection queue was full
+    /// (Fig 17's "ICNT-to-shader" stall).
+    pub mc_inject_stall_cycles: u64,
+    /// Cycles an MC was enabled (denominator for the stall rate).
+    pub mc_cycles: u64,
+    /// Total flits traversing the NoC (both subnets).
+    pub noc_flits_routed: u64,
+    /// Kernel launches completed.
+    pub kernels_completed: u64,
+    /// Reconfigurations performed (static fuse decisions).
+    pub reconfig_events: u64,
+    /// Cycles paid for reconfiguration drains.
+    pub reconfig_cycles: u64,
+    /// Scale-up decisions taken by the predictor (per kernel).
+    pub predictor_scale_up: u64,
+    pub predictor_scale_out: u64,
+}
+
+impl ChipStats {
+    /// Normalised MC injection stall rate (Fig 17).
+    pub fn mc_inject_stall_rate(&self) -> f64 {
+        ratio(self.mc_inject_stall_cycles, self.mc_cycles)
+    }
+
+    /// L2 miss rate.
+    pub fn l2_miss_rate(&self) -> f64 {
+        ratio(self.l2_misses, self.l2_accesses)
+    }
+
+    /// DRAM row-hit rate (FR-FCFS effectiveness).
+    pub fn dram_row_hit_rate(&self) -> f64 {
+        ratio(self.dram_row_hits, self.dram_row_hits + self.dram_row_misses)
+    }
+}
+
+/// Safe ratio helper: 0 when the denominator is 0.
+pub fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// Geometric mean of positive values (paper reports geomean IPC speedups).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_handle_zero_denominator() {
+        assert_eq!(ratio(5, 0), 0.0);
+        assert_eq!(ratio(1, 2), 0.5);
+        let s = SmStats::default();
+        assert_eq!(s.l1d_miss_rate(), 0.0);
+        assert_eq!(s.mshr_rate(), 0.0);
+    }
+
+    #[test]
+    fn stall_breakdown_routes() {
+        let mut s = SmStats::default();
+        s.stall(StallReason::Memory);
+        s.stall(StallReason::Memory);
+        s.stall(StallReason::Control);
+        assert_eq!(s.stall_memory, 2);
+        assert_eq!(s.stall_control, 1);
+        assert_eq!(s.stall_idle, 0);
+    }
+
+    #[test]
+    fn absorb_sums_everything() {
+        let mut a = SmStats { warp_insns: 10, l1d_misses: 3, ..Default::default() };
+        let b = SmStats { warp_insns: 5, l1d_misses: 2, fused_cycles: 7, ..Default::default() };
+        a.absorb(&b);
+        assert_eq!(a.warp_insns, 15);
+        assert_eq!(a.l1d_misses, 5);
+        assert_eq!(a.fused_cycles, 7);
+    }
+
+    #[test]
+    fn geomean_matches_hand_math() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+        let g = geomean(&[2.0, 2.0, 2.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn derived_rates() {
+        let s = SmStats {
+            mem_requests: 100,
+            mem_transactions: 25,
+            inactive_lane_cycles: 10,
+            total_lane_cycles: 40,
+            cycles: 50,
+            stall_control: 5,
+            ..Default::default()
+        };
+        assert!((s.actual_access_rate() - 0.25).abs() < 1e-12);
+        assert!((s.inactive_thread_rate() - 0.25).abs() < 1e-12);
+        assert!((s.control_stall_rate() - 0.1).abs() < 1e-12);
+    }
+}

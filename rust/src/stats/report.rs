@@ -1,0 +1,152 @@
+//! Tiny table/TSV formatting used by the figure harness and CLI output.
+
+/// A labelled table of f64 series, printed as aligned text or TSV.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    /// Table title (figure id, e.g. "Fig 12").
+    pub title: String,
+    /// Column headers (first column is the row label).
+    pub columns: Vec<String>,
+    /// Rows: (label, values aligned with `columns[1..]`).
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) -> &mut Self {
+        self.rows.push((label.into(), values));
+        self
+    }
+
+    /// Column-wise arithmetic mean over rows.
+    pub fn mean_row(&self) -> Vec<f64> {
+        if self.rows.is_empty() {
+            return Vec::new();
+        }
+        let ncols = self.rows[0].1.len();
+        let mut sums = vec![0.0; ncols];
+        for (_, vals) in &self.rows {
+            for (s, v) in sums.iter_mut().zip(vals) {
+                *s += v;
+            }
+        }
+        sums.iter().map(|s| s / self.rows.len() as f64).collect()
+    }
+
+    /// Column-wise geometric mean over rows.
+    pub fn geomean_row(&self) -> Vec<f64> {
+        if self.rows.is_empty() {
+            return Vec::new();
+        }
+        let ncols = self.rows[0].1.len();
+        (0..ncols)
+            .map(|c| {
+                let col: Vec<f64> = self.rows.iter().map(|(_, v)| v[c]).collect();
+                super::geomean(&col)
+            })
+            .collect()
+    }
+
+    /// Render as aligned human-readable text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for (label, vals) in &self.rows {
+            widths[0] = widths[0].max(label.len());
+            for (i, v) in vals.iter().enumerate() {
+                widths[i + 1] = widths.get(i + 1).copied().unwrap_or(8).max(fmt_row(*v).len());
+            }
+        }
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&header.join("  "));
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            let mut cells = vec![format!("{:>w$}", label, w = widths[0])];
+            for (i, v) in vals.iter().enumerate() {
+                cells.push(format!("{:>w$}", fmt_row(*v), w = widths[i + 1]));
+            }
+            out.push_str(&cells.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as TSV (machine-readable; one header line).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join("\t"));
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(label);
+            for v in vals {
+                out.push('\t');
+                out.push_str(&fmt_row(*v));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Compact numeric formatting for table cells.
+pub fn fmt_row(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("Fig X", &["bench", "a", "b"]);
+        t.row("SM", vec![4.25, 1.0]).row("MUM", vec![2.11, 2.0]);
+        let txt = t.render();
+        assert!(txt.contains("Fig X"));
+        assert!(txt.contains("SM"));
+        assert!(txt.contains("4.250"));
+        let tsv = t.to_tsv();
+        assert_eq!(tsv.lines().count(), 3);
+        assert!(tsv.starts_with("bench\ta\tb"));
+    }
+
+    #[test]
+    fn mean_and_geomean_rows() {
+        let mut t = Table::new("t", &["r", "x"]);
+        t.row("a", vec![1.0]).row("b", vec![4.0]);
+        assert!((t.mean_row()[0] - 2.5).abs() < 1e-12);
+        assert!((t.geomean_row()[0] - 2.0).abs() < 1e-12);
+        assert!(Table::new("e", &["r"]).mean_row().is_empty());
+    }
+
+    #[test]
+    fn fmt_row_ranges() {
+        assert_eq!(fmt_row(0.0), "0");
+        assert_eq!(fmt_row(0.4567), "0.457");
+        assert_eq!(fmt_row(47.12), "47.1");
+        assert_eq!(fmt_row(4700.0), "4700");
+    }
+}

@@ -1,0 +1,359 @@
+//! Procedural instruction-trace generation.
+//!
+//! A benchmark's dynamic instruction stream is never stored: the op *kind*
+//! at a PC is a pure function of `(kernel seed, pc)` — all CTAs execute the
+//! same static code, as in SIMT — while per-sub-warp dynamics (branch
+//! outcomes, concrete addresses) are pure functions of
+//! `(kernel seed, cta, sub-warp, pc)`. This gives O(1) memory, exact
+//! reproducibility, and random access (a fused 64-wide warp resolves both
+//! of its 32-wide sub-warps at the same PC and co-executes them).
+
+use crate::isa::{AccessPattern, KernelLaunch, MemSpace, Op};
+
+use super::profiles::BenchProfile;
+use super::rng::{hash_combine, splitmix64};
+
+/// Modelled per-kernel code footprint ceiling (bytes) for L1I behaviour.
+pub const CODE_FOOTPRINT_BYTES: u64 = 16 << 10;
+
+/// Bytes of one modelled instruction (I-cache line pressure).
+const INSN_BYTES: u64 = 8;
+
+/// Address-space region bases (disjoint by construction).
+const PAIR_REGION: u64 = 0x1_0000_0000;
+const PRIVATE_REGION: u64 = 0x2_0000_0000;
+const STREAM_REGION: u64 = 0x4_0000_0000;
+const CODE_REGION: u64 = 0x8_0000_0000;
+/// Span reserved per CTA pair / per CTA inside their regions.
+const REGION_SPAN: u64 = 1 << 22;
+
+/// Static classification of the op at a PC (pattern category included,
+/// since the access type is a property of the code location).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PcClass {
+    Alu,
+    Falu,
+    Sfu,
+    Smem,
+    Branch,
+    Store { cat: AccessCat },
+    Load { cat: AccessCat },
+}
+
+/// Which address-generation category a memory PC belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AccessCat {
+    /// Hot-set strided access in the CTA's private region.
+    PrivateReuse,
+    /// Streaming: unique lines, never reused.
+    Stream,
+    /// Warp-wide broadcast of a line (constant tables etc.).
+    Broadcast,
+    /// CTA-pair shared region (neighbouring-SM sharing, Fig 5).
+    Shared,
+    /// Per-lane random scatter (uncoalescable).
+    Scatter,
+}
+
+/// Trace generator for one kernel launch of one benchmark.
+#[derive(Debug, Clone)]
+pub struct TraceGen {
+    profile: BenchProfile,
+    seed: u64,
+    insns_per_thread: u32,
+    code_bytes: u64,
+}
+
+impl TraceGen {
+    /// Build the generator for `kernel` of `profile`.
+    pub fn new(profile: &BenchProfile, kernel: &KernelLaunch) -> Self {
+        let code_bytes =
+            (kernel.insns_per_thread as u64 * INSN_BYTES).clamp(256, CODE_FOOTPRINT_BYTES);
+        TraceGen {
+            profile: profile.clone(),
+            seed: kernel.seed,
+            insns_per_thread: kernel.insns_per_thread,
+            code_bytes,
+        }
+    }
+
+    /// Per-thread trace length of this kernel.
+    pub fn trace_len(&self) -> u32 {
+        self.insns_per_thread
+    }
+
+    /// Modelled code footprint in bytes (drives L1I pressure).
+    pub fn code_bytes(&self) -> u64 {
+        self.code_bytes
+    }
+
+    /// Instruction-fetch address for a PC (loops inside the code footprint,
+    /// modelling the hot loop bodies real kernels execute).
+    pub fn code_addr(&self, pc: u32) -> u64 {
+        CODE_REGION + (pc as u64 * INSN_BYTES) % self.code_bytes
+    }
+
+    /// Uniform hash in [0,1) from mixed identifiers.
+    fn unit(&self, parts: &[u64]) -> f64 {
+        (hash_combine(parts) >> 40) as f64 / (1u64 << 24) as f64
+    }
+
+    /// Static op class at `pc` (same for every warp: SIMT code).
+    fn classify(&self, pc: u32) -> PcClass {
+        let p = &self.profile;
+        let u = self.unit(&[self.seed, pc as u64, 0xC1A5]);
+        let mut acc = p.frac_ld;
+        if u < acc {
+            return PcClass::Load { cat: self.access_cat(pc) };
+        }
+        acc += p.frac_st;
+        if u < acc {
+            // Stores never broadcast; fold broadcast share into streaming.
+            let cat = match self.access_cat(pc) {
+                AccessCat::Broadcast => AccessCat::Stream,
+                c => c,
+            };
+            return PcClass::Store { cat };
+        }
+        acc += p.frac_smem;
+        if u < acc {
+            return PcClass::Smem;
+        }
+        acc += p.frac_sfu;
+        if u < acc {
+            return PcClass::Sfu;
+        }
+        acc += p.frac_branch;
+        if u < acc {
+            return PcClass::Branch;
+        }
+        // Split remaining ALU work 50/50 int/float.
+        if hash_combine(&[self.seed, pc as u64, 0xF10A]) & 1 == 0 {
+            PcClass::Alu
+        } else {
+            PcClass::Falu
+        }
+    }
+
+    /// Access category for a memory PC (static property of the code line).
+    fn access_cat(&self, pc: u32) -> AccessCat {
+        let p = &self.profile;
+        let u = self.unit(&[self.seed, pc as u64, 0xACCE55]);
+        let mut acc = p.broadcast_frac;
+        if u < acc {
+            return AccessCat::Broadcast;
+        }
+        acc += p.shared_frac;
+        if u < acc {
+            return AccessCat::Shared;
+        }
+        acc += p.scatter_frac;
+        if u < acc {
+            return AccessCat::Scatter;
+        }
+        acc += p.stream_frac;
+        if u < acc {
+            return AccessCat::Stream;
+        }
+        AccessCat::PrivateReuse
+    }
+
+    /// Concrete address pattern for `(cta, sub-warp, pc)` in `cat`.
+    fn pattern(&self, cat: AccessCat, cta: u32, warp: u32, pc: u32) -> (MemSpace, AccessPattern) {
+        let p = &self.profile;
+        let line = 128u64; // address math only; caches re-derive their own
+        let h = hash_combine(&[self.seed, cta as u64, warp as u64, pc as u64, 0xADD2]);
+        match cat {
+            AccessCat::PrivateReuse => {
+                // Strided walk within the CTA's (small) private hot set.
+                let ws = (p.working_set_lines / 16).max(8) as u64;
+                let base = PRIVATE_REGION
+                    + cta as u64 * REGION_SPAN
+                    + (h % ws) * line;
+                (MemSpace::Global, AccessPattern::Strided { base, stride: p.stride })
+            }
+            AccessCat::Stream => {
+                // Unique line per (cta, warp, pc): never reused.
+                let base = STREAM_REGION + (splitmix64(h) % (1 << 30)) * line;
+                (MemSpace::Global, AccessPattern::Strided { base, stride: p.stride })
+            }
+            AccessCat::Broadcast => {
+                // Constant-table line shared warp-wide; half of these live
+                // in the constant space (L1C), half in global.
+                let ws = (p.working_set_lines.max(4) / 4) as u64;
+                let base = PAIR_REGION + (h % ws) * line;
+                let space = if h & 1 == 0 { MemSpace::Const } else { MemSpace::Global };
+                (space, AccessPattern::Broadcast { base })
+            }
+            AccessCat::Shared => {
+                // Kernel-global hot table (`working_set_lines` wide): every
+                // CTA walks the same lines (e.g. StringMatch's pattern
+                // tables). This is THE capacity-crossover driver: a table
+                // that thrashes one baseline L1 but fits the fused
+                // (doubled) L1 reproduces the paper's SM/Fig-15 behaviour,
+                // and duplicated copies in neighbouring SMs' L1s dedup on
+                // fusion (Fig 5).
+                let ws = p.working_set_lines.max(1) as u64;
+                let base = PAIR_REGION + (h % ws) * line;
+                (MemSpace::Global, AccessPattern::Strided { base, stride: p.stride })
+            }
+            AccessCat::Scatter => {
+                (MemSpace::Global, AccessPattern::Scatter { base: PRIVATE_REGION, seed: h })
+            }
+        }
+    }
+
+    /// Resolve the dynamic instruction a 32-wide sub-warp executes at `pc`.
+    pub fn resolve(&self, cta: u32, subwarp: u32, pc: u32) -> Op {
+        match self.classify(pc) {
+            PcClass::Alu => Op::IAlu,
+            PcClass::Falu => Op::FAlu,
+            PcClass::Sfu => Op::Sfu,
+            PcClass::Smem => {
+                let base = (pc as u64 % 64) * 128;
+                Op::Ld { space: MemSpace::Shared, pattern: AccessPattern::Strided { base, stride: 4 } }
+            }
+            PcClass::Branch => {
+                let p = &self.profile;
+                let u = self.unit(&[self.seed, cta as u64, subwarp as u64, pc as u64, 0xD1FF]);
+                Op::Branch { diverges: u < p.div_prob, region_len: p.div_region }
+            }
+            PcClass::Load { cat } => {
+                let (space, pattern) = self.pattern(cat, cta, subwarp, pc);
+                Op::Ld { space, pattern }
+            }
+            PcClass::Store { cat } => {
+                let (space, pattern) = self.pattern(cat, cta, subwarp, pc);
+                Op::St { space, pattern }
+            }
+        }
+    }
+
+    /// Fraction of threads taking the slow path when a branch diverges,
+    /// drawn around the profile's mean.
+    pub fn divergence_split(&self, cta: u32, subwarp: u32, pc: u32) -> f64 {
+        let u = self.unit(&[self.seed, cta as u64, subwarp as u64, pc as u64, 0x5711]);
+        (self.profile.div_taken_frac * (0.5 + u)).clamp(0.05, 0.95)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{bench, kernel_launches};
+
+    fn gen_for(name: &str) -> TraceGen {
+        let p = bench(name).unwrap();
+        let ks = kernel_launches(&p, 7);
+        TraceGen::new(&p, &ks[0])
+    }
+
+    #[test]
+    fn same_pc_same_static_op_across_warps() {
+        let g = gen_for("RAY");
+        for pc in 0..200 {
+            let a = g.resolve(0, 0, pc);
+            let b = g.resolve(5, 3, pc);
+            // Kind must match (SIMT: same code); operands may differ.
+            assert_eq!(std::mem::discriminant(&a), std::mem::discriminant(&b), "pc={pc}");
+        }
+    }
+
+    #[test]
+    fn resolve_is_deterministic() {
+        let g1 = gen_for("BFS");
+        let g2 = gen_for("BFS");
+        for pc in 0..300 {
+            assert_eq!(g1.resolve(3, 1, pc), g2.resolve(3, 1, pc));
+        }
+    }
+
+    #[test]
+    fn mix_roughly_matches_profile() {
+        let p = bench("MUM").unwrap();
+        let g = gen_for("MUM");
+        let n = 20_000u32;
+        let mut loads = 0;
+        let mut branches = 0;
+        for pc in 0..n {
+            match g.resolve(0, 0, pc) {
+                Op::Ld { space, .. } if space != MemSpace::Shared => loads += 1,
+                Op::Branch { .. } => branches += 1,
+                _ => {}
+            }
+        }
+        let lf = loads as f64 / n as f64;
+        let bf = branches as f64 / n as f64;
+        assert!((lf - p.frac_ld).abs() < 0.02, "load frac {lf} vs {}", p.frac_ld);
+        assert!((bf - p.frac_branch).abs() < 0.02, "branch frac {bf} vs {}", p.frac_branch);
+    }
+
+    #[test]
+    fn divergence_rate_roughly_matches() {
+        let p = bench("RAY").unwrap();
+        let g = gen_for("RAY");
+        let mut total = 0u32;
+        let mut div = 0u32;
+        for pc in 0..40_000 {
+            for w in 0..2 {
+                if let Op::Branch { diverges, .. } = g.resolve(1, w, pc) {
+                    total += 1;
+                    div += diverges as u32;
+                }
+            }
+        }
+        let rate = div as f64 / total as f64;
+        assert!((rate - p.div_prob).abs() < 0.03, "div rate {rate} vs {}", p.div_prob);
+    }
+
+    #[test]
+    fn shared_table_is_common_across_ctas() {
+        // All CTAs draw Shared addresses from the same bounded global
+        // table, so different CTAs produce colliding lines (the dedup /
+        // capacity effect fusion exploits).
+        let g = gen_for("SM");
+        let p = bench("SM").unwrap();
+        let span = p.working_set_lines as u64 * 128;
+        let mut lines_cta0 = std::collections::HashSet::new();
+        let mut overlap = false;
+        for pc in 0..4000 {
+            if let Op::Ld { pattern: AccessPattern::Strided { base, .. }, .. } =
+                g.resolve(0, 0, pc)
+            {
+                if (PAIR_REGION..PAIR_REGION + span).contains(&base) {
+                    lines_cta0.insert(base);
+                }
+            }
+        }
+        for pc in 0..4000 {
+            if let Op::Ld { pattern: AccessPattern::Strided { base, .. }, .. } =
+                g.resolve(7, 2, pc)
+            {
+                if lines_cta0.contains(&base) {
+                    overlap = true;
+                    break;
+                }
+            }
+        }
+        assert!(!lines_cta0.is_empty(), "SM draws from the shared table");
+        assert!(overlap, "distinct CTAs hit common table lines");
+    }
+
+    #[test]
+    fn code_addrs_stay_in_footprint() {
+        let g = gen_for("CP");
+        for pc in 0..10_000 {
+            let a = g.code_addr(pc);
+            assert!(a >= CODE_REGION && a < CODE_REGION + g.code_bytes());
+        }
+    }
+
+    #[test]
+    fn divergence_split_bounded() {
+        let g = gen_for("BFS");
+        for pc in 0..1000 {
+            let f = g.divergence_split(0, 0, pc);
+            assert!((0.05..=0.95).contains(&f));
+        }
+    }
+}

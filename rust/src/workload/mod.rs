@@ -1,0 +1,81 @@
+//! Workload models: deterministic RNG, per-benchmark profiles, and the
+//! procedural trace generator that turns a profile into per-warp
+//! instruction streams.
+
+mod gen;
+mod profiles;
+mod rng;
+
+pub use gen::{TraceGen, CODE_FOOTPRINT_BYTES};
+pub use profiles::{all_benchmarks, BenchProfile, FIG12_SET, FIG20_SET, FIG3_SET, FIG5_SET};
+pub use rng::{hash_combine, splitmix64, Pcg32};
+
+use crate::isa::KernelLaunch;
+
+/// Benchmark suite of origin (documentation / reporting only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suite {
+    Ispass,
+    Rodinia,
+    Polybench,
+    Mars,
+}
+
+impl std::fmt::Display for Suite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Suite::Ispass => "ispass",
+            Suite::Rodinia => "rodinia",
+            Suite::Polybench => "polybench",
+            Suite::Mars => "mars",
+        })
+    }
+}
+
+/// Look up a benchmark profile by (case-insensitive) name.
+pub fn bench(name: &str) -> Option<BenchProfile> {
+    all_benchmarks()
+        .into_iter()
+        .find(|b| b.name.eq_ignore_ascii_case(name))
+}
+
+/// The kernel launches of one application run of `profile`, seeded by
+/// `run_seed` (each kernel gets a distinct derived seed).
+pub fn kernel_launches(profile: &BenchProfile, run_seed: u64) -> Vec<KernelLaunch> {
+    (0..profile.num_kernels)
+        .map(|k| KernelLaunch {
+            id: k,
+            num_ctas: profile.num_ctas,
+            cta_threads: profile.cta_threads,
+            insns_per_thread: profile.insns_per_thread,
+            regs_per_thread: profile.regs_per_thread,
+            smem_per_cta: profile.smem_per_cta,
+            seed: hash_combine(&[run_seed, k as u64, 0xA110C]),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_lookup_case_insensitive() {
+        assert!(bench("ray").is_some());
+        assert!(bench("RAY").is_some());
+        assert!(bench("nope").is_none());
+    }
+
+    #[test]
+    fn kernel_launches_are_seed_distinct() {
+        let p = bench("BFS").unwrap();
+        let ks = kernel_launches(&p, 1);
+        assert_eq!(ks.len(), p.num_kernels as usize);
+        let mut seeds: Vec<_> = ks.iter().map(|k| k.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), ks.len());
+        // Different run seed => different kernel seeds.
+        assert_ne!(kernel_launches(&p, 2)[0].seed, ks[0].seed);
+    }
+}

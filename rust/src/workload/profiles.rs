@@ -1,0 +1,540 @@
+//! Per-benchmark workload profiles.
+//!
+//! The paper evaluates CUDA benchmarks from Ispass, Rodinia, Polybench and
+//! Mars on GPGPU-Sim. We do not have the CUDA sources or a PTX frontend, so
+//! each benchmark is modelled as a *profile*: a parameter vector describing
+//! its instruction mix, control divergence, memory locality, coalescing,
+//! inter-CTA sharing and NoC intensity. The parameters are set from the
+//! paper's own characterisation (Figs 3-6, 8, 12-20) so the reconfiguration
+//! controller observes the same metric signatures the authors measured —
+//! see DESIGN.md "Substitutions".
+//!
+//! `scale_up_expected` records the paper's ground truth (which configuration
+//! won in their experiments); it is used as the *label* when training the
+//! scalability predictor and as the oracle in accuracy tests — never as an
+//! input to the simulated controller.
+
+use super::Suite;
+
+/// A complete workload model for one benchmark application.
+#[derive(Debug, Clone)]
+pub struct BenchProfile {
+    /// Benchmark name as the paper's figures label it.
+    pub name: &'static str,
+    /// Originating suite (documentation only).
+    pub suite: Suite,
+
+    // ---- Shape --------------------------------------------------------
+    /// Kernels launched per run (kernels re-trigger the AMOEBA controller).
+    pub num_kernels: u32,
+    /// CTAs per kernel grid.
+    pub num_ctas: u32,
+    /// Threads per CTA.
+    pub cta_threads: u32,
+    /// Dynamic instructions per thread per kernel.
+    pub insns_per_thread: u32,
+    /// Registers per thread (occupancy limiter).
+    pub regs_per_thread: u32,
+    /// Shared memory per CTA in bytes (occupancy limiter).
+    pub smem_per_cta: u32,
+
+    // ---- Instruction mix (fractions of the dynamic stream) -------------
+    /// Global/const/texture loads.
+    pub frac_ld: f64,
+    /// Global stores.
+    pub frac_st: f64,
+    /// Shared-memory accesses.
+    pub frac_smem: f64,
+    /// SFU (transcendental) ops.
+    pub frac_sfu: f64,
+    /// Conditional branches.
+    pub frac_branch: f64,
+
+    // ---- Control divergence --------------------------------------------
+    /// P(a branch diverges) for one 32-thread sub-warp.
+    pub div_prob: f64,
+    /// Instructions per divergent-path region (serialised twice).
+    pub div_region: u16,
+    /// Mean fraction of threads taking the slow path when diverging.
+    pub div_taken_frac: f64,
+
+    // ---- Memory behaviour ------------------------------------------------
+    /// Hot working-set size in cache lines per CTA *pair* (locality knob:
+    /// larger than baseline L1 but smaller than a fused L1 => fusion wins).
+    pub working_set_lines: u32,
+    /// Fraction of loads that stream (unique lines, never reused).
+    pub stream_frac: f64,
+    /// Fraction of accesses that broadcast within the warp (coalesce to 1).
+    pub broadcast_frac: f64,
+    /// Fraction of accesses hitting the CTA-pair shared region (Fig 5's
+    /// neighbouring-SM sharing; dedups in a fused L1).
+    pub shared_frac: f64,
+    /// Fraction of accesses scattering to random lines (uncoalescable).
+    pub scatter_frac: f64,
+    /// Element stride in bytes for strided accesses (4 = fully coalesced).
+    pub stride: u32,
+
+    // ---- Ground truth -----------------------------------------------------
+    /// Paper's observed preference: true = scale-up (fused) wins.
+    pub scale_up_expected: bool,
+}
+
+impl BenchProfile {
+    /// Fraction of plain ALU ops (the remainder of the mix).
+    pub fn frac_alu(&self) -> f64 {
+        1.0 - self.frac_ld - self.frac_st - self.frac_smem - self.frac_sfu - self.frac_branch
+    }
+
+    /// Sanity-check the profile parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        let frac_sum =
+            self.frac_ld + self.frac_st + self.frac_smem + self.frac_sfu + self.frac_branch;
+        if !(0.0..=1.0).contains(&frac_sum) {
+            return Err(format!("{}: instruction mix sums to {frac_sum}", self.name));
+        }
+        let pat = self.broadcast_frac + self.shared_frac + self.scatter_frac + self.stream_frac;
+        if pat > 1.0 + 1e-9 {
+            return Err(format!("{}: access-pattern fractions sum to {pat}", self.name));
+        }
+        for (label, v) in [
+            ("div_prob", self.div_prob),
+            ("div_taken_frac", self.div_taken_frac),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{}: {label}={v} out of range", self.name));
+            }
+        }
+        if self.num_ctas == 0 || self.cta_threads == 0 || self.insns_per_thread == 0 {
+            return Err(format!("{}: degenerate shape", self.name));
+        }
+        Ok(())
+    }
+}
+
+/// Baseline profile all benchmarks derive from (moderate everything).
+fn base(name: &'static str, suite: Suite) -> BenchProfile {
+    BenchProfile {
+        name,
+        suite,
+        num_kernels: 2,
+        num_ctas: 96,
+        cta_threads: 256,
+        insns_per_thread: 300,
+        regs_per_thread: 16,
+        smem_per_cta: 4 << 10,
+        frac_ld: 0.16,
+        frac_st: 0.05,
+        frac_smem: 0.05,
+        frac_sfu: 0.02,
+        frac_branch: 0.08,
+        div_prob: 0.08,
+        div_region: 14,
+        div_taken_frac: 0.4,
+        working_set_lines: 96,
+        stream_frac: 0.25,
+        broadcast_frac: 0.10,
+        shared_frac: 0.05,
+        scatter_frac: 0.05,
+        stride: 4,
+        scale_up_expected: false,
+    }
+}
+
+/// The full benchmark suite: every application named in the paper's
+/// evaluation figures, with parameters chosen to reproduce its measured
+/// characterisation. Comments cite the figure that pins each behaviour.
+pub fn all_benchmarks() -> Vec<BenchProfile> {
+    vec![
+        // ---- Ispass ------------------------------------------------------
+        // CP: compute-dense, well coalesced, tiny working set; its modest
+        // divergence is amplified by the wider fused pipeline => scale-out
+        // (Fig 3a; Fig 20 negative sum).
+        BenchProfile {
+            frac_ld: 0.10,
+            frac_st: 0.02,
+            frac_branch: 0.08,
+            div_prob: 0.08,
+            div_region: 14,
+            working_set_lines: 24,
+            stream_frac: 0.10,
+            scatter_frac: 0.0,
+            broadcast_frac: 0.30,
+            insns_per_thread: 400,
+            ..base("CP", Suite::Ispass)
+        },
+        // MUM: DNA alignment; suffix-tree hot nodes thrash one L1 but fit
+        // the fused L1; NoC-hungry => strong scale-up (Fig 12: 2.11x).
+        BenchProfile {
+            frac_ld: 0.40,
+            frac_st: 0.03,
+            frac_branch: 0.08,
+            div_prob: 0.08,
+            div_region: 8,
+            working_set_lines: 235,
+            stream_frac: 0.02,
+            scatter_frac: 0.0,
+            shared_frac: 0.55,
+            broadcast_frac: 0.08,
+            scale_up_expected: true,
+            regs_per_thread: 32,
+            ..base("MUM", Suite::Ispass)
+        },
+        // RAY: ray tracing; BVH hot set => scale-up trend (Fig 3a/8) but
+        // heavy control divergence => the dynamic split/fuse showcase
+        // (Fig 19): static fuse is mediocre, regrouping shines.
+        BenchProfile {
+            frac_ld: 0.34,
+            frac_sfu: 0.06,
+            frac_branch: 0.12,
+            div_prob: 0.16,
+            div_region: 14,
+            div_taken_frac: 0.35,
+            working_set_lines: 230,
+            stream_frac: 0.02,
+            shared_frac: 0.52,
+            broadcast_frac: 0.10,
+            scatter_frac: 0.02,
+            scale_up_expected: true,
+            regs_per_thread: 32,
+            ..base("RAY", Suite::Ispass)
+        },
+        // LIB: Monte-Carlo libor; register-fat, path-divergent, small hot
+        // set => scale-out (Fig 8).
+        BenchProfile {
+            frac_ld: 0.12,
+            frac_sfu: 0.06,
+            frac_branch: 0.08,
+            div_prob: 0.08,
+            div_region: 14,
+            regs_per_thread: 32,
+            working_set_lines: 40,
+            stream_frac: 0.30,
+            broadcast_frac: 0.10,
+            shared_frac: 0.0,
+            scatter_frac: 0.02,
+            ..base("LIB", Suite::Ispass)
+        },
+        // LPS: Laplace 3D; stencil with moderate traffic and divergence at
+        // halo boundaries. Mesh-NoC relief roughly offsets the divergence
+        // cost (Fig 3a ~flat); the perfect NoC flips it to scale-out
+        // (Fig 3b).
+        BenchProfile {
+            frac_ld: 0.20,
+            frac_st: 0.06,
+            frac_smem: 0.12,
+            frac_branch: 0.08,
+            div_prob: 0.07,
+            working_set_lines: 90,
+            stream_frac: 0.30,
+            shared_frac: 0.12,
+            div_region: 12,
+            ..base("LPS", Suite::Ispass)
+        },
+        // AES: crypto; T-table lookups (const cache) + streaming state,
+        // byte-dependent branches. Same mesh-vs-perfect story as LPS.
+        BenchProfile {
+            frac_ld: 0.22,
+            frac_st: 0.06,
+            frac_branch: 0.06,
+            div_prob: 0.06,
+            working_set_lines: 64,
+            stream_frac: 0.32,
+            broadcast_frac: 0.22,
+            scatter_frac: 0.04,
+            div_region: 12,
+            ..base("AES", Suite::Ispass)
+        },
+        // STO: store-heavy hashing; streaming writes, mild divergence =>
+        // slight scale-out.
+        BenchProfile {
+            frac_ld: 0.08,
+            frac_st: 0.16,
+            frac_branch: 0.06,
+            div_prob: 0.05,
+            working_set_lines: 32,
+            stream_frac: 0.45,
+            div_region: 12,
+            ..base("STO", Suite::Ispass)
+        },
+        // NN: neural net inference; weight tables shared by every CTA fit
+        // only the fused L1 => scale-up.
+        BenchProfile {
+            frac_ld: 0.36,
+            frac_sfu: 0.05,
+            frac_branch: 0.04,
+            div_prob: 0.01,
+            broadcast_frac: 0.10,
+            shared_frac: 0.55,
+            working_set_lines: 228,
+            stream_frac: 0.02,
+            scale_up_expected: true,
+            regs_per_thread: 32,
+            scatter_frac: 0.0,
+            ..base("NN", Suite::Ispass)
+        },
+        // ---- Rodinia ------------------------------------------------------
+        // BFS: graph traversal; hot frontier + visited bitmaps fit the
+        // fused L1, high MSHR merging; divergent => splitting helps too
+        // (Fig 20 positive sum).
+        BenchProfile {
+            frac_ld: 0.36,
+            frac_st: 0.05,
+            frac_branch: 0.12,
+            div_prob: 0.15,
+            div_region: 8,
+            div_taken_frac: 0.25,
+            working_set_lines: 235,
+            stream_frac: 0.02,
+            scatter_frac: 0.0,
+            shared_frac: 0.55,
+            broadcast_frac: 0.06,
+            num_kernels: 2,
+            scale_up_expected: true,
+            regs_per_thread: 32,
+            ..base("BFS", Suite::Rodinia)
+        },
+        // HW (heartwall): template tables shared across neighbouring SMs
+        // (~10% sharing in Fig 5) => scale-up.
+        BenchProfile {
+            frac_ld: 0.36,
+            frac_smem: 0.08,
+            frac_branch: 0.05,
+            div_prob: 0.03,
+            shared_frac: 0.52,
+            broadcast_frac: 0.08,
+            working_set_lines: 222,
+            stream_frac: 0.03,
+            scale_up_expected: true,
+            regs_per_thread: 32,
+            scatter_frac: 0.01,
+            ..base("HW", Suite::Rodinia)
+        },
+        // SC (streamcluster): distance kernel with branchy center updates,
+        // small hot set => scale-out (Fig 3a).
+        BenchProfile {
+            frac_ld: 0.14,
+            frac_st: 0.03,
+            frac_branch: 0.09,
+            div_prob: 0.10,
+            div_region: 14,
+            working_set_lines: 28,
+            stream_frac: 0.30,
+            broadcast_frac: 0.10,
+            shared_frac: 0.0,
+            ..base("SC", Suite::Rodinia)
+        },
+        // KM (kmeans): bandwidth-streaming both ways, tiny divergence =>
+        // insensitive to scaling (Fig 12).
+        BenchProfile {
+            frac_ld: 0.18,
+            frac_st: 0.04,
+            frac_branch: 0.04,
+            working_set_lines: 48,
+            stream_frac: 0.50,
+            broadcast_frac: 0.12,
+            shared_frac: 0.0,
+            scatter_frac: 0.0,
+            div_prob: 0.01,
+            ..base("KM", Suite::Rodinia)
+        },
+        // ---- Polybench ----------------------------------------------------
+        // 3MM: tiled matrix chains; smem-blocked with per-tile edge
+        // branches => prefers scale-out by ~10% (Fig 12).
+        BenchProfile {
+            frac_ld: 0.16,
+            frac_smem: 0.20,
+            frac_branch: 0.07,
+            div_prob: 0.06,
+            div_region: 14,
+            working_set_lines: 56,
+            stream_frac: 0.20,
+            broadcast_frac: 0.18,
+            num_kernels: 3,
+            ..base("3MM", Suite::Polybench)
+        },
+        // ATAX: matrix-vector; broadcast-heavy with short divergent tails
+        // => scale-out (Fig 12).
+        BenchProfile {
+            frac_ld: 0.20,
+            frac_st: 0.03,
+            frac_branch: 0.07,
+            div_prob: 0.06,
+            div_region: 14,
+            broadcast_frac: 0.30,
+            working_set_lines: 44,
+            stream_frac: 0.25,
+            num_kernels: 2,
+            ..base("ATAX", Suite::Polybench)
+        },
+        // CORR / COVR: correlation/covariance; the symmetric-matrix hot
+        // band fits only the fused L1 and their reply traffic saturates
+        // the MC injection queues (Fig 17: AMOEBA removes the ICNT
+        // stalls) => scale-up.
+        BenchProfile {
+            frac_ld: 0.38,
+            frac_st: 0.05,
+            frac_branch: 0.04,
+            div_prob: 0.02,
+            working_set_lines: 238,
+            stream_frac: 0.04,
+            shared_frac: 0.52,
+            broadcast_frac: 0.08,
+            scatter_frac: 0.02,
+            scale_up_expected: true,
+            regs_per_thread: 32,
+            ..base("CORR", Suite::Polybench)
+        },
+        BenchProfile {
+            frac_ld: 0.38,
+            frac_st: 0.05,
+            frac_branch: 0.04,
+            div_prob: 0.02,
+            working_set_lines: 230,
+            stream_frac: 0.03,
+            shared_frac: 0.55,
+            broadcast_frac: 0.08,
+            scatter_frac: 0.02,
+            scale_up_expected: true,
+            regs_per_thread: 32,
+            ..base("COVR", Suite::Polybench)
+        },
+        // FWT: butterfly transform; latency-tolerant smem shuffles,
+        // insensitive to scaling (Fig 12).
+        BenchProfile {
+            frac_ld: 0.12,
+            frac_st: 0.08,
+            frac_smem: 0.16,
+            frac_branch: 0.04,
+            working_set_lines: 64,
+            stream_frac: 0.25,
+            div_prob: 0.015,
+            ..base("FWT", Suite::Polybench)
+        },
+        // ---- Mars -----------------------------------------------------------
+        // SM (StringMatch): the headline (Fig 12: 4.25x; Fig 15: L1D miss
+        // -70%). The keyword/pattern tables (every CTA walks them) thrash
+        // one 16KB L1 but sit entirely inside the fused 32KB L1.
+        BenchProfile {
+            frac_ld: 0.42,
+            frac_st: 0.03,
+            frac_branch: 0.08,
+            div_prob: 0.04,
+            div_region: 6,
+            working_set_lines: 244,
+            stream_frac: 0.01,
+            shared_frac: 0.60,
+            broadcast_frac: 0.12,
+            scatter_frac: 0.0,
+            num_kernels: 2,
+            scale_up_expected: true,
+            regs_per_thread: 32,
+            ..base("SM", Suite::Mars)
+        },
+        // WP (WordCount): divergent string scanning over streamed text;
+        // fusion backfires (Fig 12 shows degradation under static fuse).
+        BenchProfile {
+            frac_ld: 0.20,
+            frac_st: 0.08,
+            frac_branch: 0.14,
+            div_prob: 0.12,
+            div_region: 14,
+            working_set_lines: 70,
+            stream_frac: 0.40,
+            scatter_frac: 0.06,
+            shared_frac: 0.02,
+            num_kernels: 3,
+            ..base("WP", Suite::Mars)
+        },
+        // PR (PageRank-style): scattered neighbour reads with tiny reuse
+        // and ranking branches => scale-out (Fig 20 negative sum).
+        BenchProfile {
+            frac_ld: 0.22,
+            frac_branch: 0.10,
+            div_prob: 0.10,
+            div_region: 12,
+            working_set_lines: 36,
+            stream_frac: 0.30,
+            scatter_frac: 0.15,
+            shared_frac: 0.02,
+            broadcast_frac: 0.06,
+            ..base("PR", Suite::Mars)
+        },
+        // 3DCV (3D stencil/convolution): filter planes shared by all CTAs
+        // (Fig 5 neighbour sharing) => scale-up.
+        BenchProfile {
+            frac_ld: 0.38,
+            frac_smem: 0.08,
+            frac_branch: 0.04,
+            div_prob: 0.02,
+            shared_frac: 0.55,
+            working_set_lines: 232,
+            stream_frac: 0.02,
+            scale_up_expected: true,
+            regs_per_thread: 32,
+            broadcast_frac: 0.06,
+            scatter_frac: 0.0,
+            ..base("3DCV", Suite::Polybench)
+        },
+    ]
+}
+
+/// Benchmarks plotted in the paper's Fig 12/13/21 main evaluation.
+pub const FIG12_SET: [&str; 12] = [
+    "BFS", "MUM", "RAY", "SM", "LIB", "WP", "FWT", "KM", "3MM", "ATAX", "CORR", "COVR",
+];
+
+/// Benchmarks of the Fig 3 scaling characterisation.
+pub const FIG3_SET: [&str; 8] = ["CP", "SC", "MUM", "RAY", "LPS", "AES", "LIB", "STO"];
+
+/// Benchmarks of the Fig 5 L1-sharing characterisation.
+pub const FIG5_SET: [&str; 6] = ["HW", "3DCV", "SM", "RAY", "LPS", "KM"];
+
+/// Benchmarks of the Fig 20 predictor-weight analysis.
+pub const FIG20_SET: [&str; 4] = ["BFS", "RAY", "CP", "PR"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_profiles_validate() {
+        let benches = all_benchmarks();
+        assert!(benches.len() >= 20, "suite has {} benchmarks", benches.len());
+        for b in &benches {
+            b.validate().unwrap_or_else(|e| panic!("{e}"));
+            assert!(b.frac_alu() >= 0.0, "{}: negative ALU fraction", b.name);
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let benches = all_benchmarks();
+        let mut names: Vec<_> = benches.iter().map(|b| b.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), benches.len());
+    }
+
+    #[test]
+    fn figure_sets_resolve() {
+        let benches = all_benchmarks();
+        let has = |n: &str| benches.iter().any(|b| b.name == n);
+        for n in FIG12_SET.iter().chain(&FIG3_SET).chain(&FIG5_SET).chain(&FIG20_SET) {
+            assert!(has(n), "figure set references unknown benchmark {n}");
+        }
+    }
+
+    #[test]
+    fn headline_benchmarks_have_expected_labels() {
+        let benches = all_benchmarks();
+        let find = |n: &str| benches.iter().find(|b| b.name == n).unwrap();
+        // Paper Fig 3/12 ground truth.
+        assert!(find("SM").scale_up_expected);
+        assert!(find("MUM").scale_up_expected);
+        assert!(find("RAY").scale_up_expected);
+        assert!(!find("CP").scale_up_expected);
+        assert!(!find("SC").scale_up_expected);
+        assert!(!find("3MM").scale_up_expected);
+        assert!(!find("ATAX").scale_up_expected);
+    }
+}

@@ -1,0 +1,210 @@
+//! Property-based tests over the coordinator's core invariants
+//! (randomised with the in-repo PCG RNG; proptest is not available in the
+//! offline vendored registry, so shrinking is replaced by printing the
+//! failing seed — rerun with that seed to reproduce).
+
+use amoeba_gpu::config::SystemConfig;
+use amoeba_gpu::isa::{AccessPattern, ActiveMask};
+use amoeba_gpu::sim::mem::{coalesce, coalesce_fused, Access, Cache, MemoryController};
+use amoeba_gpu::sim::noc::{Noc, Packet, Payload, Subnet};
+use amoeba_gpu::workload::Pcg32;
+
+/// Randomised property: coalescing never produces more transactions than
+/// active lanes, never zero for a non-empty mask, and is deterministic.
+#[test]
+fn prop_coalesce_bounds() {
+    let mut rng = Pcg32::new(0xC0A1, 1);
+    for case in 0..500 {
+        let width = [8usize, 16, 32][rng.next_bounded(3) as usize];
+        let mask = ActiveMask(rng.next_u64() & ActiveMask::full(width).0);
+        let pattern = match rng.next_bounded(3) {
+            0 => AccessPattern::Strided {
+                base: rng.next_u64() % (1 << 30),
+                stride: [4u32, 8, 64, 256][rng.next_bounded(4) as usize],
+            },
+            1 => AccessPattern::Broadcast { base: rng.next_u64() % (1 << 30) },
+            _ => AccessPattern::Scatter { base: 0, seed: rng.next_u64() },
+        };
+        let r = coalesce(&pattern, mask, width, 128);
+        let active = mask.lanes().take_while(|&l| l < width).count();
+        assert!(r.transactions() <= active.max(1), "case {case}: txns > lanes");
+        assert_eq!(r.requests as usize, active, "case {case}");
+        if active > 0 {
+            assert!(r.transactions() >= 1, "case {case}");
+        }
+        let r2 = coalesce(&pattern, mask, width, 128);
+        assert_eq!(r.lines, r2.lines, "case {case}: nondeterministic");
+        // Every line is line-aligned.
+        assert!(r.lines.iter().all(|l| l % 128 == 0), "case {case}");
+    }
+}
+
+/// Fused coalescing never produces more transactions than running the two
+/// sub-warps through separate coalescers (the paper's Fig 4 direction).
+#[test]
+fn prop_fused_coalescing_never_worse() {
+    let mut rng = Pcg32::new(0xF00D, 2);
+    for case in 0..500 {
+        let mk = |rng: &mut Pcg32| match rng.next_bounded(3) {
+            0 => AccessPattern::Strided {
+                base: rng.next_u64() % (1 << 24),
+                stride: [4u32, 16, 128][rng.next_bounded(3) as usize],
+            },
+            1 => AccessPattern::Broadcast { base: rng.next_u64() % (1 << 24) },
+            _ => AccessPattern::Scatter { base: 0, seed: rng.next_u64() },
+        };
+        let (a, b) = (mk(&mut rng), mk(&mut rng));
+        let fused = coalesce_fused(&a, &b, ActiveMask::full(64), 128);
+        let sep =
+            coalesce(&a, ActiveMask::full(32), 32, 128).transactions()
+                + coalesce(&b, ActiveMask::full(32), 32, 128).transactions();
+        assert!(
+            fused.transactions() <= sep,
+            "case {case}: fused {} > separate {sep}",
+            fused.transactions()
+        );
+    }
+}
+
+/// Cache invariant: every MissNew is eventually balanced by exactly one
+/// fill, MSHR occupancy never exceeds capacity, and a filled line hits.
+#[test]
+fn prop_cache_mshr_balance() {
+    let mut rng = Pcg32::new(0xCACE, 3);
+    for case in 0..100 {
+        let mshrs = 1 + rng.next_bounded(16) as usize;
+        let mut cache = Cache::new(4096, 2, 128, 1, mshrs);
+        let mut outstanding: Vec<u64> = Vec::new();
+        for _ in 0..400 {
+            if rng.chance(0.6) || outstanding.is_empty() {
+                let addr = (rng.next_u64() % (1 << 16)) & !127;
+                match cache.access(addr) {
+                    Access::MissNew => outstanding.push(addr),
+                    Access::MshrFull => {
+                        assert_eq!(
+                            cache.mshrs_in_flight(),
+                            mshrs,
+                            "case {case}: MshrFull below capacity"
+                        );
+                    }
+                    Access::Hit | Access::MissMerged => {}
+                }
+            } else {
+                let i = rng.next_bounded(outstanding.len() as u32) as usize;
+                let addr = outstanding.swap_remove(i);
+                let released = cache.fill(addr);
+                assert!(released >= 1, "case {case}: fill released nothing");
+                assert_eq!(cache.access(addr), Access::Hit, "case {case}: fill not resident");
+            }
+            assert!(cache.mshrs_in_flight() <= mshrs, "case {case}: MSHR overflow");
+        }
+        // Drain.
+        for addr in outstanding.drain(..) {
+            cache.fill(addr);
+        }
+        assert_eq!(cache.mshrs_in_flight(), 0, "case {case}: leaked MSHRs");
+    }
+}
+
+/// NoC conservation: every injected packet is ejected exactly once at its
+/// destination, regardless of load pattern.
+#[test]
+fn prop_noc_conservation() {
+    let mut rng = Pcg32::new(0x0C0C, 4);
+    for case in 0..30 {
+        let cfg = SystemConfig::tiny();
+        let nodes = 4 + rng.next_bounded(12) as usize;
+        let mut noc = Noc::new(&cfg, nodes);
+        let mut sent = vec![0u32; nodes];
+        let mut got = vec![0u32; nodes];
+        let mut t = 0u64;
+        let total_offers = 200 + rng.next_bounded(300);
+        let mut offered = 0;
+        while t < 20_000 {
+            if offered < total_offers {
+                let src = rng.next_bounded(nodes as u32) as usize;
+                let dst = rng.next_bounded(nodes as u32) as usize;
+                let pkt = Packet {
+                    src,
+                    dst,
+                    flits: 1 + rng.next_bounded(5),
+                    born: t,
+                    payload: Payload::MemRequest { line: 0, requester: 0, is_write: false },
+                };
+                if noc.inject(Subnet::Request, pkt) {
+                    sent[dst] += 1;
+                    offered += 1;
+                }
+            }
+            noc.tick(t);
+            for n in 0..nodes {
+                while noc.eject(Subnet::Request, n).is_some() {
+                    got[n] += 1;
+                }
+            }
+            if offered >= total_offers && !noc.busy() {
+                break;
+            }
+            t += 1;
+        }
+        assert_eq!(sent, got, "case {case}: packet conservation violated");
+        assert!(!noc.busy(), "case {case}: packets stranded");
+    }
+}
+
+/// FR-FCFS conservation: every accepted DRAM request is answered once.
+#[test]
+fn prop_dram_conservation() {
+    let mut rng = Pcg32::new(0xD3A3, 5);
+    for case in 0..50 {
+        let mut mc = MemoryController::new(
+            1 + rng.next_bounded(8) as usize,
+            2048,
+            40,
+            110,
+            4 + rng.next_bounded(28) as usize,
+        );
+        let mut accepted = 0u32;
+        let mut answered = 0u32;
+        let mut tags = std::collections::HashSet::new();
+        let mut t = 0u64;
+        while t < 60_000 {
+            if rng.chance(0.4) && accepted < 300 {
+                let req = amoeba_gpu::sim::mem::DramRequest {
+                    addr: (rng.next_u64() % (1 << 20)) & !127,
+                    is_write: rng.chance(0.3),
+                    tag: accepted as u64,
+                };
+                if mc.push(req) {
+                    accepted += 1;
+                }
+            }
+            mc.tick(t);
+            while let Some(r) = mc.pop_reply() {
+                answered += 1;
+                assert!(tags.insert(r.tag), "case {case}: duplicate reply tag {}", r.tag);
+            }
+            if accepted >= 300 && !mc.busy() {
+                break;
+            }
+            t += 1;
+        }
+        assert_eq!(accepted, answered, "case {case}: dram lost/duplicated requests");
+    }
+}
+
+/// Active-mask algebra invariants under random masks.
+#[test]
+fn prop_mask_algebra() {
+    let mut rng = Pcg32::new(0x3A5C, 6);
+    for _ in 0..1000 {
+        let m = ActiveMask(rng.next_u64());
+        let full = ActiveMask::full(64);
+        assert_eq!((m & full).0, m.0);
+        assert_eq!((m | ActiveMask::empty()).0, m.0);
+        assert_eq!(m.low_half(64).count() + m.high_half(64).count(), m.count());
+        let m32 = ActiveMask(m.0 & ActiveMask::full(32).0);
+        assert_eq!(m32.low_half(32).count() + m32.high_half(32).count(), m32.count());
+        assert_eq!(m.lanes().count() as u32, m.count());
+    }
+}

@@ -1,0 +1,182 @@
+//! Runtime integration: the PJRT-compiled HLO predictor must be
+//! numerically equivalent to the native rust logistic, and the compiled
+//! train step must learn. Skips (with a loud message) when `artifacts/`
+//! has not been built — run `make artifacts` first.
+
+use amoeba_gpu::amoeba::{
+    sigmoid, Coefficients, MetricsSample, NativePredictor, ScalePredictor, NUM_FEATURES,
+};
+use amoeba_gpu::runtime::{HloPredictor, HloTrainer, Runtime};
+use amoeba_gpu::workload::Pcg32;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::new() {
+        Ok(rt) => {
+            if rt.load("predictor_infer").is_ok() {
+                Some(rt)
+            } else {
+                eprintln!("SKIP: artifacts/ missing (run `make artifacts`)");
+                None
+            }
+        }
+        Err(e) => {
+            eprintln!("SKIP: PJRT unavailable: {e}");
+            None
+        }
+    }
+}
+
+/// HLO inference == native logistic across random coefficient/feature
+/// draws (the L1 Pallas kernel's numerics survive AOT + PJRT round trip).
+#[test]
+fn hlo_matches_native_predictor() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg32::new(0x9A71, 1);
+    for case in 0..25 {
+        let mut weights = [0f32; NUM_FEATURES];
+        for w in &mut weights {
+            *w = (rng.next_f64() * 8.0 - 4.0) as f32;
+        }
+        let intercept = (rng.next_f64() * 4.0 - 2.0) as f32;
+        let hlo = HloPredictor::new(&rt, weights, intercept).unwrap();
+        let mut weights64 = [0f64; NUM_FEATURES];
+        for (o, w) in weights64.iter_mut().zip(weights) {
+            *o = w as f64;
+        }
+        let mut native = NativePredictor::with_coeffs(Coefficients {
+            weights: weights64,
+            intercept: intercept as f64,
+        });
+        for _ in 0..8 {
+            let mut f = [0f64; NUM_FEATURES];
+            for v in &mut f {
+                // f32-representable values so both paths see identical inputs.
+                *v = (rng.next_f64() as f32) as f64;
+            }
+            let s = MetricsSample { features: f };
+            let got = hlo.infer(&s.as_f32()).unwrap();
+            let want = native.probability(&s);
+            assert!(
+                (got - want).abs() < 1e-5,
+                "case {case}: hlo {got} vs native {want}"
+            );
+            assert_eq!(
+                got > 0.5,
+                native.scale_up(&s),
+                "case {case}: decision divergence"
+            );
+        }
+    }
+}
+
+/// The compiled train step fits a separable rule and the learned model
+/// agrees with a from-scratch rust SGD on the same data.
+#[test]
+fn hlo_training_matches_rust_sgd() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut trainer = HloTrainer::new(&rt).unwrap();
+    let n = trainer.batch;
+    let mut rng = Pcg32::new(0x7EA1, 2);
+    let mut x = vec![0f32; n * NUM_FEATURES];
+    let mut y = vec![0f32; n];
+    let mut true_w = [0f32; NUM_FEATURES];
+    for w in &mut true_w {
+        *w = (rng.next_f64() * 2.0 - 1.0) as f32;
+    }
+    for i in 0..n {
+        let mut dot = 0f32;
+        for j in 0..NUM_FEATURES {
+            let v = (rng.next_f64() * 2.0 - 1.0) as f32;
+            x[i * NUM_FEATURES + j] = v;
+            dot += v * true_w[j];
+        }
+        y[i] = (dot > 0.0) as u8 as f32;
+    }
+
+    // Rust-side reference SGD (same math as ref.py).
+    let mut rw = vec![0f64; NUM_FEATURES];
+    let mut rb = 0f64;
+    let lr = 0.9f64;
+    for _ in 0..300 {
+        let mut gw = vec![0f64; NUM_FEATURES];
+        let mut gb = 0f64;
+        for i in 0..n {
+            let mut z = rb;
+            for j in 0..NUM_FEATURES {
+                z += rw[j] * x[i * NUM_FEATURES + j] as f64;
+            }
+            let dz = (sigmoid(z) - y[i] as f64) / n as f64;
+            for j in 0..NUM_FEATURES {
+                gw[j] += dz * x[i * NUM_FEATURES + j] as f64;
+            }
+            gb += dz;
+        }
+        for j in 0..NUM_FEATURES {
+            rw[j] -= lr * gw[j];
+        }
+        rb -= lr * gb;
+    }
+
+    let mut loss = f32::MAX;
+    for _ in 0..300 {
+        loss = trainer.step(&x, &y, lr as f32).unwrap();
+    }
+    assert!(loss < 0.35, "HLO training failed to fit: loss {loss}");
+    // Weight agreement (same trajectory in f32 vs f64; allow slack).
+    for j in 0..NUM_FEATURES {
+        assert!(
+            (trainer.weights[j] as f64 - rw[j]).abs() < 0.15,
+            "weight {j}: hlo {} vs rust {}",
+            trainer.weights[j],
+            rw[j]
+        );
+    }
+    // Both models classify the training set nearly identically.
+    let mut agree = 0;
+    for i in 0..n {
+        let mut zh = trainer.intercept as f64;
+        let mut zr = rb;
+        for j in 0..NUM_FEATURES {
+            zh += trainer.weights[j] as f64 * x[i * NUM_FEATURES + j] as f64;
+            zr += rw[j] * x[i * NUM_FEATURES + j] as f64;
+        }
+        agree += ((zh > 0.0) == (zr > 0.0)) as usize;
+    }
+    assert!(agree as f64 / n as f64 > 0.97, "agreement {agree}/{n}");
+}
+
+/// The batch artifact evaluates many rows at once and matches row-by-row
+/// single inference.
+#[test]
+fn hlo_batch_matches_single() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("predictor_batch").unwrap();
+    let mut rng = Pcg32::new(0xBA7C, 3);
+    let batch = 64usize;
+    let mut x = vec![0f32; batch * NUM_FEATURES];
+    for v in &mut x {
+        *v = rng.next_f64() as f32;
+    }
+    let mut weights = [0.3f32; NUM_FEATURES];
+    weights[2] = -1.2;
+    let b = -0.4f32;
+    let xl = xla::Literal::vec1(&x[..])
+        .reshape(&[batch as i64, NUM_FEATURES as i64])
+        .unwrap();
+    let wl = xla::Literal::vec1(&weights[..]);
+    let bl = xla::Literal::scalar(b);
+    let out = exe.run(&[xl, wl, bl]).unwrap();
+    let probs: Vec<f32> = out[0].to_vec().unwrap();
+    assert_eq!(probs.len(), batch);
+    let single = HloPredictor::new(&rt, weights, b).unwrap();
+    for i in (0..batch).step_by(7) {
+        let mut row = [0f32; NUM_FEATURES];
+        row.copy_from_slice(&x[i * NUM_FEATURES..(i + 1) * NUM_FEATURES]);
+        let p = single.infer(&row).unwrap();
+        assert!(
+            (p - probs[i] as f64).abs() < 1e-5,
+            "row {i}: batch {} vs single {p}",
+            probs[i]
+        );
+    }
+}
