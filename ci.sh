@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI entry point: build, test, smoke-run the figure harness, and record
+# the sweep-executor speedup in BENCH_sweep.json (the perf trajectory is
+# tracked from PR 1 onward — keep the file committed after each run).
+#
+# Usage: ./ci.sh            # full pipeline
+#        AMOEBA_JOBS=8 ./ci.sh
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== build (release) =="
+cargo build --release
+
+echo "== build benches + examples =="
+cargo build --release --benches --examples
+
+echo "== tests =="
+cargo test -q
+
+echo "== figures smoke (quick mode, parallel + memoized) =="
+./target/release/figures --all --quick > /dev/null
+
+echo "== sweep speedup benchmark (writes BENCH_sweep.json) =="
+cargo bench --bench bench_sweep
+
+echo "== BENCH_sweep.json =="
+cat BENCH_sweep.json
+
+echo "CI OK"

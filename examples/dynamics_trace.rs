@@ -9,9 +9,10 @@ use amoeba_gpu::sim::core::ClusterMode;
 use amoeba_gpu::sim::gpu::run_benchmark;
 use amoeba_gpu::workload::bench;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> amoeba_gpu::errors::Result<()> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "RAY".to_string());
-    let profile = bench(&name).ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}'"))?;
+    let profile =
+        bench(&name).ok_or_else(|| amoeba_gpu::errors::err(format!("unknown benchmark '{name}'")))?;
     let cfg = SystemConfig::gtx480();
     println!("tracing {name} under warp_regrouping ({} clusters)...", cfg.num_sms / 2);
     let r = run_benchmark(&cfg, &profile, Scheme::WarpRegroup);

@@ -1,25 +1,33 @@
 //! Full evaluation: the Fig 12 headline experiment — every benchmark of
 //! the paper's main suite under every scheme, with speedups over the
-//! scale-out baseline and the geometric mean.
+//! scale-out baseline and the geometric mean. The whole grid fans out
+//! across cores through the sweep executor (`AMOEBA_JOBS` sets the
+//! worker count).
 //!
 //! Run: `cargo run --release --example full_eval [--quick]`
 
 use amoeba_gpu::config::{Scheme, SystemConfig};
-use amoeba_gpu::sim::gpu::run_benchmark_seeded;
+use amoeba_gpu::harness::{SimJob, SweepExec};
 use amoeba_gpu::stats::Table;
 use amoeba_gpu::workload::{bench, FIG12_SET};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> amoeba_gpu::errors::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let mut cfg = SystemConfig::gtx480();
     if quick {
         cfg.num_sms = 8;
         cfg.num_mcs = 4;
     }
-    let mut t = Table::new(
-        "Fig 12 — IPC speedup over scale-out baseline",
-        &["bench", "scale_up", "static_fuse", "direct_split", "warp_regrouping", "dws"],
-    );
+    let schemes = [
+        Scheme::Baseline,
+        Scheme::ScaleUp,
+        Scheme::StaticFuse,
+        Scheme::DirectSplit,
+        Scheme::WarpRegroup,
+        Scheme::Dws,
+    ];
+
+    let mut jobs = Vec::new();
     for name in FIG12_SET {
         let mut p = bench(name).unwrap();
         if quick {
@@ -27,19 +35,25 @@ fn main() -> anyhow::Result<()> {
             p.insns_per_thread = p.insns_per_thread.min(100);
             p.num_kernels = 1;
         }
-        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 0xF16).ipc().max(1e-9);
-        let row: Vec<f64> = [
-            Scheme::ScaleUp,
-            Scheme::StaticFuse,
-            Scheme::DirectSplit,
-            Scheme::WarpRegroup,
-            Scheme::Dws,
-        ]
-        .iter()
-        .map(|s| run_benchmark_seeded(&cfg, &p, *s, 0xF16).ipc() / base)
-        .collect();
+        for s in schemes {
+            jobs.push(SimJob::new(cfg.clone(), p.clone(), s, 0xF16));
+        }
+    }
+
+    let exec = SweepExec::from_env();
+    eprintln!("[full_eval] {} simulations on {} threads...", jobs.len(), exec.threads());
+    let reports = exec.run_batch(jobs);
+
+    let mut t = Table::new(
+        "Fig 12 — IPC speedup over scale-out baseline",
+        &["bench", "scale_up", "static_fuse", "direct_split", "warp_regrouping", "dws"],
+    );
+    for (bi, name) in FIG12_SET.iter().enumerate() {
+        let r = &reports[bi * schemes.len()..(bi + 1) * schemes.len()];
+        let base = r[0].ipc().max(1e-9);
+        let row: Vec<f64> = r[1..].iter().map(|rep| rep.ipc() / base).collect();
         eprintln!("{name:6}: {row:.2?}");
-        t.row(name, row);
+        t.row(*name, row);
     }
     let g = t.geomean_row();
     t.row("GEOMEAN", g);

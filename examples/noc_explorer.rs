@@ -8,7 +8,7 @@ use amoeba_gpu::sim::gpu::run_benchmark;
 use amoeba_gpu::stats::Table;
 use amoeba_gpu::workload::bench;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> amoeba_gpu::errors::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let names: Vec<String> = if args.is_empty() {
         ["CP", "RAY", "MUM", "SC"].iter().map(|s| s.to_string()).collect()
@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
         );
         for name in &names {
             let profile = bench(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}'"))?;
+                .ok_or_else(|| amoeba_gpu::errors::err(format!("unknown benchmark '{name}'")))?;
             let mut row = Vec::new();
             let mut base = None;
             for n in sm_counts {

@@ -4,13 +4,14 @@
 //! Run: `cargo run --release --example quickstart [BENCH]`
 
 use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::errors::{err, Result};
 use amoeba_gpu::sim::gpu::run_benchmark;
 use amoeba_gpu::workload::bench;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "SM".to_string());
     let profile =
-        bench(&name).ok_or_else(|| anyhow::anyhow!("unknown benchmark '{name}' (try: amoeba list)"))?;
+        bench(&name).ok_or_else(|| err(format!("unknown benchmark '{name}' (try: amoeba list)")))?;
     let cfg = SystemConfig::gtx480();
 
     println!("simulating {name} on the Table-1 machine ({} SMs)...", cfg.num_sms);

@@ -21,7 +21,7 @@ use amoeba_gpu::runtime::{HloPredictor, HloTrainer, Runtime};
 use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_with_controller};
 use amoeba_gpu::workload::all_benchmarks;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> amoeba_gpu::errors::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let mut cfg = SystemConfig::gtx480();
     if quick {

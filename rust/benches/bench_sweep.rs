@@ -1,0 +1,121 @@
+//! Full-suite sweep wall-clock: the old serial per-figure replay vs the
+//! memoized parallel executor — the headline number for the sweep
+//! subsystem. Writes `BENCH_sweep.json` (consumed by ci.sh to track the
+//! perf trajectory across PRs).
+//!
+//! The job list reproduces what quick-mode figure regeneration used to
+//! simulate before the executor existed: the seven per-scheme sweep
+//! figures (12/13/14/15/16/17/18) each re-ran the full bench x scheme
+//! grid, and Fig 21 re-ran DWS + warp-regrouping — duplicates included.
+//! "serial" replays that list one simulation at a time (the old
+//! behaviour); "parallel+memo" hands the same list to [`SweepExec`].
+//!
+//! Run: `cargo bench --bench bench_sweep`  (threads via AMOEBA_JOBS)
+
+use std::time::Instant;
+
+use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::harness::{SimJob, SweepExec};
+use amoeba_gpu::sim::gpu::run_benchmark_seeded;
+use amoeba_gpu::workload::{bench, BenchProfile, FIG12_SET};
+
+/// Mirror of the harness quick-mode shrink + base config (kept in sync
+/// with `harness::figures`).
+fn quick_cfg() -> SystemConfig {
+    let mut c = SystemConfig::gtx480();
+    c.num_sms = 8;
+    c.num_mcs = 4;
+    c.max_cycles = 2_000_000;
+    c.profile_window = 1_000;
+    c
+}
+
+fn quick_profile(name: &str) -> BenchProfile {
+    let mut p = bench(name).unwrap();
+    p.num_ctas = p.num_ctas.min(16);
+    p.insns_per_thread = p.insns_per_thread.min(120);
+    p.num_kernels = 1;
+    p
+}
+
+const SEED: u64 = 0xA30EBA;
+/// Per-scheme sweep figures that each replayed the full grid (Figs
+/// 12/13/14/15/16/17/18).
+const SWEEP_FIGURES: usize = 7;
+
+fn main() {
+    let cfg = quick_cfg();
+    let benches: &[&str] = &FIG12_SET[..4];
+
+    // The duplicate-laden instance list the pre-executor harness ran.
+    let mut jobs: Vec<SimJob> = Vec::new();
+    for _fig in 0..SWEEP_FIGURES {
+        for name in benches {
+            for s in Scheme::FIG12 {
+                jobs.push(SimJob::new(cfg.clone(), quick_profile(name), s, SEED));
+            }
+        }
+    }
+    for name in benches {
+        for s in [Scheme::Dws, Scheme::WarpRegroup] {
+            jobs.push(SimJob::new(cfg.clone(), quick_profile(name), s, SEED));
+        }
+    }
+
+    let exec = SweepExec::from_env();
+    let threads = exec.threads();
+    eprintln!(
+        "[bench_sweep] {} job instances (quick figure replay), {} threads",
+        jobs.len(),
+        threads
+    );
+
+    // -------- Before: serial replay, no memoization (old behaviour).
+    let t0 = Instant::now();
+    for job in &jobs {
+        std::hint::black_box(run_benchmark_seeded(&job.cfg, &job.profile, job.scheme, job.seed));
+    }
+    let serial = t0.elapsed();
+    eprintln!("[bench_sweep] serial replay      : {:.2} s", serial.as_secs_f64());
+
+    // -------- After: one batch through the parallel memoized executor.
+    let t1 = Instant::now();
+    let reports = exec.run_batch(jobs.clone());
+    let parallel = t1.elapsed();
+    std::hint::black_box(&reports);
+    let (hits, misses) = exec.cache_stats();
+    eprintln!(
+        "[bench_sweep] parallel + memoized: {:.2} s ({} unique sims, {} cache hits)",
+        parallel.as_secs_f64(),
+        misses,
+        hits
+    );
+
+    // -------- Memo-only contribution: a fresh 1-thread executor.
+    let ser_exec = SweepExec::serial();
+    let t2 = Instant::now();
+    std::hint::black_box(ser_exec.run_batch(jobs.clone()));
+    let memo_only = t2.elapsed();
+    eprintln!("[bench_sweep] serial + memoized  : {:.2} s", memo_only.as_secs_f64());
+
+    let speedup = serial.as_secs_f64() / parallel.as_secs_f64().max(1e-9);
+    let memo_speedup = serial.as_secs_f64() / memo_only.as_secs_f64().max(1e-9);
+    eprintln!("[bench_sweep] speedup: {speedup:.2}x total ({memo_speedup:.2}x from memoization alone)");
+
+    let json = format!(
+        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3}\n}}\n",
+        jobs.len(),
+        misses,
+        threads,
+        serial.as_secs_f64(),
+        parallel.as_secs_f64(),
+        memo_only.as_secs_f64(),
+        speedup,
+        memo_speedup,
+    );
+    match std::fs::write("BENCH_sweep.json", &json) {
+        Ok(()) => eprintln!("[bench_sweep] wrote BENCH_sweep.json"),
+        Err(e) => eprintln!("[bench_sweep] could not write BENCH_sweep.json: {e}"),
+    }
+    print!("{json}");
+}

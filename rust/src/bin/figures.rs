@@ -1,14 +1,19 @@
 //! `figures` — regenerate every table and figure of the paper's
 //! evaluation section (DESIGN.md §3 maps ids to experiments).
 //!
+//! All simulation-backed figures run through one shared
+//! [`amoeba_gpu::harness::SweepExec`]: jobs fan out across cores and every
+//! unique `(bench, scheme, config, seed)` simulation runs exactly once per
+//! invocation, no matter how many figures consume it.
+//!
 //! Usage:
 //!   figures --fig 12            # one figure (full workloads)
 //!   figures --all --quick       # everything, shrunken workloads
 //!   figures --fig 12 --tsv      # machine-readable output
+//!   figures --all --jobs 8      # explicit worker count (else AMOEBA_JOBS)
 
-use anyhow::{anyhow, Result};
-
-use amoeba_gpu::harness::{figure, ALL_FIGURES};
+use amoeba_gpu::errors::{err, Result};
+use amoeba_gpu::harness::{figure_with, SweepExec, ALL_FIGURES};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -20,21 +25,29 @@ fn main() -> Result<()> {
         .position(|a| a == "--fig")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let exec = match args.iter().position(|a| a == "--jobs") {
+        Some(i) => {
+            let n = args.get(i + 1).ok_or_else(|| err("--jobs needs a value"))?;
+            SweepExec::new(n.parse()?)
+        }
+        None => SweepExec::from_env(),
+    };
 
     let ids: Vec<String> = if all {
         ALL_FIGURES.iter().map(|s| s.to_string()).collect()
     } else if let Some(f) = fig {
         vec![f]
     } else {
-        return Err(anyhow!(
-            "usage: figures --fig <id> [--quick] [--tsv] | figures --all [--quick]\nids: {}",
+        return Err(err(format!(
+            "usage: figures --fig <id> [--quick] [--tsv] [--jobs N] | figures --all [--quick]\nids: {}",
             ALL_FIGURES.join(", ")
-        ));
+        )));
     };
     for id in ids {
         eprintln!("[figures] generating {id}...");
-        let t = figure(&id, quick)
-            .ok_or_else(|| anyhow!("unknown figure id '{id}' (ids: {})", ALL_FIGURES.join(", ")))?;
+        let t = figure_with(&exec, &id, quick).ok_or_else(|| {
+            err(format!("unknown figure id '{id}' (ids: {})", ALL_FIGURES.join(", ")))
+        })?;
         if tsv {
             println!("# {id}");
             print!("{}", t.to_tsv());
@@ -42,5 +55,10 @@ fn main() -> Result<()> {
             println!("{}", t.render());
         }
     }
+    let (hits, misses) = exec.cache_stats();
+    eprintln!(
+        "[figures] done: {misses} unique simulations on {} threads, {hits} served from cache",
+        exec.threads()
+    );
     Ok(())
 }

@@ -1,0 +1,58 @@
+//! Dependency-free error plumbing for the binaries and examples.
+//!
+//! The offline build ships no `anyhow`; CLI entry points return
+//! [`Result`] (a boxed [`std::error::Error`]) and construct ad-hoc
+//! errors with [`err`]. Library modules keep their own typed errors
+//! (e.g. [`crate::runtime::RuntimeError`]) — this module is only the
+//! thin glue that lets `fn main() -> Result<()>` print something
+//! readable and `?` convert from any std error type.
+
+use std::fmt;
+
+/// A plain-message error. `Debug` prints the bare message so that a
+/// `fn main() -> Result<()>` failure reads as `Error: <message>` rather
+/// than a struct dump.
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias used by `main()` in the binaries and examples.
+pub type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+/// Build a boxed error from a message (the `anyhow!` stand-in).
+pub fn err(msg: impl Into<String>) -> Box<dyn std::error::Error> {
+    Box::new(Error(msg.into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_prints_bare_message() {
+        let e = err("no such benchmark");
+        assert_eq!(format!("{e}"), "no such benchmark");
+        assert_eq!(format!("{e:?}"), "no such benchmark");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "42".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 42);
+    }
+}

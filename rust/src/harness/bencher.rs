@@ -72,6 +72,8 @@ pub struct BenchResult {
     pub median: Duration,
     /// Mean iteration.
     pub mean: Duration,
+    /// 95th-percentile iteration (nearest-rank on the sorted samples).
+    pub p95: Duration,
     /// Number of samples.
     pub n: usize,
 }
@@ -80,10 +82,19 @@ impl BenchResult {
     fn from_samples(group: &str, name: &str, mut samples: Vec<Duration>) -> Self {
         samples.sort_unstable();
         let n = samples.len();
+        assert!(n > 0, "need at least one sample");
         let min = samples[0];
         let median = samples[n / 2];
-        let mean = samples.iter().sum::<Duration>() / n as u32;
-        BenchResult { label: format!("{group}/{name}"), min, median, mean, n }
+        // Mean in integer nanoseconds: summing `Duration`s and dividing
+        // by `n as u32` would truncate the divisor on huge sample counts
+        // (and `Duration / u32` can only see 32 bits of n); u128 math is
+        // exact for any realistic run.
+        let total_ns: u128 = samples.iter().map(|d| d.as_nanos()).sum();
+        let mean_ns = total_ns / n as u128;
+        let mean = Duration::from_nanos(mean_ns.min(u64::MAX as u128) as u64);
+        // Nearest-rank p95: ceil(0.95 * n) in 1-based rank terms.
+        let p95 = samples[((n * 95).div_ceil(100)).saturating_sub(1).min(n - 1)];
+        BenchResult { label: format!("{group}/{name}"), min, median, mean, p95, n }
     }
 }
 
@@ -91,11 +102,12 @@ impl std::fmt::Display for BenchResult {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{:40} min {:>12} | median {:>12} | mean {:>12} | n={}",
+            "{:40} min {:>12} | median {:>12} | mean {:>12} | p95 {:>12} | n={}",
             self.label,
             fmt_duration(self.min),
             fmt_duration(self.median),
             fmt_duration(self.mean),
+            fmt_duration(self.p95),
             self.n
         )
     }
@@ -133,7 +145,26 @@ mod tests {
         });
         assert!(r.min.as_nanos() > 0);
         assert!(r.median >= r.min);
+        assert!(r.p95 >= r.median, "p95 {:?} < median {:?}", r.p95, r.median);
+        assert!(r.mean >= r.min);
         assert_eq!(r.n, 5);
+    }
+
+    #[test]
+    fn mean_uses_integer_nanosecond_math() {
+        // 3 samples of 1/2/3 us => mean exactly 2 us.
+        let r = BenchResult::from_samples(
+            "test",
+            "mean",
+            vec![
+                Duration::from_micros(1),
+                Duration::from_micros(2),
+                Duration::from_micros(3),
+            ],
+        );
+        assert_eq!(r.mean, Duration::from_micros(2));
+        assert_eq!(r.p95, Duration::from_micros(3), "p95 of 3 samples is the max");
+        assert_eq!(r.min, Duration::from_micros(1));
     }
 
     #[test]

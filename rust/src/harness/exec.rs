@@ -1,0 +1,357 @@
+//! Parallel sweep executor with a memoized simulation cache.
+//!
+//! Regenerating the paper's figures means sweeping the benchmark suite
+//! across every scheme and many machine configurations — and several
+//! figures consume the *same* deterministic simulation (e.g. the
+//! `Baseline` run of each benchmark feeds Figs 12–18). [`SweepExec`]
+//! makes that cheap twice over:
+//!
+//! 1. **Memoization** — every result is cached under a
+//!    [`JobKey`] = (bench, scheme, config fingerprint, profile
+//!    fingerprint, seed), so each unique simulation runs exactly once per
+//!    process no matter how many figures ask for it.
+//! 2. **Parallel fan-out** — batches spread across `std::thread::scope`
+//!    workers (no external crates; the vendored registry is offline).
+//!    Work distribution is a single atomic cursor over the job list —
+//!    work-stealing-free and therefore trivially deadlock-free.
+//!
+//! Determinism: simulations are pure functions of `(cfg, profile,
+//! scheme, seed)` (the simulator has no global state and every random
+//! choice flows through the seeded PCG32), so the parallel path is
+//! bit-identical to serial execution — asserted by
+//! `tests/exec_determinism.rs`.
+//!
+//! Thread count: `AMOEBA_JOBS` env var, else the machine's available
+//! parallelism. `SweepExec::new(1)` degrades to a purely serial,
+//! still-memoized executor.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{Scheme, SystemConfig};
+use crate::sim::gpu::{run_benchmark_seeded, SimReport};
+use crate::workload::BenchProfile;
+
+/// FNV-1a over a string — the fingerprint primitive. Configs and
+/// profiles are hashed through their `Debug` rendering so that *every*
+/// field participates automatically (a newly added knob can never be
+/// silently left out of the cache key).
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Stable fingerprint of a full system configuration.
+pub fn cfg_fingerprint(cfg: &SystemConfig) -> u64 {
+    fnv1a(&format!("{cfg:?}"))
+}
+
+/// Stable fingerprint of a (possibly shrunken) workload profile.
+pub fn profile_fingerprint(p: &BenchProfile) -> u64 {
+    fnv1a(&format!("{p:?}"))
+}
+
+/// Memoization key of one simulation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct JobKey {
+    /// Benchmark name (human-readable anchor; the fingerprints do the
+    /// heavy lifting).
+    pub bench: &'static str,
+    /// Scheme simulated.
+    pub scheme: Scheme,
+    /// [`cfg_fingerprint`] of the machine configuration.
+    pub cfg_fp: u64,
+    /// [`profile_fingerprint`] of the workload (quick-mode shrinking
+    /// yields a different profile, hence a different key).
+    pub profile_fp: u64,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+/// One simulation request: everything `run_benchmark_seeded` needs.
+#[derive(Debug, Clone)]
+pub struct SimJob {
+    /// Machine configuration.
+    pub cfg: SystemConfig,
+    /// Workload profile (already shrunken for quick mode, if desired).
+    pub profile: BenchProfile,
+    /// Scheme to simulate.
+    pub scheme: Scheme,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl SimJob {
+    /// Bundle a job.
+    pub fn new(cfg: SystemConfig, profile: BenchProfile, scheme: Scheme, seed: u64) -> Self {
+        SimJob { cfg, profile, scheme, seed }
+    }
+
+    /// The job's memoization key.
+    pub fn key(&self) -> JobKey {
+        JobKey {
+            bench: self.profile.name,
+            scheme: self.scheme,
+            cfg_fp: cfg_fingerprint(&self.cfg),
+            profile_fp: profile_fingerprint(&self.profile),
+            seed: self.seed,
+        }
+    }
+
+    fn simulate(&self) -> SimReport {
+        run_benchmark_seeded(&self.cfg, &self.profile, self.scheme, self.seed)
+    }
+}
+
+/// The parallel, memoizing sweep executor.
+pub struct SweepExec {
+    threads: usize,
+    cache: Mutex<HashMap<JobKey, Arc<SimReport>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SweepExec {
+    /// Executor with an explicit worker count (clamped to >= 1).
+    pub fn new(threads: usize) -> Self {
+        SweepExec {
+            threads: threads.max(1),
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Executor sized from the environment: `AMOEBA_JOBS` if set (and a
+    /// positive integer), else the machine's available parallelism.
+    pub fn from_env() -> Self {
+        let threads = std::env::var("AMOEBA_JOBS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            });
+        Self::new(threads)
+    }
+
+    /// A purely serial (but still memoizing) executor.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// (cache hits, unique simulations executed) so far.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of memoized reports currently held.
+    pub fn cached_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Drop all memoized reports (counters are kept).
+    pub fn clear(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Run (or recall) a single simulation.
+    pub fn run(
+        &self,
+        cfg: &SystemConfig,
+        profile: &BenchProfile,
+        scheme: Scheme,
+        seed: u64,
+    ) -> Arc<SimReport> {
+        let job = SimJob::new(cfg.clone(), profile.clone(), scheme, seed);
+        let key = job.key();
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let report = Arc::new(job.simulate());
+        self.cache.lock().unwrap().insert(key, Arc::clone(&report));
+        report
+    }
+
+    /// Run a batch of jobs, fanning uncached ones across the worker
+    /// threads. Returns one report per input job, **in input order**;
+    /// duplicate and previously-cached jobs are simulated exactly once.
+    pub fn run_batch(&self, jobs: Vec<SimJob>) -> Vec<Arc<SimReport>> {
+        let keys: Vec<JobKey> = jobs.iter().map(|j| j.key()).collect();
+
+        // Partition into cached / to-run under one short lock.
+        let mut todo: Vec<(JobKey, SimJob)> = Vec::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            let mut queued: HashSet<JobKey> = HashSet::new();
+            for (job, key) in jobs.into_iter().zip(keys.iter()) {
+                if cache.contains_key(key) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                } else if queued.insert(key.clone()) {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    todo.push((key.clone(), job));
+                } else {
+                    // Duplicate within this batch: first occurrence runs it.
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+
+        if !todo.is_empty() {
+            let results = self.execute(&todo);
+            let mut cache = self.cache.lock().unwrap();
+            for (i, report) in results {
+                cache.insert(todo[i].0.clone(), report);
+            }
+        }
+
+        // Everything is cached now; answer in input order.
+        let cache = self.cache.lock().unwrap();
+        keys.iter()
+            .map(|k| Arc::clone(cache.get(k).expect("job simulated above")))
+            .collect()
+    }
+
+    /// Simulate `todo` on up to `self.threads` scoped workers. Jobs are
+    /// claimed through one atomic cursor; each worker returns its
+    /// `(index, report)` pairs and the caller reassembles them.
+    fn execute(&self, todo: &[(JobKey, SimJob)]) -> Vec<(usize, Arc<SimReport>)> {
+        let workers = self.threads.min(todo.len());
+        if workers <= 1 {
+            return todo
+                .iter()
+                .enumerate()
+                .map(|(i, (_, job))| (i, Arc::new(job.simulate())))
+                .collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut local: Vec<(usize, Arc<SimReport>)> = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= todo.len() {
+                                break;
+                            }
+                            local.push((i, Arc::new(todo[i].1.simulate())));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("sweep worker panicked"))
+                .collect()
+        })
+    }
+}
+
+impl Default for SweepExec {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl std::fmt::Debug for SweepExec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (hits, misses) = self.cache_stats();
+        f.debug_struct("SweepExec")
+            .field("threads", &self.threads)
+            .field("cached", &self.cached_len())
+            .field("hits", &hits)
+            .field("misses", &misses)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::bench;
+
+    fn tiny_job(name: &str, scheme: Scheme, seed: u64) -> SimJob {
+        let cfg = SystemConfig::tiny();
+        let mut p = bench(name).unwrap();
+        p.num_ctas = 4;
+        p.insns_per_thread = 40;
+        p.num_kernels = 1;
+        SimJob::new(cfg, p, scheme, seed)
+    }
+
+    #[test]
+    fn fingerprints_track_every_field() {
+        let a = SystemConfig::tiny();
+        let mut b = a.clone();
+        assert_eq!(cfg_fingerprint(&a), cfg_fingerprint(&b));
+        b.mshr_per_sm += 1;
+        assert_ne!(cfg_fingerprint(&a), cfg_fingerprint(&b));
+
+        let p = bench("CP").unwrap();
+        let mut q = p.clone();
+        assert_eq!(profile_fingerprint(&p), profile_fingerprint(&q));
+        q.insns_per_thread += 1;
+        assert_ne!(profile_fingerprint(&p), profile_fingerprint(&q));
+    }
+
+    #[test]
+    fn job_keys_separate_schemes_and_seeds() {
+        let a = tiny_job("CP", Scheme::Baseline, 1).key();
+        let b = tiny_job("CP", Scheme::ScaleUp, 1).key();
+        let c = tiny_job("CP", Scheme::Baseline, 2).key();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, tiny_job("CP", Scheme::Baseline, 1).key());
+    }
+
+    #[test]
+    fn memoizes_repeat_runs() {
+        let exec = SweepExec::new(2);
+        let job = tiny_job("CP", Scheme::Baseline, 7);
+        let a = exec.run(&job.cfg, &job.profile, job.scheme, job.seed);
+        let b = exec.run(&job.cfg, &job.profile, job.scheme, job.seed);
+        assert!(Arc::ptr_eq(&a, &b), "second run must be the cached Arc");
+        let (hits, misses) = exec.cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+        assert_eq!(exec.cached_len(), 1);
+    }
+
+    #[test]
+    fn batch_dedupes_and_preserves_order() {
+        let exec = SweepExec::new(4);
+        let jobs = vec![
+            tiny_job("CP", Scheme::Baseline, 7),
+            tiny_job("BFS", Scheme::Baseline, 7),
+            tiny_job("CP", Scheme::Baseline, 7), // duplicate of job 0
+        ];
+        let out = exec.run_batch(jobs);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].bench, "CP");
+        assert_eq!(out[1].bench, "BFS");
+        assert!(Arc::ptr_eq(&out[0], &out[2]), "duplicate served from cache");
+        let (hits, misses) = exec.cache_stats();
+        assert_eq!(misses, 2, "two unique simulations");
+        assert_eq!(hits, 1, "one in-batch duplicate");
+    }
+
+    #[test]
+    fn thread_count_is_clamped_and_env_sized() {
+        assert_eq!(SweepExec::new(0).threads(), 1);
+        assert_eq!(SweepExec::serial().threads(), 1);
+        assert!(SweepExec::from_env().threads() >= 1);
+    }
+}

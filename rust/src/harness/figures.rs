@@ -4,11 +4,20 @@
 //! `quick` mode shrinks grids/trace lengths (used by tests and CI); full
 //! mode (the default for `cargo run --bin figures`) uses the profile
 //! shapes as-is.
+//!
+//! All simulations flow through the caller-provided [`SweepExec`]: each
+//! figure submits its whole `(bench, scheme, config)` grid as one batch
+//! (parallel fan-out), and results shared between figures — e.g. every
+//! per-scheme sweep needs the same `Baseline` runs — are served from the
+//! executor's memo cache instead of being re-simulated.
+
+use std::sync::Arc;
 
 use crate::amoeba::{MetricsSample, NativePredictor, FEATURES, NUM_FEATURES, PAPER_COEFFS};
 use crate::config::{Scheme, SystemConfig};
+use crate::harness::{SimJob, SweepExec};
 use crate::sim::core::ClusterMode;
-use crate::sim::gpu::{run_benchmark_seeded, SimReport};
+use crate::sim::gpu::SimReport;
 use crate::stats::Table;
 use crate::workload::{bench, BenchProfile, FIG12_SET, FIG20_SET, FIG3_SET, FIG5_SET};
 
@@ -24,10 +33,15 @@ fn shrink(p: &mut BenchProfile, quick: bool) {
     }
 }
 
-fn run(cfg: &SystemConfig, name: &str, scheme: Scheme, quick: bool) -> SimReport {
+/// Look up `name` and apply quick-mode shrinking.
+fn profile(name: &str, quick: bool) -> BenchProfile {
     let mut p = bench(name).unwrap_or_else(|| panic!("unknown benchmark {name}"));
     shrink(&mut p, quick);
-    run_benchmark_seeded(cfg, &p, scheme, SEED)
+    p
+}
+
+fn run(exec: &SweepExec, cfg: &SystemConfig, name: &str, scheme: Scheme, quick: bool) -> Arc<SimReport> {
+    exec.run(cfg, &profile(name, quick), scheme, SEED)
 }
 
 fn base_cfg(quick: bool) -> SystemConfig {
@@ -47,7 +61,7 @@ fn base_cfg(quick: bool) -> SystemConfig {
 
 /// Fig 3(a)/(b): normalised IPC across {16,25,36,64}-SM scalings (the
 /// paper normalises to the 16-SM point).
-pub fn fig3_scaling(perfect_noc: bool, quick: bool) -> Table {
+pub fn fig3_scaling(exec: &SweepExec, perfect_noc: bool, quick: bool) -> Table {
     let title = if perfect_noc {
         "Fig 3b — SM scaling, perfect NoC (IPC normalised to 16 SMs)"
     } else {
@@ -58,9 +72,9 @@ pub fn fig3_scaling(perfect_noc: bool, quick: bool) -> Table {
     let sm_counts = [16usize, 24, 36, 64];
     let mut t = Table::new(title, &["bench", "16", "24", "36", "64"]);
     let benches: &[&str] = if quick { &FIG3_SET[..4] } else { &FIG3_SET };
+
+    let mut jobs = Vec::new();
     for name in benches {
-        let mut row = Vec::new();
-        let mut base_ipc = None;
         for n in sm_counts {
             let mut cfg = base_cfg(false).with_sm_count(n);
             if perfect_noc {
@@ -69,14 +83,21 @@ pub fn fig3_scaling(perfect_noc: bool, quick: bool) -> Table {
             if quick {
                 cfg.max_cycles = 1_200_000;
             }
-            let mut p = bench(name).unwrap();
-            shrink(&mut p, quick);
+            let mut p = profile(name, quick);
             if quick {
                 p.num_ctas = 12;
                 p.insns_per_thread = 100;
             }
-            let r = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, SEED);
-            let ipc = r.ipc();
+            jobs.push(SimJob::new(cfg, p, Scheme::Baseline, SEED));
+        }
+    }
+    let reports = exec.run_batch(jobs);
+
+    for (bi, name) in benches.iter().enumerate() {
+        let mut row = Vec::new();
+        let mut base_ipc = None;
+        for ni in 0..sm_counts.len() {
+            let ipc = reports[bi * sm_counts.len() + ni].ipc();
             let b = *base_ipc.get_or_insert(ipc);
             row.push(ipc / b);
         }
@@ -90,37 +111,44 @@ pub fn fig3_scaling(perfect_noc: bool, quick: bool) -> Table {
 // ---------------------------------------------------------------------
 
 /// Fig 4: actual-memory-access rate vs SM scaling {16,24,36,64}.
-pub fn fig4_coalescing(quick: bool) -> Table {
+pub fn fig4_coalescing(exec: &SweepExec, quick: bool) -> Table {
     let sm_counts = [16usize, 24, 36, 64];
     let mut t = Table::new(
         "Fig 4 — actual memory access rate after coalescing vs SM count",
         &["bench", "16", "24", "36", "64"],
     );
     let benches: &[&str] = if quick { &FIG3_SET[..3] } else { &FIG3_SET };
+
+    let mut jobs = Vec::new();
     for name in benches {
-        let mut row = Vec::new();
         for n in sm_counts {
             let mut cfg = base_cfg(false).with_sm_count(n);
             if quick {
                 cfg.max_cycles = 1_200_000;
             }
-            let mut p = bench(name).unwrap();
-            shrink(&mut p, quick);
+            let mut p = profile(name, quick);
             if quick {
                 p.num_ctas = 10;
                 p.insns_per_thread = 90;
             }
-            let r = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, SEED);
-            row.push(r.sm.actual_access_rate());
+            jobs.push(SimJob::new(cfg, p, Scheme::Baseline, SEED));
         }
+    }
+    let reports = exec.run_batch(jobs);
+
+    for (bi, name) in benches.iter().enumerate() {
+        let row: Vec<f64> = (0..sm_counts.len())
+            .map(|ni| reports[bi * sm_counts.len() + ni].sm.actual_access_rate())
+            .collect();
         t.row(*name, row);
     }
     t
 }
 
 /// Fig 16: actual-memory-access rate per scheme on the main suite.
-pub fn fig16_mem_access(quick: bool) -> Table {
+pub fn fig16_mem_access(exec: &SweepExec, quick: bool) -> Table {
     scheme_sweep_table(
+        exec,
         "Fig 16 — actual memory access rate (after coalescing)",
         quick,
         |r| r.sm.actual_access_rate(),
@@ -134,26 +162,35 @@ pub fn fig16_mem_access(quick: bool) -> Table {
 /// Fig 5: rate of shared data in neighbouring SMs' L1s at 1x/2x/4x L1
 /// capacity. Measured as the relative L1D miss reduction when capacity
 /// grows (shared lines dedup once both neighbours fit).
-pub fn fig5_l1_sharing(quick: bool) -> Table {
+pub fn fig5_l1_sharing(exec: &SweepExec, quick: bool) -> Table {
     let mut t = Table::new(
         "Fig 5 — neighbouring-SM L1 data sharing vs L1 capacity",
         &["bench", "1x", "2x", "4x"],
     );
+    let mults = [1usize, 2, 4];
+
+    let mut jobs = Vec::new();
     for name in FIG5_SET {
-        let mut row = Vec::new();
-        let mut base_miss = None;
-        for mult in [1usize, 2, 4] {
+        for mult in mults {
             let mut cfg = base_cfg(quick);
             cfg.l1d_bytes *= mult;
             cfg.l1_assoc *= mult;
-            let r = run(&cfg, name, Scheme::Baseline, quick);
-            let miss = r.sm.l1d_miss_rate();
+            jobs.push(SimJob::new(cfg, profile(name, quick), Scheme::Baseline, SEED));
+        }
+    }
+    let reports = exec.run_batch(jobs);
+
+    for (bi, name) in FIG5_SET.iter().enumerate() {
+        let mut row = Vec::new();
+        let mut base_miss = None;
+        for mi in 0..mults.len() {
+            let miss = reports[bi * mults.len() + mi].sm.l1d_miss_rate();
             let b = *base_miss.get_or_insert(miss.max(1e-9));
             // Sharing rate proxy: fraction of baseline misses removed by
             // the larger cache (duplicated neighbour lines now resident).
             row.push(((b - miss) / b).max(0.0));
         }
-        t.row(name, row);
+        t.row(*name, row);
     }
     t
 }
@@ -163,24 +200,33 @@ pub fn fig5_l1_sharing(quick: bool) -> Table {
 // ---------------------------------------------------------------------
 
 /// Fig 6: control-stall fraction, scale-up vs scale-out machines.
-pub fn fig6_control_stalls(quick: bool) -> Table {
+pub fn fig6_control_stalls(exec: &SweepExec, quick: bool) -> Table {
     let mut t = Table::new(
         "Fig 6 — control-divergence stall fraction by scaling",
         &["bench", "scale_out", "scale_up"],
     );
     let benches = ["RAY", "BFS", "WP", "MUM", "SM", "CP"];
+    let cfg = base_cfg(quick);
+
+    let mut jobs = Vec::new();
     for name in benches {
-        let cfg = base_cfg(quick);
-        let out = run(&cfg, name, Scheme::Baseline, quick);
-        let up = run(&cfg, name, Scheme::ScaleUp, quick);
-        t.row(name, vec![out.sm.control_stall_rate(), up.sm.control_stall_rate()]);
+        for s in [Scheme::Baseline, Scheme::ScaleUp] {
+            jobs.push(SimJob::new(cfg.clone(), profile(name, quick), s, SEED));
+        }
+    }
+    let reports = exec.run_batch(jobs);
+
+    for (bi, name) in benches.iter().enumerate() {
+        let out = &reports[bi * 2];
+        let up = &reports[bi * 2 + 1];
+        t.row(*name, vec![out.sm.control_stall_rate(), up.sm.control_stall_rate()]);
     }
     t
 }
 
 /// Fig 13: control-stall rate for every scheme on the main suite.
-pub fn fig13_control_stalls(quick: bool) -> Table {
-    scheme_sweep_table("Fig 13 — control-divergence stall rate", quick, |r| {
+pub fn fig13_control_stalls(exec: &SweepExec, quick: bool) -> Table {
+    scheme_sweep_table(exec, "Fig 13 — control-divergence stall rate", quick, |r| {
         r.sm.control_stall_rate()
     })
 }
@@ -192,26 +238,35 @@ pub fn fig13_control_stalls(quick: bool) -> Table {
 /// Fig 8: per-CTA-wave IPC trend vs whole-kernel trend (LIB scale-out,
 /// RAY scale-up). Rows: bench x {kernel, cta} normalised IPC at 16 vs 48
 /// SMs (ratio > 1 means scale-out wins).
-pub fn fig8_cta_consistency(quick: bool) -> Table {
+pub fn fig8_cta_consistency(exec: &SweepExec, quick: bool) -> Table {
     let mut t = Table::new(
         "Fig 8 — kernel vs CTA scaling consistency (IPC 48SM / IPC 24SM-fused)",
         &["bench", "kernel_ratio", "cta_wave_ratio"],
     );
-    for name in ["LIB", "RAY"] {
-        let cfg = base_cfg(quick);
-        // Whole-kernel ratio.
-        let out = run(&cfg, name, Scheme::Baseline, quick);
-        let up = run(&cfg, name, Scheme::ScaleUp, quick);
-        let kernel_ratio = out.ipc() / up.ipc().max(1e-9);
-        // Single-CTA-wave ratio: same machines, one wave of CTAs.
-        let mut p = bench(name).unwrap();
-        shrink(&mut p, quick);
+    let benches = ["LIB", "RAY"];
+    let cfg = base_cfg(quick);
+
+    let mut jobs = Vec::new();
+    for name in benches {
+        // Whole-kernel runs.
+        for s in [Scheme::Baseline, Scheme::ScaleUp] {
+            jobs.push(SimJob::new(cfg.clone(), profile(name, quick), s, SEED));
+        }
+        // Single-CTA-wave runs: same machines, one wave of CTAs.
+        let mut p = profile(name, quick);
         p.num_ctas = (cfg.num_sms as u32).max(4);
         p.num_kernels = 1;
-        let wave_out = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, SEED);
-        let wave_up = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, SEED);
-        let cta_ratio = wave_out.ipc() / wave_up.ipc().max(1e-9);
-        t.row(name, vec![kernel_ratio, cta_ratio]);
+        for s in [Scheme::Baseline, Scheme::ScaleUp] {
+            jobs.push(SimJob::new(cfg.clone(), p.clone(), s, SEED));
+        }
+    }
+    let reports = exec.run_batch(jobs);
+
+    for (bi, name) in benches.iter().enumerate() {
+        let r = &reports[bi * 4..bi * 4 + 4];
+        let kernel_ratio = r[0].ipc() / r[1].ipc().max(1e-9);
+        let cta_ratio = r[2].ipc() / r[3].ipc().max(1e-9);
+        t.row(*name, vec![kernel_ratio, cta_ratio]);
     }
     t
 }
@@ -220,19 +275,32 @@ pub fn fig8_cta_consistency(quick: bool) -> Table {
 // Fig 12 / 14 / 15 / 17 / 18: the main per-scheme sweeps
 // ---------------------------------------------------------------------
 
-/// Run every Fig-12 benchmark under every Fig-12 scheme and tabulate
-/// `metric` (column per scheme).
-fn scheme_sweep_table(title: &str, quick: bool, metric: fn(&SimReport) -> f64) -> Table {
+/// Run every Fig-12 benchmark under every Fig-12 scheme (one batched
+/// sweep) and tabulate `metric` (column per scheme).
+fn scheme_sweep_table(
+    exec: &SweepExec,
+    title: &str,
+    quick: bool,
+    metric: fn(&SimReport) -> f64,
+) -> Table {
     let mut t = Table::new(
         title,
         &["bench", "baseline", "scale_up", "static_fuse", "direct_split", "warp_regrouping"],
     );
     let benches: &[&str] = if quick { &FIG12_SET[..4] } else { &FIG12_SET };
+    let cfg = base_cfg(quick);
+
+    let mut jobs = Vec::new();
     for name in benches {
-        let cfg = base_cfg(quick);
-        let row: Vec<f64> = Scheme::FIG12
-            .iter()
-            .map(|s| metric(&run(&cfg, name, *s, quick)))
+        for s in Scheme::FIG12 {
+            jobs.push(SimJob::new(cfg.clone(), profile(name, quick), s, SEED));
+        }
+    }
+    let reports = exec.run_batch(jobs);
+
+    for (bi, name) in benches.iter().enumerate() {
+        let row: Vec<f64> = (0..Scheme::FIG12.len())
+            .map(|si| metric(&reports[bi * Scheme::FIG12.len() + si]))
             .collect();
         t.row(*name, row);
     }
@@ -240,19 +308,26 @@ fn scheme_sweep_table(title: &str, quick: bool, metric: fn(&SimReport) -> f64) -
 }
 
 /// Fig 12 — the headline: IPC speedup over baseline per scheme.
-pub fn fig12_performance(quick: bool) -> Table {
+pub fn fig12_performance(exec: &SweepExec, quick: bool) -> Table {
     let mut t = Table::new(
         "Fig 12 — IPC speedup over the scale-out baseline",
         &["bench", "scale_up", "static_fuse", "direct_split", "warp_regrouping"],
     );
     let benches: &[&str] = if quick { &FIG12_SET[..4] } else { &FIG12_SET };
+    let cfg = base_cfg(quick);
+
+    let mut jobs = Vec::new();
     for name in benches {
-        let cfg = base_cfg(quick);
-        let base = run(&cfg, name, Scheme::Baseline, quick).ipc().max(1e-9);
-        let row: Vec<f64> = [Scheme::ScaleUp, Scheme::StaticFuse, Scheme::DirectSplit, Scheme::WarpRegroup]
-            .iter()
-            .map(|s| run(&cfg, name, *s, quick).ipc() / base)
-            .collect();
+        for s in Scheme::FIG12 {
+            jobs.push(SimJob::new(cfg.clone(), profile(name, quick), s, SEED));
+        }
+    }
+    let reports = exec.run_batch(jobs);
+
+    for (bi, name) in benches.iter().enumerate() {
+        let r = &reports[bi * Scheme::FIG12.len()..(bi + 1) * Scheme::FIG12.len()];
+        let base = r[0].ipc().max(1e-9);
+        let row: Vec<f64> = r[1..].iter().map(|rep| rep.ipc() / base).collect();
         t.row(*name, row);
     }
     let g = t.geomean_row();
@@ -261,25 +336,25 @@ pub fn fig12_performance(quick: bool) -> Table {
 }
 
 /// Fig 14 — L1 instruction-cache miss rate per scheme.
-pub fn fig14_l1i_miss(quick: bool) -> Table {
-    scheme_sweep_table("Fig 14 — L1-I miss rate", quick, |r| r.sm.l1i_miss_rate())
+pub fn fig14_l1i_miss(exec: &SweepExec, quick: bool) -> Table {
+    scheme_sweep_table(exec, "Fig 14 — L1-I miss rate", quick, |r| r.sm.l1i_miss_rate())
 }
 
 /// Fig 15 — L1 data-cache miss rate per scheme.
-pub fn fig15_l1d_miss(quick: bool) -> Table {
-    scheme_sweep_table("Fig 15 — L1-D miss rate", quick, |r| r.sm.l1d_miss_rate())
+pub fn fig15_l1d_miss(exec: &SweepExec, quick: bool) -> Table {
+    scheme_sweep_table(exec, "Fig 15 — L1-D miss rate", quick, |r| r.sm.l1d_miss_rate())
 }
 
 /// Fig 17 — normalised MC-injection (ICNT) stall rate per scheme.
-pub fn fig17_icnt_stalls(quick: bool) -> Table {
-    scheme_sweep_table("Fig 17 — MC injection stall rate (normalised)", quick, |r| {
+pub fn fig17_icnt_stalls(exec: &SweepExec, quick: bool) -> Table {
+    scheme_sweep_table(exec, "Fig 17 — MC injection stall rate (normalised)", quick, |r| {
         r.chip.mc_inject_stall_rate()
     })
 }
 
 /// Fig 18 — NoC data injection rate (flits/cycle/SM-node) per scheme.
-pub fn fig18_injection(quick: bool) -> Table {
-    scheme_sweep_table("Fig 18 — NoC injection rate (flits/cycle/node)", quick, |r| {
+pub fn fig18_injection(exec: &SweepExec, quick: bool) -> Table {
+    scheme_sweep_table(exec, "Fig 18 — NoC injection rate (flits/cycle/node)", quick, |r| {
         r.sm.noc_flits as f64 / r.cycles.max(1) as f64
     })
 }
@@ -290,9 +365,9 @@ pub fn fig18_injection(quick: bool) -> Table {
 
 /// Fig 19: mode timeline of the first 5 clusters under warp-regrouping on
 /// RAY (1 = fused, 0 = split, -1 = private/baseline).
-pub fn fig19_phases(quick: bool) -> Table {
+pub fn fig19_phases(exec: &SweepExec, quick: bool) -> Table {
     let cfg = base_cfg(quick);
-    let r = run(&cfg, "RAY", Scheme::WarpRegroup, quick);
+    let r = run(exec, &cfg, "RAY", Scheme::WarpRegroup, quick);
     let mut t = Table::new(
         "Fig 19 — SM fuse(1)/split(0) phases over time (RAY, warp_regrouping)",
         &["cycle", "sm0", "sm1", "sm2", "sm3", "sm4"],
@@ -321,15 +396,21 @@ pub fn fig19_phases(quick: bool) -> Table {
 
 /// Fig 20: coefficient x measured-value impact magnitudes for the four
 /// analysis benchmarks, using the repo-trained coefficients.
-pub fn fig20_impacts(quick: bool) -> Table {
+pub fn fig20_impacts(exec: &SweepExec, quick: bool) -> Table {
     let mut cols: Vec<&str> = vec!["bench"];
     cols.extend(FEATURES);
     cols.push("sum");
     let mut t = Table::new("Fig 20 — predictor impact magnitudes", &cols);
     let predictor = NativePredictor::new();
-    for name in FIG20_SET {
-        let cfg = base_cfg(quick);
-        let r = run(&cfg, name, Scheme::StaticFuse, quick);
+    let cfg = base_cfg(quick);
+
+    let jobs: Vec<SimJob> = FIG20_SET
+        .iter()
+        .map(|name| SimJob::new(cfg.clone(), profile(name, quick), Scheme::StaticFuse, SEED))
+        .collect();
+    let reports = exec.run_batch(jobs);
+
+    for (name, r) in FIG20_SET.iter().zip(reports.iter()) {
         let sample = r
             .samples
             .first()
@@ -338,7 +419,7 @@ pub fn fig20_impacts(quick: bool) -> Table {
         let impacts = predictor.impacts(&sample);
         let mut row: Vec<f64> = impacts.to_vec();
         row.push(impacts.iter().sum::<f64>() + predictor.coeffs().intercept);
-        t.row(name, row);
+        t.row(*name, row);
     }
     t
 }
@@ -348,13 +429,22 @@ pub fn fig20_impacts(quick: bool) -> Table {
 // ---------------------------------------------------------------------
 
 /// Fig 21: warp-regrouping AMOEBA speedup over DWS per benchmark.
-pub fn fig21_vs_dws(quick: bool) -> Table {
+pub fn fig21_vs_dws(exec: &SweepExec, quick: bool) -> Table {
     let mut t = Table::new("Fig 21 — AMOEBA (warp_regrouping) speedup over DWS", &["bench", "speedup"]);
     let benches: &[&str] = if quick { &FIG12_SET[..4] } else { &FIG12_SET };
+    let cfg = base_cfg(quick);
+
+    let mut jobs = Vec::new();
     for name in benches {
-        let cfg = base_cfg(quick);
-        let dws = run(&cfg, name, Scheme::Dws, quick).ipc().max(1e-9);
-        let amoeba = run(&cfg, name, Scheme::WarpRegroup, quick).ipc();
+        for s in [Scheme::Dws, Scheme::WarpRegroup] {
+            jobs.push(SimJob::new(cfg.clone(), profile(name, quick), s, SEED));
+        }
+    }
+    let reports = exec.run_batch(jobs);
+
+    for (bi, name) in benches.iter().enumerate() {
+        let dws = reports[bi * 2].ipc().max(1e-9);
+        let amoeba = reports[bi * 2 + 1].ipc();
         t.row(*name, vec![amoeba / dws]);
     }
     let g = t.geomean_row();
@@ -420,5 +510,21 @@ mod tests {
     #[test]
     fn fig2_static_data() {
         assert_eq!(crate::harness::gtx_scaling_trend().rows.len(), 8);
+    }
+
+    #[test]
+    fn fig6_row_shape_through_executor() {
+        // Smoke: a simulation-backed figure runs through the executor and
+        // its per-scheme sweep lands cache hits when regenerated.
+        let exec = SweepExec::new(2);
+        let t = fig6_control_stalls(&exec, true);
+        assert_eq!(t.rows.len(), 6);
+        assert_eq!(t.rows[0].1.len(), 2);
+        let (_, misses_before) = exec.cache_stats();
+        let t2 = fig6_control_stalls(&exec, true);
+        let (hits, misses_after) = exec.cache_stats();
+        assert_eq!(misses_before, misses_after, "regeneration must be pure cache hits");
+        assert!(hits >= 12);
+        assert_eq!(t.rows[0].1, t2.rows[0].1, "memoized figure is identical");
     }
 }

@@ -2,14 +2,23 @@
 //! figure of the paper's evaluation section (see DESIGN.md §3 for the
 //! full index). Each function returns a [`Table`] whose rows/series match
 //! the paper's plot axes.
+//!
+//! Every simulation-backed figure routes through a [`SweepExec`]: jobs
+//! fan out across cores and identical `(bench, scheme, config, seed)`
+//! runs are memoized, so regenerating *all* figures simulates each unique
+//! configuration exactly once.
 
 pub mod bencher;
+pub mod exec;
 mod figdata;
 mod figures;
 
 pub use bencher::{BenchResult, Bencher};
+pub use exec::{cfg_fingerprint, profile_fingerprint, JobKey, SimJob, SweepExec};
 pub use figdata::gtx_scaling_trend;
 pub use figures::*;
+
+use std::sync::OnceLock;
 
 use crate::stats::Table;
 
@@ -19,28 +28,42 @@ pub const ALL_FIGURES: [&str; 19] = [
     "21", "t1", "t2",
 ];
 
-/// Regenerate one figure/table by id. `quick` shrinks workloads for CI.
-pub fn figure(id: &str, quick: bool) -> Option<Table> {
+/// The process-wide executor used by the [`figure`] convenience wrapper:
+/// sized from the environment (`AMOEBA_JOBS`), shared so that repeated
+/// `figure` calls reuse each other's simulations.
+pub fn default_exec() -> &'static SweepExec {
+    static EXEC: OnceLock<SweepExec> = OnceLock::new();
+    EXEC.get_or_init(SweepExec::from_env)
+}
+
+/// Regenerate one figure/table by id on `exec`. `quick` shrinks
+/// workloads for CI.
+pub fn figure_with(exec: &SweepExec, id: &str, quick: bool) -> Option<Table> {
     match id {
         "2" => Some(gtx_scaling_trend()),
-        "3a" => Some(fig3_scaling(false, quick)),
-        "3b" => Some(fig3_scaling(true, quick)),
-        "4" => Some(fig4_coalescing(quick)),
-        "5" => Some(fig5_l1_sharing(quick)),
-        "6" => Some(fig6_control_stalls(quick)),
-        "8" => Some(fig8_cta_consistency(quick)),
-        "12" => Some(fig12_performance(quick)),
-        "13" => Some(fig13_control_stalls(quick)),
-        "14" => Some(fig14_l1i_miss(quick)),
-        "15" => Some(fig15_l1d_miss(quick)),
-        "16" => Some(fig16_mem_access(quick)),
-        "17" => Some(fig17_icnt_stalls(quick)),
-        "18" => Some(fig18_injection(quick)),
-        "19" => Some(fig19_phases(quick)),
-        "20" => Some(fig20_impacts(quick)),
-        "21" => Some(fig21_vs_dws(quick)),
+        "3a" => Some(fig3_scaling(exec, false, quick)),
+        "3b" => Some(fig3_scaling(exec, true, quick)),
+        "4" => Some(fig4_coalescing(exec, quick)),
+        "5" => Some(fig5_l1_sharing(exec, quick)),
+        "6" => Some(fig6_control_stalls(exec, quick)),
+        "8" => Some(fig8_cta_consistency(exec, quick)),
+        "12" => Some(fig12_performance(exec, quick)),
+        "13" => Some(fig13_control_stalls(exec, quick)),
+        "14" => Some(fig14_l1i_miss(exec, quick)),
+        "15" => Some(fig15_l1d_miss(exec, quick)),
+        "16" => Some(fig16_mem_access(exec, quick)),
+        "17" => Some(fig17_icnt_stalls(exec, quick)),
+        "18" => Some(fig18_injection(exec, quick)),
+        "19" => Some(fig19_phases(exec, quick)),
+        "20" => Some(fig20_impacts(exec, quick)),
+        "21" => Some(fig21_vs_dws(exec, quick)),
         "t1" => Some(table1_config()),
         "t2" => Some(table2_coefficients()),
         _ => None,
     }
+}
+
+/// Regenerate one figure/table by id on the shared [`default_exec`].
+pub fn figure(id: &str, quick: bool) -> Option<Table> {
+    figure_with(default_exec(), id, quick)
 }

@@ -32,6 +32,7 @@
 pub mod amoeba;
 pub mod baselines;
 pub mod config;
+pub mod errors;
 pub mod harness;
 pub mod isa;
 pub mod runtime;
@@ -42,6 +43,7 @@ pub mod workload;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{NocMode, Scheme, SystemConfig};
+    pub use crate::harness::{SimJob, SweepExec};
     pub use crate::sim::{self, gpu::SimReport};
     pub use crate::workload::{self, BenchProfile};
 }

@@ -1,14 +1,17 @@
 //! `amoeba` CLI — simulate benchmarks under any scheme, sweep the suite,
 //! or inspect the machine configuration.
 //!
-//! Argument parsing is hand-rolled (the offline vendored registry ships no
-//! CLI crates); see `usage()` for the grammar.
+//! Argument parsing is hand-rolled and errors are plain strings (the
+//! offline build has no CLI or error crates); see `usage()` for the
+//! grammar. Sweeps fan out across cores through the
+//! [`amoeba_gpu::harness::SweepExec`] executor — set `AMOEBA_JOBS` to
+//! control the thread count.
 
 use std::str::FromStr;
 
-use anyhow::{anyhow, bail, Result};
-
 use amoeba_gpu::config::{NocMode, Scheme, SystemConfig};
+use amoeba_gpu::errors::{err, Result};
+use amoeba_gpu::harness::{SimJob, SweepExec};
 use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_with_controller};
 use amoeba_gpu::stats::Table;
 use amoeba_gpu::workload::{all_benchmarks, bench};
@@ -19,12 +22,15 @@ fn usage() -> &'static str {
 USAGE:
   amoeba run <BENCH> [--scheme S] [--sms N] [--perfect-noc] [--seed N]
                      [--hlo-predictor]
-  amoeba sweep [--quick]
+  amoeba sweep [--quick] [--jobs N]
   amoeba list
   amoeba config
 
 SCHEMES: baseline | scale_up | static_fuse | direct_split |
-         warp_regrouping | dws"
+         warp_regrouping | dws
+
+Sweeps run in parallel; --jobs (or the AMOEBA_JOBS env var) sets the
+worker count, defaulting to the machine's available parallelism."
 }
 
 fn main() -> Result<()> {
@@ -45,7 +51,7 @@ fn main() -> Result<()> {
             println!("{}", usage());
             Ok(())
         }
-        other => bail!("unknown command '{other}'\n\n{}", usage()),
+        other => Err(err(format!("unknown command '{other}'\n\n{}", usage()))),
     }
 }
 
@@ -56,7 +62,7 @@ fn opt_value<'a>(args: &'a [String], flag: &str) -> Result<Option<&'a str>> {
         Some(i) => args
             .get(i + 1)
             .map(|s| Some(s.as_str()))
-            .ok_or_else(|| anyhow!("{flag} needs a value")),
+            .ok_or_else(|| err(format!("{flag} needs a value"))),
     }
 }
 
@@ -68,11 +74,11 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let name = args
         .iter()
         .find(|a| !a.starts_with("--"))
-        .ok_or_else(|| anyhow!("run needs a benchmark name\n\n{}", usage()))?;
+        .ok_or_else(|| err(format!("run needs a benchmark name\n\n{}", usage())))?;
     let profile =
-        bench(name).ok_or_else(|| anyhow!("unknown benchmark '{name}' (try `amoeba list`)"))?;
+        bench(name).ok_or_else(|| err(format!("unknown benchmark '{name}' (try `amoeba list`)")))?;
     let scheme = match opt_value(args, "--scheme")? {
-        Some(s) => Scheme::from_str(s).map_err(|e| anyhow!(e))?,
+        Some(s) => Scheme::from_str(s).map_err(err)?,
         None => Scheme::WarpRegroup,
     };
     let mut cfg = SystemConfig::gtx480();
@@ -129,29 +135,48 @@ fn cmd_run(args: &[String]) -> Result<()> {
 
 fn cmd_sweep(args: &[String]) -> Result<()> {
     let quick = has_flag(args, "--quick");
+    let exec = match opt_value(args, "--jobs")? {
+        Some(n) => SweepExec::new(n.parse()?),
+        None => SweepExec::from_env(),
+    };
     let mut cfg = SystemConfig::gtx480();
     if quick {
         cfg.num_sms = 8;
         cfg.num_mcs = 4;
     }
-    let mut t = Table::new(
-        "IPC by scheme",
-        &["bench", "baseline", "scale_up", "static_fuse", "direct_split", "warp_regrouping", "dws"],
-    );
+
+    // Fan the whole (bench x scheme) grid out across the executor at once
+    // instead of simulating cell by cell.
+    let mut jobs = Vec::new();
+    let mut profiles = Vec::new();
     for mut p in all_benchmarks() {
         if quick {
             p.num_ctas = p.num_ctas.min(12);
             p.insns_per_thread = p.insns_per_thread.min(100);
             p.num_kernels = 1;
         }
-        let row: Vec<f64> = Scheme::ALL
-            .iter()
-            .map(|s| run_benchmark_seeded(&cfg, &p, *s, 0xAB0EBA).ipc())
+        for s in Scheme::ALL {
+            jobs.push(SimJob::new(cfg.clone(), p.clone(), s, 0xAB0EBA));
+        }
+        profiles.push(p);
+    }
+    eprintln!(
+        "[sweep] {} simulations on {} threads...",
+        jobs.len(),
+        exec.threads()
+    );
+    let reports = exec.run_batch(jobs);
+
+    let mut t = Table::new(
+        "IPC by scheme",
+        &["bench", "baseline", "scale_up", "static_fuse", "direct_split", "warp_regrouping", "dws"],
+    );
+    for (bi, p) in profiles.iter().enumerate() {
+        let row: Vec<f64> = (0..Scheme::ALL.len())
+            .map(|si| reports[bi * Scheme::ALL.len() + si].ipc())
             .collect();
         t.row(p.name, row);
-        eprint!(".");
     }
-    eprintln!();
     println!("{}", t.render());
     Ok(())
 }

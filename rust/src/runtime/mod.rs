@@ -9,10 +9,22 @@
 //!
 //! Python never runs here: the artifacts are built once by
 //! `make artifacts` and the rust binary is self-contained afterwards.
+//!
+//! ## The `xla` feature
+//!
+//! The PJRT backend needs the vendored `xla` crate, which the offline
+//! default build does not ship. The real implementation is gated behind
+//! `--features xla`; without it this module compiles a **stub** with the
+//! same public surface whose `load` always fails with a descriptive
+//! error. Probing consumers (the parity tests, `bench_predictor`) treat
+//! the failed load as "skip"; consumers that *require* the backend
+//! (`amoeba run --hlo-predictor`, `examples/train_predictor.rs`) exit
+//! with that error and point at the `xla` feature. Either way the
+//! default build compiles and the simulator itself always runs on the
+//! native predictor.
 
-use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow as eyre, Context, Result};
+use std::fmt;
+use std::path::PathBuf;
 
 use crate::amoeba::metrics::{MetricsSample, NUM_FEATURES};
 use crate::amoeba::predictor::ScalePredictor;
@@ -33,86 +45,182 @@ pub fn artifact_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(ARTIFACT_DIR)
 }
 
-/// A compiled HLO executable on the PJRT CPU client.
-pub struct HloExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Artifact path (diagnostics).
-    pub path: PathBuf,
+/// Runtime-layer error (dep-free; the crate builds without `anyhow`).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
 }
 
-/// The PJRT runtime: one CPU client, executables loaded on demand.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
+impl std::error::Error for RuntimeError {}
+
+/// Runtime result alias.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn eyre(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at the default artifact dir.
-    pub fn new() -> Result<Self> {
-        Self::with_dir(artifact_dir())
+// ---------------------------------------------------------------------
+// Real backend (requires the vendored `xla` crate)
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "xla")]
+mod backend {
+    use std::path::{Path, PathBuf};
+
+    use super::{artifact_dir, eyre, Result};
+
+    /// A compiled HLO executable on the PJRT CPU client.
+    pub struct HloExecutable {
+        pub(super) exe: xla::PjRtLoadedExecutable,
+        /// Artifact path (diagnostics).
+        pub path: PathBuf,
     }
 
-    /// Create a CPU PJRT client rooted at `dir`.
-    pub fn with_dir(dir: impl Into<PathBuf>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, dir: dir.into() })
+    /// The PJRT runtime: one CPU client, executables loaded on demand.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
     }
 
-    /// Platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile `name` (e.g. "predictor_infer") from the artifact
-    /// directory.
-    pub fn load(&self, name: &str) -> Result<HloExecutable> {
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        self.load_path(&path)
-    }
-
-    /// Load and compile an HLO-text file.
-    pub fn load_path(&self, path: &Path) -> Result<HloExecutable> {
-        if !path.exists() {
-            return Err(eyre!(
-                "artifact {} missing — run `make artifacts` first",
-                path.display()
-            ));
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at the default artifact dir.
+        pub fn new() -> Result<Self> {
+            Self::with_dir(artifact_dir())
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| eyre!("non-utf8 path"))?,
-        )
-        .map_err(|e| eyre!("parse HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| eyre!("compile {}: {e:?}", path.display()))?;
-        Ok(HloExecutable { exe, path: path.to_path_buf() })
+
+        /// Create a CPU PJRT client rooted at `dir`.
+        pub fn with_dir(dir: impl Into<PathBuf>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| eyre(format!("PJRT cpu client: {e:?}")))?;
+            Ok(Runtime { client, dir: dir.into() })
+        }
+
+        /// Platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile `name` (e.g. "predictor_infer") from the
+        /// artifact directory.
+        pub fn load(&self, name: &str) -> Result<HloExecutable> {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            self.load_path(&path)
+        }
+
+        /// Load and compile an HLO-text file.
+        pub fn load_path(&self, path: &Path) -> Result<HloExecutable> {
+            if !path.exists() {
+                return Err(eyre(format!(
+                    "artifact {} missing — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| eyre("non-utf8 path"))?,
+            )
+            .map_err(|e| eyre(format!("parse HLO text {}: {e:?}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| eyre(format!("compile {}: {e:?}", path.display())))?;
+            Ok(HloExecutable { exe, path: path.to_path_buf() })
+        }
+    }
+
+    impl HloExecutable {
+        /// Execute with literal inputs; returns the elements of the output
+        /// tuple (aot.py lowers with `return_tuple=True`).
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| eyre(format!("execute {}: {e:?}", self.path.display())))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| eyre(format!("fetch result: {e:?}")))?;
+            decompose_tuple(out)
+        }
+    }
+
+    /// Split a (possibly 1-ary) tuple literal into its elements.
+    fn decompose_tuple(mut lit: xla::Literal) -> Result<Vec<xla::Literal>> {
+        match lit.decompose_tuple() {
+            Ok(parts) if !parts.is_empty() => Ok(parts),
+            _ => Ok(vec![lit]),
+        }
     }
 }
 
-impl HloExecutable {
-    /// Execute with literal inputs; returns the elements of the output
-    /// tuple (aot.py lowers with `return_tuple=True`).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| eyre!("execute {}: {e:?}", self.path.display()))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| eyre!("fetch result: {e:?}"))?;
-        decompose_tuple(out)
+// ---------------------------------------------------------------------
+// Stub backend (default offline build)
+// ---------------------------------------------------------------------
+
+#[cfg(not(feature = "xla"))]
+mod backend {
+    use std::path::{Path, PathBuf};
+
+    use super::{artifact_dir, eyre, Result};
+
+    /// Stub handle; never constructed (loading always fails without the
+    /// `xla` feature).
+    pub struct HloExecutable {
+        /// Artifact path (diagnostics).
+        pub path: PathBuf,
+    }
+
+    /// Stub runtime: construction succeeds so callers can probe for
+    /// artifacts and report a precise reason for skipping, but `load`
+    /// always fails.
+    pub struct Runtime {
+        dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Stub client rooted at the default artifact dir.
+        pub fn new() -> Result<Self> {
+            Self::with_dir(artifact_dir())
+        }
+
+        /// Stub client rooted at `dir`.
+        pub fn with_dir(dir: impl Into<PathBuf>) -> Result<Self> {
+            Ok(Runtime { dir: dir.into() })
+        }
+
+        /// Platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            "stub (xla feature disabled)".to_string()
+        }
+
+        /// Always fails: either the artifact is missing (same message as
+        /// the real backend) or the backend itself is unavailable.
+        pub fn load(&self, name: &str) -> Result<HloExecutable> {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            self.load_path(&path)
+        }
+
+        /// See [`Runtime::load`].
+        pub fn load_path(&self, path: &Path) -> Result<HloExecutable> {
+            if !path.exists() {
+                return Err(eyre(format!(
+                    "artifact {} missing — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            Err(eyre(format!(
+                "artifact {} present, but this build has no PJRT backend \
+                 (rebuild with `--features xla`)",
+                path.display()
+            )))
+        }
     }
 }
 
-/// Split a (possibly 1-ary) tuple literal into its elements.
-fn decompose_tuple(mut lit: xla::Literal) -> Result<Vec<xla::Literal>> {
-    match lit.decompose_tuple() {
-        Ok(parts) if !parts.is_empty() => Ok(parts),
-        _ => Ok(vec![lit]),
-    }
-}
+pub use backend::{HloExecutable, Runtime};
 
 // ---------------------------------------------------------------------
 // Predictor backend
@@ -121,7 +229,10 @@ fn decompose_tuple(mut lit: xla::Literal) -> Result<Vec<xla::Literal>> {
 /// The scalability predictor executed through the compiled HLO — the
 /// reproduction of the paper's MAC-IP decision block, running the same
 /// numerics as the Pallas kernel (verified against `NativePredictor`).
+/// Without the `xla` feature, construction fails (callers fall back to
+/// the native predictor).
 pub struct HloPredictor {
+    #[cfg(feature = "xla")]
     exe: HloExecutable,
     weights: Vec<f32>,
     intercept: f32,
@@ -130,18 +241,37 @@ pub struct HloPredictor {
 impl HloPredictor {
     /// Load `predictor_infer.hlo.txt` with the given coefficients.
     pub fn new(rt: &Runtime, weights: [f32; NUM_FEATURES], intercept: f32) -> Result<Self> {
-        let exe = rt.load("predictor_infer")?;
-        Ok(HloPredictor { exe, weights: weights.to_vec(), intercept })
+        #[cfg(feature = "xla")]
+        {
+            let exe = rt.load("predictor_infer")?;
+            Ok(HloPredictor { exe, weights: weights.to_vec(), intercept })
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            rt.load("predictor_infer")?;
+            // `load` always errs in the stub; keep the constructor total.
+            Ok(HloPredictor { weights: weights.to_vec(), intercept })
+        }
     }
 
     /// Run one inference; returns P(scale-up).
+    #[cfg(feature = "xla")]
     pub fn infer(&self, features: &[f32; NUM_FEATURES]) -> Result<f64> {
-        let x = xla::Literal::vec1(&features[..]).reshape(&[1, NUM_FEATURES as i64])?;
+        let x = xla::Literal::vec1(&features[..])
+            .reshape(&[1, NUM_FEATURES as i64])
+            .map_err(|e| eyre(format!("reshape input: {e:?}")))?;
         let w = xla::Literal::vec1(&self.weights[..]);
         let b = xla::Literal::scalar(self.intercept);
         let out = self.exe.run(&[x, w, b])?;
-        let p: Vec<f32> = out[0].to_vec()?;
+        let p: Vec<f32> = out[0].to_vec().map_err(|e| eyre(format!("fetch output: {e:?}")))?;
         Ok(p[0] as f64)
+    }
+
+    /// Run one inference; returns P(scale-up). Stub: always errs.
+    #[cfg(not(feature = "xla"))]
+    pub fn infer(&self, _features: &[f32; NUM_FEATURES]) -> Result<f64> {
+        let _ = (&self.weights, self.intercept);
+        Err(eyre("PJRT backend unavailable (build with `--features xla`)"))
     }
 }
 
@@ -156,6 +286,7 @@ impl ScalePredictor for HloPredictor {
 /// A batched trainer driving `predictor_train.hlo.txt` (one SGD step per
 /// call; the epoch loop lives in `examples/train_predictor.rs`).
 pub struct HloTrainer {
+    #[cfg(feature = "xla")]
     exe: HloExecutable,
     /// Current weights.
     pub weights: Vec<f32>,
@@ -172,40 +303,61 @@ impl HloTrainer {
 
     /// Load the train-step artifact with zero-initialised parameters.
     pub fn new(rt: &Runtime) -> Result<Self> {
-        let exe = rt.load("predictor_train")?;
-        Ok(HloTrainer {
-            exe,
-            weights: vec![0.0; NUM_FEATURES],
-            intercept: 0.0,
-            batch: Self::TRAIN_BATCH,
-        })
+        #[cfg(feature = "xla")]
+        {
+            let exe = rt.load("predictor_train")?;
+            Ok(HloTrainer {
+                exe,
+                weights: vec![0.0; NUM_FEATURES],
+                intercept: 0.0,
+                batch: Self::TRAIN_BATCH,
+            })
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            rt.load("predictor_train")?;
+            Ok(HloTrainer {
+                weights: vec![0.0; NUM_FEATURES],
+                intercept: 0.0,
+                batch: Self::TRAIN_BATCH,
+            })
+        }
     }
 
     /// One SGD step over a fixed-size batch; returns the loss.
     /// `x` is row-major `[batch][NUM_FEATURES]`, `y` in {0,1}.
+    #[cfg(feature = "xla")]
     pub fn step(&mut self, x: &[f32], y: &[f32], lr: f32) -> Result<f32> {
         if x.len() != self.batch * NUM_FEATURES || y.len() != self.batch {
-            return Err(eyre!(
+            return Err(eyre(format!(
                 "train step needs exactly {} samples (got x={} y={})",
                 self.batch,
                 x.len() / NUM_FEATURES,
                 y.len()
-            ));
+            )));
         }
-        let xl = xla::Literal::vec1(x).reshape(&[self.batch as i64, NUM_FEATURES as i64])?;
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[self.batch as i64, NUM_FEATURES as i64])
+            .map_err(|e| eyre(format!("reshape batch: {e:?}")))?;
         let yl = xla::Literal::vec1(y);
         let wl = xla::Literal::vec1(&self.weights[..]);
         let bl = xla::Literal::scalar(self.intercept);
         let lrl = xla::Literal::scalar(lr);
         let out = self.exe.run(&[xl, yl, wl, bl, lrl])?;
         if out.len() != 3 {
-            return Err(eyre!("train step returned {} outputs, want 3", out.len()));
+            return Err(eyre(format!("train step returned {} outputs, want 3", out.len())));
         }
-        self.weights = out[0].to_vec::<f32>().context("weights out")?;
-        let b: Vec<f32> = out[1].to_vec().context("bias out")?;
-        let loss: Vec<f32> = out[2].to_vec().context("loss out")?;
+        self.weights = out[0].to_vec::<f32>().map_err(|e| eyre(format!("weights out: {e:?}")))?;
+        let b: Vec<f32> = out[1].to_vec().map_err(|e| eyre(format!("bias out: {e:?}")))?;
+        let loss: Vec<f32> = out[2].to_vec().map_err(|e| eyre(format!("loss out: {e:?}")))?;
         self.intercept = b[0];
         Ok(loss[0])
+    }
+
+    /// One SGD step. Stub: always errs.
+    #[cfg(not(feature = "xla"))]
+    pub fn step(&mut self, _x: &[f32], _y: &[f32], _lr: f32) -> Result<f32> {
+        Err(eyre("PJRT backend unavailable (build with `--features xla`)"))
     }
 }
 
@@ -269,5 +421,17 @@ mod tests {
             Ok(_) => panic!("load from a nonexistent dir must fail"),
         };
         assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_backend_reports_itself() {
+        let rt = Runtime::new().unwrap();
+        assert!(rt.platform().contains("stub"));
+        let sample = MetricsSample { features: [0.2; NUM_FEATURES] };
+        // An un-loadable predictor cannot exist; but the fallback path of
+        // `probability` is exercised through a hand-built instance.
+        let mut p = HloPredictor { weights: vec![0.5; NUM_FEATURES], intercept: -1.0 };
+        assert_eq!(p.probability(&sample), 0.5, "stub falls back to 0.5");
     }
 }

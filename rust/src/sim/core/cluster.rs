@@ -8,11 +8,9 @@
 //! re-separates the schedulers/datapaths while *keeping* the merged L1s
 //! and the single NoC interface.
 
-use std::collections::HashMap;
-
 use crate::config::{SplitPolicy, SystemConfig};
 use crate::isa::{ActiveMask, KernelLaunch, MemSpace, Op, WarpId};
-use crate::sim::mem::{coalesce, coalesce_fused, Access, Cache};
+use crate::sim::mem::{coalesce_fused_into, coalesce_into, Access, Cache};
 use crate::sim::noc::{Noc, Packet, Payload, Subnet};
 use crate::stats::{SmStats, StallReason};
 use crate::workload::TraceGen;
@@ -70,6 +68,10 @@ enum Waiter {
 /// One line in flight beyond L1 and everyone waiting on it.
 #[derive(Debug)]
 struct PendingLine {
+    /// Lookup key: line | kind | cache-index (see `pending_key`).
+    key: u64,
+    /// Line address (replies carry only this).
+    line: u64,
     kind: CacheKind,
     half: u8,
     waiters: Vec<Waiter>,
@@ -77,6 +79,76 @@ struct PendingLine {
     sent: u64,
     /// Request actually injected into the NoC yet?
     injected: bool,
+}
+
+/// Slot table for lines in flight beyond L1 — the MSHR-style replacement
+/// for the previous per-miss `HashMap`. The live population is bounded
+/// by the caches' MSHR capacities (tens of entries), a regime where a
+/// dense linear scan beats hashing, and both the entry array and the
+/// per-entry waiter vectors are pooled, so the steady-state cycle loop
+/// performs no heap allocation here.
+#[derive(Debug, Default)]
+struct PendingTable {
+    entries: Vec<PendingLine>,
+    /// Recycled waiter vectors (avoids one heap alloc per L1 miss).
+    waiter_pool: Vec<Vec<Waiter>>,
+}
+
+impl PendingTable {
+    fn with_capacity(cap: usize) -> Self {
+        PendingTable { entries: Vec::with_capacity(cap), waiter_pool: Vec::with_capacity(cap) }
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn iter(&self) -> std::slice::Iter<'_, PendingLine> {
+        self.entries.iter()
+    }
+
+    fn get_mut(&mut self, key: u64) -> Option<&mut PendingLine> {
+        self.entries.iter_mut().find(|e| e.key == key)
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.entries.iter().any(|e| e.key == key)
+    }
+
+    /// Allocate a slot for a new in-flight line with its first waiter.
+    fn insert(&mut self, key: u64, line: u64, kind: CacheKind, half: u8, waiter: Waiter, now: u64) {
+        debug_assert!(!self.contains(key), "MissNew on an already-pending line");
+        let mut waiters = self.waiter_pool.pop().unwrap_or_default();
+        waiters.clear();
+        waiters.push(waiter);
+        self.entries.push(PendingLine { key, line, kind, half, waiters, sent: now, injected: false });
+    }
+
+    /// Remove and return the first *injected* entry for `line` (replies
+    /// carry only the line address). Pass the drained entry back through
+    /// [`PendingTable::recycle`] to keep its waiter storage pooled.
+    fn take_reply(&mut self, line: u64) -> Option<PendingLine> {
+        let i = self.entries.iter().position(|e| e.line == line && e.injected)?;
+        Some(self.entries.swap_remove(i))
+    }
+
+    /// Return an entry's waiter storage to the pool.
+    fn recycle(&mut self, mut entry: PendingLine) {
+        entry.waiters.clear();
+        self.waiter_pool.push(entry.waiters);
+    }
+
+    /// Drop all entries (reconfiguration / kernel-boundary flush),
+    /// keeping the pooled storage.
+    fn clear(&mut self) {
+        while let Some(e) = self.entries.pop() {
+            self.recycle(e);
+        }
+    }
 }
 
 /// An LSU queue entry: one post-coalescing transaction.
@@ -129,7 +201,10 @@ pub struct SmCluster {
     lsu: std::collections::VecDeque<Transaction>,
     /// Lines in flight beyond L1, keyed by line|kind|cache-index (the low
     /// 7 bits of a line address are zero, so the key packing is lossless).
-    pending: HashMap<u64, PendingLine>,
+    pending: PendingTable,
+    /// Reusable coalescing output buffer (hot-path alloc elimination:
+    /// one buffer serves every memory instruction issued by the cluster).
+    coalesce_scratch: Vec<u64>,
 
     sched: [HalfSched; 2],
     age_counter: u64,
@@ -173,7 +248,12 @@ impl SmCluster {
             l1c: [mk(cfg.l1c_bytes), mk(cfg.l1c_bytes)],
             l1t: [mk(cfg.l1t_bytes), mk(cfg.l1t_bytes)],
             lsu: std::collections::VecDeque::new(),
-            pending: HashMap::new(),
+            // Worst-case occupancy: 4 cache kinds x 2 halves, each with
+            // its own MSHR budget (the fused data cache doubles to
+            // 2*mshr_per_sm but merged modes use one cache index), so
+            // 8*mshr_per_sm covers every mode without regrowth.
+            pending: PendingTable::with_capacity(8 * cfg.mshr_per_sm),
+            coalesce_scratch: Vec::with_capacity(8),
             sched: [HalfSched::default(), HalfSched::default()],
             age_counter: 0,
             stats: SmStats::default(),
@@ -587,17 +667,18 @@ impl SmCluster {
             Op::IAlu | Op::FAlu | Op::Sfu => {}
             Op::Ld { space: MemSpace::Shared, .. } | Op::St { space: MemSpace::Shared, .. } => {}
             Op::Ld { space, pattern } => {
-                let res = self.coalesce_for(gen, cta, sub1, n_sub, pc, &pattern, mask, width);
+                let mut lines = std::mem::take(&mut self.coalesce_scratch);
+                let requests = self.coalesce_for(gen, cta, sub1, n_sub, pc, &pattern, mask, width, &mut lines);
                 self.stats.mem_insns += 1;
-                self.stats.mem_requests += res.requests as u64;
-                self.stats.mem_transactions += res.lines.len() as u64;
+                self.stats.mem_requests += requests as u64;
+                self.stats.mem_transactions += lines.len() as u64;
                 let kind = match space {
                     MemSpace::Const => CacheKind::Const,
                     MemSpace::Texture => CacheKind::Texture,
                     _ => CacheKind::Data,
                 };
-                self.warps[wi].outstanding_loads += res.lines.len() as u32;
-                for line in res.lines {
+                self.warps[wi].outstanding_loads += lines.len() as u32;
+                for &line in &lines {
                     self.lsu.push_back(Transaction {
                         line,
                         kind,
@@ -607,13 +688,15 @@ impl SmCluster {
                         needs_inject: false,
                     });
                 }
+                self.coalesce_scratch = lines;
             }
             Op::St { pattern, .. } => {
-                let res = self.coalesce_for(gen, cta, sub1, n_sub, pc, &pattern, mask, width);
+                let mut lines = std::mem::take(&mut self.coalesce_scratch);
+                let requests = self.coalesce_for(gen, cta, sub1, n_sub, pc, &pattern, mask, width, &mut lines);
                 self.stats.mem_insns += 1;
-                self.stats.mem_requests += res.requests as u64;
-                self.stats.mem_transactions += res.lines.len() as u64;
-                for line in res.lines {
+                self.stats.mem_requests += requests as u64;
+                self.stats.mem_transactions += lines.len() as u64;
+                for &line in &lines {
                     self.lsu.push_back(Transaction {
                         line,
                         kind: CacheKind::Data,
@@ -623,6 +706,7 @@ impl SmCluster {
                         needs_inject: false,
                     });
                 }
+                self.coalesce_scratch = lines;
             }
             Op::Branch { diverges, region_len } => {
                 self.stats.branches += 1;
@@ -729,6 +813,9 @@ impl SmCluster {
         }
     }
 
+    /// Coalesce one warp access into `lines` (cleared first; the caller
+    /// passes the cluster's reusable scratch buffer). Returns the
+    /// lane-level request count.
     #[allow(clippy::too_many_arguments)]
     fn coalesce_for(
         &self,
@@ -740,15 +827,16 @@ impl SmCluster {
         pattern: &crate::isa::AccessPattern,
         mask: ActiveMask,
         width: usize,
-    ) -> crate::sim::mem::CoalesceResult {
+        lines: &mut Vec<u64>,
+    ) -> u32 {
         if n_sub == 2 {
             let pat1 = match gen.resolve(cta, sub1, pc) {
                 Op::Ld { pattern, .. } | Op::St { pattern, .. } => pattern,
                 _ => *pattern,
             };
-            coalesce_fused(pattern, &pat1, mask, self.cfg.line_bytes)
+            coalesce_fused_into(pattern, &pat1, mask, self.cfg.line_bytes, lines)
         } else {
-            coalesce(pattern, mask, width, self.cfg.line_bytes)
+            coalesce_into(pattern, mask, width, self.cfg.line_bytes, lines)
         }
     }
 
@@ -811,17 +899,19 @@ impl SmCluster {
 
         match op {
             Op::Ld { space, pattern } if space != MemSpace::Shared => {
-                let res = coalesce(&pattern, mask, width.min(64), self.cfg.line_bytes);
+                let mut lines = std::mem::take(&mut self.coalesce_scratch);
+                let requests =
+                    coalesce_into(&pattern, mask, width.min(64), self.cfg.line_bytes, &mut lines);
                 self.stats.mem_insns += 1;
-                self.stats.mem_requests += res.requests as u64;
-                self.stats.mem_transactions += res.lines.len() as u64;
+                self.stats.mem_requests += requests as u64;
+                self.stats.mem_transactions += lines.len() as u64;
                 let kind = match space {
                     MemSpace::Const => CacheKind::Const,
                     MemSpace::Texture => CacheKind::Texture,
                     _ => CacheKind::Data,
                 };
-                self.shadows[si].outstanding_loads += res.lines.len() as u32;
-                for line in res.lines {
+                self.shadows[si].outstanding_loads += lines.len() as u32;
+                for &line in &lines {
                     self.lsu.push_back(Transaction {
                         line,
                         kind,
@@ -831,13 +921,16 @@ impl SmCluster {
                         needs_inject: false,
                     });
                 }
+                self.coalesce_scratch = lines;
             }
             Op::St { space, pattern } if space != MemSpace::Shared => {
-                let res = coalesce(&pattern, mask, width.min(64), self.cfg.line_bytes);
+                let mut lines = std::mem::take(&mut self.coalesce_scratch);
+                let requests =
+                    coalesce_into(&pattern, mask, width.min(64), self.cfg.line_bytes, &mut lines);
                 self.stats.mem_insns += 1;
-                self.stats.mem_requests += res.requests as u64;
-                self.stats.mem_transactions += res.lines.len() as u64;
-                for line in res.lines {
+                self.stats.mem_requests += requests as u64;
+                self.stats.mem_transactions += lines.len() as u64;
+                for &line in &lines {
                     self.lsu.push_back(Transaction {
                         line,
                         kind: CacheKind::Data,
@@ -847,6 +940,7 @@ impl SmCluster {
                         needs_inject: false,
                     });
                 }
+                self.coalesce_scratch = lines;
             }
             _ => {}
         }
@@ -895,7 +989,7 @@ impl SmCluster {
                 let node = self.node_for(tx.half, noc_nodes);
                 if self.inject_request(now, noc, node, tx.line, tx.is_write) {
                     let key = Self::pending_key(tx.line, tx.kind, ci);
-                    if let Some(p) = self.pending.get_mut(&key) {
+                    if let Some(p) = self.pending.get_mut(key) {
                         p.injected = true;
                         p.sent = now;
                     }
@@ -933,7 +1027,7 @@ impl SmCluster {
                     let key = Self::pending_key(tx.line, tx.kind, ci);
                     let p = self
                         .pending
-                        .get_mut(&key)
+                        .get_mut(key)
                         .expect("MissMerged implies a pending entry (MissNew creates it)");
                     p.waiters.push(tx.waiter);
                     self.lsu.pop_front();
@@ -942,17 +1036,7 @@ impl SmCluster {
                     self.count_access(tx.kind, true);
                     self.stats.mshr_allocs += 1;
                     let key = Self::pending_key(tx.line, tx.kind, ci);
-                    let prev = self.pending.insert(
-                        key,
-                        PendingLine {
-                            kind: tx.kind,
-                            half: tx.half,
-                            waiters: vec![tx.waiter],
-                            sent: now,
-                            injected: false,
-                        },
-                    );
-                    debug_assert!(prev.is_none(), "MissNew on an already-pending line");
+                    self.pending.insert(key, tx.line, tx.kind, tx.half, tx.waiter, now);
                     // Transition to the injection state (retries at front).
                     if let Some(front) = self.lsu.front_mut() {
                         front.needs_inject = true;
@@ -1034,29 +1118,17 @@ impl SmCluster {
         if is_write {
             return; // write-through acks carry no waiters
         }
-        // Locate the pending entry: try all (kind, ci) key combinations.
-        let mut found = None;
-        'outer: for kind in [CacheKind::Data, CacheKind::Instr, CacheKind::Const, CacheKind::Texture]
-        {
-            for ci in 0..2 {
-                let key = Self::pending_key(line, kind, ci);
-                if let Some(p) = self.pending.get(&key) {
-                    if p.injected {
-                        found = Some(key);
-                        break 'outer;
-                    }
-                }
-            }
-        }
-        let Some(key) = found else { return };
-        let p = self.pending.remove(&key).unwrap();
+        // One scan finds the injected entry regardless of which cache
+        // kind / half it belongs to (entries carry their line address).
+        let Some(p) = self.pending.take_reply(line) else { return };
         self.stats.noc_latency_sum += now.saturating_sub(p.sent);
         self.stats.noc_latency_samples += 1;
         let ci = self.cache_idx(p.half);
         self.cache_mut(p.kind, ci).fill(line);
-        for w in p.waiters {
-            self.release(w);
+        for i in 0..p.waiters.len() {
+            self.release(p.waiters[i]);
         }
+        self.pending.recycle(p);
     }
 
     fn release(&mut self, w: Waiter) {
@@ -1090,7 +1162,7 @@ impl SmCluster {
         if self.shadows.iter().all(|s| s.complete())
             && !self
                 .pending
-                .values()
+                .iter()
                 .any(|p| p.waiters.iter().any(|w| matches!(w, Waiter::Shadow(_) | Waiter::IFetchShadow(_))))
             && !self
                 .lsu

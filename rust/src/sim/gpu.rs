@@ -95,6 +95,9 @@ pub struct Gpu {
     phases: Vec<PhaseSample>,
     samples: Vec<MetricsSample>,
     decisions: Vec<KernelDecision>,
+    /// Reusable per-cycle partition-reply buffer (hot-path alloc
+    /// elimination: one buffer serves every MC every cycle).
+    reply_scratch: Vec<PartitionReply>,
 }
 
 impl Gpu {
@@ -129,6 +132,7 @@ impl Gpu {
             phases: Vec::new(),
             samples: Vec::new(),
             decisions: Vec::new(),
+            reply_scratch: Vec::with_capacity(MC_REPLY_BUDGET),
         }
     }
 
@@ -213,7 +217,10 @@ impl Gpu {
             }
         }
 
-        // 4. Partitions tick; replies head for the reply subnet.
+        // 4. Partitions tick; replies head for the reply subnet. The
+        // emission buffer is owned by the Gpu and reused across MCs and
+        // cycles (no per-cycle allocation).
+        let mut out = std::mem::take(&mut self.reply_scratch);
         for mc in 0..self.partitions.len() {
             self.chip.mc_cycles += 1;
             let node = self.mc_node(mc);
@@ -228,9 +235,10 @@ impl Gpu {
                 }
             }
             let budget = MC_REPLY_BUDGET.saturating_sub(self.reply_retry[mc].len());
-            let mut out: Vec<PartitionReply> = Vec::with_capacity(budget);
+            out.clear();
             let emit_stalled = self.partitions[mc].tick(now, &mut out, budget);
-            for r in out {
+            for i in 0..out.len() {
+                let r = out[i];
                 if !self.try_inject_reply(now, node, &r) {
                     self.reply_retry[mc].push_back(r);
                     stalled = true;
@@ -241,6 +249,7 @@ impl Gpu {
                 self.chip.mc_inject_stall_cycles += 1;
             }
         }
+        self.reply_scratch = out;
 
         // 5. SM side: reply delivery.
         let sm_nodes = self.noc.nodes() - self.cfg.num_mcs;

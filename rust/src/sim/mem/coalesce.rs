@@ -25,20 +25,23 @@ impl CoalesceResult {
     }
 }
 
-/// Coalesce the addresses generated by `pattern` for the active lanes of a
-/// `width`-wide warp into `line_bytes`-sized transactions.
+/// Coalesce into a caller-owned line buffer (cleared first); returns the
+/// number of lane-level requests. This is the hot-path entry: the SM
+/// cluster owns one scratch buffer and reuses it for every memory
+/// instruction instead of allocating a fresh `Vec` per access.
 ///
 /// For fused warps the caller passes two patterns (one per 32-wide
-/// sub-warp); see [`coalesce_fused`].
-pub fn coalesce(
+/// sub-warp); see [`coalesce_fused_into`].
+pub fn coalesce_into(
     pattern: &AccessPattern,
     mask: ActiveMask,
     width: usize,
     line_bytes: usize,
-) -> CoalesceResult {
+    lines: &mut Vec<u64>,
+) -> u32 {
     debug_assert!(line_bytes.is_power_of_two());
+    lines.clear();
     let shift = line_bytes.trailing_zeros();
-    let mut lines: Vec<u64> = Vec::with_capacity(4);
     let mut requests = 0;
     for lane in mask.lanes().take_while(|&l| l < width) {
         requests += 1;
@@ -49,21 +52,23 @@ pub fn coalesce(
             lines.push(line);
         }
     }
-    CoalesceResult { lines, requests }
+    requests
 }
 
-/// Coalesce a fused 64-wide access: the two sub-warps' patterns are merged
-/// through ONE coalescing unit (paper §4.2: "Each fused SM has one copy of
-/// the coalescing unit ... Since the warp size is doubled, this leads to
-/// more chances for coalesced memory accesses").
-pub fn coalesce_fused(
+/// Coalesce a fused 64-wide access into a caller-owned buffer: the two
+/// sub-warps' patterns are merged through ONE coalescing unit (paper
+/// §4.2: "Each fused SM has one copy of the coalescing unit ... Since
+/// the warp size is doubled, this leads to more chances for coalesced
+/// memory accesses"). Returns the lane-level request count.
+pub fn coalesce_fused_into(
     pat_lo: &AccessPattern,
     pat_hi: &AccessPattern,
     mask: ActiveMask,
     line_bytes: usize,
-) -> CoalesceResult {
+    lines: &mut Vec<u64>,
+) -> u32 {
+    lines.clear();
     let shift = line_bytes.trailing_zeros();
-    let mut lines: Vec<u64> = Vec::with_capacity(4);
     let mut requests = 0;
     for lane in mask.lanes() {
         requests += 1;
@@ -77,6 +82,30 @@ pub fn coalesce_fused(
             lines.push(line);
         }
     }
+    requests
+}
+
+/// Allocating wrapper over [`coalesce_into`] (tests / one-shot callers).
+pub fn coalesce(
+    pattern: &AccessPattern,
+    mask: ActiveMask,
+    width: usize,
+    line_bytes: usize,
+) -> CoalesceResult {
+    let mut lines: Vec<u64> = Vec::with_capacity(4);
+    let requests = coalesce_into(pattern, mask, width, line_bytes, &mut lines);
+    CoalesceResult { lines, requests }
+}
+
+/// Allocating wrapper over [`coalesce_fused_into`].
+pub fn coalesce_fused(
+    pat_lo: &AccessPattern,
+    pat_hi: &AccessPattern,
+    mask: ActiveMask,
+    line_bytes: usize,
+) -> CoalesceResult {
+    let mut lines: Vec<u64> = Vec::with_capacity(4);
+    let requests = coalesce_fused_into(pat_lo, pat_hi, mask, line_bytes, &mut lines);
     CoalesceResult { lines, requests }
 }
 

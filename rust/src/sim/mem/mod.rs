@@ -5,7 +5,7 @@ pub mod coalesce;
 pub mod dram;
 
 pub use cache::{Access, Cache};
-pub use coalesce::{coalesce, coalesce_fused, CoalesceResult};
+pub use coalesce::{coalesce, coalesce_fused, coalesce_fused_into, coalesce_into, CoalesceResult};
 pub use dram::{DramReply, DramRequest, MemoryController};
 
 use crate::config::SystemConfig;

@@ -66,6 +66,10 @@ pub struct Noc {
     /// Stats: packets delivered.
     pub packets_delivered: u64,
     inject_depth: usize,
+    /// Reusable per-cycle move buffer (hot-path allocation elimination:
+    /// one buffer serves every router sweep instead of a fresh `Vec` per
+    /// router per cycle).
+    moves_scratch: Vec<(Packet, usize)>,
 }
 
 impl Noc {
@@ -89,6 +93,7 @@ impl Noc {
             flits_routed: 0,
             packets_delivered: 0,
             inject_depth: cfg.noc_inject_depth,
+            moves_scratch: Vec::with_capacity(8),
         }
     }
 
@@ -155,19 +160,20 @@ impl Noc {
 
     fn tick_subnet(&mut self, subnet: usize, now: u64) {
         let width = self.width;
+        let height = self.height;
         let n_routers = self.routers[subnet].len();
         // Each router forwards at most one packet per output direction per
         // cycle. We sweep routers in a rotating order (based on cycle) to
         // avoid systematic unfairness toward low-indexed nodes.
         let start = (now as usize) % n_routers;
+        // The scratch buffer is taken out of `self` for the sweep so the
+        // borrow checker lets us touch other routers while draining it.
+        let mut moves = std::mem::take(&mut self.moves_scratch);
         for step in 0..n_routers {
             let r = (start + step) % n_routers;
             // Decide moves out of router r.
-            let moves = {
-                let router = &mut self.routers[subnet][r];
-                router.plan_moves(now, r, width, self.height)
-            };
-            for (pkt, next) in moves {
+            self.routers[subnet][r].plan_moves_into(now, r, width, height, &mut moves);
+            for (pkt, next) in moves.drain(..) {
                 if next == usize::MAX {
                     // Arrived: eject (bounded only by consumer draining).
                     self.eject[subnet][pkt.dst].push_back(pkt);
@@ -181,6 +187,7 @@ impl Noc {
                 }
             }
         }
+        self.moves_scratch = moves;
     }
 
     /// Pop one delivered packet at `node`, if any.

@@ -114,10 +114,20 @@ impl Router {
     }
 
     /// Select at most one packet per free output direction this cycle and
-    /// dequeue them. Returns (packet, next_node) pairs; `usize::MAX` as
-    /// next_node means "eject here".
-    pub fn plan_moves(&mut self, now: u64, here: usize, width: usize, height: usize) -> Vec<(Packet, usize)> {
-        let mut moves: Vec<(Packet, usize)> = Vec::new();
+    /// dequeue them into `moves` (cleared first). Each entry is a
+    /// (packet, next_node) pair; `usize::MAX` as next_node means "eject
+    /// here". Taking the buffer from the caller keeps the per-cycle NoC
+    /// sweep allocation-free (the [`super::Noc`] owns one reusable
+    /// buffer for all routers).
+    pub fn plan_moves_into(
+        &mut self,
+        now: u64,
+        here: usize,
+        width: usize,
+        height: usize,
+        moves: &mut Vec<(Packet, usize)>,
+    ) {
+        moves.clear();
         let mut claimed = [false; DIR_COUNT];
         let mut i = 0;
         while i < self.queue.len() {
@@ -141,6 +151,14 @@ impl Router {
                 moves.push((pkt, Self::neighbor(here, dir, width, height)));
             }
         }
+    }
+
+    /// Allocating convenience wrapper over [`Router::plan_moves_into`]
+    /// (unit tests and diagnostics; the simulation loop uses the `_into`
+    /// form).
+    pub fn plan_moves(&mut self, now: u64, here: usize, width: usize, height: usize) -> Vec<(Packet, usize)> {
+        let mut moves = Vec::new();
+        self.plan_moves_into(now, here, width, height, &mut moves);
         moves
     }
 }

@@ -1,0 +1,90 @@
+//! The parallel sweep executor must be a pure accelerator: its output
+//! has to be bit-identical to running the same simulations serially on
+//! one thread. This is the contract that lets the figure harness fan the
+//! paper's sweeps across cores without changing a single plotted value.
+
+use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::harness::{SimJob, SweepExec};
+use amoeba_gpu::sim::gpu::run_benchmark_seeded;
+use amoeba_gpu::workload::bench;
+
+fn grid() -> (SystemConfig, Vec<SimJob>) {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    let benches = ["CP", "BFS", "RAY"];
+    let schemes = [Scheme::Baseline, Scheme::WarpRegroup];
+    let mut jobs = Vec::new();
+    for name in benches {
+        let mut p = bench(name).unwrap();
+        p.num_ctas = 8;
+        p.insns_per_thread = 80;
+        p.num_kernels = 1;
+        for s in schemes {
+            jobs.push(SimJob::new(cfg.clone(), p.clone(), s, 0xD37));
+        }
+    }
+    (cfg, jobs)
+}
+
+/// >= 3 benches x 2 schemes: every counter the figures plot must match
+/// the serial path exactly, including the predictor decisions.
+#[test]
+fn parallel_executor_matches_serial_bit_for_bit() {
+    let (_cfg, jobs) = grid();
+    let exec = SweepExec::new(4);
+    let parallel = exec.run_batch(jobs.clone());
+    assert_eq!(parallel.len(), jobs.len());
+
+    for (job, pr) in jobs.iter().zip(&parallel) {
+        let sr = run_benchmark_seeded(&job.cfg, &job.profile, job.scheme, job.seed);
+        let label = format!("{} under {}", job.profile.name, job.scheme);
+        assert_eq!(sr.cycles, pr.cycles, "{label}: cycles");
+        assert_eq!(sr.sm.thread_insns, pr.sm.thread_insns, "{label}: thread insns");
+        assert_eq!(sr.sm.warp_insns, pr.sm.warp_insns, "{label}: warp insns");
+        assert_eq!(sr.sm.l1d_accesses, pr.sm.l1d_accesses, "{label}: l1d accesses");
+        assert_eq!(sr.sm.l1d_misses, pr.sm.l1d_misses, "{label}: l1d misses");
+        assert_eq!(sr.sm.noc_flits, pr.sm.noc_flits, "{label}: noc flits");
+        assert_eq!(sr.sm.mshr_merges, pr.sm.mshr_merges, "{label}: mshr merges");
+        assert_eq!(sr.chip.dram_reads, pr.chip.dram_reads, "{label}: dram reads");
+        assert_eq!(sr.chip.l2_misses, pr.chip.l2_misses, "{label}: l2 misses");
+        assert_eq!(
+            sr.ipc().to_bits(),
+            pr.ipc().to_bits(),
+            "{label}: IPC must be bit-identical"
+        );
+        // Predictor decisions (probability compared at the bit level).
+        assert_eq!(sr.decisions.len(), pr.decisions.len(), "{label}: decision count");
+        for (a, b) in sr.decisions.iter().zip(&pr.decisions) {
+            assert_eq!(a.scale_up, b.scale_up, "{label}: decision");
+            assert_eq!(
+                a.probability.to_bits(),
+                b.probability.to_bits(),
+                "{label}: decision probability"
+            );
+        }
+    }
+}
+
+/// Running the same batch twice must be pure cache hits, and a serial
+/// (1-thread) executor must agree with a parallel one.
+#[test]
+fn serial_and_parallel_executors_agree() {
+    let (_cfg, jobs) = grid();
+    let par = SweepExec::new(4);
+    let ser = SweepExec::serial();
+    let a = par.run_batch(jobs.clone());
+    let b = ser.run_batch(jobs.clone());
+    for ((x, y), job) in a.iter().zip(&b).zip(&jobs) {
+        assert_eq!(x.cycles, y.cycles, "{} under {}", job.profile.name, job.scheme);
+        assert_eq!(x.sm.thread_insns, y.sm.thread_insns);
+        assert_eq!(x.ipc().to_bits(), y.ipc().to_bits());
+    }
+
+    let (_, misses_before) = par.cache_stats();
+    let again = par.run_batch(jobs.clone());
+    let (_, misses_after) = par.cache_stats();
+    assert_eq!(misses_before, misses_after, "re-running the batch must not simulate");
+    for (x, y) in a.iter().zip(&again) {
+        assert!(std::sync::Arc::ptr_eq(x, y), "cached Arc must be returned");
+    }
+}
