@@ -1,4 +1,4 @@
-//! Scheme matrix: all six schemes on selected benchmarks with split/fuse
+//! Scheme matrix: every scheme on selected benchmarks with split/fuse
 //! event counts — the quick way to eyeball the Fig 12/21 shape.
 //!
 //! Run: `cargo run --release --example scheme_matrix SM RAY BFS`
@@ -13,7 +13,14 @@ fn main() {
         let p = bench(&name).unwrap();
         let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9).ipc();
         print!("{name:5} base={base:6.1} |");
-        for s in [Scheme::ScaleUp, Scheme::StaticFuse, Scheme::DirectSplit, Scheme::WarpRegroup, Scheme::Dws] {
+        for s in [
+            Scheme::ScaleUp,
+            Scheme::StaticFuse,
+            Scheme::DirectSplit,
+            Scheme::WarpRegroup,
+            Scheme::Hetero,
+            Scheme::Dws,
+        ] {
             let r = run_benchmark_seeded(&cfg, &p, s, 9);
             print!(" {s}={:.2}({}sp/{}fu)", r.ipc() / base, r.sm.split_events, r.sm.fuse_events);
         }

@@ -24,7 +24,7 @@ fn main() {
             || {
                 let mut cl = SmCluster::new(0, &cfg, mode);
                 cl.dispatch_cta(&k, 0, &gen);
-                (cl, Noc::new(&cfg, 6))
+                (cl, Noc::with_nodes(&cfg, 6))
             },
             |(mut cl, mut noc)| {
                 for now in 0..512u64 {

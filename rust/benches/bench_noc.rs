@@ -11,7 +11,7 @@ fn main() {
     for (label, nodes) in [("mesh56_baseline_256cyc", 56usize), ("mesh32_fused_256cyc", 32)] {
         b.bench_batched(
             label,
-            || Noc::new(&cfg, nodes),
+            || Noc::with_nodes(&cfg, nodes),
             |mut noc| {
                 let mcs = 8;
                 for t in 0..256u64 {

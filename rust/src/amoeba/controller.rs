@@ -11,19 +11,22 @@ use crate::config::SystemConfig;
 use super::metrics::MetricsSample;
 use super::predictor::{NativePredictor, ScalePredictor};
 
-/// One per-kernel decision record.
+/// One decision record: chip-global (`cluster == None`, one per kernel)
+/// or per-cluster (§4.4 heterogeneous path, one per cluster per kernel).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct KernelDecision {
     /// Predictor probability of scale-up winning.
     pub probability: f64,
     /// The decision taken (P > 0.5).
     pub scale_up: bool,
+    /// Cluster the decision applies to (None = every cluster).
+    pub cluster: Option<u32>,
 }
 
 /// The reconfiguration controller: predictor + decision log.
 pub struct Controller {
     predictor: Box<dyn ScalePredictor>,
-    /// Decision history (one entry per kernel).
+    /// Decision history (one entry per `decide`/`decide_cluster` call).
     pub history: Vec<KernelDecision>,
     /// Force a fixed decision (ablations / ScaleUp scheme plumbing).
     pub force: Option<bool>,
@@ -50,17 +53,36 @@ impl Controller {
         }
     }
 
-    /// Decide whether the current kernel should run on fused SMs.
+    /// Decide whether the current kernel should run on fused SMs
+    /// (chip-global: the decision applies to every cluster).
     pub fn decide(&mut self, sample: &MetricsSample) -> KernelDecision {
+        self.record(sample, None)
+    }
+
+    /// Decide for one cluster from that cluster's own profiling window —
+    /// the §4.4 heterogeneous path runs this once per cluster per kernel.
+    pub fn decide_cluster(&mut self, cluster: usize, sample: &MetricsSample) -> KernelDecision {
+        self.record(sample, Some(cluster as u32))
+    }
+
+    fn record(&mut self, sample: &MetricsSample, cluster: Option<u32>) -> KernelDecision {
         let d = match self.force {
-            Some(f) => KernelDecision { probability: if f { 1.0 } else { 0.0 }, scale_up: f },
+            Some(f) => {
+                KernelDecision { probability: if f { 1.0 } else { 0.0 }, scale_up: f, cluster }
+            }
             None => {
                 let p = self.predictor.probability(sample);
-                KernelDecision { probability: p, scale_up: p > 0.5 }
+                KernelDecision { probability: p, scale_up: p > 0.5, cluster }
             }
         };
         self.history.push(d);
         d
+    }
+
+    /// Fallback substitutions made by the underlying predictor backend
+    /// (see [`ScalePredictor::fallback_count`]); 0 for the native path.
+    pub fn fallback_count(&self) -> u64 {
+        self.predictor.fallback_count()
     }
 }
 
@@ -87,6 +109,22 @@ mod tests {
         assert_eq!(c.history.len(), 1);
         assert_eq!(c.history[0], d);
         assert_eq!(d.scale_up, d.probability > 0.5);
+        assert_eq!(d.cluster, None, "chip-global decisions carry no cluster");
+        assert_eq!(c.fallback_count(), 0, "native predictor never falls back");
+    }
+
+    #[test]
+    fn per_cluster_decisions_carry_cluster_ids() {
+        let cfg = SystemConfig::tiny();
+        let mut c = Controller::native(&cfg);
+        let s = MetricsSample { features: [0.0; NUM_FEATURES] };
+        for ci in 0..3 {
+            let d = c.decide_cluster(ci, &s);
+            assert_eq!(d.cluster, Some(ci as u32));
+        }
+        assert_eq!(c.history.len(), 3);
+        // Identical samples give identical probabilities per cluster.
+        assert_eq!(c.history[0].probability, c.history[2].probability);
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //! second half drains, the cluster re-fuses. A periodic rebalance donates
 //! fast warps to an under-utilised slow half so its issue slots are not
 //! wasted while slow warps stall (§4.3 last paragraph).
+//!
+//! "Watched independently" is structural: the GPU owns **one `DynSplit`
+//! instance per cluster**, so one cluster's rebalance can never consume
+//! another cluster's rebalance period (a single shared instance used to
+//! do exactly that), and the rebalance timer restarts whenever a cluster
+//! enters split mode.
 
 use crate::config::{SplitPolicy, SystemConfig};
 use crate::sim::core::{ClusterMode, SmCluster};
@@ -38,7 +44,7 @@ impl DynSplit {
                     && cluster.divergent_ratio() > self.threshold
                     && cluster.live_warps() > 1
                 {
-                    self.split(cluster);
+                    self.split(now, cluster);
                     cluster.stats.split_events += 1;
                 }
             }
@@ -59,7 +65,11 @@ impl DynSplit {
     /// Enter split mode and distribute currently-divergent warps per the
     /// policy. New divergences are handled at issue time by the cluster
     /// (see `SmCluster::handle_divergence`).
-    fn split(&self, cluster: &mut SmCluster) {
+    fn split(&mut self, now: u64, cluster: &mut SmCluster) {
+        // Entering split starts a fresh rebalance period: a stale
+        // `last_rebalance` from a previous split would otherwise donate a
+        // fast warp on the very first check after splitting.
+        self.last_rebalance = now;
         let policy = cluster.split_policy.expect("split checked only with a policy");
         cluster.set_mode(ClusterMode::FusedSplit);
         match policy {
@@ -202,6 +212,73 @@ mod tests {
         ds.check(0, &mut c);
         assert_eq!(c.mode(), ClusterMode::FusedSplit);
         assert!(c.warps.iter().all(|w| w.home == 0), "fast passes stay");
+    }
+
+    #[test]
+    fn split_entry_resets_rebalance_timer() {
+        let cfg = SystemConfig::tiny();
+        let mut ds = DynSplit::new(&cfg);
+        let (mut c, _) = fused_cluster_with_cta(SplitPolicy::Direct);
+        // Two of four warps divergent: over the 0.25 threshold, with two
+        // fast warps left so a rebalance donation is possible.
+        c.warps[0].divergent = true;
+        c.warps[1].divergent = true;
+        // Stale timer: the last rebalance happened "long ago" at cycle 0.
+        assert_eq!(ds.last_rebalance, 0);
+        ds.check(10_000, &mut c);
+        assert_eq!(c.mode(), ClusterMode::FusedSplit);
+        // Stall the slow half so a due rebalance would donate.
+        for w in c.warps.iter_mut().filter(|w| w.home == 1) {
+            w.outstanding_loads = 5;
+        }
+        let on_slow = |c: &SmCluster| c.warps.iter().filter(|w| w.home == 1).count();
+        assert_eq!(on_slow(&c), 2);
+        // One cycle after the split: the period restarted at split entry,
+        // so no donation (the unfixed code donated here).
+        ds.check(10_001, &mut c);
+        assert_eq!(on_slow(&c), 2, "fresh split must not rebalance immediately");
+        // A full period after the split: now the donation happens.
+        ds.check(10_000 + cfg.rebalance_period, &mut c);
+        assert_eq!(on_slow(&c), 3, "due rebalance donates one fast warp");
+    }
+
+    /// Regression for the cross-cluster state-sharing bug: the GPU wires
+    /// one `DynSplit` per cluster, so two clusters both due for rebalance
+    /// in the same check pass both get one. (With the old single shared
+    /// instance, the first cluster's rebalance reset the timer and starved
+    /// every other cluster — the shared-instance half of this test pins
+    /// that failure mode as the reason for the per-cluster structure.)
+    #[test]
+    fn rebalance_state_is_per_cluster() {
+        let cfg = SystemConfig::tiny();
+        let stalled_split_cluster = || {
+            let (mut c, _) = fused_cluster_with_cta(SplitPolicy::Direct);
+            c.warps[0].divergent = true;
+            c.set_mode(ClusterMode::FusedSplit);
+            c.warps[0].home = 1;
+            c.warps[0].outstanding_loads = 5;
+            c
+        };
+        let on_slow = |c: &SmCluster| c.warps.iter().filter(|w| w.home == 1).count();
+        let t = cfg.rebalance_period * 2;
+
+        // Per-cluster instances (what `Gpu::new` builds): both rebalance.
+        let mut ds: Vec<DynSplit> = (0..2).map(|_| DynSplit::new(&cfg)).collect();
+        let mut a = stalled_split_cluster();
+        let mut b = stalled_split_cluster();
+        ds[0].check(t, &mut a);
+        ds[1].check(t, &mut b);
+        assert_eq!(on_slow(&a), 2, "cluster A rebalanced");
+        assert_eq!(on_slow(&b), 2, "cluster B rebalanced in the same pass");
+
+        // Counterexample: one shared instance starves the second cluster.
+        let mut shared = DynSplit::new(&cfg);
+        let mut c = stalled_split_cluster();
+        let mut d = stalled_split_cluster();
+        shared.check(t, &mut c);
+        shared.check(t, &mut d);
+        assert_eq!(on_slow(&c), 2);
+        assert_eq!(on_slow(&d), 1, "shared timer suppresses the second cluster");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! never be reordered without regenerating artifacts.
 
 use crate::config::SystemConfig;
-use crate::stats::{ratio, ChipStats, SmStats};
+use crate::stats::{ratio, SmStats};
 
 /// Number of predictor input features.
 pub const NUM_FEATURES: usize = 10;
@@ -34,13 +34,20 @@ pub struct MetricsSample {
 }
 
 impl MetricsSample {
-    /// Compute the sample from the counter deltas of a profiling window.
-    pub fn from_window(
+    /// Compute the sample from the counter deltas of a chip-wide
+    /// profiling window (normalised over all `cfg.num_sms` SMs).
+    pub fn from_window(before: &SmStats, after: &SmStats, cfg: &SystemConfig) -> Self {
+        Self::from_window_scaled(before, after, cfg, cfg.num_sms)
+    }
+
+    /// Compute the sample from the counter deltas of a profiling window
+    /// covering `sm_count` SMs — `cfg.num_sms` for a chip-wide window,
+    /// `2` for one cluster's window (the §4.4 per-cluster decision path).
+    pub fn from_window_scaled(
         before: &SmStats,
         after: &SmStats,
-        chip_before: &ChipStats,
-        chip_after: &ChipStats,
         cfg: &SystemConfig,
+        sm_count: usize,
     ) -> Self {
         let d = |f: fn(&SmStats) -> u64| f(after).saturating_sub(f(before));
 
@@ -61,14 +68,12 @@ impl MetricsSample {
         // (5) MSHR merge rate (cross-instruction coalescing).
         let mshr = ratio(d(|s| s.mshr_merges), d(|s| s.mshr_merges) + d(|s| s.mshr_allocs));
 
-        // Instruction-mix rates.
-        let load_inst_rate = ratio(d(|s| s.mem_insns), insns); // loads+stores below
-        let store_frac = ratio(d(|s| s.mem_transactions), d(|s| s.mem_requests).max(1));
-        let _ = store_frac;
-        // Split loads vs stores by transaction bookkeeping: the sim counts
-        // both under mem_insns; approximate stores by write traffic share.
-        let store_inst_rate = load_inst_rate * 0.25;
-        let load_inst_rate = load_inst_rate * 0.75;
+        // (7)(8) instruction-mix rates from the real load/store split:
+        // stores are counted separately (`st_insns`), loads are the rest.
+        let mem_rate = ratio(d(|s| s.mem_insns), insns);
+        let st_share = ratio(d(|s| s.st_insns), d(|s| s.mem_insns));
+        let store_inst_rate = mem_rate * st_share;
+        let load_inst_rate = mem_rate * (1.0 - st_share);
 
         // (1)(2) NoC intensity: average observed round-trip latency,
         // normalised by a 100-cycle scale, weighted by traffic share.
@@ -76,12 +81,11 @@ impl MetricsSample {
         let traffic = d(|s| s.noc_packets) as f64 / d(|s| s.cycles).max(1) as f64;
         let noc = (lat / 100.0) * traffic.min(4.0);
 
-        // Concurrent CTAs per SM (normalised by the Table-1 limit).
-        let cta_delta = chip_after.cycles.saturating_sub(chip_before.cycles);
-        let _ = cta_delta;
+        // Concurrent CTAs per SM (normalised by the Table-1 limit over the
+        // SMs the window covers).
         let live_ctas = d(|s| s.ctas_retired) as f64;
         let concurrent_cta =
-            (live_ctas / cfg.num_sms as f64 / cfg.max_ctas_per_sm as f64).min(1.0);
+            (live_ctas / sm_count.max(1) as f64 / cfg.max_ctas_per_sm as f64).min(1.0);
 
         MetricsSample {
             features: [
@@ -147,13 +151,7 @@ mod tests {
         let before = SmStats::default();
         let after = stats(1000, 200, 6400, 800, (800, 200));
         let cfg = SystemConfig::gtx480();
-        let s = MetricsSample::from_window(
-            &before,
-            &after,
-            &ChipStats::default(),
-            &ChipStats::default(),
-            &cfg,
-        );
+        let s = MetricsSample::from_window(&before, &after, &cfg);
         assert!(s.is_sane(), "{s:?}");
         assert!((s.features[0] - 4.0 / 32.0).abs() < 1e-9, "control divergent");
         assert!((s.features[1] - 0.125).abs() < 1e-9, "coalescing 800/6400");
@@ -166,10 +164,42 @@ mod tests {
         // Identical before/after => all-zero features (no division blowups).
         let a = stats(1000, 200, 6400, 800, (800, 200));
         let cfg = SystemConfig::gtx480();
-        let s =
-            MetricsSample::from_window(&a, &a, &ChipStats::default(), &ChipStats::default(), &cfg);
+        let s = MetricsSample::from_window(&a, &a, &cfg);
         assert!(s.is_sane());
         assert!(s.features.iter().all(|f| *f == 0.0));
+    }
+
+    #[test]
+    fn load_store_split_uses_real_store_counter() {
+        // Features (7)/(8) on a synthetic window: 1000 warp insns, 200
+        // memory insns of which 70 are stores => mem rate 0.2, store
+        // share 0.35 => load_inst_rate 0.13, store_inst_rate 0.07.
+        let before = SmStats::default();
+        let mut after = stats(1000, 200, 6400, 800, (800, 200));
+        after.st_insns = 70;
+        let cfg = SystemConfig::gtx480();
+        let s = MetricsSample::from_window(&before, &after, &cfg);
+        assert!((s.features[6] - 0.13).abs() < 1e-9, "load rate {}", s.features[6]);
+        assert!((s.features[7] - 0.07).abs() < 1e-9, "store rate {}", s.features[7]);
+        // No stores at all => the store feature is exactly zero (the old
+        // hardcoded 25% split reported phantom stores here).
+        let s0 =
+            MetricsSample::from_window(&before, &stats(1000, 200, 6400, 800, (800, 200)), &cfg);
+        assert_eq!(s0.features[7], 0.0);
+        assert!((s0.features[6] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_cluster_window_scales_cta_feature() {
+        let before = SmStats::default();
+        let mut after = stats(1000, 200, 6400, 800, (800, 200));
+        after.ctas_retired = 4;
+        let cfg = SystemConfig::gtx480();
+        let whole = MetricsSample::from_window(&before, &after, &cfg);
+        let cluster = MetricsSample::from_window_scaled(&before, &after, &cfg, 2);
+        // Same counters over 2 SMs instead of 48 => 24x the density.
+        assert!((cluster.features[9] - whole.features[9] * 24.0).abs() < 1e-9);
+        assert!(cluster.is_sane());
     }
 
     #[test]

@@ -22,6 +22,15 @@ pub trait ScalePredictor {
     fn scale_up(&mut self, sample: &MetricsSample) -> bool {
         self.probability(sample) > 0.5
     }
+
+    /// How many times this predictor failed and substituted a default
+    /// probability instead of a measured one. Infallible backends (the
+    /// native logistic) always report 0; the PJRT-backed predictor counts
+    /// its fallbacks so a dead backend cannot masquerade as measured
+    /// decisions.
+    fn fallback_count(&self) -> u64 {
+        0
+    }
 }
 
 /// Trained logistic coefficients: weights (feature order of
@@ -67,6 +76,14 @@ pub const PAPER_COEFFS: Coefficients = Coefficients {
 /// benchmarks are exactly the load-heavy shared-table ones, matching the
 /// paper's observation that memory-locality metrics drive the fuse
 /// decision, while divergence and streaming push toward scale-out.
+///
+/// Known staleness (retrain on the next toolchain-equipped run — see
+/// ROADMAP open items): these weights were fitted on *chip-wide* windows
+/// under the old fixed 75/25 load/store split. Features (7)/(8) now use
+/// the measured split (small shifts for every predictor scheme), and the
+/// §4.4 heterogeneous path feeds *per-cluster* windows, where the
+/// concurrent-CTA feature is scaled over 2 SMs instead of the chip —
+/// benign today only because its weight is 0.0.
 pub const DEFAULT_COEFFS: Coefficients = Coefficients {
     weights: [
         -0.226_396_83, // control divergent

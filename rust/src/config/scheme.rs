@@ -8,7 +8,9 @@ use std::str::FromStr;
 /// These correspond one-to-one to the configurations the paper evaluates:
 /// the scale-out `Baseline`, a statically fused `ScaleUp` machine, AMOEBA's
 /// predictor-driven `StaticFuse`, the two dynamic heterogeneous schemes
-/// (`DirectSplit`, `WarpRegroup`) and the `Dws` comparator of Fig 21.
+/// (`DirectSplit`, `WarpRegroup`), the per-cluster `Hetero` machine
+/// (§4.4's independently fused/split SM populations) and the `Dws`
+/// comparator of Fig 21.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Scheme {
     /// Paper baseline: 48 scale-out SMs, no reconfiguration.
@@ -24,18 +26,24 @@ pub enum Scheme {
     /// StaticFuse + dynamic splitting with the *warp regrouping* policy:
     /// thread groups are sorted into a fast warp and a slow warp.
     WarpRegroup,
+    /// Per-cluster heterogeneous reconfiguration (§4.4): every SM pair is
+    /// profiled and decided *independently*, so one kernel can run on a
+    /// mixed population of fused and private clusters. Fused clusters
+    /// additionally run the warp-regrouping dynamic split.
+    Hetero,
     /// Dynamic Warp Subdivision (Meng et al.) — intra-SM baseline of Fig 21.
     Dws,
 }
 
 impl Scheme {
     /// All schemes in the order the paper's figures plot them.
-    pub const ALL: [Scheme; 6] = [
+    pub const ALL: [Scheme; 7] = [
         Scheme::Baseline,
         Scheme::ScaleUp,
         Scheme::StaticFuse,
         Scheme::DirectSplit,
         Scheme::WarpRegroup,
+        Scheme::Hetero,
         Scheme::Dws,
     ];
 
@@ -57,7 +65,7 @@ impl Scheme {
     pub fn splits(&self) -> Option<SplitPolicy> {
         match self {
             Scheme::DirectSplit => Some(SplitPolicy::Direct),
-            Scheme::WarpRegroup => Some(SplitPolicy::Regroup),
+            Scheme::WarpRegroup | Scheme::Hetero => Some(SplitPolicy::Regroup),
             _ => None,
         }
     }
@@ -66,8 +74,15 @@ impl Scheme {
     pub fn uses_predictor(&self) -> bool {
         matches!(
             self,
-            Scheme::StaticFuse | Scheme::DirectSplit | Scheme::WarpRegroup
+            Scheme::StaticFuse | Scheme::DirectSplit | Scheme::WarpRegroup | Scheme::Hetero
         )
+    }
+
+    /// Does the scheme profile and decide each cluster independently
+    /// (heterogeneous SM populations, §4.4)? Chip-global schemes take one
+    /// aggregate decision per kernel instead.
+    pub fn per_cluster(&self) -> bool {
+        matches!(self, Scheme::Hetero)
     }
 }
 
@@ -79,6 +94,7 @@ impl fmt::Display for Scheme {
             Scheme::StaticFuse => "static_fuse",
             Scheme::DirectSplit => "direct_split",
             Scheme::WarpRegroup => "warp_regrouping",
+            Scheme::Hetero => "hetero",
             Scheme::Dws => "dws",
         };
         f.write_str(s)
@@ -94,6 +110,7 @@ impl FromStr for Scheme {
             "static_fuse" | "staticfuse" | "fuse" => Ok(Scheme::StaticFuse),
             "direct_split" | "directsplit" => Ok(Scheme::DirectSplit),
             "warp_regrouping" | "warp_regroup" | "regroup" => Ok(Scheme::WarpRegroup),
+            "hetero" | "heterogeneous" => Ok(Scheme::Hetero),
             "dws" => Ok(Scheme::Dws),
             other => Err(format!("unknown scheme '{other}'")),
         }
@@ -150,6 +167,11 @@ mod tests {
         assert_eq!(Scheme::DirectSplit.splits(), Some(SplitPolicy::Direct));
         assert_eq!(Scheme::WarpRegroup.splits(), Some(SplitPolicy::Regroup));
         assert_eq!(Scheme::StaticFuse.splits(), None);
+        assert!(Scheme::Hetero.can_fuse());
+        assert!(Scheme::Hetero.uses_predictor());
+        assert_eq!(Scheme::Hetero.splits(), Some(SplitPolicy::Regroup));
+        assert!(Scheme::Hetero.per_cluster());
+        assert!(Scheme::ALL.iter().filter(|s| s.per_cluster()).count() == 1);
     }
 
     #[test]

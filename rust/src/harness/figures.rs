@@ -390,6 +390,40 @@ pub fn fig19_phases(exec: &SweepExec, quick: bool) -> Table {
     t
 }
 
+/// Fig 19h (extension): per-cluster mode timeline under the §4.4
+/// heterogeneous scheme, where clusters decide independently and the
+/// fabric can be mixed (some clusters fused/split, some private) in the
+/// same cycle. `frac_fused` is the fraction of clusters not private.
+pub fn fig19_hetero(exec: &SweepExec, quick: bool) -> Table {
+    let cfg = base_cfg(quick);
+    let r = run(exec, &cfg, "RAY", Scheme::Hetero, quick);
+    let shown = 4usize;
+    let mut t = Table::new(
+        "Fig 19h — heterogeneous per-cluster modes (RAY, hetero): 1=fused 0=split -1=private",
+        &["cycle", "sm0", "sm1", "sm2", "sm3", "frac_fused"],
+    );
+    for p in r.phases.iter() {
+        if p.modes.len() < shown {
+            continue;
+        }
+        let mut vals: Vec<f64> = p
+            .modes
+            .iter()
+            .take(shown)
+            .map(|m| match m {
+                ClusterMode::Fused => 1.0,
+                ClusterMode::FusedSplit => 0.0,
+                ClusterMode::PrivatePair => -1.0,
+            })
+            .collect();
+        let non_private =
+            p.modes.iter().filter(|m| !matches!(m, ClusterMode::PrivatePair)).count();
+        vals.push(non_private as f64 / p.modes.len() as f64);
+        t.row(p.cycle.to_string(), vals);
+    }
+    t
+}
+
 // ---------------------------------------------------------------------
 // Fig 20: per-metric impact magnitudes
 // ---------------------------------------------------------------------
@@ -510,6 +544,20 @@ mod tests {
     #[test]
     fn fig2_static_data() {
         assert_eq!(crate::harness::gtx_scaling_trend().rows.len(), 8);
+    }
+
+    #[test]
+    fn fig19h_traces_hetero_through_executor() {
+        let exec = SweepExec::new(2);
+        let t = fig19_hetero(&exec, true);
+        assert!(!t.rows.is_empty(), "phase trace must have samples");
+        // 4 per-cluster mode columns + frac_fused.
+        assert_eq!(t.rows[0].1.len(), 5);
+        assert!(t.rows.iter().all(|(_, v)| (0.0..=1.0).contains(&v[4])));
+        assert!(t
+            .rows
+            .iter()
+            .all(|(_, v)| v[..4].iter().all(|m| [-1.0, 0.0, 1.0].contains(m))));
     }
 
     #[test]

@@ -23,9 +23,9 @@ use std::sync::OnceLock;
 use crate::stats::Table;
 
 /// All figure ids the harness can regenerate.
-pub const ALL_FIGURES: [&str; 19] = [
-    "2", "3a", "3b", "4", "5", "6", "8", "12", "13", "14", "15", "16", "17", "18", "19", "20",
-    "21", "t1", "t2",
+pub const ALL_FIGURES: [&str; 20] = [
+    "2", "3a", "3b", "4", "5", "6", "8", "12", "13", "14", "15", "16", "17", "18", "19", "19h",
+    "20", "21", "t1", "t2",
 ];
 
 /// The process-wide executor used by the [`figure`] convenience wrapper:
@@ -55,6 +55,7 @@ pub fn figure_with(exec: &SweepExec, id: &str, quick: bool) -> Option<Table> {
         "17" => Some(fig17_icnt_stalls(exec, quick)),
         "18" => Some(fig18_injection(exec, quick)),
         "19" => Some(fig19_phases(exec, quick)),
+        "19h" => Some(fig19_hetero(exec, quick)),
         "20" => Some(fig20_impacts(exec, quick)),
         "21" => Some(fig21_vs_dws(exec, quick)),
         "t1" => Some(table1_config()),

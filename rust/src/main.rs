@@ -27,7 +27,7 @@ USAGE:
   amoeba config
 
 SCHEMES: baseline | scale_up | static_fuse | direct_split |
-         warp_regrouping | dws
+         warp_regrouping | hetero | dws
 
 Sweeps run in parallel; --jobs (or the AMOEBA_JOBS env var) sets the
 worker count, defaulting to the machine's available parallelism."
@@ -124,10 +124,21 @@ fn cmd_run(args: &[String]) -> Result<()> {
     println!("DRAM row hits   : {:.4}", report.chip.dram_row_hit_rate());
     println!("fuse/split evts : {}/{}", report.sm.fuse_events, report.sm.split_events);
     for (i, d) in report.decisions.iter().enumerate() {
+        let scope = match d.cluster {
+            Some(c) => format!("cluster {c}"),
+            None => "all clusters".to_string(),
+        };
         println!(
-            "kernel {i}: P(scale-up)={:.3} -> {}",
+            "decision {i} ({scope}): P(scale-up)={:.3} -> {}",
             d.probability,
             if d.scale_up { "FUSE" } else { "scale-out" }
+        );
+    }
+    if report.chip.predictor_fallbacks > 0 {
+        eprintln!(
+            "WARNING: {} predictor inference(s) fell back to the default \
+             probability — the backend was dead for those decisions",
+            report.chip.predictor_fallbacks
         );
     }
     Ok(())
@@ -169,7 +180,16 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
 
     let mut t = Table::new(
         "IPC by scheme",
-        &["bench", "baseline", "scale_up", "static_fuse", "direct_split", "warp_regrouping", "dws"],
+        &[
+            "bench",
+            "baseline",
+            "scale_up",
+            "static_fuse",
+            "direct_split",
+            "warp_regrouping",
+            "hetero",
+            "dws",
+        ],
     );
     for (bi, p) in profiles.iter().enumerate() {
         let row: Vec<f64> = (0..Scheme::ALL.len())

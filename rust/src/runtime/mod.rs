@@ -236,6 +236,10 @@ pub struct HloPredictor {
     exe: HloExecutable,
     weights: Vec<f32>,
     intercept: f32,
+    /// Inferences that failed and fell back to the default probability.
+    fallbacks: u64,
+    /// First-failure warning already emitted?
+    warned: bool,
 }
 
 impl HloPredictor {
@@ -244,14 +248,19 @@ impl HloPredictor {
         #[cfg(feature = "xla")]
         {
             let exe = rt.load("predictor_infer")?;
-            Ok(HloPredictor { exe, weights: weights.to_vec(), intercept })
+            Ok(HloPredictor { exe, weights: weights.to_vec(), intercept, fallbacks: 0, warned: false })
         }
         #[cfg(not(feature = "xla"))]
         {
             rt.load("predictor_infer")?;
             // `load` always errs in the stub; keep the constructor total.
-            Ok(HloPredictor { weights: weights.to_vec(), intercept })
+            Ok(HloPredictor { weights: weights.to_vec(), intercept, fallbacks: 0, warned: false })
         }
+    }
+
+    /// Inferences that failed and substituted the 0.5 default.
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks
     }
 
     /// Run one inference; returns P(scale-up).
@@ -278,8 +287,27 @@ impl HloPredictor {
 impl ScalePredictor for HloPredictor {
     fn probability(&mut self, sample: &MetricsSample) -> f64 {
         // A failed PJRT execution is a deployment error; fall back to 0.5
-        // (no-reconfigure) rather than crashing the simulation loop.
-        self.infer(&sample.as_f32()).unwrap_or(0.5)
+        // (P > 0.5 is false => scale-out) rather than crashing the
+        // simulation loop — but count it and warn once, so a dead backend
+        // cannot silently masquerade as a stream of measured decisions.
+        match self.infer(&sample.as_f32()) {
+            Ok(p) => p,
+            Err(e) => {
+                self.fallbacks += 1;
+                if !self.warned {
+                    self.warned = true;
+                    eprintln!(
+                        "[amoeba] HLO predictor failed ({e}); substituting P=0.5 \
+                         (scale-out). Further fallbacks are counted in the SimReport."
+                    );
+                }
+                0.5
+            }
+        }
+    }
+
+    fn fallback_count(&self) -> u64 {
+        self.fallbacks
     }
 }
 
@@ -431,7 +459,16 @@ mod tests {
         let sample = MetricsSample { features: [0.2; NUM_FEATURES] };
         // An un-loadable predictor cannot exist; but the fallback path of
         // `probability` is exercised through a hand-built instance.
-        let mut p = HloPredictor { weights: vec![0.5; NUM_FEATURES], intercept: -1.0 };
+        let mut p = HloPredictor {
+            weights: vec![0.5; NUM_FEATURES],
+            intercept: -1.0,
+            fallbacks: 0,
+            warned: false,
+        };
         assert_eq!(p.probability(&sample), 0.5, "stub falls back to 0.5");
+        assert_eq!(p.fallback_count(), 1, "fallback must be counted");
+        assert!(p.warned, "first fallback warns");
+        p.probability(&sample);
+        assert_eq!(p.fallback_count(), 2, "every fallback is counted");
     }
 }

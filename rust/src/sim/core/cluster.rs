@@ -694,6 +694,7 @@ impl SmCluster {
                 let mut lines = std::mem::take(&mut self.coalesce_scratch);
                 let requests = self.coalesce_for(gen, cta, sub1, n_sub, pc, &pattern, mask, width, &mut lines);
                 self.stats.mem_insns += 1;
+                self.stats.st_insns += 1;
                 self.stats.mem_requests += requests as u64;
                 self.stats.mem_transactions += lines.len() as u64;
                 for &line in &lines {
@@ -928,6 +929,7 @@ impl SmCluster {
                 let requests =
                     coalesce_into(&pattern, mask, width.min(64), self.cfg.line_bytes, &mut lines);
                 self.stats.mem_insns += 1;
+                self.stats.st_insns += 1;
                 self.stats.mem_requests += requests as u64;
                 self.stats.mem_transactions += lines.len() as u64;
                 for &line in &lines {

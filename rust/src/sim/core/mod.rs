@@ -17,7 +17,7 @@ mod tests {
         let cfg = SystemConfig::tiny();
         let cluster = SmCluster::new(0, &cfg, mode);
         // Node map: cluster halves at nodes 0/1, MCs at the end.
-        let noc = Noc::new(&cfg, 6);
+        let noc = Noc::with_nodes(&cfg, 6);
         let profile = bench("CP").unwrap();
         let k = kernel_launches(&profile, 3)[0].clone();
         let gen = TraceGen::new(&profile, &k);

@@ -1,13 +1,13 @@
 //! Top-level GPU: clusters + NoC + memory partitions + CTA dispatcher +
 //! the per-kernel AMOEBA reconfiguration loop (Fig 7).
 //!
-//! Machine layouts:
-//!
-//! * **per-SM layout** (baseline / scale-out): every baseline SM has its
-//!   own NoC router — `num_sms + num_mcs` nodes; cluster `i`'s halves sit
-//!   at nodes `2i` and `2i+1`.
-//! * **fused layout** (scale-up): the second router of each pair is
-//!   bypassed — `num_sms/2 + num_mcs` nodes; cluster `i` sits at node `i`.
+//! The machine layout is a **per-cluster** fused/private vector
+//! ([`ChipLayout`], §4.4): a private cluster keeps both of its NoC
+//! routers, a fused cluster bypasses the second one, and the two kinds
+//! can coexist in one fabric. The homogeneous special cases are the
+//! paper's classic machines (all-private baseline: `num_sms + num_mcs`
+//! nodes with cluster `i` at `2i`/`2i+1`; all-fused scale-up:
+//! `num_sms/2 + num_mcs` nodes with cluster `i` at `i`).
 //!
 //! The NoC is rebuilt when the layout changes (kernel boundaries only;
 //! dynamic split keeps the fused NoC interface, §4.3).
@@ -19,7 +19,7 @@ use crate::config::{Scheme, SystemConfig};
 use crate::isa::KernelLaunch;
 use crate::sim::core::{ClusterMode, DivergenceMode, SmCluster};
 use crate::sim::mem::{MemPartition, PartitionReply};
-use crate::sim::noc::{Noc, Packet, Payload, Subnet};
+use crate::sim::noc::{ChipLayout, Noc, Packet, Payload, Subnet};
 use crate::stats::{ChipStats, SmStats};
 use crate::workload::{kernel_launches, BenchProfile, TraceGen};
 
@@ -45,12 +45,14 @@ pub struct SimReport {
     pub sm: SmStats,
     /// Chip-level statistics.
     pub chip: ChipStats,
-    /// Per-kernel fuse decisions taken.
+    /// Fuse decisions taken: one per kernel for chip-global schemes, one
+    /// per cluster per kernel for the heterogeneous scheme (§4.4).
     pub decisions: Vec<KernelDecision>,
     /// Periodic cluster-mode snapshots (Fig 19).
     pub phases: Vec<PhaseSample>,
-    /// Metric sample collected during each kernel's profiling window
-    /// (empty for schemes that do not profile).
+    /// Metric samples collected during each kernel's profiling window
+    /// (empty for schemes that do not profile; one per cluster per kernel
+    /// under the heterogeneous scheme).
     pub samples: Vec<MetricsSample>,
 }
 
@@ -80,8 +82,8 @@ pub struct Gpu {
     clusters: Vec<SmCluster>,
     partitions: Vec<MemPartition>,
     noc: Noc,
-    /// Current layout is fused (one router per cluster)?
-    fused_layout: bool,
+    /// Current per-cluster fused/private layout and its NoC node map.
+    layout: ChipLayout,
     now: u64,
     chip: ChipStats,
     /// Per-MC replies awaiting injection (bounded by MC_REPLY_BUDGET).
@@ -91,7 +93,10 @@ pub struct Gpu {
     /// backpressure is preserved.
     req_backlog: Vec<std::collections::VecDeque<Packet>>,
     controller: Controller,
-    dynsplit: DynSplit,
+    /// One split/fuse state machine per cluster ("watched independently",
+    /// §4.3 — a single shared instance let one cluster's rebalance starve
+    /// every other cluster's rebalance period).
+    dynsplits: Vec<DynSplit>,
     phases: Vec<PhaseSample>,
     samples: Vec<MetricsSample>,
     decisions: Vec<KernelDecision>,
@@ -115,20 +120,20 @@ impl Gpu {
                 c.divergence_mode = DivergenceMode::Shadowed;
             }
         }
-        let nodes = Self::node_count(cfg, initial_fused);
+        let layout = ChipLayout::homogeneous(n_clusters, initial_fused, cfg.num_mcs);
         Gpu {
             cfg: cfg.clone(),
             scheme,
             clusters,
             partitions: (0..cfg.num_mcs).map(|_| MemPartition::new(cfg)).collect(),
-            noc: Noc::new(cfg, nodes),
-            fused_layout: initial_fused,
+            noc: Noc::new(cfg, &layout),
+            layout,
             now: 0,
             chip: ChipStats::default(),
             reply_retry: (0..cfg.num_mcs).map(|_| std::collections::VecDeque::new()).collect(),
             req_backlog: (0..cfg.num_mcs).map(|_| std::collections::VecDeque::new()).collect(),
             controller,
-            dynsplit: DynSplit::new(cfg),
+            dynsplits: (0..n_clusters).map(|_| DynSplit::new(cfg)).collect(),
             phases: Vec::new(),
             samples: Vec::new(),
             decisions: Vec::new(),
@@ -136,46 +141,53 @@ impl Gpu {
         }
     }
 
-    fn node_count(cfg: &SystemConfig, fused: bool) -> usize {
-        let sm_nodes = if fused { cfg.num_sms / 2 } else { cfg.num_sms };
-        sm_nodes + cfg.num_mcs
-    }
-
     /// NoC nodes for cluster `ci` in the current layout.
     fn nodes_of(&self, ci: usize) -> [usize; 2] {
-        if self.fused_layout {
-            [ci, ci]
-        } else {
-            [2 * ci, 2 * ci + 1]
-        }
+        self.layout.nodes_of(ci)
     }
 
     /// Cluster owning NoC node `n` (inverse of `nodes_of`).
     fn cluster_of_node(&self, n: usize) -> usize {
-        if self.fused_layout {
-            n
-        } else {
-            n / 2
-        }
+        self.layout.cluster_of_node(n)
     }
 
     fn mc_node(&self, mc: usize) -> usize {
-        self.noc.nodes() - self.cfg.num_mcs + mc
+        self.layout.mc_node(mc)
     }
 
-    /// Rebuild the NoC for a new layout and flush cluster caches (the
-    /// paper drains pipelines and pays a reconfiguration cost).
-    fn reconfigure(&mut self, fused: bool) {
-        self.fused_layout = fused;
-        let mode = if fused { ClusterMode::Fused } else { ClusterMode::PrivatePair };
-        for c in &mut self.clusters {
+    /// Rebuild the NoC for a new per-cluster layout and flush cluster
+    /// caches (the paper drains pipelines and pays a reconfiguration
+    /// cost). `target[ci]` selects fused (true) or private (false) for
+    /// cluster `ci`; mixed vectors build a heterogeneous fabric (§4.4).
+    ///
+    /// Only clusters whose mode actually changes are rewired (flush +
+    /// freeze): a cluster that decided to stay as-is keeps its warm L1s
+    /// and keeps issuing. Callers reconfigure on a drained machine, so
+    /// the NoC rebuild never strands in-flight packets of skipped
+    /// clusters. (On the chip-global paths every reconfigure crosses the
+    /// fused/private boundary for every cluster, so the skip never fires
+    /// there and their behaviour is unchanged.)
+    fn reconfigure(&mut self, target: &[bool]) {
+        debug_assert_eq!(target.len(), self.clusters.len());
+        for (c, &fused) in self.clusters.iter_mut().zip(target) {
+            let mode = if fused { ClusterMode::Fused } else { ClusterMode::PrivatePair };
+            if c.mode() == mode {
+                continue;
+            }
             c.set_mode(mode);
             c.flush_caches();
             c.frozen_until = self.now + self.cfg.reconfig_cost;
         }
-        self.noc = Noc::new(&self.cfg, Self::node_count(&self.cfg, fused));
+        self.layout = ChipLayout::new(target.to_vec(), self.cfg.num_mcs);
+        self.noc = Noc::new(&self.cfg, &self.layout);
         self.chip.reconfig_events += 1;
         self.chip.reconfig_cycles += self.cfg.reconfig_cost;
+    }
+
+    /// Reconfigure every cluster to the same mode (chip-global schemes).
+    fn reconfigure_all(&mut self, fused: bool) {
+        let target = vec![fused; self.clusters.len()];
+        self.reconfigure(&target);
     }
 
     /// Advance the whole machine one cycle; `gen` resolves traces of the
@@ -252,7 +264,7 @@ impl Gpu {
         self.reply_scratch = out;
 
         // 5. SM side: reply delivery.
-        let sm_nodes = self.noc.nodes() - self.cfg.num_mcs;
+        let sm_nodes = self.layout.sm_nodes();
         for node in 0..sm_nodes {
             while let Some(pkt) = self.noc.eject(Subnet::Reply, node) {
                 if let Payload::MemReply { line, is_write, .. } = pkt.payload {
@@ -312,11 +324,17 @@ impl Gpu {
         let mut profiling = self.scheme.uses_predictor();
         let profile_start = self.now;
         let base_stats = self.aggregate_sm();
-        let base_chip = self.chip.clone();
+        // Per-cluster baselines for the heterogeneous decision path: each
+        // cluster's window delta is taken against its own counters.
+        let base_per: Vec<SmStats> = if self.scheme.per_cluster() {
+            self.clusters.iter().map(|c| c.stats.clone()).collect()
+        } else {
+            Vec::new()
+        };
 
         // Predictor schemes always profile in the scale-out layout.
-        if profiling && self.fused_layout {
-            self.reconfigure(false);
+        if profiling && self.layout.any_fused() {
+            self.reconfigure_all(false);
         }
 
         let deadline = self.now + self.cfg.max_cycles.max(1);
@@ -332,13 +350,30 @@ impl Gpu {
             // CTA dispatch.
             let cap = if profiling { probe_cap.min(total_ctas) } else { total_ctas };
             let mut dispatched = 0;
-            'dispatch: for ci in 0..self.clusters.len() {
-                while next_cta < cap && self.clusters[ci].can_accept_cta(kernel) {
+            if profiling && self.scheme.per_cluster() {
+                // Heterogeneous probe wave: CTA `i` lands on cluster `i`,
+                // so the per-cluster windows measure disjoint work. Grids
+                // smaller than the cluster count leave the tail clusters
+                // probeless: their all-zero window decides on the
+                // intercept alone, i.e. "no evidence => stay private".
+                while next_cta < cap && dispatched < DISPATCH_PER_CYCLE {
+                    let ci = next_cta as usize % self.clusters.len();
+                    if !self.clusters[ci].can_accept_cta(kernel) {
+                        break;
+                    }
                     self.clusters[ci].dispatch_cta(kernel, next_cta, &gen);
                     next_cta += 1;
                     dispatched += 1;
-                    if dispatched >= DISPATCH_PER_CYCLE {
-                        break 'dispatch;
+                }
+            } else {
+                'dispatch: for ci in 0..self.clusters.len() {
+                    while next_cta < cap && self.clusters[ci].can_accept_cta(kernel) {
+                        self.clusters[ci].dispatch_cta(kernel, next_cta, &gen);
+                        next_cta += 1;
+                        dispatched += 1;
+                        if dispatched >= DISPATCH_PER_CYCLE {
+                            break 'dispatch;
+                        }
                     }
                 }
             }
@@ -348,14 +383,42 @@ impl Gpu {
             // Profiling window complete: predict and reconfigure.
             if profiling && self.now >= profile_start + self.cfg.profile_window {
                 profiling = false;
-                let cur = self.aggregate_sm();
-                let sample =
-                    MetricsSample::from_window(&base_stats, &cur, &base_chip, &self.chip, &self.cfg);
-                let fuse = self.controller.decide(&sample);
-                self.samples.push(sample);
-                self.decisions.push(fuse);
-                if fuse.scale_up {
-                    self.chip.predictor_scale_up += 1;
+                let target: Vec<bool> = if self.scheme.per_cluster() {
+                    // §4.4: one decision per cluster from that cluster's
+                    // own window — the chip can come out heterogeneous.
+                    (0..self.clusters.len())
+                        .map(|ci| {
+                            let sample = MetricsSample::from_window_scaled(
+                                &base_per[ci],
+                                &self.clusters[ci].stats,
+                                &self.cfg,
+                                2,
+                            );
+                            let d = self.controller.decide_cluster(ci, &sample);
+                            self.samples.push(sample);
+                            self.decisions.push(d);
+                            if d.scale_up {
+                                self.chip.predictor_scale_up += 1;
+                            } else {
+                                self.chip.predictor_scale_out += 1;
+                            }
+                            d.scale_up
+                        })
+                        .collect()
+                } else {
+                    let cur = self.aggregate_sm();
+                    let sample = MetricsSample::from_window(&base_stats, &cur, &self.cfg);
+                    let fuse = self.controller.decide(&sample);
+                    self.samples.push(sample);
+                    self.decisions.push(fuse);
+                    if fuse.scale_up {
+                        self.chip.predictor_scale_up += 1;
+                    } else {
+                        self.chip.predictor_scale_out += 1;
+                    }
+                    vec![fuse.scale_up; self.clusters.len()]
+                };
+                if target.iter().any(|&f| f) {
                     // Drain resident work, then fuse. We stop dispatching
                     // during the drain by entering a drain loop here.
                     while !self.drained() && self.now < deadline {
@@ -364,25 +427,24 @@ impl Gpu {
                     for c in &mut self.clusters {
                         c.reap();
                     }
-                    self.reconfigure(true);
+                    self.reconfigure(&target);
                     if let Some(policy) = self.scheme.splits() {
-                        for c in &mut self.clusters {
-                            c.split_policy = Some(policy);
+                        for (c, &fused) in self.clusters.iter_mut().zip(&target) {
+                            c.split_policy = fused.then_some(policy);
                         }
                     }
-                } else {
-                    self.chip.predictor_scale_out += 1;
                 }
             }
 
-            // Dynamic split/fuse checks (only meaningful on fused layouts).
+            // Dynamic split/fuse checks (only meaningful on fused
+            // clusters; each cluster's state machine runs independently).
             if self.scheme.splits().is_some()
-                && self.fused_layout
+                && self.layout.any_fused()
                 && self.now >= split_check_at
             {
                 split_check_at = self.now + self.cfg.split_check_period;
-                for c in &mut self.clusters {
-                    self.dynsplit.check(self.now, c);
+                for (ds, c) in self.dynsplits.iter_mut().zip(&mut self.clusters) {
+                    ds.check(self.now, c);
                 }
             }
 
@@ -447,6 +509,9 @@ impl Gpu {
             self.chip.dram_row_misses += p.mc.row_misses;
         }
         self.chip.noc_flits_routed = self.noc.flits_routed;
+        // Surface predictor-backend fallbacks: nonzero means some logged
+        // decisions were substituted defaults, not measured inferences.
+        self.chip.predictor_fallbacks = self.controller.fallback_count();
         SimReport {
             bench: profile.name.to_string(),
             scheme: self.scheme,
@@ -562,5 +627,27 @@ mod tests {
         let r = quick("RAY", Scheme::WarpRegroup);
         assert!(!r.phases.is_empty());
         assert_eq!(r.phases[0].modes.len(), SystemConfig::tiny().num_sms / 2);
+    }
+
+    #[test]
+    fn hetero_records_one_decision_per_cluster() {
+        let r = quick("RAY", Scheme::Hetero);
+        let n_clusters = SystemConfig::tiny().num_sms / 2;
+        assert_eq!(r.chip.kernels_completed, 1);
+        assert_eq!(r.decisions.len(), n_clusters, "one decision per cluster");
+        assert_eq!(r.samples.len(), n_clusters, "one sample per cluster");
+        for (ci, d) in r.decisions.iter().enumerate() {
+            assert_eq!(d.cluster, Some(ci as u32));
+        }
+        assert!(r.ipc() > 0.1, "ipc={}", r.ipc());
+        // Every decision came from a real (finite) sample.
+        assert!(r.samples.iter().all(|s| s.features.iter().all(|f| f.is_finite())));
+    }
+
+    #[test]
+    fn chip_global_schemes_still_record_one_decision_per_kernel() {
+        let r = quick("SM", Scheme::StaticFuse);
+        assert_eq!(r.decisions.len(), 1);
+        assert_eq!(r.decisions[0].cluster, None);
     }
 }

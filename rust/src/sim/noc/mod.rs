@@ -6,7 +6,10 @@
 //! Fusion interacts with the NoC by *shrinking* it: AMOEBA bypasses the
 //! router of the second SM in each fused pair, so the fused machine builds
 //! a smaller mesh (fewer nodes -> fewer hops, more bandwidth per SM —
-//! Fig 17/18). The GPU rebuilds the NoC at reconfiguration boundaries.
+//! Fig 17/18). Heterogeneous layouts (§4.4) mix both in one fabric: a
+//! fused cluster occupies a single node while its private neighbours keep
+//! two, so the node map is table-driven ([`ChipLayout`]). The GPU rebuilds
+//! the NoC at reconfiguration boundaries.
 
 mod router;
 
@@ -15,6 +18,103 @@ pub use router::Router;
 use std::collections::VecDeque;
 
 use crate::config::{NocMode, SystemConfig};
+
+/// The per-cluster fused/private layout of the SM fabric and the derived
+/// NoC endpoint map. Clusters are assigned nodes in index order: a
+/// private cluster keeps both of its routers (two consecutive nodes), a
+/// fused cluster bypasses the second router (one node). Memory
+/// controllers occupy the nodes after every SM node.
+///
+/// The homogeneous special cases reproduce the historical maps exactly:
+/// all-private puts cluster `i` at nodes `2i`/`2i+1`, all-fused at `i`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChipLayout {
+    /// Fused flag per cluster.
+    fused: Vec<bool>,
+    /// Cluster -> its [first, second] NoC node (equal when fused).
+    nodes_of: Vec<[usize; 2]>,
+    /// SM node -> owning cluster (inverse of `nodes_of`).
+    owner: Vec<usize>,
+    /// Memory-controller count (MC nodes follow the SM nodes).
+    num_mcs: usize,
+}
+
+impl ChipLayout {
+    /// Build the node map for a per-cluster `fused` vector.
+    pub fn new(fused: Vec<bool>, num_mcs: usize) -> Self {
+        assert!(!fused.is_empty(), "layout needs at least one cluster");
+        let mut nodes_of = Vec::with_capacity(fused.len());
+        let mut owner = Vec::with_capacity(fused.len() * 2);
+        for (ci, &f) in fused.iter().enumerate() {
+            let n0 = owner.len();
+            if f {
+                nodes_of.push([n0, n0]);
+                owner.push(ci);
+            } else {
+                nodes_of.push([n0, n0 + 1]);
+                owner.push(ci);
+                owner.push(ci);
+            }
+        }
+        ChipLayout { fused, nodes_of, owner, num_mcs }
+    }
+
+    /// All clusters in the same mode (the pre-§4.4 special cases).
+    pub fn homogeneous(n_clusters: usize, fused: bool, num_mcs: usize) -> Self {
+        Self::new(vec![fused; n_clusters], num_mcs)
+    }
+
+    /// Number of SM clusters.
+    pub fn n_clusters(&self) -> usize {
+        self.fused.len()
+    }
+
+    /// Is cluster `ci` fused (single NoC interface)?
+    pub fn is_fused(&self, ci: usize) -> bool {
+        self.fused[ci]
+    }
+
+    /// The per-cluster fused flags.
+    pub fn fused_flags(&self) -> &[bool] {
+        &self.fused
+    }
+
+    /// Any cluster fused?
+    pub fn any_fused(&self) -> bool {
+        self.fused.iter().any(|&f| f)
+    }
+
+    /// Both fused and private clusters present (heterogeneous fabric)?
+    pub fn is_mixed(&self) -> bool {
+        self.any_fused() && self.fused.iter().any(|&f| !f)
+    }
+
+    /// SM endpoint count (fused clusters contribute one, private two).
+    pub fn sm_nodes(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Total endpoint count (SM nodes + MC nodes).
+    pub fn nodes(&self) -> usize {
+        self.owner.len() + self.num_mcs
+    }
+
+    /// NoC nodes of cluster `ci` ([half0, half1]; equal when fused).
+    pub fn nodes_of(&self, ci: usize) -> [usize; 2] {
+        self.nodes_of[ci]
+    }
+
+    /// Cluster owning SM node `n` (inverse of [`ChipLayout::nodes_of`]).
+    pub fn cluster_of_node(&self, n: usize) -> usize {
+        self.owner[n]
+    }
+
+    /// NoC node of memory controller `mc`.
+    pub fn mc_node(&self, mc: usize) -> usize {
+        debug_assert!(mc < self.num_mcs);
+        self.owner.len() + mc
+    }
+}
 
 /// What a packet carries.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,8 +173,15 @@ pub struct Noc {
 }
 
 impl Noc {
-    /// Build an interconnect over `nodes` endpoints per `cfg`.
-    pub fn new(cfg: &SystemConfig, nodes: usize) -> Self {
+    /// Build the interconnect for a chip layout: one endpoint per private
+    /// SM, one per fused cluster (router bypass), one per MC.
+    pub fn new(cfg: &SystemConfig, layout: &ChipLayout) -> Self {
+        Self::with_nodes(cfg, layout.nodes())
+    }
+
+    /// Build an interconnect over a raw endpoint count (tests/benches and
+    /// fabric studies that do not model clusters).
+    pub fn with_nodes(cfg: &SystemConfig, nodes: usize) -> Self {
         let width = (nodes as f64).sqrt().ceil() as usize;
         let height = nodes.div_ceil(width);
         let mk = |n: usize| -> Vec<Router> {
@@ -244,7 +351,7 @@ mod tests {
 
     #[test]
     fn mesh_dims_cover_nodes() {
-        let n = Noc::new(&cfg(), 6);
+        let n = Noc::with_nodes(&cfg(), 6);
         let (w, h) = n.dims();
         assert!(w * h >= 6);
         assert_eq!(n.nodes(), 6);
@@ -252,7 +359,7 @@ mod tests {
 
     #[test]
     fn delivery_latency_scales_with_hops() {
-        let mut noc = Noc::new(&cfg(), 6); // 3x2 mesh
+        let mut noc = Noc::with_nodes(&cfg(), 6); // 3x2 mesh
         let near = deliver(&mut noc, pkt(0, 1, 1, 0), 100);
         let far = deliver(&mut noc, pkt(0, 5, 1, 1000), 100);
         assert!(far > near, "far={far} near={near}");
@@ -262,7 +369,7 @@ mod tests {
 
     #[test]
     fn bigger_packets_take_longer() {
-        let mut noc = Noc::new(&cfg(), 6);
+        let mut noc = Noc::with_nodes(&cfg(), 6);
         let small = deliver(&mut noc, pkt(0, 5, 1, 0), 200);
         let big = deliver(&mut noc, pkt(0, 5, 9, 1000), 200);
         assert!(big > small, "big={big} small={small}");
@@ -272,14 +379,14 @@ mod tests {
     fn perfect_mode_is_instant() {
         let mut c = cfg();
         c.noc_mode = NocMode::Perfect;
-        let mut noc = Noc::new(&c, 6);
+        let mut noc = Noc::with_nodes(&c, 6);
         assert!(noc.inject(Subnet::Reply, pkt(0, 5, 9, 0)));
         assert!(noc.eject(Subnet::Reply, 5).is_some(), "no tick needed");
     }
 
     #[test]
     fn injection_backpressure() {
-        let mut noc = Noc::new(&cfg(), 6);
+        let mut noc = Noc::with_nodes(&cfg(), 6);
         let mut accepted = 0;
         for i in 0..100 {
             if noc.inject(Subnet::Request, pkt(0, 5, 4, i)) {
@@ -292,7 +399,7 @@ mod tests {
 
     #[test]
     fn subnets_are_independent() {
-        let mut noc = Noc::new(&cfg(), 6);
+        let mut noc = Noc::with_nodes(&cfg(), 6);
         assert!(noc.inject(Subnet::Request, pkt(0, 3, 1, 0)));
         assert!(noc.inject(Subnet::Reply, pkt(3, 0, 1, 0)));
         for t in 0..100 {
@@ -305,7 +412,7 @@ mod tests {
 
     #[test]
     fn all_packets_eventually_delivered_under_load() {
-        let mut noc = Noc::new(&cfg(), 9);
+        let mut noc = Noc::with_nodes(&cfg(), 9);
         let mut sent = 0u32;
         let mut got = 0u32;
         let mut t = 0u64;
@@ -328,10 +435,64 @@ mod tests {
     }
 
     #[test]
+    fn layout_all_private_matches_historical_map() {
+        let l = ChipLayout::homogeneous(3, false, 2);
+        assert_eq!(l.sm_nodes(), 6);
+        assert_eq!(l.nodes(), 8);
+        for ci in 0..3 {
+            assert_eq!(l.nodes_of(ci), [2 * ci, 2 * ci + 1]);
+            assert_eq!(l.cluster_of_node(2 * ci), ci);
+            assert_eq!(l.cluster_of_node(2 * ci + 1), ci);
+        }
+        assert_eq!(l.mc_node(0), 6);
+        assert_eq!(l.mc_node(1), 7);
+        assert!(!l.any_fused());
+        assert!(!l.is_mixed());
+    }
+
+    #[test]
+    fn layout_all_fused_matches_historical_map() {
+        let l = ChipLayout::homogeneous(3, true, 2);
+        assert_eq!(l.sm_nodes(), 3);
+        assert_eq!(l.nodes(), 5);
+        for ci in 0..3 {
+            assert_eq!(l.nodes_of(ci), [ci, ci]);
+            assert_eq!(l.cluster_of_node(ci), ci);
+        }
+        assert_eq!(l.mc_node(0), 3);
+        assert!(l.any_fused());
+        assert!(!l.is_mixed());
+    }
+
+    #[test]
+    fn mixed_layout_interleaves_bypassed_routers() {
+        // Clusters: private, fused, private, fused.
+        let l = ChipLayout::new(vec![false, true, false, true], 2);
+        assert_eq!(l.sm_nodes(), 6);
+        assert_eq!(l.nodes_of(0), [0, 1]);
+        assert_eq!(l.nodes_of(1), [2, 2]);
+        assert_eq!(l.nodes_of(2), [3, 4]);
+        assert_eq!(l.nodes_of(3), [5, 5]);
+        assert!(l.is_mixed());
+        // Inverse is consistent for every SM node.
+        for ci in 0..l.n_clusters() {
+            for n in l.nodes_of(ci) {
+                assert_eq!(l.cluster_of_node(n), ci);
+            }
+        }
+        // MCs sit after the last SM node.
+        assert_eq!(l.mc_node(0), 6);
+        assert_eq!(l.mc_node(1), 7);
+        // The NoC built from the layout covers exactly these endpoints.
+        let noc = Noc::new(&cfg(), &l);
+        assert_eq!(noc.nodes(), 8);
+    }
+
+    #[test]
     fn smaller_mesh_has_shorter_paths() {
         // The fusion effect (Fig 17/18): halving nodes shrinks the mesh.
-        let big = Noc::new(&cfg(), 56); // 48 SMs + 8 MCs
-        let small = Noc::new(&cfg(), 32); // 24 fused + 8 MCs
+        let big = Noc::with_nodes(&cfg(), 56); // 48 SMs + 8 MCs
+        let small = Noc::with_nodes(&cfg(), 32); // 24 fused + 8 MCs
         let max_hops_big = (0..56).map(|n| big.hops(0, n)).max().unwrap();
         let max_hops_small = (0..32).map(|n| small.hops(0, n)).max().unwrap();
         assert!(max_hops_small < max_hops_big);

@@ -48,6 +48,8 @@ pub struct SmStats {
     pub divergent_branches: u64,
     /// Memory-instruction accounting before/after coalescing (Fig 4/16).
     pub mem_insns: u64,
+    /// Store subset of `mem_insns` (the predictor's load/store split).
+    pub st_insns: u64,
     pub mem_requests: u64,
     pub mem_transactions: u64,
     /// L1 data cache.
@@ -146,7 +148,7 @@ impl SmStats {
         add!(
             cycles, warp_insns, thread_insns, stall_idle, stall_memory, stall_control,
             stall_barrier, stall_exec, stall_mem_struct, inactive_lane_cycles,
-            total_lane_cycles, branches, divergent_branches, mem_insns, mem_requests,
+            total_lane_cycles, branches, divergent_branches, mem_insns, st_insns, mem_requests,
             mem_transactions, l1d_accesses, l1d_misses, l1i_accesses, l1i_misses,
             l1c_accesses, l1c_misses, l1t_accesses, l1t_misses, mshr_merges, mshr_allocs,
             mem_struct_stall_cycles, noc_packets, noc_flits, noc_latency_sum,
@@ -182,9 +184,14 @@ pub struct ChipStats {
     pub reconfig_events: u64,
     /// Cycles paid for reconfiguration drains.
     pub reconfig_cycles: u64,
-    /// Scale-up decisions taken by the predictor (per kernel).
+    /// Scale-up decisions taken by the predictor (per kernel, or per
+    /// cluster per kernel under the heterogeneous scheme).
     pub predictor_scale_up: u64,
     pub predictor_scale_out: u64,
+    /// Times the predictor backend failed and a default probability was
+    /// substituted (see `ScalePredictor::fallback_count`); nonzero means
+    /// decisions were NOT measured by the configured backend.
+    pub predictor_fallbacks: u64,
 }
 
 impl ChipStats {

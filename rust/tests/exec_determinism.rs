@@ -12,7 +12,7 @@ fn grid() -> (SystemConfig, Vec<SimJob>) {
     let mut cfg = SystemConfig::tiny();
     cfg.max_cycles = 1_500_000;
     let benches = ["CP", "BFS", "RAY"];
-    let schemes = [Scheme::Baseline, Scheme::WarpRegroup];
+    let schemes = [Scheme::Baseline, Scheme::WarpRegroup, Scheme::Hetero];
     let mut jobs = Vec::new();
     for name in benches {
         let mut p = bench(name).unwrap();
@@ -56,11 +56,25 @@ fn parallel_executor_matches_serial_bit_for_bit() {
         assert_eq!(sr.decisions.len(), pr.decisions.len(), "{label}: decision count");
         for (a, b) in sr.decisions.iter().zip(&pr.decisions) {
             assert_eq!(a.scale_up, b.scale_up, "{label}: decision");
+            assert_eq!(a.cluster, b.cluster, "{label}: decision cluster");
             assert_eq!(
                 a.probability.to_bits(),
                 b.probability.to_bits(),
                 "{label}: decision probability"
             );
+        }
+        // The heterogeneous scheme decides per cluster per kernel; the
+        // per-cluster log must survive the parallel path intact.
+        if job.scheme == Scheme::Hetero {
+            let n_clusters = job.cfg.num_sms / 2;
+            assert_eq!(
+                pr.decisions.len(),
+                n_clusters * job.profile.num_kernels as usize,
+                "{label}: one decision per cluster per kernel"
+            );
+            for (i, d) in pr.decisions.iter().enumerate() {
+                assert_eq!(d.cluster, Some((i % n_clusters) as u32), "{label}: cluster ids");
+            }
         }
     }
 }

@@ -4,6 +4,7 @@
 //! recorded in EXPERIMENTS.md).
 
 use amoeba_gpu::config::{NocMode, Scheme, SystemConfig};
+use amoeba_gpu::sim::core::ClusterMode;
 use amoeba_gpu::sim::gpu::{run_benchmark_seeded, SimReport};
 use amoeba_gpu::workload::{all_benchmarks, bench, BenchProfile};
 
@@ -138,6 +139,66 @@ fn dynamic_split_engages_on_divergent_workloads() {
     }
     // Phase trace records mode changes.
     assert!(!r.phases.is_empty());
+}
+
+/// The heterogeneous scheme (§4.4) must record one decision and one
+/// metric sample per cluster per kernel, with stable cluster ids.
+#[test]
+fn hetero_decides_every_cluster_independently() {
+    let cfg = small_cfg(); // 8 SMs => 4 clusters
+    let n_clusters = cfg.num_sms / 2;
+    let p = shrink(bench("SM").unwrap());
+    let r = run_benchmark_seeded(&cfg, &p, Scheme::Hetero, 5);
+    assert_eq!(r.chip.kernels_completed, 1);
+    assert_eq!(r.decisions.len(), n_clusters, "one decision per cluster per kernel");
+    assert_eq!(r.samples.len(), n_clusters);
+    for k in 0..p.num_kernels as usize {
+        for ci in 0..n_clusters {
+            assert_eq!(r.decisions[k * n_clusters + ci].cluster, Some(ci as u32));
+        }
+    }
+    assert!(r.ipc() > 0.05, "ipc={}", r.ipc());
+}
+
+/// A divergence-heavy, memory-heavy two-kernel app near the predictor's
+/// decision boundary must produce at least one *mixed* phase sample —
+/// some clusters fused (or split), some private, in the same cycle. The
+/// memory intensity is swept across the boundary and a few seeds each,
+/// because which side of 0.5 each cluster's probe CTA lands on is a
+/// property of its own measured window (that independence is the point).
+#[test]
+fn hetero_mixes_cluster_modes_on_boundary_workloads() {
+    let cfg = SystemConfig::tiny(); // 4 SMs => 2 clusters
+    let mut tried = 0u32;
+    for ld_step in 0..=10 {
+        let frac_ld = 0.10 + ld_step as f64 * 0.02;
+        for seed in 0..10u64 {
+            // Divergence-heavy (RAY's branch profile) + tunable memory
+            // intensity, two kernels so the decision re-runs per kernel.
+            let mut p = bench("RAY").unwrap();
+            p.num_ctas = 12;
+            p.insns_per_thread = 150;
+            p.num_kernels = 2;
+            p.frac_ld = frac_ld;
+            p.validate().unwrap();
+            let r = run_benchmark_seeded(&cfg, &p, Scheme::Hetero, seed);
+            tried += 1;
+            assert_eq!(r.chip.kernels_completed, 2, "frac_ld={frac_ld} seed={seed}");
+            assert_eq!(r.decisions.len(), 2 * 2, "one decision per cluster per kernel");
+            let mixed = r.phases.iter().any(|ph| {
+                let non_private = ph
+                    .modes
+                    .iter()
+                    .filter(|m| !matches!(m, ClusterMode::PrivatePair))
+                    .count();
+                non_private > 0 && non_private < ph.modes.len()
+            });
+            if mixed {
+                return; // found a heterogeneous population
+            }
+        }
+    }
+    panic!("no mixed-mode phase across {tried} boundary runs");
 }
 
 /// Determinism: identical seeds give identical cycle counts and stats.

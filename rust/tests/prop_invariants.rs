@@ -114,7 +114,7 @@ fn prop_noc_conservation() {
     for case in 0..30 {
         let cfg = SystemConfig::tiny();
         let nodes = 4 + rng.next_bounded(12) as usize;
-        let mut noc = Noc::new(&cfg, nodes);
+        let mut noc = Noc::with_nodes(&cfg, nodes);
         let mut sent = vec![0u32; nodes];
         let mut got = vec![0u32; nodes];
         let mut t = 0u64;
