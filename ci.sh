@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI entry point: build, test, smoke-run the figure harness, and record
-# the sweep-executor speedup in BENCH_sweep.json (the perf trajectory is
-# tracked from PR 1 onward — keep the file committed after each run).
+# the sweep-executor + event-horizon speedups in BENCH_sweep.json (the
+# perf trajectory is tracked from PR 1 onward — keep the file committed
+# after each run).
 #
 # Usage: ./ci.sh            # full pipeline
 #        AMOEBA_JOBS=8 ./ci.sh
@@ -17,10 +18,16 @@ cargo build --release --benches --examples
 echo "== tests =="
 cargo test -q
 
+echo "== tests (AMOEBA_DENSE=1: dense reference loop) =="
+# The determinism suite compares skip vs dense in-process regardless of
+# the env; this pass additionally proves the whole suite holds when the
+# escape hatch pins every env-driven run (figures, sweeps) to dense.
+AMOEBA_DENSE=1 cargo test -q --test exec_determinism
+
 echo "== figures smoke (quick mode, parallel + memoized) =="
 ./target/release/figures --all --quick > /dev/null
 
-echo "== sweep speedup benchmark (writes BENCH_sweep.json) =="
+echo "== sweep + cycle-skip speedup benchmark (writes BENCH_sweep.json) =="
 cargo bench --bench bench_sweep
 
 echo "== BENCH_sweep.json =="

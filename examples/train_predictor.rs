@@ -3,26 +3,107 @@
 //!
 //! 1. **Data generation (L3)**: run every benchmark in the suite under
 //!    both the scale-out baseline and the fused scale-up machine, collect
-//!    the profiling-window metric sample, and label it with which machine
-//!    actually won (measured IPC).
-//! 2. **Training (L2+L1 via PJRT)**: drive the AOT-compiled
+//!    profiling-window metric samples, and label them with which machine
+//!    actually won (measured IPC). Two datasets come out of this:
+//!    *chip-wide* windows (a `StaticFuse` probe — what `DEFAULT_COEFFS`
+//!    is fitted on) and *per-cluster* windows (a `Scheme::Hetero` probe,
+//!    one sample per cluster per kernel — what `HETERO_COEFFS` is fitted
+//!    on; its feature scaling differs, see §4.4).
+//! 2. **Training**: by default SGD through the AOT-compiled
 //!    `predictor_train.hlo.txt` (JAX train step wrapping the Pallas
-//!    gradient kernel) from rust — SGD epochs entirely through PJRT.
-//! 3. **Evaluation**: report training accuracy, compare against the
-//!    native-rust predictor, and run a full AMOEBA simulation using the
-//!    *learned* model through the compiled `predictor_infer` path.
+//!    gradient kernel) driven from rust via PJRT. With `--native`, a
+//!    dependency-free full-batch gradient-descent fit runs instead — so
+//!    retraining works on hosts without the `xla` feature or artifacts.
+//!    The per-cluster set always fits natively (the compiled train step
+//!    is specialised to the chip-wide batch).
+//! 3. **Evaluation**: report training accuracy for both sets and print
+//!    paste-ready `Coefficients` blocks for `predictor.rs`
+//!    (`DEFAULT_COEFFS` / `HETERO_COEFFS`).
 //!
-//! Run: `make artifacts && cargo run --release --example train_predictor`
+//! Run: `cargo run --release --example train_predictor -- --native --quick`
+//! (or without `--native` after `make artifacts` for the PJRT path).
 //! The headline numbers are recorded in EXPERIMENTS.md.
 
-use amoeba_gpu::amoeba::{Controller, MetricsSample, ScalePredictor, NUM_FEATURES};
+use amoeba_gpu::amoeba::{
+    Controller, MetricsSample, NativePredictor, ScalePredictor, Coefficients, NUM_FEATURES,
+};
 use amoeba_gpu::config::{Scheme, SystemConfig};
-use amoeba_gpu::runtime::{HloPredictor, HloTrainer, Runtime};
+use amoeba_gpu::runtime::{HloPredictor, Runtime};
 use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_with_controller};
 use amoeba_gpu::workload::all_benchmarks;
 
+/// Full-batch logistic-regression fit (deterministic, no dependencies):
+/// minimises BCE with plain gradient descent. Returns (weights,
+/// intercept, final loss).
+fn fit_logistic(
+    xs: &[[f32; NUM_FEATURES]],
+    ys: &[f32],
+    epochs: usize,
+    lr: f64,
+) -> ([f64; NUM_FEATURES], f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let mut w = [0f64; NUM_FEATURES];
+    let mut b = 0f64;
+    let mut loss = f64::NAN;
+    for _ in 0..epochs {
+        let mut gw = [0f64; NUM_FEATURES];
+        let mut gb = 0f64;
+        loss = 0.0;
+        for (x, &y) in xs.iter().zip(ys) {
+            let mut z = b;
+            for (wi, &xi) in w.iter().zip(x) {
+                z += wi * xi as f64;
+            }
+            let p = amoeba_gpu::amoeba::sigmoid(z);
+            let y = y as f64;
+            // BCE with the usual clamp against log(0).
+            let pc = p.clamp(1e-12, 1.0 - 1e-12);
+            loss -= y * pc.ln() + (1.0 - y) * (1.0 - pc).ln();
+            let err = p - y;
+            for (g, &xi) in gw.iter_mut().zip(x) {
+                *g += err * xi as f64;
+            }
+            gb += err;
+        }
+        loss /= n;
+        for (wi, g) in w.iter_mut().zip(gw) {
+            *wi -= lr * g / n;
+        }
+        b -= lr * gb / n;
+    }
+    (w, b, loss)
+}
+
+/// Training accuracy of a coefficient set on a dataset.
+fn accuracy(coeffs: Coefficients, xs: &[[f32; NUM_FEATURES]], ys: &[f32]) -> f64 {
+    let mut p = NativePredictor::with_coeffs(coeffs);
+    let mut correct = 0usize;
+    for (x, &y) in xs.iter().zip(ys) {
+        let mut f = [0f64; NUM_FEATURES];
+        for (o, &v) in f.iter_mut().zip(x) {
+            *o = v as f64;
+        }
+        let s = MetricsSample { features: f };
+        correct += (p.scale_up(&s) == (y > 0.5)) as usize;
+    }
+    correct as f64 / xs.len().max(1) as f64
+}
+
+/// Print a paste-ready `Coefficients` block for `amoeba/predictor.rs`.
+fn print_coeffs_block(name: &str, w: &[f64; NUM_FEATURES], b: f64) {
+    println!("pub const {name}: Coefficients = Coefficients {{");
+    println!("    weights: [");
+    for (wi, feat) in w.iter().zip(amoeba_gpu::amoeba::FEATURES) {
+        println!("        {wi:.9}, // {feat}");
+    }
+    println!("    ],");
+    println!("    intercept: {b:.9},");
+    println!("}};");
+}
+
 fn main() -> amoeba_gpu::errors::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
+    let native = std::env::args().any(|a| a == "--native");
     let mut cfg = SystemConfig::gtx480();
     if quick {
         cfg.num_sms = 8;
@@ -33,6 +114,10 @@ fn main() -> amoeba_gpu::errors::Result<()> {
     println!("== phase 1: generating training data from simulations ==");
     let mut xs: Vec<[f32; NUM_FEATURES]> = Vec::new();
     let mut ys: Vec<f32> = Vec::new();
+    // Per-cluster windows (§4.4): one sample per cluster per kernel from
+    // the heterogeneous probe, labelled with the same measured outcome.
+    let mut xs_cluster: Vec<[f32; NUM_FEATURES]> = Vec::new();
+    let mut ys_cluster: Vec<f32> = Vec::new();
     let seeds: &[u64] = if quick { &[1] } else { &[1, 2, 3] };
     for profile in all_benchmarks() {
         let mut p = profile.clone();
@@ -42,15 +127,20 @@ fn main() -> amoeba_gpu::errors::Result<()> {
             p.num_kernels = 1;
         }
         for &seed in seeds {
-            // The profiling sample comes from a StaticFuse run (it always
-            // profiles in scale-out mode first).
+            // The chip-wide profiling sample comes from a StaticFuse run
+            // (it always profiles in scale-out mode first).
             let probe = run_benchmark_seeded(&cfg, &p, Scheme::StaticFuse, seed);
+            let hetero_probe = run_benchmark_seeded(&cfg, &p, Scheme::Hetero, seed);
             let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, seed);
             let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, seed);
             let label = (fused.ipc() > base.ipc()) as u8 as f32;
             for s in &probe.samples {
                 xs.push(s.as_f32());
                 ys.push(label);
+            }
+            for s in &hetero_probe.samples {
+                xs_cluster.push(s.as_f32());
+                ys_cluster.push(label);
             }
             println!(
                 "  {:6} seed={seed}: base={:.2} fused={:.2} -> label={}",
@@ -61,72 +151,131 @@ fn main() -> amoeba_gpu::errors::Result<()> {
             );
         }
     }
-    println!("  collected {} samples", xs.len());
+    println!(
+        "  collected {} chip-wide + {} per-cluster samples",
+        xs.len(),
+        xs_cluster.len()
+    );
 
-    // ---------------- Phase 2: train via the compiled HLO ----------------
-    println!("\n== phase 2: SGD through predictor_train.hlo.txt (PJRT) ==");
-    let rt = Runtime::new()?;
-    println!("  PJRT platform: {}", rt.platform());
-    let mut trainer = HloTrainer::new(&rt)?;
-    let batch = trainer.batch;
-    // Tile the dataset up to the fixed batch (with replication).
-    let mut x_flat = vec![0f32; batch * NUM_FEATURES];
-    let mut y_flat = vec![0f32; batch];
-    for i in 0..batch {
-        let j = i % xs.len();
-        x_flat[i * NUM_FEATURES..(i + 1) * NUM_FEATURES].copy_from_slice(&xs[j]);
-        y_flat[i] = ys[j];
-    }
+    // ---------------- Phase 2: train the chip-wide set -------------------
     let epochs = if quick { 200 } else { 800 };
-    let mut first_loss = None;
-    let mut last_loss = 0.0;
-    for e in 0..epochs {
-        last_loss = trainer.step(&x_flat, &y_flat, 0.8)?;
-        first_loss.get_or_insert(last_loss);
-        if e % (epochs / 8).max(1) == 0 {
-            println!("  epoch {e:4}: loss {last_loss:.4}");
+    // Kept alive past training so phase 3 can evaluate through the
+    // compiled `predictor_infer` path (None on the --native route).
+    let mut rt: Option<Runtime> = None;
+    let (w_default, b_default) = if native {
+        println!("\n== phase 2: native full-batch logistic fit (chip-wide windows) ==");
+        let (w, b, loss) = fit_logistic(&xs, &ys, epochs, 0.8);
+        println!("  final BCE: {loss:.4}");
+        (w, b)
+    } else {
+        println!("\n== phase 2: SGD through predictor_train.hlo.txt (PJRT) ==");
+        use amoeba_gpu::runtime::HloTrainer;
+        let runtime = Runtime::new()?;
+        println!("  PJRT platform: {}", runtime.platform());
+        let mut trainer = HloTrainer::new(&runtime)?;
+        let batch = trainer.batch;
+        // Tile the dataset up to the fixed batch (with replication).
+        let mut x_flat = vec![0f32; batch * NUM_FEATURES];
+        let mut y_flat = vec![0f32; batch];
+        for i in 0..batch {
+            let j = i % xs.len();
+            x_flat[i * NUM_FEATURES..(i + 1) * NUM_FEATURES].copy_from_slice(&xs[j]);
+            y_flat[i] = ys[j];
         }
-    }
-    println!("  loss: {:.4} -> {last_loss:.4}", first_loss.unwrap_or(0.0));
-    println!("  learned weights: {:?}", trainer.weights);
-    println!("  learned intercept: {:.4}", trainer.intercept);
+        let mut first_loss = None;
+        let mut last_loss = 0.0;
+        for e in 0..epochs {
+            last_loss = trainer.step(&x_flat, &y_flat, 0.8)?;
+            first_loss.get_or_insert(last_loss);
+            if e % (epochs / 8).max(1) == 0 {
+                println!("  epoch {e:4}: loss {last_loss:.4}");
+            }
+        }
+        println!("  loss: {:.4} -> {last_loss:.4}", first_loss.unwrap_or(0.0));
+        let mut w = [0f64; NUM_FEATURES];
+        for (o, v) in w.iter_mut().zip(&trainer.weights) {
+            *o = *v as f64;
+        }
+        rt = Some(runtime);
+        (w, trainer.intercept as f64)
+    };
+
+    // ---------------- Phase 2b: train the per-cluster set ----------------
+    println!("\n== phase 2b: native fit on per-cluster (Hetero) windows ==");
+    let (w_hetero, b_hetero, loss_h) = fit_logistic(&xs_cluster, &ys_cluster, epochs, 0.8);
+    println!("  final BCE: {loss_h:.4}");
 
     // ---------------- Phase 3: evaluate ----------------------------------
     println!("\n== phase 3: evaluation ==");
-    let mut w = [0f32; NUM_FEATURES];
-    w.copy_from_slice(&trainer.weights);
-    let mut hlo = HloPredictor::new(&rt, w, trainer.intercept)?;
-    let mut correct = 0;
-    for (x, y) in xs.iter().zip(&ys) {
-        let mut f = [0f64; NUM_FEATURES];
-        for (o, v) in f.iter_mut().zip(x) {
-            *o = *v as f64;
-        }
-        let s = MetricsSample { features: f };
-        let pred = hlo.scale_up(&s);
-        correct += (pred == (*y > 0.5)) as u32;
-    }
-    let acc = correct as f64 / xs.len().max(1) as f64;
-    println!("  training accuracy (HLO inference path): {:.1}%", acc * 100.0);
+    let default_fit = Coefficients { weights: w_default, intercept: b_default };
+    let hetero_fit = Coefficients { weights: w_hetero, intercept: b_hetero };
+    println!(
+        "  chip-wide   : fitted {:.1}% | shipped DEFAULT_COEFFS {:.1}%",
+        accuracy(default_fit, &xs, &ys) * 100.0,
+        accuracy(amoeba_gpu::amoeba::DEFAULT_COEFFS, &xs, &ys) * 100.0
+    );
+    println!(
+        "  per-cluster : fitted {:.1}% | shipped HETERO_COEFFS  {:.1}%",
+        accuracy(hetero_fit, &xs_cluster, &ys_cluster) * 100.0,
+        accuracy(amoeba_gpu::amoeba::HETERO_COEFFS, &xs_cluster, &ys_cluster) * 100.0
+    );
 
-    // Full AMOEBA run with the learned model through PJRT on a benchmark
-    // with a strong fuse signal.
+    // On the PJRT route, additionally validate the compiled inference
+    // path end to end: the same fitted weights through `predictor_infer`
+    // must reproduce the accuracy (modulo f32 quantization) — this is
+    // the "training accuracy (HLO inference path)" number EXPERIMENTS.md
+    // records.
+    let mut w32 = [0f32; NUM_FEATURES];
+    for (o, v) in w32.iter_mut().zip(&w_default) {
+        *o = *v as f32;
+    }
+    if let Some(rt) = &rt {
+        let mut hlo = HloPredictor::new(rt, w32, b_default as f32)?;
+        let mut correct = 0usize;
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut f = [0f64; NUM_FEATURES];
+            for (o, v) in f.iter_mut().zip(x) {
+                *o = *v as f64;
+            }
+            let pred = hlo.scale_up(&MetricsSample { features: f });
+            correct += (pred == (*y > 0.5)) as usize;
+        }
+        println!(
+            "  chip-wide   : {:.1}% through the compiled HLO inference path",
+            correct as f64 / xs.len().max(1) as f64 * 100.0
+        );
+    }
+
+    println!("\n-- paste into rust/src/amoeba/predictor.rs --");
+    print_coeffs_block("DEFAULT_COEFFS", &w_default, b_default);
+    print_coeffs_block("HETERO_COEFFS", &w_hetero, b_hetero);
+
+    // Full AMOEBA run with the fitted chip-wide model on a benchmark with
+    // a strong fuse signal — through PJRT when it trained the model, so
+    // the compiled path also drives a whole simulation.
     let mut p = all_benchmarks().into_iter().find(|b| b.name == "SM").unwrap();
     if quick {
         p.num_ctas = 12;
         p.insns_per_thread = 100;
         p.num_kernels = 1;
     }
-    let predictor = HloPredictor::new(&rt, w, trainer.intercept)?;
-    let controller = Controller::with_predictor(Box::new(predictor));
+    let predictor: Box<dyn ScalePredictor> = match &rt {
+        Some(rt) => Box::new(HloPredictor::new(rt, w32, b_default as f32)?),
+        None => Box::new(NativePredictor::with_coeffs(default_fit)),
+    };
+    let controller = Controller::with_predictor(predictor);
     let amoeba = run_benchmark_with_controller(&cfg, &p, Scheme::WarpRegroup, controller, 7);
     let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 7);
     println!(
-        "  SM with learned predictor through PJRT: {:.2}x over baseline",
+        "\n  SM with the fitted predictor: {:.2}x over baseline",
         amoeba.ipc() / base.ipc().max(1e-9)
     );
     for (i, d) in amoeba.decisions.iter().enumerate() {
-        println!("    kernel {i}: P={:.3} -> {}", d.probability, if d.scale_up { "FUSE" } else { "out" });
+        println!(
+            "    kernel {i}: P={:.3} -> {}",
+            d.probability,
+            if d.scale_up { "FUSE" } else { "out" }
+        );
     }
     Ok(())
 }

@@ -1,7 +1,8 @@
 //! Full-suite sweep wall-clock: the old serial per-figure replay vs the
 //! memoized parallel executor — the headline number for the sweep
-//! subsystem. Writes `BENCH_sweep.json` (consumed by ci.sh to track the
-//! perf trajectory across PRs).
+//! subsystem — plus the event-horizon skip engine vs the dense cycle
+//! loop on the memory-divergent profiles. Writes `BENCH_sweep.json`
+//! (consumed by ci.sh to track the perf trajectory across PRs).
 //!
 //! The job list reproduces what quick-mode figure regeneration used to
 //! simulate before the executor existed: the seven per-scheme sweep
@@ -16,7 +17,7 @@ use std::time::Instant;
 
 use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::harness::{SimJob, SweepExec};
-use amoeba_gpu::sim::gpu::run_benchmark_seeded;
+use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_seeded_dense};
 use amoeba_gpu::workload::{bench, BenchProfile, FIG12_SET};
 
 /// Mirror of the harness quick-mode shrink + base config (kept in sync
@@ -102,8 +103,49 @@ fn main() {
     let memo_speedup = serial.as_secs_f64() / memo_only.as_secs_f64().max(1e-9);
     eprintln!("[bench_sweep] speedup: {speedup:.2}x total ({memo_speedup:.2}x from memoization alone)");
 
+    // -------- Event-horizon cycle skipping: dense vs skip wall-clock on
+    // the memory-divergent profiles (the §5/Fig 12 set the paper cares
+    // most about). Low occupancy keeps the chip quiescent between DRAM
+    // releases, which is exactly the regime the skip engine targets.
+    // CP is the control: compute-bound, so its ratio measures the pure
+    // overhead of the quiescence probe on live cycles (expected ~1.0 —
+    // a value well below 1 flags a dense-path regression). Bit-identity
+    // of the two reports is asserted on every pair.
+    eprintln!("[bench_sweep] event-horizon skip vs dense (single-thread, no memo):");
+    let mut skip_rows = String::new();
+    let mut best_skip = (0.0f64, "");
+    for name in ["BFS", "MUM", "SM", "CP"] {
+        let mut p = quick_profile(name);
+        p.num_ctas = 6; // low occupancy: long quiescent windows
+        let t_dense = Instant::now();
+        let dense = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, SEED, true);
+        let dense_s = t_dense.elapsed().as_secs_f64();
+        let t_skip = Instant::now();
+        let skipped = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, SEED, false);
+        let skip_s = t_skip.elapsed().as_secs_f64();
+        assert_eq!(dense, skipped, "{name}: skip must be bit-identical to dense");
+        let ratio = dense_s / skip_s.max(1e-9);
+        eprintln!(
+            "[bench_sweep]   {name:4}: dense {dense_s:.3} s, skip {skip_s:.3} s -> {ratio:.2}x (cycles={})",
+            dense.cycles
+        );
+        if ratio > best_skip.0 {
+            best_skip = (ratio, name);
+        }
+        if !skip_rows.is_empty() {
+            skip_rows.push_str(",\n");
+        }
+        skip_rows.push_str(&format!(
+            "    {{ \"bench\": \"{name}\", \"dense_s\": {dense_s:.3}, \"skip_s\": {skip_s:.3}, \"speedup\": {ratio:.3} }}"
+        ));
+    }
+    eprintln!(
+        "[bench_sweep] best skip speedup: {:.2}x on {} (target >= 2x on a memory-bound profile)",
+        best_skip.0, best_skip.1
+    );
+
     let json = format!(
-        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3}\n}}\n",
+        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\"\n}}\n",
         jobs.len(),
         misses,
         threads,
@@ -112,6 +154,9 @@ fn main() {
         memo_only.as_secs_f64(),
         speedup,
         memo_speedup,
+        skip_rows,
+        best_skip.0,
+        best_skip.1,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => eprintln!("[bench_sweep] wrote BENCH_sweep.json"),

@@ -26,6 +26,13 @@ pub struct KernelDecision {
 /// The reconfiguration controller: predictor + decision log.
 pub struct Controller {
     predictor: Box<dyn ScalePredictor>,
+    /// Predictor for per-cluster profiling windows (§4.4). A 2-SM window
+    /// has different feature scaling than a chip-wide one, so the
+    /// heterogeneous path gets its own coefficient set
+    /// ([`crate::amoeba::predictor::HETERO_COEFFS`]). `None` routes
+    /// per-cluster decisions through the main predictor (custom backends
+    /// supply one model for all windows).
+    cluster_predictor: Option<Box<dyn ScalePredictor>>,
     /// Decision history (one entry per `decide`/`decide_cluster` call).
     pub history: Vec<KernelDecision>,
     /// Force a fixed decision (ablations / ScaleUp scheme plumbing).
@@ -33,21 +40,30 @@ pub struct Controller {
 }
 
 impl Controller {
-    /// Controller backed by the native rust logistic predictor.
+    /// Controller backed by the native rust logistic predictor (chip-wide
+    /// coefficients for chip-global decisions, the per-cluster-window set
+    /// for `decide_cluster`).
     pub fn native(_cfg: &SystemConfig) -> Self {
-        Controller { predictor: Box::new(NativePredictor::new()), history: Vec::new(), force: None }
+        Controller {
+            predictor: Box::new(NativePredictor::new()),
+            cluster_predictor: Some(Box::new(NativePredictor::hetero())),
+            history: Vec::new(),
+            force: None,
+        }
     }
 
     /// Controller backed by an arbitrary predictor (e.g. the PJRT HLO
-    /// predictor from [`crate::runtime`]).
+    /// predictor from [`crate::runtime`]); it serves both chip-global and
+    /// per-cluster decisions.
     pub fn with_predictor(predictor: Box<dyn ScalePredictor>) -> Self {
-        Controller { predictor, history: Vec::new(), force: None }
+        Controller { predictor, cluster_predictor: None, history: Vec::new(), force: None }
     }
 
     /// Controller that always answers `fuse` (ablation baseline).
     pub fn forced(fuse: bool) -> Self {
         Controller {
             predictor: Box::new(NativePredictor::new()),
+            cluster_predictor: None,
             history: Vec::new(),
             force: Some(fuse),
         }
@@ -71,7 +87,11 @@ impl Controller {
                 KernelDecision { probability: if f { 1.0 } else { 0.0 }, scale_up: f, cluster }
             }
             None => {
-                let p = self.predictor.probability(sample);
+                let predictor = match (&mut self.cluster_predictor, cluster) {
+                    (Some(cp), Some(_)) => cp,
+                    _ => &mut self.predictor,
+                };
+                let p = predictor.probability(sample);
                 KernelDecision { probability: p, scale_up: p > 0.5, cluster }
             }
         };
@@ -79,10 +99,11 @@ impl Controller {
         d
     }
 
-    /// Fallback substitutions made by the underlying predictor backend
+    /// Fallback substitutions made by the underlying predictor backends
     /// (see [`ScalePredictor::fallback_count`]); 0 for the native path.
     pub fn fallback_count(&self) -> u64 {
         self.predictor.fallback_count()
+            + self.cluster_predictor.as_ref().map_or(0, |p| p.fallback_count())
     }
 }
 
@@ -125,6 +146,27 @@ mod tests {
         assert_eq!(c.history.len(), 3);
         // Identical samples give identical probabilities per cluster.
         assert_eq!(c.history[0].probability, c.history[2].probability);
+    }
+
+    #[test]
+    fn per_cluster_decisions_use_the_hetero_coefficient_set() {
+        use crate::amoeba::predictor::{NativePredictor, HETERO_COEFFS};
+        let cfg = SystemConfig::tiny();
+        let mut c = Controller::native(&cfg);
+        let mut f = [0.0; NUM_FEATURES];
+        f[6] = 0.3; // load-heavy window
+        let s = MetricsSample { features: f };
+        let d = c.decide_cluster(0, &s);
+        let mut reference = NativePredictor::hetero();
+        assert_eq!(
+            d.probability.to_bits(),
+            reference.probability(&s).to_bits(),
+            "per-cluster path must evaluate HETERO_COEFFS"
+        );
+        // The bootstrap set is numerically DEFAULT_COEFFS (behaviour-
+        // preserving until the first toolchain retrain); pin that so a
+        // future retrain is a conscious, test-visible change.
+        assert_eq!(HETERO_COEFFS, crate::amoeba::predictor::DEFAULT_COEFFS);
     }
 
     #[test]

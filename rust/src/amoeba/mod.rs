@@ -17,5 +17,6 @@ pub use controller::{Controller, KernelDecision};
 pub use dynsplit::DynSplit;
 pub use metrics::{MetricsSample, FEATURES, NUM_FEATURES};
 pub use predictor::{
-    sigmoid, Coefficients, NativePredictor, ScalePredictor, DEFAULT_COEFFS, PAPER_COEFFS,
+    sigmoid, Coefficients, NativePredictor, ScalePredictor, DEFAULT_COEFFS, HETERO_COEFFS,
+    PAPER_COEFFS,
 };

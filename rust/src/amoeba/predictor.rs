@@ -100,6 +100,36 @@ pub const DEFAULT_COEFFS: Coefficients = Coefficients {
     intercept: -0.697_3,
 };
 
+/// Coefficient set for **per-cluster** profiling windows — the §4.4
+/// heterogeneous decision path (`Controller::decide_cluster`). A
+/// 2-SM window differs from a chip-wide one in feature scaling: the
+/// concurrent-CTA feature (9) is normalised over 2 SMs instead of the
+/// chip, and a single probe CTA's counters make the rate features
+/// noisier, so the set is fitted separately on per-cluster windows
+/// (`examples/train_predictor.rs --native` collects them from
+/// `Scheme::Hetero` probe runs and prints a paste-ready block).
+///
+/// Bootstrap values: numerically identical to [`DEFAULT_COEFFS`] until
+/// the first toolchain-equipped retraining run replaces them (ROADMAP
+/// open item) — shipping untrained *different* numbers would silently
+/// change every Hetero figure, so the bootstrap is deliberately a
+/// behaviour-preserving alias with its own identity and plumbing.
+pub const HETERO_COEFFS: Coefficients = Coefficients {
+    weights: [
+        -0.226_396_83, // control divergent
+        -2.285_68,     // coalescing (actual-access rate)
+        -0.349_336_8,  // L1D miss (cold-dominated in the probe window)
+        -0.762_929_7,  // L1I miss
+        -0.132_789_63, // L1C miss
+        -1.056_968_2,  // MSHR merge rate
+        6.160_763_3,   // load-instruction rate
+        2.053_589_3,   // store-instruction rate
+        -0.065_658_96, // NoC latency-weighted throughput
+        0.0,           // concurrent CTAs (2-SM scaling; weight pending fit)
+    ],
+    intercept: -0.697_3,
+};
+
 /// Native rust logistic predictor.
 #[derive(Debug, Clone)]
 pub struct NativePredictor {
@@ -115,6 +145,12 @@ impl NativePredictor {
     /// Predictor with explicit coefficients (tests, training loops).
     pub fn with_coeffs(coeffs: Coefficients) -> Self {
         NativePredictor { coeffs }
+    }
+
+    /// Predictor with the per-cluster-window coefficient set
+    /// ([`HETERO_COEFFS`]) used by the §4.4 heterogeneous decision path.
+    pub fn hetero() -> Self {
+        NativePredictor { coeffs: HETERO_COEFFS }
     }
 
     /// Raw logit (log-odds, paper eq. 1).

@@ -223,11 +223,6 @@ impl SystemConfig {
         bytes.div_ceil(flit_bytes).max(1)
     }
 
-    /// Sets in an L1 cache of `bytes` with this config's line/assoc.
-    pub fn l1_sets(&self, bytes: usize) -> usize {
-        (bytes / self.line_bytes / self.l1_assoc).max(1)
-    }
-
     /// Validate internal consistency; returns a human-readable complaint.
     pub fn validate(&self) -> Result<(), String> {
         if !self.warp_size.is_power_of_two() {

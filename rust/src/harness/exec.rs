@@ -24,6 +24,13 @@
 //! Thread count: `AMOEBA_JOBS` env var, else the machine's available
 //! parallelism. `SweepExec::new(1)` degrades to a purely serial,
 //! still-memoized executor.
+//!
+//! Execution mode: simulations run with event-horizon cycle skipping
+//! unless `AMOEBA_DENSE=1` forces the dense reference loop. The mode is
+//! deliberately **not** part of [`JobKey`] — skip and dense runs are
+//! bit-identical by contract (`tests/exec_determinism.rs`), so a cached
+//! report is valid under either mode and the fingerprints stay
+//! mode-agnostic.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -46,7 +53,10 @@ fn fnv1a(s: &str) -> u64 {
     h
 }
 
-/// Stable fingerprint of a full system configuration.
+/// Stable fingerprint of a full system configuration. The execution mode
+/// (event-horizon vs `AMOEBA_DENSE`) is intentionally outside the
+/// fingerprint: both modes produce bit-identical reports, so including
+/// it would only split the cache.
 pub fn cfg_fingerprint(cfg: &SystemConfig) -> u64 {
     fnv1a(&format!("{cfg:?}"))
 }

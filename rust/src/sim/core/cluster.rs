@@ -513,6 +513,129 @@ impl SmCluster {
         }
     }
 
+    /// The `(half, all_homes)` issue-slot list `tick` walks in the
+    /// current mode — shared by the event probe and the skip replay so
+    /// they can never disagree with the dense loop about which schedulers
+    /// run.
+    fn issue_slots(&self) -> &'static [(u8, bool)] {
+        match self.mode {
+            ClusterMode::Fused => &[(0, true)],
+            ClusterMode::PrivatePair | ClusterMode::FusedSplit => &[(0, false), (1, false)],
+        }
+    }
+
+    /// Earliest cycle at which ticking this cluster could change state
+    /// beyond the per-cycle accounting [`SmCluster::skip`] replays.
+    /// Mirrors `tick` / `process_lsu` / `issue_half` exactly, stopping
+    /// one step before every mutation:
+    ///
+    /// * frozen cluster: nothing until `frozen_until`;
+    /// * LSU head that would hit, merge, or allocate: `Progress` (it
+    ///   dequeues); a head blocked on injection is `Progress` too (the
+    ///   NoC either has space — so it injects — or is busy and reports
+    ///   `Progress` itself); only an `MshrFull` head stalls, and only a
+    ///   reply (an external event) can unblock it;
+    /// * a schedulable pick whose instruction is not LSU-backpressured:
+    ///   `Progress`; a busy issue port wakes at `busy_until`.
+    ///
+    /// Any divergence between this pair and the dense path is a
+    /// determinism bug — `tests/exec_determinism.rs` pins skip == dense
+    /// bit-for-bit across every scheme.
+    pub fn next_event(&self, now: u64, gen: &TraceGen) -> crate::sim::NextEvent {
+        use crate::sim::NextEvent;
+        if now < self.frozen_until {
+            return NextEvent::At(self.frozen_until);
+        }
+        if let Some(tx) = self.lsu.front() {
+            if tx.needs_inject || tx.is_write {
+                return NextEvent::Progress;
+            }
+            let ci = self.cache_idx(tx.half);
+            let cache = self.cache_ref(tx.kind, ci);
+            if cache.probe(tx.line) || cache.has_pending(tx.line) || !cache.mshr_full() {
+                return NextEvent::Progress; // Hit / MissMerged / MissNew all dequeue
+            }
+            // MshrFull: the head retries (accounting only) until a reply
+            // frees an MSHR — an external event the GPU loop delivers.
+        }
+        let mut ev = NextEvent::Idle;
+        for &(half, all_homes) in self.issue_slots() {
+            let sched = &self.sched[half as usize];
+            if sched.busy_until > now {
+                ev = ev.min_with(NextEvent::At(sched.busy_until));
+                continue;
+            }
+            let blocked = match self.pick(half, all_homes) {
+                None => true,
+                Some(Pick::Warp(wi)) => {
+                    let w = &self.warps[wi];
+                    let op = gen.resolve(w.id.cta, w.subwarps[0], w.pc);
+                    op.is_cached_mem() && self.lsu_full()
+                }
+                Some(Pick::Shadow(si)) => {
+                    let s = &self.shadows[si];
+                    let op = gen.resolve(s.cta, s.subwarp, s.pc);
+                    op.is_cached_mem() && self.lsu_full()
+                }
+            };
+            if !blocked {
+                return NextEvent::Progress;
+            }
+        }
+        ev
+    }
+
+    /// Replay `cycles` quiescent ticks' worth of accounting in O(1):
+    /// exactly what the dense loop's `tick` would have recorded over a
+    /// window in which [`SmCluster::next_event`] promised no state
+    /// change. Counter-for-counter mirror of the dense path:
+    ///
+    /// * `stats.cycles` and the fused/split mode counters, always;
+    /// * a frozen cluster records nothing else (`tick` returns early);
+    /// * an `MshrFull`-blocked LSU head: one `Cache::access` LRU-clock
+    ///   bump plus one `MemStructFull` stall per cycle (`process_lsu`);
+    /// * per issue slot: `ExecBusy` while the port is busy, the
+    ///   `stall_reason` classification when nothing is pickable, or the
+    ///   `MemStructFull` backpressure stall when the pick's memory
+    ///   instruction cannot enter the full LSU (`issue_half`/`issue_warp`).
+    pub fn skip(&mut self, now: u64, cycles: u64) {
+        self.stats.cycles += cycles;
+        match self.mode {
+            ClusterMode::Fused => self.stats.fused_cycles += cycles,
+            ClusterMode::FusedSplit => self.stats.split_cycles += cycles,
+            ClusterMode::PrivatePair => {}
+        }
+        if now < self.frozen_until {
+            debug_assert!(now + cycles <= self.frozen_until, "skip across a thaw boundary");
+            return;
+        }
+        if let Some(tx) = self.lsu.front().copied() {
+            debug_assert!(!tx.needs_inject && !tx.is_write, "head not MshrFull-blocked");
+            let ci = self.cache_idx(tx.half);
+            self.cache_mut(tx.kind, ci).advance_clock(cycles);
+            self.stats.stall_n(StallReason::MemStructFull, cycles);
+            self.stats.mem_struct_stall_cycles += cycles;
+        }
+        for &(half, all_homes) in self.issue_slots() {
+            if self.sched[half as usize].busy_until > now {
+                debug_assert!(now + cycles <= self.sched[half as usize].busy_until);
+                self.stats.stall_n(StallReason::ExecBusy, cycles);
+                continue;
+            }
+            match self.pick(half, all_homes) {
+                None => {
+                    let r = self.stall_reason(half, all_homes);
+                    self.stats.stall_n(r, cycles);
+                }
+                Some(_) => {
+                    // next_event guaranteed the pick is LSU-backpressured.
+                    self.stats.stall_n(StallReason::MemStructFull, cycles);
+                    self.stats.mem_struct_stall_cycles += cycles;
+                }
+            }
+        }
+    }
+
     /// GTO pick for `half` (greedy last-issued, else oldest issuable).
     fn pick(&self, half: u8, all_homes: bool) -> Option<Pick> {
         let sched = &self.sched[half as usize];
@@ -576,6 +699,15 @@ impl SmCluster {
 
     /// Classify why nothing was issuable (stall breakdown, Fig 6/13).
     fn account_stall(&mut self, half: u8, all_homes: bool) {
+        let r = self.stall_reason(half, all_homes);
+        self.stats.stall(r);
+    }
+
+    /// The stall reason `account_stall` would record for `half` this
+    /// cycle. Pure: the event-horizon skip path multiplies it across a
+    /// quiescent window (warp/shadow state is frozen there, so the
+    /// classification is constant).
+    fn stall_reason(&self, half: u8, all_homes: bool) -> StallReason {
         let mut any = false;
         let mut mem = false;
         let mut bar = false;
@@ -603,15 +735,15 @@ impl SmCluster {
             }
         }
         if !any {
-            self.stats.stall(StallReason::Idle);
+            StallReason::Idle
         } else if ctrl {
-            self.stats.stall(StallReason::Control);
+            StallReason::Control
         } else if mem {
-            self.stats.stall(StallReason::Memory);
+            StallReason::Memory
         } else if bar {
-            self.stats.stall(StallReason::Barrier);
+            StallReason::Barrier
         } else {
-            self.stats.stall(StallReason::ExecBusy);
+            StallReason::ExecBusy
         }
     }
 
@@ -1059,6 +1191,15 @@ impl SmCluster {
             CacheKind::Instr => &mut self.l1i[ci],
             CacheKind::Const => &mut self.l1c[ci],
             CacheKind::Texture => &mut self.l1t[ci],
+        }
+    }
+
+    fn cache_ref(&self, kind: CacheKind, ci: usize) -> &Cache {
+        match kind {
+            CacheKind::Data => &self.l1d[ci],
+            CacheKind::Instr => &self.l1i[ci],
+            CacheKind::Const => &self.l1c[ci],
+            CacheKind::Texture => &self.l1t[ci],
         }
     }
 

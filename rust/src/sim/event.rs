@@ -1,0 +1,76 @@
+//! The event-horizon contract shared by every simulated component.
+//!
+//! Cycle skipping works because every stall source in the machine already
+//! knows when it will wake: a DRAM bank knows its service-completion
+//! cycle, a router knows when a blocked packet becomes movable, a frozen
+//! cluster knows its thaw cycle. [`NextEvent`] is how a component reports
+//! that knowledge to the top-level loop: either "ticking right now would
+//! change state" ([`NextEvent::Progress`]), or "nothing I do changes
+//! state before cycle `t`" ([`NextEvent::At`]), or "I will never act
+//! again without external input" ([`NextEvent::Idle`]).
+//!
+//! The safety contract is one-sided: a component may report an event
+//! *earlier* than its first real state change (the loop just skips less),
+//! but never later — a late horizon silently diverges from the dense
+//! cycle loop. `tests/prop_invariants.rs` checks the tightness direction
+//! per component, and `tests/exec_determinism.rs` checks the composed
+//! machine end to end (skip == dense, bit for bit).
+
+/// Earliest future activity of a simulated component, relative to the
+/// cycle `now` it was queried at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NextEvent {
+    /// Ticking at `now` would already change state: the cycle is live.
+    Progress,
+    /// Nothing changes before this cycle (always `> now`): the cycles in
+    /// between are pure per-cycle accounting and may be fast-forwarded.
+    At(u64),
+    /// No internal event will ever fire without external input (e.g. an
+    /// empty DRAM queue, a cluster whose warps all wait on replies).
+    Idle,
+}
+
+impl NextEvent {
+    /// Combine two components' horizons: the machine's next event is the
+    /// earliest of its parts, and any live part makes the cycle live.
+    pub fn min_with(self, other: NextEvent) -> NextEvent {
+        use NextEvent::*;
+        match (self, other) {
+            (Progress, _) | (_, Progress) => Progress,
+            (At(a), At(b)) => At(a.min(b)),
+            (At(a), Idle) | (Idle, At(a)) => At(a),
+            (Idle, Idle) => Idle,
+        }
+    }
+
+    /// An event at cycle `t`: a future horizon if `t > now`, otherwise
+    /// the component is ready to act this very cycle.
+    pub fn at_or_progress(t: u64, now: u64) -> NextEvent {
+        if t > now {
+            NextEvent::At(t)
+        } else {
+            NextEvent::Progress
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::NextEvent::{self, *};
+
+    #[test]
+    fn min_with_prefers_progress_then_earliest() {
+        assert_eq!(Progress.min_with(At(5)), Progress);
+        assert_eq!(At(9).min_with(Progress), Progress);
+        assert_eq!(At(9).min_with(At(5)), At(5));
+        assert_eq!(At(5).min_with(Idle), At(5));
+        assert_eq!(Idle.min_with(Idle), Idle);
+    }
+
+    #[test]
+    fn at_or_progress_boundary() {
+        assert_eq!(NextEvent::at_or_progress(10, 9), At(10));
+        assert_eq!(NextEvent::at_or_progress(10, 10), Progress);
+        assert_eq!(NextEvent::at_or_progress(10, 11), Progress);
+    }
+}

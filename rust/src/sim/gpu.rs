@@ -11,6 +11,22 @@
 //!
 //! The NoC is rebuilt when the layout changes (kernel boundaries only;
 //! dynamic split keeps the fused NoC interface, §4.3).
+//!
+//! ## Event-horizon cycle skipping
+//!
+//! Memory-divergent kernels spend most of their cycles with every warp
+//! parked on a scoreboard or DRAM release. Instead of burning a full
+//! `tick` through clusters, NoC and partitions for each of those idle
+//! cycles, the kernel loop asks every component for its next event
+//! ([`crate::sim::NextEvent`]) and, when the whole chip is quiescent (no
+//! issuable warp, no movable packet, no dispatchable CTA), fast-forwards
+//! `self.now` to the horizon while replaying the per-cycle accounting
+//! (stall breakdowns, mode counters, LRU clocks) in O(1). The contract
+//! is **bit-identical `SimReport`s** to the dense loop — enforced by
+//! `tests/exec_determinism.rs` — and `AMOEBA_DENSE=1` (or
+//! [`Gpu::set_dense`]) forces the dense loop for auditing. The skip mode
+//! is deliberately *not* part of [`SystemConfig`], so sweep-cache
+//! fingerprints ([`crate::harness::cfg_fingerprint`]) stay mode-agnostic.
 
 use crate::amoeba::controller::{Controller, KernelDecision};
 use crate::amoeba::dynsplit::DynSplit;
@@ -23,8 +39,17 @@ use crate::sim::noc::{ChipLayout, Noc, Packet, Payload, Subnet};
 use crate::stats::{ChipStats, SmStats};
 use crate::workload::{kernel_launches, BenchProfile, TraceGen};
 
+/// Cached `AMOEBA_DENSE` escape hatch: any non-empty value other than
+/// `0` forces the dense cycle loop (read once per process).
+fn dense_env() -> bool {
+    static DENSE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *DENSE.get_or_init(|| {
+        std::env::var("AMOEBA_DENSE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+    })
+}
+
 /// One Fig 19 sample: cycle + per-cluster mode snapshot.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PhaseSample {
     /// Sample cycle.
     pub cycle: u64,
@@ -33,7 +58,12 @@ pub struct PhaseSample {
 }
 
 /// Result of simulating one application under one scheme.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every counter, decision, phase sample, and
+/// metric sample — the equality the skip-vs-dense and parallel-vs-serial
+/// determinism tests assert (float fields compare by value; the tests
+/// additionally pin their bit patterns).
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
     /// Benchmark name.
     pub bench: String,
@@ -103,6 +133,9 @@ pub struct Gpu {
     /// Reusable per-cycle partition-reply buffer (hot-path alloc
     /// elimination: one buffer serves every MC every cycle).
     reply_scratch: Vec<PartitionReply>,
+    /// Force the dense cycle loop (no event-horizon skipping). Defaults
+    /// to the `AMOEBA_DENSE` env var; see [`Gpu::set_dense`].
+    dense: bool,
 }
 
 impl Gpu {
@@ -138,7 +171,16 @@ impl Gpu {
             samples: Vec::new(),
             decisions: Vec::new(),
             reply_scratch: Vec::with_capacity(MC_REPLY_BUDGET),
+            dense: dense_env(),
         }
+    }
+
+    /// Select the execution mode: `true` runs the dense cycle-by-cycle
+    /// loop, `false` (default unless `AMOEBA_DENSE=1`) enables
+    /// event-horizon cycle skipping. Both produce bit-identical
+    /// [`SimReport`]s; the dense loop is the auditing reference.
+    pub fn set_dense(&mut self, dense: bool) {
+        self.dense = dense;
     }
 
     /// NoC nodes for cluster `ci` in the current layout.
@@ -304,6 +346,68 @@ impl Gpu {
         self.noc.inject(Subnet::Reply, pkt)
     }
 
+    /// Fast-forward `self.now` to the chip's event horizon if the machine
+    /// is quiescent, replaying the skipped cycles' accounting in O(1).
+    ///
+    /// `cap` is the last cycle the caller allows to become the new `now`:
+    /// the cycle *before* any loop-level trigger (profiling-window end,
+    /// split check, Fig 19 sample boundary, deadline) so the triggering
+    /// tick always runs live and fires at exactly the same `now` as the
+    /// dense loop. Returns false — and skips nothing — when any component
+    /// would make progress this cycle, when a retry/backlog queue holds
+    /// work (those are retried every cycle), or in dense mode.
+    ///
+    /// The caller must have established that CTA dispatch made no
+    /// progress this cycle (cluster state is frozen across the window, so
+    /// dispatchability cannot appear mid-skip).
+    fn try_skip(&mut self, gen: &TraceGen, cap: u64) -> bool {
+        use crate::sim::NextEvent;
+        if self.dense || cap <= self.now {
+            return false;
+        }
+        if self.reply_retry.iter().any(|q| !q.is_empty())
+            || self.req_backlog.iter().any(|q| !q.is_empty())
+        {
+            return false;
+        }
+        let now = self.now;
+        let mut ev = NextEvent::Idle;
+        for c in &self.clusters {
+            ev = ev.min_with(c.next_event(now, gen));
+            if ev == NextEvent::Progress {
+                return false;
+            }
+        }
+        ev = ev.min_with(self.noc.next_event(now));
+        if ev == NextEvent::Progress {
+            return false;
+        }
+        for p in &self.partitions {
+            ev = ev.min_with(p.next_event(now));
+            if ev == NextEvent::Progress {
+                return false;
+            }
+        }
+        let target = match ev {
+            NextEvent::Progress => return false,
+            NextEvent::At(t) => t.min(cap),
+            // Fully event-free (e.g. a deadlock the deadline will catch):
+            // accounting still advances, so skip to the cap.
+            NextEvent::Idle => cap,
+        };
+        if target <= now {
+            return false;
+        }
+        let k = target - now;
+        self.chip.cycles += k;
+        self.chip.mc_cycles += k * self.partitions.len() as u64;
+        for c in &mut self.clusters {
+            c.skip(now, k);
+        }
+        self.now = target;
+        true
+    }
+
     /// Is every cluster + partition + the NoC fully drained?
     fn drained(&self) -> bool {
         self.clusters.iter().all(|c| c.idle())
@@ -378,6 +482,28 @@ impl Gpu {
                 }
             }
 
+            // Quiescent chip: fast-forward to the next event instead of
+            // ticking dead cycles one by one. The cap keeps every
+            // loop-level trigger below on a live tick, so skip and dense
+            // runs fire them at identical cycles. Dispatch progress this
+            // cycle implies a live tick, so skipping is not considered;
+            // neither is a loop about to terminate (a fully-drained grid
+            // breaks after one more tick — skipping first could carry a
+            // still-profiling kernel to its decision point, which the
+            // dense loop never reaches).
+            if dispatched == 0 && !(next_cta >= total_ctas && self.drained()) {
+                let mut cap = deadline - 1;
+                if profiling {
+                    cap = cap.min((profile_start + self.cfg.profile_window).saturating_sub(1));
+                }
+                if self.scheme.splits().is_some() && self.layout.any_fused() {
+                    cap = cap.min(split_check_at.saturating_sub(1));
+                }
+                let next_sample = (self.now / PHASE_SAMPLE_PERIOD + 1) * PHASE_SAMPLE_PERIOD;
+                cap = cap.min(next_sample - 1);
+                self.try_skip(&gen, cap);
+            }
+
             self.tick(&gen);
 
             // Profiling window complete: predict and reconfigure.
@@ -420,8 +546,11 @@ impl Gpu {
                 };
                 if target.iter().any(|&f| f) {
                     // Drain resident work, then fuse. We stop dispatching
-                    // during the drain by entering a drain loop here.
+                    // during the drain by entering a drain loop here. The
+                    // dense drain loop has no sampling or split checks, so
+                    // the skip cap is the deadline alone.
                     while !self.drained() && self.now < deadline {
+                        self.try_skip(&gen, deadline - 1);
                         self.tick(&gen);
                     }
                     for c in &mut self.clusters {
@@ -530,7 +659,8 @@ pub fn run_benchmark(cfg: &SystemConfig, profile: &BenchProfile, scheme: Scheme)
     run_benchmark_seeded(cfg, profile, scheme, 0xAB0EBA)
 }
 
-/// Seeded variant (distinct workload instance per seed).
+/// Seeded variant (distinct workload instance per seed). Execution mode
+/// (event-horizon skipping vs dense) follows `AMOEBA_DENSE`.
 pub fn run_benchmark_seeded(
     cfg: &SystemConfig,
     profile: &BenchProfile,
@@ -539,6 +669,24 @@ pub fn run_benchmark_seeded(
 ) -> SimReport {
     let controller = Controller::native(cfg);
     let mut gpu = Gpu::new(cfg, scheme, controller);
+    gpu.run(profile, seed)
+}
+
+/// [`run_benchmark_seeded`] with the execution mode pinned explicitly:
+/// `dense = true` forces the cycle-by-cycle reference loop, `false` the
+/// event-horizon skip engine. Both are bit-identical by contract — this
+/// entry point exists so tests and benches can compare the two
+/// in-process, independent of the `AMOEBA_DENSE` environment.
+pub fn run_benchmark_seeded_dense(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+    dense: bool,
+) -> SimReport {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, scheme, controller);
+    gpu.set_dense(dense);
     gpu.run(profile, seed)
 }
 
@@ -649,5 +797,38 @@ mod tests {
         let r = quick("SM", Scheme::StaticFuse);
         assert_eq!(r.decisions.len(), 1);
         assert_eq!(r.decisions[0].cluster, None);
+    }
+
+    #[test]
+    fn cycle_skip_matches_dense_quick() {
+        // The full scheme x bench matrix lives in tests/exec_determinism;
+        // this is the in-crate smoke check for the core contract.
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let mut p = bench("BFS").unwrap();
+        p.num_ctas = 8;
+        p.insns_per_thread = 80;
+        p.num_kernels = 1;
+        for scheme in [Scheme::Baseline, Scheme::WarpRegroup] {
+            let dense = run_benchmark_seeded_dense(&cfg, &p, scheme, 11, true);
+            let skip = run_benchmark_seeded_dense(&cfg, &p, scheme, 11, false);
+            assert_eq!(dense, skip, "{scheme}: skip must be bit-identical to dense");
+        }
+    }
+
+    #[test]
+    fn cycle_skip_advances_past_dead_windows() {
+        // A memory-bound run must still finish with identical cycle
+        // counts; the skip engine only changes wall-clock, never `now`.
+        let cfg = SystemConfig::tiny();
+        let mut p = bench("BFS").unwrap();
+        p.num_ctas = 4;
+        p.insns_per_thread = 60;
+        p.num_kernels = 1;
+        let dense = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, 3, true);
+        let skip = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, 3, false);
+        assert_eq!(dense.cycles, skip.cycles);
+        assert_eq!(dense.chip.cycles, skip.chip.cycles);
+        assert_eq!(dense.sm.stall_memory, skip.sm.stall_memory);
     }
 }

@@ -31,14 +31,21 @@ struct Mshr {
     merged: u32,
 }
 
+/// Sentinel for an empty way. Real tags are line-aligned addresses
+/// (`line_bytes` is a power of two >= 2), so the all-ones value can never
+/// collide with one — which lets the tag array be a dense `Vec<u64>`
+/// instead of `Vec<Option<u64>>` (half the bytes per way, no discriminant
+/// branch in the hit loop that runs on every memory access).
+const EMPTY_TAG: u64 = u64::MAX;
+
 /// Set-associative tag cache + MSHR table.
 #[derive(Debug, Clone)]
 pub struct Cache {
     sets: usize,
     assoc: usize,
     line_bytes: usize,
-    /// tags[set * assoc + way] = Some(line address).
-    tags: Vec<Option<u64>>,
+    /// tags[set * assoc + way] = line address, or [`EMPTY_TAG`].
+    tags: Vec<u64>,
     /// LRU stamps parallel to `tags` (higher = more recent).
     stamps: Vec<u64>,
     clock: u64,
@@ -46,22 +53,46 @@ pub struct Cache {
     mshr_capacity: usize,
     /// Hit latency in cycles (fusion adds 1).
     pub hit_latency: u32,
+    /// log2(line_bytes): `line_of` is a shift, not a division.
+    line_shift: u32,
+    /// sets - 1: `set_of` is a mask, not a modulo.
+    set_mask: u64,
+}
+
+/// Set count for a (bytes, assoc, line) geometry, rounded **down** to a
+/// power of two so indexing is a mask. Every Table-1 geometry (and its
+/// fused 2x variant) is already a power of two; only the Fig 3/4
+/// resource-rescaled sweeps (25/36 SMs) hit the rounding, where the
+/// paper's grid cannot split resources exactly either.
+fn pow2_sets(bytes: usize, assoc: usize, line_bytes: usize) -> usize {
+    assert!(
+        line_bytes >= 2 && line_bytes.is_power_of_two(),
+        "line_bytes {line_bytes} must be a power of two >= 2"
+    );
+    let sets = (bytes / line_bytes / assoc).max(1);
+    if sets.is_power_of_two() {
+        sets
+    } else {
+        1 << sets.ilog2()
+    }
 }
 
 impl Cache {
     /// Build a cache of `bytes` capacity with `assoc` ways.
     pub fn new(bytes: usize, assoc: usize, line_bytes: usize, hit_latency: u32, mshrs: usize) -> Self {
-        let sets = (bytes / line_bytes / assoc).max(1);
+        let sets = pow2_sets(bytes, assoc, line_bytes);
         Cache {
             sets,
             assoc,
             line_bytes,
-            tags: vec![None; sets * assoc],
+            tags: vec![EMPTY_TAG; sets * assoc],
             stamps: vec![0; sets * assoc],
             clock: 0,
             mshrs: Vec::with_capacity(mshrs),
             mshr_capacity: mshrs,
             hit_latency,
+            line_shift: line_bytes.trailing_zeros(),
+            set_mask: sets as u64 - 1,
         }
     }
 
@@ -89,37 +120,59 @@ impl Cache {
     /// In-flight fills are dropped — the GPU drains SMs before reconfiguring
     /// so this never loses live requests in practice.
     pub fn resize(&mut self, bytes: usize, assoc: usize, hit_latency: u32, mshrs: usize) {
-        let sets = (bytes / self.line_bytes / assoc).max(1);
+        let sets = pow2_sets(bytes, assoc, self.line_bytes);
         self.sets = sets;
         self.assoc = assoc;
         self.hit_latency = hit_latency;
-        self.tags = vec![None; sets * assoc];
+        self.tags = vec![EMPTY_TAG; sets * assoc];
         self.stamps = vec![0; sets * assoc];
         self.mshrs.clear();
         self.mshr_capacity = mshrs;
+        self.set_mask = sets as u64 - 1;
     }
 
     fn set_of(&self, line: u64) -> usize {
         // XOR-folded set hash (GPGPU-Sim-style "ipoly/hash" indexing):
         // large power-of-two-aligned structures (per-CTA regions, row
-        // buffers) would otherwise pile into a handful of sets.
-        let idx = line / self.line_bytes as u64;
+        // buffers) would otherwise pile into a handful of sets. The set
+        // count is a power of two, so the reduction is a mask.
+        let idx = line >> self.line_shift;
         let h = idx ^ (idx >> 7) ^ (idx >> 15) ^ (idx >> 23);
-        (h % self.sets as u64) as usize
+        (h & self.set_mask) as usize
     }
 
     /// Probe only (no state change): would `line` hit?
     pub fn probe(&self, addr: u64) -> bool {
         let line = self.line_of(addr);
         let set = self.set_of(line);
-        self.tags[set * self.assoc..(set + 1) * self.assoc]
-            .iter()
-            .any(|t| *t == Some(line))
+        self.tags[set * self.assoc..(set + 1) * self.assoc].contains(&line)
     }
 
     /// Line base address containing `addr`.
     pub fn line_of(&self, addr: u64) -> u64 {
-        addr / self.line_bytes as u64 * self.line_bytes as u64
+        (addr >> self.line_shift) << self.line_shift
+    }
+
+    /// Is a fill for `addr`'s line already in flight? (An access now
+    /// would merge: [`Access::MissMerged`].)
+    pub fn has_pending(&self, addr: u64) -> bool {
+        let line = self.line_of(addr);
+        self.mshrs.iter().any(|m| m.line == line)
+    }
+
+    /// Is the MSHR table full? (An access to a new line now would be
+    /// [`Access::MshrFull`].)
+    pub fn mshr_full(&self) -> bool {
+        self.mshrs.len() >= self.mshr_capacity
+    }
+
+    /// Replay `n` cycles of MSHR-full retries: each dense-loop retry
+    /// calls [`Cache::access`], which advances the LRU clock once even
+    /// when it returns [`Access::MshrFull`]. The event-horizon skip path
+    /// must advance the clock identically or later LRU victims diverge
+    /// from the dense loop.
+    pub fn advance_clock(&mut self, n: u64) {
+        self.clock += n;
     }
 
     /// Access `addr` (read or write-through). On `MissNew` the caller sends
@@ -131,7 +184,7 @@ impl Cache {
         let base = set * self.assoc;
         // Hit path.
         for way in 0..self.assoc {
-            if self.tags[base + way] == Some(line) {
+            if self.tags[base + way] == line {
                 self.stamps[base + way] = self.clock;
                 return Access::Hit;
             }
@@ -156,24 +209,20 @@ impl Cache {
         let set = self.set_of(line);
         let base = set * self.assoc;
         // Install into an empty or LRU way (unless already present).
-        if !self.tags[base..base + self.assoc].contains(&Some(line)) {
+        if !self.tags[base..base + self.assoc].contains(&line) {
             let mut victim = 0;
             let mut oldest = u64::MAX;
             for way in 0..self.assoc {
-                match self.tags[base + way] {
-                    None => {
-                        victim = way;
-                        oldest = 0;
-                        break;
-                    }
-                    Some(_) if self.stamps[base + way] < oldest => {
-                        oldest = self.stamps[base + way];
-                        victim = way;
-                    }
-                    _ => {}
+                if self.tags[base + way] == EMPTY_TAG {
+                    victim = way;
+                    break;
+                }
+                if self.stamps[base + way] < oldest {
+                    oldest = self.stamps[base + way];
+                    victim = way;
                 }
             }
-            self.tags[base + victim] = Some(line);
+            self.tags[base + victim] = line;
             self.stamps[base + victim] = self.clock;
         }
         match self.mshrs.iter().position(|m| m.line == line) {
@@ -184,7 +233,7 @@ impl Cache {
 
     /// Invalidate everything (kernel boundary, reconfiguration drain).
     pub fn flush(&mut self) {
-        self.tags.fill(None);
+        self.tags.fill(EMPTY_TAG);
         self.stamps.fill(0);
         self.mshrs.clear();
     }
@@ -205,6 +254,68 @@ mod tests {
         assert_eq!(c.sets(), 4);
         assert_eq!(c.assoc(), 2);
         assert_eq!(c.bytes(), 1024);
+    }
+
+    #[test]
+    fn non_pow2_geometry_rounds_sets_down() {
+        // 6 sets' worth of capacity (the Fig 3/4 25/36-SM rescales produce
+        // such geometries) => 4 sets, so indexing stays a mask.
+        let c = Cache::new(6 * 128 * 2, 2, 128, 1, 4);
+        assert_eq!(c.sets(), 4);
+        assert_eq!(c.bytes(), 4 * 2 * 128);
+        let mut r = Cache::new(1024, 2, 128, 1, 4);
+        r.resize(6 * 128 * 4, 4, 2, 8);
+        assert_eq!(r.sets(), 4, "resize applies the same rounding");
+    }
+
+    #[test]
+    fn pending_and_mshr_full_probes_match_access() {
+        let mut c = small();
+        assert!(!c.has_pending(0x2000));
+        assert_eq!(c.access(0x2000), Access::MissNew);
+        assert!(c.has_pending(0x2000));
+        assert!(c.has_pending(0x2040), "same line");
+        assert!(!c.mshr_full());
+        for i in 1..4 {
+            c.access(0x10_000 + i * 0x1000);
+        }
+        assert!(c.mshr_full());
+        assert_eq!(c.access(0x50_000), Access::MshrFull);
+        c.fill(0x2000);
+        assert!(!c.has_pending(0x2000));
+        assert!(!c.mshr_full());
+    }
+
+    #[test]
+    fn advance_clock_matches_dense_mshr_full_retries() {
+        // Two caches; one replays its blocked cycles via advance_clock,
+        // the other retries densely. Subsequent LRU decisions must agree.
+        let mk = || {
+            let mut c = Cache::new(1024, 2, 128, 1, 1);
+            // Same-set residents (set 0): 0x0 and 0x200.
+            for addr in [0x0u64, 0x200] {
+                c.access(addr);
+                c.fill(addr);
+            }
+            c.access(0x0); // make 0x200 the LRU victim candidate
+            assert_eq!(c.access(0x3000), Access::MissNew); // occupy the only MSHR
+            c
+        };
+        let mut dense = mk();
+        let mut skip = mk();
+        for _ in 0..5 {
+            assert_eq!(dense.access(0x5000), Access::MshrFull);
+        }
+        skip.advance_clock(5);
+        // Unblock and keep going: both must pick identical victims.
+        for c in [&mut dense, &mut skip] {
+            c.fill(0x3000);
+            c.access(0x400); // set 0 again: evicts the common LRU way
+            c.fill(0x400);
+        }
+        for addr in [0x0u64, 0x200, 0x400] {
+            assert_eq!(dense.probe(addr), skip.probe(addr), "addr {addr:#x}");
+        }
     }
 
     #[test]

@@ -163,6 +163,41 @@ impl MemoryController {
         }
     }
 
+    /// Earliest cycle at which [`MemoryController::tick`] could change
+    /// state, mirroring the tick's two phases exactly: completions fire
+    /// when a bank's service finishes, and FR-FCFS issue fires as soon as
+    /// any queued request's bank is free (a bank frees in the same tick
+    /// its service completes, so in-service finish times bound both).
+    /// Ready replies awaiting pickup are `Progress` — the owner drains
+    /// them every cycle.
+    pub fn next_event(&self, now: u64) -> crate::sim::NextEvent {
+        use crate::sim::NextEvent;
+        if !self.ready.is_empty() {
+            return NextEvent::Progress;
+        }
+        let mut ev = NextEvent::Idle;
+        for bank in &self.banks {
+            if let Some((_, finish)) = bank.in_service {
+                ev = ev.min_with(NextEvent::at_or_progress(finish, now));
+                if ev == NextEvent::Progress {
+                    return ev;
+                }
+            }
+        }
+        for r in &self.queue {
+            let bank = &self.banks[self.bank_of(r.addr)];
+            let free_at = match bank.in_service {
+                Some((_, finish)) => finish.max(bank.busy_until),
+                None => bank.busy_until,
+            };
+            ev = ev.min_with(NextEvent::at_or_progress(free_at, now));
+            if ev == NextEvent::Progress {
+                return ev;
+            }
+        }
+        ev
+    }
+
     /// Pop one completed reply, if any.
     pub fn pop_reply(&mut self) -> Option<DramReply> {
         if self.ready.is_empty() {

@@ -152,6 +152,26 @@ impl MemPartition {
         !self.hit_pipe.is_empty() || self.mc.busy()
     }
 
+    /// Earliest cycle at which [`MemPartition::tick`] could change state,
+    /// assuming the caller supplies a positive emission budget and drains
+    /// `out` (the GPU does both every cycle). Pipelined hits fire at
+    /// their ready cycle; entries parked on DRAM (`ready == u64::MAX`)
+    /// are woken by a fill, which the controller's own horizon covers.
+    pub fn next_event(&self, now: u64) -> crate::sim::NextEvent {
+        use crate::sim::NextEvent;
+        let mut ev = self.mc.next_event(now);
+        for &(ready, ..) in &self.hit_pipe {
+            if ready == u64::MAX {
+                continue;
+            }
+            ev = ev.min_with(NextEvent::at_or_progress(ready, now));
+            if ev == NextEvent::Progress {
+                break;
+            }
+        }
+        ev
+    }
+
     /// Kernel-boundary flush.
     pub fn flush(&mut self) {
         self.l2.flush();

@@ -2,6 +2,9 @@
 //! GPU cycle loop.
 
 pub mod core;
+pub mod event;
 pub mod gpu;
 pub mod mem;
 pub mod noc;
+
+pub use event::NextEvent;

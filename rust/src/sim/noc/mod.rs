@@ -302,6 +302,35 @@ impl Noc {
         self.eject[subnet as usize][node].pop_front()
     }
 
+    /// Earliest cycle at which ticking the NoC (or draining its ejection
+    /// queues) could change state. A non-empty ejection queue is always
+    /// [`NextEvent::Progress`] because the GPU consumes ejections every
+    /// cycle; otherwise the horizon is the earliest movable packet across
+    /// both subnets' routers ([`Router::next_event`]). The rotating sweep
+    /// start (`now % routers`) cannot affect a cycle in which nothing is
+    /// movable, so it never invalidates a reported horizon.
+    pub fn next_event(&self, now: u64) -> crate::sim::NextEvent {
+        use crate::sim::NextEvent;
+        if self.eject.iter().any(|e| e.iter().any(|q| !q.is_empty())) {
+            return NextEvent::Progress;
+        }
+        if self.mode == NocMode::Perfect {
+            // Perfect fabric: delivery happens at injection time; ticking
+            // an empty network is a no-op.
+            return NextEvent::Idle;
+        }
+        let mut ev = NextEvent::Idle;
+        for routers in &self.routers {
+            for (node, router) in routers.iter().enumerate() {
+                ev = ev.min_with(router.next_event(now, node, self.width));
+                if ev == NextEvent::Progress {
+                    return ev;
+                }
+            }
+        }
+        ev
+    }
+
     /// Any packets still in flight anywhere?
     pub fn busy(&self) -> bool {
         self.eject.iter().any(|e| e.iter().any(|q| !q.is_empty()))

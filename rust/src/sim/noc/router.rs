@@ -153,6 +153,26 @@ impl Router {
         }
     }
 
+    /// Earliest cycle at which this router could move a packet, mirroring
+    /// [`Router::plan_moves_into`]'s eligibility rules exactly: a queued
+    /// packet moves once it is head-of-line ready *and* its XY output
+    /// port has finished serializing the previous packet. Arbitration
+    /// (two ready packets on one port) only matters when at least one is
+    /// already movable, which is `Progress` regardless.
+    pub fn next_event(&self, now: u64, here: usize, width: usize) -> crate::sim::NextEvent {
+        use crate::sim::NextEvent;
+        let mut ev = NextEvent::Idle;
+        for &(ready, pkt) in &self.queue {
+            let dir = Self::route(here, pkt.dst, width);
+            let t = ready.max(self.out_busy[dir]);
+            ev = ev.min_with(NextEvent::at_or_progress(t, now));
+            if ev == NextEvent::Progress {
+                break;
+            }
+        }
+        ev
+    }
+
     /// Allocating convenience wrapper over [`Router::plan_moves_into`]
     /// (unit tests and diagnostics; the simulation loop uses the `_into`
     /// form).

@@ -23,7 +23,7 @@ pub enum StallReason {
 }
 
 /// Counters for one SM (or one fused SM cluster half).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SmStats {
     /// Cycles this SM was powered (driven by the cycle loop).
     pub cycles: u64,
@@ -88,13 +88,19 @@ pub struct SmStats {
 impl SmStats {
     /// Record an issue-slot stall.
     pub fn stall(&mut self, r: StallReason) {
+        self.stall_n(r, 1);
+    }
+
+    /// Record `n` consecutive cycles of the same issue-slot stall (the
+    /// event-horizon skip path replays a quiescent window in one call).
+    pub fn stall_n(&mut self, r: StallReason, n: u64) {
         match r {
-            StallReason::Idle => self.stall_idle += 1,
-            StallReason::Memory => self.stall_memory += 1,
-            StallReason::Control => self.stall_control += 1,
-            StallReason::Barrier => self.stall_barrier += 1,
-            StallReason::ExecBusy => self.stall_exec += 1,
-            StallReason::MemStructFull => self.stall_mem_struct += 1,
+            StallReason::Idle => self.stall_idle += n,
+            StallReason::Memory => self.stall_memory += n,
+            StallReason::Control => self.stall_control += n,
+            StallReason::Barrier => self.stall_barrier += n,
+            StallReason::ExecBusy => self.stall_exec += n,
+            StallReason::MemStructFull => self.stall_mem_struct += n,
         }
     }
 
@@ -159,7 +165,7 @@ impl SmStats {
 }
 
 /// Machine-wide counters outside the SMs.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ChipStats {
     /// Total GPU cycles simulated.
     pub cycles: u64,

@@ -1,11 +1,17 @@
-//! The parallel sweep executor must be a pure accelerator: its output
-//! has to be bit-identical to running the same simulations serially on
-//! one thread. This is the contract that lets the figure harness fan the
-//! paper's sweeps across cores without changing a single plotted value.
+//! Determinism contracts of the two execution accelerators:
+//!
+//! * the **parallel sweep executor** must be bit-identical to running
+//!   the same simulations serially on one thread — the contract that
+//!   lets the figure harness fan the paper's sweeps across cores
+//!   without changing a single plotted value;
+//! * the **event-horizon skip engine** must be bit-identical to the
+//!   dense cycle-by-cycle loop — the contract that lets it fast-forward
+//!   quiescent windows (and lets the sweep cache stay mode-agnostic:
+//!   a cached report is valid under either mode).
 
 use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::harness::{SimJob, SweepExec};
-use amoeba_gpu::sim::gpu::run_benchmark_seeded;
+use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_seeded_dense, SimReport};
 use amoeba_gpu::workload::bench;
 
 fn grid() -> (SystemConfig, Vec<SimJob>) {
@@ -76,6 +82,115 @@ fn parallel_executor_matches_serial_bit_for_bit() {
                 assert_eq!(d.cluster, Some((i % n_clusters) as u32), "{label}: cluster ids");
             }
         }
+    }
+}
+
+/// Field-complete bitwise comparison of two reports. `SimReport`'s
+/// derived `PartialEq` covers every counter/decision/phase/sample by
+/// value; the float fields are additionally pinned at the bit level.
+fn assert_reports_identical(a: &SimReport, b: &SimReport, label: &str) {
+    assert_eq!(a.cycles, b.cycles, "{label}: cycles");
+    assert_eq!(a.sm, b.sm, "{label}: SmStats");
+    assert_eq!(a.chip, b.chip, "{label}: ChipStats");
+    assert_eq!(a.phases, b.phases, "{label}: phase trace");
+    assert_eq!(a.decisions.len(), b.decisions.len(), "{label}: decision count");
+    for (i, (x, y)) in a.decisions.iter().zip(&b.decisions).enumerate() {
+        assert_eq!(x.scale_up, y.scale_up, "{label}: decision {i}");
+        assert_eq!(x.cluster, y.cluster, "{label}: decision {i} cluster");
+        assert_eq!(
+            x.probability.to_bits(),
+            y.probability.to_bits(),
+            "{label}: decision {i} probability"
+        );
+    }
+    assert_eq!(a.samples.len(), b.samples.len(), "{label}: sample count");
+    for (i, (x, y)) in a.samples.iter().zip(&b.samples).enumerate() {
+        for (j, (fa, fb)) in x.features.iter().zip(&y.features).enumerate() {
+            assert_eq!(fa.to_bits(), fb.to_bits(), "{label}: sample {i} feature {j}");
+        }
+    }
+    assert_eq!(a, b, "{label}: full report");
+}
+
+/// The event-horizon engine vs the dense reference loop: bit-identical
+/// `SimReport`s for **every** scheme, including the heterogeneous
+/// mixed-layout path (per-cluster decisions, `DynSplit` timers keyed on
+/// absolute `now`).
+#[test]
+fn cycle_skip_matches_dense_across_all_schemes() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    for name in ["RAY", "SM"] {
+        let mut p = bench(name).unwrap();
+        p.num_ctas = 8;
+        p.insns_per_thread = 80;
+        p.num_kernels = 1;
+        for scheme in Scheme::ALL {
+            let label = format!("{name} under {scheme}");
+            let dense = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xD37, true);
+            let skip = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xD37, false);
+            assert_eq!(dense.chip.kernels_completed, 1, "{label}: completes");
+            assert_reports_identical(&dense, &skip, &label);
+        }
+    }
+}
+
+/// Same contract on a DynSplit-active run: a lowered split threshold and
+/// a short check period force fused clusters through split/rebalance/
+/// re-fuse transitions, whose timers (`last_rebalance`, `split_check_at`)
+/// use absolute `now` arithmetic the skip engine must preserve exactly.
+#[test]
+fn cycle_skip_matches_dense_with_active_dynamic_splits() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    cfg.split_threshold = 0.05;
+    cfg.split_check_period = 128;
+    cfg.rebalance_period = 256;
+    let mut p = bench("RAY").unwrap(); // divergence-heavy: triggers splits
+    p.num_ctas = 10;
+    p.insns_per_thread = 100;
+    p.num_kernels = 2; // cross a kernel boundary with live split state
+    for scheme in [Scheme::DirectSplit, Scheme::WarpRegroup, Scheme::Hetero] {
+        let label = format!("split-active RAY under {scheme}");
+        let dense = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xA7, true);
+        let skip = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xA7, false);
+        assert_reports_identical(&dense, &skip, &label);
+    }
+}
+
+/// Multi-seed sweep of the memory-divergent profiles (where the skip
+/// engine actually skips): the contract must hold on exactly the runs
+/// it accelerates most.
+#[test]
+fn cycle_skip_matches_dense_on_memory_bound_profiles() {
+    let cfg = SystemConfig::tiny();
+    for name in ["BFS", "MUM"] {
+        let mut p = bench(name).unwrap();
+        p.num_ctas = 6;
+        p.insns_per_thread = 90;
+        p.num_kernels = 1;
+        for seed in [1u64, 2, 3] {
+            let label = format!("{name} seed {seed}");
+            let dense = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, seed, true);
+            let skip = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, seed, false);
+            assert_reports_identical(&dense, &skip, &label);
+        }
+    }
+}
+
+/// The sweep executor's memo cache is mode-agnostic: whatever mode the
+/// executor ran under (the `AMOEBA_DENSE` environment), its cached
+/// reports must equal the dense reference bit for bit — so a report
+/// computed in one mode can be served to a consumer expecting the other.
+#[test]
+fn sweep_cache_entries_match_the_dense_reference() {
+    let (_cfg, jobs) = grid();
+    let exec = SweepExec::new(4);
+    let out = exec.run_batch(jobs.clone());
+    for (job, r) in jobs.iter().zip(&out) {
+        let reference = run_benchmark_seeded_dense(&job.cfg, &job.profile, job.scheme, job.seed, true);
+        let label = format!("cached {} under {}", job.profile.name, job.scheme);
+        assert_reports_identical(&reference, r, &label);
     }
 }
 

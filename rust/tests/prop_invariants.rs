@@ -5,8 +5,11 @@
 
 use amoeba_gpu::config::SystemConfig;
 use amoeba_gpu::isa::{AccessPattern, ActiveMask};
-use amoeba_gpu::sim::mem::{coalesce, coalesce_fused, Access, Cache, MemoryController};
+use amoeba_gpu::sim::mem::{
+    coalesce, coalesce_fused, Access, Cache, DramRequest, MemPartition, MemoryController,
+};
 use amoeba_gpu::sim::noc::{Noc, Packet, Payload, Subnet};
+use amoeba_gpu::sim::NextEvent;
 use amoeba_gpu::workload::Pcg32;
 
 /// Randomised property: coalescing never produces more transactions than
@@ -190,6 +193,194 @@ fn prop_dram_conservation() {
             t += 1;
         }
         assert_eq!(accepted, answered, "case {case}: dram lost/duplicated requests");
+    }
+}
+
+/// Event-horizon tightness, DRAM side: `next_event` must never promise a
+/// horizon later than the first observable state change the dense tick
+/// loop would make. (Earlier is allowed — the loop just skips less.)
+#[test]
+fn prop_mc_next_event_never_later_than_first_change() {
+    let mut rng = Pcg32::new(0x3E47, 7);
+    for case in 0..40 {
+        let mut mc = MemoryController::new(
+            1 + rng.next_bounded(8) as usize,
+            2048,
+            40,
+            110,
+            4 + rng.next_bounded(28) as usize,
+        );
+        // Phase A: dense warm-up with random arrivals (promises are only
+        // checked in windows with no external input, since a push can
+        // legitimately create activity inside a previously-quiet window).
+        let mut tag = 0u64;
+        let mut t = 0u64;
+        for _ in 0..150 {
+            if rng.chance(0.5) {
+                let _ = mc.push(DramRequest {
+                    addr: (rng.next_u64() % (1 << 20)) & !127,
+                    is_write: rng.chance(0.3),
+                    tag: { tag += 1; tag },
+                });
+            }
+            mc.tick(t);
+            while mc.pop_reply().is_some() {}
+            t += 1;
+        }
+        // Phase B: drain, walking the promised horizons.
+        let snap = |m: &MemoryController| m.reads + m.writes + m.row_hits + m.row_misses;
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 10_000, "case {case}: no convergence");
+            match mc.next_event(t) {
+                NextEvent::Idle => {
+                    assert!(!mc.busy(), "case {case}: Idle while busy");
+                    break;
+                }
+                NextEvent::Progress => {
+                    mc.tick(t);
+                    while mc.pop_reply().is_some() {}
+                    t += 1;
+                }
+                NextEvent::At(h) => {
+                    assert!(h > t, "case {case}: horizon {h} not in the future of {t}");
+                    while t < h {
+                        let before = snap(&mc);
+                        mc.tick(t);
+                        let mut popped = 0;
+                        while mc.pop_reply().is_some() {
+                            popped += 1;
+                        }
+                        assert!(
+                            snap(&mc) == before && popped == 0,
+                            "case {case}: state changed at {t}, before promised horizon {h}"
+                        );
+                        t += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Event-horizon tightness, NoC side: within a promised window no packet
+/// may move (no flits routed, nothing delivered or ejectable).
+#[test]
+fn prop_noc_next_event_never_later_than_first_change() {
+    let mut rng = Pcg32::new(0x90C7, 8);
+    for case in 0..30 {
+        let cfg = SystemConfig::tiny();
+        let nodes = 4 + rng.next_bounded(12) as usize;
+        let mut noc = Noc::with_nodes(&cfg, nodes);
+        let mut t = 0u64;
+        // Phase A: dense warm-up under random load.
+        for _ in 0..100 {
+            if rng.chance(0.6) {
+                let src = rng.next_bounded(nodes as u32) as usize;
+                let dst = rng.next_bounded(nodes as u32) as usize;
+                let _ = noc.inject(
+                    Subnet::Request,
+                    Packet {
+                        src,
+                        dst,
+                        flits: 1 + rng.next_bounded(5),
+                        born: t,
+                        payload: Payload::MemRequest { line: 0, requester: 0, is_write: false },
+                    },
+                );
+            }
+            noc.tick(t);
+            for n in 0..nodes {
+                while noc.eject(Subnet::Request, n).is_some() {}
+            }
+            t += 1;
+        }
+        // Phase B: drain, walking the promised horizons.
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 20_000, "case {case}: no convergence");
+            match noc.next_event(t) {
+                NextEvent::Idle => {
+                    assert!(!noc.busy(), "case {case}: Idle while busy");
+                    break;
+                }
+                NextEvent::Progress => {
+                    noc.tick(t);
+                    for n in 0..nodes {
+                        while noc.eject(Subnet::Request, n).is_some() {}
+                    }
+                    t += 1;
+                }
+                NextEvent::At(h) => {
+                    assert!(h > t, "case {case}: horizon {h} not in the future of {t}");
+                    while t < h {
+                        let before = (noc.flits_routed, noc.packets_delivered);
+                        noc.tick(t);
+                        assert_eq!(
+                            (noc.flits_routed, noc.packets_delivered),
+                            before,
+                            "case {case}: packet moved at {t}, before promised horizon {h}"
+                        );
+                        t += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Event-horizon tightness, memory-partition side (L2 hit pipeline +
+/// DRAM behind it): within a promised window the partition emits no
+/// reply and schedules no DRAM access.
+#[test]
+fn prop_partition_next_event_never_later_than_first_change() {
+    let mut rng = Pcg32::new(0x9A47, 9);
+    for case in 0..30 {
+        let mut p = MemPartition::new(&SystemConfig::tiny());
+        let mut out = Vec::new();
+        let mut t = 0u64;
+        // Phase A: dense warm-up with random request arrivals.
+        for _ in 0..200 {
+            if rng.chance(0.4) {
+                let line = (rng.next_u64() % (1 << 16)) & !127;
+                let _ = p.request(t, line, rng.next_u64() & 0xFFFF, rng.chance(0.2), 8);
+            }
+            p.tick(t, &mut out, 4);
+            out.clear();
+            t += 1;
+        }
+        // Phase B: drain, walking the promised horizons.
+        let snap = |p: &MemPartition| p.mc.reads + p.mc.writes + p.mc.row_hits + p.mc.row_misses;
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 10_000, "case {case}: no convergence");
+            match p.next_event(t) {
+                NextEvent::Idle => {
+                    assert!(!p.busy(), "case {case}: Idle while busy");
+                    break;
+                }
+                NextEvent::Progress => {
+                    p.tick(t, &mut out, 4);
+                    out.clear();
+                    t += 1;
+                }
+                NextEvent::At(h) => {
+                    assert!(h > t, "case {case}: horizon {h} not in the future of {t}");
+                    while t < h {
+                        let before = snap(&p);
+                        p.tick(t, &mut out, 4);
+                        assert!(
+                            out.is_empty() && snap(&p) == before,
+                            "case {case}: partition acted at {t}, before promised horizon {h}"
+                        );
+                        t += 1;
+                    }
+                }
+            }
+        }
     }
 }
 
