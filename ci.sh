@@ -1,36 +1,100 @@
 #!/usr/bin/env bash
-# CI entry point: build, test, smoke-run the figure harness, and record
-# the sweep-executor + event-horizon speedups in BENCH_sweep.json (the
-# perf trajectory is tracked from PR 1 onward — keep the file committed
-# after each run).
+# CI entry point: build, test (with per-binary timings), run the golden
+# suite under BOTH execution modes, smoke the figure harness, and record
+# the sweep/skip/server speedups in BENCH_sweep.json (the perf trajectory
+# is tracked from PR 1 onward — keep the file committed after each run).
 #
 # Usage: ./ci.sh            # full pipeline
 #        AMOEBA_JOBS=8 ./ci.sh
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# A missing toolchain used to silently skip everything (PR 1-3's build
+# containers had no cargo and the stale BENCH_sweep.json went unnoticed).
+# Fail loudly instead: CI without a compiler is not CI.
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ERROR: cargo not found on PATH — install the rust toolchain." >&2
+    echo "       (BENCH_sweep.json still carries stale/pending numbers;" >&2
+    echo "        rust/tests/goldens/ cannot be generated without it.)" >&2
+    exit 1
+fi
+
+TIMING_SUMMARY=""
+run_timed() { # run_timed <label> <cmd...>
+    local label="$1"; shift
+    local start end
+    start=$(date +%s)
+    "$@"
+    end=$(date +%s)
+    TIMING_SUMMARY+=$(printf '%-38s %4ds' "$label" "$((end - start))")$'\n'
+}
+
 echo "== build (release) =="
-cargo build --release
+run_timed "build release" cargo build --release
 
 echo "== build benches + examples =="
-cargo build --release --benches --examples
+run_timed "build benches+examples" cargo build --release --benches --examples
 
-echo "== tests =="
-cargo test -q
+echo "== tests (per-binary timings recorded) =="
+run_timed "unit tests (lib+bins)" cargo test -q --lib --bins
+# Every integration-test file gets its own timed run — derived from the
+# directory so a future suite can never be silently skipped.
+for f in rust/tests/*.rs; do
+    t=$(basename "$f" .rs)
+    run_timed "test $t" cargo test -q --test "$t"
+done
+run_timed "doc tests" cargo test -q --doc
 
-echo "== tests (AMOEBA_DENSE=1: dense reference loop) =="
+echo "== golden suite (AMOEBA_DENSE=1: dense reference loop) =="
+# The goldens are mode-independent by the skip==dense contract; running
+# the suite again under the dense loop proves the committed fingerprints
+# hold in both execution modes.
+run_timed "golden_reports (dense)" env AMOEBA_DENSE=1 cargo test -q --test golden_reports
+
+echo "== determinism suite (AMOEBA_DENSE=1) =="
 # The determinism suite compares skip vs dense in-process regardless of
 # the env; this pass additionally proves the whole suite holds when the
 # escape hatch pins every env-driven run (figures, sweeps) to dense.
-AMOEBA_DENSE=1 cargo test -q --test exec_determinism
+run_timed "exec_determinism (dense)" env AMOEBA_DENSE=1 cargo test -q --test exec_determinism
 
-echo "== figures smoke (quick mode, parallel + memoized) =="
-./target/release/figures --all --quick > /dev/null
+# `status --porcelain` reports both modified tracked goldens and brand-new
+# (untracked) ones.
+if [ -n "$(git status --porcelain -- rust/tests/goldens 2>/dev/null)" ]; then
+    echo "NOTE: rust/tests/goldens/ changed (first blessing or re-bless) — commit it."
+fi
 
-echo "== sweep + cycle-skip speedup benchmark (writes BENCH_sweep.json) =="
-cargo bench --bench bench_sweep
+echo "== figures smoke (quick mode, parallel + memoized, incl. srv) =="
+run_timed "figures --all --quick" ./target/release/figures --all --quick > /dev/null
+
+echo "== serve-sim smoke =="
+run_timed "amoeba serve-sim --quick" ./target/release/amoeba serve-sim --quick > /dev/null
+
+echo "== sweep + cycle-skip + server benchmark (writes BENCH_sweep.json) =="
+run_timed "bench_sweep" cargo bench --bench bench_sweep
 
 echo "== BENCH_sweep.json =="
 cat BENCH_sweep.json
+
+# Acceptance bars on the measured numbers (open item since PR 1): the
+# event-horizon engine must be >= 2x on at least one memory-bound
+# profile, and the server sweep must have been recorded.
+best=$(sed -n 's/.*"cycle_skip_best": \([0-9.]*\).*/\1/p' BENCH_sweep.json | head -1)
+if [ -z "$best" ]; then
+    echo "ERROR: BENCH_sweep.json has no measured cycle_skip_best" >&2
+    exit 1
+fi
+awk -v b="$best" 'BEGIN { exit !(b >= 2.0) }' || {
+    echo "ERROR: cycle_skip_best = ${best}x, below the 2x acceptance bar" >&2
+    exit 1
+}
+# An actual record, not the stale `"server_sweep": null` marker.
+grep -q '"server_sweep": {' BENCH_sweep.json || {
+    echo "ERROR: BENCH_sweep.json has no measured server_sweep record" >&2
+    exit 1
+}
+echo "acceptance: cycle_skip_best ${best}x >= 2x, server_sweep recorded"
+
+echo "== per-step timing summary =="
+printf '%s' "$TIMING_SUMMARY"
 
 echo "CI OK"

@@ -17,8 +17,11 @@ use std::time::Instant;
 
 use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::harness::{SimJob, SweepExec};
-use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_seeded_dense};
-use amoeba_gpu::workload::{bench, BenchProfile, FIG12_SET};
+use amoeba_gpu::runtime::serve;
+use amoeba_gpu::sim::gpu::{
+    run_benchmark_seeded, run_benchmark_seeded_dense, serve_streams_dense, PartitionPolicy,
+};
+use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace, BenchProfile, FIG12_SET};
 
 /// Mirror of the harness quick-mode shrink + base config (kept in sync
 /// with `harness::figures`).
@@ -144,8 +147,37 @@ fn main() {
         best_skip.0, best_skip.1
     );
 
+    // -------- Server sweep: the concurrent multi-tenant stream scenario
+    // (the "srv" figure's workload). One shared run per policy plus each
+    // tenant alone, fanned through the stream memo; skip-vs-dense
+    // bit-identity is asserted on the static-policy shared run, and its
+    // wall-clock ratio is recorded alongside the single-app numbers.
+    eprintln!("[bench_sweep] server sweep (concurrent streams):");
+    let mut streams = traffic_trace(&serve::default_tenants(), 2, 20_000, SEED);
+    shrink_streams(&mut streams, 8, 80);
+    let t_sd = Instant::now();
+    let sdense = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, true);
+    let sdense_s = t_sd.elapsed().as_secs_f64();
+    let t_ss = Instant::now();
+    let sskip = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, false);
+    let sskip_s = t_ss.elapsed().as_secs_f64();
+    assert_eq!(sdense, sskip, "server run: skip must be bit-identical to dense");
+    let stream_skip_ratio = sdense_s / sskip_s.max(1e-9);
+    let t_batch = Instant::now();
+    let shared = [PartitionPolicy::Static, PartitionPolicy::Adaptive];
+    let sout = exec.run_stream_batch(serve::server_jobs(&cfg, &streams, &shared));
+    let batch_s = t_batch.elapsed().as_secs_f64();
+    let antt_worst = (0..streams.len())
+        .map(|ti| serve::antt_slowdown(&sout[0], &sout[shared.len() + ti], ti))
+        .fold(0.0f64, f64::max);
+    eprintln!(
+        "[bench_sweep]   dense {sdense_s:.3} s, skip {sskip_s:.3} s -> {stream_skip_ratio:.2}x; \
+         {}-job batch {batch_s:.3} s; worst tenant ANTT {antt_worst:.2}",
+        shared.len() + streams.len()
+    );
+
     let json = format!(
-        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\"\n}}\n",
+        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }}\n}}\n",
         jobs.len(),
         misses,
         threads,
@@ -157,6 +189,12 @@ fn main() {
         skip_rows,
         best_skip.0,
         best_skip.1,
+        streams.len(),
+        sdense_s,
+        sskip_s,
+        stream_skip_ratio,
+        batch_s,
+        antt_worst,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => eprintln!("[bench_sweep] wrote BENCH_sweep.json"),

@@ -37,8 +37,8 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::{Scheme, SystemConfig};
-use crate::sim::gpu::{run_benchmark_seeded, SimReport};
-use crate::workload::BenchProfile;
+use crate::sim::gpu::{run_benchmark_seeded, PartitionPolicy, SimReport, StreamReport};
+use crate::workload::{BenchProfile, KernelStream};
 
 /// FNV-1a over a string — the fingerprint primitive. Configs and
 /// profiles are hashed through their `Debug` rendering so that *every*
@@ -118,10 +118,59 @@ impl SimJob {
     }
 }
 
+/// Memoization key of one multi-tenant stream simulation: the config
+/// fingerprint plus a fingerprint over the full trace (stream names,
+/// profiles, schemes, arrivals, kernel seeds — everything is in the
+/// `Debug` rendering) and the partition policy. Like [`JobKey`], the
+/// execution mode is deliberately outside the key: dense and skip stream
+/// runs are bit-identical by contract.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct StreamKey {
+    /// [`cfg_fingerprint`] of the machine configuration.
+    pub cfg_fp: u64,
+    /// FNV-1a over the `Debug` rendering of the whole stream set.
+    pub trace_fp: u64,
+    /// Cluster-partitioning policy.
+    pub policy: PartitionPolicy,
+}
+
+/// One stream-sweep request: a full multi-tenant trace on one machine.
+#[derive(Debug, Clone)]
+pub struct StreamJob {
+    /// Machine configuration.
+    pub cfg: SystemConfig,
+    /// One kernel stream per tenant (arrivals and kernel seeds inside).
+    pub streams: Vec<KernelStream>,
+    /// Cluster-partitioning policy.
+    pub policy: PartitionPolicy,
+}
+
+impl StreamJob {
+    /// Bundle a stream job.
+    pub fn new(cfg: SystemConfig, streams: Vec<KernelStream>, policy: PartitionPolicy) -> Self {
+        StreamJob { cfg, streams, policy }
+    }
+
+    /// The job's memoization key.
+    pub fn key(&self) -> StreamKey {
+        StreamKey {
+            cfg_fp: cfg_fingerprint(&self.cfg),
+            trace_fp: fnv1a(&format!("{:?}", self.streams)),
+            policy: self.policy,
+        }
+    }
+
+    fn simulate(&self) -> StreamReport {
+        crate::sim::gpu::serve_streams(&self.cfg, &self.streams, self.policy)
+    }
+}
+
 /// The parallel, memoizing sweep executor.
 pub struct SweepExec {
     threads: usize,
     cache: Mutex<HashMap<JobKey, Arc<SimReport>>>,
+    /// Separate memo for multi-tenant stream runs (the server sweep).
+    stream_cache: Mutex<HashMap<StreamKey, Arc<StreamReport>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -132,6 +181,7 @@ impl SweepExec {
         SweepExec {
             threads: threads.max(1),
             cache: Mutex::new(HashMap::new()),
+            stream_cache: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -173,6 +223,7 @@ impl SweepExec {
     /// Drop all memoized reports (counters are kept).
     pub fn clear(&self) {
         self.cache.lock().unwrap().clear();
+        self.stream_cache.lock().unwrap().clear();
     }
 
     /// Run (or recall) a single simulation.
@@ -238,26 +289,35 @@ impl SweepExec {
     /// claimed through one atomic cursor; each worker returns its
     /// `(index, report)` pairs and the caller reassembles them.
     fn execute(&self, todo: &[(JobKey, SimJob)]) -> Vec<(usize, Arc<SimReport>)> {
-        let workers = self.threads.min(todo.len());
+        self.execute_with(todo.len(), |i| Arc::new(todo[i].1.simulate()))
+    }
+
+    /// The generic fan-out primitive behind both batch paths: run `f`
+    /// over indices `0..count` on up to `self.threads` scoped workers
+    /// (atomic-cursor claiming, deadlock-free), returning `(index,
+    /// result)` pairs in nondeterministic order — results are pure
+    /// functions of the index, so assembly order never affects values.
+    fn execute_with<R: Send>(
+        &self,
+        count: usize,
+        f: impl Fn(usize) -> R + Sync,
+    ) -> Vec<(usize, R)> {
+        let workers = self.threads.min(count);
         if workers <= 1 {
-            return todo
-                .iter()
-                .enumerate()
-                .map(|(i, (_, job))| (i, Arc::new(job.simulate())))
-                .collect();
+            return (0..count).map(|i| (i, f(i))).collect();
         }
         let cursor = AtomicUsize::new(0);
         std::thread::scope(|s| {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
                     s.spawn(|| {
-                        let mut local: Vec<(usize, Arc<SimReport>)> = Vec::new();
+                        let mut local: Vec<(usize, R)> = Vec::new();
                         loop {
                             let i = cursor.fetch_add(1, Ordering::Relaxed);
-                            if i >= todo.len() {
+                            if i >= count {
                                 break;
                             }
-                            local.push((i, Arc::new(todo[i].1.simulate())));
+                            local.push((i, f(i)));
                         }
                         local
                     })
@@ -268,6 +328,54 @@ impl SweepExec {
                 .flat_map(|h| h.join().expect("sweep worker panicked"))
                 .collect()
         })
+    }
+
+    /// Run (or recall) a single multi-tenant stream simulation.
+    pub fn run_stream(&self, job: &StreamJob) -> Arc<StreamReport> {
+        let key = job.key();
+        if let Some(hit) = self.stream_cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let report = Arc::new(job.simulate());
+        self.stream_cache.lock().unwrap().insert(key, Arc::clone(&report));
+        report
+    }
+
+    /// Run a batch of stream jobs, fanning uncached ones across the
+    /// worker threads. Returns one report per input job, in input order;
+    /// duplicate and previously-cached jobs simulate exactly once (the
+    /// server sweep replays the same trace under several policies and
+    /// configs, so the memo pays the same way it does for figures).
+    pub fn run_stream_batch(&self, jobs: Vec<StreamJob>) -> Vec<Arc<StreamReport>> {
+        let keys: Vec<StreamKey> = jobs.iter().map(|j| j.key()).collect();
+        let mut todo: Vec<(StreamKey, StreamJob)> = Vec::new();
+        {
+            let cache = self.stream_cache.lock().unwrap();
+            let mut queued: HashSet<StreamKey> = HashSet::new();
+            for (job, key) in jobs.into_iter().zip(keys.iter()) {
+                if cache.contains_key(key) || !queued.insert(key.clone()) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    todo.push((key.clone(), job));
+                }
+            }
+        }
+
+        if !todo.is_empty() {
+            let results = self.execute_with(todo.len(), |i| Arc::new(todo[i].1.simulate()));
+            let mut cache = self.stream_cache.lock().unwrap();
+            for (i, report) in results {
+                cache.insert(todo[i].0.clone(), report);
+            }
+        }
+
+        let cache = self.stream_cache.lock().unwrap();
+        keys.iter()
+            .map(|k| Arc::clone(cache.get(k).expect("stream job simulated above")))
+            .collect()
     }
 }
 
@@ -356,6 +464,29 @@ mod tests {
         let (hits, misses) = exec.cache_stats();
         assert_eq!(misses, 2, "two unique simulations");
         assert_eq!(hits, 1, "one in-batch duplicate");
+    }
+
+    #[test]
+    fn stream_jobs_memoize_and_key_on_policy() {
+        use crate::sim::gpu::PartitionPolicy;
+        use crate::workload::{shrink_streams, traffic_trace};
+        let cfg = SystemConfig::tiny();
+        let tenants =
+            vec![(bench("CP").unwrap(), Scheme::Baseline), (bench("BFS").unwrap(), Scheme::Baseline)];
+        let mut streams = traffic_trace(&tenants, 1, 0, 3);
+        shrink_streams(&mut streams, 4, 40);
+        let exec = SweepExec::new(2);
+        let job = StreamJob::new(cfg.clone(), streams.clone(), PartitionPolicy::Static);
+        assert_eq!(job.key(), job.key(), "key is stable");
+        let other = StreamJob::new(cfg.clone(), streams.clone(), PartitionPolicy::Adaptive);
+        assert_ne!(job.key(), other.key(), "policy is part of the key");
+        let a = exec.run_stream(&job);
+        let b = exec.run_stream(&job);
+        assert!(Arc::ptr_eq(&a, &b), "second stream run must be the cached Arc");
+        let batch = exec.run_stream_batch(vec![job.clone(), other, job.clone()]);
+        assert_eq!(batch.len(), 3);
+        assert!(Arc::ptr_eq(&batch[0], &a), "batch serves the memoized report");
+        assert!(Arc::ptr_eq(&batch[0], &batch[2]), "in-batch duplicate deduped");
     }
 
     #[test]

@@ -16,10 +16,13 @@ use std::sync::Arc;
 use crate::amoeba::{MetricsSample, NativePredictor, FEATURES, NUM_FEATURES, PAPER_COEFFS};
 use crate::config::{Scheme, SystemConfig};
 use crate::harness::{SimJob, SweepExec};
+use crate::runtime::serve;
 use crate::sim::core::ClusterMode;
-use crate::sim::gpu::SimReport;
+use crate::sim::gpu::{PartitionPolicy, SimReport};
 use crate::stats::Table;
-use crate::workload::{bench, BenchProfile, FIG12_SET, FIG20_SET, FIG3_SET, FIG5_SET};
+use crate::workload::{
+    bench, shrink_streams, traffic_trace, BenchProfile, FIG12_SET, FIG20_SET, FIG3_SET, FIG5_SET,
+};
 
 /// Seed used by all harness runs (determinism across invocations).
 const SEED: u64 = 0xA30EBA;
@@ -483,6 +486,50 @@ pub fn fig21_vs_dws(exec: &SweepExec, quick: bool) -> Table {
     }
     let g = t.geomean_row();
     t.row("GEOMEAN", g);
+    t
+}
+
+// ---------------------------------------------------------------------
+// Server sweep: concurrent multi-tenant streams
+// ---------------------------------------------------------------------
+
+/// The server-mode sweep ("srv"): replay a seeded service trace of
+/// interleaved tenant launches (the [`serve::default_tenants`] mix)
+/// under both partition policies, plus each tenant alone as the
+/// interference-free reference, and report per-tenant completion,
+/// throughput, and ANTT-style slowdown. All runs flow through the
+/// executor's stream memo, so regenerating the figure twice simulates
+/// nothing new.
+pub fn server_sweep(exec: &SweepExec, quick: bool) -> Table {
+    let cfg = base_cfg(quick);
+    let tenants = serve::default_tenants();
+    let (kernels_each, mean_gap) = if quick { (2, 20_000) } else { (4, 100_000) };
+    let mut streams = traffic_trace(&tenants, kernels_each, mean_gap, SEED);
+    if quick {
+        shrink_streams(&mut streams, 8, 80);
+    }
+
+    let shared = [PartitionPolicy::Static, PartitionPolicy::Adaptive];
+    let out = exec.run_stream_batch(serve::server_jobs(&cfg, &streams, &shared));
+    let (shared_static, shared_adaptive) = (&out[0], &out[1]);
+
+    let mut t = Table::new(
+        "Server sweep — per-tenant service metrics (concurrent streams)",
+        &["tenant", "finish_kcyc", "tput_ipc", "antt_static", "antt_adaptive", "slowdown"],
+    );
+    for ti in 0..streams.len() {
+        let alone = &out[shared.len() + ti];
+        t.row(
+            streams[ti].name.as_str(),
+            vec![
+                shared_static.tenants[ti].cycles as f64 / 1000.0,
+                shared_static.tenant_throughput(ti),
+                serve::antt_slowdown(shared_static, alone, ti),
+                serve::antt_slowdown(shared_adaptive, alone, ti),
+                serve::stream_slowdown(shared_static, alone, ti),
+            ],
+        );
+    }
     t
 }
 

@@ -14,7 +14,9 @@ mod figdata;
 mod figures;
 
 pub use bencher::{BenchResult, Bencher};
-pub use exec::{cfg_fingerprint, profile_fingerprint, JobKey, SimJob, SweepExec};
+pub use exec::{
+    cfg_fingerprint, profile_fingerprint, JobKey, SimJob, StreamJob, StreamKey, SweepExec,
+};
 pub use figdata::gtx_scaling_trend;
 pub use figures::*;
 
@@ -22,10 +24,12 @@ use std::sync::OnceLock;
 
 use crate::stats::Table;
 
-/// All figure ids the harness can regenerate.
-pub const ALL_FIGURES: [&str; 20] = [
+/// All figure ids the harness can regenerate ("srv" is the server-mode
+/// concurrent-stream sweep — not a paper figure, but the scenario class
+/// the ROADMAP's serving north star asks for).
+pub const ALL_FIGURES: [&str; 21] = [
     "2", "3a", "3b", "4", "5", "6", "8", "12", "13", "14", "15", "16", "17", "18", "19", "19h",
-    "20", "21", "t1", "t2",
+    "20", "21", "srv", "t1", "t2",
 ];
 
 /// The process-wide executor used by the [`figure`] convenience wrapper:
@@ -58,6 +62,7 @@ pub fn figure_with(exec: &SweepExec, id: &str, quick: bool) -> Option<Table> {
         "19h" => Some(fig19_hetero(exec, quick)),
         "20" => Some(fig20_impacts(exec, quick)),
         "21" => Some(fig21_vs_dws(exec, quick)),
+        "srv" => Some(server_sweep(exec, quick)),
         "t1" => Some(table1_config()),
         "t2" => Some(table2_coefficients()),
         _ => None,

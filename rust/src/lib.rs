@@ -43,7 +43,10 @@ pub mod workload;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{NocMode, Scheme, SystemConfig};
-    pub use crate::harness::{SimJob, SweepExec};
-    pub use crate::sim::{self, gpu::SimReport};
-    pub use crate::workload::{self, BenchProfile};
+    pub use crate::harness::{SimJob, StreamJob, SweepExec};
+    pub use crate::sim::{
+        self,
+        gpu::{PartitionPolicy, SimReport, StreamReport},
+    };
+    pub use crate::workload::{self, BenchProfile, KernelStream};
 }

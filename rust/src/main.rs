@@ -12,9 +12,10 @@ use std::str::FromStr;
 use amoeba_gpu::config::{NocMode, Scheme, SystemConfig};
 use amoeba_gpu::errors::{err, Result};
 use amoeba_gpu::harness::{SimJob, SweepExec};
-use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_with_controller};
+use amoeba_gpu::runtime::serve;
+use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_with_controller, PartitionPolicy};
 use amoeba_gpu::stats::Table;
-use amoeba_gpu::workload::{all_benchmarks, bench};
+use amoeba_gpu::workload::{all_benchmarks, bench, shrink_streams, traffic_trace};
 
 fn usage() -> &'static str {
     "amoeba — AMOEBA reconfigurable-GPU simulator (paper reproduction)
@@ -23,11 +24,21 @@ USAGE:
   amoeba run <BENCH> [--scheme S] [--sms N] [--perfect-noc] [--seed N]
                      [--hlo-predictor]
   amoeba sweep [--quick] [--jobs N]
+  amoeba serve-sim [--tenants SPEC] [--policy static|adaptive]
+                   [--kernels N] [--gap CYCLES] [--seed N] [--sms N]
+                   [--quick] [--jobs N]
   amoeba list
   amoeba config
 
 SCHEMES: baseline | scale_up | static_fuse | direct_split |
          warp_regrouping | hetero | dws
+
+serve-sim replays a seeded traffic trace of interleaved tenant kernel
+launches on ONE chip (spatially partitioned clusters, shared NoC and
+memory) and reports per-tenant throughput and ANTT-style slowdown
+against each tenant running alone. SPEC is comma-separated
+BENCH[:SCHEME] entries, e.g. 'SM:hetero,BFS:warp_regrouping,CP:baseline'
+(scheme defaults to hetero).
 
 Sweeps run in parallel; --jobs (or the AMOEBA_JOBS env var) sets the
 worker count, defaulting to the machine's available parallelism."
@@ -42,6 +53,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&args[1..]),
         "sweep" => cmd_sweep(&args[1..]),
+        "serve-sim" => cmd_serve_sim(&args[1..]),
         "list" => cmd_list(),
         "config" => {
             println!("{}", amoeba_gpu::harness::figure("t1", true).unwrap().render());
@@ -198,6 +210,119 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         t.row(p.name, row);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve_sim(args: &[String]) -> Result<()> {
+    let quick = has_flag(args, "--quick");
+    let policy: PartitionPolicy = match opt_value(args, "--policy")? {
+        Some(s) => s.parse().map_err(err)?,
+        None => PartitionPolicy::Static,
+    };
+    let seed: u64 = match opt_value(args, "--seed")? {
+        Some(s) => s.parse()?,
+        None => 0xA30EBA,
+    };
+    let kernels_each: u32 = match opt_value(args, "--kernels")? {
+        Some(s) => s.parse()?,
+        None => {
+            if quick {
+                2
+            } else {
+                4
+            }
+        }
+    };
+    let mean_gap: u64 = match opt_value(args, "--gap")? {
+        Some(s) => s.parse()?,
+        None => {
+            if quick {
+                20_000
+            } else {
+                100_000
+            }
+        }
+    };
+    let tenants = match opt_value(args, "--tenants")? {
+        Some(spec) => serve::parse_tenant_spec(spec).map_err(err)?,
+        None => serve::default_tenants(),
+    };
+    let exec = match opt_value(args, "--jobs")? {
+        Some(n) => SweepExec::new(n.parse()?),
+        None => SweepExec::from_env(),
+    };
+    let mut cfg = SystemConfig::gtx480();
+    if quick {
+        cfg.num_sms = 8;
+        cfg.num_mcs = 4;
+        cfg.profile_window = 1_000;
+    }
+    if let Some(n) = opt_value(args, "--sms")? {
+        cfg = cfg.with_sm_count(n.parse()?);
+    }
+    let n_clusters = cfg.num_sms / 2;
+    if tenants.len() > n_clusters {
+        return Err(err(format!(
+            "{} tenants need at least {} SMs (one cluster each); this config has {} SMs \
+             ({n_clusters} clusters) — drop tenants or raise --sms",
+            tenants.len(),
+            tenants.len() * 2,
+            cfg.num_sms
+        )));
+    }
+
+    let mut streams = traffic_trace(&tenants, kernels_each, mean_gap, seed);
+    if quick {
+        shrink_streams(&mut streams, 8, 80);
+    }
+    eprintln!(
+        "[serve-sim] {} tenants x {} kernels, policy {policy}, {} threads...",
+        streams.len(),
+        kernels_each,
+        exec.threads()
+    );
+
+    // The shared run plus each tenant alone (the interference-free
+    // reference), batched through the stream memo.
+    let out = exec.run_stream_batch(serve::server_jobs(&cfg, &streams, &[policy]));
+    let shared = &out[0];
+
+    let mut t = Table::new(
+        format!("serve-sim — {policy} partition, seed {seed:#x}"),
+        &["tenant", "kernels", "finish_kcyc", "tput_ipc", "antt", "slowdown"],
+    );
+    for (ti, s) in streams.iter().enumerate() {
+        let alone = &out[1 + ti];
+        t.row(
+            s.name.as_str(),
+            vec![
+                shared.tenants[ti].chip.kernels_completed as f64,
+                shared.tenants[ti].cycles as f64 / 1000.0,
+                shared.tenant_throughput(ti),
+                serve::antt_slowdown(shared, alone, ti),
+                serve::stream_slowdown(shared, alone, ti),
+            ],
+        );
+    }
+    println!("{}", t.render());
+    println!(
+        "chip: {} cycles, {} kernels, {} reconfigurations, L2 miss {:.4}",
+        shared.cycles,
+        shared.chip.kernels_completed,
+        shared.chip.reconfig_events,
+        shared.chip.l2_miss_rate()
+    );
+    for (ti, rep) in shared.tenants.iter().enumerate() {
+        let scale_ups = rep.decisions.iter().filter(|d| d.scale_up).count();
+        println!(
+            "tenant {ti} ({}): {} decisions ({} scale-up), {} reconfigs, partition {:?}",
+            rep.bench,
+            rep.decisions.len(),
+            scale_ups,
+            rep.chip.reconfig_events,
+            shared.partitions[ti]
+        );
+    }
     Ok(())
 }
 

@@ -1,5 +1,7 @@
 //! PJRT runtime: loads the AOT-compiled JAX/Pallas predictor artifacts and
-//! executes them from the rust request path.
+//! executes them from the rust request path. The [`serve`] submodule is
+//! the server-simulation front-end (tenant specs, service traces, ANTT
+//! math) shared by `amoeba serve-sim` and the harness's server sweep.
 //!
 //! Interchange format is HLO **text** (`artifacts/*.hlo.txt`), produced by
 //! `python/compile/aot.py`. Text is used instead of a serialized
@@ -22,6 +24,8 @@
 //! with that error and point at the `xla` feature. Either way the
 //! default build compiles and the simulator itself always runs on the
 //! native predictor.
+
+pub mod serve;
 
 use std::fmt;
 use std::path::PathBuf;

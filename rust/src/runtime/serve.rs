@@ -1,0 +1,153 @@
+//! Server-simulation front-end: tenant specs, standard service traces,
+//! and the ANTT-style slowdown math for the multi-tenant stream mode.
+//!
+//! This is the runtime layer the `amoeba serve-sim` subcommand and the
+//! harness's server sweep share: it turns a human-readable tenant spec
+//! (`"SM:hetero,BFS:warp_regrouping,CP:baseline"`) into a seeded
+//! [`KernelStream`] trace, and computes per-tenant service metrics from
+//! the resulting [`StreamReport`]s. Simulation itself stays in
+//! [`crate::sim::gpu`]; scheduling policy stays in
+//! [`crate::sim::gpu::PartitionPolicy`].
+
+use crate::config::{Scheme, SystemConfig};
+use crate::harness::StreamJob;
+use crate::sim::gpu::{PartitionPolicy, StreamReport};
+use crate::workload::{bench, BenchProfile, KernelStream};
+
+/// Parse a tenant spec: comma-separated `BENCH[:SCHEME]` entries, e.g.
+/// `"SM:hetero,BFS:warp_regrouping,CP"`. A missing scheme defaults to
+/// `hetero` — per-cluster control is the server mode's reason to exist.
+pub fn parse_tenant_spec(spec: &str) -> Result<Vec<(BenchProfile, Scheme)>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (name, scheme) = match entry.split_once(':') {
+            Some((n, s)) => (n.trim(), s.trim().parse::<Scheme>()?),
+            None => (entry, Scheme::Hetero),
+        };
+        let profile =
+            bench(name).ok_or_else(|| format!("unknown benchmark '{name}' in tenant spec"))?;
+        out.push((profile, scheme));
+    }
+    if out.is_empty() {
+        return Err("tenant spec names no tenants".into());
+    }
+    Ok(out)
+}
+
+/// The standard three-tenant mix the server sweep and `serve-sim` default
+/// to: a cache-sharing scale-up winner under per-cluster control, a
+/// divergent graph workload under warp regrouping, and a compute-dense
+/// scale-out tenant — the divergent scalability profiles the paper argues
+/// one fixed SM shape cannot serve at once.
+pub fn default_tenants() -> Vec<(BenchProfile, Scheme)> {
+    vec![
+        (bench("SM").expect("SM profile"), Scheme::Hetero),
+        (bench("BFS").expect("BFS profile"), Scheme::WarpRegroup),
+        (bench("CP").expect("CP profile"), Scheme::Baseline),
+    ]
+}
+
+/// ANTT-style slowdown of tenant `ti` in `shared` against its isolated
+/// reference run `alone` (the same stream served alone, as tenant 0):
+/// the mean over kernels of `shared turnaround / alone turnaround`.
+/// 1.0 = no interference; launches the deadline truncated are skipped.
+pub fn antt_slowdown(shared: &StreamReport, alone: &StreamReport, ti: usize) -> f64 {
+    let shared_launches = shared.launches.iter().filter(|l| l.tenant == ti as u32);
+    let alone_launches: Vec<_> =
+        alone.launches.iter().filter(|l| l.tenant == 0).collect();
+    let mut acc = 0.0;
+    let mut n = 0u32;
+    for (s, a) in shared_launches.zip(alone_launches) {
+        if s.finish == u64::MAX || a.finish == u64::MAX {
+            continue;
+        }
+        acc += s.turnaround() as f64 / a.turnaround().max(1) as f64;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        acc / n as f64
+    }
+}
+
+/// Whole-stream slowdown: tenant completion cycle in the shared run over
+/// its completion when served alone.
+pub fn stream_slowdown(shared: &StreamReport, alone: &StreamReport, ti: usize) -> f64 {
+    let a = alone.tenants[0].cycles;
+    if a == 0 {
+        0.0
+    } else {
+        shared.tenants[ti].cycles as f64 / a as f64
+    }
+}
+
+/// The isolated-reference job for tenant `ti` of `streams`: the same
+/// stream (same arrivals, same kernel seeds) served alone on the full
+/// chip. Memoizes cleanly through the stream cache.
+pub fn alone_streams(streams: &[KernelStream], ti: usize) -> Vec<KernelStream> {
+    vec![streams[ti].clone()]
+}
+
+/// The canonical server job list every front-end submits: one shared run
+/// per policy in `shared` (in order), then each tenant alone (the
+/// interference-free reference, always `Static` — policy is moot for a
+/// single tenant). Result indexing: `out[i]` is `shared[i]`'s run,
+/// `out[shared.len() + ti]` is tenant `ti` alone.
+pub fn server_jobs(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    shared: &[PartitionPolicy],
+) -> Vec<StreamJob> {
+    let mut jobs: Vec<StreamJob> = shared
+        .iter()
+        .map(|&p| StreamJob::new(cfg.clone(), streams.to_vec(), p))
+        .collect();
+    for ti in 0..streams.len() {
+        jobs.push(StreamJob::new(cfg.clone(), alone_streams(streams, ti), PartitionPolicy::Static));
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::sim::gpu::{serve_streams, PartitionPolicy};
+    use crate::workload::{shrink_streams, traffic_trace};
+
+    #[test]
+    fn tenant_spec_parses_schemes_and_defaults() {
+        let t = parse_tenant_spec("SM:hetero, BFS:warp_regrouping ,CP").unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].0.name, "SM");
+        assert_eq!(t[0].1, Scheme::Hetero);
+        assert_eq!(t[1].1, Scheme::WarpRegroup);
+        assert_eq!(t[2].1, Scheme::Hetero, "missing scheme defaults to hetero");
+        assert!(parse_tenant_spec("NOPE:hetero").is_err());
+        assert!(parse_tenant_spec("SM:bogus").is_err());
+        assert!(parse_tenant_spec("  ,").is_err());
+        assert_eq!(default_tenants().len(), 3);
+    }
+
+    #[test]
+    fn slowdown_math_on_real_runs() {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let tenants =
+            vec![(bench("CP").unwrap(), Scheme::Baseline), (bench("BFS").unwrap(), Scheme::Baseline)];
+        let mut streams = traffic_trace(&tenants, 2, 0, 11);
+        shrink_streams(&mut streams, 4, 40);
+        let shared = serve_streams(&cfg, &streams, PartitionPolicy::Static);
+        for ti in 0..streams.len() {
+            let alone = serve_streams(&cfg, &alone_streams(&streams, ti), PartitionPolicy::Static);
+            let antt = antt_slowdown(&shared, &alone, ti);
+            let slow = stream_slowdown(&shared, &alone, ti);
+            // Sharing the chip can only slow a tenant down (it owns a
+            // strict subset of the clusters it gets alone).
+            assert!(antt >= 0.99, "tenant {ti}: antt {antt}");
+            assert!(slow >= 0.99, "tenant {ti}: slowdown {slow}");
+            assert!(antt.is_finite() && slow.is_finite());
+        }
+    }
+}

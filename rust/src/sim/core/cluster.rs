@@ -1339,6 +1339,32 @@ impl SmCluster {
         div as f32 / live as f32
     }
 
+    /// Fingerprint of the cluster's externally observable progress state:
+    /// issue/commit counters, memory-pipeline occupancy, and per-warp
+    /// blocking state. Within a window where [`SmCluster::next_event`]
+    /// promised no state change this must stay constant — the
+    /// multi-stream horizon-tightness property in
+    /// `tests/prop_invariants.rs` walks promised horizons and asserts it.
+    /// Per-cycle accounting (stall counters, LRU clocks) is deliberately
+    /// excluded: the skip engine replays that in O(1).
+    pub fn progress_probe(&self) -> u64 {
+        crate::workload::hash_combine(&[
+            self.stats.warp_insns,
+            self.stats.thread_insns,
+            self.stats.mem_insns,
+            self.stats.l1d_accesses,
+            self.stats.l1i_accesses + self.stats.l1c_accesses + self.stats.l1t_accesses,
+            self.stats.noc_packets,
+            self.stats.ctas_retired,
+            self.lsu.len() as u64,
+            self.pending.len() as u64,
+            self.warps
+                .iter()
+                .map(|w| w.outstanding_loads as u64 + w.ifetch_pending as u64)
+                .sum(),
+        ])
+    }
+
     /// One-line state summary for deadlock diagnostics.
     pub fn debug_state(&self) -> String {
         let live = self.live_warps();

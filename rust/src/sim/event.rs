@@ -15,6 +15,15 @@
 //! cycle loop. `tests/prop_invariants.rs` checks the tightness direction
 //! per component, and `tests/exec_determinism.rs` checks the composed
 //! machine end to end (skip == dense, bit for bit).
+//!
+//! Multi-tenant stream runs (`Gpu::run_streams`) compose the same way
+//! one level up: the chip is quiescent only when **every** tenant's
+//! clusters are quiescent, and the machine horizon is the `min_with`
+//! fold over all tenants' components plus their scheduler triggers
+//! (kernel arrivals, profiling-window ends, split checks). No new
+//! variant is needed — a tenant is just another source of [`NextEvent`]s
+//! — which is exactly why the skip engine survived the jump from one
+//! resident kernel to many.
 
 /// Earliest future activity of a simulated component, relative to the
 /// cycle `now` it was queried at.

@@ -27,6 +27,25 @@
 //! [`Gpu::set_dense`]) forces the dense loop for auditing. The skip mode
 //! is deliberately *not* part of [`SystemConfig`], so sweep-cache
 //! fingerprints ([`crate::harness::cfg_fingerprint`]) stay mode-agnostic.
+//!
+//! ## Concurrent kernel streams (server mode)
+//!
+//! [`Gpu::run_streams`] serves several applications **simultaneously**:
+//! the chip's clusters are spatially partitioned across tenants (one
+//! [`crate::workload::KernelStream`] each), every tenant runs its own
+//! ordered, arrival-timed kernel launches on its own clusters, and the
+//! AMOEBA controller takes its per-cluster decisions *per tenant* through
+//! the same [`Gpu::reconfigure`] / `Controller::decide_cluster` path the
+//! single-application loop uses. The NoC and the memory system stay
+//! shared, so tenants contend for them like co-resident kernels on a real
+//! chip. Reconfiguration still requires a quiet fabric (the NoC is
+//! rebuilt), so a tenant's reconfigure drains the whole chip first — the
+//! cross-tenant cost of reshaping shared hardware is modelled, not
+//! hidden. The event-horizon engine spans tenants: the chip skips only
+//! when **every** stream is quiescent, and the horizon is the min over
+//! tenants' components and triggers (arrivals, profiling windows, split
+//! checks). Dense and skip stream runs are bit-identical, enforced by
+//! `tests/exec_determinism.rs` on [`StreamReport`]s.
 
 use crate::amoeba::controller::{Controller, KernelDecision};
 use crate::amoeba::dynsplit::DynSplit;
@@ -37,7 +56,7 @@ use crate::sim::core::{ClusterMode, DivergenceMode, SmCluster};
 use crate::sim::mem::{MemPartition, PartitionReply};
 use crate::sim::noc::{ChipLayout, Noc, Packet, Payload, Subnet};
 use crate::stats::{ChipStats, SmStats};
-use crate::workload::{kernel_launches, BenchProfile, TraceGen};
+use crate::workload::{kernel_launches, BenchProfile, KernelStream, TraceGen};
 
 /// Cached `AMOEBA_DENSE` escape hatch: any non-empty value other than
 /// `0` forces the dense cycle loop (read once per process).
@@ -97,13 +116,144 @@ impl SimReport {
     }
 }
 
+/// How [`Gpu::run_streams`] assigns clusters to tenants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionPolicy {
+    /// Clusters are split across tenants once (contiguous, near-even
+    /// blocks) and never move.
+    Static,
+    /// Static start, plus demand-driven repartitioning at kernel
+    /// boundaries: clusters freed by a finished tenant are adopted by the
+    /// next tenant that starts a kernel, growing its partition.
+    Adaptive,
+}
+
+impl std::fmt::Display for PartitionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PartitionPolicy::Static => "static",
+            PartitionPolicy::Adaptive => "adaptive",
+        })
+    }
+}
+
+impl std::str::FromStr for PartitionPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Ok(PartitionPolicy::Static),
+            "adaptive" | "dynamic" => Ok(PartitionPolicy::Adaptive),
+            other => Err(format!("unknown partition policy '{other}'")),
+        }
+    }
+}
+
+/// Service record of one kernel launch in a stream run (ANTT-style
+/// slowdown and throughput metrics derive from these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaunchStat {
+    /// Tenant (stream) index.
+    pub tenant: u32,
+    /// Kernel ordinal within the stream.
+    pub kernel: u32,
+    /// Arrival cycle from the traffic trace.
+    pub arrival: u64,
+    /// Cycle the launch actually started (>= arrival; queueing + drain
+    /// holds push it later). `u64::MAX` if the run's deadline hit first.
+    pub start: u64,
+    /// Cycle the launch completed. `u64::MAX` if never.
+    pub finish: u64,
+}
+
+impl LaunchStat {
+    /// Turnaround time: completion relative to arrival.
+    pub fn turnaround(&self) -> u64 {
+        self.finish.saturating_sub(self.arrival)
+    }
+}
+
+/// Result of serving several concurrent kernel streams on one chip.
+///
+/// Per-tenant [`SimReport`]s attribute cluster-side counters by ownership
+/// period (exact under repartitioning); the shared NoC / L2 / DRAM
+/// counters live in the chip-wide `sm`/`chip` aggregates, since the
+/// memory system serves all tenants from common queues. `PartialEq` is
+/// the skip-vs-dense / parallel-vs-serial determinism equality.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamReport {
+    /// One report per tenant, in stream order: `bench` is the stream
+    /// name, `cycles` the tenant's completion cycle, `sm` the counters of
+    /// clusters while owned by this tenant, `decisions`/`samples` its
+    /// controller history. Tenant reports carry no phase samples — the
+    /// chip-wide trace is in [`StreamReport::phases`].
+    pub tenants: Vec<SimReport>,
+    /// Chip-wide SM aggregate (all clusters, whole run).
+    pub sm: SmStats,
+    /// Shared chip counters (L2, DRAM, NoC, reconfigurations, MC stalls).
+    pub chip: ChipStats,
+    /// Total cycles until the last tenant finished.
+    pub cycles: u64,
+    /// Chip-wide Fig-19 phase samples over the whole run.
+    pub phases: Vec<PhaseSample>,
+    /// Per-launch service records, grouped by tenant in stream order.
+    pub launches: Vec<LaunchStat>,
+    /// Initial partition: tenant -> owned cluster ids.
+    pub partitions: Vec<Vec<usize>>,
+    /// CTAs dispatched, by `[tenant][cluster]` — the placement ledger the
+    /// tenant-conservation properties check.
+    pub ctas_by_cluster: Vec<Vec<u64>>,
+}
+
+impl StreamReport {
+    /// Tenant service throughput: thread-instructions per cycle of
+    /// residency (arrival of its first kernel to its completion).
+    pub fn tenant_throughput(&self, ti: usize) -> f64 {
+        let t = &self.tenants[ti];
+        let first_arrival = self
+            .launches
+            .iter()
+            .find(|l| l.tenant == ti as u32)
+            .map(|l| l.arrival)
+            .unwrap_or(0);
+        let residency = t.cycles.saturating_sub(first_arrival);
+        if residency == 0 {
+            0.0
+        } else {
+            t.sm.thread_insns as f64 / residency as f64
+        }
+    }
+}
+
 /// Dispatch at most this many CTAs per cycle (kernel-launch engine rate).
+/// Stream mode grants this rate to each tenant: every stream models its
+/// own kernel-launch engine front-end.
 const DISPATCH_PER_CYCLE: usize = 2;
 /// Fig 19 phase-sampling period in cycles.
 const PHASE_SAMPLE_PERIOD: u64 = 512;
 /// Replies an MC can inject per cycle (the L2 slice has two reply ports,
 /// matching GPGPU-Sim's icnt-to-shader interface width).
 const MC_REPLY_BUDGET: usize = 2;
+
+/// Maps each cluster to the trace generator of the kernel it is running.
+/// The single-application path shares one kernel chip-wide; stream mode
+/// routes every cluster to its owning tenant's current kernel.
+#[derive(Clone, Copy)]
+enum GenMap<'a> {
+    /// One kernel for the whole chip.
+    Single(&'a TraceGen),
+    /// `owner[cluster]` is the tenant index into `gens`.
+    PerTenant { gens: &'a [TraceGen], owner: &'a [usize] },
+}
+
+impl<'a> GenMap<'a> {
+    #[inline]
+    fn get(&self, ci: usize) -> &'a TraceGen {
+        match *self {
+            GenMap::Single(g) => g,
+            GenMap::PerTenant { gens, owner } => &gens[owner[ci]],
+        }
+    }
+}
 
 /// The machine under simulation.
 pub struct Gpu {
@@ -232,16 +382,18 @@ impl Gpu {
         self.reconfigure(&target);
     }
 
-    /// Advance the whole machine one cycle; `gen` resolves traces of the
-    /// kernel currently executing.
-    fn tick(&mut self, gen: &TraceGen) {
+    /// Advance the whole machine one cycle; `gens` resolves each
+    /// cluster's instruction traces (one shared kernel on the
+    /// single-application path, the owning tenant's kernel in stream
+    /// mode).
+    fn tick(&mut self, gens: &GenMap) {
         let now = self.now;
         self.chip.cycles += 1;
 
         // 1. SM clusters (issue + LSU + NoC injection).
         for ci in 0..self.clusters.len() {
             let nodes = self.nodes_of(ci);
-            self.clusters[ci].tick(now, &mut self.noc, nodes, gen);
+            self.clusters[ci].tick(now, &mut self.noc, nodes, gens.get(ci));
         }
 
         // 2. Interconnect.
@@ -360,7 +512,7 @@ impl Gpu {
     /// The caller must have established that CTA dispatch made no
     /// progress this cycle (cluster state is frozen across the window, so
     /// dispatchability cannot appear mid-skip).
-    fn try_skip(&mut self, gen: &TraceGen, cap: u64) -> bool {
+    fn try_skip(&mut self, gens: &GenMap, cap: u64) -> bool {
         use crate::sim::NextEvent;
         if self.dense || cap <= self.now {
             return false;
@@ -372,8 +524,8 @@ impl Gpu {
         }
         let now = self.now;
         let mut ev = NextEvent::Idle;
-        for c in &self.clusters {
-            ev = ev.min_with(c.next_event(now, gen));
+        for (ci, c) in self.clusters.iter().enumerate() {
+            ev = ev.min_with(c.next_event(now, gens.get(ci)));
             if ev == NextEvent::Progress {
                 return false;
             }
@@ -421,6 +573,7 @@ impl Gpu {
     /// controller loop: profile -> predict -> reconfigure -> run (Fig 7).
     fn run_kernel(&mut self, profile: &BenchProfile, kernel: &KernelLaunch) {
         let gen = TraceGen::new(profile, kernel);
+        let gm = GenMap::Single(&gen);
         let mut next_cta: u32 = 0;
         let total_ctas = kernel.num_ctas;
 
@@ -501,10 +654,10 @@ impl Gpu {
                 }
                 let next_sample = (self.now / PHASE_SAMPLE_PERIOD + 1) * PHASE_SAMPLE_PERIOD;
                 cap = cap.min(next_sample - 1);
-                self.try_skip(&gen, cap);
+                self.try_skip(&gm, cap);
             }
 
-            self.tick(&gen);
+            self.tick(&gm);
 
             // Profiling window complete: predict and reconfigure.
             if profiling && self.now >= profile_start + self.cfg.profile_window {
@@ -550,8 +703,8 @@ impl Gpu {
                     // dense drain loop has no sampling or split checks, so
                     // the skip cap is the deadline alone.
                     while !self.drained() && self.now < deadline {
-                        self.try_skip(&gen, deadline - 1);
-                        self.tick(&gen);
+                        self.try_skip(&gm, deadline - 1);
+                        self.tick(&gm);
                     }
                     for c in &mut self.clusters {
                         c.reap();
@@ -623,12 +776,9 @@ impl Gpu {
         acc
     }
 
-    /// Run a full application (all kernels) and report.
-    pub fn run(&mut self, profile: &BenchProfile, seed: u64) -> SimReport {
-        for kernel in kernel_launches(profile, seed) {
-            self.run_kernel(profile, &kernel);
-        }
-        // Fold partition-side stats into the chip counters.
+    /// Fold the memory-side and NoC counters into the chip stats (end of
+    /// run; shared by the single-application and stream paths).
+    fn fold_chip(&mut self) {
         for p in &self.partitions {
             self.chip.l2_accesses += p.accesses;
             self.chip.l2_misses += p.misses;
@@ -641,6 +791,14 @@ impl Gpu {
         // Surface predictor-backend fallbacks: nonzero means some logged
         // decisions were substituted defaults, not measured inferences.
         self.chip.predictor_fallbacks = self.controller.fallback_count();
+    }
+
+    /// Run a full application (all kernels) and report.
+    pub fn run(&mut self, profile: &BenchProfile, seed: u64) -> SimReport {
+        for kernel in kernel_launches(profile, seed) {
+            self.run_kernel(profile, &kernel);
+        }
+        self.fold_chip();
         SimReport {
             bench: profile.name.to_string(),
             scheme: self.scheme,
@@ -650,6 +808,556 @@ impl Gpu {
             decisions: self.decisions.clone(),
             phases: self.phases.clone(),
             samples: self.samples.clone(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Concurrent kernel streams (server mode)
+    // ------------------------------------------------------------------
+
+    /// Aggregate SM counters over one tenant's clusters.
+    fn partition_agg(&self, partition: &[usize]) -> SmStats {
+        let mut acc = SmStats::default();
+        for &ci in partition {
+            acc.absorb(&self.clusters[ci].stats);
+        }
+        acc
+    }
+
+    /// Has tenant `t`'s current kernel finished? All of its CTAs
+    /// dispatched and all of its clusters drained (outstanding loads and
+    /// in-flight lines are tracked per cluster, so `idle` covers the
+    /// tenant's NoC/memory traffic; fire-and-forget write-throughs may
+    /// still be in flight, exactly like the paper's write-through L1s).
+    fn stream_kernel_complete(&self, t: &TenantRun, total_ctas: u32) -> bool {
+        t.next_cta >= total_ctas && t.partition.iter().all(|&ci| self.clusters[ci].idle())
+    }
+
+    /// Apply a tenant's per-cluster fused/private decision through the
+    /// standard [`Gpu::reconfigure`] path: the full chip vector keeps
+    /// every other tenant's clusters exactly as they are (they are
+    /// skipped by the mode check), while the NoC is rebuilt for the new
+    /// mixed layout. Caller guarantees a drained machine.
+    fn stream_reconfigure(&mut self, partition: &[usize], target: &[bool]) {
+        debug_assert_eq!(partition.len(), target.len());
+        let mut v = self.layout.fused_flags().to_vec();
+        for (&ci, &f) in partition.iter().zip(target) {
+            v[ci] = f;
+        }
+        self.reconfigure(&v);
+    }
+
+    /// Open a profiling window for tenant `t` on its current layout:
+    /// per-cluster baselines for the heterogeneous path, a
+    /// tenant-aggregate baseline for chip-global-style schemes.
+    fn stream_begin_profiling(&self, t: &mut TenantRun) {
+        t.base_per = if t.scheme.per_cluster() {
+            t.partition.iter().map(|&ci| self.clusters[ci].stats.clone()).collect()
+        } else {
+            Vec::new()
+        };
+        t.base_agg = self.partition_agg(&t.partition);
+        t.profile_start = self.now;
+        t.phase = TPhase::Profiling;
+    }
+
+    /// Close tenant `ti`'s cluster-ownership accounting periods: fold the
+    /// counters gained since each baseline into the tenant's accumulator
+    /// and restart the baselines at the current values.
+    fn stream_close_accounting(&self, t: &mut TenantRun) {
+        for (i, &ci) in t.partition.iter().enumerate() {
+            let d = self.clusters[ci].stats.delta(&t.sm_base[i]);
+            t.sm_acc.absorb(&d);
+            t.sm_base[i] = self.clusters[ci].stats.clone();
+        }
+    }
+
+    /// Serve several concurrent kernel streams on this chip (see the
+    /// module docs): spatial partitioning of clusters across tenants,
+    /// per-tenant CTA dispatch and AMOEBA control, shared NoC and memory
+    /// system, event-horizon skipping across all tenants. Must be called
+    /// on a freshly built machine; the machine's construction scheme is
+    /// ignored (each stream carries its own).
+    pub fn run_streams(
+        &mut self,
+        streams: &[KernelStream],
+        policy: PartitionPolicy,
+    ) -> StreamReport {
+        let n_clusters = self.clusters.len();
+        let n = streams.len();
+        assert!(n > 0, "run_streams needs at least one stream");
+        assert!(n <= n_clusters, "more tenants ({n}) than clusters ({n_clusters})");
+        assert_eq!(self.now, 0, "run_streams needs a fresh machine");
+        for s in streams {
+            s.validate().expect("invalid kernel stream");
+        }
+
+        // Initial spatial partition: contiguous near-even blocks, and the
+        // time-zero machine build (no reconfiguration cost — this is how
+        // the chip comes up, like `Gpu::new`'s scheme-dependent mode).
+        let mut owner = vec![0usize; n_clusters];
+        let mut partitions: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for ti in 0..n {
+            let part: Vec<usize> = (ti * n_clusters / n..(ti + 1) * n_clusters / n).collect();
+            for &ci in &part {
+                owner[ci] = ti;
+            }
+            partitions.push(part);
+        }
+        let fused0: Vec<bool> =
+            (0..n_clusters).map(|ci| streams[owner[ci]].scheme == Scheme::ScaleUp).collect();
+        for (ci, c) in self.clusters.iter_mut().enumerate() {
+            let mode = if fused0[ci] { ClusterMode::Fused } else { ClusterMode::PrivatePair };
+            if c.mode() != mode {
+                c.set_mode(mode);
+            }
+            c.divergence_mode = if streams[owner[ci]].scheme == Scheme::Dws {
+                DivergenceMode::Shadowed
+            } else {
+                DivergenceMode::Serial
+            };
+            c.split_policy = None;
+        }
+        self.layout = ChipLayout::new(fused0, self.cfg.num_mcs);
+        self.noc = Noc::new(&self.cfg, &self.layout);
+
+        let mut tenants: Vec<TenantRun> = (0..n)
+            .map(|ti| TenantRun {
+                scheme: streams[ti].scheme,
+                partition: partitions[ti].clone(),
+                kidx: 0,
+                phase: TPhase::Waiting,
+                next_cta: 0,
+                profile_start: 0,
+                base_per: Vec::new(),
+                base_agg: SmStats::default(),
+                split_check_at: 0,
+                sm_acc: SmStats::default(),
+                sm_base: partitions[ti]
+                    .iter()
+                    .map(|&ci| self.clusters[ci].stats.clone())
+                    .collect(),
+                chip: ChipStats::default(),
+                decisions: Vec::new(),
+                samples: Vec::new(),
+                finish: 0,
+            })
+            .collect();
+
+        // Current kernel's trace generator per tenant. Initialised to
+        // kernel 0's (unused before the launch starts: the clusters are
+        // empty, so nothing resolves through it).
+        let mut gens: Vec<TraceGen> =
+            streams.iter().map(|s| TraceGen::new(&s.profile, &s.launches[0].kernel)).collect();
+
+        // Per-launch service records, grouped by tenant in stream order.
+        let mut launch_base = vec![0usize; n];
+        let mut launches: Vec<LaunchStat> = Vec::new();
+        for (ti, s) in streams.iter().enumerate() {
+            launch_base[ti] = launches.len();
+            for (k, l) in s.launches.iter().enumerate() {
+                launches.push(LaunchStat {
+                    tenant: ti as u32,
+                    kernel: k as u32,
+                    arrival: l.arrival,
+                    start: u64::MAX,
+                    finish: u64::MAX,
+                });
+            }
+        }
+        let total_kernels: u64 = streams.iter().map(|s| s.launches.len() as u64).sum();
+        let last_arrival =
+            streams.iter().flat_map(|s| &s.launches).map(|l| l.arrival).max().unwrap_or(0);
+        let deadline =
+            last_arrival + self.cfg.max_cycles.max(1).saturating_mul(total_kernels.max(1));
+
+        let mut ctas_by_cluster = vec![vec![0u64; n_clusters]; n];
+        let mut phases: Vec<PhaseSample> = Vec::new();
+        // Clusters released by finished tenants (Adaptive policy only).
+        let mut free_pool: Vec<usize> = Vec::new();
+
+        loop {
+            let drain_hold = tenants.iter().any(|t| matches!(t.phase, TPhase::Drain { .. }));
+
+            // ---- CTA dispatch: each tenant's launch engine feeds its own
+            // clusters (probe wave while profiling, full grid afterwards).
+            // Dispatch pauses chip-wide while any tenant drains for a
+            // reconfiguration: the fabric is being quiesced.
+            let mut dispatched = 0usize;
+            if !drain_hold {
+                for ti in 0..n {
+                    let probing = matches!(tenants[ti].phase, TPhase::Profiling);
+                    if !probing && !matches!(tenants[ti].phase, TPhase::Running) {
+                        continue;
+                    }
+                    let t = &mut tenants[ti];
+                    let kernel = &streams[ti].launches[t.kidx].kernel;
+                    let cap = if probing {
+                        // One probe CTA per owned cluster (§4.1.1).
+                        (t.partition.len() as u32).min(kernel.num_ctas)
+                    } else {
+                        kernel.num_ctas
+                    };
+                    let mut mine = 0usize;
+                    if probing && t.scheme.per_cluster() {
+                        // Heterogeneous probe wave: CTA i lands on the
+                        // tenant's i-th cluster so the per-cluster windows
+                        // measure disjoint work.
+                        while t.next_cta < cap && mine < DISPATCH_PER_CYCLE {
+                            let ci = t.partition[t.next_cta as usize % t.partition.len()];
+                            if !self.clusters[ci].can_accept_cta(kernel) {
+                                break;
+                            }
+                            self.clusters[ci].dispatch_cta(kernel, t.next_cta, &gens[ti]);
+                            ctas_by_cluster[ti][ci] += 1;
+                            t.next_cta += 1;
+                            mine += 1;
+                        }
+                    } else {
+                        'dispatch: for &ci in &t.partition {
+                            while t.next_cta < cap && self.clusters[ci].can_accept_cta(kernel) {
+                                self.clusters[ci].dispatch_cta(kernel, t.next_cta, &gens[ti]);
+                                ctas_by_cluster[ti][ci] += 1;
+                                t.next_cta += 1;
+                                mine += 1;
+                                if mine >= DISPATCH_PER_CYCLE {
+                                    break 'dispatch;
+                                }
+                            }
+                        }
+                    }
+                    dispatched += mine;
+                }
+            }
+
+            // ---- Event-horizon skip: only when nothing dispatched, no
+            // tenant transition is already due (those fire on live ticks
+            // at exactly the dense loop's cycle), and every component is
+            // quiescent. The cap keeps all time-based triggers — stream
+            // arrivals, profiling-window ends, split checks, phase-sample
+            // boundaries, the deadline — on live ticks; the horizon is
+            // the min over every tenant's components and triggers.
+            if dispatched == 0 {
+                let mut pending = false;
+                for (ti, t) in tenants.iter().enumerate() {
+                    pending |= match &t.phase {
+                        TPhase::Waiting => {
+                            !drain_hold && self.now >= streams[ti].launches[t.kidx].arrival
+                        }
+                        TPhase::Drain { .. } => self.drained(),
+                        TPhase::Profiling | TPhase::Running => self.stream_kernel_complete(
+                            t,
+                            streams[ti].launches[t.kidx].kernel.num_ctas,
+                        ),
+                        TPhase::Done => false,
+                    };
+                    if pending {
+                        break;
+                    }
+                }
+                if !pending {
+                    let mut cap = deadline - 1;
+                    for (ti, t) in tenants.iter().enumerate() {
+                        match &t.phase {
+                            TPhase::Waiting => {
+                                let arrival = streams[ti].launches[t.kidx].arrival;
+                                if arrival > self.now {
+                                    cap = cap.min(arrival - 1);
+                                }
+                            }
+                            TPhase::Profiling => {
+                                cap = cap.min(
+                                    (t.profile_start + self.cfg.profile_window)
+                                        .saturating_sub(1),
+                                );
+                            }
+                            _ => {}
+                        }
+                        if t.scheme.splits().is_some()
+                            && !matches!(t.phase, TPhase::Done)
+                            && t.partition.iter().any(|&ci| self.layout.is_fused(ci))
+                        {
+                            cap = cap.min(t.split_check_at.saturating_sub(1));
+                        }
+                    }
+                    let next_sample =
+                        (self.now / PHASE_SAMPLE_PERIOD + 1) * PHASE_SAMPLE_PERIOD;
+                    cap = cap.min(next_sample - 1);
+                    self.try_skip(&GenMap::PerTenant { gens: &gens, owner: &owner }, cap);
+                }
+            }
+
+            self.tick(&GenMap::PerTenant { gens: &gens, owner: &owner });
+
+            // ---- Per-tenant transitions. Tenant index order is part of
+            // the deterministic contract (dense and skip runs execute the
+            // identical pass on identical state).
+            for ti in 0..n {
+                // 1. Profiling window complete: one decision per cluster
+                // (heterogeneous) or one per tenant, through the same
+                // controller paths as the single-application loop.
+                if matches!(tenants[ti].phase, TPhase::Profiling)
+                    && self.now >= tenants[ti].profile_start + self.cfg.profile_window
+                {
+                    let target: Vec<bool> = if tenants[ti].scheme.per_cluster() {
+                        let part = tenants[ti].partition.clone();
+                        let mut v = Vec::with_capacity(part.len());
+                        for (i, &ci) in part.iter().enumerate() {
+                            let sample = MetricsSample::from_window_scaled(
+                                &tenants[ti].base_per[i],
+                                &self.clusters[ci].stats,
+                                &self.cfg,
+                                2,
+                            );
+                            let d = self.controller.decide_cluster(ci, &sample);
+                            if d.scale_up {
+                                self.chip.predictor_scale_up += 1;
+                                tenants[ti].chip.predictor_scale_up += 1;
+                            } else {
+                                self.chip.predictor_scale_out += 1;
+                                tenants[ti].chip.predictor_scale_out += 1;
+                            }
+                            tenants[ti].samples.push(sample);
+                            tenants[ti].decisions.push(d);
+                            v.push(d.scale_up);
+                        }
+                        v
+                    } else {
+                        // Tenant-global decision over the tenant's window
+                        // (2 SMs per owned cluster).
+                        let cur = self.partition_agg(&tenants[ti].partition);
+                        let sample = MetricsSample::from_window_scaled(
+                            &tenants[ti].base_agg,
+                            &cur,
+                            &self.cfg,
+                            2 * tenants[ti].partition.len(),
+                        );
+                        let d = self.controller.decide(&sample);
+                        if d.scale_up {
+                            self.chip.predictor_scale_up += 1;
+                            tenants[ti].chip.predictor_scale_up += 1;
+                        } else {
+                            self.chip.predictor_scale_out += 1;
+                            tenants[ti].chip.predictor_scale_out += 1;
+                        }
+                        tenants[ti].samples.push(sample);
+                        tenants[ti].decisions.push(d);
+                        vec![d.scale_up; tenants[ti].partition.len()]
+                    };
+                    let change = tenants[ti]
+                        .partition
+                        .iter()
+                        .zip(&target)
+                        .any(|(&ci, &f)| self.layout.is_fused(ci) != f);
+                    if change {
+                        tenants[ti].phase = TPhase::Drain { target, then_profile: false };
+                    } else {
+                        // Stays scale-out everywhere (profiling layout).
+                        tenants[ti].phase = TPhase::Running;
+                    }
+                }
+
+                // 2. Drain complete: apply the pending reconfiguration on
+                // the quiet fabric, then resume (or open the deferred
+                // profiling window).
+                if matches!(tenants[ti].phase, TPhase::Drain { .. }) && self.drained() {
+                    for c in &mut self.clusters {
+                        c.reap();
+                    }
+                    let TPhase::Drain { target, then_profile } =
+                        std::mem::replace(&mut tenants[ti].phase, TPhase::Running)
+                    else {
+                        unreachable!()
+                    };
+                    let part = tenants[ti].partition.clone();
+                    self.stream_reconfigure(&part, &target);
+                    tenants[ti].chip.reconfig_events += 1;
+                    tenants[ti].chip.reconfig_cycles += self.cfg.reconfig_cost;
+                    if then_profile {
+                        self.stream_begin_profiling(&mut tenants[ti]);
+                    } else {
+                        // Post-decision: arm the dynamic-split policy on
+                        // the tenant's fused clusters.
+                        if let Some(sp) = tenants[ti].scheme.splits() {
+                            for (i, &ci) in part.iter().enumerate() {
+                                self.clusters[ci].split_policy = target[i].then_some(sp);
+                            }
+                        }
+                        tenants[ti].phase = TPhase::Running;
+                    }
+                }
+
+                // 3. Waiting and the arrival is due (and no tenant is
+                // draining): start the next kernel.
+                let drain_now =
+                    tenants.iter().any(|t| matches!(t.phase, TPhase::Drain { .. }));
+                if matches!(tenants[ti].phase, TPhase::Waiting)
+                    && !drain_now
+                    && self.now >= streams[ti].launches[tenants[ti].kidx].arrival
+                {
+                    // Adaptive repartition at the kernel boundary: adopt
+                    // clusters freed by finished tenants.
+                    if policy == PartitionPolicy::Adaptive && !free_pool.is_empty() {
+                        for ci in free_pool.drain(..) {
+                            owner[ci] = ti;
+                            let snap = self.clusters[ci].stats.clone();
+                            self.clusters[ci].divergence_mode =
+                                if tenants[ti].scheme == Scheme::Dws {
+                                    DivergenceMode::Shadowed
+                                } else {
+                                    DivergenceMode::Serial
+                                };
+                            tenants[ti].partition.push(ci);
+                            tenants[ti].sm_base.push(snap);
+                        }
+                    }
+                    let li = launch_base[ti] + tenants[ti].kidx;
+                    launches[li].start = self.now;
+                    gens[ti] = TraceGen::new(
+                        &streams[ti].profile,
+                        &streams[ti].launches[tenants[ti].kidx].kernel,
+                    );
+                    // Every kernel re-arms split policies after its own
+                    // decision; clear leftovers from the previous kernel.
+                    let part = tenants[ti].partition.clone();
+                    for &ci in &part {
+                        self.clusters[ci].split_policy = None;
+                    }
+                    let uses_pred = tenants[ti].scheme.uses_predictor();
+                    // Predictor schemes profile on the scale-out layout;
+                    // fixed schemes run their fixed mode.
+                    let want: Vec<bool> = if uses_pred {
+                        vec![false; part.len()]
+                    } else {
+                        vec![tenants[ti].scheme == Scheme::ScaleUp; part.len()]
+                    };
+                    let change =
+                        part.iter().zip(&want).any(|(&ci, &f)| self.layout.is_fused(ci) != f);
+                    tenants[ti].next_cta = 0;
+                    tenants[ti].split_check_at = self.now + self.cfg.split_check_period;
+                    if change {
+                        tenants[ti].phase =
+                            TPhase::Drain { target: want, then_profile: uses_pred };
+                    } else if uses_pred {
+                        self.stream_begin_profiling(&mut tenants[ti]);
+                    } else {
+                        tenants[ti].phase = TPhase::Running;
+                    }
+                }
+
+                // 4. Kernel complete: flush the tenant's L1s (kernel
+                // cold-start, as in the single-application loop — the
+                // shared L2/DRAM stay warm: they serve other tenants) and
+                // advance the stream.
+                if matches!(tenants[ti].phase, TPhase::Profiling | TPhase::Running) {
+                    let total = streams[ti].launches[tenants[ti].kidx].kernel.num_ctas;
+                    if self.stream_kernel_complete(&tenants[ti], total) {
+                        let part = tenants[ti].partition.clone();
+                        for &ci in &part {
+                            self.clusters[ci].reap();
+                            self.clusters[ci].flush_caches();
+                        }
+                        let li = launch_base[ti] + tenants[ti].kidx;
+                        launches[li].finish = self.now;
+                        self.chip.kernels_completed += 1;
+                        tenants[ti].chip.kernels_completed += 1;
+                        tenants[ti].kidx += 1;
+                        if tenants[ti].kidx < streams[ti].launches.len() {
+                            tenants[ti].phase = TPhase::Waiting;
+                        } else {
+                            tenants[ti].finish = self.now;
+                            tenants[ti].phase = TPhase::Done;
+                            self.stream_close_accounting(&mut tenants[ti]);
+                            if policy == PartitionPolicy::Adaptive {
+                                let mut freed: Vec<usize> =
+                                    tenants[ti].partition.drain(..).collect();
+                                tenants[ti].sm_base.clear();
+                                free_pool.append(&mut freed);
+                                free_pool.sort_unstable();
+                            }
+                        }
+                    }
+                }
+
+                // 5. Dynamic split/fuse checks on the tenant's fused
+                // clusters (each cluster's state machine is independent).
+                if tenants[ti].scheme.splits().is_some()
+                    && !matches!(tenants[ti].phase, TPhase::Done)
+                    && tenants[ti].partition.iter().any(|&ci| self.layout.is_fused(ci))
+                    && self.now >= tenants[ti].split_check_at
+                {
+                    tenants[ti].split_check_at = self.now + self.cfg.split_check_period;
+                    let part = tenants[ti].partition.clone();
+                    let (ds, cls) = (&mut self.dynsplits, &mut self.clusters);
+                    for &ci in &part {
+                        ds[ci].check(self.now, &mut cls[ci]);
+                    }
+                }
+            }
+
+            // ---- Chip-wide Fig 19 phase sampling.
+            if self.now % PHASE_SAMPLE_PERIOD == 0 {
+                phases.push(PhaseSample {
+                    cycle: self.now,
+                    modes: self.clusters.iter().map(|c| c.mode()).collect(),
+                });
+            }
+
+            if tenants.iter().all(|t| matches!(t.phase, TPhase::Done)) {
+                break;
+            }
+            if self.now >= deadline {
+                // Safety net, as in the single-application loop.
+                if std::env::var("AMOEBA_DEBUG").is_ok() {
+                    eprintln!("[deadline] stream run at cycle {}", self.now);
+                    for (i, c) in self.clusters.iter().enumerate() {
+                        eprintln!("  cluster {i}: {}", c.debug_state());
+                    }
+                }
+                for ti in 0..n {
+                    if !matches!(tenants[ti].phase, TPhase::Done) {
+                        // Truncated launches keep start/finish at
+                        // u64::MAX: "all launches served" assertions and
+                        // the ANTT math must see the truncation, not a
+                        // fake completion at the deadline cycle.
+                        tenants[ti].finish = self.now;
+                        tenants[ti].phase = TPhase::Done;
+                        self.stream_close_accounting(&mut tenants[ti]);
+                    }
+                }
+                break;
+            }
+        }
+
+        self.fold_chip();
+        let sm = self.aggregate_sm();
+        let tenant_reports: Vec<SimReport> = tenants
+            .into_iter()
+            .zip(streams)
+            .map(|(t, s)| {
+                let mut chip = t.chip;
+                chip.cycles = t.finish;
+                SimReport {
+                    bench: s.name.clone(),
+                    scheme: t.scheme,
+                    cycles: t.finish,
+                    sm: t.sm_acc,
+                    chip,
+                    decisions: t.decisions,
+                    phases: Vec::new(),
+                    samples: t.samples,
+                }
+            })
+            .collect();
+        StreamReport {
+            tenants: tenant_reports,
+            sm,
+            chip: self.chip.clone(),
+            cycles: self.now,
+            phases,
+            launches,
+            partitions,
+            ctas_by_cluster,
         }
     }
 }
@@ -688,6 +1396,81 @@ pub fn run_benchmark_seeded_dense(
     let mut gpu = Gpu::new(cfg, scheme, controller);
     gpu.set_dense(dense);
     gpu.run(profile, seed)
+}
+
+/// Execution phase of one tenant in [`Gpu::run_streams`].
+enum TPhase {
+    /// Waiting for the next launch's arrival (or for a drain to clear).
+    Waiting,
+    /// Profiling window open (predictor schemes; probe wave resident).
+    Profiling,
+    /// Waiting for the chip to drain so `target` can be applied to the
+    /// tenant's clusters (the NoC rebuild needs a quiet fabric).
+    /// `then_profile` defers an interrupted kernel-start profiling
+    /// window to after the reconfiguration.
+    Drain { target: Vec<bool>, then_profile: bool },
+    /// Bulk of the kernel executing.
+    Running,
+    /// Stream exhausted (or truncated by the deadline).
+    Done,
+}
+
+/// Book-keeping for one tenant of a stream run.
+struct TenantRun {
+    scheme: Scheme,
+    /// Owned cluster ids (append-only under adoption).
+    partition: Vec<usize>,
+    /// Index of the current kernel in the stream.
+    kidx: usize,
+    phase: TPhase,
+    next_cta: u32,
+    profile_start: u64,
+    /// Per-cluster profiling baselines (heterogeneous path), aligned
+    /// with `partition`.
+    base_per: Vec<SmStats>,
+    /// Tenant-aggregate profiling baseline (tenant-global decisions).
+    base_agg: SmStats,
+    split_check_at: u64,
+    /// Counters accumulated over closed ownership periods.
+    sm_acc: SmStats,
+    /// Ownership-period baselines, aligned with `partition`.
+    sm_base: Vec<SmStats>,
+    /// Attributable per-tenant chip counters (kernels, reconfigurations,
+    /// predictor decisions); shared memory-side counters stay chip-wide.
+    chip: ChipStats,
+    decisions: Vec<KernelDecision>,
+    samples: Vec<MetricsSample>,
+    finish: u64,
+}
+
+/// Serve `streams` on a fresh machine with the default (native-predictor)
+/// controller. Seeds live inside the streams (see
+/// [`crate::workload::traffic_trace`]); execution mode follows
+/// `AMOEBA_DENSE`.
+pub fn serve_streams(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    policy: PartitionPolicy,
+) -> StreamReport {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller);
+    gpu.run_streams(streams, policy)
+}
+
+/// [`serve_streams`] with the execution mode pinned explicitly: `true`
+/// forces the dense cycle-by-cycle reference loop, `false` the
+/// event-horizon skip engine. Bit-identical by contract (enforced in
+/// `tests/exec_determinism.rs`).
+pub fn serve_streams_dense(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    policy: PartitionPolicy,
+    dense: bool,
+) -> StreamReport {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller);
+    gpu.set_dense(dense);
+    gpu.run_streams(streams, policy)
 }
 
 /// Simulate with a caller-supplied controller (e.g. the PJRT-HLO-backed
@@ -814,6 +1597,125 @@ mod tests {
             let skip = run_benchmark_seeded_dense(&cfg, &p, scheme, 11, false);
             assert_eq!(dense, skip, "{scheme}: skip must be bit-identical to dense");
         }
+    }
+
+    fn quick_stream(name: &str, scheme: Scheme, ctas: u32, insns: u32, seed: u64) -> KernelStream {
+        let mut p = bench(name).unwrap();
+        p.num_ctas = ctas;
+        p.insns_per_thread = insns;
+        p.num_kernels = 2;
+        KernelStream::back_to_back(format!("{name}-{scheme}"), p, scheme, seed)
+    }
+
+    #[test]
+    fn streams_complete_with_per_tenant_reports() {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let streams =
+            vec![quick_stream("CP", Scheme::Baseline, 6, 60, 0xA11), quick_stream("BFS", Scheme::Hetero, 6, 60, 0xA12)];
+        let r = serve_streams(&cfg, &streams, PartitionPolicy::Static);
+        assert_eq!(r.tenants.len(), 2);
+        for (ti, t) in r.tenants.iter().enumerate() {
+            assert_eq!(t.chip.kernels_completed, 2, "tenant {ti} kernels");
+            assert!(t.sm.thread_insns >= 6 * 256 * 60, "tenant {ti} ran its work");
+            assert!(t.cycles > 0 && t.cycles <= r.cycles, "tenant {ti} finish in range");
+            assert!(r.tenant_throughput(ti) > 0.0);
+        }
+        assert!(r.launches.iter().all(|l| l.finish != u64::MAX), "all launches served");
+        assert!(r.launches.iter().all(|l| l.start >= l.arrival));
+        // Tenant conservation: per-tenant counters sum to the chip total,
+        // and no CTA landed outside its tenant's (static) partition.
+        let sum: u64 = r.tenants.iter().map(|t| t.sm.ctas_retired).sum();
+        assert_eq!(sum, r.sm.ctas_retired, "attributed CTAs == chip CTAs");
+        let insns: u64 = r.tenants.iter().map(|t| t.sm.thread_insns).sum();
+        assert_eq!(insns, r.sm.thread_insns, "attributed insns == chip insns");
+        for (ti, per_cluster) in r.ctas_by_cluster.iter().enumerate() {
+            for (ci, &count) in per_cluster.iter().enumerate() {
+                if count > 0 {
+                    assert!(
+                        r.partitions[ti].contains(&ci),
+                        "tenant {ti} dispatched onto foreign cluster {ci}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_tenant_decides_each_owned_cluster_per_kernel() {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let streams =
+            vec![quick_stream("CP", Scheme::Baseline, 6, 60, 0xB01), quick_stream("RAY", Scheme::Hetero, 6, 60, 0xB02)];
+        let r = serve_streams(&cfg, &streams, PartitionPolicy::Static);
+        assert!(r.tenants[0].decisions.is_empty(), "baseline tenant never predicts");
+        let hetero = &r.tenants[1];
+        let owned = r.partitions[1].len();
+        assert_eq!(hetero.decisions.len(), owned * 2, "one decision per cluster per kernel");
+        assert_eq!(hetero.samples.len(), owned * 2);
+        for d in &hetero.decisions {
+            let ci = d.cluster.expect("per-cluster decisions carry ids") as usize;
+            assert!(r.partitions[1].contains(&ci), "decision for foreign cluster {ci}");
+        }
+    }
+
+    #[test]
+    fn stream_skip_matches_dense_smoke() {
+        // The full stream matrix lives in tests/exec_determinism; this is
+        // the in-crate smoke check for the multi-tenant skip contract.
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let streams =
+            vec![quick_stream("BFS", Scheme::WarpRegroup, 6, 60, 0xC01), quick_stream("CP", Scheme::Baseline, 6, 60, 0xC02)];
+        let dense = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, true);
+        let skip = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, false);
+        assert_eq!(dense, skip, "stream skip must be bit-identical to dense");
+    }
+
+    #[test]
+    fn adaptive_policy_adopts_freed_clusters() {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        // Tenant 0: one small kernel, done early. Tenant 1: two kernels,
+        // the second arriving far enough out that tenant 0 is finished
+        // before it starts.
+        let mut p0 = bench("CP").unwrap();
+        p0.num_ctas = 4;
+        p0.insns_per_thread = 40;
+        p0.num_kernels = 1;
+        let t0 = KernelStream::back_to_back("t0:CP", p0, Scheme::Baseline, 0xD01);
+        let mut p1 = bench("BFS").unwrap();
+        p1.num_ctas = 6;
+        p1.insns_per_thread = 60;
+        let mut t1 = KernelStream::back_to_back("t1:BFS", p1, Scheme::WarpRegroup, 0xD02);
+        t1.launches.truncate(2);
+        t1.launches[1].arrival = 500_000;
+        let streams = vec![t0, t1];
+        let r = serve_streams(&cfg, &streams, PartitionPolicy::Adaptive);
+        assert!(r.launches.iter().all(|l| l.finish != u64::MAX), "all launches served");
+        // Tenant 1's second kernel ran on the adopted cluster(s) too.
+        let foreign: u64 = r.ctas_by_cluster[1]
+            .iter()
+            .enumerate()
+            .filter(|(ci, _)| !r.partitions[1].contains(ci))
+            .map(|(_, &c)| c)
+            .sum();
+        assert!(foreign > 0, "adaptive policy never adopted a freed cluster");
+        // Attribution stays conservative under repartitioning.
+        let sum: u64 = r.tenants.iter().map(|t| t.sm.ctas_retired).sum();
+        assert_eq!(sum, r.sm.ctas_retired);
+    }
+
+    #[test]
+    #[should_panic(expected = "more tenants")]
+    fn too_many_tenants_is_rejected() {
+        let cfg = SystemConfig::tiny(); // 2 clusters
+        let streams = vec![
+            quick_stream("CP", Scheme::Baseline, 2, 20, 1),
+            quick_stream("CP", Scheme::Baseline, 2, 20, 2),
+            quick_stream("CP", Scheme::Baseline, 2, 20, 3),
+        ];
+        let _ = serve_streams(&cfg, &streams, PartitionPolicy::Static);
     }
 
     #[test]

@@ -22,6 +22,26 @@ pub enum StallReason {
     MemStructFull,
 }
 
+/// Every additive counter of [`SmStats`], in declaration order. A single
+/// field list feeds both [`SmStats::absorb`] and [`SmStats::delta`], so a
+/// newly added counter can never be summed by one and silently dropped by
+/// the other (the multi-tenant stream engine attributes cluster counters
+/// to tenants by ownership-period deltas and would miscount otherwise).
+macro_rules! sm_counter_fields {
+    ($apply:ident) => {
+        $apply!(
+            cycles, warp_insns, thread_insns, stall_idle, stall_memory, stall_control,
+            stall_barrier, stall_exec, stall_mem_struct, inactive_lane_cycles,
+            total_lane_cycles, branches, divergent_branches, mem_insns, st_insns, mem_requests,
+            mem_transactions, l1d_accesses, l1d_misses, l1i_accesses, l1i_misses,
+            l1c_accesses, l1c_misses, l1t_accesses, l1t_misses, mshr_merges, mshr_allocs,
+            mem_struct_stall_cycles, noc_packets, noc_flits, noc_latency_sum,
+            noc_latency_samples, ctas_retired, warps_retired, fused_cycles, split_cycles,
+            fuse_events, split_events,
+        );
+    };
+}
+
 /// Counters for one SM (or one fused SM cluster half).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SmStats {
@@ -151,16 +171,21 @@ impl SmStats {
         macro_rules! add {
             ($($f:ident),+ $(,)?) => { $( self.$f += o.$f; )+ };
         }
-        add!(
-            cycles, warp_insns, thread_insns, stall_idle, stall_memory, stall_control,
-            stall_barrier, stall_exec, stall_mem_struct, inactive_lane_cycles,
-            total_lane_cycles, branches, divergent_branches, mem_insns, st_insns, mem_requests,
-            mem_transactions, l1d_accesses, l1d_misses, l1i_accesses, l1i_misses,
-            l1c_accesses, l1c_misses, l1t_accesses, l1t_misses, mshr_merges, mshr_allocs,
-            mem_struct_stall_cycles, noc_packets, noc_flits, noc_latency_sum,
-            noc_latency_samples, ctas_retired, warps_retired, fused_cycles, split_cycles,
-            fuse_events, split_events,
-        );
+        sm_counter_fields!(add);
+    }
+
+    /// Counter-wise difference `self - base` (saturating): the counters
+    /// accumulated since `base` was snapshotted. The stream engine uses
+    /// this to attribute a cluster's activity to the tenant that owned it
+    /// over a period; `delta` then `absorb` over disjoint periods
+    /// reconstructs the total exactly.
+    pub fn delta(&self, base: &SmStats) -> SmStats {
+        let mut d = SmStats::default();
+        macro_rules! sub {
+            ($($f:ident),+ $(,)?) => { $( d.$f = self.$f.saturating_sub(base.$f); )+ };
+        }
+        sm_counter_fields!(sub);
+        d
     }
 }
 
@@ -267,6 +292,23 @@ mod tests {
         assert_eq!(a.warp_insns, 15);
         assert_eq!(a.l1d_misses, 5);
         assert_eq!(a.fused_cycles, 7);
+    }
+
+    #[test]
+    fn delta_inverts_absorb_per_field() {
+        let base = SmStats { warp_insns: 10, l1d_misses: 3, cycles: 100, ..Default::default() };
+        let mut cur = base.clone();
+        let gained =
+            SmStats { warp_insns: 7, l1d_misses: 2, cycles: 50, st_insns: 4, ..Default::default() };
+        cur.absorb(&gained);
+        assert_eq!(cur.delta(&base), gained, "delta(base) recovers exactly what was absorbed");
+        // Splitting a run into two ownership periods loses nothing.
+        let mid = cur.clone();
+        let mut cur2 = cur.clone();
+        cur2.absorb(&gained);
+        let mut acc = mid.delta(&base);
+        acc.absorb(&cur2.delta(&mid));
+        assert_eq!(acc, cur2.delta(&base));
     }
 
     #[test]

@@ -1,14 +1,17 @@
-//! Workload models: deterministic RNG, per-benchmark profiles, and the
+//! Workload models: deterministic RNG, per-benchmark profiles, the
 //! procedural trace generator that turns a profile into per-warp
-//! instruction streams.
+//! instruction streams, and multi-tenant kernel streams (arrival-timed
+//! launch sequences for the server simulation mode).
 
 mod gen;
 mod profiles;
 mod rng;
+mod stream;
 
 pub use gen::{TraceGen, CODE_FOOTPRINT_BYTES};
 pub use profiles::{all_benchmarks, BenchProfile, FIG12_SET, FIG20_SET, FIG3_SET, FIG5_SET};
 pub use rng::{hash_combine, splitmix64, Pcg32};
+pub use stream::{shrink_streams, traffic_trace, KernelStream, StreamLaunch};
 
 use crate::isa::KernelLaunch;
 

@@ -1,0 +1,185 @@
+//! Multi-tenant kernel streams: the workload side of the server-style
+//! simulation mode (`Gpu::run_streams`).
+//!
+//! A [`KernelStream`] is one tenant's ordered sequence of kernel launches
+//! — the unit a shared GPU serves when several applications are resident
+//! simultaneously. Each launch carries an *arrival cycle* so a stream can
+//! model bursty service traffic rather than back-to-back batch work; a
+//! seeded [`traffic_trace`] builds an interleaved multi-tenant trace whose
+//! arrivals, grid shapes and per-kernel instruction seeds are all pure
+//! functions of the trace seed (the determinism contract every other
+//! workload generator in this crate obeys).
+
+use crate::config::Scheme;
+use crate::isa::KernelLaunch;
+
+use super::profiles::BenchProfile;
+use super::rng::{hash_combine, Pcg32};
+
+/// One timed kernel launch inside a stream.
+#[derive(Debug, Clone)]
+pub struct StreamLaunch {
+    /// Earliest cycle the launch may start (service-queue arrival time).
+    pub arrival: u64,
+    /// The launch itself (grid shape + per-warp trace seed).
+    pub kernel: KernelLaunch,
+}
+
+/// One tenant's ordered kernel launches plus the AMOEBA scheme its
+/// partition of the chip runs under.
+#[derive(Debug, Clone)]
+pub struct KernelStream {
+    /// Tenant label (reports and tables key on it).
+    pub name: String,
+    /// Workload profile every launch of this tenant draws from.
+    pub profile: BenchProfile,
+    /// Reconfiguration scheme applied to this tenant's clusters.
+    pub scheme: Scheme,
+    /// Launches in arrival order (arrivals are nondecreasing).
+    pub launches: Vec<StreamLaunch>,
+}
+
+impl KernelStream {
+    /// A stream that launches `profile`'s kernels back to back (arrival 0
+    /// for every kernel — the batch special case).
+    pub fn back_to_back(name: impl Into<String>, profile: BenchProfile, scheme: Scheme, seed: u64) -> Self {
+        let launches = super::kernel_launches(&profile, seed)
+            .into_iter()
+            .map(|kernel| StreamLaunch { arrival: 0, kernel })
+            .collect();
+        KernelStream { name: name.into(), profile, scheme, launches }
+    }
+
+    /// Total CTAs across every launch of the stream.
+    pub fn total_ctas(&self) -> u64 {
+        self.launches.iter().map(|l| l.kernel.num_ctas as u64).sum()
+    }
+
+    /// Sanity-check the stream: a validated profile, at least one launch,
+    /// nondecreasing arrivals.
+    pub fn validate(&self) -> Result<(), String> {
+        self.profile.validate()?;
+        if self.launches.is_empty() {
+            return Err(format!("stream '{}' has no launches", self.name));
+        }
+        if self.launches.windows(2).any(|w| w[0].arrival > w[1].arrival) {
+            return Err(format!("stream '{}' arrivals not sorted", self.name));
+        }
+        Ok(())
+    }
+}
+
+/// Build a seeded multi-tenant traffic trace: tenant `i` runs
+/// `tenants[i].0` under scheme `tenants[i].1`, launching `kernels_each`
+/// kernels with pseudo-random inter-arrival gaps drawn uniformly from
+/// `[0, 2 * mean_gap]` (mean `mean_gap`). Every quantity — arrival
+/// cycles and per-kernel instruction seeds — derives from `seed`, so the
+/// same call always produces the identical trace (the stream sweeps are
+/// memoized and compared bit-for-bit across executors on that basis).
+pub fn traffic_trace(
+    tenants: &[(BenchProfile, Scheme)],
+    kernels_each: u32,
+    mean_gap: u64,
+    seed: u64,
+) -> Vec<KernelStream> {
+    tenants
+        .iter()
+        .enumerate()
+        .map(|(ti, (profile, scheme))| {
+            let mut rng = Pcg32::new(hash_combine(&[seed, ti as u64, 0x7EA2]), ti as u64);
+            let mut arrival = 0u64;
+            let launches = (0..kernels_each)
+                .map(|k| {
+                    if k > 0 && mean_gap > 0 {
+                        arrival += rng.next_u64() % (2 * mean_gap + 1);
+                    }
+                    StreamLaunch {
+                        arrival,
+                        kernel: KernelLaunch {
+                            id: k,
+                            num_ctas: profile.num_ctas,
+                            cta_threads: profile.cta_threads,
+                            insns_per_thread: profile.insns_per_thread,
+                            regs_per_thread: profile.regs_per_thread,
+                            smem_per_cta: profile.smem_per_cta,
+                            seed: hash_combine(&[seed, ti as u64, k as u64, 0x5EE7]),
+                        },
+                    }
+                })
+                .collect();
+            KernelStream {
+                name: format!("t{ti}:{}", profile.name),
+                profile: profile.clone(),
+                scheme: *scheme,
+                launches,
+            }
+        })
+        .collect()
+}
+
+/// Shrink every launch of `streams` for quick/CI runs (same knobs the
+/// figure harness applies to single-application sweeps).
+pub fn shrink_streams(streams: &mut [KernelStream], max_ctas: u32, max_insns: u32) {
+    for s in streams {
+        s.profile.num_ctas = s.profile.num_ctas.min(max_ctas);
+        s.profile.insns_per_thread = s.profile.insns_per_thread.min(max_insns);
+        for l in &mut s.launches {
+            l.kernel.num_ctas = l.kernel.num_ctas.min(max_ctas);
+            l.kernel.insns_per_thread = l.kernel.insns_per_thread.min(max_insns);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::bench;
+
+    #[test]
+    fn back_to_back_matches_kernel_launches() {
+        let p = bench("BFS").unwrap();
+        let s = KernelStream::back_to_back("t0", p.clone(), Scheme::Baseline, 9);
+        assert_eq!(s.launches.len(), p.num_kernels as usize);
+        assert!(s.launches.iter().all(|l| l.arrival == 0));
+        s.validate().unwrap();
+        let ks = crate::workload::kernel_launches(&p, 9);
+        assert_eq!(s.launches[0].kernel.seed, ks[0].seed, "same derived kernel seeds");
+    }
+
+    #[test]
+    fn traffic_trace_is_deterministic_and_sorted() {
+        let tenants = vec![
+            (bench("BFS").unwrap(), Scheme::Hetero),
+            (bench("CP").unwrap(), Scheme::Baseline),
+        ];
+        let a = traffic_trace(&tenants, 4, 1000, 7);
+        let b = traffic_trace(&tenants, 4, 1000, 7);
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            x.validate().unwrap();
+            assert_eq!(x.launches.len(), 4);
+            for (lx, ly) in x.launches.iter().zip(&y.launches) {
+                assert_eq!(lx.arrival, ly.arrival, "same seed, same arrivals");
+                assert_eq!(lx.kernel.seed, ly.kernel.seed);
+            }
+        }
+        // A different trace seed moves the arrivals and kernel seeds.
+        let c = traffic_trace(&tenants, 4, 1000, 8);
+        assert_ne!(c[0].launches[0].kernel.seed, a[0].launches[0].kernel.seed);
+        // Tenants draw independent gap sequences.
+        let gaps = |s: &KernelStream| {
+            s.launches.windows(2).map(|w| w[1].arrival - w[0].arrival).collect::<Vec<_>>()
+        };
+        assert_ne!(gaps(&a[0]), gaps(&a[1]), "independent per-tenant arrival processes");
+    }
+
+    #[test]
+    fn shrink_bounds_every_launch() {
+        let tenants = vec![(bench("RAY").unwrap(), Scheme::WarpRegroup)];
+        let mut tr = traffic_trace(&tenants, 3, 0, 1);
+        shrink_streams(&mut tr, 8, 80);
+        assert!(tr[0].launches.iter().all(|l| l.kernel.num_ctas <= 8));
+        assert!(tr[0].launches.iter().all(|l| l.kernel.insns_per_thread <= 80));
+        assert_eq!(tr[0].profile.num_ctas, 8);
+    }
+}

@@ -10,9 +10,12 @@
 //!   a cached report is valid under either mode).
 
 use amoeba_gpu::config::{Scheme, SystemConfig};
-use amoeba_gpu::harness::{SimJob, SweepExec};
-use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_seeded_dense, SimReport};
-use amoeba_gpu::workload::bench;
+use amoeba_gpu::harness::{SimJob, StreamJob, SweepExec};
+use amoeba_gpu::sim::gpu::{
+    run_benchmark_seeded, run_benchmark_seeded_dense, serve_streams_dense, PartitionPolicy,
+    SimReport, StreamReport,
+};
+use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace, KernelStream};
 
 fn grid() -> (SystemConfig, Vec<SimJob>) {
     let mut cfg = SystemConfig::tiny();
@@ -191,6 +194,98 @@ fn sweep_cache_entries_match_the_dense_reference() {
         let reference = run_benchmark_seeded_dense(&job.cfg, &job.profile, job.scheme, job.seed, true);
         let label = format!("cached {} under {}", job.profile.name, job.scheme);
         assert_reports_identical(&reference, r, &label);
+    }
+}
+
+/// Multi-tenant server trace for the stream determinism contracts: a
+/// heterogeneous (per-cluster-decision) tenant, a warp-regrouping tenant
+/// whose lowered thresholds keep a DynSplit active, and a compute-dense
+/// baseline tenant — on one chip with interleaved arrivals.
+fn stream_grid() -> (SystemConfig, Vec<KernelStream>) {
+    let mut cfg = SystemConfig::tiny();
+    cfg.num_sms = 8; // 4 clusters for 3 tenants
+    cfg.num_mcs = 4;
+    cfg.max_cycles = 1_500_000;
+    // DynSplit-active: low threshold, short check/rebalance periods.
+    cfg.split_threshold = 0.05;
+    cfg.split_check_period = 128;
+    cfg.rebalance_period = 256;
+    let tenants = [
+        (bench("BFS").unwrap(), Scheme::Hetero),
+        (bench("RAY").unwrap(), Scheme::WarpRegroup),
+        (bench("CP").unwrap(), Scheme::Baseline),
+    ];
+    let mut streams = traffic_trace(&tenants, 2, 5_000, 0xD37);
+    shrink_streams(&mut streams, 6, 80);
+    (cfg, streams)
+}
+
+/// Field-complete bitwise comparison of two stream reports: the derived
+/// `PartialEq` covers every tenant report, launch record, phase sample
+/// and placement ledger; per-tenant decision probabilities and metric
+/// features are additionally pinned at the bit level.
+fn assert_stream_reports_identical(a: &StreamReport, b: &StreamReport, label: &str) {
+    assert_eq!(a.cycles, b.cycles, "{label}: total cycles");
+    assert_eq!(a.sm, b.sm, "{label}: chip SmStats");
+    assert_eq!(a.chip, b.chip, "{label}: chip ChipStats");
+    assert_eq!(a.launches, b.launches, "{label}: launch records");
+    assert_eq!(a.phases, b.phases, "{label}: phase trace");
+    assert_eq!(a.ctas_by_cluster, b.ctas_by_cluster, "{label}: placement ledger");
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{label}: tenant count");
+    for (ti, (x, y)) in a.tenants.iter().zip(&b.tenants).enumerate() {
+        assert_reports_identical(x, y, &format!("{label}: tenant {ti}"));
+    }
+    assert_eq!(a, b, "{label}: full stream report");
+}
+
+/// The event-horizon engine vs the dense loop on concurrent multi-kernel
+/// streams: bit-identical `StreamReport`s under both partition policies,
+/// with a mixed Hetero layout and an active DynSplit in one tenant.
+#[test]
+fn stream_cycle_skip_matches_dense() {
+    let (cfg, streams) = stream_grid();
+    for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
+        let label = format!("streams under {policy}");
+        let dense = serve_streams_dense(&cfg, &streams, policy, true);
+        let skip = serve_streams_dense(&cfg, &streams, policy, false);
+        assert!(
+            dense.launches.iter().all(|l| l.finish != u64::MAX),
+            "{label}: all launches served"
+        );
+        // The Hetero tenant must actually have exercised the per-cluster
+        // path, or this test pins nothing interesting.
+        assert!(
+            dense.tenants[0].decisions.iter().all(|d| d.cluster.is_some())
+                && !dense.tenants[0].decisions.is_empty(),
+            "{label}: hetero tenant decided per cluster"
+        );
+        assert_stream_reports_identical(&dense, &skip, &label);
+    }
+}
+
+/// Stream sweeps through the executor: parallel fan-out must equal the
+/// serial path bit for bit, and re-running a batch must be pure cache
+/// hits (the same contracts the single-application sweep obeys).
+#[test]
+fn stream_sweep_parallel_matches_serial() {
+    let (cfg, streams) = stream_grid();
+    let jobs: Vec<StreamJob> = [PartitionPolicy::Static, PartitionPolicy::Adaptive]
+        .into_iter()
+        .map(|p| StreamJob::new(cfg.clone(), streams.clone(), p))
+        .collect();
+    let par = SweepExec::new(4);
+    let ser = SweepExec::serial();
+    let a = par.run_stream_batch(jobs.clone());
+    let b = ser.run_stream_batch(jobs.clone());
+    for ((x, y), job) in a.iter().zip(&b).zip(&jobs) {
+        assert_stream_reports_identical(x, y, &format!("stream sweep under {}", job.policy));
+    }
+    let (_, misses_before) = par.cache_stats();
+    let again = par.run_stream_batch(jobs);
+    let (_, misses_after) = par.cache_stats();
+    assert_eq!(misses_before, misses_after, "re-running the stream batch must not simulate");
+    for (x, y) in a.iter().zip(&again) {
+        assert!(std::sync::Arc::ptr_eq(x, y), "cached Arc must be returned");
     }
 }
 

@@ -1,0 +1,259 @@
+//! Golden-report regression suite: committed fingerprints of simulator
+//! output that future refactors must reproduce **exactly**.
+//!
+//! `exec_determinism.rs` proves the simulator agrees with *itself*
+//! (skip == dense, parallel == serial) — it cannot catch a refactor that
+//! shifts results in both modes at once. This suite pins absolute
+//! behaviour: a small matrix of benchmarks x all schemes (plus two
+//! multi-tenant stream runs) is simulated with fixed seeds and compared
+//! against goldens committed under `tests/goldens/`.
+//!
+//! Fingerprint format: a small JSON document with human-readable
+//! headline fields (cycles, stall breakdown, cache counters, decisions)
+//! for diff-localisation, plus `report_fnv` — an FNV-1a hash over the
+//! full `Debug` rendering of the report, so **every** field participates
+//! automatically (a newly added counter can never silently escape the
+//! golden, the same property the sweep-cache fingerprints rely on).
+//!
+//! Blessing:
+//! * `AMOEBA_BLESS=1 cargo test --test golden_reports` rewrites every
+//!   golden from the current behaviour (then commit the diff).
+//! * A *missing* golden is written on first run (loudly) and the test
+//!   passes — this is how the initial goldens materialise on the first
+//!   toolchain-equipped host; commit them. A *present but different*
+//!   golden always fails.
+//!
+//! The suite runs under both execution modes in CI (`ci.sh` repeats it
+//! with `AMOEBA_DENSE=1`); the committed goldens are mode-independent by
+//! the skip==dense contract.
+
+use std::path::PathBuf;
+
+use amoeba_gpu::config::{Scheme, SystemConfig};
+use amoeba_gpu::sim::gpu::{
+    run_benchmark_seeded, serve_streams, PartitionPolicy, SimReport, StreamReport,
+};
+use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace};
+
+const SEED: u64 = 0x601D;
+
+/// FNV-1a (mirrors `harness::exec`; kept local so the test pins its own
+/// definition).
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("goldens")
+}
+
+fn push_kv(out: &mut String, key: &str, val: impl std::fmt::Display) {
+    out.push_str(&format!("  \"{key}\": {val},\n"));
+}
+
+/// Stable fingerprint document for one `SimReport`.
+fn fingerprint(r: &SimReport) -> String {
+    let mut s = String::from("{\n");
+    push_kv(&mut s, "bench", format!("\"{}\"", r.bench));
+    push_kv(&mut s, "scheme", format!("\"{}\"", r.scheme));
+    push_kv(&mut s, "cycles", r.cycles);
+    push_kv(&mut s, "ipc_bits", format!("\"{:#018x}\"", r.ipc().to_bits()));
+    // Stall breakdown.
+    push_kv(&mut s, "stall_idle", r.sm.stall_idle);
+    push_kv(&mut s, "stall_memory", r.sm.stall_memory);
+    push_kv(&mut s, "stall_control", r.sm.stall_control);
+    push_kv(&mut s, "stall_barrier", r.sm.stall_barrier);
+    push_kv(&mut s, "stall_exec", r.sm.stall_exec);
+    push_kv(&mut s, "stall_mem_struct", r.sm.stall_mem_struct);
+    // Cache behaviour (counters, not rates: exact by construction).
+    push_kv(&mut s, "l1d", format!("[{}, {}]", r.sm.l1d_accesses, r.sm.l1d_misses));
+    push_kv(&mut s, "l1i", format!("[{}, {}]", r.sm.l1i_accesses, r.sm.l1i_misses));
+    push_kv(&mut s, "l1c", format!("[{}, {}]", r.sm.l1c_accesses, r.sm.l1c_misses));
+    push_kv(&mut s, "l2", format!("[{}, {}]", r.chip.l2_accesses, r.chip.l2_misses));
+    push_kv(&mut s, "mshr", format!("[{}, {}]", r.sm.mshr_allocs, r.sm.mshr_merges));
+    push_kv(&mut s, "dram_rw", format!("[{}, {}]", r.chip.dram_reads, r.chip.dram_writes));
+    push_kv(&mut s, "insns", format!("[{}, {}]", r.sm.warp_insns, r.sm.thread_insns));
+    push_kv(&mut s, "retired", format!("[{}, {}]", r.sm.ctas_retired, r.sm.warps_retired));
+    push_kv(
+        &mut s,
+        "mode_cycles",
+        format!("[{}, {}]", r.sm.fused_cycles, r.sm.split_cycles),
+    );
+    push_kv(
+        &mut s,
+        "events",
+        format!(
+            "[{}, {}, {}]",
+            r.sm.fuse_events, r.sm.split_events, r.chip.reconfig_events
+        ),
+    );
+    // Controller decisions, probability pinned at the bit level.
+    let decisions: Vec<String> = r
+        .decisions
+        .iter()
+        .map(|d| {
+            format!(
+                "{{\"cluster\": {}, \"scale_up\": {}, \"p_bits\": \"{:#018x}\"}}",
+                d.cluster.map(|c| c as i64).unwrap_or(-1),
+                d.scale_up,
+                d.probability.to_bits()
+            )
+        })
+        .collect();
+    s.push_str(&format!("  \"decisions\": [{}],\n", decisions.join(", ")));
+    push_kv(&mut s, "phases", r.phases.len());
+    push_kv(&mut s, "samples", r.samples.len());
+    // Field-complete hash: the Debug rendering covers every counter,
+    // decision, phase sample, and metric sample.
+    s.push_str(&format!("  \"report_fnv\": \"{:#018x}\"\n}}\n", fnv1a(&format!("{r:?}"))));
+    s
+}
+
+/// Stable fingerprint document for one multi-tenant `StreamReport`.
+fn fingerprint_stream(r: &StreamReport) -> String {
+    let mut s = String::from("{\n");
+    push_kv(&mut s, "cycles", r.cycles);
+    push_kv(&mut s, "kernels", r.chip.kernels_completed);
+    push_kv(&mut s, "reconfigs", r.chip.reconfig_events);
+    push_kv(&mut s, "l2", format!("[{}, {}]", r.chip.l2_accesses, r.chip.l2_misses));
+    push_kv(&mut s, "chip_ctas", r.sm.ctas_retired);
+    let tenants: Vec<String> = r
+        .tenants
+        .iter()
+        .map(|t| {
+            format!(
+                "{{\"name\": \"{}\", \"finish\": {}, \"insns\": {}, \"ctas\": {}, \"decisions\": {}}}",
+                t.bench, t.cycles, t.sm.thread_insns, t.sm.ctas_retired, t.decisions.len()
+            )
+        })
+        .collect();
+    s.push_str(&format!("  \"tenants\": [{}],\n", tenants.join(", ")));
+    let launches: Vec<String> = r
+        .launches
+        .iter()
+        .map(|l| format!("[{}, {}, {}, {}]", l.tenant, l.kernel, l.start, l.finish))
+        .collect();
+    s.push_str(&format!("  \"launches\": [{}],\n", launches.join(", ")));
+    s.push_str(&format!("  \"report_fnv\": \"{:#018x}\"\n}}\n", fnv1a(&format!("{r:?}"))));
+    s
+}
+
+/// Compare `actual` against the committed golden `name.json`, blessing
+/// when asked (`AMOEBA_BLESS=1`) or when the golden does not exist yet.
+fn check_golden(name: &str, actual: &str) {
+    let dir = goldens_dir();
+    let path = dir.join(format!("{name}.json"));
+    let bless = std::env::var("AMOEBA_BLESS").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    if bless || !path.exists() {
+        std::fs::create_dir_all(&dir).expect("create goldens dir");
+        std::fs::write(&path, actual).expect("write golden");
+        eprintln!(
+            "[golden] {} {} — commit it",
+            if bless { "re-blessed" } else { "created missing golden" },
+            path.display()
+        );
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read golden");
+    if expected != actual {
+        let diff: String = expected
+            .lines()
+            .zip(actual.lines())
+            .filter(|(e, a)| e != a)
+            .map(|(e, a)| format!("  - {e}\n  + {a}\n"))
+            .collect();
+        panic!(
+            "golden mismatch for {name} (first differing lines below).\n\
+             If the change is intentional, re-bless with AMOEBA_BLESS=1 and commit.\n{diff}"
+        );
+    }
+}
+
+fn quick_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    cfg
+}
+
+/// >= 3 profiles x all 7 schemes (incl. Hetero), fixed seed, quick
+/// configs — the absolute-behaviour pin for the single-application path.
+#[test]
+fn golden_single_application_matrix() {
+    let cfg = quick_cfg();
+    for name in ["CP", "BFS", "RAY"] {
+        let mut p = bench(name).unwrap();
+        p.num_ctas = 8;
+        p.insns_per_thread = 80;
+        p.num_kernels = 1;
+        for scheme in Scheme::ALL {
+            let r = run_benchmark_seeded(&cfg, &p, scheme, SEED);
+            assert_eq!(r.chip.kernels_completed, 1, "{name} under {scheme} must complete");
+            check_golden(&format!("{}_{}", name.to_lowercase(), scheme), &fingerprint(&r));
+        }
+    }
+}
+
+/// Multi-tenant stream runs under both partition policies.
+#[test]
+fn golden_stream_runs() {
+    // tiny() has 2 clusters; widen to 8 SMs so three tenants fit with a
+    // cluster to spare.
+    let mut cfg = quick_cfg();
+    cfg.num_sms = 8;
+    cfg.num_mcs = 4;
+    let tenants = vec![
+        (bench("BFS").unwrap(), Scheme::Hetero),
+        (bench("RAY").unwrap(), Scheme::WarpRegroup),
+        (bench("CP").unwrap(), Scheme::Baseline),
+    ];
+    let mut streams = traffic_trace(&tenants, 2, 10_000, SEED);
+    shrink_streams(&mut streams, 6, 60);
+    for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
+        let r = serve_streams(&cfg, &streams, policy);
+        assert!(
+            r.launches.iter().all(|l| l.finish != u64::MAX),
+            "{policy}: all launches must be served"
+        );
+        check_golden(&format!("stream_{policy}"), &fingerprint_stream(&r));
+    }
+}
+
+/// The fingerprint must be sensitive to single-counter perturbations —
+/// the property that makes a deliberate one-line change (e.g. an extra
+/// cache-clock bump) fail the suite.
+#[test]
+fn fingerprint_detects_single_counter_perturbations() {
+    let cfg = quick_cfg();
+    let mut p = bench("CP").unwrap();
+    p.num_ctas = 4;
+    p.insns_per_thread = 40;
+    p.num_kernels = 1;
+    let r = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, SEED);
+    let base = fingerprint(&r);
+    assert_eq!(base, fingerprint(&r), "fingerprint is a pure function");
+
+    let mut bumped = r.clone();
+    bumped.chip.l2_accesses += 1;
+    assert_ne!(base, fingerprint(&bumped), "chip counter bump must change the fingerprint");
+
+    let mut stalled = r.clone();
+    stalled.sm.stall_memory += 1;
+    assert_ne!(base, fingerprint(&stalled), "stall bump must change the fingerprint");
+
+    // Even a field the headline section does not print is caught by the
+    // Debug-rendering hash.
+    let mut subtle = r.clone();
+    subtle.sm.noc_latency_sum += 1;
+    assert_ne!(base, fingerprint(&subtle), "report_fnv must cover every field");
+
+    if let Some(d) = r.decisions.first() {
+        let mut flipped = r.clone();
+        flipped.decisions[0].probability = d.probability + 1e-12;
+        assert_ne!(base, fingerprint(&flipped), "probability bits are pinned");
+    }
+}

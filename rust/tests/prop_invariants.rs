@@ -3,14 +3,18 @@
 //! offline vendored registry, so shrinking is replaced by printing the
 //! failing seed — rerun with that seed to reproduce).
 
-use amoeba_gpu::config::SystemConfig;
+use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::isa::{AccessPattern, ActiveMask};
+use amoeba_gpu::sim::core::{ClusterMode, SmCluster};
+use amoeba_gpu::sim::gpu::{serve_streams, PartitionPolicy};
 use amoeba_gpu::sim::mem::{
     coalesce, coalesce_fused, Access, Cache, DramRequest, MemPartition, MemoryController,
 };
 use amoeba_gpu::sim::noc::{Noc, Packet, Payload, Subnet};
 use amoeba_gpu::sim::NextEvent;
-use amoeba_gpu::workload::Pcg32;
+use amoeba_gpu::workload::{
+    bench, kernel_launches, shrink_streams, traffic_trace, Pcg32, TraceGen,
+};
 
 /// Randomised property: coalescing never produces more transactions than
 /// active lanes, never zero for a non-empty mask, and is deterministic.
@@ -381,6 +385,271 @@ fn prop_partition_next_event_never_later_than_first_change() {
                 }
             }
         }
+    }
+}
+
+/// Randomised tenant-conservation property over multi-tenant stream
+/// runs: every CTA a tenant dispatches lands on a cluster inside its
+/// partition, per-tenant attributed counters sum exactly to the chip
+/// totals, and dispatched == retired == the trace's CTA count.
+#[test]
+fn prop_stream_tenant_conservation() {
+    let names = ["CP", "BFS", "RAY", "SM", "LIB"];
+    let schemes = Scheme::ALL;
+    let mut rng = Pcg32::new(0x7E4A, 11);
+    for case in 0..5 {
+        let mut cfg = SystemConfig::tiny();
+        cfg.num_sms = 8; // 4 clusters
+        cfg.num_mcs = 4;
+        cfg.max_cycles = 1_500_000;
+        let n_tenants = 2 + rng.next_bounded(2) as usize; // 2..=3
+        let tenants: Vec<_> = (0..n_tenants)
+            .map(|_| {
+                let p = bench(names[rng.next_bounded(names.len() as u32) as usize]).unwrap();
+                let s = schemes[rng.next_bounded(schemes.len() as u32) as usize];
+                (p, s)
+            })
+            .collect();
+        let kernels_each = 1 + rng.next_bounded(2);
+        let mean_gap = rng.next_bounded(5_000) as u64;
+        let seed = rng.next_u64();
+        let mut streams = traffic_trace(&tenants, kernels_each, mean_gap, seed);
+        shrink_streams(&mut streams, 4, 40);
+        let label = format!(
+            "case {case}: {:?} x{kernels_each} gap {mean_gap} seed {seed:#x}",
+            streams.iter().map(|s| s.name.as_str()).collect::<Vec<_>>()
+        );
+
+        let r = serve_streams(&cfg, &streams, PartitionPolicy::Static);
+        assert!(
+            r.launches.iter().all(|l| l.finish != u64::MAX),
+            "{label}: every launch served"
+        );
+        assert!(r.launches.iter().all(|l| l.start >= l.arrival), "{label}: causal starts");
+
+        // Chip-total conservation of attributed counters.
+        let ctas: u64 = r.tenants.iter().map(|t| t.sm.ctas_retired).sum();
+        assert_eq!(ctas, r.sm.ctas_retired, "{label}: CTA attribution");
+        let insns: u64 = r.tenants.iter().map(|t| t.sm.thread_insns).sum();
+        assert_eq!(insns, r.sm.thread_insns, "{label}: insn attribution");
+        let kernels: u64 = r.tenants.iter().map(|t| t.chip.kernels_completed).sum();
+        assert_eq!(kernels, r.chip.kernels_completed, "{label}: kernel counts");
+
+        // Placement: no CTA outside its tenant's (static) partition, and
+        // per-tenant dispatched == retired == the trace's CTA count.
+        for (ti, per_cluster) in r.ctas_by_cluster.iter().enumerate() {
+            let dispatched: u64 = per_cluster.iter().sum();
+            assert_eq!(dispatched, streams[ti].total_ctas(), "{label}: tenant {ti} dispatched");
+            assert_eq!(
+                dispatched, r.tenants[ti].sm.ctas_retired,
+                "{label}: tenant {ti} dispatched == retired"
+            );
+            for (ci, &count) in per_cluster.iter().enumerate() {
+                assert!(
+                    count == 0 || r.partitions[ti].contains(&ci),
+                    "{label}: tenant {ti} CTA on foreign cluster {ci}"
+                );
+            }
+        }
+        // Tenant finishes bound the chip clock.
+        let last = r.tenants.iter().map(|t| t.cycles).max().unwrap();
+        assert_eq!(last, r.cycles, "{label}: chip stops when the last tenant finishes");
+    }
+}
+
+/// Horizon tightness for the multi-stream quiescence probe: a two-tenant
+/// mini-chip (two clusters running *different* kernels, one shared NoC,
+/// shared memory partitions — the components `Gpu::run_streams` folds
+/// with `min_with`) is drained by walking promised horizons. Within a
+/// promised window no cluster may make observable progress
+/// ([`SmCluster::progress_probe`]), no packet may move, and no DRAM
+/// access may be scheduled. (Earlier-than-needed horizons are allowed —
+/// the loop just skips less.)
+#[test]
+fn prop_stream_quiescence_horizon_tightness() {
+    let mut rng = Pcg32::new(0x5713, 12);
+    for case in 0..8 {
+        let cfg = SystemConfig::tiny(); // 2 clusters, 2 MCs
+        let benches = ["CP", "BFS", "MUM", "RAY"];
+        let pa = bench(benches[rng.next_bounded(4) as usize]).unwrap();
+        let pb = bench(benches[rng.next_bounded(4) as usize]).unwrap();
+        let seed_a = rng.next_u64();
+        let seed_b = rng.next_u64();
+        let mut shrink = |mut p: amoeba_gpu::workload::BenchProfile| {
+            p.num_ctas = 2;
+            p.insns_per_thread = 30 + rng.next_bounded(30);
+            p
+        };
+        let (pa, pb) = (shrink(pa), shrink(pb));
+        let ka = kernel_launches(&pa, seed_a)[0].clone();
+        let kb = kernel_launches(&pb, seed_b)[0].clone();
+        let gens = [TraceGen::new(&pa, &ka), TraceGen::new(&pb, &kb)];
+
+        // Two private clusters: cluster 0 at nodes 0/1, cluster 1 at
+        // nodes 2/3, MCs at nodes 4/5 (the all-private node map).
+        let mut clusters =
+            [SmCluster::new(0, &cfg, ClusterMode::PrivatePair), SmCluster::new(1, &cfg, ClusterMode::PrivatePair)];
+        let nodes_of = [[0usize, 1], [2, 3]];
+        let mut noc = Noc::with_nodes(&cfg, 4 + cfg.num_mcs);
+        let mut partitions: Vec<MemPartition> =
+            (0..cfg.num_mcs).map(|_| MemPartition::new(&cfg)).collect();
+        let mut reply_retry: Vec<std::collections::VecDeque<amoeba_gpu::sim::mem::PartitionReply>> =
+            (0..cfg.num_mcs).map(|_| std::collections::VecDeque::new()).collect();
+        let mut req_backlog: Vec<std::collections::VecDeque<Packet>> =
+            (0..cfg.num_mcs).map(|_| std::collections::VecDeque::new()).collect();
+        clusters[0].dispatch_cta(&ka, 0, &gens[0]);
+        clusters[0].dispatch_cta(&ka, 1, &gens[0]);
+        clusters[1].dispatch_cta(&kb, 0, &gens[1]);
+        clusters[1].dispatch_cta(&kb, 1, &gens[1]);
+
+        // One dense mini-chip cycle, mirroring `Gpu::tick` (requests into
+        // partitions, replies back to the owning cluster).
+        type RetryQ = Vec<std::collections::VecDeque<amoeba_gpu::sim::mem::PartitionReply>>;
+        type BacklogQ = Vec<std::collections::VecDeque<Packet>>;
+        let offer = |partitions: &mut Vec<MemPartition>, mc: usize, now: u64, pkt: &Packet| {
+            let Payload::MemRequest { line, requester, is_write } = pkt.payload else {
+                return true;
+            };
+            let tag = (pkt.src as u64) << 32 | requester as u64;
+            partitions[mc].request(now, line, tag, is_write, cfg.l2_hit_latency as u64)
+        };
+        let mut tick = |now: u64,
+                        clusters: &mut [SmCluster; 2],
+                        noc: &mut Noc,
+                        partitions: &mut Vec<MemPartition>,
+                        reply_retry: &mut RetryQ,
+                        req_backlog: &mut BacklogQ| {
+            for ci in 0..2 {
+                let gen = &gens[ci];
+                clusters[ci].tick(now, noc, nodes_of[ci], gen);
+            }
+            noc.tick(now);
+            for mc in 0..partitions.len() {
+                let node = 4 + mc;
+                // Retry the backlog first, then bounded new ejections —
+                // the same discipline `Gpu::tick` applies.
+                while let Some(pkt) = req_backlog[mc].front().copied() {
+                    if offer(partitions, mc, now, &pkt) {
+                        req_backlog[mc].pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                while req_backlog[mc].len() < 16 {
+                    let Some(pkt) = noc.eject(Subnet::Request, node) else { break };
+                    if !offer(partitions, mc, now, &pkt) {
+                        req_backlog[mc].push_back(pkt);
+                    }
+                }
+                let mut out = Vec::new();
+                partitions[mc].tick(now, &mut out, 2);
+                out.extend(reply_retry[mc].drain(..));
+                for r in out {
+                    let dst = (r.tag >> 32) as usize;
+                    let flits =
+                        if r.is_write { 1 } else { cfg.flits_for(cfg.line_bytes + 16) as u32 };
+                    let pkt = Packet {
+                        src: node,
+                        dst,
+                        flits,
+                        born: now,
+                        payload: Payload::MemReply {
+                            line: r.line,
+                            requester: (r.tag & 0xFFFF_FFFF) as u32,
+                            is_write: r.is_write,
+                        },
+                    };
+                    if !noc.inject(Subnet::Reply, pkt) {
+                        reply_retry[mc].push_back(r);
+                    }
+                }
+            }
+            for node in 0..4 {
+                while let Some(pkt) = noc.eject(Subnet::Reply, node) {
+                    if let Payload::MemReply { line, is_write, .. } = pkt.payload {
+                        let ci = if node < 2 { 0 } else { 1 };
+                        clusters[ci].on_reply(now, line, is_write);
+                    }
+                }
+            }
+        };
+
+        let mut t = 0u64;
+        let mut guard = 0u64;
+        loop {
+            guard += 1;
+            assert!(guard < 400_000, "case {case}: mini-chip never drained");
+            let done = clusters.iter().all(|c| c.idle())
+                && !noc.busy()
+                && partitions.iter().all(|p| !p.busy())
+                && reply_retry.iter().all(|q| q.is_empty())
+                && req_backlog.iter().all(|q| q.is_empty());
+            if done {
+                break;
+            }
+            // The multi-stream quiescence probe: min over both tenants'
+            // clusters and the shared components (what `Gpu::try_skip`
+            // computes across tenants). Retry queues pending => live.
+            let mut ev = NextEvent::Idle;
+            for ci in 0..2 {
+                ev = ev.min_with(clusters[ci].next_event(t, &gens[ci]));
+            }
+            ev = ev.min_with(noc.next_event(t));
+            for p in &partitions {
+                ev = ev.min_with(p.next_event(t));
+            }
+            if reply_retry.iter().any(|q| !q.is_empty())
+                || req_backlog.iter().any(|q| !q.is_empty())
+            {
+                // Queued retries are serviced every cycle: live, exactly
+                // as `Gpu::try_skip` treats them.
+                ev = NextEvent::Progress;
+            }
+            match ev {
+                NextEvent::Progress => {
+                    tick(t, &mut clusters, &mut noc, &mut partitions, &mut reply_retry, &mut req_backlog);
+                    t += 1;
+                }
+                NextEvent::Idle => {
+                    panic!("case {case}: probe says Idle but the mini-chip is not drained");
+                }
+                NextEvent::At(h) => {
+                    assert!(h > t, "case {case}: horizon {h} not in the future of {t}");
+                    while t < h {
+                        let before = (
+                            clusters[0].progress_probe(),
+                            clusters[1].progress_probe(),
+                            noc.flits_routed,
+                            noc.packets_delivered,
+                            partitions
+                                .iter()
+                                .map(|p| p.mc.reads + p.mc.writes + p.mc.row_hits + p.mc.row_misses)
+                                .sum::<u64>(),
+                        );
+                        tick(t, &mut clusters, &mut noc, &mut partitions, &mut reply_retry, &mut req_backlog);
+                        let after = (
+                            clusters[0].progress_probe(),
+                            clusters[1].progress_probe(),
+                            noc.flits_routed,
+                            noc.packets_delivered,
+                            partitions
+                                .iter()
+                                .map(|p| p.mc.reads + p.mc.writes + p.mc.row_hits + p.mc.row_misses)
+                                .sum::<u64>(),
+                        );
+                        assert_eq!(
+                            before, after,
+                            "case {case}: observable progress at {t}, before promised horizon {h}"
+                        );
+                        t += 1;
+                    }
+                }
+            }
+        }
+        // Both tenants ran to completion through the shared fabric.
+        assert!(clusters[0].stats.thread_insns > 0 && clusters[1].stats.thread_insns > 0);
+        assert_eq!(clusters[0].completed_ctas(), 2, "case {case}");
+        assert_eq!(clusters[1].completed_ctas(), 2, "case {case}");
     }
 }
 
