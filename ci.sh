@@ -57,6 +57,15 @@ echo "== determinism suite (AMOEBA_DENSE=1) =="
 # escape hatch pins every env-driven run (figures, sweeps) to dense.
 run_timed "exec_determinism (dense)" env AMOEBA_DENSE=1 cargo test -q --test exec_determinism
 
+echo "== active-set determinism pass (default scheduler, dense cross-check) =="
+# The per-component active-set scheduler is the default execution mode;
+# this pass pins goldens + determinism explicitly under it (AMOEBA_DENSE
+# unset/0) so the cross-check against the AMOEBA_DENSE=1 passes above is
+# recorded as its own timed CI step, not an accident of the default env.
+run_timed "golden_reports (active-set)" env AMOEBA_DENSE=0 cargo test -q --test golden_reports
+run_timed "exec_determinism (active-set)" env AMOEBA_DENSE=0 cargo test -q --test exec_determinism
+run_timed "prop_invariants (active-set)" env AMOEBA_DENSE=0 cargo test -q --test prop_invariants
+
 # `status --porcelain` reports both modified tracked goldens and brand-new
 # (untracked) ones.
 if [ -n "$(git status --porcelain -- rust/tests/goldens 2>/dev/null)" ]; then
@@ -92,7 +101,19 @@ grep -q '"server_sweep": {' BENCH_sweep.json || {
     echo "ERROR: BENCH_sweep.json has no measured server_sweep record" >&2
     exit 1
 }
-echo "acceptance: cycle_skip_best ${best}x >= 2x, server_sweep recorded"
+# Active-set acceptance: the one-hot-tenant (partial-quiescence) profile
+# must be >= 1.5x over the dense loop — the regime the whole-chip
+# cycle-skip bar cannot measure.
+da=$(sed -n 's/.*"dense_active_speedup": \([0-9.]*\).*/\1/p' BENCH_sweep.json | head -1)
+if [ -z "$da" ]; then
+    echo "ERROR: BENCH_sweep.json has no measured dense_active_speedup" >&2
+    exit 1
+fi
+awk -v d="$da" 'BEGIN { exit !(d >= 1.5) }' || {
+    echo "ERROR: dense_active_speedup = ${da}x, below the 1.5x acceptance bar" >&2
+    exit 1
+}
+echo "acceptance: cycle_skip_best ${best}x >= 2x, dense_active ${da}x >= 1.5x, server_sweep recorded"
 
 echo "== per-step timing summary =="
 printf '%s' "$TIMING_SUMMARY"

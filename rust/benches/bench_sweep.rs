@@ -21,7 +21,9 @@ use amoeba_gpu::runtime::serve;
 use amoeba_gpu::sim::gpu::{
     run_benchmark_seeded, run_benchmark_seeded_dense, serve_streams_dense, PartitionPolicy,
 };
-use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace, BenchProfile, FIG12_SET};
+use amoeba_gpu::workload::{
+    bench, shrink_streams, traffic_trace, BenchProfile, KernelStream, FIG12_SET,
+};
 
 /// Mirror of the harness quick-mode shrink + base config (kept in sync
 /// with `harness::figures`).
@@ -147,6 +149,52 @@ fn main() {
         best_skip.0, best_skip.1
     );
 
+    // -------- Active-set on a PARTIALLY busy chip: one hot tenant on a
+    // wide machine whose other tenants finished immediately. This is the
+    // regime `cycle_skip*` cannot measure — the hot tenant keeps the
+    // chip from ever being *fully* quiescent for long, so the old
+    // whole-chip skip degenerates toward dense ticking, while the
+    // active-set engine parks every idle cluster/partition/router
+    // individually and the cycle cost tracks the live work. Dense vs
+    // active wall-clock, bit-identity asserted.
+    eprintln!("[bench_sweep] active-set vs dense on a one-hot-tenant chip:");
+    let mut da_cfg = quick_cfg();
+    da_cfg.num_sms = 16; // 8 clusters: 7 of them idle once the CP tenants drain
+    da_cfg.num_mcs = 8;
+    let mut hot = bench("BFS").unwrap();
+    hot.num_ctas = 12;
+    hot.insns_per_thread = 120;
+    hot.num_kernels = 4;
+    let mut da_streams =
+        vec![KernelStream::back_to_back("hot:BFS", hot, Scheme::Baseline, SEED)];
+    let mut idle = bench("CP").unwrap();
+    idle.num_ctas = 2;
+    idle.insns_per_thread = 24;
+    idle.num_kernels = 1;
+    for i in 0..3 {
+        da_streams.push(KernelStream::back_to_back(
+            format!("idle{i}:CP"),
+            idle.clone(),
+            Scheme::Baseline,
+            SEED + 1 + i as u64,
+        ));
+    }
+    let t_dd = Instant::now();
+    let da_dense = serve_streams_dense(&da_cfg, &da_streams, PartitionPolicy::Static, true);
+    let da_dense_s = t_dd.elapsed().as_secs_f64();
+    let t_da = Instant::now();
+    let da_active = serve_streams_dense(&da_cfg, &da_streams, PartitionPolicy::Static, false);
+    let da_active_s = t_da.elapsed().as_secs_f64();
+    assert_eq!(da_dense, da_active, "one-hot-tenant: active-set must be bit-identical to dense");
+    let dense_active_speedup = da_dense_s / da_active_s.max(1e-9);
+    eprintln!(
+        "[bench_sweep]   dense {da_dense_s:.3} s, active {da_active_s:.3} s -> \
+         {dense_active_speedup:.2}x on {} tenants / {} clusters (cycles={})",
+        da_streams.len(),
+        da_cfg.num_sms / 2,
+        da_dense.cycles
+    );
+
     // -------- Server sweep: the concurrent multi-tenant stream scenario
     // (the "srv" figure's workload). One shared run per policy plus each
     // tenant alone, fanned through the stream memo; skip-vs-dense
@@ -177,7 +225,7 @@ fn main() {
     );
 
     let json = format!(
-        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }}\n}}\n",
+        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }}\n}}\n",
         jobs.len(),
         misses,
         threads,
@@ -189,6 +237,12 @@ fn main() {
         skip_rows,
         best_skip.0,
         best_skip.1,
+        da_streams.len(),
+        da_cfg.num_sms / 2,
+        da_dense_s,
+        da_active_s,
+        dense_active_speedup,
+        dense_active_speedup,
         streams.len(),
         sdense_s,
         sskip_s,

@@ -46,6 +46,9 @@ impl DynSplit {
                 {
                     self.split(now, cluster);
                     cluster.stats.split_events += 1;
+                    // Split/rebalance move warp `home`s behind the
+                    // scheduler's back: refile the ready-warp index.
+                    cluster.rebuild_sched();
                 }
             }
             ClusterMode::FusedSplit => {
@@ -57,6 +60,7 @@ impl DynSplit {
                     self.last_rebalance = now;
                     self.rebalance(cluster);
                 }
+                cluster.rebuild_sched();
             }
             ClusterMode::PrivatePair => {}
         }

@@ -81,22 +81,56 @@ struct PendingLine {
     injected: bool,
 }
 
+/// Hasher for pending-line keys: one multiply-xor mix of the already
+/// high-entropy `line|kind|index` packing (line addresses). Avoids the
+/// default SipHash setup cost on a lookup that runs once per L1 miss
+/// and once per injection retry.
+#[derive(Default)]
+struct PendingKeyHasher(u64);
+
+impl std::hash::Hasher for PendingKeyHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, _: &[u8]) {
+        unreachable!("pending keys are u64");
+    }
+    fn write_u64(&mut self, k: u64) {
+        // splitmix64 finaliser: full-avalanche, two multiplies.
+        let mut z = k.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        self.0 = z ^ (z >> 31);
+    }
+}
+
+type PendingIndex =
+    std::collections::HashMap<u64, u32, std::hash::BuildHasherDefault<PendingKeyHasher>>;
+
 /// Slot table for lines in flight beyond L1 — the MSHR-style replacement
-/// for the previous per-miss `HashMap`. The live population is bounded
-/// by the caches' MSHR capacities (tens of entries), a regime where a
-/// dense linear scan beats hashing, and both the entry array and the
-/// per-entry waiter vectors are pooled, so the steady-state cycle loop
-/// performs no heap allocation here.
+/// for the previous per-miss `HashMap`. Entries live in a dense pooled
+/// array (no allocation in the steady-state cycle loop), and a
+/// persistent key -> slot index replaces the former O(n) linear probe on
+/// the per-access hot path (`get_mut`/`contains` run for every miss,
+/// merge, and injection retry). Reply matching (`take_reply`) still
+/// scans: replies carry only a line address, which is not the key, and
+/// they arrive at most a few per cycle.
 #[derive(Debug, Default)]
 struct PendingTable {
     entries: Vec<PendingLine>,
+    /// key -> position in `entries`, kept exact across `swap_remove`.
+    index: PendingIndex,
     /// Recycled waiter vectors (avoids one heap alloc per L1 miss).
     waiter_pool: Vec<Vec<Waiter>>,
 }
 
 impl PendingTable {
     fn with_capacity(cap: usize) -> Self {
-        PendingTable { entries: Vec::with_capacity(cap), waiter_pool: Vec::with_capacity(cap) }
+        PendingTable {
+            entries: Vec::with_capacity(cap),
+            index: PendingIndex::with_capacity_and_hasher(cap * 2, Default::default()),
+            waiter_pool: Vec::with_capacity(cap),
+        }
     }
 
     fn len(&self) -> usize {
@@ -112,11 +146,14 @@ impl PendingTable {
     }
 
     fn get_mut(&mut self, key: u64) -> Option<&mut PendingLine> {
-        self.entries.iter_mut().find(|e| e.key == key)
+        let i = *self.index.get(&key)?;
+        let e = &mut self.entries[i as usize];
+        debug_assert_eq!(e.key, key, "pending index out of sync");
+        Some(e)
     }
 
     fn contains(&self, key: u64) -> bool {
-        self.entries.iter().any(|e| e.key == key)
+        self.index.contains_key(&key)
     }
 
     /// Allocate a slot for a new in-flight line with its first waiter.
@@ -125,6 +162,7 @@ impl PendingTable {
         let mut waiters = self.waiter_pool.pop().unwrap_or_default();
         waiters.clear();
         waiters.push(waiter);
+        self.index.insert(key, self.entries.len() as u32);
         self.entries.push(PendingLine { key, line, kind, half, waiters, sent: now, injected: false });
     }
 
@@ -133,7 +171,12 @@ impl PendingTable {
     /// [`PendingTable::recycle`] to keep its waiter storage pooled.
     fn take_reply(&mut self, line: u64) -> Option<PendingLine> {
         let i = self.entries.iter().position(|e| e.line == line && e.injected)?;
-        Some(self.entries.swap_remove(i))
+        let entry = self.entries.swap_remove(i);
+        self.index.remove(&entry.key);
+        if let Some(moved) = self.entries.get(i) {
+            self.index.insert(moved.key, i as u32);
+        }
+        Some(entry)
     }
 
     /// Return an entry's waiter storage to the pool.
@@ -148,6 +191,7 @@ impl PendingTable {
         while let Some(e) = self.entries.pop() {
             self.recycle(e);
         }
+        self.index.clear();
     }
 }
 
@@ -209,6 +253,19 @@ pub struct SmCluster {
     sched: [HalfSched; 2],
     age_counter: u64,
 
+    /// Ready-warp index: count of issuable warps filed per home half
+    /// (mirrors `WarpCtx::issuable` via `refile_warp`). `pick` consults
+    /// it to fail in O(1) on stall cycles instead of scanning the warp
+    /// table; a fused scheduler sums both halves.
+    ready_count: [u32; 2],
+    /// Monotone stamp bumped by every warp/shadow/mode state change;
+    /// keys the per-slot stall-classification cache below.
+    sched_stamp: u64,
+    /// Cached `stall_reason` result per issue slot: (stamp, reason). A
+    /// stalled-but-active cluster re-derives its stall breakdown only
+    /// when something actually changed, not every cycle.
+    stall_cache: [(u64, StallReason); 2],
+
     /// Statistics (aggregated over both halves).
     pub stats: SmStats,
     /// Reconfiguration drain: no issue until this cycle.
@@ -256,6 +313,9 @@ impl SmCluster {
             coalesce_scratch: Vec::with_capacity(8),
             sched: [HalfSched::default(), HalfSched::default()],
             age_counter: 0,
+            ready_count: [0, 0],
+            sched_stamp: 0,
+            stall_cache: [(u64::MAX, StallReason::Idle); 2],
             stats: SmStats::default(),
             frozen_until: 0,
             divergence_mode: DivergenceMode::Serial,
@@ -284,6 +344,10 @@ impl SmCluster {
             self.apply_cache_layout(mode);
         }
         self.mode = mode;
+        // Mode changes alter the issue-slot structure and shadow
+        // eligibility, and the split machinery migrates warp homes around
+        // the same transitions: refile everything.
+        self.rebuild_sched();
     }
 
     fn apply_cache_layout(&mut self, mode: ClusterMode) {
@@ -390,6 +454,7 @@ impl SmCluster {
         let subwarps_total = kernel.warps_per_cta(self.cfg.warp_size);
         let home = if self.mode == ClusterMode::PrivatePair { self.lighter_half() } else { 0 };
         let slot = self.ctas.len();
+        let first = self.warps.len();
         let mut warps_made = 0;
         if width == self.cfg.warp_size {
             for sw in 0..subwarps_total {
@@ -417,7 +482,18 @@ impl SmCluster {
                 sw += 2;
             }
         }
-        self.ctas.push(CtaState { cta, warps_total: warps_made, warps_done: 0, barrier_count: 0, home });
+        let warp_ids: Vec<u32> = (first..self.warps.len()).map(|i| i as u32).collect();
+        self.ctas.push(CtaState {
+            cta,
+            warps_total: warps_made,
+            warps_done: 0,
+            barrier_count: 0,
+            home,
+            warp_ids,
+        });
+        for wi in first..self.warps.len() {
+            self.refile_warp(wi);
+        }
         self.cta_threads = kernel.cta_threads;
         self.cta_regs = kernel.cta_threads * kernel.regs_per_thread;
         self.cta_smem = kernel.smem_per_cta;
@@ -454,6 +530,8 @@ impl SmCluster {
             age,
             divergent: false,
             home,
+            sched_ready: false,
+            sched_home: home,
         }
     }
 
@@ -482,6 +560,105 @@ impl SmCluster {
             self.shadows.clear();
             self.ctas.clear();
             self.sched = [HalfSched::default(), HalfSched::default()];
+            self.ready_count = [0, 0];
+            self.sched_stamp += 1;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Ready-warp index (per-warp sleep/wake)
+    // ------------------------------------------------------------------
+    //
+    // `ready_count` mirrors `WarpCtx::issuable` per home half so that a
+    // scheduler slot with nothing to issue discovers it in O(1) instead
+    // of scanning the warp table — per-warp parking with explicit wakes:
+    // a warp leaves the ready set when it blocks (scoreboard, I-fetch,
+    // barrier, reconvergence) and `refile_warp` re-admits it at exactly
+    // the releasing event (load return, fill, barrier release, shadow
+    // reconvergence). Every internal mutation path refiles the warps it
+    // touches; external mutators (the dynamic-split controller moving
+    // homes, tests poking flags) call [`SmCluster::rebuild_sched`].
+
+    /// Re-evaluate warp `wi`'s filing after any state change.
+    fn refile_warp(&mut self, wi: usize) {
+        self.sched_stamp += 1;
+        let w = &mut self.warps[wi];
+        let now_ready = w.issuable();
+        if w.sched_ready {
+            self.ready_count[w.sched_home as usize] -= 1;
+        }
+        if now_ready {
+            self.ready_count[w.home as usize] += 1;
+        }
+        w.sched_ready = now_ready;
+        w.sched_home = w.home;
+    }
+
+    /// Record a shadow-warp state change (shadows are few and stay
+    /// scan-scheduled, but the stall-classification cache reads them).
+    #[inline]
+    fn note_shadow_change(&mut self) {
+        self.sched_stamp += 1;
+    }
+
+    /// Rebuild the ready index from scratch. Required after any code
+    /// outside the cluster mutates warp state directly (mode switches,
+    /// the dynamic-split controller's home migrations).
+    pub fn rebuild_sched(&mut self) {
+        self.sched_stamp += 1;
+        self.ready_count = [0, 0];
+        for w in &mut self.warps {
+            let r = w.issuable();
+            w.sched_ready = r;
+            w.sched_home = w.home;
+            if r {
+                self.ready_count[w.home as usize] += 1;
+            }
+        }
+    }
+
+    /// Full coherence check of the ready index (only evaluated inside
+    /// `debug_assert!`, i.e. in debug builds — which is what `cargo
+    /// test` runs, so the determinism suites exercise it everywhere).
+    #[allow(dead_code)]
+    fn sched_coherent(&self) -> bool {
+        let mut want = [0u32; 2];
+        for w in &self.warps {
+            if w.sched_ready != w.issuable() || w.sched_home != w.home {
+                return false;
+            }
+            if w.sched_ready {
+                want[w.home as usize] += 1;
+            }
+        }
+        want == self.ready_count
+    }
+
+    /// Unfinished warps of CTA `slot` (its warp list, not the table).
+    fn live_in_cta(&self, slot: usize) -> u32 {
+        let live = self
+            .ctas[slot]
+            .warp_ids
+            .iter()
+            .filter(|&&wj| !self.warps[wj as usize].finished)
+            .count() as u32;
+        debug_assert_eq!(
+            live,
+            self.warps.iter().filter(|w| w.cta_slot == slot && !w.finished).count() as u32,
+            "per-CTA warp list out of sync with the warp table"
+        );
+        live
+    }
+
+    /// Release every warp of CTA `slot` from the barrier.
+    fn release_barrier(&mut self, slot: usize) {
+        self.ctas[slot].barrier_count = 0;
+        for k in 0..self.ctas[slot].warp_ids.len() {
+            let wj = self.ctas[slot].warp_ids[k] as usize;
+            if self.warps[wj].at_barrier {
+                self.warps[wj].at_barrier = false;
+                self.refile_warp(wj);
+            }
         }
     }
 
@@ -492,6 +669,7 @@ impl SmCluster {
     /// Advance one cycle. `noc_nodes` are this cluster's NoC endpoints
     /// ([half0, half1] in per-SM layouts; both equal in fused layouts).
     pub fn tick(&mut self, now: u64, noc: &mut Noc, noc_nodes: [usize; 2], gen: &TraceGen) {
+        debug_assert!(self.sched_coherent(), "ready index diverged from warp state");
         self.stats.cycles += 1;
         match self.mode {
             ClusterMode::Fused => self.stats.fused_cycles += 1,
@@ -543,6 +721,7 @@ impl SmCluster {
     /// bit-for-bit across every scheme.
     pub fn next_event(&self, now: u64, gen: &TraceGen) -> crate::sim::NextEvent {
         use crate::sim::NextEvent;
+        debug_assert!(self.sched_coherent(), "ready index diverged from warp state");
         if now < self.frozen_until {
             return NextEvent::At(self.frozen_until);
         }
@@ -645,12 +824,27 @@ impl SmCluster {
                 return Some(Pick::Warp(g));
             }
         }
-        // Oldest issuable warp: ages are assigned in dispatch order and
-        // warps are appended in dispatch order, so the first eligible
-        // entry in table order *is* the oldest (hot-loop early exit).
-        debug_assert!(self.warps.windows(2).all(|w| w[0].age <= w[1].age));
-        if let Some(i) = self.warps.iter().position(eligible) {
-            return Some(Pick::Warp(i));
+        // Ready-warp index: a stalled slot fails in O(1); the table scan
+        // below runs only when a pick is guaranteed to exist.
+        let have_ready = if all_homes {
+            self.ready_count[0] + self.ready_count[1] > 0
+        } else {
+            self.ready_count[half as usize] > 0
+        };
+        if have_ready {
+            // Oldest issuable warp: ages are assigned in dispatch order
+            // and warps are appended in dispatch order, so the first
+            // eligible entry in table order *is* the oldest.
+            debug_assert!(self.warps.windows(2).all(|w| w[0].age <= w[1].age));
+            if let Some(i) = self.warps.iter().position(eligible) {
+                return Some(Pick::Warp(i));
+            }
+            debug_assert!(false, "ready count nonzero but no eligible warp");
+        } else {
+            debug_assert!(
+                !self.warps.iter().any(eligible),
+                "eligible warp missed by the ready count"
+            );
         }
         if let Some(g) = sched.greedy_shadow {
             if g < self.shadows.len()
@@ -704,10 +898,29 @@ impl SmCluster {
     }
 
     /// The stall reason `account_stall` would record for `half` this
-    /// cycle. Pure: the event-horizon skip path multiplies it across a
-    /// quiescent window (warp/shadow state is frozen there, so the
-    /// classification is constant).
-    fn stall_reason(&self, half: u8, all_homes: bool) -> StallReason {
+    /// cycle, memoized on `sched_stamp`: a stalled slot whose warp and
+    /// shadow state has not changed since the last classification reuses
+    /// it in O(1) instead of re-scanning the tables every cycle (the
+    /// partially-busy regime: one half issuing, the other parked on
+    /// memory). Every mutation path bumps the stamp, so the cache can
+    /// never serve a stale class — re-verified against the scan in
+    /// debug builds.
+    fn stall_reason(&mut self, half: u8, all_homes: bool) -> StallReason {
+        let slot = half as usize;
+        let (stamp, cached) = self.stall_cache[slot];
+        if stamp == self.sched_stamp {
+            debug_assert_eq!(cached, self.stall_reason_uncached(half, all_homes));
+            return cached;
+        }
+        let r = self.stall_reason_uncached(half, all_homes);
+        self.stall_cache[slot] = (self.sched_stamp, r);
+        r
+    }
+
+    /// The uncached classification scan (also the skip path's oracle:
+    /// warp/shadow state is frozen across a promised window, so one
+    /// classification multiplies across it).
+    fn stall_reason_uncached(&self, half: u8, all_homes: bool) -> StallReason {
         let mut any = false;
         let mut mem = false;
         let mut bar = false;
@@ -860,16 +1073,8 @@ impl SmCluster {
                 let slot = self.warps[wi].cta_slot;
                 self.warps[wi].at_barrier = true;
                 self.ctas[slot].barrier_count += 1;
-                let live = self
-                    .warps
-                    .iter()
-                    .filter(|w| w.cta_slot == slot && !w.finished)
-                    .count() as u32;
-                if self.ctas[slot].barrier_count >= live {
-                    self.ctas[slot].barrier_count = 0;
-                    for w in self.warps.iter_mut().filter(|w| w.cta_slot == slot) {
-                        w.at_barrier = false;
-                    }
+                if self.ctas[slot].barrier_count >= self.live_in_cta(slot) {
+                    self.release_barrier(slot);
                 }
             }
             Op::Exit => {}
@@ -884,18 +1089,12 @@ impl SmCluster {
             }
             // Barrier bookkeeping: a retiring warp lowers the live count;
             // re-check release for its CTA.
-            let live = self
-                .warps
-                .iter()
-                .filter(|w| w.cta_slot == slot && !w.finished)
-                .count() as u32;
+            let live = self.live_in_cta(slot);
             if live > 0 && self.ctas[slot].barrier_count >= live {
-                self.ctas[slot].barrier_count = 0;
-                for w in self.warps.iter_mut().filter(|w| w.cta_slot == slot) {
-                    w.at_barrier = false;
-                }
+                self.release_barrier(slot);
             }
         }
+        self.refile_warp(wi);
     }
 
     /// Route a fresh divergence through the active policy:
@@ -1081,6 +1280,7 @@ impl SmCluster {
         if self.shadows[si].advance() && self.shadows[si].complete() {
             self.reconverge_shadow(si);
         }
+        self.note_shadow_change();
     }
 
     /// Instruction fetch: probe the L1I; on a hit, touch LRU and proceed.
@@ -1094,8 +1294,14 @@ impl SmCluster {
         }
         self.stats.l1i_misses += 1;
         match waiter {
-            Waiter::IFetchWarp(i) => self.warps[i].ifetch_pending = true,
-            Waiter::IFetchShadow(i) => self.shadows[i].ifetch_pending = true,
+            Waiter::IFetchWarp(i) => {
+                self.warps[i].ifetch_pending = true;
+                self.refile_warp(i);
+            }
+            Waiter::IFetchShadow(i) => {
+                self.shadows[i].ifetch_pending = true;
+                self.note_shadow_change();
+            }
             _ => {}
         }
         self.lsu.push_back(Transaction {
@@ -1279,16 +1485,24 @@ impl SmCluster {
             Waiter::Warp(i) => {
                 let wp = &mut self.warps[i];
                 wp.outstanding_loads = wp.outstanding_loads.saturating_sub(1);
+                self.refile_warp(i);
             }
             Waiter::Shadow(i) => {
                 let s = &mut self.shadows[i];
                 s.outstanding_loads = s.outstanding_loads.saturating_sub(1);
-                if s.complete() {
+                self.note_shadow_change();
+                if self.shadows[i].complete() {
                     self.reconverge_shadow(i);
                 }
             }
-            Waiter::IFetchWarp(i) => self.warps[i].ifetch_pending = false,
-            Waiter::IFetchShadow(i) => self.shadows[i].ifetch_pending = false,
+            Waiter::IFetchWarp(i) => {
+                self.warps[i].ifetch_pending = false;
+                self.refile_warp(i);
+            }
+            Waiter::IFetchShadow(i) => {
+                self.shadows[i].ifetch_pending = false;
+                self.note_shadow_change();
+            }
             Waiter::None => {}
         }
     }
@@ -1297,7 +1511,9 @@ impl SmCluster {
         let parent = self.shadows[si].parent;
         if self.warps[parent].shadow_outstanding {
             self.warps[parent].shadow_done();
+            self.refile_warp(parent);
         }
+        self.note_shadow_change();
     }
 
     /// Remove fully-complete shadows when no references remain.
@@ -1315,12 +1531,14 @@ impl SmCluster {
             self.shadows.clear();
             self.sched[0].greedy_shadow = None;
             self.sched[1].greedy_shadow = None;
+            self.note_shadow_change();
         }
     }
 
     /// Spawn a shadow warp (regroup slow pass / DWS subdivision).
     pub fn spawn_shadow(&mut self, shadow: ShadowWarp) {
         self.shadows.push(shadow);
+        self.note_shadow_change();
     }
 
     /// Any shadows still executing?

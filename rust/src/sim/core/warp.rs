@@ -63,6 +63,13 @@ pub struct WarpCtx {
     /// Which half of the cluster currently executes this warp (0/1); used
     /// by the dynamic-split machinery to migrate warps.
     pub home: u8,
+    /// Scheduler-index mirror of [`WarpCtx::issuable`] as of the last
+    /// (re)filing — maintained by the cluster's ready-warp index, never
+    /// read for architectural decisions. Code that mutates warp state
+    /// outside the cluster must trigger `SmCluster::rebuild_sched`.
+    pub sched_ready: bool,
+    /// Scheduler-index mirror of `home` as of the last (re)filing.
+    pub sched_home: u8,
 }
 
 impl WarpCtx {
@@ -207,6 +214,11 @@ pub struct CtaState {
     pub barrier_count: u32,
     /// Which half the CTA was dispatched to (PrivatePair mode), 0/1.
     pub home: u8,
+    /// Indices of this CTA's warps in the cluster warp table, built at
+    /// dispatch. Barrier release and live-warp counts walk this list
+    /// instead of filtering the whole table (warp indices are stable:
+    /// the table only ever shrinks at `reap`, which clears CTAs too).
+    pub warp_ids: Vec<u32>,
 }
 
 impl CtaState {
@@ -240,6 +252,8 @@ mod tests {
             age: 0,
             divergent: false,
             home: 0,
+            sched_ready: false,
+            sched_home: 0,
         }
     }
 

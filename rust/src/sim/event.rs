@@ -24,6 +24,13 @@
 //! variant is needed — a tenant is just another source of [`NextEvent`]s
 //! — which is exactly why the skip engine survived the jump from one
 //! resident kernel to many.
+//!
+//! The per-component active-set scheduler ([`crate::sim::ActiveSet`])
+//! consumes the same promises at finer grain: a component reporting
+//! [`NextEvent::At`]/[`NextEvent::Idle`] is *parked* individually and
+//! stops being ticked, instead of merely contributing to a whole-chip
+//! skip decision. [`NextEvent::wake_cycle`] is the bridge between the
+//! two vocabularies.
 
 /// Earliest future activity of a simulated component, relative to the
 /// cycle `now` it was queried at.
@@ -61,6 +68,18 @@ impl NextEvent {
             NextEvent::Progress
         }
     }
+
+    /// The wake cycle a parked component would carry in the active-set
+    /// scheduler: `None` means the cycle is live (the component must not
+    /// be parked), `u64::MAX` encodes an event-free component that only
+    /// an external message can revive.
+    pub fn wake_cycle(self) -> Option<u64> {
+        match self {
+            NextEvent::Progress => None,
+            NextEvent::At(t) => Some(t),
+            NextEvent::Idle => Some(u64::MAX),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -81,5 +100,12 @@ mod tests {
         assert_eq!(NextEvent::at_or_progress(10, 9), At(10));
         assert_eq!(NextEvent::at_or_progress(10, 10), Progress);
         assert_eq!(NextEvent::at_or_progress(10, 11), Progress);
+    }
+
+    #[test]
+    fn wake_cycle_maps_the_parking_vocabulary() {
+        assert_eq!(Progress.wake_cycle(), None);
+        assert_eq!(At(42).wake_cycle(), Some(42));
+        assert_eq!(Idle.wake_cycle(), Some(u64::MAX));
     }
 }

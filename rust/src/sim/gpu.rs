@@ -12,21 +12,39 @@
 //! The NoC is rebuilt when the layout changes (kernel boundaries only;
 //! dynamic split keeps the fused NoC interface, §4.3).
 //!
-//! ## Event-horizon cycle skipping
+//! ## Active-set ticking (per-component event horizons)
 //!
 //! Memory-divergent kernels spend most of their cycles with every warp
-//! parked on a scoreboard or DRAM release. Instead of burning a full
-//! `tick` through clusters, NoC and partitions for each of those idle
-//! cycles, the kernel loop asks every component for its next event
-//! ([`crate::sim::NextEvent`]) and, when the whole chip is quiescent (no
-//! issuable warp, no movable packet, no dispatchable CTA), fast-forwards
-//! `self.now` to the horizon while replaying the per-cycle accounting
-//! (stall breakdowns, mode counters, LRU clocks) in O(1). The contract
-//! is **bit-identical `SimReport`s** to the dense loop — enforced by
-//! `tests/exec_determinism.rs` — and `AMOEBA_DENSE=1` (or
-//! [`Gpu::set_dense`]) forces the dense loop for auditing. The skip mode
-//! is deliberately *not* part of [`SystemConfig`], so sweep-cache
-//! fingerprints ([`crate::harness::cfg_fingerprint`]) stay mode-agnostic.
+//! parked on a scoreboard or DRAM release — and multi-tenant runs spend
+//! most of theirs with one hot tenant forcing the rest of the chip
+//! through dead ticks. The cycle loop therefore tracks an **active
+//! set**: every component (each [`SmCluster`], each [`MemPartition`],
+//! the router fabric) that reports a quiet window via its `next_event`
+//! ([`crate::sim::NextEvent`]) is *parked* in a wake-ordered structure
+//! ([`crate::sim::ActiveSet`]) and simply not ticked, so cycle cost
+//! scales with live work instead of chip size. Any event that can
+//! unblock a parked component wakes it eagerly — a reply packet at a
+//! cluster, a request delivered to a partition, an injection into the
+//! fabric, CTA dispatch, reconfiguration, a DynSplit check, a stats
+//! read — and the wake replays the parked window's per-cycle accounting
+//! (stall breakdowns, mode counters, LRU clocks, powered-MC cycles) in
+//! O(1), exactly as the dense loop would have recorded it. When *every*
+//! component is parked and no CTA can dispatch, `now` fast-forwards to
+//! the earliest wake (the PR 3 whole-chip horizon skip, now an O(1)
+//! heap peek instead of an O(chip) probe).
+//!
+//! The contract is **bit-identical `SimReport`s** to the dense loop —
+//! parking is pure wall-clock policy — enforced by
+//! `tests/exec_determinism.rs` and the golden suite; `AMOEBA_DENSE=1`
+//! (or [`Gpu::set_dense`]) forces the dense reference loop for
+//! auditing. The mode is deliberately *not* part of [`SystemConfig`],
+//! so sweep-cache fingerprints ([`crate::harness::cfg_fingerprint`])
+//! stay mode-agnostic. New stallable state MUST either register a wake
+//! (report its horizon from `next_event` / wake eagerly on message
+//! arrival) or report `Progress` conservatively, and any new per-cycle
+//! counter in a `tick` needs a mirror in the component's replay path
+//! (`SmCluster::skip` or [`Gpu::replay_component`]); the determinism
+//! tests catch omissions.
 //!
 //! ## Concurrent kernel streams (server mode)
 //!
@@ -55,6 +73,7 @@ use crate::isa::KernelLaunch;
 use crate::sim::core::{ClusterMode, DivergenceMode, SmCluster};
 use crate::sim::mem::{MemPartition, PartitionReply};
 use crate::sim::noc::{ChipLayout, Noc, Packet, Payload, Subnet};
+use crate::sim::sched::ActiveSet;
 use crate::stats::{ChipStats, SmStats};
 use crate::workload::{kernel_launches, BenchProfile, KernelStream, TraceGen};
 
@@ -233,6 +252,16 @@ const PHASE_SAMPLE_PERIOD: u64 = 512;
 /// Replies an MC can inject per cycle (the L2 slice has two reply ports,
 /// matching GPGPU-Sim's icnt-to-shader interface width).
 const MC_REPLY_BUDGET: usize = 2;
+/// Minimum quiet-window length (cycles) worth parking a component for:
+/// shorter horizons (an issue port busy for an initiation interval, an
+/// L2 hit in flight) stay active and just tick — the heap churn of
+/// parking would cost more than the skipped ticks save. Pure policy:
+/// any value is bit-identical, only wall-clock changes.
+const MIN_PARK_WINDOW: u64 = 8;
+/// Bounded per-MC backlog of requests ejected from the NoC but rejected
+/// by the partition (queue/MSHR full); retried before new ejections so
+/// NoC backpressure is preserved.
+const BACKLOG_CAP: usize = 16;
 
 /// Maps each cluster to the trace generator of the kernel it is running.
 /// The single-application path shares one kernel chip-wide; stream mode
@@ -286,6 +315,15 @@ pub struct Gpu {
     /// Force the dense cycle loop (no event-horizon skipping). Defaults
     /// to the `AMOEBA_DENSE` env var; see [`Gpu::set_dense`].
     dense: bool,
+    /// Active-set scheduler state: component ids are clusters
+    /// `0..n_clusters`, then partitions, then the interconnect last.
+    /// Unused (all components permanently active) in dense mode.
+    sched: ActiveSet,
+    /// `Noc::inject_epoch` as of the interconnect's last tick; a parked
+    /// fabric is revived when the live value has moved past this.
+    noc_seen_epoch: u64,
+    /// Reusable buffer for due timer-wakes (component, from, upto).
+    wake_scratch: Vec<(usize, u64, u64)>,
 }
 
 impl Gpu {
@@ -322,6 +360,9 @@ impl Gpu {
             decisions: Vec::new(),
             reply_scratch: Vec::with_capacity(MC_REPLY_BUDGET),
             dense: dense_env(),
+            sched: ActiveSet::new(n_clusters + cfg.num_mcs + 1),
+            noc_seen_epoch: 0,
+            wake_scratch: Vec::new(),
         }
     }
 
@@ -361,6 +402,10 @@ impl Gpu {
     /// there and their behaviour is unchanged.)
     fn reconfigure(&mut self, target: &[bool]) {
         debug_assert_eq!(target.len(), self.clusters.len());
+        // Reconfiguration mutates cluster state and rebuilds the NoC:
+        // every parked component must replay its accounting and resume
+        // live ticks before the machine changes shape under it.
+        self.wake_everything(self.now);
         for (c, &fused) in self.clusters.iter_mut().zip(target) {
             let mode = if fused { ClusterMode::Fused } else { ClusterMode::PrivatePair };
             if c.mode() == mode {
@@ -372,6 +417,7 @@ impl Gpu {
         }
         self.layout = ChipLayout::new(target.to_vec(), self.cfg.num_mcs);
         self.noc = Noc::new(&self.cfg, &self.layout);
+        self.noc_seen_epoch = self.noc.inject_epoch();
         self.chip.reconfig_events += 1;
         self.chip.reconfig_cycles += self.cfg.reconfig_cost;
     }
@@ -399,63 +445,15 @@ impl Gpu {
         // 2. Interconnect.
         self.noc.tick(now);
 
-        // 3. Memory side: requests into partitions. A rejected request
-        // (queue/MSHR full) parks in a bounded per-MC backlog and is
-        // retried before new ejections — its src (the reply address) is
-        // preserved.
-        const BACKLOG_CAP: usize = 16;
+        // 3. Memory side: requests into partitions.
         for mc in 0..self.partitions.len() {
-            let node = self.mc_node(mc);
-            // Retry the backlog first (FIFO).
-            while let Some(pkt) = self.req_backlog[mc].front().copied() {
-                if self.offer_to_partition(mc, now, &pkt) {
-                    self.req_backlog[mc].pop_front();
-                } else {
-                    break;
-                }
-            }
-            // New ejections, bounded by backlog space.
-            while self.req_backlog[mc].len() < BACKLOG_CAP {
-                let Some(pkt) = self.noc.eject(Subnet::Request, node) else { break };
-                if !self.offer_to_partition(mc, now, &pkt) {
-                    self.req_backlog[mc].push_back(pkt);
-                }
-            }
+            self.mc_drain_requests(mc, now);
         }
 
-        // 4. Partitions tick; replies head for the reply subnet. The
-        // emission buffer is owned by the Gpu and reused across MCs and
-        // cycles (no per-cycle allocation).
-        let mut out = std::mem::take(&mut self.reply_scratch);
+        // 4. Partitions tick; replies head for the reply subnet.
         for mc in 0..self.partitions.len() {
-            self.chip.mc_cycles += 1;
-            let node = self.mc_node(mc);
-            let mut stalled = false;
-            // Retry previously blocked replies first (FIFO; preserve all).
-            while let Some(r) = self.reply_retry[mc].front().copied() {
-                if self.try_inject_reply(now, node, &r) {
-                    self.reply_retry[mc].pop_front();
-                } else {
-                    stalled = true;
-                    break;
-                }
-            }
-            let budget = MC_REPLY_BUDGET.saturating_sub(self.reply_retry[mc].len());
-            out.clear();
-            let emit_stalled = self.partitions[mc].tick(now, &mut out, budget);
-            for i in 0..out.len() {
-                let r = out[i];
-                if !self.try_inject_reply(now, node, &r) {
-                    self.reply_retry[mc].push_back(r);
-                    stalled = true;
-                }
-            }
-            if stalled || emit_stalled {
-                // Fig 17: a reply was ready but could not enter the NoC.
-                self.chip.mc_inject_stall_cycles += 1;
-            }
+            self.mc_service(mc, now);
         }
-        self.reply_scratch = out;
 
         // 5. SM side: reply delivery.
         let sm_nodes = self.layout.sm_nodes();
@@ -469,6 +467,63 @@ impl Gpu {
         }
 
         self.now += 1;
+    }
+
+    /// Cycle phase 3 for one MC: feed ejected request packets into its
+    /// partition. A rejected request (queue/MSHR full) parks in the
+    /// bounded per-MC backlog and is retried before new ejections — its
+    /// src (the reply address) is preserved.
+    fn mc_drain_requests(&mut self, mc: usize, now: u64) {
+        let node = self.mc_node(mc);
+        // Retry the backlog first (FIFO).
+        while let Some(pkt) = self.req_backlog[mc].front().copied() {
+            if self.offer_to_partition(mc, now, &pkt) {
+                self.req_backlog[mc].pop_front();
+            } else {
+                break;
+            }
+        }
+        // New ejections, bounded by backlog space.
+        while self.req_backlog[mc].len() < BACKLOG_CAP {
+            let Some(pkt) = self.noc.eject(Subnet::Request, node) else { break };
+            if !self.offer_to_partition(mc, now, &pkt) {
+                self.req_backlog[mc].push_back(pkt);
+            }
+        }
+    }
+
+    /// Cycle phase 4 for one MC: advance the partition and inject ready
+    /// replies. The emission buffer is owned by the Gpu and reused
+    /// across MCs and cycles (no per-cycle allocation).
+    fn mc_service(&mut self, mc: usize, now: u64) {
+        self.chip.mc_cycles += 1;
+        let node = self.mc_node(mc);
+        let mut stalled = false;
+        // Retry previously blocked replies first (FIFO; preserve all).
+        while let Some(r) = self.reply_retry[mc].front().copied() {
+            if self.try_inject_reply(now, node, &r) {
+                self.reply_retry[mc].pop_front();
+            } else {
+                stalled = true;
+                break;
+            }
+        }
+        let budget = MC_REPLY_BUDGET.saturating_sub(self.reply_retry[mc].len());
+        let mut out = std::mem::take(&mut self.reply_scratch);
+        out.clear();
+        let emit_stalled = self.partitions[mc].tick(now, &mut out, budget);
+        for i in 0..out.len() {
+            let r = out[i];
+            if !self.try_inject_reply(now, node, &r) {
+                self.reply_retry[mc].push_back(r);
+                stalled = true;
+            }
+        }
+        self.reply_scratch = out;
+        if stalled || emit_stalled {
+            // Fig 17: a reply was ready but could not enter the NoC.
+            self.chip.mc_inject_stall_cycles += 1;
+        }
     }
 
     /// Offer one ejected request packet to partition `mc`; false = retry.
@@ -498,66 +553,218 @@ impl Gpu {
         self.noc.inject(Subnet::Reply, pkt)
     }
 
-    /// Fast-forward `self.now` to the chip's event horizon if the machine
-    /// is quiescent, replaying the skipped cycles' accounting in O(1).
-    ///
-    /// `cap` is the last cycle the caller allows to become the new `now`:
-    /// the cycle *before* any loop-level trigger (profiling-window end,
-    /// split check, Fig 19 sample boundary, deadline) so the triggering
-    /// tick always runs live and fires at exactly the same `now` as the
-    /// dense loop. Returns false — and skips nothing — when any component
-    /// would make progress this cycle, when a retry/backlog queue holds
-    /// work (those are retried every cycle), or in dense mode.
-    ///
-    /// The caller must have established that CTA dispatch made no
-    /// progress this cycle (cluster state is frozen across the window, so
-    /// dispatchability cannot appear mid-skip).
-    fn try_skip(&mut self, gens: &GenMap, cap: u64) -> bool {
-        use crate::sim::NextEvent;
-        if self.dense || cap <= self.now {
-            return false;
+    // ------------------------------------------------------------------
+    // Active-set scheduler (per-component sleep/wake)
+    // ------------------------------------------------------------------
+
+    /// Component id of the interconnect (clusters first, then MCs).
+    #[inline]
+    fn comp_noc(&self) -> usize {
+        self.clusters.len() + self.partitions.len()
+    }
+
+    /// Replay the per-cycle accounting a parked component missed over
+    /// `[from, upto)` — exactly what the dense loop would have recorded
+    /// while the component provably could not change state. Clusters
+    /// replay their stall/mode/LRU accounting ([`SmCluster::skip`]); a
+    /// partition's only per-cycle counter is the powered-controller
+    /// cycle; the interconnect has none.
+    fn replay_component(&mut self, comp: usize, from: u64, upto: u64) {
+        if upto <= from {
+            return;
         }
-        if self.reply_retry.iter().any(|q| !q.is_empty())
-            || self.req_backlog.iter().any(|q| !q.is_empty())
-        {
-            return false;
+        let nc = self.clusters.len();
+        if comp < nc {
+            self.clusters[comp].skip(from, upto - from);
+        } else if comp < nc + self.partitions.len() {
+            self.chip.mc_cycles += upto - from;
         }
-        let now = self.now;
-        let mut ev = NextEvent::Idle;
-        for (ci, c) in self.clusters.iter().enumerate() {
-            ev = ev.min_with(c.next_event(now, gens.get(ci)));
-            if ev == NextEvent::Progress {
-                return false;
+    }
+
+    /// Wake `comp` (idempotent), replaying its parked accounting so that
+    /// from cycle `upto` onward it ticks live with dense-exact counters.
+    /// Must precede *any* externally driven effect on a parked
+    /// component: message delivery, CTA dispatch, reconfiguration,
+    /// DynSplit checks, direct state mutation.
+    fn wake_comp(&mut self, comp: usize, upto: u64) {
+        if let Some((from, to)) = self.sched.wake(comp, upto) {
+            self.replay_component(comp, from, to);
+        }
+    }
+
+    /// Replay a parked cluster's accounting up to `upto` without waking
+    /// it — for pure reads (profiling-window sampling, tenant
+    /// attribution) whose quiet-window promise still holds.
+    fn sync_comp(&mut self, comp: usize, upto: u64) {
+        if let Some((from, to)) = self.sched.sync(comp, upto) {
+            self.replay_component(comp, from, to);
+        }
+    }
+
+    fn wake_all_clusters(&mut self, upto: u64) {
+        for ci in 0..self.clusters.len() {
+            self.wake_comp(ci, upto);
+        }
+    }
+
+    fn sync_all_clusters(&mut self, upto: u64) {
+        for ci in 0..self.clusters.len() {
+            self.sync_comp(ci, upto);
+        }
+    }
+
+    /// Wake every component (mass mutation points: reconfiguration,
+    /// kernel boundaries, end of run).
+    fn wake_everything(&mut self, upto: u64) {
+        let n = self.comp_noc() + 1;
+        for comp in 0..n {
+            self.wake_comp(comp, upto);
+        }
+    }
+
+    /// Park `comp` from the next cycle if `ev` — its `next_event`
+    /// evaluated at `now + 1` — promises a quiet window worth skipping.
+    /// Event-free components ([`crate::sim::NextEvent::Idle`]) always
+    /// park; short horizons stay active (see [`MIN_PARK_WINDOW`]).
+    fn maybe_park(&mut self, comp: usize, now: u64, ev: crate::sim::NextEvent) {
+        if let Some(wake) = ev.wake_cycle() {
+            if wake == u64::MAX || wake >= now + 1 + MIN_PARK_WINDOW {
+                self.sched.park(comp, now + 1, wake);
             }
         }
-        ev = ev.min_with(self.noc.next_event(now));
-        if ev == NextEvent::Progress {
-            return false;
+    }
+
+    /// Whole-chip fast-forward: when every component is parked and the
+    /// caller established that no CTA dispatched and no loop trigger is
+    /// due, jump `now` to the earliest scheduled wake (or the trigger
+    /// cap). Parked components replay lazily at their wakes; only the
+    /// chip cycle counter advances here. `cap` is the last admissible
+    /// `now`, one cycle before any loop-level trigger, so triggers
+    /// always fire on live ticks at exactly the dense loop's cycle.
+    fn try_fast_forward(&mut self, cap: u64) {
+        if self.dense || cap <= self.now || !self.sched.all_parked() {
+            return;
         }
-        for p in &self.partitions {
-            ev = ev.min_with(p.next_event(now));
-            if ev == NextEvent::Progress {
-                return false;
-            }
-        }
-        let target = match ev {
-            NextEvent::Progress => return false,
-            NextEvent::At(t) => t.min(cap),
-            // Fully event-free (e.g. a deadlock the deadline will catch):
-            // accounting still advances, so skip to the cap.
-            NextEvent::Idle => cap,
+        let target = match self.sched.next_wake() {
+            Some(w) => w.min(cap),
+            // Fully event-free (e.g. a deadlock the deadline will
+            // catch): accounting still advances, so skip to the cap.
+            None => cap,
         };
-        if target <= now {
-            return false;
+        if target <= self.now {
+            return;
         }
-        let k = target - now;
-        self.chip.cycles += k;
-        self.chip.mc_cycles += k * self.partitions.len() as u64;
-        for c in &mut self.clusters {
-            c.skip(now, k);
-        }
+        self.chip.cycles += target - self.now;
         self.now = target;
-        true
+    }
+
+    /// Advance one cycle, dense or active-set per the execution mode.
+    fn step(&mut self, gens: &GenMap) {
+        if self.dense {
+            self.tick(gens);
+        } else {
+            self.tick_active(gens);
+        }
+    }
+
+    /// The active-set cycle: identical phase order to [`Gpu::tick`], but
+    /// each phase visits only live components, parks the ones that
+    /// promise a quiet window, and eagerly wakes parked ones the moment
+    /// a message reaches them.
+    fn tick_active(&mut self, gens: &GenMap) {
+        let now = self.now;
+        // Timer wakes due this cycle: replay their parked accounting,
+        // then tick them below like any live component.
+        let mut due = std::mem::take(&mut self.wake_scratch);
+        due.clear();
+        self.sched.wake_due(now, |c, from, upto| due.push((c, from, upto)));
+        for &(c, from, upto) in &due {
+            self.replay_component(c, from, upto);
+        }
+        self.wake_scratch = due;
+
+        self.chip.cycles += 1;
+
+        // 1. Live SM clusters (table order, as the dense loop).
+        for ci in 0..self.clusters.len() {
+            if !self.sched.is_active(ci) {
+                continue;
+            }
+            let nodes = self.nodes_of(ci);
+            self.clusters[ci].tick(now, &mut self.noc, nodes, gens.get(ci));
+            let ev = self.clusters[ci].next_event(now + 1, gens.get(ci));
+            self.maybe_park(ci, now, ev);
+        }
+
+        // 2. Interconnect. A parked fabric is revived by any injection —
+        // phase 1 may have injected this very cycle, and a fresh packet
+        // can take its first hop at `now`, exactly as in the dense loop.
+        let comp_noc = self.comp_noc();
+        if !self.sched.is_active(comp_noc) && self.noc.inject_epoch() != self.noc_seen_epoch {
+            self.wake_comp(comp_noc, now);
+        }
+        if self.sched.is_active(comp_noc) {
+            self.noc.tick(now);
+            self.noc_seen_epoch = self.noc.inject_epoch();
+            let ev = self.noc.router_next_event(now + 1);
+            self.maybe_park(comp_noc, now, ev);
+        }
+
+        // 3+4. Memory partitions: request drain + service, per MC (the
+        // per-MC state is disjoint, so fusing the dense loop's two
+        // passes per partition is observably identical). A parked
+        // partition wakes the moment the fabric has delivered a request
+        // to its node — including Perfect-mode deliveries from phase 1.
+        let nc = self.clusters.len();
+        let any_req = self.noc.ejectable_nodes(Subnet::Request) > 0;
+        for mc in 0..self.partitions.len() {
+            let comp = nc + mc;
+            if !self.sched.is_active(comp) {
+                if any_req && self.noc.has_ejectable(Subnet::Request, self.mc_node(mc)) {
+                    self.wake_comp(comp, now);
+                } else {
+                    continue;
+                }
+            }
+            self.mc_drain_requests(mc, now);
+            self.mc_service(mc, now);
+            // Park only with empty retry/backlog queues (those are
+            // serviced every cycle) and nothing left to eject.
+            if self.reply_retry[mc].is_empty()
+                && self.req_backlog[mc].is_empty()
+                && !self.noc.has_ejectable(Subnet::Request, self.mc_node(mc))
+            {
+                let ev = self.partitions[mc].next_event(now + 1);
+                self.maybe_park(comp, now, ev);
+            }
+        }
+
+        // 5. Reply delivery. The owning cluster is woken *before* it
+        // observes the reply: its parked accounting replays through this
+        // cycle with the pre-reply state — the dense loop ticked it at
+        // phase 1, before the reply arrived — and it resumes live ticks
+        // from the next cycle.
+        if self.noc.ejectable_nodes(Subnet::Reply) > 0 {
+            let sm_nodes = self.layout.sm_nodes();
+            for node in 0..sm_nodes {
+                while let Some(pkt) = self.noc.eject(Subnet::Reply, node) {
+                    if let Payload::MemReply { line, is_write, .. } = pkt.payload {
+                        let ci = self.cluster_of_node(node);
+                        self.wake_comp(ci, now + 1);
+                        self.clusters[ci].on_reply(now, line, is_write);
+                    }
+                }
+            }
+        }
+
+        // A phase-4 reply injection revives a parked fabric for the next
+        // cycle; surface that before the fast-forward check runs, or the
+        // packet's first movable cycle could be skipped over.
+        if !self.sched.is_active(comp_noc) && self.noc.inject_epoch() != self.noc_seen_epoch {
+            self.wake_comp(comp_noc, now + 1);
+        }
+
+        self.now += 1;
     }
 
     /// Is every cluster + partition + the NoC fully drained?
@@ -618,6 +825,7 @@ impl Gpu {
                     if !self.clusters[ci].can_accept_cta(kernel) {
                         break;
                     }
+                    self.wake_comp(ci, self.now);
                     self.clusters[ci].dispatch_cta(kernel, next_cta, &gen);
                     next_cta += 1;
                     dispatched += 1;
@@ -625,6 +833,7 @@ impl Gpu {
             } else {
                 'dispatch: for ci in 0..self.clusters.len() {
                     while next_cta < cap && self.clusters[ci].can_accept_cta(kernel) {
+                        self.wake_comp(ci, self.now);
                         self.clusters[ci].dispatch_cta(kernel, next_cta, &gen);
                         next_cta += 1;
                         dispatched += 1;
@@ -635,15 +844,15 @@ impl Gpu {
                 }
             }
 
-            // Quiescent chip: fast-forward to the next event instead of
-            // ticking dead cycles one by one. The cap keeps every
-            // loop-level trigger below on a live tick, so skip and dense
-            // runs fire them at identical cycles. Dispatch progress this
-            // cycle implies a live tick, so skipping is not considered;
-            // neither is a loop about to terminate (a fully-drained grid
-            // breaks after one more tick — skipping first could carry a
-            // still-profiling kernel to its decision point, which the
-            // dense loop never reaches).
+            // Fully parked chip: fast-forward to the earliest wake
+            // instead of ticking dead cycles one by one. The cap keeps
+            // every loop-level trigger below on a live tick, so skip and
+            // dense runs fire them at identical cycles. Dispatch
+            // progress this cycle implies a live tick, so skipping is
+            // not considered; neither is a loop about to terminate (a
+            // fully-drained grid breaks after one more tick — skipping
+            // first could carry a still-profiling kernel to its decision
+            // point, which the dense loop never reaches).
             if dispatched == 0 && !(next_cta >= total_ctas && self.drained()) {
                 let mut cap = deadline - 1;
                 if profiling {
@@ -654,14 +863,17 @@ impl Gpu {
                 }
                 let next_sample = (self.now / PHASE_SAMPLE_PERIOD + 1) * PHASE_SAMPLE_PERIOD;
                 cap = cap.min(next_sample - 1);
-                self.try_skip(&gm, cap);
+                self.try_fast_forward(cap);
             }
 
-            self.tick(&gm);
+            self.step(&gm);
 
             // Profiling window complete: predict and reconfigure.
             if profiling && self.now >= profile_start + self.cfg.profile_window {
                 profiling = false;
+                // Parked clusters lag on per-cycle accounting; replay it
+                // so the window samples read dense-exact counters.
+                self.sync_all_clusters(self.now);
                 let target: Vec<bool> = if self.scheme.per_cluster() {
                     // §4.4: one decision per cluster from that cluster's
                     // own window — the chip can come out heterogeneous.
@@ -703,9 +915,10 @@ impl Gpu {
                     // dense drain loop has no sampling or split checks, so
                     // the skip cap is the deadline alone.
                     while !self.drained() && self.now < deadline {
-                        self.try_skip(&gm, deadline - 1);
-                        self.tick(&gm);
+                        self.try_fast_forward(deadline - 1);
+                        self.step(&gm);
                     }
+                    self.wake_everything(self.now);
                     for c in &mut self.clusters {
                         c.reap();
                     }
@@ -725,6 +938,10 @@ impl Gpu {
                 && self.now >= split_check_at
             {
                 split_check_at = self.now + self.cfg.split_check_period;
+                // The split controller reads ratios and migrates warps:
+                // parked clusters replay their accounting and resume
+                // live ticks before it touches them.
+                self.wake_all_clusters(self.now);
                 for (ds, c) in self.dynsplits.iter_mut().zip(&mut self.clusters) {
                     ds.check(self.now, c);
                 }
@@ -758,6 +975,9 @@ impl Gpu {
             }
         }
 
+        // Kernel boundary: every component's lagged accounting replays
+        // before the flushes mutate state under it.
+        self.wake_everything(self.now);
         for c in &mut self.clusters {
             c.reap();
             c.flush_caches();
@@ -1008,6 +1228,7 @@ impl Gpu {
                             if !self.clusters[ci].can_accept_cta(kernel) {
                                 break;
                             }
+                            self.wake_comp(ci, self.now);
                             self.clusters[ci].dispatch_cta(kernel, t.next_cta, &gens[ti]);
                             ctas_by_cluster[ti][ci] += 1;
                             t.next_cta += 1;
@@ -1016,6 +1237,7 @@ impl Gpu {
                     } else {
                         'dispatch: for &ci in &t.partition {
                             while t.next_cta < cap && self.clusters[ci].can_accept_cta(kernel) {
+                                self.wake_comp(ci, self.now);
                                 self.clusters[ci].dispatch_cta(kernel, t.next_cta, &gens[ti]);
                                 ctas_by_cluster[ti][ci] += 1;
                                 t.next_cta += 1;
@@ -1083,11 +1305,11 @@ impl Gpu {
                     let next_sample =
                         (self.now / PHASE_SAMPLE_PERIOD + 1) * PHASE_SAMPLE_PERIOD;
                     cap = cap.min(next_sample - 1);
-                    self.try_skip(&GenMap::PerTenant { gens: &gens, owner: &owner }, cap);
+                    self.try_fast_forward(cap);
                 }
             }
 
-            self.tick(&GenMap::PerTenant { gens: &gens, owner: &owner });
+            self.step(&GenMap::PerTenant { gens: &gens, owner: &owner });
 
             // ---- Per-tenant transitions. Tenant index order is part of
             // the deterministic contract (dense and skip runs execute the
@@ -1099,6 +1321,12 @@ impl Gpu {
                 if matches!(tenants[ti].phase, TPhase::Profiling)
                     && self.now >= tenants[ti].profile_start + self.cfg.profile_window
                 {
+                    // Window samples read the tenant's cluster counters:
+                    // replay any parked cluster's lagged accounting first.
+                    for k in 0..tenants[ti].partition.len() {
+                        let ci = tenants[ti].partition[k];
+                        self.sync_comp(ci, self.now);
+                    }
                     let target: Vec<bool> = if tenants[ti].scheme.per_cluster() {
                         let part = tenants[ti].partition.clone();
                         let mut v = Vec::with_capacity(part.len());
@@ -1161,6 +1389,9 @@ impl Gpu {
                 // the quiet fabric, then resume (or open the deferred
                 // profiling window).
                 if matches!(tenants[ti].phase, TPhase::Drain { .. }) && self.drained() {
+                    // The reconfigure below reshapes the chip; every
+                    // parked component replays and resumes first.
+                    self.wake_everything(self.now);
                     for c in &mut self.clusters {
                         c.reap();
                     }
@@ -1196,10 +1427,14 @@ impl Gpu {
                     && self.now >= streams[ti].launches[tenants[ti].kidx].arrival
                 {
                     // Adaptive repartition at the kernel boundary: adopt
-                    // clusters freed by finished tenants.
+                    // clusters freed by finished tenants. The ownership
+                    // baseline snapshot must read dense-exact counters,
+                    // and the divergence-mode write mutates the cluster:
+                    // wake each adoptee.
                     if policy == PartitionPolicy::Adaptive && !free_pool.is_empty() {
                         for ci in free_pool.drain(..) {
                             owner[ci] = ti;
+                            self.wake_comp(ci, self.now);
                             let snap = self.clusters[ci].stats.clone();
                             self.clusters[ci].divergence_mode =
                                 if tenants[ti].scheme == Scheme::Dws {
@@ -1219,8 +1454,11 @@ impl Gpu {
                     );
                     // Every kernel re-arms split policies after its own
                     // decision; clear leftovers from the previous kernel.
+                    // (Kernel start also opens profiling baselines that
+                    // read counters: wake the tenant's clusters.)
                     let part = tenants[ti].partition.clone();
                     for &ci in &part {
+                        self.wake_comp(ci, self.now);
                         self.clusters[ci].split_policy = None;
                     }
                     let uses_pred = tenants[ti].scheme.uses_predictor();
@@ -1254,6 +1492,10 @@ impl Gpu {
                     if self.stream_kernel_complete(&tenants[ti], total) {
                         let part = tenants[ti].partition.clone();
                         for &ci in &part {
+                            // Reap/flush mutate the cluster, and a Done
+                            // tenant's accounting close-out reads its
+                            // counters: replay + resume first.
+                            self.wake_comp(ci, self.now);
                             self.clusters[ci].reap();
                             self.clusters[ci].flush_caches();
                         }
@@ -1288,6 +1530,9 @@ impl Gpu {
                 {
                     tenants[ti].split_check_at = self.now + self.cfg.split_check_period;
                     let part = tenants[ti].partition.clone();
+                    for &ci in &part {
+                        self.wake_comp(ci, self.now);
+                    }
                     let (ds, cls) = (&mut self.dynsplits, &mut self.clusters);
                     for &ci in &part {
                         ds[ci].check(self.now, &mut cls[ci]);
@@ -1314,6 +1559,7 @@ impl Gpu {
                         eprintln!("  cluster {i}: {}", c.debug_state());
                     }
                 }
+                self.wake_everything(self.now);
                 for ti in 0..n {
                     if !matches!(tenants[ti].phase, TPhase::Done) {
                         // Truncated launches keep start/finish at
@@ -1329,6 +1575,10 @@ impl Gpu {
             }
         }
 
+        // Final accounting: anything still parked (idle tail clusters)
+        // replays up to the stop cycle before the chip-wide aggregates
+        // are read.
+        self.wake_everything(self.now);
         self.fold_chip();
         let sm = self.aggregate_sm();
         let tenant_reports: Vec<SimReport> = tenants

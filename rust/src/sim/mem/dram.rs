@@ -46,7 +46,9 @@ pub struct MemoryController {
     row_miss_latency: u64,
     queue_capacity: usize,
     /// Completed replies awaiting pickup (bounded by caller draining).
-    ready: Vec<DramReply>,
+    /// FIFO: popped from the front every cycle, so a deque avoids the
+    /// O(n) shift a `Vec::remove(0)` paid per reply.
+    ready: std::collections::VecDeque<DramReply>,
     /// Stats: row hits / misses scheduled.
     pub row_hits: u64,
     pub row_misses: u64,
@@ -67,7 +69,7 @@ impl MemoryController {
             row_hit_latency: row_hit as u64,
             row_miss_latency: row_miss as u64,
             queue_capacity: queue,
-            ready: Vec::new(),
+            ready: std::collections::VecDeque::new(),
             row_hits: 0,
             row_misses: 0,
             reads: 0,
@@ -111,7 +113,7 @@ impl MemoryController {
             if let Some((_, finish)) = bank.in_service {
                 if now >= finish {
                     let (req, _) = bank.in_service.take().unwrap();
-                    self.ready.push(DramReply {
+                    self.ready.push_back(DramReply {
                         addr: req.addr,
                         is_write: req.is_write,
                         tag: req.tag,
@@ -198,13 +200,9 @@ impl MemoryController {
         ev
     }
 
-    /// Pop one completed reply, if any.
+    /// Pop one completed reply, if any (FIFO).
     pub fn pop_reply(&mut self) -> Option<DramReply> {
-        if self.ready.is_empty() {
-            None
-        } else {
-            Some(self.ready.remove(0))
-        }
+        self.ready.pop_front()
     }
 
     /// Peek whether a reply is waiting (used to account injection stalls).

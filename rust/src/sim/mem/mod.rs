@@ -157,6 +157,12 @@ impl MemPartition {
     /// `out` (the GPU does both every cycle). Pipelined hits fire at
     /// their ready cycle; entries parked on DRAM (`ready == u64::MAX`)
     /// are woken by a fill, which the controller's own horizon covers.
+    ///
+    /// This is also the partition's parking horizon in the active-set
+    /// scheduler: the GPU stops ticking a partition that reports a quiet
+    /// window and wakes it at this cycle — or eagerly, the moment the
+    /// NoC delivers a new request to its node (arrivals are external
+    /// events this probe deliberately does not see).
     pub fn next_event(&self, now: u64) -> crate::sim::NextEvent {
         use crate::sim::NextEvent;
         let mut ev = self.mc.next_event(now);

@@ -6,5 +6,7 @@ pub mod event;
 pub mod gpu;
 pub mod mem;
 pub mod noc;
+pub mod sched;
 
 pub use event::NextEvent;
+pub use sched::ActiveSet;

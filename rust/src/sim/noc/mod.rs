@@ -150,6 +150,15 @@ pub enum Subnet {
 }
 
 /// The interconnect: a mesh (or ideal fabric) over `nodes` endpoints.
+///
+/// The router sweep is **active-set**: only routers with queued packets
+/// are visited each cycle (`busy` lists below), so an idle fabric — or
+/// the idle region of a partially busy one — costs nothing per cycle
+/// instead of an O(routers) walk of empty queues. The sweep visits the
+/// busy subset in exactly the dense loop's rotated order, and a router
+/// that becomes busy mid-sweep holds only packets with a future ready
+/// cycle (pipeline stages + serialization are >= 1), so skipping it
+/// until the next cycle is behaviour-identical to the dense sweep.
 #[derive(Debug)]
 pub struct Noc {
     mode: NocMode,
@@ -170,6 +179,21 @@ pub struct Noc {
     /// one buffer serves every router sweep instead of a fresh `Vec` per
     /// router per cycle).
     moves_scratch: Vec<(Packet, usize)>,
+    /// Routers with queued packets, per subnet (unordered; the sweep
+    /// sorts a snapshot into the rotated visit order).
+    busy: [Vec<u32>; 2],
+    /// Membership flags mirroring `busy`.
+    in_busy: [Vec<bool>; 2],
+    /// Non-empty ejection-queue count per subnet: lets consumers skip
+    /// their delivery scans in O(1) when nothing has arrived.
+    eject_nonempty: [usize; 2],
+    /// Monotone count of packets entering the router fabric. A parked
+    /// NoC component compares it against the value it parked with: a
+    /// difference means an injection happened and the fabric must tick
+    /// again (the active-set wake condition for the interconnect).
+    inject_epoch: u64,
+    /// Reusable rotated-order snapshot of the busy set.
+    order_scratch: Vec<u32>,
 }
 
 impl Noc {
@@ -201,7 +225,32 @@ impl Noc {
             packets_delivered: 0,
             inject_depth: cfg.noc_inject_depth,
             moves_scratch: Vec::with_capacity(8),
+            busy: [Vec::new(), Vec::new()],
+            in_busy: [vec![false; width * height], vec![false; width * height]],
+            eject_nonempty: [0, 0],
+            inject_epoch: 0,
+            order_scratch: Vec::with_capacity(8),
         }
+    }
+
+    /// Record router `r` of `subnet` as holding queued packets.
+    #[inline]
+    fn mark_busy(&mut self, subnet: usize, r: usize) {
+        if !self.in_busy[subnet][r] {
+            self.in_busy[subnet][r] = true;
+            self.busy[subnet].push(r as u32);
+        }
+    }
+
+    /// Push a delivered packet into an ejection queue, tracking the
+    /// non-empty count.
+    #[inline]
+    fn eject_push(&mut self, subnet: usize, node: usize, pkt: Packet) {
+        if self.eject[subnet][node].is_empty() {
+            self.eject_nonempty[subnet] += 1;
+        }
+        self.eject[subnet][node].push_back(pkt);
+        self.packets_delivered += 1;
     }
 
     /// Mesh dimensions (width, height).
@@ -232,17 +281,21 @@ impl Noc {
         match self.mode {
             NocMode::Perfect => {
                 // Ideal fabric: instant delivery.
-                self.eject[subnet as usize][pkt.dst].push_back(pkt);
-                self.packets_delivered += 1;
+                self.eject_push(subnet as usize, pkt.dst, pkt);
                 true
             }
             NocMode::Mesh => {
                 if pkt.src == pkt.dst {
-                    self.eject[subnet as usize][pkt.dst].push_back(pkt);
-                    self.packets_delivered += 1;
+                    self.eject_push(subnet as usize, pkt.dst, pkt);
                     return true;
                 }
-                self.routers[subnet as usize][pkt.src].inject(pkt, self.inject_depth)
+                if self.routers[subnet as usize][pkt.src].inject(pkt, self.inject_depth) {
+                    self.mark_busy(subnet as usize, pkt.src);
+                    self.inject_epoch += 1;
+                    true
+                } else {
+                    false
+                }
             }
         }
     }
@@ -266,40 +319,86 @@ impl Noc {
     }
 
     fn tick_subnet(&mut self, subnet: usize, now: u64) {
+        if self.busy[subnet].is_empty() {
+            return;
+        }
         let width = self.width;
         let height = self.height;
         let n_routers = self.routers[subnet].len();
         // Each router forwards at most one packet per output direction per
-        // cycle. We sweep routers in a rotating order (based on cycle) to
-        // avoid systematic unfairness toward low-indexed nodes.
+        // cycle. The dense loop swept *every* router in a rotating order
+        // (based on cycle) to avoid systematic unfairness toward
+        // low-indexed nodes; here we sweep only the busy subset, sorted
+        // into that same rotated order, which is behaviour-identical:
+        // empty routers move nothing and mutate nothing, and a router
+        // that becomes busy mid-sweep (via `accept`) holds only packets
+        // with `ready > now`, which the dense sweep could not move this
+        // cycle either.
         let start = (now as usize) % n_routers;
+        let mut order = std::mem::take(&mut self.order_scratch);
+        order.clear();
+        order.extend_from_slice(&self.busy[subnet]);
+        order.sort_unstable_by_key(|&r| (r as usize + n_routers - start) % n_routers);
         // The scratch buffer is taken out of `self` for the sweep so the
         // borrow checker lets us touch other routers while draining it.
         let mut moves = std::mem::take(&mut self.moves_scratch);
-        for step in 0..n_routers {
-            let r = (start + step) % n_routers;
+        for &r in &order {
+            let r = r as usize;
             // Decide moves out of router r.
             self.routers[subnet][r].plan_moves_into(now, r, width, height, &mut moves);
             for (pkt, next) in moves.drain(..) {
                 if next == usize::MAX {
                     // Arrived: eject (bounded only by consumer draining).
-                    self.eject[subnet][pkt.dst].push_back(pkt);
-                    self.packets_delivered += 1;
+                    self.eject_push(subnet, pkt.dst, pkt);
                     self.flits_routed += pkt.flits as u64;
                 } else {
                     // Hop latency: pipeline stages + serialization.
                     let ready = now + self.routers[subnet][r].stages + pkt.flits as u64;
                     self.routers[subnet][next].accept(pkt, ready);
+                    self.mark_busy(subnet, next);
                     self.flits_routed += pkt.flits as u64;
                 }
             }
         }
         self.moves_scratch = moves;
+        self.order_scratch = order;
+        // Drop drained routers from the busy set.
+        let mut busy = std::mem::take(&mut self.busy[subnet]);
+        busy.retain(|&r| {
+            let still = self.routers[subnet][r as usize].busy();
+            if !still {
+                self.in_busy[subnet][r as usize] = false;
+            }
+            still
+        });
+        self.busy[subnet] = busy;
     }
 
     /// Pop one delivered packet at `node`, if any.
     pub fn eject(&mut self, subnet: Subnet, node: usize) -> Option<Packet> {
-        self.eject[subnet as usize][node].pop_front()
+        let q = &mut self.eject[subnet as usize][node];
+        let pkt = q.pop_front();
+        if pkt.is_some() && q.is_empty() {
+            self.eject_nonempty[subnet as usize] -= 1;
+        }
+        pkt
+    }
+
+    /// Is a delivered packet waiting at `node`?
+    pub fn has_ejectable(&self, subnet: Subnet, node: usize) -> bool {
+        !self.eject[subnet as usize][node].is_empty()
+    }
+
+    /// Number of nodes with non-empty ejection queues on `subnet` (O(1);
+    /// consumers use it to skip their delivery scans entirely).
+    pub fn ejectable_nodes(&self, subnet: Subnet) -> usize {
+        self.eject_nonempty[subnet as usize]
+    }
+
+    /// Monotone injection counter: a parked interconnect component is
+    /// revived whenever this moved past the value it parked with.
+    pub fn inject_epoch(&self) -> u64 {
+        self.inject_epoch
     }
 
     /// Earliest cycle at which ticking the NoC (or draining its ejection
@@ -311,18 +410,27 @@ impl Noc {
     /// movable, so it never invalidates a reported horizon.
     pub fn next_event(&self, now: u64) -> crate::sim::NextEvent {
         use crate::sim::NextEvent;
-        if self.eject.iter().any(|e| e.iter().any(|q| !q.is_empty())) {
+        if self.eject_nonempty.iter().any(|&c| c > 0) {
             return NextEvent::Progress;
         }
+        self.router_next_event(now)
+    }
+
+    /// Earliest cycle at which the *router fabric* could move a packet,
+    /// ignoring the ejection queues (those are the consumers' concern:
+    /// the active-set GPU loop tracks them via [`Noc::ejectable_nodes`]
+    /// and parks the fabric on this horizon alone).
+    pub fn router_next_event(&self, now: u64) -> crate::sim::NextEvent {
+        use crate::sim::NextEvent;
         if self.mode == NocMode::Perfect {
             // Perfect fabric: delivery happens at injection time; ticking
             // an empty network is a no-op.
             return NextEvent::Idle;
         }
         let mut ev = NextEvent::Idle;
-        for routers in &self.routers {
-            for (node, router) in routers.iter().enumerate() {
-                ev = ev.min_with(router.next_event(now, node, self.width));
+        for (subnet, routers) in self.routers.iter().enumerate() {
+            for &r in &self.busy[subnet] {
+                ev = ev.min_with(routers[r as usize].next_event(now, r as usize, self.width));
                 if ev == NextEvent::Progress {
                     return ev;
                 }
@@ -331,10 +439,10 @@ impl Noc {
         ev
     }
 
-    /// Any packets still in flight anywhere?
+    /// Any packets still in flight anywhere? O(1) against the busy-router
+    /// and non-empty-ejection bookkeeping.
     pub fn busy(&self) -> bool {
-        self.eject.iter().any(|e| e.iter().any(|q| !q.is_empty()))
-            || self.routers.iter().any(|rs| rs.iter().any(|r| r.busy()))
+        self.eject_nonempty.iter().any(|&c| c > 0) || self.busy.iter().any(|b| !b.is_empty())
     }
 
     /// Per-router queue occupancy summary (deadlock diagnostics).
@@ -515,6 +623,57 @@ mod tests {
         // The NoC built from the layout covers exactly these endpoints.
         let noc = Noc::new(&cfg(), &l);
         assert_eq!(noc.nodes(), 8);
+    }
+
+    #[test]
+    fn busy_bookkeeping_tracks_queues_and_ejections() {
+        let mut noc = Noc::with_nodes(&cfg(), 9);
+        assert!(!noc.busy());
+        assert_eq!(noc.ejectable_nodes(Subnet::Request), 0);
+        let e0 = noc.inject_epoch();
+        assert!(noc.inject(Subnet::Request, pkt(0, 5, 2, 0)));
+        assert!(noc.inject_epoch() > e0, "router injection bumps the epoch");
+        assert!(noc.busy(), "queued packet marks the fabric busy");
+        let mut t = 0;
+        while noc.ejectable_nodes(Subnet::Request) == 0 && t < 200 {
+            noc.tick(t);
+            t += 1;
+        }
+        assert_eq!(noc.ejectable_nodes(Subnet::Request), 1);
+        assert!(noc.has_ejectable(Subnet::Request, 5));
+        assert!(noc.eject(Subnet::Request, 5).is_some());
+        assert_eq!(noc.ejectable_nodes(Subnet::Request), 0);
+        assert!(!noc.busy(), "drained fabric is no longer busy");
+        // Self-delivery and Perfect mode bypass the routers: no epoch bump,
+        // but the ejectable count still tracks.
+        let e1 = noc.inject_epoch();
+        assert!(noc.inject(Subnet::Reply, pkt(3, 3, 1, t)));
+        assert_eq!(noc.inject_epoch(), e1);
+        assert_eq!(noc.ejectable_nodes(Subnet::Reply), 1);
+        assert!(noc.eject(Subnet::Reply, 3).is_some());
+    }
+
+    #[test]
+    fn active_sweep_matches_rotated_visit_order_under_contention() {
+        // Two sources feed one sink; the busy-subset sweep must arbitrate
+        // exactly like the dense rotated sweep: conservation plus a
+        // deterministic delivery count per cycle.
+        let mut noc = Noc::with_nodes(&cfg(), 9);
+        let mut sent = 0u32;
+        let mut got = 0u32;
+        for t in 0..3_000u64 {
+            for src in [0usize, 8] {
+                if sent < 60 && noc.inject(Subnet::Request, pkt(src, 4, 3, t)) {
+                    sent += 1;
+                }
+            }
+            noc.tick(t);
+            while noc.eject(Subnet::Request, 4).is_some() {
+                got += 1;
+            }
+        }
+        assert_eq!(sent, got, "active-set sweep must conserve packets");
+        assert!(!noc.busy());
     }
 
     #[test]

@@ -159,6 +159,12 @@ impl Router {
     /// port has finished serializing the previous packet. Arbitration
     /// (two ready packets on one port) only matters when at least one is
     /// already movable, which is `Progress` regardless.
+    ///
+    /// The [`super::Noc`] folds this over its busy routers only — an
+    /// empty router is vacuously `Idle` and is neither swept nor probed,
+    /// which is what lets interconnect cost track live traffic rather
+    /// than fabric size (the active-set contract: a parked router is
+    /// revived by the `accept`/`inject` that makes it busy again).
     pub fn next_event(&self, now: u64, here: usize, width: usize) -> crate::sim::NextEvent {
         use crate::sim::NextEvent;
         let mut ev = NextEvent::Idle;

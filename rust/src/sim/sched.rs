@@ -1,0 +1,226 @@
+//! The per-component active-set scheduler's parking structure.
+//!
+//! The event-horizon engine of PR 3 was all-or-nothing: the chip either
+//! ticked every component densely or fast-forwarded past a window in
+//! which *nothing* could act. [`ActiveSet`] generalises that to
+//! per-component sleep/wake: each component (SM cluster, memory
+//! partition, the router fabric) that promises a quiet window via its
+//! `next_event` is **parked** here with its wake cycle, and the GPU loop
+//! ticks only the components that remain active — so the cost of a cycle
+//! scales with the amount of *live* work, not with the size of the chip.
+//!
+//! Parking is purely a wall-clock optimisation and carries three
+//! obligations (and only these — the *policy* of when to park is free):
+//!
+//! 1. a component may only be parked when its `next_event` promises no
+//!    state change before the wake cycle;
+//! 2. any external event that could affect a parked component (packet
+//!    arrival, DRAM fill, CTA dispatch, reconfiguration, a stats read)
+//!    must [`ActiveSet::wake`] (or [`ActiveSet::sync`]) it first;
+//! 3. the per-cycle accounting a parked component missed is replayed in
+//!    O(1) over the parked window `[park, wake)` — the window the wake
+//!    call reports back to the caller.
+//!
+//! Under those rules any parking policy produces bit-identical reports
+//! to the dense loop, which is what `tests/exec_determinism.rs` and the
+//! golden suite enforce end to end.
+//!
+//! Internally this is a binary heap of `(wake_cycle, component)` with
+//! lazy invalidation: stale entries (the component was woken eagerly by
+//! an event before its timer fired, or re-parked with a new wake) are
+//! dropped when they surface at the top. Components parked as
+//! [`crate::sim::NextEvent::Idle`] carry no timer at all — only an
+//! external event can revive them.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Wake cycle of a component parked with no internal event pending.
+const IDLE: u64 = u64::MAX;
+
+/// Wake-ordered parking structure for the chip's components.
+///
+/// Components are dense indices `0..n` assigned by the owner (the GPU
+/// maps clusters first, then memory partitions, then the NoC).
+#[derive(Debug)]
+pub struct ActiveSet {
+    /// Scheduled wake cycle while parked (`IDLE` = event-free); unused
+    /// while active.
+    wake_at: Vec<u64>,
+    /// First cycle the component was *not* ticked (valid while parked):
+    /// the start of the accounting-replay window.
+    park_from: Vec<u64>,
+    active: Vec<bool>,
+    active_count: usize,
+    /// Min-heap of (wake cycle, component); may hold stale entries.
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+}
+
+impl ActiveSet {
+    /// Build with all `n` components active (the dense-equivalent state).
+    pub fn new(n: usize) -> Self {
+        ActiveSet {
+            wake_at: vec![0; n],
+            park_from: vec![0; n],
+            active: vec![true; n],
+            active_count: n,
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    /// Is `c` being ticked every cycle?
+    #[inline]
+    pub fn is_active(&self, c: usize) -> bool {
+        self.active[c]
+    }
+
+    /// Every component parked (the whole-chip fast-forward condition)?
+    #[inline]
+    pub fn all_parked(&self) -> bool {
+        self.active_count == 0
+    }
+
+    /// Park `c`: it will not be ticked from cycle `from` (exclusive of
+    /// any tick that already ran) until `wake` — or until an external
+    /// event wakes it earlier. `wake == u64::MAX` parks without a timer
+    /// (the component is event-free). Caller guarantees the component's
+    /// `next_event` promised no state change before `wake`.
+    pub fn park(&mut self, c: usize, from: u64, wake: u64) {
+        debug_assert!(self.active[c], "parking an already-parked component");
+        debug_assert!(wake > from, "park window must be non-empty");
+        self.active[c] = false;
+        self.active_count -= 1;
+        self.park_from[c] = from;
+        self.wake_at[c] = wake;
+        if wake != IDLE {
+            self.heap.push(Reverse((wake, c as u32)));
+        }
+    }
+
+    /// Wake `c` so it ticks from cycle `upto` onward. Returns the parked
+    /// window `[from, upto)` whose per-cycle accounting the caller must
+    /// replay, or `None` if `c` was already active (wake is idempotent).
+    pub fn wake(&mut self, c: usize, upto: u64) -> Option<(u64, u64)> {
+        if self.active[c] {
+            return None;
+        }
+        self.active[c] = true;
+        self.active_count += 1;
+        // A heap entry may remain; it is dropped lazily when it surfaces.
+        Some((self.park_from[c], upto))
+    }
+
+    /// Replay-sync a parked component without waking it: returns the
+    /// window `[from, upto)` to replay and restarts the parked window at
+    /// `upto`. Used for pure reads (stats sampling) of parked components
+    /// whose quiet-window promise still holds. `None` if `c` is active.
+    pub fn sync(&mut self, c: usize, upto: u64) -> Option<(u64, u64)> {
+        if self.active[c] {
+            return None;
+        }
+        let from = self.park_from[c];
+        debug_assert!(upto <= self.wake_at[c], "sync past the promised wake");
+        self.park_from[c] = upto.max(from);
+        Some((from, upto))
+    }
+
+    /// Wake every component whose timer is due at or before `now`,
+    /// calling `f(component, replay_from, replay_upto)` for each.
+    pub fn wake_due(&mut self, now: u64, mut f: impl FnMut(usize, u64, u64)) {
+        while let Some(&Reverse((t, c))) = self.heap.peek() {
+            if t > now {
+                break;
+            }
+            self.heap.pop();
+            let c = c as usize;
+            // Stale if woken eagerly in the meantime or re-parked with a
+            // different timer.
+            if self.active[c] || self.wake_at[c] != t {
+                continue;
+            }
+            if let Some((from, upto)) = self.wake(c, now) {
+                f(c, from, upto);
+            }
+        }
+    }
+
+    /// Earliest scheduled wake among parked components, if any timer is
+    /// pending (purges stale heap entries as a side effect).
+    pub fn next_wake(&mut self) -> Option<u64> {
+        while let Some(&Reverse((t, c))) = self.heap.peek() {
+            let c = c as usize;
+            if self.active[c] || self.wake_at[c] != t {
+                self.heap.pop();
+                continue;
+            }
+            return Some(t);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_fully_active() {
+        let s = ActiveSet::new(3);
+        assert!(!s.all_parked());
+        assert!((0..3).all(|c| s.is_active(c)));
+    }
+
+    #[test]
+    fn park_wake_reports_replay_window() {
+        let mut s = ActiveSet::new(2);
+        s.park(0, 10, 50);
+        assert!(!s.is_active(0));
+        assert!(s.is_active(1));
+        assert!(!s.all_parked());
+        // Eager wake at 30: replay [10, 30).
+        assert_eq!(s.wake(0, 30), Some((10, 30)));
+        assert!(s.is_active(0));
+        // Idempotent.
+        assert_eq!(s.wake(0, 31), None);
+    }
+
+    #[test]
+    fn wake_due_fires_timers_in_order_and_drops_stale() {
+        let mut s = ActiveSet::new(3);
+        s.park(0, 5, 20);
+        s.park(1, 5, 10);
+        s.park(2, 5, u64::MAX); // idle: no timer
+        assert!(s.all_parked());
+        assert_eq!(s.next_wake(), Some(10));
+        // Component 0 is woken eagerly, then re-parked later.
+        assert_eq!(s.wake(0, 7), Some((5, 7)));
+        s.park(0, 8, 15);
+        let mut woken = Vec::new();
+        s.wake_due(15, |c, from, upto| woken.push((c, from, upto)));
+        // 1 fires at its timer, 0 at its re-parked timer; the stale
+        // (20, 0) entry must not wake anything; 2 stays idle-parked.
+        woken.sort_unstable();
+        assert_eq!(woken, vec![(0, 8, 15), (1, 5, 15)]);
+        assert!(!s.is_active(2));
+        assert_eq!(s.next_wake(), None, "only the idle component remains");
+    }
+
+    #[test]
+    fn sync_replays_without_waking() {
+        let mut s = ActiveSet::new(1);
+        s.park(0, 10, 100);
+        assert_eq!(s.sync(0, 40), Some((10, 40)));
+        assert!(!s.is_active(0));
+        assert_eq!(s.sync(0, 60), Some((40, 60)), "window restarts at the sync point");
+        assert_eq!(s.wake(0, 100), Some((60, 100)), "wake replays the tail only");
+    }
+
+    #[test]
+    fn next_wake_skips_stale_entries() {
+        let mut s = ActiveSet::new(2);
+        s.park(0, 0, 8);
+        s.park(1, 0, 12);
+        s.wake(0, 3);
+        assert_eq!(s.next_wake(), Some(12));
+    }
+}

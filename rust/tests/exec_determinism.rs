@@ -263,6 +263,41 @@ fn stream_cycle_skip_matches_dense() {
     }
 }
 
+/// The active-set engine's home regime: a *partially* busy chip — one
+/// hot memory-divergent tenant keeps issuing while every other tenant
+/// finished long ago, so the whole-chip quiescence skip rarely fires
+/// and per-component parking carries the win. The per-cluster
+/// sleep/wake and the lazy accounting replay must stay bit-identical
+/// to the dense loop here too.
+#[test]
+fn stream_partial_quiescence_matches_dense() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.num_sms = 8; // 4 clusters, one mostly-idle after the CP tenants finish
+    cfg.num_mcs = 4;
+    cfg.max_cycles = 1_500_000;
+    let mut hot = bench("BFS").unwrap();
+    hot.num_ctas = 8;
+    hot.insns_per_thread = 80;
+    hot.num_kernels = 3;
+    let hot = KernelStream::back_to_back("hot:BFS", hot, Scheme::Baseline, 0xB0F5);
+    let mut idle = bench("CP").unwrap();
+    idle.num_ctas = 2;
+    idle.insns_per_thread = 20;
+    idle.num_kernels = 1;
+    let streams = vec![
+        hot,
+        KernelStream::back_to_back("idle0:CP", idle.clone(), Scheme::Baseline, 0xA1),
+        KernelStream::back_to_back("idle1:CP", idle, Scheme::Baseline, 0xA2),
+    ];
+    for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
+        let label = format!("one-hot-tenant under {policy}");
+        let dense = serve_streams_dense(&cfg, &streams, policy, true);
+        let active = serve_streams_dense(&cfg, &streams, policy, false);
+        assert!(dense.launches.iter().all(|l| l.finish != u64::MAX), "{label}: served");
+        assert_stream_reports_identical(&dense, &active, &label);
+    }
+}
+
 /// Stream sweeps through the executor: parallel fan-out must equal the
 /// serial path bit for bit, and re-running a batch must be pure cache
 /// hits (the same contracts the single-application sweep obeys).

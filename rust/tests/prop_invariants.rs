@@ -6,7 +6,7 @@
 use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::isa::{AccessPattern, ActiveMask};
 use amoeba_gpu::sim::core::{ClusterMode, SmCluster};
-use amoeba_gpu::sim::gpu::{serve_streams, PartitionPolicy};
+use amoeba_gpu::sim::gpu::{serve_streams, serve_streams_dense, PartitionPolicy};
 use amoeba_gpu::sim::mem::{
     coalesce, coalesce_fused, Access, Cache, DramRequest, MemPartition, MemoryController,
 };
@@ -650,6 +650,197 @@ fn prop_stream_quiescence_horizon_tightness() {
         assert!(clusters[0].stats.thread_insns > 0 && clusters[1].stats.thread_insns > 0);
         assert_eq!(clusters[0].completed_ctas(), 2, "case {case}");
         assert_eq!(clusters[1].completed_ctas(), 2, "case {case}");
+    }
+}
+
+/// Wake completeness at cluster granularity: a cluster driven with
+/// per-component parking (don't tick inside a promised window; wake
+/// eagerly on every event that can unblock it — reply packet, fill,
+/// CTA dispatch — replaying the parked accounting in O(1) via
+/// [`SmCluster::skip`]) must end bit-identical to a twin ticked densely
+/// every cycle. A wake that arrives later than the cycle the component
+/// can first make progress, or an incomplete accounting replay, makes
+/// the twins diverge — in issue order, stall breakdown, or both.
+///
+/// Parking here uses *no* minimum-window threshold (unlike the GPU
+/// loop's policy), so every promised horizon — even a one-cycle issue
+/// port hold — exercises the park/wake machinery.
+#[test]
+fn prop_parked_cluster_wake_completeness() {
+    let mut rng = Pcg32::new(0xAC71, 13);
+    for case in 0..6 {
+        let cfg = SystemConfig::tiny();
+        let names = ["BFS", "CP", "RAY", "MUM"];
+        let p = bench(names[rng.next_bounded(4) as usize]).unwrap();
+        let mut p = p;
+        p.num_ctas = 2;
+        p.insns_per_thread = 40 + rng.next_bounded(40);
+        let k = kernel_launches(&p, rng.next_u64())[0].clone();
+        let gen = TraceGen::new(&p, &k);
+        let latency = 20 + rng.next_bounded(60) as u64;
+        let second_dispatch = 50 + rng.next_bounded(400) as u64;
+        let label = format!("case {case}: {} lat {latency} disp2 @{second_dispatch}", p.name);
+
+        // Twin A is ticked densely; twin B parks on every promised
+        // horizon and is woken only by its timer or by events.
+        let mk = || SmCluster::new(0, &cfg, ClusterMode::PrivatePair);
+        let (mut dense, mut lazy) = (mk(), mk());
+        // Nodes 0/1 = the cluster's halves, 2.. = MCs.
+        let nodes = [0usize, 1];
+        let n_nodes = 2 + cfg.num_mcs;
+        let (mut noc_d, mut noc_l) = (Noc::with_nodes(&cfg, n_nodes), Noc::with_nodes(&cfg, n_nodes));
+        dense.dispatch_cta(&k, 0, &gen);
+        lazy.dispatch_cta(&k, 0, &gen);
+        let mut dispatched = 1u32;
+
+        // Scripted memory: every ejected request is answered after a
+        // fixed latency (per twin, from its own noc).
+        let mut mem_d: Vec<(u64, Packet)> = Vec::new();
+        let mut mem_l: Vec<(u64, Packet)> = Vec::new();
+        // Parked window of the lazy twin: (first unticked cycle, wake).
+        let mut parked: Option<(u64, u64)> = None;
+
+        let mut t = 0u64;
+        loop {
+            assert!(t < 400_000, "{label}: twins never drained");
+            // Mid-run CTA dispatch: an external event that must wake a
+            // parked cluster before it lands.
+            if t == second_dispatch && dispatched < k.num_ctas {
+                assert_eq!(
+                    dense.can_accept_cta(&k),
+                    lazy.can_accept_cta(&k),
+                    "{label}: twins disagree on acceptance"
+                );
+                if dense.can_accept_cta(&k) {
+                    dense.dispatch_cta(&k, dispatched, &gen);
+                    if let Some((from, _)) = parked.take() {
+                        lazy.skip(from, t - from);
+                    }
+                    lazy.dispatch_cta(&k, dispatched, &gen);
+                    dispatched += 1;
+                }
+            }
+
+            // Twin A: dense tick, always.
+            dense.tick(t, &mut noc_d, nodes, &gen);
+            // Twin B: tick only when live; park on any promise.
+            if let Some((from, wake)) = parked {
+                if t >= wake {
+                    lazy.skip(from, t - from);
+                    parked = None;
+                }
+            }
+            if parked.is_none() {
+                lazy.tick(t, &mut noc_l, nodes, &gen);
+                parked = lazy.next_event(t + 1, &gen).wake_cycle().map(|w| (t + 1, w));
+            }
+
+            // Shared environment, per twin: NoC + scripted memory.
+            for (noc, mem) in [(&mut noc_d, &mut mem_d), (&mut noc_l, &mut mem_l)] {
+                noc.tick(t);
+                for mc_node in 2..n_nodes {
+                    while let Some(rq) = noc.eject(Subnet::Request, mc_node) {
+                        if let Payload::MemRequest { line, requester, is_write } = rq.payload {
+                            let reply = Packet {
+                                src: mc_node,
+                                dst: rq.src,
+                                flits: if is_write { 1 } else { 9 },
+                                born: t,
+                                payload: Payload::MemReply { line, requester, is_write },
+                            };
+                            mem.push((t + latency, reply));
+                        }
+                    }
+                }
+                let mut i = 0;
+                while i < mem.len() {
+                    if mem[i].0 <= t && noc.inject(Subnet::Reply, mem[i].1) {
+                        mem.swap_remove(i);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            // Reply delivery: an event wake for the parked twin, replayed
+            // through this cycle (the dense loop ticked it pre-reply).
+            for node in 0..2 {
+                while let Some(pkt) = noc_d.eject(Subnet::Reply, node) {
+                    if let Payload::MemReply { line, is_write, .. } = pkt.payload {
+                        dense.on_reply(t, line, is_write);
+                    }
+                }
+                while let Some(pkt) = noc_l.eject(Subnet::Reply, node) {
+                    if let Payload::MemReply { line, is_write, .. } = pkt.payload {
+                        if let Some((from, _)) = parked.take() {
+                            lazy.skip(from, (t + 1) - from);
+                        }
+                        lazy.on_reply(t, line, is_write);
+                    }
+                }
+            }
+
+            t += 1;
+            let done = dispatched >= k.num_ctas.min(2)
+                && dense.idle()
+                && lazy.idle()
+                && mem_d.is_empty()
+                && mem_l.is_empty()
+                && !noc_d.busy()
+                && !noc_l.busy()
+                && t > second_dispatch;
+            if done {
+                break;
+            }
+        }
+        // Close the lazy twin's accounting at the stop cycle.
+        if let Some((from, _)) = parked.take() {
+            lazy.skip(from, t - from);
+        }
+        assert_eq!(
+            dense.progress_probe(),
+            lazy.progress_probe(),
+            "{label}: observable progress diverged"
+        );
+        assert_eq!(dense.stats, lazy.stats, "{label}: stats diverged (late/missed wake)");
+        assert_eq!(dense.completed_ctas(), lazy.completed_ctas(), "{label}");
+        assert!(dense.stats.thread_insns > 0, "{label}: twin ran no work");
+    }
+}
+
+/// Adversarial active-set regression, seeded from a Hetero +
+/// DynSplit-active multi-tenant run: low split thresholds and short
+/// check periods keep clusters splitting/re-fusing (external mutations
+/// of parked-cluster state), a Hetero tenant exercises per-cluster
+/// decisions on mixed layouts, and interleaved arrivals exercise
+/// stream-arrival wakes. The active-set engine must stay bit-identical
+/// to the dense loop through all of it.
+#[test]
+fn active_set_regression_hetero_dynsplit_streams() {
+    for seed in [0xA5E7_0001u64, 0xA5E7_0002] {
+        let mut cfg = SystemConfig::tiny();
+        cfg.num_sms = 8; // 4 clusters
+        cfg.num_mcs = 4;
+        cfg.max_cycles = 1_500_000;
+        cfg.split_threshold = 0.05;
+        cfg.split_check_period = 128;
+        cfg.rebalance_period = 256;
+        let tenants = [
+            (bench("RAY").unwrap(), Scheme::Hetero),
+            (bench("RAY").unwrap(), Scheme::WarpRegroup),
+            (bench("BFS").unwrap(), Scheme::Dws),
+        ];
+        let mut streams = traffic_trace(&tenants, 2, 3_000, seed);
+        shrink_streams(&mut streams, 5, 60);
+        for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
+            let label = format!("seed {seed:#x} under {policy}");
+            let dense = serve_streams_dense(&cfg, &streams, policy, true);
+            let active = serve_streams_dense(&cfg, &streams, policy, false);
+            assert!(
+                dense.launches.iter().all(|l| l.finish != u64::MAX),
+                "{label}: all launches served"
+            );
+            assert_eq!(dense, active, "{label}: active-set diverged from dense");
+        }
     }
 }
 
