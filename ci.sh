@@ -66,6 +66,20 @@ run_timed "golden_reports (active-set)" env AMOEBA_DENSE=0 cargo test -q --test 
 run_timed "exec_determinism (active-set)" env AMOEBA_DENSE=0 cargo test -q --test exec_determinism
 run_timed "prop_invariants (active-set)" env AMOEBA_DENSE=0 cargo test -q --test prop_invariants
 
+echo "== fault-mode determinism pass (AMOEBA_DENSE=0/1) =="
+# The fault-injection paths (half-SM retirement, cluster retirement, NoC
+# degrade, MC stalls) must hold the skip==dense contract too: run the
+# faulted determinism tests and the fault property tests explicitly
+# under both execution modes.
+run_timed "fault determinism (active-set)" env AMOEBA_DENSE=0 \
+    cargo test -q --test exec_determinism faulted
+run_timed "fault determinism (dense)" env AMOEBA_DENSE=1 \
+    cargo test -q --test exec_determinism faulted
+run_timed "fault invariants (active-set)" env AMOEBA_DENSE=0 \
+    cargo test -q --test prop_invariants fault retired_cluster
+run_timed "fault invariants (dense)" env AMOEBA_DENSE=1 \
+    cargo test -q --test prop_invariants fault retired_cluster
+
 # `status --porcelain` reports both modified tracked goldens and brand-new
 # (untracked) ones.
 if [ -n "$(git status --porcelain -- rust/tests/goldens 2>/dev/null)" ]; then
@@ -99,6 +113,17 @@ awk -v b="$best" 'BEGIN { exit !(b >= 2.0) }' || {
 # An actual record, not the stale `"server_sweep": null` marker.
 grep -q '"server_sweep": {' BENCH_sweep.json || {
     echo "ERROR: BENCH_sweep.json has no measured server_sweep record" >&2
+    exit 1
+}
+# Fault plumbing must be measured and free when unused: the bench
+# asserts bit-identity of no-trace vs empty-trace in-process, and the
+# record proves the assertion actually ran.
+grep -q '"fault_sweep": {' BENCH_sweep.json || {
+    echo "ERROR: BENCH_sweep.json has no measured fault_sweep record" >&2
+    exit 1
+}
+grep -q '"identical": true' BENCH_sweep.json || {
+    echo "ERROR: fault_sweep record did not confirm empty-trace identity" >&2
     exit 1
 }
 # Active-set acceptance: the one-hot-tenant (partial-quiescence) profile

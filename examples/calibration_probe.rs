@@ -34,7 +34,7 @@ fn main() {
     }
     for scheme in [Scheme::Baseline, Scheme::ScaleUp] {
         let t0 = std::time::Instant::now();
-        let r = run_benchmark_seeded(&cfg, &p, scheme, 9);
+        let r = run_benchmark_seeded(&cfg, &p, scheme, 9).unwrap();
         println!("{scheme:12}: cycles={} ipc={:.2} l1d_miss={:.3} noc_lat={:.0} mc_stall={:.3} ctrl={:.3} mem_stall={} wall={:.1}s",
             r.cycles, r.ipc(), r.sm.l1d_miss_rate(), r.sm.avg_noc_latency(),
             r.chip.mc_inject_stall_rate(), r.sm.control_stall_rate(), r.sm.stall_memory, t0.elapsed().as_secs_f32());

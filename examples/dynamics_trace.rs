@@ -15,7 +15,7 @@ fn main() -> amoeba_gpu::errors::Result<()> {
         bench(&name).ok_or_else(|| amoeba_gpu::errors::err(format!("unknown benchmark '{name}'")))?;
     let cfg = SystemConfig::gtx480();
     println!("tracing {name} under warp_regrouping ({} clusters)...", cfg.num_sms / 2);
-    let r = run_benchmark(&cfg, &profile, Scheme::WarpRegroup);
+    let r = run_benchmark(&cfg, &profile, Scheme::WarpRegroup)?;
 
     // Render the first 5 clusters (as the paper's Fig 19 does).
     let shown = 5.min(cfg.num_sms / 2);

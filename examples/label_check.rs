@@ -14,8 +14,8 @@ fn main() {
     let mut ok = 0;
     let mut n = 0;
     for p in all_benchmarks() {
-        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9).ipc();
-        let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, 9).ipc();
+        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9).unwrap().ipc();
+        let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, 9).unwrap().ipc();
         let ratio = fused / base;
         let measured_up = ratio > 1.02;
         let m = measured_up == p.scale_up_expected;

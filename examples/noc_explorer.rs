@@ -30,7 +30,7 @@ fn main() -> amoeba_gpu::errors::Result<()> {
             for n in sm_counts {
                 let mut cfg = SystemConfig::gtx480().with_sm_count(n);
                 cfg.noc_mode = mode;
-                let ipc = run_benchmark(&cfg, &profile, Scheme::Baseline).ipc();
+                let ipc = run_benchmark(&cfg, &profile, Scheme::Baseline)?.ipc();
                 let b = *base.get_or_insert(ipc);
                 row.push(ipc / b);
             }

@@ -15,10 +15,10 @@ fn main() -> Result<()> {
     let cfg = SystemConfig::gtx480();
 
     println!("simulating {name} on the Table-1 machine ({} SMs)...", cfg.num_sms);
-    let base = run_benchmark(&cfg, &profile, Scheme::Baseline);
+    let base = run_benchmark(&cfg, &profile, Scheme::Baseline)?;
     println!("  baseline        : IPC {:.2} ({} cycles)", base.ipc(), base.cycles);
 
-    let amoeba = run_benchmark(&cfg, &profile, Scheme::WarpRegroup);
+    let amoeba = run_benchmark(&cfg, &profile, Scheme::WarpRegroup)?;
     println!("  AMOEBA(regroup) : IPC {:.2} ({} cycles)", amoeba.ipc(), amoeba.cycles);
     for (i, d) in amoeba.decisions.iter().enumerate() {
         println!(

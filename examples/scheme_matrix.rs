@@ -11,7 +11,7 @@ fn main() {
     let cfg = SystemConfig::gtx480();
     for name in std::env::args().skip(1) {
         let p = bench(&name).unwrap();
-        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9).ipc();
+        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9).unwrap().ipc();
         print!("{name:5} base={base:6.1} |");
         for s in [
             Scheme::ScaleUp,
@@ -21,7 +21,7 @@ fn main() {
             Scheme::Hetero,
             Scheme::Dws,
         ] {
-            let r = run_benchmark_seeded(&cfg, &p, s, 9);
+            let r = run_benchmark_seeded(&cfg, &p, s, 9).unwrap();
             print!(" {s}={:.2}({}sp/{}fu)", r.ipc() / base, r.sm.split_events, r.sm.fuse_events);
         }
         println!();

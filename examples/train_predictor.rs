@@ -129,10 +129,10 @@ fn main() -> amoeba_gpu::errors::Result<()> {
         for &seed in seeds {
             // The chip-wide profiling sample comes from a StaticFuse run
             // (it always profiles in scale-out mode first).
-            let probe = run_benchmark_seeded(&cfg, &p, Scheme::StaticFuse, seed);
-            let hetero_probe = run_benchmark_seeded(&cfg, &p, Scheme::Hetero, seed);
-            let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, seed);
-            let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, seed);
+            let probe = run_benchmark_seeded(&cfg, &p, Scheme::StaticFuse, seed)?;
+            let hetero_probe = run_benchmark_seeded(&cfg, &p, Scheme::Hetero, seed)?;
+            let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, seed)?;
+            let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, seed)?;
             let label = (fused.ipc() > base.ipc()) as u8 as f32;
             for s in &probe.samples {
                 xs.push(s.as_f32());
@@ -264,8 +264,8 @@ fn main() -> amoeba_gpu::errors::Result<()> {
         None => Box::new(NativePredictor::with_coeffs(default_fit)),
     };
     let controller = Controller::with_predictor(predictor);
-    let amoeba = run_benchmark_with_controller(&cfg, &p, Scheme::WarpRegroup, controller, 7);
-    let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 7);
+    let amoeba = run_benchmark_with_controller(&cfg, &p, Scheme::WarpRegroup, controller, 7)?;
+    let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 7)?;
     println!(
         "\n  SM with the fitted predictor: {:.2}x over baseline",
         amoeba.ipc() / base.ipc().max(1e-9)

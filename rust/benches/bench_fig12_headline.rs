@@ -22,9 +22,9 @@ fn main() {
             p.insns_per_thread = 100;
             p.num_kernels = 1;
             let label = format!("{name}_{scheme}");
-            let r = b.bench(&label, || run_benchmark_seeded(&cfg, &p, scheme, 0xBE7C));
+            let r = b.bench(&label, || run_benchmark_seeded(&cfg, &p, scheme, 0xBE7C).unwrap());
             // Report simulated-cycles/sec as the throughput figure.
-            let report = run_benchmark_seeded(&cfg, &p, scheme, 0xBE7C);
+            let report = run_benchmark_seeded(&cfg, &p, scheme, 0xBE7C).unwrap();
             let cps = report.cycles as f64 / r.median.as_secs_f64();
             println!("    -> {:.2} Mcycles/s simulated ({} cycles)", cps / 1e6, report.cycles);
         }

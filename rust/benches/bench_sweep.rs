@@ -18,8 +18,10 @@ use std::time::Instant;
 use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::harness::{SimJob, SweepExec};
 use amoeba_gpu::runtime::serve;
+use amoeba_gpu::sim::fault::FaultTrace;
 use amoeba_gpu::sim::gpu::{
-    run_benchmark_seeded, run_benchmark_seeded_dense, serve_streams_dense, PartitionPolicy,
+    run_benchmark_faulted, run_benchmark_seeded, run_benchmark_seeded_dense, serve_streams_dense,
+    PartitionPolicy,
 };
 use amoeba_gpu::workload::{
     bench, shrink_streams, traffic_trace, BenchProfile, KernelStream, FIG12_SET,
@@ -79,7 +81,9 @@ fn main() {
     // -------- Before: serial replay, no memoization (old behaviour).
     let t0 = Instant::now();
     for job in &jobs {
-        std::hint::black_box(run_benchmark_seeded(&job.cfg, &job.profile, job.scheme, job.seed));
+        std::hint::black_box(
+            run_benchmark_seeded(&job.cfg, &job.profile, job.scheme, job.seed).unwrap(),
+        );
     }
     let serial = t0.elapsed();
     eprintln!("[bench_sweep] serial replay      : {:.2} s", serial.as_secs_f64());
@@ -123,10 +127,10 @@ fn main() {
         let mut p = quick_profile(name);
         p.num_ctas = 6; // low occupancy: long quiescent windows
         let t_dense = Instant::now();
-        let dense = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, SEED, true);
+        let dense = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, SEED, true).unwrap();
         let dense_s = t_dense.elapsed().as_secs_f64();
         let t_skip = Instant::now();
-        let skipped = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, SEED, false);
+        let skipped = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, SEED, false).unwrap();
         let skip_s = t_skip.elapsed().as_secs_f64();
         assert_eq!(dense, skipped, "{name}: skip must be bit-identical to dense");
         let ratio = dense_s / skip_s.max(1e-9);
@@ -180,10 +184,12 @@ fn main() {
         ));
     }
     let t_dd = Instant::now();
-    let da_dense = serve_streams_dense(&da_cfg, &da_streams, PartitionPolicy::Static, true);
+    let da_dense =
+        serve_streams_dense(&da_cfg, &da_streams, PartitionPolicy::Static, true).unwrap();
     let da_dense_s = t_dd.elapsed().as_secs_f64();
     let t_da = Instant::now();
-    let da_active = serve_streams_dense(&da_cfg, &da_streams, PartitionPolicy::Static, false);
+    let da_active =
+        serve_streams_dense(&da_cfg, &da_streams, PartitionPolicy::Static, false).unwrap();
     let da_active_s = t_da.elapsed().as_secs_f64();
     assert_eq!(da_dense, da_active, "one-hot-tenant: active-set must be bit-identical to dense");
     let dense_active_speedup = da_dense_s / da_active_s.max(1e-9);
@@ -204,10 +210,10 @@ fn main() {
     let mut streams = traffic_trace(&serve::default_tenants(), 2, 20_000, SEED);
     shrink_streams(&mut streams, 8, 80);
     let t_sd = Instant::now();
-    let sdense = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, true);
+    let sdense = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, true).unwrap();
     let sdense_s = t_sd.elapsed().as_secs_f64();
     let t_ss = Instant::now();
-    let sskip = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, false);
+    let sskip = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, false).unwrap();
     let sskip_s = t_ss.elapsed().as_secs_f64();
     assert_eq!(sdense, sskip, "server run: skip must be bit-identical to dense");
     let stream_skip_ratio = sdense_s / sskip_s.max(1e-9);
@@ -224,8 +230,30 @@ fn main() {
         shared.len() + streams.len()
     );
 
+    // -------- Fault-injection plumbing must be free when unused: the
+    // faulted entry point threads the trace through both cycle loops
+    // (fast-forward caps clamp to the next fault cycle), so this pins
+    // the zero-event case to the plain path — bit-identical report, and
+    // the wall-clock ratio records that the clamp costs nothing when
+    // `next_fault_cycle()` is never finite.
+    eprintln!("[bench_sweep] fault plumbing overhead (empty trace):");
+    let fp = quick_profile("BFS");
+    let t_nf = Instant::now();
+    let no_trace = run_benchmark_seeded(&cfg, &fp, Scheme::Baseline, SEED).unwrap();
+    let no_trace_s = t_nf.elapsed().as_secs_f64();
+    let t_ef = Instant::now();
+    let empty_trace =
+        run_benchmark_faulted(&cfg, &fp, Scheme::Baseline, SEED, &FaultTrace::default()).unwrap();
+    let empty_trace_s = t_ef.elapsed().as_secs_f64();
+    assert_eq!(no_trace, empty_trace, "empty fault trace must be bit-identical to no trace");
+    let fault_overhead = empty_trace_s / no_trace_s.max(1e-9);
+    eprintln!(
+        "[bench_sweep]   no-trace {no_trace_s:.3} s, empty-trace {empty_trace_s:.3} s -> \
+         {fault_overhead:.2}x (reports identical)"
+    );
+
     let json = format!(
-        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }}\n}}\n",
+        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }},\n  \"fault_sweep\": {{ \"no_trace_s\": {:.3}, \"empty_trace_s\": {:.3}, \"overhead\": {:.3}, \"identical\": true }}\n}}\n",
         jobs.len(),
         misses,
         threads,
@@ -249,6 +277,9 @@ fn main() {
         stream_skip_ratio,
         batch_s,
         antt_worst,
+        no_trace_s,
+        empty_trace_s,
+        fault_overhead,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => eprintln!("[bench_sweep] wrote BENCH_sweep.json"),

@@ -37,8 +37,8 @@ mod tests {
         p.num_ctas = 10;
         p.insns_per_thread = 150;
         p.num_kernels = 1;
-        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 1);
-        let dws = run_benchmark_seeded(&cfg, &p, Scheme::Dws, 1);
+        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 1).unwrap();
+        let dws = run_benchmark_seeded(&cfg, &p, Scheme::Dws, 1).unwrap();
         // Our DWS is conservative: subdivision overlaps the two paths'
         // memory stalls but pays extra ifetch/queue pressure, so on small
         // configs it can land slightly below baseline. It must stay in a
@@ -64,8 +64,8 @@ mod tests {
         p.insns_per_thread = 100;
         p.num_kernels = 1;
         p.div_prob = 0.0;
-        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 2);
-        let dws = run_benchmark_seeded(&cfg, &p, Scheme::Dws, 2);
+        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 2).unwrap();
+        let dws = run_benchmark_seeded(&cfg, &p, Scheme::Dws, 2).unwrap();
         let ratio = dws.ipc() / base.ipc();
         assert!((0.95..=1.05).contains(&ratio), "ratio={ratio}");
     }

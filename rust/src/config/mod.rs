@@ -105,6 +105,10 @@ pub struct SystemConfig {
     pub regroup_granularity: usize,
     /// Periodic fast-warp rebalance interval for split SMs (cycles).
     pub rebalance_period: u64,
+    /// Minimum cycles between *policy-driven* reconfigurations (0 = no
+    /// cooldown, the historical behaviour). Fault-forced splits bypass
+    /// the cooldown — routing around a dead half-SM cannot wait.
+    pub reconfig_cooldown: u64,
 
     // ---- Simulation -------------------------------------------------------
     /// Hard cycle limit per kernel (safety net; 0 = unlimited).
@@ -161,6 +165,7 @@ impl SystemConfig {
             split_check_period: 512,
             regroup_granularity: 4,
             rebalance_period: 2_048,
+            reconfig_cooldown: 0,
 
             max_cycles: 3_000_000,
         }

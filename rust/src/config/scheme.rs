@@ -84,6 +84,15 @@ impl Scheme {
     pub fn per_cluster(&self) -> bool {
         matches!(self, Scheme::Hetero)
     }
+
+    /// Can the scheme keep serving on the healthy half of a cluster whose
+    /// other half-SM has faulted? Every scheme that can run a cluster in
+    /// split (private-pair) mode can route around a dead half; the rigid
+    /// `ScaleUp` machine is permanently fused and loses the whole cluster
+    /// — the asymmetry AMOEBA's graceful-degradation figure plots.
+    pub fn tolerates_half_fault(&self) -> bool {
+        !matches!(self, Scheme::ScaleUp)
+    }
 }
 
 impl fmt::Display for Scheme {
@@ -172,6 +181,9 @@ mod tests {
         assert_eq!(Scheme::Hetero.splits(), Some(SplitPolicy::Regroup));
         assert!(Scheme::Hetero.per_cluster());
         assert!(Scheme::ALL.iter().filter(|s| s.per_cluster()).count() == 1);
+        // Only the permanently fused machine is rigid under a half-SM fault.
+        assert!(!Scheme::ScaleUp.tolerates_half_fault());
+        assert!(Scheme::ALL.iter().filter(|s| !s.tolerates_half_fault()).count() == 1);
     }
 
     #[test]

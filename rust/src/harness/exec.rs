@@ -8,8 +8,9 @@
 //!
 //! 1. **Memoization** — every result is cached under a
 //!    [`JobKey`] = (bench, scheme, config fingerprint, profile
-//!    fingerprint, seed), so each unique simulation runs exactly once per
-//!    process no matter how many figures ask for it.
+//!    fingerprint, seed, fault-trace fingerprint), so each unique
+//!    simulation runs exactly once per process no matter how many figures
+//!    ask for it.
 //! 2. **Parallel fan-out** — batches spread across `std::thread::scope`
 //!    workers (no external crates; the vendored registry is offline).
 //!    Work distribution is a single atomic cursor over the job list —
@@ -37,7 +38,8 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::{Scheme, SystemConfig};
-use crate::sim::gpu::{run_benchmark_seeded, PartitionPolicy, SimReport, StreamReport};
+use crate::sim::fault::FaultTrace;
+use crate::sim::gpu::{run_benchmark_faulted, PartitionPolicy, SimReport, StreamReport};
 use crate::workload::{BenchProfile, KernelStream};
 
 /// FNV-1a over a string — the fingerprint primitive. Configs and
@@ -66,6 +68,14 @@ pub fn profile_fingerprint(p: &BenchProfile) -> u64 {
     fnv1a(&format!("{p:?}"))
 }
 
+/// Stable fingerprint of a fault trace. An empty trace hashes to the same
+/// value everywhere, so fault-free jobs share cache entries with the
+/// historical key space; any injected event perturbs the fingerprint and
+/// forces a fresh simulation.
+pub fn fault_fingerprint(t: &FaultTrace) -> u64 {
+    fnv1a(&format!("{t:?}"))
+}
+
 /// Memoization key of one simulation.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct JobKey {
@@ -81,9 +91,12 @@ pub struct JobKey {
     pub profile_fp: u64,
     /// Workload seed.
     pub seed: u64,
+    /// [`fault_fingerprint`] of the injected fault trace (the empty-trace
+    /// fingerprint for ordinary fault-free jobs).
+    pub fault_fp: u64,
 }
 
-/// One simulation request: everything `run_benchmark_seeded` needs.
+/// One simulation request: everything `run_benchmark_faulted` needs.
 #[derive(Debug, Clone)]
 pub struct SimJob {
     /// Machine configuration.
@@ -94,12 +107,20 @@ pub struct SimJob {
     pub scheme: Scheme,
     /// Workload seed.
     pub seed: u64,
+    /// Deterministic fault trace injected during the run (empty = healthy).
+    pub fault: FaultTrace,
 }
 
 impl SimJob {
-    /// Bundle a job.
+    /// Bundle a fault-free job.
     pub fn new(cfg: SystemConfig, profile: BenchProfile, scheme: Scheme, seed: u64) -> Self {
-        SimJob { cfg, profile, scheme, seed }
+        SimJob { cfg, profile, scheme, seed, fault: FaultTrace::default() }
+    }
+
+    /// Attach a fault trace to the job (builder style).
+    pub fn with_fault(mut self, fault: FaultTrace) -> Self {
+        self.fault = fault;
+        self
     }
 
     /// The job's memoization key.
@@ -110,11 +131,13 @@ impl SimJob {
             cfg_fp: cfg_fingerprint(&self.cfg),
             profile_fp: profile_fingerprint(&self.profile),
             seed: self.seed,
+            fault_fp: fault_fingerprint(&self.fault),
         }
     }
 
     fn simulate(&self) -> SimReport {
-        run_benchmark_seeded(&self.cfg, &self.profile, self.scheme, self.seed)
+        run_benchmark_faulted(&self.cfg, &self.profile, self.scheme, self.seed, &self.fault)
+            .expect("sweep job must carry a valid config and fault trace")
     }
 }
 
@@ -132,6 +155,8 @@ pub struct StreamKey {
     pub trace_fp: u64,
     /// Cluster-partitioning policy.
     pub policy: PartitionPolicy,
+    /// [`fault_fingerprint`] of the injected fault trace.
+    pub fault_fp: u64,
 }
 
 /// One stream-sweep request: a full multi-tenant trace on one machine.
@@ -143,12 +168,20 @@ pub struct StreamJob {
     pub streams: Vec<KernelStream>,
     /// Cluster-partitioning policy.
     pub policy: PartitionPolicy,
+    /// Deterministic fault trace injected during the run (empty = healthy).
+    pub fault: FaultTrace,
 }
 
 impl StreamJob {
-    /// Bundle a stream job.
+    /// Bundle a fault-free stream job.
     pub fn new(cfg: SystemConfig, streams: Vec<KernelStream>, policy: PartitionPolicy) -> Self {
-        StreamJob { cfg, streams, policy }
+        StreamJob { cfg, streams, policy, fault: FaultTrace::default() }
+    }
+
+    /// Attach a fault trace to the job (builder style).
+    pub fn with_fault(mut self, fault: FaultTrace) -> Self {
+        self.fault = fault;
+        self
     }
 
     /// The job's memoization key.
@@ -157,11 +190,13 @@ impl StreamJob {
             cfg_fp: cfg_fingerprint(&self.cfg),
             trace_fp: fnv1a(&format!("{:?}", self.streams)),
             policy: self.policy,
+            fault_fp: fault_fingerprint(&self.fault),
         }
     }
 
     fn simulate(&self) -> StreamReport {
-        crate::sim::gpu::serve_streams(&self.cfg, &self.streams, self.policy)
+        crate::sim::gpu::serve_streams_faulted(&self.cfg, &self.streams, self.policy, &self.fault)
+            .expect("stream job must carry a valid config, streams and fault trace")
     }
 }
 
@@ -487,6 +522,19 @@ mod tests {
         assert_eq!(batch.len(), 3);
         assert!(Arc::ptr_eq(&batch[0], &a), "batch serves the memoized report");
         assert!(Arc::ptr_eq(&batch[0], &batch[2]), "in-batch duplicate deduped");
+    }
+
+    #[test]
+    fn fault_trace_perturbs_job_keys() {
+        use crate::sim::fault::{FaultEvent, FaultKind, FaultTrace};
+        let base = tiny_job("CP", Scheme::Baseline, 1);
+        let faulted = base.clone().with_fault(FaultTrace::new(vec![FaultEvent {
+            cycle: 100,
+            kind: FaultKind::Cluster { cluster: 0 },
+        }]));
+        assert_ne!(base.key(), faulted.key(), "fault trace is part of the key");
+        let empty = base.clone().with_fault(FaultTrace::default());
+        assert_eq!(base.key(), empty.key(), "empty trace shares the healthy key");
     }
 
     #[test]

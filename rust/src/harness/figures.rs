@@ -534,6 +534,59 @@ pub fn server_sweep(exec: &SweepExec, quick: bool) -> Table {
 }
 
 // ---------------------------------------------------------------------
+// Fault sweep: graceful degradation under injected half-SM failures
+// ---------------------------------------------------------------------
+
+/// The degradation sweep ("fault"): IPC as half-SM faults accumulate,
+/// per scheme, each curve normalised to that scheme's healthy
+/// (zero-fault) run. Faults land on distinct clusters at staggered
+/// cycles. Schemes that can run a cluster split keep serving on the
+/// healthy half and shed roughly half an SM per fault; the rigid
+/// scale-up machine loses the whole cluster every time — the
+/// degradation asymmetry AMOEBA's reconfigurability buys.
+pub fn fault_sweep(exec: &SweepExec, quick: bool) -> Table {
+    use crate::sim::fault::{FaultEvent, FaultKind, FaultTrace};
+    let cfg = base_cfg(quick);
+    let n_clusters = cfg.num_sms / 2;
+    let max_faults = n_clusters.min(4);
+    let schemes =
+        [Scheme::Baseline, Scheme::ScaleUp, Scheme::StaticFuse, Scheme::WarpRegroup, Scheme::Hetero];
+    let p = profile("BFS", quick);
+
+    let mut jobs = Vec::new();
+    for &s in &schemes {
+        for k in 0..=max_faults {
+            let trace = FaultTrace::new(
+                (0..k)
+                    .map(|i| FaultEvent {
+                        cycle: 2_000 * (i as u64 + 1),
+                        kind: FaultKind::HalfSm { cluster: i as u32, half: 0 },
+                    })
+                    .collect(),
+            );
+            jobs.push(SimJob::new(cfg.clone(), p.clone(), s, SEED).with_fault(trace));
+        }
+    }
+    let reports = exec.run_batch(jobs);
+
+    let fault_cols: Vec<String> = (0..=max_faults).map(|k| format!("{k}_faults")).collect();
+    let mut cols: Vec<&str> = vec!["scheme"];
+    cols.extend(fault_cols.iter().map(String::as_str));
+    let mut t = Table::new(
+        "Fault sweep — IPC under accumulating half-SM faults (normalised to healthy)",
+        &cols,
+    );
+    let points = max_faults + 1;
+    for (si, s) in schemes.iter().enumerate() {
+        let healthy = reports[si * points].ipc().max(1e-9);
+        let row: Vec<f64> =
+            (0..points).map(|k| reports[si * points + k].ipc() / healthy).collect();
+        t.row(s.to_string(), row);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
 // Tables
 // ---------------------------------------------------------------------
 
@@ -605,6 +658,36 @@ mod tests {
             .rows
             .iter()
             .all(|(_, v)| v[..4].iter().all(|m| [-1.0, 0.0, 1.0].contains(m))));
+    }
+
+    #[test]
+    fn fault_sweep_degrades_gracefully() {
+        let exec = SweepExec::new(2);
+        let t = fault_sweep(&exec, true);
+        assert_eq!(t.rows.len(), 5, "five schemes");
+        let points = t.rows[0].1.len();
+        assert!(points >= 2, "at least healthy + one fault count");
+        for (name, vals) in &t.rows {
+            assert!((vals[0] - 1.0).abs() < 1e-12, "{name}: healthy point normalises to 1");
+            assert!(vals.iter().all(|v| v.is_finite() && *v >= 0.0));
+        }
+        let row = |n: &str| &t.rows.iter().find(|(name, _)| name == n).unwrap().1;
+        let (hetero, scale_up) = (row("hetero"), row("scale_up"));
+        // The reconfigurable machine keeps serving on healthy half-SMs;
+        // the rigid fused machine loses whole clusters — at every fault
+        // count it can do no better, and at the heaviest it does worse.
+        for k in 1..points {
+            assert!(
+                hetero[k] >= scale_up[k] - 1e-9,
+                "fault count {k}: hetero {} < scale_up {}",
+                hetero[k],
+                scale_up[k]
+            );
+        }
+        assert!(
+            hetero[points - 1] > scale_up[points - 1],
+            "heaviest fault load must separate the schemes"
+        );
     }
 
     #[test]

@@ -15,7 +15,8 @@ mod figures;
 
 pub use bencher::{BenchResult, Bencher};
 pub use exec::{
-    cfg_fingerprint, profile_fingerprint, JobKey, SimJob, StreamJob, StreamKey, SweepExec,
+    cfg_fingerprint, fault_fingerprint, profile_fingerprint, JobKey, SimJob, StreamJob, StreamKey,
+    SweepExec,
 };
 pub use figdata::gtx_scaling_trend;
 pub use figures::*;
@@ -25,11 +26,12 @@ use std::sync::OnceLock;
 use crate::stats::Table;
 
 /// All figure ids the harness can regenerate ("srv" is the server-mode
-/// concurrent-stream sweep — not a paper figure, but the scenario class
-/// the ROADMAP's serving north star asks for).
-pub const ALL_FIGURES: [&str; 21] = [
+/// concurrent-stream sweep and "fault" the graceful-degradation sweep —
+/// not paper figures, but the scenario classes the ROADMAP's serving and
+/// robustness north stars ask for).
+pub const ALL_FIGURES: [&str; 22] = [
     "2", "3a", "3b", "4", "5", "6", "8", "12", "13", "14", "15", "16", "17", "18", "19", "19h",
-    "20", "21", "srv", "t1", "t2",
+    "20", "21", "srv", "fault", "t1", "t2",
 ];
 
 /// The process-wide executor used by the [`figure`] convenience wrapper:
@@ -63,6 +65,7 @@ pub fn figure_with(exec: &SweepExec, id: &str, quick: bool) -> Option<Table> {
         "20" => Some(fig20_impacts(exec, quick)),
         "21" => Some(fig21_vs_dws(exec, quick)),
         "srv" => Some(server_sweep(exec, quick)),
+        "fault" => Some(fault_sweep(exec, quick)),
         "t1" => Some(table1_config()),
         "t2" => Some(table2_coefficients()),
         _ => None,

@@ -25,7 +25,8 @@
 //!
 //! let cfg = SystemConfig::gtx480();
 //! let bench = workload::bench("RAY").expect("known benchmark");
-//! let report = sim::gpu::run_benchmark(&cfg, &bench, Scheme::WarpRegroup);
+//! let report =
+//!     sim::gpu::run_benchmark(&cfg, &bench, Scheme::WarpRegroup).expect("valid config");
 //! println!("IPC = {:.2}", report.ipc());
 //! ```
 

@@ -114,9 +114,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
         }
         let predictor = amoeba_gpu::runtime::HloPredictor::new(&rt, w, coeffs.intercept as f32)?;
         let controller = amoeba_gpu::amoeba::Controller::with_predictor(Box::new(predictor));
-        run_benchmark_with_controller(&cfg, &profile, scheme, controller, seed)
+        run_benchmark_with_controller(&cfg, &profile, scheme, controller, seed)?
     } else {
-        run_benchmark_seeded(&cfg, &profile, scheme, seed)
+        run_benchmark_seeded(&cfg, &profile, scheme, seed)?
     };
 
     println!("benchmark       : {}", report.bench);

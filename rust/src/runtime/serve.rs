@@ -8,11 +8,20 @@
 //! the resulting [`StreamReport`]s. Simulation itself stays in
 //! [`crate::sim::gpu`]; scheduling policy stays in
 //! [`crate::sim::gpu::PartitionPolicy`].
+//!
+//! The serving layer is also where fault tolerance lives:
+//! [`serve_with_failover`] runs a shared trace under a
+//! [`FaultTrace`](crate::sim::fault::FaultTrace), then retries each
+//! tenant's unserved launches on spare healthy capacity with seeded
+//! exponential backoff, bounded retries, and quarantine after repeated
+//! failures — every step deterministic, so degraded-mode service is as
+//! reproducible as the healthy path.
 
 use crate::config::{Scheme, SystemConfig};
 use crate::harness::StreamJob;
-use crate::sim::gpu::{PartitionPolicy, StreamReport};
-use crate::workload::{bench, BenchProfile, KernelStream};
+use crate::sim::fault::FaultTrace;
+use crate::sim::gpu::{serve_streams, serve_streams_faulted, PartitionPolicy, StreamReport};
+use crate::workload::{bench, hash_combine, BenchProfile, KernelStream, StreamLaunch};
 
 /// Parse a tenant spec: comma-separated `BENCH[:SCHEME]` entries, e.g.
 /// `"SM:hetero,BFS:warp_regrouping,CP"`. A missing scheme defaults to
@@ -109,6 +118,151 @@ pub fn server_jobs(
     jobs
 }
 
+/// Knobs for degraded-mode serving ([`serve_with_failover`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailoverConfig {
+    /// Retry attempts per tenant after the shared run leaves launches
+    /// unserved (deadline truncation on a faulted chip).
+    pub max_retries: u32,
+    /// Failed attempts (shared run included) before the tenant is
+    /// quarantined: no further retries, remaining launches dropped.
+    pub quarantine_after: u32,
+    /// Base backoff in cycles; attempt `a` waits `base * 2^a` plus a
+    /// seeded jitter below `base`.
+    pub backoff_base: u64,
+    /// Seed for the deterministic backoff jitter.
+    pub backoff_seed: u64,
+    /// Minimum cycles between reconfigurations, raised onto the machine
+    /// config before serving (a faulted chip should not thrash layouts).
+    pub reconfig_cooldown: u64,
+}
+
+impl Default for FailoverConfig {
+    fn default() -> Self {
+        FailoverConfig {
+            max_retries: 2,
+            quarantine_after: 3,
+            backoff_base: 10_000,
+            backoff_seed: 0xFA11,
+            reconfig_cooldown: 0,
+        }
+    }
+}
+
+/// Per-tenant health ledger [`serve_with_failover`] returns alongside the
+/// shared report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantHealth {
+    /// Tenant (stream) index.
+    pub tenant: usize,
+    /// Serve attempts made: the shared run plus any retries.
+    pub attempts: u32,
+    /// Attempts that ended with launches still unserved.
+    pub failures: u32,
+    /// The tenant hit `quarantine_after` failures and was cut off.
+    pub quarantined: bool,
+    /// Launches that completed, across all attempts.
+    pub served: u32,
+    /// Launches never completed (dropped on quarantine / retry budget).
+    pub dropped: u32,
+}
+
+/// Deterministic backoff before retry `attempt` (1-based) of `tenant`:
+/// exponential in the attempt with a seeded jitter below the base, so
+/// co-failing tenants deterministically desynchronise their retries.
+pub fn backoff_delay(fo: &FailoverConfig, tenant: usize, attempt: u32) -> u64 {
+    let exp = fo.backoff_base.saturating_mul(1u64 << attempt.min(16));
+    let jitter = if fo.backoff_base == 0 {
+        0
+    } else {
+        hash_combine(&[fo.backoff_seed, tenant as u64, attempt as u64]) % fo.backoff_base
+    };
+    exp.saturating_add(jitter)
+}
+
+/// Serve `streams` on a chip with `faults` injected, then heal: every
+/// launch the shared run left unserved (its cluster retired, or the
+/// deadline hit while degraded) is retried on spare healthy capacity —
+/// alone on the chip, fault-free, arrivals pushed out by
+/// [`backoff_delay`] — up to `fo.max_retries` times. A tenant whose
+/// attempts keep failing is quarantined after `fo.quarantine_after`
+/// failures and its remaining launches are dropped. Returns the shared
+/// run's report plus one [`TenantHealth`] per tenant. Fully
+/// deterministic: same inputs, same report, same ledger.
+pub fn serve_with_failover(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    policy: PartitionPolicy,
+    fo: &FailoverConfig,
+    faults: &FaultTrace,
+) -> crate::errors::Result<(StreamReport, Vec<TenantHealth>)> {
+    let mut cfg = cfg.clone();
+    cfg.reconfig_cooldown = cfg.reconfig_cooldown.max(fo.reconfig_cooldown);
+    let shared = serve_streams_faulted(&cfg, streams, policy, faults)?;
+
+    let mut health = Vec::with_capacity(streams.len());
+    for (ti, stream) in streams.iter().enumerate() {
+        let mut h = TenantHealth {
+            tenant: ti,
+            attempts: 1,
+            failures: 0,
+            quarantined: false,
+            served: 0,
+            dropped: 0,
+        };
+        // LaunchStat.kernel is the launch's ordinal within its stream, so
+        // it indexes straight back into `stream.launches`.
+        let mut pending: Vec<StreamLaunch> = Vec::new();
+        for l in shared.launches.iter().filter(|l| l.tenant == ti as u32) {
+            if l.finish == u64::MAX {
+                pending.push(stream.launches[l.kernel as usize].clone());
+            } else {
+                h.served += 1;
+            }
+        }
+        if !pending.is_empty() {
+            h.failures = 1;
+        }
+
+        let mut attempt = 0u32;
+        while !pending.is_empty() && attempt < fo.max_retries && h.failures < fo.quarantine_after {
+            attempt += 1;
+            h.attempts += 1;
+            let delay = backoff_delay(fo, ti, attempt);
+            let retry = KernelStream {
+                name: stream.name.clone(),
+                profile: stream.profile.clone(),
+                scheme: stream.scheme,
+                launches: pending
+                    .iter()
+                    .map(|l| StreamLaunch { arrival: delay, kernel: l.kernel.clone() })
+                    .collect(),
+            };
+            let rep = serve_streams(&cfg, &[retry], PartitionPolicy::Static)?;
+            let mut done = vec![false; pending.len()];
+            for l in rep.launches.iter().filter(|l| l.finish != u64::MAX) {
+                done[l.kernel as usize] = true;
+            }
+            let mut keep = Vec::new();
+            for (i, l) in pending.into_iter().enumerate() {
+                if done[i] {
+                    h.served += 1;
+                } else {
+                    keep.push(l);
+                }
+            }
+            pending = keep;
+            if !pending.is_empty() {
+                h.failures += 1;
+            }
+        }
+        h.dropped = pending.len() as u32;
+        h.quarantined = h.failures >= fo.quarantine_after;
+        health.push(h);
+    }
+    Ok((shared, health))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,9 +292,10 @@ mod tests {
             vec![(bench("CP").unwrap(), Scheme::Baseline), (bench("BFS").unwrap(), Scheme::Baseline)];
         let mut streams = traffic_trace(&tenants, 2, 0, 11);
         shrink_streams(&mut streams, 4, 40);
-        let shared = serve_streams(&cfg, &streams, PartitionPolicy::Static);
+        let shared = serve_streams(&cfg, &streams, PartitionPolicy::Static).unwrap();
         for ti in 0..streams.len() {
-            let alone = serve_streams(&cfg, &alone_streams(&streams, ti), PartitionPolicy::Static);
+            let alone =
+                serve_streams(&cfg, &alone_streams(&streams, ti), PartitionPolicy::Static).unwrap();
             let antt = antt_slowdown(&shared, &alone, ti);
             let slow = stream_slowdown(&shared, &alone, ti);
             // Sharing the chip can only slow a tenant down (it owns a
@@ -148,6 +303,96 @@ mod tests {
             assert!(antt >= 0.99, "tenant {ti}: antt {antt}");
             assert!(slow >= 0.99, "tenant {ti}: slowdown {slow}");
             assert!(antt.is_finite() && slow.is_finite());
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_monotonic() {
+        let fo = FailoverConfig::default();
+        for ti in 0..4 {
+            for a in 1..6 {
+                assert_eq!(backoff_delay(&fo, ti, a), backoff_delay(&fo, ti, a));
+                // base*2^(a+1) > base*2^a + jitter (jitter < base), so the
+                // backoff strictly grows with the attempt.
+                assert!(backoff_delay(&fo, ti, a + 1) > backoff_delay(&fo, ti, a));
+            }
+        }
+        // Different tenants jitter apart (desynchronised retry storms).
+        assert_ne!(backoff_delay(&fo, 0, 1), backoff_delay(&fo, 1, 1));
+        let other = FailoverConfig { backoff_seed: 0xBEEF, ..fo };
+        assert_ne!(backoff_delay(&other, 0, 1), backoff_delay(&fo, 0, 1));
+    }
+
+    fn failover_streams() -> (SystemConfig, Vec<KernelStream>) {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 300_000;
+        let tenants =
+            vec![(bench("CP").unwrap(), Scheme::Baseline), (bench("BFS").unwrap(), Scheme::Baseline)];
+        let mut streams = traffic_trace(&tenants, 2, 0, 17);
+        shrink_streams(&mut streams, 4, 40);
+        (cfg, streams)
+    }
+
+    #[test]
+    fn healthy_chip_needs_no_retries() {
+        let (cfg, streams) = failover_streams();
+        let fo = FailoverConfig::default();
+        let (shared, health) =
+            serve_with_failover(&cfg, &streams, PartitionPolicy::Static, &fo, &FaultTrace::default())
+                .unwrap();
+        assert!(!shared.deadline_hit);
+        for (ti, h) in health.iter().enumerate() {
+            assert_eq!(h.attempts, 1, "tenant {ti} retried on a healthy chip");
+            assert_eq!(h.failures, 0);
+            assert!(!h.quarantined);
+            assert_eq!(h.dropped, 0);
+            assert_eq!(h.served as usize, streams[ti].launches.len());
+        }
+    }
+
+    #[test]
+    fn retry_serves_launches_the_faulted_run_dropped() {
+        use crate::sim::fault::{FaultEvent, FaultKind};
+        let (cfg, streams) = failover_streams();
+        // Kill both clusters almost immediately: the shared run can serve
+        // nothing and truncates at the deadline with every launch pending.
+        let faults = FaultTrace::new(vec![
+            FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 0 } },
+            FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 1 } },
+        ]);
+        let fo = FailoverConfig::default();
+        let (shared, health) =
+            serve_with_failover(&cfg, &streams, PartitionPolicy::Static, &fo, &faults).unwrap();
+        assert!(shared.deadline_hit, "dead chip must truncate the shared run");
+        for (ti, h) in health.iter().enumerate() {
+            assert!(h.attempts >= 2, "tenant {ti} must have retried");
+            assert!(h.failures >= 1);
+            assert!(!h.quarantined, "one failure is below the quarantine bar");
+            assert_eq!(h.dropped, 0, "fault-free retry must serve everything");
+            assert_eq!(h.served as usize, streams[ti].launches.len());
+        }
+        // Deterministic end to end.
+        let again = serve_with_failover(&cfg, &streams, PartitionPolicy::Static, &fo, &faults).unwrap();
+        assert_eq!(shared, again.0);
+        assert_eq!(health, again.1);
+    }
+
+    #[test]
+    fn hopeless_tenant_is_quarantined() {
+        let (mut cfg, streams) = failover_streams();
+        // A deadline so tight nothing ever completes, faulted or not.
+        cfg.max_cycles = 50;
+        let fo = FailoverConfig { max_retries: 5, quarantine_after: 2, ..FailoverConfig::default() };
+        let (shared, health) =
+            serve_with_failover(&cfg, &streams, PartitionPolicy::Static, &fo, &FaultTrace::default())
+                .unwrap();
+        assert!(shared.deadline_hit);
+        for h in &health {
+            assert!(h.quarantined, "tenant {} should be quarantined", h.tenant);
+            assert_eq!(h.failures, 2, "quarantine engages at exactly the bar");
+            assert_eq!(h.attempts, 2, "shared attempt + one retry, then cut off");
+            assert_eq!(h.served, 0);
+            assert_eq!(h.dropped as usize, streams[h.tenant].launches.len());
         }
     }
 }

@@ -268,6 +268,10 @@ pub struct SmCluster {
 
     /// Statistics (aggregated over both halves).
     pub stats: SmStats,
+    /// Fault state: a permanently dead half-SM (fault injection). The
+    /// cluster must run `PrivatePair` with every CTA homed on the healthy
+    /// half; `lighter_half` and `can_accept_cta` enforce it.
+    dead_half: Option<u8>,
     /// Reconfiguration drain: no issue until this cycle.
     pub frozen_until: u64,
     /// Divergence handling (DWS sets `Shadowed` machine-wide).
@@ -317,6 +321,7 @@ impl SmCluster {
             sched_stamp: 0,
             stall_cache: [(u64::MAX, StallReason::Idle); 2],
             stats: SmStats::default(),
+            dead_half: None,
             frozen_until: 0,
             divergence_mode: DivergenceMode::Serial,
             split_policy: None,
@@ -399,6 +404,11 @@ impl SmCluster {
 
     /// Can a CTA of `kernel` be accepted right now?
     pub fn can_accept_cta(&self, kernel: &KernelLaunch) -> bool {
+        // A dead half forces PrivatePair-only service on the healthy half;
+        // merged modes would execute on broken lanes.
+        if self.dead_half.is_some() && self.mode != ClusterMode::PrivatePair {
+            return false;
+        }
         let need_regs = (kernel.cta_threads * kernel.regs_per_thread) as usize;
         if self.mode == ClusterMode::PrivatePair {
             let h = self.lighter_half();
@@ -418,6 +428,9 @@ impl SmCluster {
     }
 
     fn lighter_half(&self) -> u8 {
+        if let Some(dead) = self.dead_half {
+            return 1 - dead;
+        }
         let c0 = self.ctas.iter().filter(|c| c.home == 0 && !c.complete()).count();
         let c1 = self.ctas.iter().filter(|c| c.home == 1 && !c.complete()).count();
         u8::from(c1 < c0)
@@ -1592,11 +1605,12 @@ impl SmCluster {
             format!("line={:#x} kind={:?} w={} inj={}", t.line, t.kind, t.is_write, t.needs_inject)
         });
         format!(
-            "mode={:?} live={live} mem_blocked={blocked_mem} if_blocked={blocked_if} lsu={} pending={} shadows={} front={:?}",
+            "mode={:?} live={live} mem_blocked={blocked_mem} if_blocked={blocked_if} lsu={} pending={} shadows={} dead_half={:?} front={:?}",
             self.mode,
             self.lsu.len(),
             self.pending.len(),
             self.shadows.len(),
+            self.dead_half,
             front
         )
     }
@@ -1612,6 +1626,43 @@ impl SmCluster {
         }
         self.pending.clear();
         self.lsu.clear();
+    }
+
+    // ------------------------------------------------------------------
+    // Fault injection (sim::fault)
+    // ------------------------------------------------------------------
+
+    /// Mark `half` as permanently dead. All future CTA dispatch homes on
+    /// the healthy half; merged modes refuse CTAs until the GPU forces
+    /// the split layout.
+    pub fn set_dead_half(&mut self, half: u8) {
+        debug_assert!(half <= 1);
+        self.dead_half = Some(half);
+        self.sched_stamp += 1;
+    }
+
+    /// The permanently dead half-SM, if a half-SM fault hit this cluster.
+    pub fn dead_half(&self) -> Option<u8> {
+        self.dead_half
+    }
+
+    /// Hard-clear the cluster after a fault: abandon every in-flight
+    /// warp, shadow, and memory transaction, and return the ids of the
+    /// CTAs that had not completed (the GPU requeues them elsewhere).
+    /// Unlike [`SmCluster::reap`] this does not require the cluster to be
+    /// idle — that is the point. In-flight NoC replies addressed here are
+    /// safe: [`SmCluster::on_reply`] drops lines with no pending entry.
+    pub fn fail_clear(&mut self) -> Vec<u32> {
+        let lost: Vec<u32> =
+            self.ctas.iter().filter(|c| !c.complete()).map(|c| c.cta).collect();
+        self.warps.clear();
+        self.shadows.clear();
+        self.ctas.clear();
+        self.sched = [HalfSched::default(), HalfSched::default()];
+        self.ready_count = [0, 0];
+        self.sched_stamp += 1;
+        self.flush_caches();
+        lost
     }
 }
 

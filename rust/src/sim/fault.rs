@@ -1,0 +1,228 @@
+//! Deterministic fault injection: seeded traces of hardware faults that
+//! the chip loop applies at cycle boundaries on live ticks.
+//!
+//! A [`FaultTrace`] is an ordered list of [`FaultEvent`]s — half-SM
+//! failures, whole-cluster failures, permanent NoC link degradation, and
+//! transient memory-controller stalls. The trace is a pure value: it
+//! folds into the SweepExec cache fingerprint (via `Debug`, like the
+//! config and profile), and injection follows the active-set contract —
+//! the target component is woken *before* the fault mutates it, so fault
+//! runs stay bit-identical between the dense and active-set loops.
+//!
+//! [`RunOutcome`] is the watchdog's structured triage record for runs
+//! that hit the cycle deadline: a forward-progress dump built from each
+//! component's `next_event` horizon and debug state, distinguishing true
+//! deadlock (no component has a horizon) from slow progress.
+
+use crate::errors::{err, Result};
+
+/// One kind of hardware fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// One half of a cluster's SM pair dies. Schemes that can split route
+    /// around it (the healthy half keeps serving under a forced split
+    /// layout); rigid scale-up schemes lose the whole cluster.
+    HalfSm { cluster: u32, half: u8 },
+    /// The whole cluster dies: in-flight CTAs are requeued and the
+    /// cluster leaves the dispatch/partition path permanently.
+    Cluster { cluster: u32 },
+    /// Permanent fabric degradation: every router hop gains `penalty`
+    /// extra cycles from the injection cycle onward.
+    NocDegrade { penalty: u32 },
+    /// Transient stall of one memory controller: it services nothing for
+    /// `cycles` cycles (requests queue; nothing is lost).
+    McStall { mc: u32, cycles: u64 },
+}
+
+/// One fault at a specific injection cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Cycle boundary at which the fault is applied (before dispatch).
+    pub cycle: u64,
+    pub kind: FaultKind,
+}
+
+/// An ordered, deterministic fault schedule for one run.
+///
+/// Construction sorts events by cycle (stable, so same-cycle events keep
+/// their given order); an empty trace is the no-fault default and is
+/// bit-identical to not setting a trace at all.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultTrace {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultTrace {
+    /// Build a trace, sorting events by injection cycle (stable).
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| e.cycle);
+        FaultTrace { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Check every event targets a component that exists on a machine
+    /// with `n_clusters` clusters and `num_mcs` memory partitions.
+    pub fn validate(&self, n_clusters: usize, num_mcs: usize) -> Result<()> {
+        if self.events.windows(2).any(|w| w[0].cycle > w[1].cycle) {
+            return Err(err("fault trace not sorted by cycle (use FaultTrace::new)"));
+        }
+        for e in &self.events {
+            match e.kind {
+                FaultKind::HalfSm { cluster, half } => {
+                    if cluster as usize >= n_clusters {
+                        return Err(err(format!(
+                            "fault targets cluster {cluster} on a {n_clusters}-cluster chip"
+                        )));
+                    }
+                    if half > 1 {
+                        return Err(err(format!("half-SM fault half index {half} (must be 0/1)")));
+                    }
+                }
+                FaultKind::Cluster { cluster } => {
+                    if cluster as usize >= n_clusters {
+                        return Err(err(format!(
+                            "fault targets cluster {cluster} on a {n_clusters}-cluster chip"
+                        )));
+                    }
+                }
+                FaultKind::NocDegrade { penalty } => {
+                    if penalty == 0 {
+                        return Err(err("NoC degrade with zero penalty is a no-op"));
+                    }
+                }
+                FaultKind::McStall { mc, cycles } => {
+                    if mc as usize >= num_mcs {
+                        return Err(err(format!(
+                            "fault targets MC {mc} on a {num_mcs}-MC chip"
+                        )));
+                    }
+                    if cycles == 0 {
+                        return Err(err("MC stall with zero duration is a no-op"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A seeded pseudo-random trace of `n_events` faults over the first
+    /// `horizon` cycles of a `n_clusters`/`num_mcs` machine. Pure
+    /// function of its arguments — the basis for deterministic fault
+    /// sweeps and the ci.sh fault-mode determinism pass.
+    pub fn seeded(seed: u64, n_events: usize, n_clusters: usize, num_mcs: usize, horizon: u64) -> Self {
+        assert!(n_clusters > 0 && num_mcs > 0 && horizon > 0);
+        let mut state = seed ^ 0xFA17_FA17_FA17_FA17;
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            let cycle = 1 + splitmix64(&mut state) % horizon;
+            let kind = match splitmix64(&mut state) % 4 {
+                0 => FaultKind::HalfSm {
+                    cluster: (splitmix64(&mut state) % n_clusters as u64) as u32,
+                    half: (splitmix64(&mut state) % 2) as u8,
+                },
+                1 => FaultKind::Cluster {
+                    cluster: (splitmix64(&mut state) % n_clusters as u64) as u32,
+                },
+                2 => FaultKind::NocDegrade {
+                    penalty: 1 + (splitmix64(&mut state) % 3) as u32,
+                },
+                _ => FaultKind::McStall {
+                    mc: (splitmix64(&mut state) % num_mcs as u64) as u32,
+                    cycles: 100 + splitmix64(&mut state) % 2_000,
+                },
+            };
+            events.push(FaultEvent { cycle, kind });
+        }
+        FaultTrace::new(events)
+    }
+}
+
+/// splitmix64 step (local copy: `workload::rng` is module-private).
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Structured watchdog triage for a run that hit its cycle deadline.
+///
+/// Replaces the old silent `eprintln!` + fabricated completion stats:
+/// the run's report carries this outcome so callers (and the serving
+/// layer's retry logic) can distinguish a true deadlock — every
+/// component reports `NextEvent::Idle`, nothing can ever move — from
+/// slow forward progress that merely ran out of budget.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RunOutcome {
+    /// The run was truncated at `max_cycles`.
+    pub deadline_hit: bool,
+    /// No component had a forward horizon at truncation time.
+    pub deadlock: bool,
+    /// Human-readable forward-progress dump: per-component `next_event`
+    /// horizons plus cluster/router debug state.
+    pub dump: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_sorts_by_cycle_stably() {
+        let t = FaultTrace::new(vec![
+            FaultEvent { cycle: 50, kind: FaultKind::Cluster { cluster: 1 } },
+            FaultEvent { cycle: 10, kind: FaultKind::NocDegrade { penalty: 2 } },
+            FaultEvent { cycle: 50, kind: FaultKind::Cluster { cluster: 0 } },
+        ]);
+        assert_eq!(t.events[0].cycle, 10);
+        // Stable: the two cycle-50 events keep their original order.
+        assert_eq!(t.events[1].kind, FaultKind::Cluster { cluster: 1 });
+        assert_eq!(t.events[2].kind, FaultKind::Cluster { cluster: 0 });
+        t.validate(2, 1).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_targets() {
+        let t = FaultTrace::new(vec![FaultEvent { cycle: 1, kind: FaultKind::Cluster { cluster: 4 } }]);
+        assert!(t.validate(4, 2).is_err());
+        let t = FaultTrace::new(vec![FaultEvent {
+            cycle: 1,
+            kind: FaultKind::HalfSm { cluster: 0, half: 2 },
+        }]);
+        assert!(t.validate(4, 2).is_err());
+        let t = FaultTrace::new(vec![FaultEvent {
+            cycle: 1,
+            kind: FaultKind::McStall { mc: 2, cycles: 10 },
+        }]);
+        assert!(t.validate(4, 2).is_err());
+        let t = FaultTrace::new(vec![FaultEvent { cycle: 1, kind: FaultKind::NocDegrade { penalty: 0 } }]);
+        assert!(t.validate(4, 2).is_err());
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_valid() {
+        let a = FaultTrace::seeded(0xFA11, 8, 4, 2, 100_000);
+        let b = FaultTrace::seeded(0xFA11, 8, 4, 2, 100_000);
+        assert_eq!(a, b, "same seed, same trace");
+        assert_eq!(a.len(), 8);
+        a.validate(4, 2).unwrap();
+        assert!(a.events.windows(2).all(|w| w[0].cycle <= w[1].cycle));
+        let c = FaultTrace::seeded(0xFA12, 8, 4, 2, 100_000);
+        assert_ne!(a, c, "different seed, different trace");
+    }
+
+    #[test]
+    fn empty_trace_is_default() {
+        assert_eq!(FaultTrace::default(), FaultTrace::new(Vec::new()));
+        assert!(FaultTrace::default().is_empty());
+        FaultTrace::default().validate(1, 1).unwrap();
+    }
+}

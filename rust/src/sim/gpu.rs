@@ -69,8 +69,10 @@ use crate::amoeba::controller::{Controller, KernelDecision};
 use crate::amoeba::dynsplit::DynSplit;
 use crate::amoeba::metrics::MetricsSample;
 use crate::config::{Scheme, SystemConfig};
+use crate::errors::err;
 use crate::isa::KernelLaunch;
 use crate::sim::core::{ClusterMode, DivergenceMode, SmCluster};
+use crate::sim::fault::{FaultEvent, FaultKind, FaultTrace, RunOutcome};
 use crate::sim::mem::{MemPartition, PartitionReply};
 use crate::sim::noc::{ChipLayout, Noc, Packet, Payload, Subnet};
 use crate::sim::sched::ActiveSet;
@@ -122,6 +124,12 @@ pub struct SimReport {
     /// (empty for schemes that do not profile; one per cluster per kernel
     /// under the heterogeneous scheme).
     pub samples: Vec<MetricsSample>,
+    /// Did the safety-net cycle deadline truncate the run? When true the
+    /// counters above are honest partials, not fabricated completions.
+    pub deadline_hit: bool,
+    /// Watchdog triage captured at the deadline (`None` on clean runs):
+    /// forward-progress horizons + state dumps, deadlock vs slow going.
+    pub outcome: Option<RunOutcome>,
 }
 
 impl SimReport {
@@ -221,6 +229,11 @@ pub struct StreamReport {
     /// CTAs dispatched, by `[tenant][cluster]` — the placement ledger the
     /// tenant-conservation properties check.
     pub ctas_by_cluster: Vec<Vec<u64>>,
+    /// Did the deadline truncate the run? Truncated tenants' launches
+    /// keep `start`/`finish` at `u64::MAX` (honest partials).
+    pub deadline_hit: bool,
+    /// Watchdog triage captured at the deadline (`None` on clean runs).
+    pub outcome: Option<RunOutcome>,
 }
 
 impl StreamReport {
@@ -324,14 +337,39 @@ pub struct Gpu {
     noc_seen_epoch: u64,
     /// Reusable buffer for due timer-wakes (component, from, upto).
     wake_scratch: Vec<(usize, u64, u64)>,
+    /// Fault-injection schedule (sorted by cycle) and its replay cursor.
+    /// Applied at main-loop cycle boundaries on live ticks; the
+    /// fast-forward caps clamp to the next pending event's cycle.
+    fault_events: Vec<FaultEvent>,
+    fault_cursor: usize,
+    /// Clusters permanently removed from dispatch (whole-cluster faults).
+    retired: Vec<bool>,
+    /// Clusters serving on one healthy half after a half-SM fault:
+    /// pinned private by [`Gpu::reconfigure`]'s target sanitisation.
+    half_faulty: Vec<bool>,
+    /// Transient MC stalls: partition `mc` services nothing while
+    /// `now < mc_stall_until[mc]` (and never parks during the stall).
+    mc_stall_until: Vec<u64>,
+    /// Cycle of the last actual reconfiguration (cooldown gate).
+    last_reconfig: u64,
+    /// Watchdog state surfaced on the report.
+    deadline_hit: bool,
+    outcome: Option<RunOutcome>,
 }
 
 impl Gpu {
-    /// Build a machine for `scheme` under `cfg`.
-    pub fn new(cfg: &SystemConfig, scheme: Scheme, controller: Controller) -> Self {
-        cfg.validate().expect("invalid system config");
+    /// Build a machine for `scheme` under `cfg`. Fails on an invalid
+    /// config instead of panicking — binaries unwrap at the edge.
+    pub fn new(
+        cfg: &SystemConfig,
+        scheme: Scheme,
+        controller: Controller,
+    ) -> crate::errors::Result<Self> {
+        cfg.validate().map_err(|e| err(format!("invalid system config: {e}")))?;
         let n_clusters = cfg.num_sms / 2;
-        assert!(n_clusters > 0, "need at least 2 SMs (one cluster)");
+        if n_clusters == 0 {
+            return Err(err("need at least 2 SMs (one cluster)"));
+        }
         let initial_fused = scheme == Scheme::ScaleUp;
         let mode = if initial_fused { ClusterMode::Fused } else { ClusterMode::PrivatePair };
         let mut clusters: Vec<SmCluster> =
@@ -342,7 +380,7 @@ impl Gpu {
             }
         }
         let layout = ChipLayout::homogeneous(n_clusters, initial_fused, cfg.num_mcs);
-        Gpu {
+        Ok(Gpu {
             cfg: cfg.clone(),
             scheme,
             clusters,
@@ -363,7 +401,15 @@ impl Gpu {
             sched: ActiveSet::new(n_clusters + cfg.num_mcs + 1),
             noc_seen_epoch: 0,
             wake_scratch: Vec::new(),
-        }
+            fault_events: Vec::new(),
+            fault_cursor: 0,
+            retired: vec![false; n_clusters],
+            half_faulty: vec![false; n_clusters],
+            mc_stall_until: vec![0; cfg.num_mcs],
+            last_reconfig: 0,
+            deadline_hit: false,
+            outcome: None,
+        })
     }
 
     /// Select the execution mode: `true` runs the dense cycle-by-cycle
@@ -372,6 +418,184 @@ impl Gpu {
     /// [`SimReport`]s; the dense loop is the auditing reference.
     pub fn set_dense(&mut self, dense: bool) {
         self.dense = dense;
+    }
+
+    // ------------------------------------------------------------------
+    // Fault injection & graceful degradation
+    // ------------------------------------------------------------------
+
+    /// Install a fault-injection schedule. Call before the run starts;
+    /// the trace is validated against this machine's shape. An empty
+    /// trace is bit-identical to never calling this at all.
+    pub fn set_fault_trace(&mut self, trace: &FaultTrace) -> crate::errors::Result<()> {
+        trace.validate(self.clusters.len(), self.partitions.len())?;
+        self.fault_events = trace.events.clone();
+        self.fault_cursor = 0;
+        Ok(())
+    }
+
+    /// Cycle of the next pending fault event (`u64::MAX` once the
+    /// schedule is exhausted). The main loops' fast-forward caps clamp
+    /// to one cycle before this, so injection always lands on a live
+    /// tick at exactly the dense loop's cycle.
+    fn next_fault_cycle(&self) -> u64 {
+        self.fault_events.get(self.fault_cursor).map(|e| e.cycle).unwrap_or(u64::MAX)
+    }
+
+    /// Retire cluster `ci`: fail-clear its resident work and remove it
+    /// from dispatch permanently. Returns the incomplete CTA ids the
+    /// caller must requeue. Idempotent. Safe with replies in flight —
+    /// `SmCluster::on_reply` tolerates unknown lines.
+    fn retire_cluster(&mut self, ci: usize) -> Vec<u32> {
+        if self.retired[ci] {
+            return Vec::new();
+        }
+        self.wake_comp(ci, self.now);
+        self.retired[ci] = true;
+        self.chip.clusters_retired += 1;
+        let lost = self.clusters[ci].fail_clear();
+        self.chip.ctas_requeued += lost.len() as u64;
+        lost
+    }
+
+    /// Apply every fault event due at or before `now`. `scheme_of(ci)`
+    /// names the scheme governing cluster `ci` (the run's scheme on the
+    /// single-application path, the owning tenant's in stream mode);
+    /// orphaned CTA ids are pushed through `requeue(ci, cta)`. Every
+    /// injection wakes its target before mutating it (active-set
+    /// contract). Returns true when a half-SM fault hit a currently
+    /// *fused* cluster — the caller must drain and force the split
+    /// layout so the healthy half keeps serving.
+    fn apply_due_faults(
+        &mut self,
+        scheme_of: &dyn Fn(usize) -> Scheme,
+        requeue: &mut dyn FnMut(usize, u32),
+    ) -> bool {
+        let mut forced_split = false;
+        while self.fault_cursor < self.fault_events.len()
+            && self.fault_events[self.fault_cursor].cycle <= self.now
+        {
+            let ev = self.fault_events[self.fault_cursor];
+            self.fault_cursor += 1;
+            self.chip.faults_injected += 1;
+            match ev.kind {
+                FaultKind::Cluster { cluster } => {
+                    let ci = cluster as usize;
+                    for cta in self.retire_cluster(ci) {
+                        requeue(ci, cta);
+                    }
+                }
+                FaultKind::HalfSm { cluster, half } => {
+                    let ci = cluster as usize;
+                    if self.retired[ci] {
+                        continue;
+                    }
+                    if self.half_faulty[ci] {
+                        // Second (different) half dies too: nothing left.
+                        if self.clusters[ci].dead_half() != Some(half) {
+                            for cta in self.retire_cluster(ci) {
+                                requeue(ci, cta);
+                            }
+                        }
+                        continue;
+                    }
+                    if !scheme_of(ci).tolerates_half_fault() {
+                        // A permanently fused machine cannot route around
+                        // a dead half: the whole cluster is lost.
+                        for cta in self.retire_cluster(ci) {
+                            requeue(ci, cta);
+                        }
+                        continue;
+                    }
+                    self.wake_comp(ci, self.now);
+                    self.half_faulty[ci] = true;
+                    let lost = self.clusters[ci].fail_clear();
+                    self.chip.ctas_requeued += lost.len() as u64;
+                    for cta in lost {
+                        requeue(ci, cta);
+                    }
+                    self.clusters[ci].set_dead_half(half);
+                    if self.layout.is_fused(ci) {
+                        forced_split = true;
+                    }
+                }
+                FaultKind::NocDegrade { penalty } => {
+                    let comp = self.comp_noc();
+                    self.wake_comp(comp, self.now);
+                    self.noc.set_hop_penalty(self.noc.hop_penalty() + penalty as u64);
+                }
+                FaultKind::McStall { mc, cycles } => {
+                    let mci = mc as usize;
+                    self.wake_comp(self.clusters.len() + mci, self.now);
+                    self.mc_stall_until[mci] = self.now + cycles;
+                }
+            }
+        }
+        forced_split
+    }
+
+    /// Drain the machine and re-apply the current layout so that
+    /// [`Gpu::reconfigure`]'s fault sanitisation forces every
+    /// half-faulted fused cluster into the split layout — the healthy
+    /// half keeps serving. Shared aftermath of a forced-split fault on
+    /// both main loops.
+    fn force_split_after_fault(&mut self, gm: &GenMap, deadline: u64) {
+        while !self.drained() && self.now < deadline {
+            self.try_fast_forward(deadline - 1);
+            self.step(gm);
+        }
+        self.wake_everything(self.now);
+        for c in &mut self.clusters {
+            c.reap();
+        }
+        let target = self.layout.fused_flags().to_vec();
+        self.reconfigure(&target);
+    }
+
+    /// May a *policy-driven* reconfiguration fire now? Fault-forced
+    /// splits bypass this (routing around dead silicon cannot wait);
+    /// the default `reconfig_cooldown = 0` keeps the historical
+    /// always-allowed behaviour.
+    fn reconfig_allowed(&self) -> bool {
+        self.cfg.reconfig_cooldown == 0
+            || self.chip.reconfig_events == 0
+            || self.now >= self.last_reconfig + self.cfg.reconfig_cooldown
+    }
+
+    /// Watchdog triage at a deadline hit: capture every component's
+    /// forward-progress horizon plus its debug state. A run where *no*
+    /// component reports a pending event is a true deadlock; anything
+    /// else is slow progress the cycle budget truncated.
+    fn watchdog_outcome(&mut self, gens: &GenMap) -> RunOutcome {
+        use std::fmt::Write as _;
+        self.wake_everything(self.now);
+        let mut dump = String::new();
+        let mut any_pending = false;
+        for (ci, c) in self.clusters.iter().enumerate() {
+            let ev = c.next_event(self.now, gens.get(ci));
+            any_pending |= !matches!(ev, crate::sim::NextEvent::Idle);
+            let _ = writeln!(
+                dump,
+                "cluster {ci}: retired={} next={ev:?} {}",
+                self.retired[ci],
+                c.debug_state()
+            );
+        }
+        for (mc, p) in self.partitions.iter().enumerate() {
+            let ev = p.next_event(self.now);
+            any_pending |= !matches!(ev, crate::sim::NextEvent::Idle);
+            let _ = writeln!(
+                dump,
+                "partition {mc}: busy={} stall_until={} next={ev:?}",
+                p.busy(),
+                self.mc_stall_until[mc]
+            );
+        }
+        let ev = self.noc.next_event(self.now);
+        any_pending |= !matches!(ev, crate::sim::NextEvent::Idle);
+        let _ =
+            writeln!(dump, "noc: busy={} next={ev:?} {}", self.noc.busy(), self.noc.debug_state());
+        RunOutcome { deadline_hit: true, deadlock: !any_pending, dump }
     }
 
     /// NoC nodes for cluster `ci` in the current layout.
@@ -402,11 +626,35 @@ impl Gpu {
     /// there and their behaviour is unchanged.)
     fn reconfigure(&mut self, target: &[bool]) {
         debug_assert_eq!(target.len(), self.clusters.len());
+        // Fault sanitisation: a cluster with a dead half-SM can only run
+        // split (its healthy half serves alone), and a retired cluster
+        // keeps whatever wiring it died with — rewiring dead silicon is
+        // a cost nobody should pay.
+        let effective: Vec<bool> = target
+            .iter()
+            .enumerate()
+            .map(|(ci, &f)| {
+                if self.half_faulty[ci] {
+                    false
+                } else if self.retired[ci] {
+                    self.layout.is_fused(ci)
+                } else {
+                    f
+                }
+            })
+            .collect();
+        // Pure no-op: the sanitised target IS the current layout. Every
+        // policy call site computes a real layout change before calling,
+        // so this fires only when sanitisation cancelled the change —
+        // zero-fault runs never take this path.
+        if effective == self.layout.fused_flags() {
+            return;
+        }
         // Reconfiguration mutates cluster state and rebuilds the NoC:
         // every parked component must replay its accounting and resume
         // live ticks before the machine changes shape under it.
         self.wake_everything(self.now);
-        for (c, &fused) in self.clusters.iter_mut().zip(target) {
+        for (c, &fused) in self.clusters.iter_mut().zip(&effective) {
             let mode = if fused { ClusterMode::Fused } else { ClusterMode::PrivatePair };
             if c.mode() == mode {
                 continue;
@@ -415,11 +663,12 @@ impl Gpu {
             c.flush_caches();
             c.frozen_until = self.now + self.cfg.reconfig_cost;
         }
-        self.layout = ChipLayout::new(target.to_vec(), self.cfg.num_mcs);
+        self.layout = ChipLayout::new(effective, self.cfg.num_mcs);
         self.noc = Noc::new(&self.cfg, &self.layout);
         self.noc_seen_epoch = self.noc.inject_epoch();
         self.chip.reconfig_events += 1;
         self.chip.reconfig_cycles += self.cfg.reconfig_cost;
+        self.last_reconfig = self.now;
     }
 
     /// Reconfigure every cluster to the same mode (chip-global schemes).
@@ -445,13 +694,24 @@ impl Gpu {
         // 2. Interconnect.
         self.noc.tick(now);
 
-        // 3. Memory side: requests into partitions.
+        // 3. Memory side: requests into partitions. A transiently
+        // stalled MC accepts nothing while the stall holds (requests
+        // queue in the fabric; nothing is lost).
         for mc in 0..self.partitions.len() {
+            if now < self.mc_stall_until[mc] {
+                continue;
+            }
             self.mc_drain_requests(mc, now);
         }
 
-        // 4. Partitions tick; replies head for the reply subnet.
+        // 4. Partitions tick; replies head for the reply subnet. A
+        // stalled MC still burns its powered-controller cycle (the
+        // counter `mc_service` would have bumped) but does no work.
         for mc in 0..self.partitions.len() {
+            if now < self.mc_stall_until[mc] {
+                self.chip.mc_cycles += 1;
+                continue;
+            }
             self.mc_service(mc, now);
         }
 
@@ -719,6 +979,17 @@ impl Gpu {
         let any_req = self.noc.ejectable_nodes(Subnet::Request) > 0;
         for mc in 0..self.partitions.len() {
             let comp = nc + mc;
+            if now < self.mc_stall_until[mc] {
+                // A transiently stalled MC never parks (its own horizon
+                // is suspended while the stall holds); it burns exactly
+                // the powered cycle the dense loop records and nothing
+                // else. Injection woke it, so this wake is usually a
+                // no-op — but a wake between injection and stall end
+                // (e.g. `wake_everything`) must not let it re-park.
+                self.wake_comp(comp, now);
+                self.chip.mc_cycles += 1;
+                continue;
+            }
             if !self.sched.is_active(comp) {
                 if any_req && self.noc.has_ejectable(Subnet::Request, self.mc_node(mc)) {
                     self.wake_comp(comp, now);
@@ -783,6 +1054,9 @@ impl Gpu {
         let gm = GenMap::Single(&gen);
         let mut next_cta: u32 = 0;
         let total_ctas = kernel.num_ctas;
+        // CTAs orphaned by a fault, awaiting re-dispatch onto a healthy
+        // cluster (conservation: dispatched == retired + requeued).
+        let mut requeue: std::collections::VecDeque<u32> = std::collections::VecDeque::new();
 
         // -------- Phase 1: profiling window (predictor schemes only).
         let mut profiling = self.scheme.uses_predictor();
@@ -811,9 +1085,37 @@ impl Gpu {
         let probe_cap = self.clusters.len() as u32;
 
         loop {
+            // Fault injection at the cycle boundary, before dispatch
+            // (live ticks only: the ff cap below clamps to the next
+            // pending event, so due events always land on live ticks).
+            if self.fault_cursor < self.fault_events.len() {
+                let scheme = self.scheme;
+                let forced =
+                    self.apply_due_faults(&|_| scheme, &mut |_, cta| requeue.push_back(cta));
+                if forced {
+                    // A dead half-SM inside a fused cluster: drain, then
+                    // force the split layout so the healthy half serves.
+                    self.force_split_after_fault(&gm, deadline);
+                }
+            }
+
             // CTA dispatch.
             let cap = if profiling { probe_cap.min(total_ctas) } else { total_ctas };
             let mut dispatched = 0;
+            // Requeued fault victims re-dispatch first, onto any healthy
+            // cluster with room.
+            while dispatched < DISPATCH_PER_CYCLE && !requeue.is_empty() {
+                let Some(ci) = (0..self.clusters.len())
+                    .find(|&ci| !self.retired[ci] && self.clusters[ci].can_accept_cta(kernel))
+                else {
+                    break;
+                };
+                let cta = requeue.pop_front().expect("checked non-empty");
+                self.wake_comp(ci, self.now);
+                self.clusters[ci].dispatch_cta(kernel, cta, &gen);
+                self.chip.ctas_dispatched += 1;
+                dispatched += 1;
+            }
             if profiling && self.scheme.per_cluster() {
                 // Heterogeneous probe wave: CTA `i` lands on cluster `i`,
                 // so the per-cluster windows measure disjoint work. Grids
@@ -822,19 +1124,24 @@ impl Gpu {
                 // intercept alone, i.e. "no evidence => stay private".
                 while next_cta < cap && dispatched < DISPATCH_PER_CYCLE {
                     let ci = next_cta as usize % self.clusters.len();
-                    if !self.clusters[ci].can_accept_cta(kernel) {
+                    if self.retired[ci] || !self.clusters[ci].can_accept_cta(kernel) {
                         break;
                     }
                     self.wake_comp(ci, self.now);
                     self.clusters[ci].dispatch_cta(kernel, next_cta, &gen);
+                    self.chip.ctas_dispatched += 1;
                     next_cta += 1;
                     dispatched += 1;
                 }
             } else {
                 'dispatch: for ci in 0..self.clusters.len() {
+                    if self.retired[ci] {
+                        continue;
+                    }
                     while next_cta < cap && self.clusters[ci].can_accept_cta(kernel) {
                         self.wake_comp(ci, self.now);
                         self.clusters[ci].dispatch_cta(kernel, next_cta, &gen);
+                        self.chip.ctas_dispatched += 1;
                         next_cta += 1;
                         dispatched += 1;
                         if dispatched >= DISPATCH_PER_CYCLE {
@@ -853,7 +1160,9 @@ impl Gpu {
             // fully-drained grid breaks after one more tick — skipping
             // first could carry a still-profiling kernel to its decision
             // point, which the dense loop never reaches).
-            if dispatched == 0 && !(next_cta >= total_ctas && self.drained()) {
+            if dispatched == 0
+                && !(next_cta >= total_ctas && requeue.is_empty() && self.drained())
+            {
                 let mut cap = deadline - 1;
                 if profiling {
                     cap = cap.min((profile_start + self.cfg.profile_window).saturating_sub(1));
@@ -863,6 +1172,9 @@ impl Gpu {
                 }
                 let next_sample = (self.now / PHASE_SAMPLE_PERIOD + 1) * PHASE_SAMPLE_PERIOD;
                 cap = cap.min(next_sample - 1);
+                // Pending fault events fire on live ticks at the top of
+                // the loop: never skip past one.
+                cap = cap.min(self.next_fault_cycle().saturating_sub(1));
                 self.try_fast_forward(cap);
             }
 
@@ -909,7 +1221,9 @@ impl Gpu {
                     }
                     vec![fuse.scale_up; self.clusters.len()]
                 };
-                if target.iter().any(|&f| f) {
+                // The reconfigure cooldown gates the *policy* decision
+                // (anti-thrash); the decision itself is still logged.
+                if target.iter().any(|&f| f) && self.reconfig_allowed() {
                     // Drain resident work, then fuse. We stop dispatching
                     // during the drain by entering a drain loop here. The
                     // dense drain loop has no sampling or split checks, so
@@ -955,22 +1269,23 @@ impl Gpu {
                 });
             }
 
-            if next_cta >= total_ctas && self.drained() {
+            if next_cta >= total_ctas && requeue.is_empty() && self.drained() {
                 break;
             }
             if self.now >= deadline {
-                // Safety net: dump state and bail (tests assert on IPC, so
-                // a deadline hit is loudly visible).
+                // Safety net: the watchdog triages the stuck machine
+                // (deadlock vs slow progress) and the report carries the
+                // outcome — no silent fake completions.
+                let out = self.watchdog_outcome(&gm);
                 if std::env::var("AMOEBA_DEBUG").is_ok() {
-                    eprintln!("[deadline] cycle {} kernel {}", self.now, kernel.id);
-                    eprintln!("  noc busy: {} | {}", self.noc.busy(), self.noc.debug_state());
-                    for (i, c) in self.clusters.iter().enumerate() {
-                        eprintln!("  cluster {i}: {}", c.debug_state());
-                    }
-                    for (i, p) in self.partitions.iter().enumerate() {
-                        eprintln!("  partition {i}: busy={}", p.busy());
-                    }
+                    eprintln!(
+                        "[deadline] cycle {} kernel {} deadlock={}",
+                        self.now, kernel.id, out.deadlock
+                    );
+                    eprint!("{}", out.dump);
                 }
+                self.deadline_hit = true;
+                self.outcome = Some(out);
                 break;
             }
         }
@@ -1028,6 +1343,8 @@ impl Gpu {
             decisions: self.decisions.clone(),
             phases: self.phases.clone(),
             samples: self.samples.clone(),
+            deadline_hit: self.deadline_hit,
+            outcome: self.outcome.clone(),
         }
     }
 
@@ -1102,14 +1419,18 @@ impl Gpu {
         &mut self,
         streams: &[KernelStream],
         policy: PartitionPolicy,
-    ) -> StreamReport {
+    ) -> crate::errors::Result<StreamReport> {
         let n_clusters = self.clusters.len();
         let n = streams.len();
-        assert!(n > 0, "run_streams needs at least one stream");
-        assert!(n <= n_clusters, "more tenants ({n}) than clusters ({n_clusters})");
+        if n == 0 {
+            return Err(err("run_streams needs at least one stream"));
+        }
+        if n > n_clusters {
+            return Err(err(format!("more tenants ({n}) than clusters ({n_clusters})")));
+        }
         assert_eq!(self.now, 0, "run_streams needs a fresh machine");
         for s in streams {
-            s.validate().expect("invalid kernel stream");
+            s.validate().map_err(|e| err(format!("invalid kernel stream: {e}")))?;
         }
 
         // Initial spatial partition: contiguous near-even blocks, and the
@@ -1161,6 +1482,7 @@ impl Gpu {
                 decisions: Vec::new(),
                 samples: Vec::new(),
                 finish: 0,
+                deadline_hit: false,
             })
             .collect();
 
@@ -1195,8 +1517,28 @@ impl Gpu {
         let mut phases: Vec<PhaseSample> = Vec::new();
         // Clusters released by finished tenants (Adaptive policy only).
         let mut free_pool: Vec<usize> = Vec::new();
+        // Per-tenant queues of CTAs orphaned by faults, awaiting
+        // re-dispatch onto a healthy owned cluster.
+        let mut requeues: Vec<std::collections::VecDeque<u32>> =
+            vec![std::collections::VecDeque::new(); n];
 
         loop {
+            // ---- Fault injection at the cycle boundary (live ticks
+            // only; the ff cap clamps to the next pending event).
+            // Orphaned CTAs requeue to the cluster's owning tenant; a
+            // half-SM fault inside a fused cluster forces a chip drain
+            // and a split so the healthy half keeps serving.
+            if self.fault_cursor < self.fault_events.len() {
+                let forced = self.apply_due_faults(
+                    &|ci| streams[owner[ci]].scheme,
+                    &mut |ci, cta| requeues[owner[ci]].push_back(cta),
+                );
+                if forced {
+                    let gm = GenMap::PerTenant { gens: &gens, owner: &owner };
+                    self.force_split_after_fault(&gm, deadline);
+                }
+            }
+
             let drain_hold = tenants.iter().any(|t| matches!(t.phase, TPhase::Drain { .. }));
 
             // ---- CTA dispatch: each tenant's launch engine feeds its own
@@ -1219,26 +1561,46 @@ impl Gpu {
                         kernel.num_ctas
                     };
                     let mut mine = 0usize;
+                    // Requeued fault victims re-dispatch first, onto any
+                    // healthy owned cluster with room.
+                    while mine < DISPATCH_PER_CYCLE && !requeues[ti].is_empty() {
+                        let Some(&ci) = t.partition.iter().find(|&&ci| {
+                            !self.retired[ci] && self.clusters[ci].can_accept_cta(kernel)
+                        }) else {
+                            break;
+                        };
+                        let cta = requeues[ti].pop_front().expect("checked non-empty");
+                        self.wake_comp(ci, self.now);
+                        self.clusters[ci].dispatch_cta(kernel, cta, &gens[ti]);
+                        self.chip.ctas_dispatched += 1;
+                        ctas_by_cluster[ti][ci] += 1;
+                        mine += 1;
+                    }
                     if probing && t.scheme.per_cluster() {
                         // Heterogeneous probe wave: CTA i lands on the
                         // tenant's i-th cluster so the per-cluster windows
                         // measure disjoint work.
                         while t.next_cta < cap && mine < DISPATCH_PER_CYCLE {
                             let ci = t.partition[t.next_cta as usize % t.partition.len()];
-                            if !self.clusters[ci].can_accept_cta(kernel) {
+                            if self.retired[ci] || !self.clusters[ci].can_accept_cta(kernel) {
                                 break;
                             }
                             self.wake_comp(ci, self.now);
                             self.clusters[ci].dispatch_cta(kernel, t.next_cta, &gens[ti]);
+                            self.chip.ctas_dispatched += 1;
                             ctas_by_cluster[ti][ci] += 1;
                             t.next_cta += 1;
                             mine += 1;
                         }
                     } else {
                         'dispatch: for &ci in &t.partition {
+                            if self.retired[ci] {
+                                continue;
+                            }
                             while t.next_cta < cap && self.clusters[ci].can_accept_cta(kernel) {
                                 self.wake_comp(ci, self.now);
                                 self.clusters[ci].dispatch_cta(kernel, t.next_cta, &gens[ti]);
+                                self.chip.ctas_dispatched += 1;
                                 ctas_by_cluster[ti][ci] += 1;
                                 t.next_cta += 1;
                                 mine += 1;
@@ -1267,10 +1629,13 @@ impl Gpu {
                             !drain_hold && self.now >= streams[ti].launches[t.kidx].arrival
                         }
                         TPhase::Drain { .. } => self.drained(),
-                        TPhase::Profiling | TPhase::Running => self.stream_kernel_complete(
-                            t,
-                            streams[ti].launches[t.kidx].kernel.num_ctas,
-                        ),
+                        TPhase::Profiling | TPhase::Running => {
+                            requeues[ti].is_empty()
+                                && self.stream_kernel_complete(
+                                    t,
+                                    streams[ti].launches[t.kidx].kernel.num_ctas,
+                                )
+                        }
                         TPhase::Done => false,
                     };
                     if pending {
@@ -1305,6 +1670,9 @@ impl Gpu {
                     let next_sample =
                         (self.now / PHASE_SAMPLE_PERIOD + 1) * PHASE_SAMPLE_PERIOD;
                     cap = cap.min(next_sample - 1);
+                    // Pending fault events fire on live ticks at the top
+                    // of the loop: never skip past one.
+                    cap = cap.min(self.next_fault_cycle().saturating_sub(1));
                     self.try_fast_forward(cap);
                 }
             }
@@ -1372,11 +1740,15 @@ impl Gpu {
                         tenants[ti].decisions.push(d);
                         vec![d.scale_up; tenants[ti].partition.len()]
                     };
-                    let change = tenants[ti]
-                        .partition
-                        .iter()
-                        .zip(&target)
-                        .any(|(&ci, &f)| self.layout.is_fused(ci) != f);
+                    // The reconfigure cooldown (anti-thrash, serving
+                    // layer) gates the policy decision; a blocked tenant
+                    // keeps running on the profiling (scale-out) layout.
+                    let change = self.reconfig_allowed()
+                        && tenants[ti]
+                            .partition
+                            .iter()
+                            .zip(&target)
+                            .any(|(&ci, &f)| self.layout.is_fused(ci) != f);
                     if change {
                         tenants[ti].phase = TPhase::Drain { target, then_profile: false };
                     } else {
@@ -1489,7 +1861,10 @@ impl Gpu {
                 // advance the stream.
                 if matches!(tenants[ti].phase, TPhase::Profiling | TPhase::Running) {
                     let total = streams[ti].launches[tenants[ti].kidx].kernel.num_ctas;
-                    if self.stream_kernel_complete(&tenants[ti], total) {
+                    // A kernel with fault-orphaned CTAs still queued is
+                    // not complete: they must re-dispatch and retire.
+                    if requeues[ti].is_empty() && self.stream_kernel_complete(&tenants[ti], total)
+                    {
                         let part = tenants[ti].partition.clone();
                         for &ci in &part {
                             // Reap/flush mutate the cluster, and a Done
@@ -1552,20 +1927,29 @@ impl Gpu {
                 break;
             }
             if self.now >= deadline {
-                // Safety net, as in the single-application loop.
+                // Safety net, as in the single-application loop: the
+                // watchdog triages the stuck machine (deadlock vs slow
+                // progress) and the report carries the outcome.
+                let out = {
+                    let gm = GenMap::PerTenant { gens: &gens, owner: &owner };
+                    self.watchdog_outcome(&gm)
+                };
                 if std::env::var("AMOEBA_DEBUG").is_ok() {
-                    eprintln!("[deadline] stream run at cycle {}", self.now);
-                    for (i, c) in self.clusters.iter().enumerate() {
-                        eprintln!("  cluster {i}: {}", c.debug_state());
-                    }
+                    eprintln!(
+                        "[deadline] stream run at cycle {} deadlock={}",
+                        self.now, out.deadlock
+                    );
+                    eprint!("{}", out.dump);
                 }
-                self.wake_everything(self.now);
+                self.deadline_hit = true;
+                self.outcome = Some(out);
                 for ti in 0..n {
                     if !matches!(tenants[ti].phase, TPhase::Done) {
                         // Truncated launches keep start/finish at
                         // u64::MAX: "all launches served" assertions and
                         // the ANTT math must see the truncation, not a
                         // fake completion at the deadline cycle.
+                        tenants[ti].deadline_hit = true;
                         tenants[ti].finish = self.now;
                         tenants[ti].phase = TPhase::Done;
                         self.stream_close_accounting(&mut tenants[ti]);
@@ -1596,10 +1980,12 @@ impl Gpu {
                     decisions: t.decisions,
                     phases: Vec::new(),
                     samples: t.samples,
+                    deadline_hit: t.deadline_hit,
+                    outcome: None,
                 }
             })
             .collect();
-        StreamReport {
+        Ok(StreamReport {
             tenants: tenant_reports,
             sm,
             chip: self.chip.clone(),
@@ -1608,12 +1994,18 @@ impl Gpu {
             launches,
             partitions,
             ctas_by_cluster,
-        }
+            deadline_hit: self.deadline_hit,
+            outcome: self.outcome.clone(),
+        })
     }
 }
 
 /// Simulate `profile` under `scheme` with the default controller.
-pub fn run_benchmark(cfg: &SystemConfig, profile: &BenchProfile, scheme: Scheme) -> SimReport {
+pub fn run_benchmark(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+) -> crate::errors::Result<SimReport> {
     run_benchmark_seeded(cfg, profile, scheme, 0xAB0EBA)
 }
 
@@ -1624,10 +2016,10 @@ pub fn run_benchmark_seeded(
     profile: &BenchProfile,
     scheme: Scheme,
     seed: u64,
-) -> SimReport {
+) -> crate::errors::Result<SimReport> {
     let controller = Controller::native(cfg);
-    let mut gpu = Gpu::new(cfg, scheme, controller);
-    gpu.run(profile, seed)
+    let mut gpu = Gpu::new(cfg, scheme, controller)?;
+    Ok(gpu.run(profile, seed))
 }
 
 /// [`run_benchmark_seeded`] with the execution mode pinned explicitly:
@@ -1641,11 +2033,45 @@ pub fn run_benchmark_seeded_dense(
     scheme: Scheme,
     seed: u64,
     dense: bool,
-) -> SimReport {
+) -> crate::errors::Result<SimReport> {
     let controller = Controller::native(cfg);
-    let mut gpu = Gpu::new(cfg, scheme, controller);
+    let mut gpu = Gpu::new(cfg, scheme, controller)?;
     gpu.set_dense(dense);
-    gpu.run(profile, seed)
+    Ok(gpu.run(profile, seed))
+}
+
+/// [`run_benchmark_seeded`] with a deterministic fault schedule injected
+/// at cycle boundaries. An empty trace is bit-identical to the unfaulted
+/// entry points. Execution mode follows `AMOEBA_DENSE`.
+pub fn run_benchmark_faulted(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+    faults: &FaultTrace,
+) -> crate::errors::Result<SimReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, scheme, controller)?;
+    gpu.set_fault_trace(faults)?;
+    Ok(gpu.run(profile, seed))
+}
+
+/// [`run_benchmark_faulted`] with the execution mode pinned explicitly —
+/// fault runs are bit-identical dense-vs-active like everything else
+/// (enforced in `tests/exec_determinism.rs`).
+pub fn run_benchmark_faulted_dense(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+    dense: bool,
+    faults: &FaultTrace,
+) -> crate::errors::Result<SimReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, scheme, controller)?;
+    gpu.set_dense(dense);
+    gpu.set_fault_trace(faults)?;
+    Ok(gpu.run(profile, seed))
 }
 
 /// Execution phase of one tenant in [`Gpu::run_streams`].
@@ -1691,6 +2117,8 @@ struct TenantRun {
     decisions: Vec<KernelDecision>,
     samples: Vec<MetricsSample>,
     finish: u64,
+    /// True when the chip deadline truncated this tenant mid-stream.
+    deadline_hit: bool,
 }
 
 /// Serve `streams` on a fresh machine with the default (native-predictor)
@@ -1701,9 +2129,9 @@ pub fn serve_streams(
     cfg: &SystemConfig,
     streams: &[KernelStream],
     policy: PartitionPolicy,
-) -> StreamReport {
+) -> crate::errors::Result<StreamReport> {
     let controller = Controller::native(cfg);
-    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller);
+    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller)?;
     gpu.run_streams(streams, policy)
 }
 
@@ -1716,10 +2144,39 @@ pub fn serve_streams_dense(
     streams: &[KernelStream],
     policy: PartitionPolicy,
     dense: bool,
-) -> StreamReport {
+) -> crate::errors::Result<StreamReport> {
     let controller = Controller::native(cfg);
-    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller);
+    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller)?;
     gpu.set_dense(dense);
+    gpu.run_streams(streams, policy)
+}
+
+/// [`serve_streams`] with a deterministic fault schedule injected at
+/// cycle boundaries (an empty trace is bit-identical to no trace).
+pub fn serve_streams_faulted(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    policy: PartitionPolicy,
+    faults: &FaultTrace,
+) -> crate::errors::Result<StreamReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller)?;
+    gpu.set_fault_trace(faults)?;
+    gpu.run_streams(streams, policy)
+}
+
+/// [`serve_streams_faulted`] with the execution mode pinned explicitly.
+pub fn serve_streams_faulted_dense(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    policy: PartitionPolicy,
+    dense: bool,
+    faults: &FaultTrace,
+) -> crate::errors::Result<StreamReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller)?;
+    gpu.set_dense(dense);
+    gpu.set_fault_trace(faults)?;
     gpu.run_streams(streams, policy)
 }
 
@@ -1731,9 +2188,9 @@ pub fn run_benchmark_with_controller(
     scheme: Scheme,
     controller: Controller,
     seed: u64,
-) -> SimReport {
-    let mut gpu = Gpu::new(cfg, scheme, controller);
-    gpu.run(profile, seed)
+) -> crate::errors::Result<SimReport> {
+    let mut gpu = Gpu::new(cfg, scheme, controller)?;
+    Ok(gpu.run(profile, seed))
 }
 
 #[cfg(test)]
@@ -1749,7 +2206,7 @@ mod tests {
         p.num_ctas = 12;
         p.insns_per_thread = 120;
         p.num_kernels = 1;
-        run_benchmark(&cfg, &p, scheme)
+        run_benchmark(&cfg, &p, scheme).unwrap()
     }
 
     #[test]
@@ -1794,12 +2251,12 @@ mod tests {
         p.num_ctas = 8;
         p.insns_per_thread = 80;
         p.num_kernels = 1;
-        let a = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9);
-        let b = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9);
+        let a = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9).unwrap();
+        let b = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 9).unwrap();
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.sm.thread_insns, b.sm.thread_insns);
         assert_eq!(a.sm.l1d_misses, b.sm.l1d_misses);
-        let c = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 10);
+        let c = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 10).unwrap();
         assert_ne!(a.cycles, c.cycles, "different seeds should differ");
     }
 
@@ -1843,8 +2300,8 @@ mod tests {
         p.insns_per_thread = 80;
         p.num_kernels = 1;
         for scheme in [Scheme::Baseline, Scheme::WarpRegroup] {
-            let dense = run_benchmark_seeded_dense(&cfg, &p, scheme, 11, true);
-            let skip = run_benchmark_seeded_dense(&cfg, &p, scheme, 11, false);
+            let dense = run_benchmark_seeded_dense(&cfg, &p, scheme, 11, true).unwrap();
+            let skip = run_benchmark_seeded_dense(&cfg, &p, scheme, 11, false).unwrap();
             assert_eq!(dense, skip, "{scheme}: skip must be bit-identical to dense");
         }
     }
@@ -1863,7 +2320,9 @@ mod tests {
         cfg.max_cycles = 1_500_000;
         let streams =
             vec![quick_stream("CP", Scheme::Baseline, 6, 60, 0xA11), quick_stream("BFS", Scheme::Hetero, 6, 60, 0xA12)];
-        let r = serve_streams(&cfg, &streams, PartitionPolicy::Static);
+        let r = serve_streams(&cfg, &streams, PartitionPolicy::Static).unwrap();
+        assert!(!r.deadline_hit, "quick streams must finish inside the budget");
+        assert!(r.outcome.is_none());
         assert_eq!(r.tenants.len(), 2);
         for (ti, t) in r.tenants.iter().enumerate() {
             assert_eq!(t.chip.kernels_completed, 2, "tenant {ti} kernels");
@@ -1897,7 +2356,7 @@ mod tests {
         cfg.max_cycles = 1_500_000;
         let streams =
             vec![quick_stream("CP", Scheme::Baseline, 6, 60, 0xB01), quick_stream("RAY", Scheme::Hetero, 6, 60, 0xB02)];
-        let r = serve_streams(&cfg, &streams, PartitionPolicy::Static);
+        let r = serve_streams(&cfg, &streams, PartitionPolicy::Static).unwrap();
         assert!(r.tenants[0].decisions.is_empty(), "baseline tenant never predicts");
         let hetero = &r.tenants[1];
         let owned = r.partitions[1].len();
@@ -1917,8 +2376,8 @@ mod tests {
         cfg.max_cycles = 1_500_000;
         let streams =
             vec![quick_stream("BFS", Scheme::WarpRegroup, 6, 60, 0xC01), quick_stream("CP", Scheme::Baseline, 6, 60, 0xC02)];
-        let dense = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, true);
-        let skip = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, false);
+        let dense = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, true).unwrap();
+        let skip = serve_streams_dense(&cfg, &streams, PartitionPolicy::Static, false).unwrap();
         assert_eq!(dense, skip, "stream skip must be bit-identical to dense");
     }
 
@@ -1941,7 +2400,7 @@ mod tests {
         t1.launches.truncate(2);
         t1.launches[1].arrival = 500_000;
         let streams = vec![t0, t1];
-        let r = serve_streams(&cfg, &streams, PartitionPolicy::Adaptive);
+        let r = serve_streams(&cfg, &streams, PartitionPolicy::Adaptive).unwrap();
         assert!(r.launches.iter().all(|l| l.finish != u64::MAX), "all launches served");
         // Tenant 1's second kernel ran on the adopted cluster(s) too.
         let foreign: u64 = r.ctas_by_cluster[1]
@@ -1957,7 +2416,6 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "more tenants")]
     fn too_many_tenants_is_rejected() {
         let cfg = SystemConfig::tiny(); // 2 clusters
         let streams = vec![
@@ -1965,7 +2423,16 @@ mod tests {
             quick_stream("CP", Scheme::Baseline, 2, 20, 2),
             quick_stream("CP", Scheme::Baseline, 2, 20, 3),
         ];
-        let _ = serve_streams(&cfg, &streams, PartitionPolicy::Static);
+        let e = serve_streams(&cfg, &streams, PartitionPolicy::Static).unwrap_err();
+        assert!(e.to_string().contains("more tenants"), "got: {e}");
+    }
+
+    #[test]
+    fn invalid_config_is_an_error_not_a_panic() {
+        let mut cfg = SystemConfig::tiny();
+        cfg.num_sms = 1; // odd SM count: clusters are SM pairs
+        let p = bench("CP").unwrap();
+        assert!(run_benchmark(&cfg, &p, Scheme::Baseline).is_err());
     }
 
     #[test]
@@ -1977,10 +2444,110 @@ mod tests {
         p.num_ctas = 4;
         p.insns_per_thread = 60;
         p.num_kernels = 1;
-        let dense = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, 3, true);
-        let skip = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, 3, false);
+        let dense = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, 3, true).unwrap();
+        let skip = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, 3, false).unwrap();
         assert_eq!(dense.cycles, skip.cycles);
         assert_eq!(dense.chip.cycles, skip.chip.cycles);
         assert_eq!(dense.sm.stall_memory, skip.sm.stall_memory);
+    }
+
+    use crate::sim::fault::{FaultEvent, FaultKind, FaultTrace};
+
+    fn small_profile(name: &str, ctas: u32) -> crate::workload::BenchProfile {
+        let mut p = bench(name).unwrap();
+        p.num_ctas = ctas;
+        p.insns_per_thread = 80;
+        p.num_kernels = 1;
+        p
+    }
+
+    #[test]
+    fn cluster_fault_requeues_and_completes() {
+        // Kill cluster 0 mid-run: its CTAs requeue onto cluster 1 and the
+        // kernel still completes, conserving CTAs.
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let p = small_profile("CP", 8);
+        let trace = FaultTrace::new(vec![FaultEvent {
+            cycle: 300,
+            kind: FaultKind::Cluster { cluster: 0 },
+        }]);
+        let r = run_benchmark_faulted(&cfg, &p, Scheme::Baseline, 7, &trace).unwrap();
+        assert_eq!(r.chip.kernels_completed, 1);
+        assert!(!r.deadline_hit, "degraded chip must still finish");
+        assert_eq!(r.chip.faults_injected, 1);
+        assert_eq!(r.chip.clusters_retired, 1);
+        assert!(r.chip.ctas_requeued > 0, "cluster 0 had resident CTAs at cycle 300");
+        // Conservation: every dispatch either retired or was requeued
+        // (and a requeued CTA's re-dispatch counts again).
+        assert_eq!(r.chip.ctas_dispatched, r.sm.ctas_retired + r.chip.ctas_requeued);
+    }
+
+    #[test]
+    fn half_fault_serves_on_healthy_half() {
+        // A dead half-SM under a split-capable scheme: the cluster stays
+        // in service on its healthy half and the run completes.
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let p = small_profile("CP", 8);
+        let trace = FaultTrace::new(vec![FaultEvent {
+            cycle: 300,
+            kind: FaultKind::HalfSm { cluster: 0, half: 0 },
+        }]);
+        let r = run_benchmark_faulted(&cfg, &p, Scheme::Baseline, 7, &trace).unwrap();
+        assert_eq!(r.chip.kernels_completed, 1);
+        assert_eq!(r.chip.faults_injected, 1);
+        assert_eq!(r.chip.clusters_retired, 0, "tolerant scheme keeps the cluster");
+        assert_eq!(r.chip.ctas_dispatched, r.sm.ctas_retired + r.chip.ctas_requeued);
+    }
+
+    #[test]
+    fn scale_up_loses_whole_cluster_on_half_fault() {
+        // The rigid fused machine cannot route around a dead half: the
+        // same fault retires the entire cluster.
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let p = small_profile("CP", 8);
+        let trace = FaultTrace::new(vec![FaultEvent {
+            cycle: 300,
+            kind: FaultKind::HalfSm { cluster: 0, half: 1 },
+        }]);
+        let r = run_benchmark_faulted(&cfg, &p, Scheme::ScaleUp, 7, &trace).unwrap();
+        assert_eq!(r.chip.clusters_retired, 1, "ScaleUp loses the whole cluster");
+        assert_eq!(r.chip.kernels_completed, 1, "the other cluster still serves");
+    }
+
+    #[test]
+    fn faulted_skip_matches_dense_smoke() {
+        // The full fault matrix lives in tests/exec_determinism; this is
+        // the in-crate smoke check that injection preserves the skip
+        // contract across all four fault kinds.
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let p = small_profile("BFS", 8);
+        let trace = FaultTrace::new(vec![
+            FaultEvent { cycle: 200, kind: FaultKind::NocDegrade { penalty: 1 } },
+            FaultEvent { cycle: 400, kind: FaultKind::McStall { mc: 0, cycles: 500 } },
+            FaultEvent { cycle: 900, kind: FaultKind::HalfSm { cluster: 1, half: 0 } },
+            FaultEvent { cycle: 1_500, kind: FaultKind::Cluster { cluster: 0 } },
+        ]);
+        for scheme in [Scheme::Baseline, Scheme::WarpRegroup] {
+            let dense =
+                run_benchmark_faulted_dense(&cfg, &p, scheme, 11, true, &trace).unwrap();
+            let skip =
+                run_benchmark_faulted_dense(&cfg, &p, scheme, 11, false, &trace).unwrap();
+            assert_eq!(dense, skip, "{scheme}: faulted skip must match dense");
+        }
+    }
+
+    #[test]
+    fn empty_fault_trace_is_identical_to_none() {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let p = small_profile("CP", 8);
+        let plain = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 5).unwrap();
+        let empty =
+            run_benchmark_faulted(&cfg, &p, Scheme::Baseline, 5, &FaultTrace::default()).unwrap();
+        assert_eq!(plain, empty, "empty trace must be a bit-identical no-op");
     }
 }

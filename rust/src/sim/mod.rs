@@ -3,6 +3,7 @@
 
 pub mod core;
 pub mod event;
+pub mod fault;
 pub mod gpu;
 pub mod mem;
 pub mod noc;

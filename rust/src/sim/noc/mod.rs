@@ -194,6 +194,11 @@ pub struct Noc {
     inject_epoch: u64,
     /// Reusable rotated-order snapshot of the busy set.
     order_scratch: Vec<u32>,
+    /// Extra cycles added to every router hop (fault-injected link
+    /// degradation; 0 on a healthy fabric). Applied when a hop's ready
+    /// cycle is stamped, so raising it mid-run never reorders packets
+    /// already accepted — horizons stay exact.
+    hop_penalty: u64,
 }
 
 impl Noc {
@@ -230,7 +235,20 @@ impl Noc {
             eject_nonempty: [0, 0],
             inject_epoch: 0,
             order_scratch: Vec::with_capacity(8),
+            hop_penalty: 0,
         }
+    }
+
+    /// Degrade every router hop by `penalty` extra cycles (fault
+    /// injection). Monotone for the common single-event case, but any
+    /// value is safe: only future hop stamps change.
+    pub fn set_hop_penalty(&mut self, penalty: u64) {
+        self.hop_penalty = penalty;
+    }
+
+    /// Current per-hop degradation penalty (0 = healthy fabric).
+    pub fn hop_penalty(&self) -> u64 {
+        self.hop_penalty
     }
 
     /// Record router `r` of `subnet` as holding queued packets.
@@ -352,8 +370,10 @@ impl Noc {
                     self.eject_push(subnet, pkt.dst, pkt);
                     self.flits_routed += pkt.flits as u64;
                 } else {
-                    // Hop latency: pipeline stages + serialization.
-                    let ready = now + self.routers[subnet][r].stages + pkt.flits as u64;
+                    // Hop latency: pipeline stages + serialization, plus
+                    // any fault-injected link degradation.
+                    let ready =
+                        now + self.routers[subnet][r].stages + pkt.flits as u64 + self.hop_penalty;
                     self.routers[subnet][next].accept(pkt, ready);
                     self.mark_busy(subnet, next);
                     self.flits_routed += pkt.flits as u64;
@@ -674,6 +694,19 @@ mod tests {
         }
         assert_eq!(sent, got, "active-set sweep must conserve packets");
         assert!(!noc.busy());
+    }
+
+    #[test]
+    fn hop_penalty_slows_delivery() {
+        let mut healthy = Noc::with_nodes(&cfg(), 6);
+        let base = deliver(&mut healthy, pkt(0, 5, 1, 0), 200);
+        let mut degraded = Noc::with_nodes(&cfg(), 6);
+        degraded.set_hop_penalty(4);
+        assert_eq!(degraded.hop_penalty(), 4);
+        let slow = deliver(&mut degraded, pkt(0, 5, 1, 0), 400);
+        assert!(slow > base, "degraded fabric must be slower: {slow} vs {base}");
+        // Multi-hop paths pay the penalty per hop.
+        assert!(slow >= base + 4 * (degraded.hops(0, 5) as u64 - 1), "slow={slow} base={base}");
     }
 
     #[test]

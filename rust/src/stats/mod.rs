@@ -223,6 +223,17 @@ pub struct ChipStats {
     /// substituted (see `ScalePredictor::fallback_count`); nonzero means
     /// decisions were NOT measured by the configured backend.
     pub predictor_fallbacks: u64,
+    /// Fault events applied from the run's `FaultTrace` (0 in healthy runs).
+    pub faults_injected: u64,
+    /// Clusters permanently retired by whole-cluster (or intolerable
+    /// half-SM) faults.
+    pub clusters_retired: u64,
+    /// CTAs handed to a cluster by the dispatch path (conservation
+    /// invariant: `ctas_dispatched == sm.ctas_retired + ctas_requeued` on
+    /// completed runs).
+    pub ctas_dispatched: u64,
+    /// In-flight CTAs pulled back from a failing cluster and redispatched.
+    pub ctas_requeued: u64,
 }
 
 impl ChipStats {

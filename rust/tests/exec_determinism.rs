@@ -11,9 +11,10 @@
 
 use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::harness::{SimJob, StreamJob, SweepExec};
+use amoeba_gpu::sim::fault::{FaultEvent, FaultKind, FaultTrace};
 use amoeba_gpu::sim::gpu::{
-    run_benchmark_seeded, run_benchmark_seeded_dense, serve_streams_dense, PartitionPolicy,
-    SimReport, StreamReport,
+    run_benchmark_faulted_dense, run_benchmark_seeded, run_benchmark_seeded_dense,
+    serve_streams_dense, serve_streams_faulted_dense, PartitionPolicy, SimReport, StreamReport,
 };
 use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace, KernelStream};
 
@@ -45,7 +46,7 @@ fn parallel_executor_matches_serial_bit_for_bit() {
     assert_eq!(parallel.len(), jobs.len());
 
     for (job, pr) in jobs.iter().zip(&parallel) {
-        let sr = run_benchmark_seeded(&job.cfg, &job.profile, job.scheme, job.seed);
+        let sr = run_benchmark_seeded(&job.cfg, &job.profile, job.scheme, job.seed).unwrap();
         let label = format!("{} under {}", job.profile.name, job.scheme);
         assert_eq!(sr.cycles, pr.cycles, "{label}: cycles");
         assert_eq!(sr.sm.thread_insns, pr.sm.thread_insns, "{label}: thread insns");
@@ -130,8 +131,8 @@ fn cycle_skip_matches_dense_across_all_schemes() {
         p.num_kernels = 1;
         for scheme in Scheme::ALL {
             let label = format!("{name} under {scheme}");
-            let dense = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xD37, true);
-            let skip = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xD37, false);
+            let dense = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xD37, true).unwrap();
+            let skip = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xD37, false).unwrap();
             assert_eq!(dense.chip.kernels_completed, 1, "{label}: completes");
             assert_reports_identical(&dense, &skip, &label);
         }
@@ -155,8 +156,8 @@ fn cycle_skip_matches_dense_with_active_dynamic_splits() {
     p.num_kernels = 2; // cross a kernel boundary with live split state
     for scheme in [Scheme::DirectSplit, Scheme::WarpRegroup, Scheme::Hetero] {
         let label = format!("split-active RAY under {scheme}");
-        let dense = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xA7, true);
-        let skip = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xA7, false);
+        let dense = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xA7, true).unwrap();
+        let skip = run_benchmark_seeded_dense(&cfg, &p, scheme, 0xA7, false).unwrap();
         assert_reports_identical(&dense, &skip, &label);
     }
 }
@@ -174,8 +175,8 @@ fn cycle_skip_matches_dense_on_memory_bound_profiles() {
         p.num_kernels = 1;
         for seed in [1u64, 2, 3] {
             let label = format!("{name} seed {seed}");
-            let dense = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, seed, true);
-            let skip = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, seed, false);
+            let dense = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, seed, true).unwrap();
+            let skip = run_benchmark_seeded_dense(&cfg, &p, Scheme::Baseline, seed, false).unwrap();
             assert_reports_identical(&dense, &skip, &label);
         }
     }
@@ -191,7 +192,8 @@ fn sweep_cache_entries_match_the_dense_reference() {
     let exec = SweepExec::new(4);
     let out = exec.run_batch(jobs.clone());
     for (job, r) in jobs.iter().zip(&out) {
-        let reference = run_benchmark_seeded_dense(&job.cfg, &job.profile, job.scheme, job.seed, true);
+        let reference =
+            run_benchmark_seeded_dense(&job.cfg, &job.profile, job.scheme, job.seed, true).unwrap();
         let label = format!("cached {} under {}", job.profile.name, job.scheme);
         assert_reports_identical(&reference, r, &label);
     }
@@ -246,8 +248,8 @@ fn stream_cycle_skip_matches_dense() {
     let (cfg, streams) = stream_grid();
     for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
         let label = format!("streams under {policy}");
-        let dense = serve_streams_dense(&cfg, &streams, policy, true);
-        let skip = serve_streams_dense(&cfg, &streams, policy, false);
+        let dense = serve_streams_dense(&cfg, &streams, policy, true).unwrap();
+        let skip = serve_streams_dense(&cfg, &streams, policy, false).unwrap();
         assert!(
             dense.launches.iter().all(|l| l.finish != u64::MAX),
             "{label}: all launches served"
@@ -291,8 +293,8 @@ fn stream_partial_quiescence_matches_dense() {
     ];
     for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
         let label = format!("one-hot-tenant under {policy}");
-        let dense = serve_streams_dense(&cfg, &streams, policy, true);
-        let active = serve_streams_dense(&cfg, &streams, policy, false);
+        let dense = serve_streams_dense(&cfg, &streams, policy, true).unwrap();
+        let active = serve_streams_dense(&cfg, &streams, policy, false).unwrap();
         assert!(dense.launches.iter().all(|l| l.finish != u64::MAX), "{label}: served");
         assert_stream_reports_identical(&dense, &active, &label);
     }
@@ -321,6 +323,92 @@ fn stream_sweep_parallel_matches_serial() {
     assert_eq!(misses_before, misses_after, "re-running the stream batch must not simulate");
     for (x, y) in a.iter().zip(&again) {
         assert!(std::sync::Arc::ptr_eq(x, y), "cached Arc must be returned");
+    }
+}
+
+/// A fault trace touching every fault kind — NoC degrade, MC stall, a
+/// half-SM death mid-run and a whole-cluster death — staggered across
+/// the run's lifetime.
+fn mixed_fault_trace() -> FaultTrace {
+    FaultTrace::new(vec![
+        FaultEvent { cycle: 200, kind: FaultKind::NocDegrade { penalty: 1 } },
+        FaultEvent { cycle: 400, kind: FaultKind::McStall { mc: 0, cycles: 600 } },
+        FaultEvent { cycle: 900, kind: FaultKind::HalfSm { cluster: 1, half: 0 } },
+        FaultEvent { cycle: 1_500, kind: FaultKind::Cluster { cluster: 0 } },
+    ])
+}
+
+/// Fault injection vs the dense reference loop: injection happens on
+/// live ticks (the skip engine's fast-forward caps clamp to the next
+/// fault cycle, and injection wakes its target per the active-set
+/// contract), so a faulted run must stay bit-identical between modes —
+/// the same contract the healthy path obeys.
+#[test]
+fn faulted_cycle_skip_matches_dense() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    let trace = mixed_fault_trace();
+    for name in ["BFS", "RAY"] {
+        let mut p = bench(name).unwrap();
+        p.num_ctas = 8;
+        p.insns_per_thread = 80;
+        p.num_kernels = 1;
+        for scheme in [Scheme::Baseline, Scheme::ScaleUp, Scheme::WarpRegroup, Scheme::Hetero] {
+            let label = format!("faulted {name} under {scheme}");
+            let dense = run_benchmark_faulted_dense(&cfg, &p, scheme, 0xD37, true, &trace).unwrap();
+            let skip = run_benchmark_faulted_dense(&cfg, &p, scheme, 0xD37, false, &trace).unwrap();
+            assert_eq!(
+                dense.chip.faults_injected,
+                trace.len() as u64,
+                "{label}: every fault lands"
+            );
+            assert_reports_identical(&dense, &skip, &label);
+        }
+    }
+}
+
+/// The same mode-equivalence contract on a faulted multi-tenant run:
+/// cluster retirement requeues one tenant's CTAs and the forced split
+/// reshapes the layout while other tenants keep serving — all of it
+/// bit-identical between the dense and active-set loops.
+#[test]
+fn faulted_stream_cycle_skip_matches_dense() {
+    let (cfg, streams) = stream_grid();
+    let trace = mixed_fault_trace();
+    for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
+        let label = format!("faulted streams under {policy}");
+        let dense = serve_streams_faulted_dense(&cfg, &streams, policy, true, &trace).unwrap();
+        let skip = serve_streams_faulted_dense(&cfg, &streams, policy, false, &trace).unwrap();
+        assert_eq!(dense.chip.faults_injected, trace.len() as u64, "{label}: faults land");
+        assert!(dense.chip.clusters_retired >= 1, "{label}: cluster 0 retires");
+        assert_stream_reports_identical(&dense, &skip, &label);
+    }
+}
+
+/// Faulted jobs through the sweep executor: parallel fan-out equals the
+/// serial path bit for bit, and the fault trace is part of the memo key
+/// (a faulted job never shadows the healthy run's cache entry).
+#[test]
+fn faulted_sweep_parallel_matches_serial() {
+    let (_cfg, jobs) = grid();
+    let trace = mixed_fault_trace();
+    let jobs: Vec<SimJob> = jobs.into_iter().map(|j| j.with_fault(trace.clone())).collect();
+    let par = SweepExec::new(4);
+    let ser = SweepExec::serial();
+    let a = par.run_batch(jobs.clone());
+    let b = ser.run_batch(jobs.clone());
+    for ((x, y), job) in a.iter().zip(&b).zip(&jobs) {
+        let label = format!("faulted sweep {} under {}", job.profile.name, job.scheme);
+        assert_eq!(x.chip.faults_injected, trace.len() as u64, "{label}: faults land");
+        assert_reports_identical(x, y, &label);
+    }
+    // Healthy runs of the same grid occupy distinct cache slots.
+    let healthy: Vec<SimJob> =
+        jobs.iter().map(|j| j.clone().with_fault(FaultTrace::default())).collect();
+    let h = par.run_batch(healthy);
+    for (x, y) in h.iter().zip(&a) {
+        assert_eq!(x.chip.faults_injected, 0, "healthy run is genuinely healthy");
+        assert_ne!(x.chip.faults_injected, y.chip.faults_injected);
     }
 }
 

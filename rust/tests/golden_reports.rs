@@ -191,7 +191,7 @@ fn golden_single_application_matrix() {
         p.insns_per_thread = 80;
         p.num_kernels = 1;
         for scheme in Scheme::ALL {
-            let r = run_benchmark_seeded(&cfg, &p, scheme, SEED);
+            let r = run_benchmark_seeded(&cfg, &p, scheme, SEED).unwrap();
             assert_eq!(r.chip.kernels_completed, 1, "{name} under {scheme} must complete");
             check_golden(&format!("{}_{}", name.to_lowercase(), scheme), &fingerprint(&r));
         }
@@ -214,7 +214,7 @@ fn golden_stream_runs() {
     let mut streams = traffic_trace(&tenants, 2, 10_000, SEED);
     shrink_streams(&mut streams, 6, 60);
     for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
-        let r = serve_streams(&cfg, &streams, policy);
+        let r = serve_streams(&cfg, &streams, policy).unwrap();
         assert!(
             r.launches.iter().all(|l| l.finish != u64::MAX),
             "{policy}: all launches must be served"
@@ -233,7 +233,7 @@ fn fingerprint_detects_single_counter_perturbations() {
     p.num_ctas = 4;
     p.insns_per_thread = 40;
     p.num_kernels = 1;
-    let r = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, SEED);
+    let r = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, SEED).unwrap();
     let base = fingerprint(&r);
     assert_eq!(base, fingerprint(&r), "fingerprint is a pure function");
 

@@ -33,7 +33,7 @@ fn every_benchmark_completes_under_every_scheme() {
         let p = shrink(p);
         let expect_insns = p.num_ctas as u64 * p.cta_threads as u64 * p.insns_per_thread as u64;
         for scheme in Scheme::ALL {
-            let r = run_benchmark_seeded(&cfg, &p, scheme, 42);
+            let r = run_benchmark_seeded(&cfg, &p, scheme, 42).unwrap();
             assert_eq!(
                 r.chip.kernels_completed, 1,
                 "{} under {scheme} did not finish",
@@ -58,8 +58,8 @@ fn headline_capacity_effect() {
     let mut p = bench("SM").unwrap();
     p.num_ctas = 48;
     p.num_kernels = 1;
-    let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 7);
-    let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, 7);
+    let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 7).unwrap();
+    let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, 7).unwrap();
     assert!(
         fused.ipc() > base.ipc() * 1.5,
         "SM fused speedup too small: {:.2}",
@@ -76,8 +76,8 @@ fn headline_capacity_effect() {
     let mut cp = bench("CP").unwrap();
     cp.num_ctas = 48;
     cp.num_kernels = 1;
-    let cb = run_benchmark_seeded(&cfg, &cp, Scheme::Baseline, 7);
-    let cf = run_benchmark_seeded(&cfg, &cp, Scheme::ScaleUp, 7);
+    let cb = run_benchmark_seeded(&cfg, &cp, Scheme::Baseline, 7).unwrap();
+    let cf = run_benchmark_seeded(&cfg, &cp, Scheme::ScaleUp, 7).unwrap();
     assert!(
         cf.ipc() < cb.ipc() * 1.05,
         "CP should not benefit from fusion: {:.2}",
@@ -92,9 +92,9 @@ fn static_fuse_tracks_oracle() {
     let cfg = small_cfg();
     for name in ["SM", "CP"] {
         let p = shrink(bench(name).unwrap());
-        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 3).ipc();
-        let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, 3).ipc();
-        let amoeba = run_benchmark_seeded(&cfg, &p, Scheme::StaticFuse, 3).ipc();
+        let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 3).unwrap().ipc();
+        let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, 3).unwrap().ipc();
+        let amoeba = run_benchmark_seeded(&cfg, &p, Scheme::StaticFuse, 3).unwrap().ipc();
         let oracle = base.max(fused);
         // On this deliberately tiny kernel (24 CTAs) the profiling probe
         // wave + drain + reconfiguration cost is a large fraction of the
@@ -114,9 +114,9 @@ fn perfect_noc_dominates_mesh() {
     for name in ["MUM", "LPS"] {
         let p = shrink(bench(name).unwrap());
         cfg.noc_mode = NocMode::Mesh;
-        let mesh = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 5);
+        let mesh = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 5).unwrap();
         cfg.noc_mode = NocMode::Perfect;
-        let perfect = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 5);
+        let perfect = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 5).unwrap();
         assert!(
             perfect.ipc() >= mesh.ipc() * 0.98,
             "{name}: perfect {:.1} < mesh {:.1}",
@@ -132,7 +132,7 @@ fn perfect_noc_dominates_mesh() {
 fn dynamic_split_engages_on_divergent_workloads() {
     let cfg = small_cfg();
     let p = shrink(bench("RAY").unwrap());
-    let r = run_benchmark_seeded(&cfg, &p, Scheme::WarpRegroup, 11);
+    let r = run_benchmark_seeded(&cfg, &p, Scheme::WarpRegroup, 11).unwrap();
     if r.decisions.first().map(|d| d.scale_up).unwrap_or(false) {
         assert!(r.sm.split_events > 0, "no splits on RAY despite fusing");
         assert!(r.sm.split_cycles > 0);
@@ -148,7 +148,7 @@ fn hetero_decides_every_cluster_independently() {
     let cfg = small_cfg(); // 8 SMs => 4 clusters
     let n_clusters = cfg.num_sms / 2;
     let p = shrink(bench("SM").unwrap());
-    let r = run_benchmark_seeded(&cfg, &p, Scheme::Hetero, 5);
+    let r = run_benchmark_seeded(&cfg, &p, Scheme::Hetero, 5).unwrap();
     assert_eq!(r.chip.kernels_completed, 1);
     assert_eq!(r.decisions.len(), n_clusters, "one decision per cluster per kernel");
     assert_eq!(r.samples.len(), n_clusters);
@@ -181,7 +181,7 @@ fn hetero_mixes_cluster_modes_on_boundary_workloads() {
             p.num_kernels = 2;
             p.frac_ld = frac_ld;
             p.validate().unwrap();
-            let r = run_benchmark_seeded(&cfg, &p, Scheme::Hetero, seed);
+            let r = run_benchmark_seeded(&cfg, &p, Scheme::Hetero, seed).unwrap();
             tried += 1;
             assert_eq!(r.chip.kernels_completed, 2, "frac_ld={frac_ld} seed={seed}");
             assert_eq!(r.decisions.len(), 2 * 2, "one decision per cluster per kernel");
@@ -207,7 +207,7 @@ fn fully_deterministic() {
     let cfg = small_cfg();
     let p = shrink(bench("BFS").unwrap());
     let reports: Vec<SimReport> = (0..2)
-        .map(|_| run_benchmark_seeded(&cfg, &p, Scheme::WarpRegroup, 99))
+        .map(|_| run_benchmark_seeded(&cfg, &p, Scheme::WarpRegroup, 99).unwrap())
         .collect();
     assert_eq!(reports[0].cycles, reports[1].cycles);
     assert_eq!(reports[0].sm.thread_insns, reports[1].sm.thread_insns);
@@ -222,8 +222,8 @@ fn fully_deterministic() {
 fn icnt_stall_metric_is_live() {
     let cfg = small_cfg();
     let p = shrink(bench("CORR").unwrap());
-    let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 2);
-    let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, 2);
+    let base = run_benchmark_seeded(&cfg, &p, Scheme::Baseline, 2).unwrap();
+    let fused = run_benchmark_seeded(&cfg, &p, Scheme::ScaleUp, 2).unwrap();
     // CORR is reply-heavy: baseline must observe some stall pressure.
     assert!(base.chip.mc_cycles > 0);
     assert!(

@@ -6,7 +6,11 @@
 use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::isa::{AccessPattern, ActiveMask};
 use amoeba_gpu::sim::core::{ClusterMode, SmCluster};
-use amoeba_gpu::sim::gpu::{serve_streams, serve_streams_dense, PartitionPolicy};
+use amoeba_gpu::sim::fault::{FaultEvent, FaultKind, FaultTrace};
+use amoeba_gpu::sim::gpu::{
+    run_benchmark_faulted, run_benchmark_seeded, serve_streams, serve_streams_dense,
+    serve_streams_faulted, PartitionPolicy,
+};
 use amoeba_gpu::sim::mem::{
     coalesce, coalesce_fused, Access, Cache, DramRequest, MemPartition, MemoryController,
 };
@@ -420,7 +424,7 @@ fn prop_stream_tenant_conservation() {
             streams.iter().map(|s| s.name.as_str()).collect::<Vec<_>>()
         );
 
-        let r = serve_streams(&cfg, &streams, PartitionPolicy::Static);
+        let r = serve_streams(&cfg, &streams, PartitionPolicy::Static).unwrap();
         assert!(
             r.launches.iter().all(|l| l.finish != u64::MAX),
             "{label}: every launch served"
@@ -833,14 +837,116 @@ fn active_set_regression_hetero_dynsplit_streams() {
         shrink_streams(&mut streams, 5, 60);
         for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
             let label = format!("seed {seed:#x} under {policy}");
-            let dense = serve_streams_dense(&cfg, &streams, policy, true);
-            let active = serve_streams_dense(&cfg, &streams, policy, false);
+            let dense = serve_streams_dense(&cfg, &streams, policy, true).unwrap();
+            let active = serve_streams_dense(&cfg, &streams, policy, false).unwrap();
             assert!(
                 dense.launches.iter().all(|l| l.finish != u64::MAX),
                 "{label}: all launches served"
             );
             assert_eq!(dense, active, "{label}: active-set diverged from dense");
         }
+    }
+}
+
+/// Randomised fault property: a whole-cluster death at a random cycle on
+/// a chip with spare clusters conserves CTAs exactly — every dispatch is
+/// balanced by a retirement or a requeue, every grid CTA retires exactly
+/// once, and the kernel still completes (gracefully degraded, not lost).
+#[test]
+fn prop_faulted_run_conserves_ctas() {
+    let names = ["CP", "BFS", "RAY", "SM"];
+    let mut rng = Pcg32::new(0xFA17, 21);
+    for case in 0..6 {
+        let mut cfg = SystemConfig::tiny();
+        cfg.num_sms = 8; // 4 clusters: losing one leaves capacity to finish
+        cfg.num_mcs = 4;
+        cfg.max_cycles = 1_500_000;
+        let mut p = bench(names[rng.next_bounded(4) as usize]).unwrap();
+        p.num_ctas = 6;
+        p.insns_per_thread = 40 + rng.next_bounded(40);
+        p.num_kernels = 1;
+        let cluster = rng.next_bounded(4);
+        let cycle = 1 + rng.next_bounded(5_000) as u64;
+        let seed = rng.next_u64();
+        let trace =
+            FaultTrace::new(vec![FaultEvent { cycle, kind: FaultKind::Cluster { cluster } }]);
+        let label = format!("case {case}: {} cluster {cluster} @{cycle} seed {seed:#x}", p.name);
+
+        let r = run_benchmark_faulted(&cfg, &p, Scheme::Baseline, seed, &trace).unwrap();
+        assert_eq!(r.chip.kernels_completed, 1, "{label}: survivors finish the kernel");
+        assert!(!r.deadline_hit, "{label}: no truncation");
+        assert_eq!(
+            r.chip.ctas_dispatched,
+            r.sm.ctas_retired + r.chip.ctas_requeued,
+            "{label}: CTA conservation (dispatched == retired + requeued)"
+        );
+        assert_eq!(r.sm.ctas_retired, p.num_ctas as u64, "{label}: each grid CTA retires once");
+        // The fault either landed (run outlived the injection cycle) and
+        // retired the cluster, or the run finished first and did neither.
+        assert_eq!(r.chip.clusters_retired, r.chip.faults_injected, "{label}");
+        if r.chip.faults_injected == 0 {
+            assert_eq!(r.chip.ctas_requeued, 0, "{label}: no fault, no requeues");
+        }
+    }
+}
+
+/// Randomised fault property: a cluster retired before the first dispatch
+/// cycle never receives a CTA — the placement ledger's column for the
+/// dead cluster stays zero for every tenant.
+#[test]
+fn prop_no_dispatch_to_retired_cluster() {
+    let names = ["CP", "BFS", "RAY"];
+    let mut rng = Pcg32::new(0xDEAD, 22);
+    for case in 0..4 {
+        let mut cfg = SystemConfig::tiny();
+        cfg.num_sms = 8; // 4 clusters for 2 tenants
+        cfg.num_mcs = 4;
+        cfg.max_cycles = 1_500_000;
+        let tenants: Vec<_> = (0..2)
+            .map(|_| {
+                (bench(names[rng.next_bounded(3) as usize]).unwrap(), Scheme::Baseline)
+            })
+            .collect();
+        let mut streams = traffic_trace(&tenants, 1, 2_000, rng.next_u64());
+        shrink_streams(&mut streams, 4, 40);
+        let cluster = rng.next_bounded(4);
+        // Injection at cycle 0 lands at the first loop top, before any
+        // dispatch decision.
+        let trace =
+            FaultTrace::new(vec![FaultEvent { cycle: 0, kind: FaultKind::Cluster { cluster } }]);
+        let label = format!("case {case}: retired cluster {cluster}");
+
+        let r = serve_streams_faulted(&cfg, &streams, PartitionPolicy::Static, &trace).unwrap();
+        assert_eq!(r.chip.faults_injected, 1, "{label}: fault lands");
+        assert_eq!(r.chip.clusters_retired, 1, "{label}");
+        assert_eq!(r.chip.ctas_requeued, 0, "{label}: nothing was in flight to requeue");
+        for (ti, per_cluster) in r.ctas_by_cluster.iter().enumerate() {
+            assert_eq!(
+                per_cluster[cluster as usize], 0,
+                "{label}: tenant {ti} dispatched to the retired cluster"
+            );
+        }
+    }
+}
+
+/// Randomised fault property: attaching an **empty** fault trace is
+/// bit-identical to running with no trace at all, across schemes and
+/// seeds — the fault plumbing costs nothing when unused.
+#[test]
+fn prop_empty_fault_trace_is_bit_identical_to_none() {
+    let names = ["CP", "BFS", "RAY", "MUM"];
+    let mut rng = Pcg32::new(0x0FA1, 23);
+    for case in 0..6 {
+        let cfg = SystemConfig::tiny();
+        let mut p = bench(names[rng.next_bounded(4) as usize]).unwrap();
+        p.num_ctas = 4;
+        p.insns_per_thread = 30 + rng.next_bounded(50);
+        p.num_kernels = 1;
+        let scheme = Scheme::ALL[rng.next_bounded(Scheme::ALL.len() as u32) as usize];
+        let seed = rng.next_u64();
+        let plain = run_benchmark_seeded(&cfg, &p, scheme, seed).unwrap();
+        let empty = run_benchmark_faulted(&cfg, &p, scheme, seed, &FaultTrace::default()).unwrap();
+        assert_eq!(plain, empty, "case {case}: {} under {scheme} seed {seed:#x}", p.name);
     }
 }
 
