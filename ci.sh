@@ -89,8 +89,14 @@ fi
 echo "== figures smoke (quick mode, parallel + memoized, incl. srv) =="
 run_timed "figures --all --quick" ./target/release/figures --all --quick > /dev/null
 
+echo "== qos figure (quick mode: priority mix x load, partition-scoped drain) =="
+run_timed "figures --fig qos --quick" ./target/release/figures --fig qos --quick > /dev/null
+
 echo "== serve-sim smoke =="
 run_timed "amoeba serve-sim --quick" ./target/release/amoeba serve-sim --quick > /dev/null
+run_timed "serve-sim qos smoke" ./target/release/amoeba serve-sim --quick \
+    --policy adaptive --bursty \
+    --tenants SM:hetero:high@400_000,BFS:warp_regrouping,CP:baseline:low > /dev/null
 
 echo "== sweep + cycle-skip + server benchmark (writes BENCH_sweep.json) =="
 run_timed "bench_sweep" cargo bench --bench bench_sweep
@@ -124,6 +130,13 @@ grep -q '"fault_sweep": {' BENCH_sweep.json || {
 }
 grep -q '"identical": true' BENCH_sweep.json || {
     echo "ERROR: fault_sweep record did not confirm empty-trace identity" >&2
+    exit 1
+}
+# The QoS scenario (partition-scoped drain + priority preemption) must be
+# measured with skip==dense identity confirmed on its bursty mixed-
+# priority trace.
+grep -q '"qos_sweep": {' BENCH_sweep.json || {
+    echo "ERROR: BENCH_sweep.json has no measured qos_sweep record" >&2
     exit 1
 }
 # Active-set acceptance: the one-hot-tenant (partial-quiescence) profile

@@ -24,7 +24,8 @@ use amoeba_gpu::sim::gpu::{
     PartitionPolicy,
 };
 use amoeba_gpu::workload::{
-    bench, shrink_streams, traffic_trace, BenchProfile, KernelStream, FIG12_SET,
+    bench, shrink_streams, traffic_trace, traffic_trace_qos, BenchProfile, KernelStream, Priority,
+    TenantQosSpec, TrafficPattern, FIG12_SET,
 };
 
 /// Mirror of the harness quick-mode shrink + base config (kept in sync
@@ -252,8 +253,48 @@ fn main() {
          {fault_overhead:.2}x (reports identical)"
     );
 
+    // -------- QoS sweep: the mixed-priority bursty scenario (the "qos"
+    // figure's workload) under the Adaptive policy — the path that
+    // exercises partition-scoped drain, the quiesce gate, and
+    // CTA-boundary preemption all at once. Skip-vs-dense bit-identity is
+    // asserted (the active-set contract must survive preemption), and
+    // the run's preemption count is recorded.
+    eprintln!("[bench_sweep] qos sweep (mixed-priority bursty streams):");
+    let prios = [Priority::High, Priority::Normal, Priority::Low];
+    let qspecs: Vec<TenantQosSpec> = serve::default_tenants()
+        .into_iter()
+        .zip(prios)
+        .map(|((profile, scheme), priority)| TenantQosSpec {
+            profile,
+            scheme,
+            priority,
+            slo_turnaround: (priority == Priority::High).then_some(400_000),
+        })
+        .collect();
+    let mut qstreams = traffic_trace_qos(
+        &qspecs,
+        2,
+        2_000,
+        SEED,
+        TrafficPattern::Bursty { burst_len: 4, dilation: 8 },
+    );
+    shrink_streams(&mut qstreams, 8, 80);
+    let t_qd = Instant::now();
+    let qdense = serve_streams_dense(&cfg, &qstreams, PartitionPolicy::Adaptive, true).unwrap();
+    let qdense_s = t_qd.elapsed().as_secs_f64();
+    let t_qs = Instant::now();
+    let qskip = serve_streams_dense(&cfg, &qstreams, PartitionPolicy::Adaptive, false).unwrap();
+    let qskip_s = t_qs.elapsed().as_secs_f64();
+    assert_eq!(qdense, qskip, "qos run: skip must be bit-identical to dense under preemption");
+    let qos_skip_ratio = qdense_s / qskip_s.max(1e-9);
+    eprintln!(
+        "[bench_sweep]   dense {qdense_s:.3} s, skip {qskip_s:.3} s -> {qos_skip_ratio:.2}x; \
+         {} preemptions, {} CTAs preempted (reports identical)",
+        qdense.chip.preemptions, qdense.chip.ctas_preempted
+    );
+
     let json = format!(
-        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }},\n  \"fault_sweep\": {{ \"no_trace_s\": {:.3}, \"empty_trace_s\": {:.3}, \"overhead\": {:.3}, \"identical\": true }}\n}}\n",
+        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }},\n  \"fault_sweep\": {{ \"no_trace_s\": {:.3}, \"empty_trace_s\": {:.3}, \"overhead\": {:.3}, \"identical\": true }},\n  \"qos_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"preemptions\": {}, \"ctas_preempted\": {}, \"identical\": true }}\n}}\n",
         jobs.len(),
         misses,
         threads,
@@ -280,6 +321,12 @@ fn main() {
         no_trace_s,
         empty_trace_s,
         fault_overhead,
+        qstreams.len(),
+        qdense_s,
+        qskip_s,
+        qos_skip_ratio,
+        qdense.chip.preemptions,
+        qdense.chip.ctas_preempted,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => eprintln!("[bench_sweep] wrote BENCH_sweep.json"),

@@ -109,6 +109,10 @@ pub struct SystemConfig {
     /// cooldown, the historical behaviour). Fault-forced splits bypass
     /// the cooldown — routing around a dead half-SM cannot wait.
     pub reconfig_cooldown: u64,
+    /// Cycles a cluster stolen by CTA-boundary preemption stays frozen
+    /// before the claimant may dispatch onto it (checkpoint/requeue of
+    /// the victim's CTA occupancy — no mid-warp state is saved).
+    pub preempt_cost: u64,
 
     // ---- Simulation -------------------------------------------------------
     /// Hard cycle limit per kernel (safety net; 0 = unlimited).
@@ -166,6 +170,7 @@ impl SystemConfig {
             regroup_granularity: 4,
             rebalance_period: 2_048,
             reconfig_cooldown: 0,
+            preempt_cost: 200,
 
             max_cycles: 3_000_000,
         }

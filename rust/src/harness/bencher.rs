@@ -113,6 +113,20 @@ impl std::fmt::Display for BenchResult {
     }
 }
 
+/// Nearest-rank 95th percentile of integer samples (same rank rule as
+/// [`BenchResult`]'s wall-clock p95: ceil(0.95 * n) in 1-based terms).
+/// Returns 0 for an empty slice — the natural "no samples" reading for
+/// the cycle-count metrics this serves (queueing delays, turnarounds).
+pub fn p95_u64(samples: &[u64]) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    let n = sorted.len();
+    sorted[((n * 95).div_ceil(100)).saturating_sub(1).min(n - 1)]
+}
+
 /// Human-friendly duration formatting (ns/us/ms/s).
 pub fn fmt_duration(d: Duration) -> String {
     let ns = d.as_nanos();
@@ -179,6 +193,19 @@ mod tests {
         );
         // Setup sleeps 2ms but timed body is ~instant.
         assert!(r.median < Duration::from_millis(1), "median={:?}", r.median);
+    }
+
+    #[test]
+    fn p95_u64_nearest_rank() {
+        assert_eq!(p95_u64(&[]), 0);
+        assert_eq!(p95_u64(&[7]), 7);
+        assert_eq!(p95_u64(&[3, 1, 2]), 3, "p95 of 3 samples is the max");
+        // 20 samples: rank ceil(0.95*20) = 19 (1-based) => value 19.
+        let v: Vec<u64> = (1..=20).rev().collect();
+        assert_eq!(p95_u64(&v), 19);
+        // 100 samples: rank 95.
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(p95_u64(&v), 95);
     }
 
     #[test]

@@ -15,13 +15,14 @@ use std::sync::Arc;
 
 use crate::amoeba::{MetricsSample, NativePredictor, FEATURES, NUM_FEATURES, PAPER_COEFFS};
 use crate::config::{Scheme, SystemConfig};
-use crate::harness::{SimJob, SweepExec};
+use crate::harness::{p95_u64, SimJob, StreamJob, SweepExec};
 use crate::runtime::serve;
 use crate::sim::core::ClusterMode;
 use crate::sim::gpu::{PartitionPolicy, SimReport};
 use crate::stats::Table;
 use crate::workload::{
-    bench, shrink_streams, traffic_trace, BenchProfile, FIG12_SET, FIG20_SET, FIG3_SET, FIG5_SET,
+    bench, shrink_streams, traffic_trace, traffic_trace_qos, BenchProfile, Priority, TenantQosSpec,
+    TrafficPattern, FIG12_SET, FIG20_SET, FIG3_SET, FIG5_SET,
 };
 
 /// Seed used by all harness runs (determinism across invocations).
@@ -515,10 +516,31 @@ pub fn server_sweep(exec: &SweepExec, quick: bool) -> Table {
 
     let mut t = Table::new(
         "Server sweep — per-tenant service metrics (concurrent streams)",
-        &["tenant", "finish_kcyc", "tput_ipc", "antt_static", "antt_adaptive", "slowdown"],
+        &[
+            "tenant",
+            "finish_kcyc",
+            "tput_ipc",
+            "antt_static",
+            "antt_adaptive",
+            "slowdown",
+            "p95_qdel_st_kcyc",
+            "p95_qdel_ad_kcyc",
+        ],
     );
     for ti in 0..streams.len() {
         let alone = &out[shared.len() + ti];
+        // p95 queueing delay (launch start minus arrival) per tenant,
+        // under each shared policy — the tail-latency view ANTT's mean
+        // hides.
+        let p95_qdel = |rep: &crate::sim::gpu::StreamReport| {
+            let delays: Vec<u64> = rep
+                .launches
+                .iter()
+                .filter(|l| l.tenant == ti as u32 && l.finish != u64::MAX)
+                .map(|l| l.queue_delay)
+                .collect();
+            p95_u64(&delays) as f64 / 1000.0
+        };
         t.row(
             streams[ti].name.as_str(),
             vec![
@@ -527,6 +549,8 @@ pub fn server_sweep(exec: &SweepExec, quick: bool) -> Table {
                 serve::antt_slowdown(shared_static, alone, ti),
                 serve::antt_slowdown(shared_adaptive, alone, ti),
                 serve::stream_slowdown(shared_static, alone, ti),
+                p95_qdel(shared_static),
+                p95_qdel(shared_adaptive),
             ],
         );
     }
@@ -582,6 +606,78 @@ pub fn fault_sweep(exec: &SweepExec, quick: bool) -> Table {
         let row: Vec<f64> =
             (0..points).map(|k| reports[si * points + k].ipc() / healthy).collect();
         t.row(s.to_string(), row);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// QoS sweep: priority mix x load under partition-scoped drain
+// ---------------------------------------------------------------------
+
+/// The QoS sweep ("qos"): the [`serve::default_tenants`] mix annotated
+/// with a priority ladder (High with a turnaround SLO, Normal, Low) and
+/// replayed under the Adaptive policy across a load (mean arrival gap)
+/// x arrival-pattern grid, where `bursty` clumps each tenant's launches
+/// into noisy-neighbour bursts. Rows are one (scenario, tenant) pair and
+/// report SLO attainment, launches served, p95 queueing delay, mean
+/// per-launch slowdown (1000 = unqueued), and the scenario's total
+/// CTA-boundary preemptions — the service-quality picture that
+/// partition-scoped draining and priority scheduling exist to improve.
+pub fn qos_sweep(exec: &SweepExec, quick: bool) -> Table {
+    let cfg = base_cfg(quick);
+    let prios = [Priority::High, Priority::Normal, Priority::Low];
+    // SLO sized so the High tenant comfortably meets it when served
+    // promptly and misses it when parked behind a saturated machine.
+    let slo = if quick { 400_000 } else { 4_000_000 };
+    let specs: Vec<TenantQosSpec> = serve::default_tenants()
+        .into_iter()
+        .zip(prios)
+        .map(|((profile, scheme), priority)| TenantQosSpec {
+            profile,
+            scheme,
+            priority,
+            slo_turnaround: (priority == Priority::High).then_some(slo),
+        })
+        .collect();
+    let kernels_each = if quick { 2 } else { 4 };
+    let gaps: &[(&str, u64)] =
+        if quick { &[("hi_load", 2_000), ("lo_load", 20_000)] } else { &[("hi_load", 20_000), ("lo_load", 100_000)] };
+    let patterns = [
+        ("uniform", TrafficPattern::Uniform),
+        ("bursty", TrafficPattern::Bursty { burst_len: 4, dilation: 8 }),
+    ];
+
+    let mut scenarios = Vec::new();
+    let mut jobs = Vec::new();
+    for &(gname, gap) in gaps {
+        for (pname, pattern) in patterns {
+            let mut streams = traffic_trace_qos(&specs, kernels_each, gap, SEED, pattern);
+            if quick {
+                shrink_streams(&mut streams, 8, 80);
+            }
+            jobs.push(StreamJob::new(cfg.clone(), streams.clone(), PartitionPolicy::Adaptive));
+            scenarios.push((format!("{gname}/{pname}"), streams));
+        }
+    }
+    let out = exec.run_stream_batch(jobs);
+
+    let mut t = Table::new(
+        "QoS sweep — SLO attainment and queueing by priority class (Adaptive)",
+        &["scenario/tenant", "slo_attain", "served", "p95_qdel_kcyc", "slowdown_milli", "preempt"],
+    );
+    for ((label, streams), rep) in scenarios.iter().zip(&out) {
+        for q in serve::qos_summary(rep, streams) {
+            t.row(
+                format!("{label}/{}:{}", streams[q.tenant].name, q.priority),
+                vec![
+                    q.slo_attainment(),
+                    q.served as f64,
+                    q.p95_queue_delay as f64 / 1000.0,
+                    q.mean_slowdown_milli as f64,
+                    rep.chip.preemptions as f64,
+                ],
+            );
+        }
     }
     t
 }
@@ -688,6 +784,31 @@ mod tests {
             hetero[points - 1] > scale_up[points - 1],
             "heaviest fault load must separate the schemes"
         );
+    }
+
+    #[test]
+    fn qos_sweep_reports_every_scenario_tenant_pair() {
+        let exec = SweepExec::new(2);
+        let t = qos_sweep(&exec, true);
+        // 2 loads x 2 patterns x 3 tenants.
+        assert_eq!(t.rows.len(), 12, "one row per (scenario, tenant)");
+        for (name, vals) in &t.rows {
+            assert_eq!(vals.len(), 5, "{name}: five metric columns");
+            assert!(vals.iter().all(|v| v.is_finite() && *v >= 0.0), "{name}: {vals:?}");
+            let (attain, served) = (vals[0], vals[1]);
+            assert!((0.0..=1.0).contains(&attain), "{name}: attainment {attain}");
+            assert!(served >= 1.0, "{name}: every tenant must serve at least one launch");
+            assert!(vals[3] >= 1000.0, "{name}: slowdown_milli is >= 1000 by construction");
+        }
+        // The preemption column is a per-scenario chip total: constant
+        // across the scenario's three tenant rows.
+        for scenario in t.rows.chunks(3) {
+            let p = scenario[0].1[4];
+            assert!(scenario.iter().all(|(_, v)| v[4] == p), "preempt differs within scenario");
+        }
+        // Priority ladder shows in the row labels.
+        assert!(t.rows.iter().any(|(n, _)| n.ends_with(":high")));
+        assert!(t.rows.iter().any(|(n, _)| n.ends_with(":low")));
     }
 
     #[test]

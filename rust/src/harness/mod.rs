@@ -13,7 +13,7 @@ pub mod exec;
 mod figdata;
 mod figures;
 
-pub use bencher::{BenchResult, Bencher};
+pub use bencher::{p95_u64, BenchResult, Bencher};
 pub use exec::{
     cfg_fingerprint, fault_fingerprint, profile_fingerprint, JobKey, SimJob, StreamJob, StreamKey,
     SweepExec,
@@ -26,12 +26,14 @@ use std::sync::OnceLock;
 use crate::stats::Table;
 
 /// All figure ids the harness can regenerate ("srv" is the server-mode
-/// concurrent-stream sweep and "fault" the graceful-degradation sweep —
-/// not paper figures, but the scenario classes the ROADMAP's serving and
-/// robustness north stars ask for).
-pub const ALL_FIGURES: [&str; 22] = [
+/// concurrent-stream sweep, "fault" the graceful-degradation sweep, and
+/// "qos" the priority-mix/load sweep of SLO attainment under
+/// partition-scoped drain + preemption — not paper figures, but the
+/// scenario classes the ROADMAP's serving and robustness north stars ask
+/// for).
+pub const ALL_FIGURES: [&str; 23] = [
     "2", "3a", "3b", "4", "5", "6", "8", "12", "13", "14", "15", "16", "17", "18", "19", "19h",
-    "20", "21", "srv", "fault", "t1", "t2",
+    "20", "21", "srv", "fault", "qos", "t1", "t2",
 ];
 
 /// The process-wide executor used by the [`figure`] convenience wrapper:
@@ -66,6 +68,7 @@ pub fn figure_with(exec: &SweepExec, id: &str, quick: bool) -> Option<Table> {
         "21" => Some(fig21_vs_dws(exec, quick)),
         "srv" => Some(server_sweep(exec, quick)),
         "fault" => Some(fault_sweep(exec, quick)),
+        "qos" => Some(qos_sweep(exec, quick)),
         "t1" => Some(table1_config()),
         "t2" => Some(table2_coefficients()),
         _ => None,

@@ -15,7 +15,9 @@ use amoeba_gpu::harness::{SimJob, SweepExec};
 use amoeba_gpu::runtime::serve;
 use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_with_controller, PartitionPolicy};
 use amoeba_gpu::stats::Table;
-use amoeba_gpu::workload::{all_benchmarks, bench, shrink_streams, traffic_trace};
+use amoeba_gpu::workload::{
+    all_benchmarks, bench, shrink_streams, traffic_trace_qos, TenantQosSpec, TrafficPattern,
+};
 
 fn usage() -> &'static str {
     "amoeba — AMOEBA reconfigurable-GPU simulator (paper reproduction)
@@ -26,7 +28,7 @@ USAGE:
   amoeba sweep [--quick] [--jobs N]
   amoeba serve-sim [--tenants SPEC] [--policy static|adaptive]
                    [--kernels N] [--gap CYCLES] [--seed N] [--sms N]
-                   [--quick] [--jobs N]
+                   [--bursty] [--quick] [--jobs N]
   amoeba list
   amoeba config
 
@@ -35,10 +37,16 @@ SCHEMES: baseline | scale_up | static_fuse | direct_split |
 
 serve-sim replays a seeded traffic trace of interleaved tenant kernel
 launches on ONE chip (spatially partitioned clusters, shared NoC and
-memory) and reports per-tenant throughput and ANTT-style slowdown
-against each tenant running alone. SPEC is comma-separated
-BENCH[:SCHEME] entries, e.g. 'SM:hetero,BFS:warp_regrouping,CP:baseline'
-(scheme defaults to hetero).
+memory) and reports per-tenant throughput, ANTT-style slowdown against
+each tenant running alone, and QoS service quality (SLO attainment,
+p95 queueing delay). SPEC is comma-separated
+BENCH[:SCHEME[:PRIORITY[@SLO]]] entries, e.g.
+'SM:hetero:high@400_000,BFS:warp_regrouping:low,CP' — scheme defaults
+to hetero, priority (low|normal|high) to normal, and the SLO (a
+per-launch turnaround target in cycles, underscores ignored) to none.
+High-priority tenants below their fair cluster share preempt
+lower-priority tenants at CTA boundaries. --bursty clumps each
+tenant's arrivals into noisy-neighbour bursts.
 
 Sweeps run in parallel; --jobs (or the AMOEBA_JOBS env var) sets the
 worker count, defaulting to the machine's available parallelism."
@@ -243,9 +251,17 @@ fn cmd_serve_sim(args: &[String]) -> Result<()> {
             }
         }
     };
-    let tenants = match opt_value(args, "--tenants")? {
-        Some(spec) => serve::parse_tenant_spec(spec).map_err(err)?,
-        None => serve::default_tenants(),
+    let tenants: Vec<TenantQosSpec> = match opt_value(args, "--tenants")? {
+        Some(spec) => serve::parse_tenant_spec_qos(spec).map_err(err)?,
+        None => serve::default_tenants()
+            .into_iter()
+            .map(|(p, s)| TenantQosSpec::best_effort(p, s))
+            .collect(),
+    };
+    let pattern = if has_flag(args, "--bursty") {
+        TrafficPattern::Bursty { burst_len: 4, dilation: 8 }
+    } else {
+        TrafficPattern::Uniform
     };
     let exec = match opt_value(args, "--jobs")? {
         Some(n) => SweepExec::new(n.parse()?),
@@ -271,7 +287,7 @@ fn cmd_serve_sim(args: &[String]) -> Result<()> {
         )));
     }
 
-    let mut streams = traffic_trace(&tenants, kernels_each, mean_gap, seed);
+    let mut streams = traffic_trace_qos(&tenants, kernels_each, mean_gap, seed, pattern);
     if quick {
         shrink_streams(&mut streams, 8, 80);
     }
@@ -306,12 +322,35 @@ fn cmd_serve_sim(args: &[String]) -> Result<()> {
     }
     println!("{}", t.render());
     println!(
-        "chip: {} cycles, {} kernels, {} reconfigurations, L2 miss {:.4}",
+        "chip: {} cycles, {} kernels, {} reconfigurations, {} preemptions \
+         ({} CTAs requeued), L2 miss {:.4}",
         shared.cycles,
         shared.chip.kernels_completed,
         shared.chip.reconfig_events,
+        shared.chip.preemptions,
+        shared.chip.ctas_preempted,
         shared.chip.l2_miss_rate()
     );
+    for q in serve::qos_summary(shared, &streams) {
+        let slo = match q.slo_turnaround {
+            Some(c) => format!("{c} cyc"),
+            None => "best-effort".to_string(),
+        };
+        println!(
+            "qos tenant {} ({}, {}): SLO {} -> attainment {:.2} ({}/{} served), \
+             queue delay mean {:.0} / p95 {} cyc, slowdown {:.2}x",
+            q.tenant,
+            streams[q.tenant].name,
+            q.priority,
+            slo,
+            q.slo_attainment(),
+            q.slo_met,
+            q.served,
+            q.mean_queue_delay,
+            q.p95_queue_delay,
+            q.mean_slowdown_milli as f64 / 1000.0
+        );
+    }
     for (ti, rep) in shared.tenants.iter().enumerate() {
         let scale_ups = rep.decisions.iter().filter(|d| d.scale_up).count();
         println!(

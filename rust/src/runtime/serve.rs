@@ -18,10 +18,12 @@
 //! reproducible as the healthy path.
 
 use crate::config::{Scheme, SystemConfig};
-use crate::harness::StreamJob;
+use crate::harness::{p95_u64, StreamJob};
 use crate::sim::fault::FaultTrace;
 use crate::sim::gpu::{serve_streams, serve_streams_faulted, PartitionPolicy, StreamReport};
-use crate::workload::{bench, hash_combine, BenchProfile, KernelStream, StreamLaunch};
+use crate::workload::{
+    bench, hash_combine, BenchProfile, KernelStream, Priority, StreamLaunch, TenantQosSpec,
+};
 
 /// Parse a tenant spec: comma-separated `BENCH[:SCHEME]` entries, e.g.
 /// `"SM:hetero,BFS:warp_regrouping,CP"`. A missing scheme defaults to
@@ -36,6 +38,45 @@ pub fn parse_tenant_spec(spec: &str) -> Result<Vec<(BenchProfile, Scheme)>, Stri
         let profile =
             bench(name).ok_or_else(|| format!("unknown benchmark '{name}' in tenant spec"))?;
         out.push((profile, scheme));
+    }
+    if out.is_empty() {
+        return Err("tenant spec names no tenants".into());
+    }
+    Ok(out)
+}
+
+/// Parse a QoS tenant spec: comma-separated
+/// `BENCH[:SCHEME[:PRIORITY[@SLO]]]` entries, e.g.
+/// `"SM:hetero:high@400000,BFS:warp_regrouping:low,CP"`. Scheme defaults
+/// to `hetero`, priority to `normal`, and the SLO — a per-launch
+/// turnaround target in cycles — to none (best effort). Underscores in
+/// the SLO are ignored (`400_000` reads naturally).
+pub fn parse_tenant_spec_qos(spec: &str) -> Result<Vec<TenantQosSpec>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let mut parts = entry.splitn(3, ':');
+        let name = parts.next().expect("splitn yields at least one part").trim();
+        let profile =
+            bench(name).ok_or_else(|| format!("unknown benchmark '{name}' in tenant spec"))?;
+        let scheme = match parts.next() {
+            Some(s) => s.trim().parse::<Scheme>()?,
+            None => Scheme::Hetero,
+        };
+        let (priority, slo_turnaround) = match parts.next() {
+            Some(p) => match p.trim().split_once('@') {
+                Some((pr, slo)) => {
+                    let cycles = slo
+                        .trim()
+                        .replace('_', "")
+                        .parse::<u64>()
+                        .map_err(|e| format!("bad SLO '{slo}' (cycles): {e}"))?;
+                    (pr.trim().parse::<Priority>()?, Some(cycles))
+                }
+                None => (p.trim().parse::<Priority>()?, None),
+            },
+            None => (Priority::Normal, None),
+        };
+        out.push(TenantQosSpec { profile, scheme, priority, slo_turnaround });
     }
     if out.is_empty() {
         return Err("tenant spec names no tenants".into());
@@ -89,6 +130,145 @@ pub fn stream_slowdown(shared: &StreamReport, alone: &StreamReport, ti: usize) -
     } else {
         shared.tenants[ti].cycles as f64 / a as f64
     }
+}
+
+/// Per-tenant service-quality summary of one shared run, derived from
+/// its [`LaunchStat`](crate::sim::gpu::LaunchStat) records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantQos {
+    /// Tenant (stream) index.
+    pub tenant: usize,
+    /// Priority class the stream was served under.
+    pub priority: Priority,
+    /// Per-launch turnaround SLO in cycles, if any.
+    pub slo_turnaround: Option<u64>,
+    /// Launches that completed before any deadline truncation.
+    pub served: u32,
+    /// Served launches whose turnaround met the SLO. With no SLO set,
+    /// every served launch counts as attained (best effort always meets
+    /// its — vacuous — target).
+    pub slo_met: u32,
+    /// Mean queueing delay (launch start minus arrival) over served
+    /// launches, in cycles.
+    pub mean_queue_delay: f64,
+    /// 95th-percentile queueing delay over served launches (nearest
+    /// rank), in cycles.
+    pub p95_queue_delay: u64,
+    /// Mean per-launch slowdown (turnaround over service) in milli-units;
+    /// 1000 = every launch ran unqueued.
+    pub mean_slowdown_milli: u64,
+}
+
+impl TenantQos {
+    /// Fraction of served launches that met the SLO (0.0 when nothing
+    /// was served — an unserved tenant attains nothing).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.slo_met as f64 / self.served as f64
+        }
+    }
+}
+
+/// Summarise a shared run's per-launch service records into one
+/// [`TenantQos`] per tenant. `streams` must be the same streams the
+/// report was produced from (it carries the priority / SLO specs).
+pub fn qos_summary(report: &StreamReport, streams: &[KernelStream]) -> Vec<TenantQos> {
+    (0..streams.len())
+        .map(|ti| {
+            let served: Vec<_> = report
+                .launches
+                .iter()
+                .filter(|l| l.tenant == ti as u32 && l.finish != u64::MAX)
+                .collect();
+            let slo = streams[ti].slo_turnaround;
+            let slo_met = served
+                .iter()
+                .filter(|l| slo.map_or(true, |target| l.turnaround() <= target))
+                .count() as u32;
+            let delays: Vec<u64> = served.iter().map(|l| l.queue_delay).collect();
+            let mean_queue_delay = if delays.is_empty() {
+                0.0
+            } else {
+                delays.iter().sum::<u64>() as f64 / delays.len() as f64
+            };
+            let mean_slowdown_milli = if served.is_empty() {
+                0
+            } else {
+                served.iter().map(|l| l.slowdown_milli).sum::<u64>() / served.len() as u64
+            };
+            TenantQos {
+                tenant: ti,
+                priority: streams[ti].priority,
+                slo_turnaround: slo,
+                served: served.len() as u32,
+                slo_met,
+                mean_queue_delay,
+                p95_queue_delay: p95_u64(&delays),
+                mean_slowdown_milli,
+            }
+        })
+        .collect()
+}
+
+/// Objective weight of a priority class: High tenants' service quality
+/// counts four times a Low tenant's, Normal twice.
+pub fn priority_weight(p: Priority) -> f64 {
+    match p {
+        Priority::Low => 1.0,
+        Priority::Normal => 2.0,
+        Priority::High => 4.0,
+    }
+}
+
+/// SLO-aware controller objective over one shared run: the
+/// priority-weighted mean of each tenant's service score, where the
+/// score trades a latency term (SLO attainment) against a throughput
+/// term (inverse mean slowdown, 1.0 when every launch ran unqueued) by
+/// `latency_weight` in `[0, 1]`. Higher is better; both terms live in
+/// `[0, 1]`, so so does the objective. An unserved tenant scores zero.
+pub fn qos_objective(tenants: &[TenantQos], latency_weight: f64) -> f64 {
+    let lw = latency_weight.clamp(0.0, 1.0);
+    let mut acc = 0.0;
+    let mut wsum = 0.0;
+    for t in tenants {
+        let w = priority_weight(t.priority);
+        let latency = t.slo_attainment();
+        let throughput =
+            if t.served == 0 { 0.0 } else { 1000.0 / t.mean_slowdown_milli.max(1000) as f64 };
+        acc += w * (lw * latency + (1.0 - lw) * throughput);
+        wsum += w;
+    }
+    if wsum == 0.0 {
+        0.0
+    } else {
+        acc / wsum
+    }
+}
+
+/// Serve `streams` under each candidate partition policy and pick the
+/// argmax of [`qos_objective`]. Returns the winner plus every
+/// candidate's score in evaluation order; ties keep the earlier
+/// candidate (Static), so the choice is deterministic.
+pub fn choose_policy(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    latency_weight: f64,
+) -> crate::errors::Result<(PartitionPolicy, Vec<(PartitionPolicy, f64)>)> {
+    let mut scored: Vec<(PartitionPolicy, f64)> = Vec::new();
+    for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
+        let rep = serve_streams(cfg, streams, policy)?;
+        let score = qos_objective(&qos_summary(&rep, streams), latency_weight);
+        scored.push((policy, score));
+    }
+    let mut best = scored[0];
+    for &c in &scored[1..] {
+        if c.1 > best.1 {
+            best = c;
+        }
+    }
+    Ok((best.0, scored))
 }
 
 /// The isolated-reference job for tenant `ti` of `streams`: the same
@@ -233,6 +413,8 @@ pub fn serve_with_failover(
                 name: stream.name.clone(),
                 profile: stream.profile.clone(),
                 scheme: stream.scheme,
+                priority: stream.priority,
+                slo_turnaround: stream.slo_turnaround,
                 launches: pending
                     .iter()
                     .map(|l| StreamLaunch { arrival: delay, kernel: l.kernel.clone() })
@@ -282,6 +464,113 @@ mod tests {
         assert!(parse_tenant_spec("SM:bogus").is_err());
         assert!(parse_tenant_spec("  ,").is_err());
         assert_eq!(default_tenants().len(), 3);
+    }
+
+    #[test]
+    fn qos_tenant_spec_parses_priority_and_slo() {
+        let t = parse_tenant_spec_qos("SM:hetero:high@400_000, BFS:warp_regrouping:low ,CP").unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].priority, Priority::High);
+        assert_eq!(t[0].slo_turnaround, Some(400_000));
+        assert_eq!(t[1].priority, Priority::Low);
+        assert_eq!(t[1].slo_turnaround, None);
+        assert_eq!(t[2].scheme, Scheme::Hetero, "missing scheme defaults to hetero");
+        assert_eq!(t[2].priority, Priority::Normal, "missing priority defaults to normal");
+        assert_eq!(t[2].slo_turnaround, None);
+        assert!(parse_tenant_spec_qos("SM:hetero:urgent").is_err());
+        assert!(parse_tenant_spec_qos("SM:hetero:high@soon").is_err());
+        assert!(parse_tenant_spec_qos("NOPE:hetero:high").is_err());
+        assert!(parse_tenant_spec_qos("").is_err());
+    }
+
+    #[test]
+    fn qos_summary_on_a_real_run() {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let tenants =
+            vec![(bench("CP").unwrap(), Scheme::Baseline), (bench("BFS").unwrap(), Scheme::Baseline)];
+        let mut streams = traffic_trace(&tenants, 2, 0, 11);
+        shrink_streams(&mut streams, 4, 40);
+        // Tenant 0: a generous SLO it must meet. Tenant 1: an impossible
+        // one-cycle SLO it must miss on every launch.
+        streams[0].priority = Priority::High;
+        streams[0].slo_turnaround = Some(u64::MAX);
+        streams[1].slo_turnaround = Some(1);
+        let rep = serve_streams(&cfg, &streams, PartitionPolicy::Static).unwrap();
+        let qos = qos_summary(&rep, &streams);
+        assert_eq!(qos.len(), 2);
+        assert_eq!(qos[0].served, 2);
+        assert_eq!(qos[0].slo_met, 2);
+        assert!((qos[0].slo_attainment() - 1.0).abs() < 1e-12);
+        assert_eq!(qos[1].slo_met, 0, "a one-cycle SLO is unmeetable");
+        assert_eq!(qos[1].slo_attainment(), 0.0);
+        for q in &qos {
+            assert!(q.mean_slowdown_milli >= 1000, "turnaround >= service");
+            assert!(q.mean_queue_delay >= 0.0);
+            assert!(q.p95_queue_delay as f64 >= q.mean_queue_delay.floor() - f64::EPSILON || q.served <= 1);
+        }
+    }
+
+    #[test]
+    fn qos_objective_weights_priority_and_latency() {
+        let hi_good = TenantQos {
+            tenant: 0,
+            priority: Priority::High,
+            slo_turnaround: Some(1000),
+            served: 4,
+            slo_met: 4,
+            mean_queue_delay: 0.0,
+            p95_queue_delay: 0,
+            mean_slowdown_milli: 1000,
+        };
+        let lo_bad = TenantQos {
+            tenant: 1,
+            priority: Priority::Low,
+            slo_turnaround: Some(1000),
+            served: 4,
+            slo_met: 0,
+            mean_queue_delay: 500.0,
+            p95_queue_delay: 900,
+            mean_slowdown_milli: 4000,
+        };
+        // Perfect service scores 1.0 at any weighting.
+        assert!((qos_objective(&[hi_good.clone()], 0.5) - 1.0).abs() < 1e-12);
+        // Pure latency weighting sees only the missed SLOs.
+        assert_eq!(qos_objective(&[lo_bad.clone()], 1.0), 0.0);
+        // Pure throughput weighting sees the 4x slowdown instead.
+        assert!((qos_objective(&[lo_bad.clone()], 0.0) - 0.25).abs() < 1e-12);
+        // The High tenant dominates the mix 4:1.
+        let mixed = qos_objective(&[hi_good, lo_bad], 1.0);
+        assert!((mixed - 0.8).abs() < 1e-12, "got {mixed}");
+        // An unserved tenant scores zero no matter the weighting.
+        let starved = TenantQos {
+            tenant: 2,
+            priority: Priority::Normal,
+            slo_turnaround: None,
+            served: 0,
+            slo_met: 0,
+            mean_queue_delay: 0.0,
+            p95_queue_delay: 0,
+            mean_slowdown_milli: 0,
+        };
+        assert_eq!(qos_objective(&[starved], 0.5), 0.0);
+    }
+
+    #[test]
+    fn choose_policy_is_deterministic() {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let tenants =
+            vec![(bench("CP").unwrap(), Scheme::Baseline), (bench("BFS").unwrap(), Scheme::Baseline)];
+        let mut streams = traffic_trace(&tenants, 2, 0, 13);
+        shrink_streams(&mut streams, 4, 40);
+        let (best, scored) = choose_policy(&cfg, &streams, 0.5).unwrap();
+        assert_eq!(scored.len(), 2);
+        assert!(scored.iter().any(|&(p, _)| p == best));
+        assert!(scored.iter().all(|&(_, s)| (0.0..=1.0).contains(&s)));
+        let (best2, scored2) = choose_policy(&cfg, &streams, 0.5).unwrap();
+        assert_eq!(best, best2);
+        assert_eq!(scored, scored2);
     }
 
     #[test]

@@ -56,10 +56,20 @@
 //! the same [`Gpu::reconfigure`] / `Controller::decide_cluster` path the
 //! single-application loop uses. The NoC and the memory system stay
 //! shared, so tenants contend for them like co-resident kernels on a real
-//! chip. Reconfiguration still requires a quiet fabric (the NoC is
-//! rebuilt), so a tenant's reconfigure drains the whole chip first — the
-//! cross-tenant cost of reshaping shared hardware is modelled, not
-//! hidden. The event-horizon engine spans tenants: the chip skips only
+//! chip. Reconfiguration is **partition-scoped**: a reconfiguring tenant
+//! first drains only its *own* clusters ([`TPhase::Drain`]) while every
+//! other tenant keeps dispatching and executing, then briefly gates new
+//! Request-subnet injections chip-wide ([`TPhase::Quiesce`]) so in-flight
+//! packets finish before the NoC is rebuilt — packets already in flight
+//! and the Reply subnet keep moving throughout. Only the short quiesce
+//! window is a shared cost; the long pipeline drain is private to the
+//! tenant that reshapes. Tenants carry a priority class and optional SLO
+//! target, and a high-priority tenant below its fair cluster share may
+//! preempt a lower-priority tenant at a **CTA boundary**: the victim's
+//! resident CTAs on the stolen cluster are checkpointed (requeued through
+//! the fault-requeue machinery, no mid-warp state) and the cluster is
+//! frozen for `preempt_cost` cycles before the claimant may use it.
+//! The event-horizon engine spans tenants: the chip skips only
 //! when **every** stream is quiescent, and the horizon is the min over
 //! tenants' components and triggers (arrivals, profiling windows, split
 //! checks). Dense and skip stream runs are bit-identical, enforced by
@@ -77,7 +87,7 @@ use crate::sim::mem::{MemPartition, PartitionReply};
 use crate::sim::noc::{ChipLayout, Noc, Packet, Payload, Subnet};
 use crate::sim::sched::ActiveSet;
 use crate::stats::{ChipStats, SmStats};
-use crate::workload::{kernel_launches, BenchProfile, KernelStream, TraceGen};
+use crate::workload::{kernel_launches, BenchProfile, KernelStream, Priority, TraceGen};
 
 /// Cached `AMOEBA_DENSE` escape hatch: any non-empty value other than
 /// `0` forces the dense cycle loop (read once per process).
@@ -185,11 +195,19 @@ pub struct LaunchStat {
     pub kernel: u32,
     /// Arrival cycle from the traffic trace.
     pub arrival: u64,
-    /// Cycle the launch actually started (>= arrival; queueing + drain
-    /// holds push it later). `u64::MAX` if the run's deadline hit first.
+    /// Cycle the launch actually started (>= arrival; queueing + the
+    /// tenant's own partition drain push it later). `u64::MAX` if the
+    /// run's deadline hit first.
     pub start: u64,
     /// Cycle the launch completed. `u64::MAX` if never.
     pub finish: u64,
+    /// Queueing delay: `start - arrival` (0 if the run's deadline hit
+    /// before the launch started).
+    pub queue_delay: u64,
+    /// Per-launch slowdown in milli-units: `turnaround * 1000 /
+    /// max(service, 1)` where `service = finish - start`. 1000 means the
+    /// launch ran unqueued; 0 if it never finished.
+    pub slowdown_milli: u64,
 }
 
 impl LaunchStat {
@@ -540,6 +558,11 @@ impl Gpu {
     /// half keeps serving. Shared aftermath of a forced-split fault on
     /// both main loops.
     fn force_split_after_fault(&mut self, gm: &GenMap, deadline: u64) {
+        // A tenant mid-Quiesce may have gated Request injections; this
+        // chip-global drain needs clusters to flush their pending loads,
+        // so lift the gate (the stream loop's end-of-pass recompute
+        // restores it if a Quiesce is still in progress afterwards).
+        self.noc.set_request_gate(false);
         while !self.drained() && self.now < deadline {
             self.try_fast_forward(deadline - 1);
             self.step(gm);
@@ -619,8 +642,11 @@ impl Gpu {
     ///
     /// Only clusters whose mode actually changes are rewired (flush +
     /// freeze): a cluster that decided to stay as-is keeps its warm L1s
-    /// and keeps issuing. Callers reconfigure on a drained machine, so
-    /// the NoC rebuild never strands in-flight packets of skipped
+    /// and keeps issuing. Callers reconfigure on a quiet *fabric* — the
+    /// single-application path drains the whole machine, the stream path
+    /// drains the reconfiguring tenant's partition and then quiesces the
+    /// NoC via the Request-injection gate ([`Noc::set_request_gate`]) —
+    /// so the NoC rebuild never strands in-flight packets of skipped
     /// clusters. (On the chip-global paths every reconfigure crosses the
     /// fused/private boundary for every cluster, so the skip never fires
     /// there and their behaviour is unchanged.)
@@ -1040,11 +1066,26 @@ impl Gpu {
 
     /// Is every cluster + partition + the NoC fully drained?
     fn drained(&self) -> bool {
-        self.clusters.iter().all(|c| c.idle())
-            && self.partitions.iter().all(|p| !p.busy())
+        self.clusters.iter().all(|c| c.idle()) && self.fabric_quiet()
+    }
+
+    /// Is the shared fabric quiet? True when the memory partitions, the
+    /// NoC, and the retry/backlog side queues hold no in-flight work.
+    /// With the Request-injection gate up this is the quiesce-complete
+    /// condition: clusters may still hold inject-pending loads, but
+    /// nothing the NoC rebuild could strand is in flight.
+    fn fabric_quiet(&self) -> bool {
+        self.partitions.iter().all(|p| !p.busy())
             && !self.noc.busy()
             && self.reply_retry.iter().all(|r| r.is_empty())
             && self.req_backlog.iter().all(|b| b.is_empty())
+    }
+
+    /// Have the clusters in `part` (one tenant's partition) finished all
+    /// resident work? Unlike [`Gpu::drained`] this says nothing about the
+    /// shared fabric or other tenants' clusters.
+    fn partition_drained(&self, part: &[usize]) -> bool {
+        part.iter().all(|&ci| self.clusters[ci].idle())
     }
 
     /// Execute one kernel to completion, including the per-kernel AMOEBA
@@ -1374,7 +1415,10 @@ impl Gpu {
     /// standard [`Gpu::reconfigure`] path: the full chip vector keeps
     /// every other tenant's clusters exactly as they are (they are
     /// skipped by the mode check), while the NoC is rebuilt for the new
-    /// mixed layout. Caller guarantees a drained machine.
+    /// mixed layout. Caller guarantees the tenant's partition is drained
+    /// and the shared fabric is quiet (the quiesce gate): other tenants'
+    /// clusters may hold live warps and not-yet-injected loads, but no
+    /// packet or pending reply is in flight for the rebuild to strand.
     fn stream_reconfigure(&mut self, partition: &[usize], target: &[bool]) {
         debug_assert_eq!(partition.len(), target.len());
         let mut v = self.layout.fused_flags().to_vec();
@@ -1504,6 +1548,8 @@ impl Gpu {
                     arrival: l.arrival,
                     start: u64::MAX,
                     finish: u64::MAX,
+                    queue_delay: 0,
+                    slowdown_milli: 0,
                 });
             }
         }
@@ -1539,79 +1585,77 @@ impl Gpu {
                 }
             }
 
-            let drain_hold = tenants.iter().any(|t| matches!(t.phase, TPhase::Drain { .. }));
-
             // ---- CTA dispatch: each tenant's launch engine feeds its own
             // clusters (probe wave while profiling, full grid afterwards).
-            // Dispatch pauses chip-wide while any tenant drains for a
-            // reconfiguration: the fabric is being quiesced.
+            // A tenant draining for a reconfiguration pauses only itself
+            // (its phase is Drain/Quiesce, not Profiling/Running); every
+            // other tenant keeps dispatching and executing — the drain is
+            // partition-scoped, not chip-wide.
             let mut dispatched = 0usize;
-            if !drain_hold {
-                for ti in 0..n {
-                    let probing = matches!(tenants[ti].phase, TPhase::Profiling);
-                    if !probing && !matches!(tenants[ti].phase, TPhase::Running) {
-                        continue;
-                    }
-                    let t = &mut tenants[ti];
-                    let kernel = &streams[ti].launches[t.kidx].kernel;
-                    let cap = if probing {
-                        // One probe CTA per owned cluster (§4.1.1).
-                        (t.partition.len() as u32).min(kernel.num_ctas)
-                    } else {
-                        kernel.num_ctas
+            for ti in 0..n {
+                let probing = matches!(tenants[ti].phase, TPhase::Profiling);
+                if !probing && !matches!(tenants[ti].phase, TPhase::Running) {
+                    continue;
+                }
+                let t = &mut tenants[ti];
+                let kernel = &streams[ti].launches[t.kidx].kernel;
+                let cap = if probing {
+                    // One probe CTA per owned cluster (§4.1.1).
+                    (t.partition.len() as u32).min(kernel.num_ctas)
+                } else {
+                    kernel.num_ctas
+                };
+                let mut mine = 0usize;
+                // Requeued fault/preemption victims re-dispatch first,
+                // onto any healthy owned cluster with room.
+                while mine < DISPATCH_PER_CYCLE && !requeues[ti].is_empty() {
+                    let Some(&ci) = t.partition.iter().find(|&&ci| {
+                        !self.retired[ci] && self.clusters[ci].can_accept_cta(kernel)
+                    }) else {
+                        break;
                     };
-                    let mut mine = 0usize;
-                    // Requeued fault victims re-dispatch first, onto any
-                    // healthy owned cluster with room.
-                    while mine < DISPATCH_PER_CYCLE && !requeues[ti].is_empty() {
-                        let Some(&ci) = t.partition.iter().find(|&&ci| {
-                            !self.retired[ci] && self.clusters[ci].can_accept_cta(kernel)
-                        }) else {
+                    let cta = requeues[ti].pop_front().expect("checked non-empty");
+                    self.wake_comp(ci, self.now);
+                    self.clusters[ci].dispatch_cta(kernel, cta, &gens[ti]);
+                    self.chip.ctas_dispatched += 1;
+                    ctas_by_cluster[ti][ci] += 1;
+                    mine += 1;
+                }
+                if probing && t.scheme.per_cluster() {
+                    // Heterogeneous probe wave: CTA i lands on the
+                    // tenant's i-th cluster so the per-cluster windows
+                    // measure disjoint work.
+                    while t.next_cta < cap && mine < DISPATCH_PER_CYCLE {
+                        let ci = t.partition[t.next_cta as usize % t.partition.len()];
+                        if self.retired[ci] || !self.clusters[ci].can_accept_cta(kernel) {
                             break;
-                        };
-                        let cta = requeues[ti].pop_front().expect("checked non-empty");
+                        }
                         self.wake_comp(ci, self.now);
-                        self.clusters[ci].dispatch_cta(kernel, cta, &gens[ti]);
+                        self.clusters[ci].dispatch_cta(kernel, t.next_cta, &gens[ti]);
                         self.chip.ctas_dispatched += 1;
                         ctas_by_cluster[ti][ci] += 1;
+                        t.next_cta += 1;
                         mine += 1;
                     }
-                    if probing && t.scheme.per_cluster() {
-                        // Heterogeneous probe wave: CTA i lands on the
-                        // tenant's i-th cluster so the per-cluster windows
-                        // measure disjoint work.
-                        while t.next_cta < cap && mine < DISPATCH_PER_CYCLE {
-                            let ci = t.partition[t.next_cta as usize % t.partition.len()];
-                            if self.retired[ci] || !self.clusters[ci].can_accept_cta(kernel) {
-                                break;
-                            }
+                } else {
+                    'dispatch: for &ci in &t.partition {
+                        if self.retired[ci] {
+                            continue;
+                        }
+                        while t.next_cta < cap && self.clusters[ci].can_accept_cta(kernel) {
                             self.wake_comp(ci, self.now);
                             self.clusters[ci].dispatch_cta(kernel, t.next_cta, &gens[ti]);
                             self.chip.ctas_dispatched += 1;
                             ctas_by_cluster[ti][ci] += 1;
                             t.next_cta += 1;
                             mine += 1;
-                        }
-                    } else {
-                        'dispatch: for &ci in &t.partition {
-                            if self.retired[ci] {
-                                continue;
-                            }
-                            while t.next_cta < cap && self.clusters[ci].can_accept_cta(kernel) {
-                                self.wake_comp(ci, self.now);
-                                self.clusters[ci].dispatch_cta(kernel, t.next_cta, &gens[ti]);
-                                self.chip.ctas_dispatched += 1;
-                                ctas_by_cluster[ti][ci] += 1;
-                                t.next_cta += 1;
-                                mine += 1;
-                                if mine >= DISPATCH_PER_CYCLE {
-                                    break 'dispatch;
-                                }
+                            if mine >= DISPATCH_PER_CYCLE {
+                                break 'dispatch;
                             }
                         }
                     }
-                    dispatched += mine;
                 }
+                dispatched += mine;
             }
 
             // ---- Event-horizon skip: only when nothing dispatched, no
@@ -1625,10 +1669,9 @@ impl Gpu {
                 let mut pending = false;
                 for (ti, t) in tenants.iter().enumerate() {
                     pending |= match &t.phase {
-                        TPhase::Waiting => {
-                            !drain_hold && self.now >= streams[ti].launches[t.kidx].arrival
-                        }
-                        TPhase::Drain { .. } => self.drained(),
+                        TPhase::Waiting => self.now >= streams[ti].launches[t.kidx].arrival,
+                        TPhase::Drain { .. } => self.partition_drained(&t.partition),
+                        TPhase::Quiesce { .. } => self.fabric_quiet(),
                         TPhase::Profiling | TPhase::Running => {
                             requeues[ti].is_empty()
                                 && self.stream_kernel_complete(
@@ -1757,22 +1800,44 @@ impl Gpu {
                     }
                 }
 
-                // 2. Drain complete: apply the pending reconfiguration on
-                // the quiet fabric, then resume (or open the deferred
-                // profiling window).
-                if matches!(tenants[ti].phase, TPhase::Drain { .. }) && self.drained() {
-                    // The reconfigure below reshapes the chip; every
-                    // parked component replays and resumes first.
-                    self.wake_everything(self.now);
-                    for c in &mut self.clusters {
-                        c.reap();
-                    }
+                // 2a. Partition drain complete: the tenant's own clusters
+                // are idle (other tenants kept running throughout). Move
+                // to Quiesce — the end-of-pass recompute below raises the
+                // chip-wide Request-injection gate, and in-flight fabric
+                // traffic finishes while the Reply subnet keeps moving.
+                if matches!(tenants[ti].phase, TPhase::Drain { .. })
+                    && self.partition_drained(&tenants[ti].partition)
+                {
                     let TPhase::Drain { target, then_profile } =
                         std::mem::replace(&mut tenants[ti].phase, TPhase::Running)
                     else {
                         unreachable!()
                     };
+                    tenants[ti].phase = TPhase::Quiesce { target, then_profile };
+                }
+
+                // 2b. Quiesce complete: the shared fabric holds no
+                // in-flight work, so the NoC rebuild strands nothing.
+                // Apply the pending reconfiguration to the tenant's own
+                // clusters, then resume (or open the deferred profiling
+                // window). May fire in the same pass as 2a when the
+                // fabric is already quiet.
+                if matches!(tenants[ti].phase, TPhase::Quiesce { .. }) && self.fabric_quiet() {
+                    // The reconfigure below reshapes the chip; every
+                    // parked component replays and resumes first.
+                    self.wake_everything(self.now);
+                    let TPhase::Quiesce { target, then_profile } =
+                        std::mem::replace(&mut tenants[ti].phase, TPhase::Running)
+                    else {
+                        unreachable!()
+                    };
                     let part = tenants[ti].partition.clone();
+                    // Only the reconfiguring tenant's clusters are reaped:
+                    // other tenants' clusters keep their resident CTAs and
+                    // resume the moment the rebuilt fabric comes up.
+                    for &ci in &part {
+                        self.clusters[ci].reap();
+                    }
                     self.stream_reconfigure(&part, &target);
                     tenants[ti].chip.reconfig_events += 1;
                     tenants[ti].chip.reconfig_cycles += self.cfg.reconfig_cost;
@@ -1790,12 +1855,10 @@ impl Gpu {
                     }
                 }
 
-                // 3. Waiting and the arrival is due (and no tenant is
-                // draining): start the next kernel.
-                let drain_now =
-                    tenants.iter().any(|t| matches!(t.phase, TPhase::Drain { .. }));
+                // 3. Waiting and the arrival is due: start the next
+                // kernel. Another tenant's drain or quiesce no longer
+                // holds launches back — draining is partition-scoped.
                 if matches!(tenants[ti].phase, TPhase::Waiting)
-                    && !drain_now
                     && self.now >= streams[ti].launches[tenants[ti].kidx].arrival
                 {
                     // Adaptive repartition at the kernel boundary: adopt
@@ -1818,8 +1881,93 @@ impl Gpu {
                             tenants[ti].sm_base.push(snap);
                         }
                     }
+                    // CTA-boundary preemption: a high-priority tenant
+                    // below its fair cluster share takes clusters from
+                    // lower-priority tenants at its own launch boundary.
+                    // The victim's resident CTAs on the stolen cluster
+                    // are checkpointed at the CTA boundary — requeued
+                    // whole through the fault-requeue machinery, no
+                    // mid-warp state — and the cluster stays frozen for
+                    // `preempt_cost` cycles before the claimant may
+                    // execute on it.
+                    if policy == PartitionPolicy::Adaptive
+                        && streams[ti].priority == Priority::High
+                    {
+                        let live =
+                            tenants.iter().filter(|t| !matches!(t.phase, TPhase::Done)).count();
+                        let fair = n_clusters.div_ceil(live.max(1));
+                        while tenants[ti].partition.len() < fair {
+                            // Victim: lowest priority first, then largest
+                            // partition, then lowest tenant index (the
+                            // deterministic tiebreak). Eligible = strictly
+                            // lower priority, not mid-drain/quiesce/done,
+                            // keeps at least one cluster, and the cluster
+                            // to steal (its last-owned) is not retired.
+                            let victim = (0..n)
+                                .filter(|&vi| {
+                                    vi != ti
+                                        && streams[vi].priority < streams[ti].priority
+                                        && !matches!(
+                                            tenants[vi].phase,
+                                            TPhase::Drain { .. }
+                                                | TPhase::Quiesce { .. }
+                                                | TPhase::Done
+                                        )
+                                        && tenants[vi].partition.len() > 1
+                                        && !self.retired
+                                            [*tenants[vi].partition.last().expect("len > 1")]
+                                })
+                                .min_by_key(|&vi| {
+                                    (
+                                        streams[vi].priority,
+                                        std::cmp::Reverse(tenants[vi].partition.len()),
+                                        vi,
+                                    )
+                                });
+                            let Some(vi) = victim else { break };
+                            let pos = tenants[vi].partition.len() - 1;
+                            let ci = tenants[vi].partition[pos];
+                            // The steal mutates the cluster and reads its
+                            // counters: replay + resume it first.
+                            self.wake_comp(ci, self.now);
+                            let lost = self.clusters[ci].fail_clear();
+                            self.chip.ctas_requeued += lost.len() as u64;
+                            self.chip.ctas_preempted += lost.len() as u64;
+                            tenants[vi].chip.ctas_preempted += lost.len() as u64;
+                            for cta in lost {
+                                requeues[vi].push_back(cta);
+                            }
+                            // Close the victim's ownership period on the
+                            // stolen cluster, then hand it over.
+                            let d = self.clusters[ci].stats.delta(&tenants[vi].sm_base[pos]);
+                            tenants[vi].sm_acc.absorb(&d);
+                            tenants[vi].partition.remove(pos);
+                            tenants[vi].sm_base.remove(pos);
+                            // A victim mid-profile lost a probe cluster:
+                            // restart its window on the shrunk partition
+                            // so the baselines stay aligned.
+                            if matches!(tenants[vi].phase, TPhase::Profiling) {
+                                self.stream_begin_profiling(&mut tenants[vi]);
+                            }
+                            owner[ci] = ti;
+                            let snap = self.clusters[ci].stats.clone();
+                            self.clusters[ci].divergence_mode =
+                                if tenants[ti].scheme == Scheme::Dws {
+                                    DivergenceMode::Shadowed
+                                } else {
+                                    DivergenceMode::Serial
+                                };
+                            self.clusters[ci].frozen_until = self.now + self.cfg.preempt_cost;
+                            tenants[ti].partition.push(ci);
+                            tenants[ti].sm_base.push(snap);
+                            self.chip.preemptions += 1;
+                            tenants[ti].chip.preemptions += 1;
+                        }
+                    }
                     let li = launch_base[ti] + tenants[ti].kidx;
                     launches[li].start = self.now;
+                    launches[li].queue_delay =
+                        self.now - streams[ti].launches[tenants[ti].kidx].arrival;
                     gens[ti] = TraceGen::new(
                         &streams[ti].profile,
                         &streams[ti].launches[tenants[ti].kidx].kernel,
@@ -1876,6 +2024,9 @@ impl Gpu {
                         }
                         let li = launch_base[ti] + tenants[ti].kidx;
                         launches[li].finish = self.now;
+                        let service = self.now.saturating_sub(launches[li].start).max(1);
+                        launches[li].slowdown_milli =
+                            launches[li].turnaround().saturating_mul(1000) / service;
                         self.chip.kernels_completed += 1;
                         tenants[ti].chip.kernels_completed += 1;
                         tenants[ti].kidx += 1;
@@ -1914,6 +2065,16 @@ impl Gpu {
                     }
                 }
             }
+
+            // ---- Request-injection gate: up iff some tenant is mid-
+            // quiesce. Recomputed once per pass so (a) dense and skip
+            // runs toggle it on identical cycles and (b) a gate dropped
+            // by the NoC rebuild inside `stream_reconfigure` (`Noc::new`
+            // starts gate-down) is restored for any tenant still waiting
+            // to quiesce.
+            self.noc.set_request_gate(
+                tenants.iter().any(|t| matches!(t.phase, TPhase::Quiesce { .. })),
+            );
 
             // ---- Chip-wide Fig 19 phase sampling.
             if self.now % PHASE_SAMPLE_PERIOD == 0 {
@@ -2076,15 +2237,22 @@ pub fn run_benchmark_faulted_dense(
 
 /// Execution phase of one tenant in [`Gpu::run_streams`].
 enum TPhase {
-    /// Waiting for the next launch's arrival (or for a drain to clear).
+    /// Waiting for the next launch's arrival.
     Waiting,
     /// Profiling window open (predictor schemes; probe wave resident).
     Profiling,
-    /// Waiting for the chip to drain so `target` can be applied to the
-    /// tenant's clusters (the NoC rebuild needs a quiet fabric).
-    /// `then_profile` defers an interrupted kernel-start profiling
-    /// window to after the reconfiguration.
+    /// Draining the tenant's *own* clusters so `target` can be applied:
+    /// resident CTAs run to completion while every other tenant keeps
+    /// dispatching — the drain is partition-scoped. `then_profile`
+    /// defers an interrupted kernel-start profiling window to after the
+    /// reconfiguration.
     Drain { target: Vec<bool>, then_profile: bool },
+    /// Partition drained; new Request-subnet injections are gated
+    /// chip-wide while in-flight fabric traffic finishes (the Reply
+    /// subnet keeps moving). The NoC rebuild needs a quiet fabric, but
+    /// only this short window — not the pipeline drain — is a shared
+    /// cost across tenants.
+    Quiesce { target: Vec<bool>, then_profile: bool },
     /// Bulk of the kernel executing.
     Running,
     /// Stream exhausted (or truncated by the deadline).
@@ -2549,5 +2717,112 @@ mod tests {
         let empty =
             run_benchmark_faulted(&cfg, &p, Scheme::Baseline, 5, &FaultTrace::default()).unwrap();
         assert_eq!(plain, empty, "empty trace must be a bit-identical no-op");
+    }
+
+    #[test]
+    fn partition_scoped_drain_does_not_hold_other_tenants() {
+        // Four tenants on four clusters. t0 (ScaleUp) finishes early and
+        // frees a *fused* cluster; t1 (Baseline) adopts it at its second
+        // launch and must reconfigure it private — a partition-scoped
+        // drain + quiesce. t2 runs one long kernel across that whole
+        // window. t3's single launch arrives *during* it: under the old
+        // chip-global drain t3 (and t2's dispatch) would stall until the
+        // whole chip went idle; partition-scoped draining starts t3 at
+        // exactly its arrival cycle.
+        let mut cfg = SystemConfig::tiny();
+        cfg.num_sms = 8; // 4 clusters
+        cfg.max_cycles = 1_500_000;
+        let mut p0 = bench("CP").unwrap();
+        p0.num_ctas = 4;
+        p0.insns_per_thread = 40;
+        let mut t0 = KernelStream::back_to_back("t0:CP", p0.clone(), Scheme::ScaleUp, 0xE01);
+        t0.launches.truncate(1);
+        let mut t1 = KernelStream::back_to_back("t1:CP", p0.clone(), Scheme::Baseline, 0xE02);
+        t1.launches.truncate(2);
+        t1.launches[1].arrival = 500_000;
+        let mut p2 = bench("BFS").unwrap();
+        p2.num_ctas = 12;
+        p2.insns_per_thread = 800;
+        let mut t2 = KernelStream::back_to_back("t2:BFS", p2, Scheme::Baseline, 0xE03);
+        t2.launches.truncate(1);
+        let mut t3 = KernelStream::back_to_back("t3:CP", p0, Scheme::Baseline, 0xE04);
+        t3.launches.truncate(1);
+        t3.launches[0].arrival = 500_040;
+        let streams = vec![t0, t1, t2, t3];
+        let r = serve_streams(&cfg, &streams, PartitionPolicy::Adaptive).unwrap();
+        assert!(!r.deadline_hit);
+        assert!(r.launches.iter().all(|l| l.finish != u64::MAX), "all launches served");
+        // The adopted fused cluster forced a (partition-scoped) drain.
+        assert!(
+            r.tenants[1].chip.reconfig_events >= 1,
+            "t1 never reconfigured its adopted cluster"
+        );
+        // t2's long kernel spans the drain window: the fabric stayed in
+        // service for it while t1 drained and quiesced.
+        let l2 = r.launches.iter().find(|l| l.tenant == 2).unwrap();
+        assert!(l2.start < 10_000 && l2.finish > 500_100, "t2 must span the drain window");
+        // t3 launched at exactly its arrival cycle: no chip-wide hold.
+        let l3 = r.launches.iter().find(|l| l.tenant == 3).unwrap();
+        assert_eq!(l3.start, 500_040, "partition-scoped drain must not delay t3's start");
+        assert_eq!(l3.queue_delay, 0);
+        // Launch-stat identities hold for every served launch.
+        for l in &r.launches {
+            assert_eq!(l.queue_delay, l.start - l.arrival);
+            assert!(l.slowdown_milli >= 1000, "turnaround >= service");
+        }
+        let sum: u64 = r.tenants.iter().map(|t| t.sm.ctas_retired).sum();
+        assert_eq!(sum, r.sm.ctas_retired);
+    }
+
+    #[test]
+    fn high_priority_tenant_preempts_at_cta_boundary() {
+        // Four clusters, three tenants -> partitions [0], [1], [2, 3].
+        // t0 is High priority with a launch at cycle 5_000: below its
+        // fair share (ceil(4/3) = 2), it steals the Low tenant's last
+        // cluster mid-kernel. The victim's resident CTAs requeue and the
+        // run still conserves every CTA, bit-identically in both modes.
+        let mut cfg = SystemConfig::tiny();
+        cfg.num_sms = 8; // 4 clusters
+        cfg.max_cycles = 1_500_000;
+        let mut p0 = bench("CP").unwrap();
+        p0.num_ctas = 4;
+        p0.insns_per_thread = 40;
+        let mut t0 = KernelStream::back_to_back("t0:CP", p0.clone(), Scheme::Baseline, 0xF01);
+        t0.launches.truncate(1);
+        t0.launches[0].arrival = 5_000;
+        t0.priority = Priority::High;
+        // t1 must still be mid-kernel at cycle 5_000, or its freed
+        // cluster would satisfy t0's fair share through the free pool
+        // and no preemption would be needed.
+        let mut p1 = p0.clone();
+        p1.insns_per_thread = 300;
+        let mut t1 = KernelStream::back_to_back("t1:CP", p1, Scheme::Baseline, 0xF02);
+        t1.launches.truncate(1);
+        let mut p2 = bench("BFS").unwrap();
+        p2.num_ctas = 16;
+        p2.insns_per_thread = 300;
+        let mut t2 = KernelStream::back_to_back("t2:BFS", p2, Scheme::Baseline, 0xF03);
+        t2.launches.truncate(1);
+        t2.priority = Priority::Low;
+        let streams = vec![t0, t1, t2];
+        let dense = serve_streams_dense(&cfg, &streams, PartitionPolicy::Adaptive, true).unwrap();
+        let skip = serve_streams_dense(&cfg, &streams, PartitionPolicy::Adaptive, false).unwrap();
+        assert_eq!(dense, skip, "preemption must preserve the skip contract");
+        let r = skip;
+        assert!(!r.deadline_hit);
+        assert!(r.launches.iter().all(|l| l.finish != u64::MAX), "all launches served");
+        assert_eq!(r.chip.preemptions, 1, "t0 takes exactly one cluster to reach fair share");
+        assert_eq!(r.tenants[0].chip.preemptions, 1, "attributed to the claimant");
+        assert!(r.chip.ctas_preempted > 0, "the victim had resident CTAs mid-kernel");
+        assert_eq!(r.tenants[2].chip.ctas_preempted, r.chip.ctas_preempted);
+        assert!(r.chip.ctas_preempted <= r.chip.ctas_requeued);
+        // The claimant actually ran work on the stolen cluster, and the
+        // High tenant started at exactly its arrival.
+        assert!(r.ctas_by_cluster[0][3] > 0, "stolen cluster never served the claimant");
+        let l0 = r.launches.iter().find(|l| l.tenant == 0).unwrap();
+        assert_eq!(l0.start, 5_000);
+        // Conservation: every dispatch either retired or was requeued
+        // (and a requeued CTA's re-dispatch counts again).
+        assert_eq!(r.chip.ctas_dispatched, r.sm.ctas_retired + r.chip.ctas_requeued);
     }
 }

@@ -199,6 +199,12 @@ pub struct Noc {
     /// cycle is stamped, so raising it mid-run never reorders packets
     /// already accepted — horizons stay exact.
     hop_penalty: u64,
+    /// When set, **new** Request-subnet injections are refused (both
+    /// modes). Packets already in flight keep moving and the Reply
+    /// subnet is untouched, so MC replies drain normally — this is the
+    /// quiesce step of a partition-scoped reconfigure: stop feeding the
+    /// fabric, let it empty, then swap the layout.
+    req_gate: bool,
 }
 
 impl Noc {
@@ -236,6 +242,7 @@ impl Noc {
             inject_epoch: 0,
             order_scratch: Vec::with_capacity(8),
             hop_penalty: 0,
+            req_gate: false,
         }
     }
 
@@ -249,6 +256,21 @@ impl Noc {
     /// Current per-hop degradation penalty (0 = healthy fabric).
     pub fn hop_penalty(&self) -> u64 {
         self.hop_penalty
+    }
+
+    /// Gate (or un-gate) **new** Request-subnet injections. While gated,
+    /// [`Noc::inject`]/[`Noc::can_inject`] refuse Request packets in both
+    /// Perfect and Mesh modes; in-flight packets and the Reply subnet are
+    /// unaffected, so outstanding loads complete and the fabric drains to
+    /// empty — the precondition for a layout swap while *other* tenants'
+    /// clusters stay live.
+    pub fn set_request_gate(&mut self, gated: bool) {
+        self.req_gate = gated;
+    }
+
+    /// Is the Request subnet currently refusing new injections?
+    pub fn request_gate(&self) -> bool {
+        self.req_gate
     }
 
     /// Record router `r` of `subnet` as holding queued packets.
@@ -296,6 +318,9 @@ impl Noc {
     /// injection queue is full (the Fig 17 stall condition at MCs).
     pub fn inject(&mut self, subnet: Subnet, pkt: Packet) -> bool {
         debug_assert!(pkt.src < self.nodes && pkt.dst < self.nodes);
+        if self.req_gate && subnet == Subnet::Request {
+            return false;
+        }
         match self.mode {
             NocMode::Perfect => {
                 // Ideal fabric: instant delivery.
@@ -320,6 +345,9 @@ impl Noc {
 
     /// Space available in the source injection queue?
     pub fn can_inject(&self, subnet: Subnet, node: usize) -> bool {
+        if self.req_gate && subnet == Subnet::Request {
+            return false;
+        }
         match self.mode {
             NocMode::Perfect => true,
             NocMode::Mesh => self.routers[subnet as usize][node].inject_space(self.inject_depth),
@@ -707,6 +735,36 @@ mod tests {
         assert!(slow > base, "degraded fabric must be slower: {slow} vs {base}");
         // Multi-hop paths pay the penalty per hop.
         assert!(slow >= base + 4 * (degraded.hops(0, 5) as u64 - 1), "slow={slow} base={base}");
+    }
+
+    #[test]
+    fn request_gate_blocks_new_requests_but_drains_in_flight() {
+        let mut noc = Noc::with_nodes(&cfg(), 6);
+        assert!(noc.inject(Subnet::Request, pkt(0, 5, 2, 0)), "pre-gate inject");
+        noc.set_request_gate(true);
+        assert!(noc.request_gate());
+        assert!(!noc.can_inject(Subnet::Request, 0), "gated request space");
+        assert!(!noc.inject(Subnet::Request, pkt(1, 5, 1, 0)), "gated request inject");
+        // The Reply subnet is untouched while gated.
+        assert!(noc.can_inject(Subnet::Reply, 0));
+        assert!(noc.inject(Subnet::Reply, pkt(5, 0, 1, 0)));
+        // In-flight packets keep moving: the fabric drains to empty.
+        for t in 0..200 {
+            noc.tick(t);
+        }
+        assert!(noc.eject(Subnet::Request, 5).is_some(), "pre-gate packet delivered");
+        assert!(noc.eject(Subnet::Reply, 0).is_some());
+        assert!(!noc.busy(), "gated fabric drains");
+        // Gated Perfect mode refuses too (same observable contract).
+        let mut c = cfg();
+        c.noc_mode = NocMode::Perfect;
+        let mut ideal = Noc::with_nodes(&c, 6);
+        ideal.set_request_gate(true);
+        assert!(!ideal.can_inject(Subnet::Request, 0));
+        assert!(!ideal.inject(Subnet::Request, pkt(0, 5, 1, 0)));
+        assert!(ideal.inject(Subnet::Reply, pkt(0, 5, 1, 0)));
+        ideal.set_request_gate(false);
+        assert!(ideal.inject(Subnet::Request, pkt(0, 5, 1, 0)), "un-gated again");
     }
 
     #[test]

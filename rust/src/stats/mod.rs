@@ -234,6 +234,12 @@ pub struct ChipStats {
     pub ctas_dispatched: u64,
     /// In-flight CTAs pulled back from a failing cluster and redispatched.
     pub ctas_requeued: u64,
+    /// CTA-boundary preemptions: times a higher-priority tenant took a
+    /// cluster from a lower-priority one at a launch boundary.
+    pub preemptions: u64,
+    /// In-flight CTAs bounced off a preempted cluster (a subset of
+    /// `ctas_requeued`; the conservation invariant is unchanged).
+    pub ctas_preempted: u64,
 }
 
 impl ChipStats {

@@ -11,7 +11,10 @@ mod stream;
 pub use gen::{TraceGen, CODE_FOOTPRINT_BYTES};
 pub use profiles::{all_benchmarks, BenchProfile, FIG12_SET, FIG20_SET, FIG3_SET, FIG5_SET};
 pub use rng::{hash_combine, splitmix64, Pcg32};
-pub use stream::{shrink_streams, traffic_trace, KernelStream, StreamLaunch};
+pub use stream::{
+    shrink_streams, traffic_trace, traffic_trace_qos, KernelStream, Priority, StreamLaunch,
+    TenantQosSpec, TrafficPattern,
+};
 
 use crate::isa::KernelLaunch;
 

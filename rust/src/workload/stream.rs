@@ -10,11 +10,92 @@
 //! functions of the trace seed (the determinism contract every other
 //! workload generator in this crate obeys).
 
+use std::str::FromStr;
+
 use crate::config::Scheme;
 use crate::isa::KernelLaunch;
 
 use super::profiles::BenchProfile;
 use super::rng::{hash_combine, Pcg32};
+
+/// Tenant priority class. Ordering is meaningful: `Low < Normal < High`,
+/// and the preemption path only ever takes clusters from a *strictly*
+/// lower class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Best-effort: may be preempted at CTA boundaries and drained last.
+    Low,
+    /// The default class (every pre-QoS trace is all-Normal).
+    #[default]
+    Normal,
+    /// Latency-sensitive: fair-share shortfalls are made up by stealing
+    /// clusters from strictly lower classes at launch boundaries.
+    High,
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        })
+    }
+}
+
+impl FromStr for Priority {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => Err(format!("unknown priority '{other}' (low|normal|high)")),
+        }
+    }
+}
+
+/// One tenant's full QoS description: what it runs, how its clusters
+/// reconfigure, its priority class, and an optional per-launch turnaround
+/// SLO in cycles (arrival -> finish; `None` = best effort).
+#[derive(Debug, Clone)]
+pub struct TenantQosSpec {
+    /// Workload profile the tenant launches.
+    pub profile: BenchProfile,
+    /// Reconfiguration scheme for the tenant's clusters.
+    pub scheme: Scheme,
+    /// Priority class (drives preemption and the SLO objective weights).
+    pub priority: Priority,
+    /// Turnaround SLO per launch in cycles, if any.
+    pub slo_turnaround: Option<u64>,
+}
+
+impl TenantQosSpec {
+    /// A Normal-priority, no-SLO spec — the pre-QoS tenant shape.
+    pub fn best_effort(profile: BenchProfile, scheme: Scheme) -> Self {
+        TenantQosSpec { profile, scheme, priority: Priority::Normal, slo_turnaround: None }
+    }
+}
+
+/// Arrival-process shape for [`traffic_trace_qos`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficPattern {
+    /// Independent uniform gaps in `[0, 2*mean_gap]` — byte-identical to
+    /// the original [`traffic_trace`] arrivals for the same seed.
+    Uniform,
+    /// Noisy-neighbour bursts: launches arrive in back-to-back clumps of
+    /// `burst_len` (intra-burst gaps divided by `dilation`) separated by
+    /// long idle periods (every `burst_len`-th gap multiplied by
+    /// `dilation`). Draws the *same* RNG sequence as `Uniform`, so the
+    /// kernel seeds — and therefore the work — are identical; only the
+    /// arrival timing changes.
+    Bursty {
+        /// Launches per burst (>= 1).
+        burst_len: u32,
+        /// Idle-period stretch / intra-burst compression factor (>= 1).
+        dilation: u64,
+    },
+}
 
 /// One timed kernel launch inside a stream.
 #[derive(Debug, Clone)]
@@ -35,6 +116,10 @@ pub struct KernelStream {
     pub profile: BenchProfile,
     /// Reconfiguration scheme applied to this tenant's clusters.
     pub scheme: Scheme,
+    /// Priority class (Normal for every pre-QoS constructor).
+    pub priority: Priority,
+    /// Per-launch turnaround SLO in cycles (arrival -> finish), if any.
+    pub slo_turnaround: Option<u64>,
     /// Launches in arrival order (arrivals are nondecreasing).
     pub launches: Vec<StreamLaunch>,
 }
@@ -47,7 +132,14 @@ impl KernelStream {
             .into_iter()
             .map(|kernel| StreamLaunch { arrival: 0, kernel })
             .collect();
-        KernelStream { name: name.into(), profile, scheme, launches }
+        KernelStream {
+            name: name.into(),
+            profile,
+            scheme,
+            priority: Priority::Normal,
+            slo_turnaround: None,
+            launches,
+        }
     }
 
     /// Total CTAs across every launch of the stream.
@@ -82,16 +174,51 @@ pub fn traffic_trace(
     mean_gap: u64,
     seed: u64,
 ) -> Vec<KernelStream> {
+    let specs: Vec<TenantQosSpec> = tenants
+        .iter()
+        .map(|(p, s)| TenantQosSpec::best_effort(p.clone(), *s))
+        .collect();
+    traffic_trace_qos(&specs, kernels_each, mean_gap, seed, TrafficPattern::Uniform)
+}
+
+/// QoS-aware trace generator: like [`traffic_trace`] but each tenant
+/// carries its full [`TenantQosSpec`] (priority + SLO land on the
+/// produced [`KernelStream`]s) and the arrival process is selectable via
+/// [`TrafficPattern`]. `Uniform` is byte-identical to the original
+/// generator — same RNG streams, same gap draws, same kernel seeds — so
+/// every pre-QoS golden and memo key is untouched; `Bursty` reshapes the
+/// *same* draws into clump-and-idle noisy-neighbour timing without
+/// changing the work.
+pub fn traffic_trace_qos(
+    tenants: &[TenantQosSpec],
+    kernels_each: u32,
+    mean_gap: u64,
+    seed: u64,
+    pattern: TrafficPattern,
+) -> Vec<KernelStream> {
     tenants
         .iter()
         .enumerate()
-        .map(|(ti, (profile, scheme))| {
+        .map(|(ti, spec)| {
+            let profile = &spec.profile;
             let mut rng = Pcg32::new(hash_combine(&[seed, ti as u64, 0x7EA2]), ti as u64);
             let mut arrival = 0u64;
             let launches = (0..kernels_each)
                 .map(|k| {
                     if k > 0 && mean_gap > 0 {
-                        arrival += rng.next_u64() % (2 * mean_gap + 1);
+                        let gap = rng.next_u64() % (2 * mean_gap + 1);
+                        arrival += match pattern {
+                            TrafficPattern::Uniform => gap,
+                            TrafficPattern::Bursty { burst_len, dilation } => {
+                                let burst_len = burst_len.max(1);
+                                let dilation = dilation.max(1);
+                                if k % burst_len == 0 {
+                                    gap.saturating_mul(dilation)
+                                } else {
+                                    gap / dilation
+                                }
+                            }
+                        };
                     }
                     StreamLaunch {
                         arrival,
@@ -110,7 +237,9 @@ pub fn traffic_trace(
             KernelStream {
                 name: format!("t{ti}:{}", profile.name),
                 profile: profile.clone(),
-                scheme: *scheme,
+                scheme: spec.scheme,
+                priority: spec.priority,
+                slo_turnaround: spec.slo_turnaround,
                 launches,
             }
         })
@@ -119,6 +248,14 @@ pub fn traffic_trace(
 
 /// Shrink every launch of `streams` for quick/CI runs (same knobs the
 /// figure harness applies to single-application sweeps).
+///
+/// **Invariant:** shrinking only caps grid size and instruction counts.
+/// It never reorders or drops tenants or launches, and never touches the
+/// QoS fields (`priority`, `slo_turnaround`) — so the quick trace
+/// presents exactly the same tenant order and priority-class mix as the
+/// full trace, and priority-sensitive behaviour (preemption, the SLO
+/// objective) is exercised identically in CI quick mode. Pinned by
+/// `shrink_preserves_priority_order_and_class_mix` below.
 pub fn shrink_streams(streams: &mut [KernelStream], max_ctas: u32, max_insns: u32) {
     for s in streams {
         s.profile.num_ctas = s.profile.num_ctas.min(max_ctas);
@@ -181,5 +318,127 @@ mod tests {
         assert!(tr[0].launches.iter().all(|l| l.kernel.num_ctas <= 8));
         assert!(tr[0].launches.iter().all(|l| l.kernel.insns_per_thread <= 80));
         assert_eq!(tr[0].profile.num_ctas, 8);
+    }
+
+    fn qos_specs() -> Vec<TenantQosSpec> {
+        vec![
+            TenantQosSpec {
+                profile: bench("BFS").unwrap(),
+                scheme: Scheme::Hetero,
+                priority: Priority::High,
+                slo_turnaround: Some(50_000),
+            },
+            TenantQosSpec::best_effort(bench("CP").unwrap(), Scheme::Baseline),
+            TenantQosSpec {
+                profile: bench("RAY").unwrap(),
+                scheme: Scheme::WarpRegroup,
+                priority: Priority::Low,
+                slo_turnaround: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn qos_uniform_trace_matches_legacy_generator_exactly() {
+        // The Uniform pattern must be byte-identical to the pre-QoS
+        // generator: same arrivals, same kernel seeds, same names.
+        let specs = qos_specs();
+        let legacy_tenants: Vec<_> =
+            specs.iter().map(|s| (s.profile.clone(), s.scheme)).collect();
+        let legacy = traffic_trace(&legacy_tenants, 4, 1_000, 7);
+        let qos = traffic_trace_qos(&specs, 4, 1_000, 7, TrafficPattern::Uniform);
+        assert_eq!(legacy.len(), qos.len());
+        for (l, q) in legacy.iter().zip(&qos) {
+            assert_eq!(l.name, q.name);
+            for (ll, ql) in l.launches.iter().zip(&q.launches) {
+                assert_eq!(ll.arrival, ql.arrival);
+                assert_eq!(ll.kernel.seed, ql.kernel.seed);
+            }
+        }
+        // The QoS fields rode along.
+        assert_eq!(qos[0].priority, Priority::High);
+        assert_eq!(qos[0].slo_turnaround, Some(50_000));
+        assert_eq!(qos[1].priority, Priority::Normal);
+        assert_eq!(qos[2].priority, Priority::Low);
+        // Legacy trace defaults to all-Normal, no SLO.
+        assert!(legacy.iter().all(|s| s.priority == Priority::Normal));
+        assert!(legacy.iter().all(|s| s.slo_turnaround.is_none()));
+    }
+
+    #[test]
+    fn bursty_pattern_clumps_arrivals_without_changing_work() {
+        let specs = qos_specs();
+        let uniform = traffic_trace_qos(&specs, 8, 2_000, 11, TrafficPattern::Uniform);
+        let bursty = traffic_trace_qos(
+            &specs,
+            8,
+            2_000,
+            11,
+            TrafficPattern::Bursty { burst_len: 4, dilation: 8 },
+        );
+        for (u, b) in uniform.iter().zip(&bursty) {
+            b.validate().unwrap();
+            // Identical work: kernel seeds and grids untouched.
+            for (ul, bl) in u.launches.iter().zip(&b.launches) {
+                assert_eq!(ul.kernel.seed, bl.kernel.seed);
+                assert_eq!(ul.kernel.num_ctas, bl.kernel.num_ctas);
+            }
+            // Bursty timing is the exact per-gap transform of the SAME
+            // uniform draws: gap before launch k is multiplied by the
+            // dilation at burst boundaries (k % burst_len == 0) and
+            // integer-divided by it inside a burst.
+            let gap_of = |s: &KernelStream| -> Vec<u64> {
+                s.launches.windows(2).map(|w| w[1].arrival - w[0].arrival).collect()
+            };
+            let (ug, bg) = (gap_of(u), gap_of(b));
+            for (i, (&raw, &got)) in ug.iter().zip(&bg).enumerate() {
+                let k = i as u32 + 1;
+                let want = if k % 4 == 0 { raw * 8 } else { raw / 8 };
+                assert_eq!(got, want, "gap before launch {k}");
+            }
+        }
+        // Determinism: the same call reproduces the same trace.
+        let again = traffic_trace_qos(
+            &specs,
+            8,
+            2_000,
+            11,
+            TrafficPattern::Bursty { burst_len: 4, dilation: 8 },
+        );
+        for (a, b) in bursty.iter().zip(&again) {
+            for (al, bl) in a.launches.iter().zip(&b.launches) {
+                assert_eq!(al.arrival, bl.arrival);
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_preserves_priority_order_and_class_mix() {
+        let specs = qos_specs();
+        let full = traffic_trace_qos(&specs, 4, 5_000, 3, TrafficPattern::Uniform);
+        let mut quick = full.clone();
+        shrink_streams(&mut quick, 4, 40);
+        let mix = |streams: &[KernelStream]| -> Vec<(String, Priority, Option<u64>)> {
+            streams
+                .iter()
+                .map(|s| (s.name.clone(), s.priority, s.slo_turnaround))
+                .collect()
+        };
+        assert_eq!(mix(&full), mix(&quick), "shrink must not disturb tenant order or QoS class mix");
+        assert_eq!(full.len(), quick.len());
+        for (f, q) in full.iter().zip(&quick) {
+            assert_eq!(f.launches.len(), q.launches.len(), "no launches dropped");
+        }
+    }
+
+    #[test]
+    fn priority_parses_and_orders() {
+        assert_eq!("high".parse::<Priority>().unwrap(), Priority::High);
+        assert_eq!("normal".parse::<Priority>().unwrap(), Priority::Normal);
+        assert_eq!("low".parse::<Priority>().unwrap(), Priority::Low);
+        assert!("urgent".parse::<Priority>().is_err());
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::High.to_string(), "high");
     }
 }

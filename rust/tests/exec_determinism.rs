@@ -16,7 +16,7 @@ use amoeba_gpu::sim::gpu::{
     run_benchmark_faulted_dense, run_benchmark_seeded, run_benchmark_seeded_dense,
     serve_streams_dense, serve_streams_faulted_dense, PartitionPolicy, SimReport, StreamReport,
 };
-use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace, KernelStream};
+use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace, KernelStream, Priority};
 
 fn grid() -> (SystemConfig, Vec<SimJob>) {
     let mut cfg = SystemConfig::tiny();
@@ -298,6 +298,70 @@ fn stream_partial_quiescence_matches_dense() {
         assert!(dense.launches.iter().all(|l| l.finish != u64::MAX), "{label}: served");
         assert_stream_reports_identical(&dense, &active, &label);
     }
+}
+
+/// A stream mix that forces a CTA-boundary preemption: a High-priority
+/// tenant arrives mid-run while a Low-priority tenant is mid-kernel on
+/// more than its fair share of clusters (the recipe the gpu-level
+/// preemption test pins in detail).
+fn preemption_grid() -> (SystemConfig, Vec<KernelStream>) {
+    let mut cfg = SystemConfig::tiny();
+    cfg.num_sms = 8; // 4 clusters for 3 tenants
+    cfg.num_mcs = 4;
+    cfg.max_cycles = 1_500_000;
+    let mut p0 = bench("CP").unwrap();
+    p0.num_ctas = 4;
+    p0.insns_per_thread = 40;
+    let mut t0 = KernelStream::back_to_back("t0:CP", p0.clone(), Scheme::Baseline, 0xF01);
+    t0.launches.truncate(1);
+    t0.launches[0].arrival = 5_000;
+    t0.priority = Priority::High;
+    let mut p1 = p0.clone();
+    p1.insns_per_thread = 300; // still mid-kernel when the High tenant arrives
+    let mut t1 = KernelStream::back_to_back("t1:CP", p1, Scheme::Baseline, 0xF02);
+    t1.launches.truncate(1);
+    let mut p2 = bench("BFS").unwrap();
+    p2.num_ctas = 16;
+    p2.insns_per_thread = 300;
+    let mut t2 = KernelStream::back_to_back("t2:BFS", p2, Scheme::Baseline, 0xF03);
+    t2.launches.truncate(1);
+    t2.priority = Priority::Low;
+    (cfg, vec![t0, t1, t2])
+}
+
+/// Preemption-active skip vs dense: requeueing a victim's resident CTAs
+/// and freezing the stolen cluster must not break the event-horizon
+/// contract — both modes produce the identical report, preemptions
+/// included.
+#[test]
+fn preemption_cycle_skip_matches_dense() {
+    let (cfg, streams) = preemption_grid();
+    let dense = serve_streams_dense(&cfg, &streams, PartitionPolicy::Adaptive, true).unwrap();
+    let skip = serve_streams_dense(&cfg, &streams, PartitionPolicy::Adaptive, false).unwrap();
+    assert!(dense.launches.iter().all(|l| l.finish != u64::MAX), "all launches served");
+    assert!(dense.chip.preemptions >= 1, "the mix must actually preempt, or this pins nothing");
+    assert!(dense.chip.ctas_preempted >= 1, "the victim had resident CTAs");
+    assert_stream_reports_identical(&dense, &skip, "preemption-active streams");
+}
+
+/// Preemption-active parallel vs serial executor fan-out, plus the
+/// memo-purity contract on re-run.
+#[test]
+fn preemption_sweep_parallel_matches_serial() {
+    let (cfg, streams) = preemption_grid();
+    let jobs =
+        vec![StreamJob::new(cfg, streams, PartitionPolicy::Adaptive)];
+    let par = SweepExec::new(4);
+    let ser = SweepExec::serial();
+    let a = par.run_stream_batch(jobs.clone());
+    let b = ser.run_stream_batch(jobs.clone());
+    assert!(a[0].chip.preemptions >= 1, "the mix must actually preempt");
+    assert_stream_reports_identical(&a[0], &b[0], "preemption-active sweep");
+    let (_, misses_before) = par.cache_stats();
+    let again = par.run_stream_batch(jobs);
+    let (_, misses_after) = par.cache_stats();
+    assert_eq!(misses_before, misses_after, "re-running the preemption batch must not simulate");
+    assert!(std::sync::Arc::ptr_eq(&a[0], &again[0]), "cached Arc must be returned");
 }
 
 /// Stream sweeps through the executor: parallel fan-out must equal the

@@ -33,7 +33,10 @@ use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::sim::gpu::{
     run_benchmark_seeded, serve_streams, PartitionPolicy, SimReport, StreamReport,
 };
-use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace};
+use amoeba_gpu::workload::{
+    bench, shrink_streams, traffic_trace, traffic_trace_qos, Priority, TenantQosSpec,
+    TrafficPattern,
+};
 
 const SEED: u64 = 0x601D;
 
@@ -133,10 +136,14 @@ fn fingerprint_stream(r: &StreamReport) -> String {
         })
         .collect();
     s.push_str(&format!("  \"tenants\": [{}],\n", tenants.join(", ")));
+    push_kv(&mut s, "preemptions", r.chip.preemptions);
+    push_kv(&mut s, "ctas_preempted", r.chip.ctas_preempted);
     let launches: Vec<String> = r
         .launches
         .iter()
-        .map(|l| format!("[{}, {}, {}, {}]", l.tenant, l.kernel, l.start, l.finish))
+        .map(|l| {
+            format!("[{}, {}, {}, {}, {}]", l.tenant, l.kernel, l.start, l.finish, l.queue_delay)
+        })
         .collect();
     s.push_str(&format!("  \"launches\": [{}],\n", launches.join(", ")));
     s.push_str(&format!("  \"report_fnv\": \"{:#018x}\"\n}}\n", fnv1a(&format!("{r:?}"))));
@@ -221,6 +228,43 @@ fn golden_stream_runs() {
         );
         check_golden(&format!("stream_{policy}"), &fingerprint_stream(&r));
     }
+}
+
+/// The default priority mix (High with an SLO, Normal, Low) on a bursty
+/// trace under the Adaptive policy — the partition-scoped-drain +
+/// preemption path pinned absolutely. Same bless-on-missing workflow as
+/// the other goldens.
+#[test]
+fn golden_priority_mix() {
+    let mut cfg = quick_cfg();
+    cfg.num_sms = 8;
+    cfg.num_mcs = 4;
+    let prios = [Priority::High, Priority::Normal, Priority::Low];
+    let specs: Vec<TenantQosSpec> = vec![
+        (bench("BFS").unwrap(), Scheme::Hetero),
+        (bench("RAY").unwrap(), Scheme::WarpRegroup),
+        (bench("CP").unwrap(), Scheme::Baseline),
+    ]
+    .into_iter()
+    .zip(prios)
+    .map(|((profile, scheme), priority)| TenantQosSpec {
+        profile,
+        scheme,
+        priority,
+        slo_turnaround: (priority == Priority::High).then_some(400_000),
+    })
+    .collect();
+    let mut streams = traffic_trace_qos(
+        &specs,
+        2,
+        10_000,
+        SEED,
+        TrafficPattern::Bursty { burst_len: 4, dilation: 8 },
+    );
+    shrink_streams(&mut streams, 6, 60);
+    let r = serve_streams(&cfg, &streams, PartitionPolicy::Adaptive).unwrap();
+    assert!(r.launches.iter().all(|l| l.finish != u64::MAX), "all launches must be served");
+    check_golden("stream_priority_mix", &fingerprint_stream(&r));
 }
 
 /// The fingerprint must be sensitive to single-counter perturbations —

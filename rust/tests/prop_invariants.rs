@@ -17,7 +17,7 @@ use amoeba_gpu::sim::mem::{
 use amoeba_gpu::sim::noc::{Noc, Packet, Payload, Subnet};
 use amoeba_gpu::sim::NextEvent;
 use amoeba_gpu::workload::{
-    bench, kernel_launches, shrink_streams, traffic_trace, Pcg32, TraceGen,
+    bench, kernel_launches, shrink_streams, traffic_trace, KernelStream, Pcg32, Priority, TraceGen,
 };
 
 /// Randomised property: coalescing never produces more transactions than
@@ -458,6 +458,68 @@ fn prop_stream_tenant_conservation() {
         // Tenant finishes bound the chip clock.
         let last = r.tenants.iter().map(|t| t.cycles).max().unwrap();
         assert_eq!(last, r.cycles, "{label}: chip stops when the last tenant finishes");
+    }
+}
+
+/// Priority-inversion regression over the partition-scoped drain: a
+/// low-priority tenant's reconfigure (drain of its own clusters, then
+/// the brief chip-wide request-gate quiesce) must not delay a
+/// high-priority tenant's launch start at all — the start lands at
+/// exactly the arrival cycle for *any* arrival inside the drain window.
+/// The chip-global drain this replaced held every launch until the
+/// whole machine went idle, which is exactly the inversion pinned here.
+#[test]
+fn prop_no_priority_inversion_across_partition_drain() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.num_sms = 8; // 4 clusters
+    cfg.max_cycles = 1_500_000;
+    let mut p0 = bench("CP").unwrap();
+    p0.num_ctas = 4;
+    p0.insns_per_thread = 40;
+    // t1 (Low) adopts t0's freed fused cluster at its second launch
+    // (cycle 500_000) and must drain + reconfigure it private; the
+    // high-priority probe arrives at staggered offsets across that
+    // window (just after the drain begins, mid-quiesce, well past it).
+    for arrival in [500_010u64, 500_040, 500_400, 502_000] {
+        let mut t0 = KernelStream::back_to_back("t0:CP", p0.clone(), Scheme::ScaleUp, 0xA01);
+        t0.launches.truncate(1);
+        t0.priority = Priority::Low;
+        let mut t1 = KernelStream::back_to_back("t1:CP", p0.clone(), Scheme::Baseline, 0xA02);
+        t1.launches.truncate(2);
+        t1.launches[1].arrival = 500_000;
+        t1.priority = Priority::Low;
+        let mut p2 = bench("BFS").unwrap();
+        p2.num_ctas = 12;
+        p2.insns_per_thread = 800;
+        let mut t2 = KernelStream::back_to_back("t2:BFS", p2, Scheme::Baseline, 0xA03);
+        t2.launches.truncate(1);
+        let mut t3 = KernelStream::back_to_back("t3:CP", p0.clone(), Scheme::Baseline, 0xA04);
+        t3.launches.truncate(1);
+        t3.launches[0].arrival = arrival;
+        t3.priority = Priority::High;
+        t3.slo_turnaround = Some(400_000);
+        let streams = vec![t0, t1, t2, t3];
+
+        let r = serve_streams(&cfg, &streams, PartitionPolicy::Adaptive).unwrap();
+        assert!(!r.deadline_hit, "arrival {arrival}");
+        assert!(
+            r.launches.iter().all(|l| l.finish != u64::MAX),
+            "arrival {arrival}: every launch served"
+        );
+        assert!(
+            r.tenants[1].chip.reconfig_events >= 1,
+            "arrival {arrival}: the low-priority tenant must actually reconfigure"
+        );
+        let l3 = r.launches.iter().find(|l| l.tenant == 3).unwrap();
+        assert_eq!(
+            l3.start, arrival,
+            "arrival {arrival}: low-priority reconfigure delayed the high-priority start"
+        );
+        assert_eq!(l3.queue_delay, 0, "arrival {arrival}: queue_delay mirrors the start law");
+        assert!(
+            l3.turnaround() <= 400_000,
+            "arrival {arrival}: the high tenant's tiny kernel must meet its SLO"
+        );
     }
 }
 
