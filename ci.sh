@@ -80,6 +80,25 @@ run_timed "fault invariants (active-set)" env AMOEBA_DENSE=0 \
 run_timed "fault invariants (dense)" env AMOEBA_DENSE=1 \
     cargo test -q --test prop_invariants fault retired_cluster
 
+echo "== checkpoint round-trip pass (AMOEBA_DENSE=0/1) =="
+# Capture/restore must be bit-identical in both execution modes — the
+# checkpoint tests compare the resumed run against the uninterrupted one
+# and the two modes' checkpoint bytes against each other.
+run_timed "checkpoint restore (active-set)" env AMOEBA_DENSE=0 \
+    cargo test -q --test exec_determinism checkpoint
+run_timed "checkpoint restore (dense)" env AMOEBA_DENSE=1 \
+    cargo test -q --test exec_determinism checkpoint
+run_timed "checkpoint fuzz" env AMOEBA_DENSE=0 \
+    cargo test -q --test prop_invariants checkpoint memo_truncation
+
+echo "== bisect smoke (artificial divergence must localize) =="
+# A clean run vs the same run with a cluster killed at cycle 200: the
+# bisector must report a divergence (at a cycle after the injection).
+run_timed "amoeba bisect smoke" bash -c \
+    './target/release/amoeba bisect CP --quick --faults-b cluster0@200 | grep -q "diverged at cycle"'
+run_timed "amoeba bisect identical" bash -c \
+    './target/release/amoeba bisect CP --quick | grep -q "identical"'
+
 # `status --porcelain` reports both modified tracked goldens and brand-new
 # (untracked) ones.
 if [ -n "$(git status --porcelain -- rust/tests/goldens 2>/dev/null)" ]; then

@@ -293,8 +293,51 @@ fn main() {
         qdense.chip.preemptions, qdense.chip.ctas_preempted
     );
 
+    // -------- Checkpoint save/load on a 16-SM chip: serialization and
+    // parse wall-clock plus the byte size of a mid-run capture, and the
+    // zero-cost contract — a snapshot armed past the end never fires
+    // and the run stays bit-identical to one that never armed at all.
+    eprintln!("[bench_sweep] checkpoint save/load (16-SM chip):");
+    let mut snap_cfg = quick_cfg();
+    snap_cfg.num_sms = 16;
+    snap_cfg.num_mcs = 8;
+    let snap_p = quick_profile("BFS");
+    let baseline =
+        run_benchmark_seeded(&snap_cfg, &snap_p, Scheme::Baseline, SEED).unwrap();
+    let (armed_unfired, no_cp) = amoeba_gpu::sim::gpu::run_benchmark_snapshot(
+        &snap_cfg, &snap_p, Scheme::Baseline, SEED, false, u64::MAX, None,
+    )
+    .unwrap();
+    assert!(no_cp.is_none(), "armed-past-the-end snapshot must not fire");
+    assert_eq!(baseline, armed_unfired, "an unfired snapshot arm must cost nothing");
+    let mid = baseline.cycles / 2;
+    let (_, cp) = amoeba_gpu::sim::gpu::run_benchmark_snapshot(
+        &snap_cfg, &snap_p, Scheme::Baseline, SEED, false, mid, None,
+    )
+    .unwrap();
+    let cp = cp.expect("mid-run snapshot must fire");
+    let t_save = Instant::now();
+    let cp_bytes = std::hint::black_box(cp.to_bytes());
+    let save_s = t_save.elapsed().as_secs_f64();
+    let snapshot_bytes = cp_bytes.len();
+    let t_load = Instant::now();
+    let reloaded =
+        std::hint::black_box(amoeba_gpu::sim::Checkpoint::from_bytes(&cp_bytes).unwrap());
+    let load_s = t_load.elapsed().as_secs_f64();
+    let resumed = amoeba_gpu::sim::gpu::run_benchmark_resume(
+        &snap_cfg, &snap_p, Scheme::Baseline, SEED, false, &reloaded,
+    )
+    .unwrap();
+    assert_eq!(baseline, resumed, "restore-then-continue must be bit-identical");
+    eprintln!(
+        "[bench_sweep]   capture@{mid}: {snapshot_bytes} bytes, save {:.1} us, load {:.1} us \
+         (resume bit-identical)",
+        save_s * 1e6,
+        load_s * 1e6
+    );
+
     let json = format!(
-        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }},\n  \"fault_sweep\": {{ \"no_trace_s\": {:.3}, \"empty_trace_s\": {:.3}, \"overhead\": {:.3}, \"identical\": true }},\n  \"qos_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"preemptions\": {}, \"ctas_preempted\": {}, \"identical\": true }}\n}}\n",
+        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }},\n  \"fault_sweep\": {{ \"no_trace_s\": {:.3}, \"empty_trace_s\": {:.3}, \"overhead\": {:.3}, \"identical\": true }},\n  \"qos_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"preemptions\": {}, \"ctas_preempted\": {}, \"identical\": true }},\n  \"snapshot_sweep\": {{ \"sms\": {}, \"capture_cycle\": {}, \"bytes\": {}, \"save_s\": {:.6}, \"load_s\": {:.6}, \"unfired_arm_identical\": true, \"resume_identical\": true }}\n}}\n",
         jobs.len(),
         misses,
         threads,
@@ -327,6 +370,11 @@ fn main() {
         qos_skip_ratio,
         qdense.chip.preemptions,
         qdense.chip.ctas_preempted,
+        snap_cfg.num_sms,
+        mid,
+        snapshot_bytes,
+        save_s,
+        load_s,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => eprintln!("[bench_sweep] wrote BENCH_sweep.json"),

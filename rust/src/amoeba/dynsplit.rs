@@ -35,6 +35,21 @@ impl DynSplit {
         }
     }
 
+    /// Serialize the mutable state (checkpoint format): only the rebalance
+    /// timer — threshold and period are config, rebuilt by the constructor.
+    pub fn save_state(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        w.u64(self.last_rebalance);
+    }
+
+    /// Inverse of [`DynSplit::save_state`].
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<()> {
+        self.last_rebalance = r.u64()?;
+        Ok(())
+    }
+
     /// Evaluate one cluster: split, re-fuse, or rebalance as needed.
     /// Called periodically (every `split_check_period` cycles) by the GPU.
     pub fn check(&mut self, now: u64, cluster: &mut SmCluster) {

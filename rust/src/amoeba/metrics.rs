@@ -34,6 +34,25 @@ pub struct MetricsSample {
 }
 
 impl MetricsSample {
+    /// Serialize the feature vector (checkpoint format): each feature as
+    /// its IEEE bit pattern — exact round trip.
+    pub fn write_to(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        for f in &self.features {
+            w.f64(*f);
+        }
+    }
+
+    /// Inverse of [`MetricsSample::write_to`].
+    pub fn read_from(
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<MetricsSample> {
+        let mut features = [0.0; NUM_FEATURES];
+        for f in &mut features {
+            *f = r.f64()?;
+        }
+        Ok(MetricsSample { features })
+    }
+
     /// Compute the sample from the counter deltas of a chip-wide
     /// profiling window (normalised over all `cfg.num_sms` SMs).
     pub fn from_window(before: &SmStats, after: &SmStats, cfg: &SystemConfig) -> Self {

@@ -26,6 +26,15 @@
 //! parallelism. `SweepExec::new(1)` degrades to a purely serial,
 //! still-memoized executor.
 //!
+//! **Disk spill**: [`SweepExec::from_env`] executors additionally spill
+//! every report to `target/amoeba-memo/` (override with
+//! `AMOEBA_MEMO_DIR`; `0`/`off`/empty disables) and consult it on
+//! in-memory misses, so repeated CLI invocations skip re-simulating.
+//! Spill files carry a format-version header plus a full key echo;
+//! corrupt, truncated, or stale files are ignored — and overwritten —
+//! never panicked on. Explicitly sized executors (`new`, `serial`, and
+//! therefore every test) keep the disk memo off.
+//!
 //! Execution mode: simulations run with event-horizon cycle skipping
 //! unless `AMOEBA_DENSE=1` forces the dense reference loop. The mode is
 //! deliberately **not** part of [`JobKey`] — skip and dense runs are
@@ -34,12 +43,15 @@
 //! mode-agnostic.
 
 use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::{Scheme, SystemConfig};
+use crate::errors::err;
 use crate::sim::fault::FaultTrace;
 use crate::sim::gpu::{run_benchmark_faulted, PartitionPolicy, SimReport, StreamReport};
+use crate::sim::snapshot::{ByteReader, ByteWriter};
 use crate::workload::{BenchProfile, KernelStream};
 
 /// FNV-1a over a string — the fingerprint primitive. Configs and
@@ -200,30 +212,164 @@ impl StreamJob {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Disk-persistent memo spill
+// ---------------------------------------------------------------------------
+
+/// Magic header of a spilled report file.
+const MEMO_MAGIC: &[u8; 4] = b"AMRM";
+/// Memo format version. Bump on ANY change to the report byte layout —
+/// readers silently ignore (and overwrite) files from other versions.
+const MEMO_VERSION: u32 = 1;
+/// Default spill directory, relative to the working directory.
+const MEMO_DEFAULT_DIR: &str = "target/amoeba-memo";
+
+/// Spill-file path of one memoized report: the key collapses to an
+/// FNV-1a of its `Debug` rendering (every field participates), the echo
+/// inside the file guards against collisions and staleness.
+fn memo_path(dir: &Path, kind: &str, key_debug: &str) -> PathBuf {
+    dir.join(format!("{kind}-{:016x}.bin", fnv1a(key_debug)))
+}
+
+/// Best-effort spill: serialize under a tmp name, then rename into
+/// place (readers never see a half-written file). IO failures are
+/// swallowed — the disk memo is an accelerator, never a correctness
+/// dependency.
+fn memo_store(dir: &Path, kind: &str, key_debug: &str, bytes: Vec<u8>) {
+    let path = memo_path(dir, kind, key_debug);
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    if std::fs::create_dir_all(dir).is_ok() && std::fs::write(&tmp, bytes).is_ok() {
+        let _ = std::fs::rename(&tmp, &path);
+    }
+}
+
+/// Serialize one [`SimReport`] spill file: magic, version, kind tag, the
+/// full key echo, then the report bytes.
+fn sim_memo_bytes(key: &JobKey, rep: &SimReport) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.raw(MEMO_MAGIC);
+    w.u32(MEMO_VERSION);
+    w.u8(0);
+    w.str(key.bench);
+    w.str(&key.scheme.to_string());
+    w.u64(key.cfg_fp);
+    w.u64(key.profile_fp);
+    w.u64(key.seed);
+    w.u64(key.fault_fp);
+    rep.write_to(&mut w);
+    w.into_bytes()
+}
+
+/// Parse a [`SimReport`] spill file against the key that looked it up.
+/// Truncated, corrupt, wrong-version, or stale-key bytes are an error —
+/// never a panic — and the caller treats any error as a plain miss.
+pub fn parse_sim_memo(bytes: &[u8], key: &JobKey) -> crate::errors::Result<SimReport> {
+    let mut r = ByteReader::new(bytes);
+    if r.take(4)? != MEMO_MAGIC {
+        return Err(err("memo: bad magic"));
+    }
+    if r.u32()? != MEMO_VERSION {
+        return Err(err("memo: format version mismatch"));
+    }
+    if r.u8()? != 0 {
+        return Err(err("memo: not a sim-report file"));
+    }
+    if r.str()? != key.bench
+        || r.str()? != key.scheme.to_string()
+        || r.u64()? != key.cfg_fp
+        || r.u64()? != key.profile_fp
+        || r.u64()? != key.seed
+        || r.u64()? != key.fault_fp
+    {
+        return Err(err("memo: stale key echo"));
+    }
+    let rep = SimReport::read_from(&mut r)?;
+    r.expect_end()?;
+    Ok(rep)
+}
+
+/// Serialize one [`StreamReport`] spill file (kind tag 1).
+fn stream_memo_bytes(key: &StreamKey, rep: &StreamReport) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.raw(MEMO_MAGIC);
+    w.u32(MEMO_VERSION);
+    w.u8(1);
+    w.u64(key.cfg_fp);
+    w.u64(key.trace_fp);
+    w.str(&key.policy.to_string());
+    w.u64(key.fault_fp);
+    rep.write_to(&mut w);
+    w.into_bytes()
+}
+
+/// Parse a [`StreamReport`] spill file against its key; errors like
+/// [`parse_sim_memo`].
+pub fn parse_stream_memo(bytes: &[u8], key: &StreamKey) -> crate::errors::Result<StreamReport> {
+    let mut r = ByteReader::new(bytes);
+    if r.take(4)? != MEMO_MAGIC {
+        return Err(err("memo: bad magic"));
+    }
+    if r.u32()? != MEMO_VERSION {
+        return Err(err("memo: format version mismatch"));
+    }
+    if r.u8()? != 1 {
+        return Err(err("memo: not a stream-report file"));
+    }
+    if r.u64()? != key.cfg_fp
+        || r.u64()? != key.trace_fp
+        || r.str()? != key.policy.to_string()
+        || r.u64()? != key.fault_fp
+    {
+        return Err(err("memo: stale key echo"));
+    }
+    let rep = StreamReport::read_from(&mut r)?;
+    r.expect_end()?;
+    Ok(rep)
+}
+
 /// The parallel, memoizing sweep executor.
 pub struct SweepExec {
     threads: usize,
     cache: Mutex<HashMap<JobKey, Arc<SimReport>>>,
     /// Separate memo for multi-tenant stream runs (the server sweep).
     stream_cache: Mutex<HashMap<StreamKey, Arc<StreamReport>>>,
+    /// Spill directory for the cross-process disk memo (`None` = memory
+    /// only, the default for explicitly sized executors and tests).
+    disk_dir: Option<PathBuf>,
     hits: AtomicU64,
     misses: AtomicU64,
+    disk_hits: AtomicU64,
 }
 
 impl SweepExec {
-    /// Executor with an explicit worker count (clamped to >= 1).
+    /// Executor with an explicit worker count (clamped to >= 1). The
+    /// disk memo is off; opt in with [`SweepExec::with_disk_memo`].
     pub fn new(threads: usize) -> Self {
         SweepExec {
             threads: threads.max(1),
             cache: Mutex::new(HashMap::new()),
             stream_cache: Mutex::new(HashMap::new()),
+            disk_dir: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
         }
     }
 
+    /// Spill every memoized report to `dir` and consult it on misses
+    /// (builder style). Files carry a format-version header and a full
+    /// key echo; anything corrupt, truncated, or stale is silently
+    /// ignored and overwritten by a fresh simulation.
+    pub fn with_disk_memo(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.disk_dir = Some(dir.into());
+        self
+    }
+
     /// Executor sized from the environment: `AMOEBA_JOBS` if set (and a
-    /// positive integer), else the machine's available parallelism.
+    /// positive integer), else the machine's available parallelism. The
+    /// disk memo is ON, at `target/amoeba-memo` — `AMOEBA_MEMO_DIR`
+    /// overrides the directory, and the values `0`, `off`, or the empty
+    /// string disable spilling entirely.
     pub fn from_env() -> Self {
         let threads = std::env::var("AMOEBA_JOBS")
             .ok()
@@ -232,7 +378,12 @@ impl SweepExec {
             .unwrap_or_else(|| {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
             });
-        Self::new(threads)
+        let exec = Self::new(threads);
+        match std::env::var("AMOEBA_MEMO_DIR") {
+            Ok(v) if v.is_empty() || v == "0" || v.eq_ignore_ascii_case("off") => exec,
+            Ok(v) => exec.with_disk_memo(v),
+            Err(_) => exec.with_disk_memo(MEMO_DEFAULT_DIR),
+        }
     }
 
     /// A purely serial (but still memoizing) executor.
@@ -245,9 +396,50 @@ impl SweepExec {
         self.threads
     }
 
-    /// (cache hits, unique simulations executed) so far.
+    /// (cache hits, unique simulations executed) so far. Disk-memo hits
+    /// count toward `misses` (the in-memory cache missed) — see
+    /// [`SweepExec::disk_hits`] for how many of those skipped the
+    /// simulation.
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// In-memory misses that were served from the disk memo instead of
+    /// simulating.
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    /// Recall one sim report from the disk memo (any problem = miss).
+    fn disk_load_sim(&self, key: &JobKey) -> Option<SimReport> {
+        let dir = self.disk_dir.as_deref()?;
+        let bytes = std::fs::read(memo_path(dir, "sim", &format!("{key:?}"))).ok()?;
+        let rep = parse_sim_memo(&bytes, key).ok()?;
+        self.disk_hits.fetch_add(1, Ordering::Relaxed);
+        Some(rep)
+    }
+
+    /// Best-effort spill of one sim report to the disk memo.
+    fn disk_store_sim(&self, key: &JobKey, rep: &SimReport) {
+        if let Some(dir) = self.disk_dir.as_deref() {
+            memo_store(dir, "sim", &format!("{key:?}"), sim_memo_bytes(key, rep));
+        }
+    }
+
+    /// Recall one stream report from the disk memo (any problem = miss).
+    fn disk_load_stream(&self, key: &StreamKey) -> Option<StreamReport> {
+        let dir = self.disk_dir.as_deref()?;
+        let bytes = std::fs::read(memo_path(dir, "stream", &format!("{key:?}"))).ok()?;
+        let rep = parse_stream_memo(&bytes, key).ok()?;
+        self.disk_hits.fetch_add(1, Ordering::Relaxed);
+        Some(rep)
+    }
+
+    /// Best-effort spill of one stream report to the disk memo.
+    fn disk_store_stream(&self, key: &StreamKey, rep: &StreamReport) {
+        if let Some(dir) = self.disk_dir.as_deref() {
+            memo_store(dir, "stream", &format!("{key:?}"), stream_memo_bytes(key, rep));
+        }
     }
 
     /// Number of memoized reports currently held.
@@ -276,7 +468,14 @@ impl SweepExec {
             return Arc::clone(hit);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let report = Arc::new(job.simulate());
+        let report = match self.disk_load_sim(&key) {
+            Some(rep) => Arc::new(rep),
+            None => {
+                let rep = Arc::new(job.simulate());
+                self.disk_store_sim(&key, &rep);
+                rep
+            }
+        };
         self.cache.lock().unwrap().insert(key, Arc::clone(&report));
         report
     }
@@ -305,10 +504,31 @@ impl SweepExec {
             }
         }
 
+        // Disk memo first (outside any lock): spilled reports from a
+        // previous process satisfy misses without simulating.
+        if self.disk_dir.is_some() {
+            let mut still = Vec::with_capacity(todo.len());
+            let mut loaded: Vec<(JobKey, Arc<SimReport>)> = Vec::new();
+            for (key, job) in todo {
+                match self.disk_load_sim(&key) {
+                    Some(rep) => loaded.push((key, Arc::new(rep))),
+                    None => still.push((key, job)),
+                }
+            }
+            if !loaded.is_empty() {
+                let mut cache = self.cache.lock().unwrap();
+                for (k, r) in loaded {
+                    cache.insert(k, r);
+                }
+            }
+            todo = still;
+        }
+
         if !todo.is_empty() {
             let results = self.execute(&todo);
             let mut cache = self.cache.lock().unwrap();
             for (i, report) in results {
+                self.disk_store_sim(&todo[i].0, &report);
                 cache.insert(todo[i].0.clone(), report);
             }
         }
@@ -373,7 +593,14 @@ impl SweepExec {
             return Arc::clone(hit);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let report = Arc::new(job.simulate());
+        let report = match self.disk_load_stream(&key) {
+            Some(rep) => Arc::new(rep),
+            None => {
+                let rep = Arc::new(job.simulate());
+                self.disk_store_stream(&key, &rep);
+                rep
+            }
+        };
         self.stream_cache.lock().unwrap().insert(key, Arc::clone(&report));
         report
     }
@@ -399,10 +626,29 @@ impl SweepExec {
             }
         }
 
+        if self.disk_dir.is_some() {
+            let mut still = Vec::with_capacity(todo.len());
+            let mut loaded: Vec<(StreamKey, Arc<StreamReport>)> = Vec::new();
+            for (key, job) in todo {
+                match self.disk_load_stream(&key) {
+                    Some(rep) => loaded.push((key, Arc::new(rep))),
+                    None => still.push((key, job)),
+                }
+            }
+            if !loaded.is_empty() {
+                let mut cache = self.stream_cache.lock().unwrap();
+                for (k, r) in loaded {
+                    cache.insert(k, r);
+                }
+            }
+            todo = still;
+        }
+
         if !todo.is_empty() {
             let results = self.execute_with(todo.len(), |i| Arc::new(todo[i].1.simulate()));
             let mut cache = self.stream_cache.lock().unwrap();
             for (i, report) in results {
+                self.disk_store_stream(&todo[i].0, &report);
                 cache.insert(todo[i].0.clone(), report);
             }
         }
@@ -428,6 +674,8 @@ impl std::fmt::Debug for SweepExec {
             .field("cached", &self.cached_len())
             .field("hits", &hits)
             .field("misses", &misses)
+            .field("disk_dir", &self.disk_dir)
+            .field("disk_hits", &self.disk_hits())
             .finish()
     }
 }
@@ -542,5 +790,61 @@ mod tests {
         assert_eq!(SweepExec::new(0).threads(), 1);
         assert_eq!(SweepExec::serial().threads(), 1);
         assert!(SweepExec::from_env().threads() >= 1);
+    }
+
+    #[test]
+    fn disk_memo_round_trips_and_shrugs_off_corruption() {
+        let dir = std::env::temp_dir().join(format!("amoeba-memo-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let exec = SweepExec::new(1).with_disk_memo(&dir);
+        let job = tiny_job("CP", Scheme::Baseline, 7);
+        let a = exec.run(&job.cfg, &job.profile, job.scheme, job.seed);
+        assert_eq!(exec.disk_hits(), 0, "first run simulates and spills");
+
+        // A fresh executor (fresh process, as far as the memo knows)
+        // recalls the spilled report bit-for-bit without simulating.
+        let exec2 = SweepExec::new(1).with_disk_memo(&dir);
+        let b = exec2.run(&job.cfg, &job.profile, job.scheme, job.seed);
+        assert_eq!(*a, *b, "disk recall must be bit-identical");
+        assert_eq!(exec2.disk_hits(), 1);
+
+        // Batch path recalls from disk too.
+        let exec3 = SweepExec::new(2).with_disk_memo(&dir);
+        let out = exec3.run_batch(vec![job.clone()]);
+        assert_eq!(*out[0], *a);
+        assert_eq!(exec3.disk_hits(), 1);
+
+        // Stream reports spill and recall through the same machinery.
+        use crate::sim::gpu::PartitionPolicy;
+        use crate::workload::{shrink_streams, traffic_trace};
+        let tenants = vec![(bench("CP").unwrap(), Scheme::Baseline)];
+        let mut streams = traffic_trace(&tenants, 1, 0, 3);
+        shrink_streams(&mut streams, 4, 40);
+        let sjob = StreamJob::new(SystemConfig::tiny(), streams, PartitionPolicy::Static);
+        let sa = exec3.run_stream(&sjob);
+        let exec4 = SweepExec::new(1).with_disk_memo(&dir);
+        let sb = exec4.run_stream(&sjob);
+        assert_eq!(*sa, *sb, "stream disk recall must be bit-identical");
+        assert_eq!(exec4.disk_hits(), 1);
+
+        // Corrupt every spill file: the loader must treat them as plain
+        // misses (no panic) and re-simulate to the same report.
+        for e in std::fs::read_dir(&dir).unwrap() {
+            std::fs::write(e.unwrap().path(), b"not a memo file").unwrap();
+        }
+        let exec5 = SweepExec::new(1).with_disk_memo(&dir);
+        let c = exec5.run(&job.cfg, &job.profile, job.scheme, job.seed);
+        assert_eq!(*a, *c, "corrupt memo must fall back to simulation");
+        assert_eq!(exec5.disk_hits(), 0);
+
+        // Truncated files (every prefix) are also plain errors.
+        let good = sim_memo_bytes(&job.key(), &a);
+        for n in 0..good.len().min(64) {
+            assert!(parse_sim_memo(&good[..n], &job.key()).is_err());
+        }
+        assert!(parse_sim_memo(&good, &job.key()).is_ok());
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

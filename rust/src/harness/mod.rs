@@ -15,8 +15,8 @@ mod figures;
 
 pub use bencher::{p95_u64, BenchResult, Bencher};
 pub use exec::{
-    cfg_fingerprint, fault_fingerprint, profile_fingerprint, JobKey, SimJob, StreamJob, StreamKey,
-    SweepExec,
+    cfg_fingerprint, fault_fingerprint, parse_sim_memo, parse_stream_memo, profile_fingerprint,
+    JobKey, SimJob, StreamJob, StreamKey, SweepExec,
 };
 pub use figdata::gtx_scaling_trend;
 pub use figures::*;

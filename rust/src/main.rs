@@ -13,6 +13,8 @@ use amoeba_gpu::config::{NocMode, Scheme, SystemConfig};
 use amoeba_gpu::errors::{err, Result};
 use amoeba_gpu::harness::{SimJob, SweepExec};
 use amoeba_gpu::runtime::serve;
+use amoeba_gpu::sim::bisect::{bisect_benchmark, BisectOutcome, BisectSide};
+use amoeba_gpu::sim::fault::{FaultEvent, FaultKind, FaultTrace};
 use amoeba_gpu::sim::gpu::{run_benchmark_seeded, run_benchmark_with_controller, PartitionPolicy};
 use amoeba_gpu::stats::Table;
 use amoeba_gpu::workload::{
@@ -29,11 +31,21 @@ USAGE:
   amoeba serve-sim [--tenants SPEC] [--policy static|adaptive]
                    [--kernels N] [--gap CYCLES] [--seed N] [--sms N]
                    [--bursty] [--quick] [--jobs N]
+  amoeba bisect <BENCH> [--scheme S] [--seed N] [--sms N] [--quick]
+                [--dense-a] [--dense-b] [--faults-a SPEC] [--faults-b SPEC]
   amoeba list
   amoeba config
 
 SCHEMES: baseline | scale_up | static_fuse | direct_split |
          warp_regrouping | hetero | dws
+
+bisect runs the same workload twice (side A vs side B — each side an
+execution mode plus an optional fault schedule) and, if the runs
+disagree, binary-searches the FIRST main-loop cycle whose serialized
+machine state differs, naming the differing checkpoint sections
+(cluster.3, noc, mc.0, ...). Fault SPEC is comma-separated events:
+clusterN@CYC kills cluster N, halfN.H@CYC kills half H of cluster N,
+noc+P@CYC adds P cycles per hop, mcN.D@CYC stalls MC N for D cycles.
 
 serve-sim replays a seeded traffic trace of interleaved tenant kernel
 launches on ONE chip (spatially partitioned clusters, shared NoC and
@@ -62,6 +74,7 @@ fn main() -> Result<()> {
         "run" => cmd_run(&args[1..]),
         "sweep" => cmd_sweep(&args[1..]),
         "serve-sim" => cmd_serve_sim(&args[1..]),
+        "bisect" => cmd_bisect(&args[1..]),
         "list" => cmd_list(),
         "config" => {
             println!("{}", amoeba_gpu::harness::figure("t1", true).unwrap().render());
@@ -361,6 +374,105 @@ fn cmd_serve_sim(args: &[String]) -> Result<()> {
             rep.chip.reconfig_events,
             shared.partitions[ti]
         );
+    }
+    Ok(())
+}
+
+/// Parse a fault-schedule spec: comma-separated events, each
+/// `clusterN@CYC`, `halfN.H@CYC`, `noc+P@CYC`, or `mcN.D@CYC`.
+fn parse_fault_spec(spec: &str) -> Result<FaultTrace> {
+    let mut events = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (kind_s, cyc_s) = entry
+            .split_once('@')
+            .ok_or_else(|| err(format!("fault '{entry}' needs '@CYCLE'")))?;
+        let cycle: u64 = cyc_s
+            .trim()
+            .replace('_', "")
+            .parse()
+            .map_err(|e| err(format!("bad fault cycle '{cyc_s}': {e}")))?;
+        let kind_s = kind_s.trim();
+        let kind = if let Some(rest) = kind_s.strip_prefix("cluster") {
+            FaultKind::Cluster { cluster: rest.parse().map_err(|e| err(format!("bad cluster id in '{entry}': {e}")))? }
+        } else if let Some(rest) = kind_s.strip_prefix("half") {
+            let (c, h) = rest
+                .split_once('.')
+                .ok_or_else(|| err(format!("half fault '{entry}' needs 'halfN.H'")))?;
+            FaultKind::HalfSm {
+                cluster: c.parse().map_err(|e| err(format!("bad cluster id in '{entry}': {e}")))?,
+                half: h.parse().map_err(|e| err(format!("bad half in '{entry}': {e}")))?,
+            }
+        } else if let Some(rest) = kind_s.strip_prefix("noc+") {
+            FaultKind::NocDegrade { penalty: rest.parse().map_err(|e| err(format!("bad NoC penalty in '{entry}': {e}")))? }
+        } else if let Some(rest) = kind_s.strip_prefix("mc") {
+            let (m, d) = rest
+                .split_once('.')
+                .ok_or_else(|| err(format!("MC fault '{entry}' needs 'mcN.D'")))?;
+            FaultKind::McStall {
+                mc: m.parse().map_err(|e| err(format!("bad MC id in '{entry}': {e}")))?,
+                cycles: d.parse().map_err(|e| err(format!("bad stall length in '{entry}': {e}")))?,
+            }
+        } else {
+            return Err(err(format!(
+                "unknown fault kind in '{entry}' (want clusterN / halfN.H / noc+P / mcN.D)"
+            )));
+        };
+        events.push(FaultEvent { cycle, kind });
+    }
+    Ok(FaultTrace::new(events))
+}
+
+fn cmd_bisect(args: &[String]) -> Result<()> {
+    let name = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .ok_or_else(|| err(format!("bisect needs a benchmark name\n\n{}", usage())))?;
+    let mut profile =
+        bench(name).ok_or_else(|| err(format!("unknown benchmark '{name}' (try `amoeba list`)")))?;
+    let scheme = match opt_value(args, "--scheme")? {
+        Some(s) => Scheme::from_str(s).map_err(err)?,
+        None => Scheme::Baseline,
+    };
+    let seed: u64 = match opt_value(args, "--seed")? {
+        Some(s) => s.parse()?,
+        None => 0xAB0EBA,
+    };
+    let mut cfg = SystemConfig::gtx480();
+    if has_flag(args, "--quick") {
+        cfg.num_sms = 8;
+        cfg.num_mcs = 4;
+        profile.num_ctas = profile.num_ctas.min(12);
+        profile.insns_per_thread = profile.insns_per_thread.min(100);
+        profile.num_kernels = 1;
+    }
+    if let Some(n) = opt_value(args, "--sms")? {
+        cfg = cfg.with_sm_count(n.parse()?);
+    }
+    let side = |dense_flag: &str, faults_flag: &str| -> Result<BisectSide> {
+        Ok(BisectSide {
+            dense: has_flag(args, dense_flag),
+            faults: match opt_value(args, faults_flag)? {
+                Some(spec) => Some(parse_fault_spec(spec)?),
+                None => None,
+            },
+        })
+    };
+    let a = side("--dense-a", "--faults-a")?;
+    let b = side("--dense-b", "--faults-b")?;
+    eprintln!(
+        "[bisect] {} under {scheme}: A({}, {} faults) vs B({}, {} faults)...",
+        profile.name,
+        if a.dense { "dense" } else { "skip" },
+        a.faults.as_ref().map_or(0, |f| f.events.len()),
+        if b.dense { "dense" } else { "skip" },
+        b.faults.as_ref().map_or(0, |f| f.events.len()),
+    );
+    match bisect_benchmark(&cfg, &profile, scheme, seed, &a, &b)? {
+        BisectOutcome::Identical => println!("identical: the two runs agree byte-for-byte"),
+        BisectOutcome::Diverged { cycle, sections } => {
+            println!("diverged at cycle {cycle}");
+            println!("differing sections: {}", sections.join(", "));
+        }
     }
     Ok(())
 }

@@ -20,7 +20,10 @@
 use crate::config::{Scheme, SystemConfig};
 use crate::harness::{p95_u64, StreamJob};
 use crate::sim::fault::FaultTrace;
-use crate::sim::gpu::{serve_streams, serve_streams_faulted, PartitionPolicy, StreamReport};
+use crate::sim::gpu::{
+    serve_streams, serve_streams_faulted, serve_streams_resume, serve_streams_snapshot,
+    PartitionPolicy, StreamReport,
+};
 use crate::workload::{
     bench, hash_combine, BenchProfile, KernelStream, Priority, StreamLaunch, TenantQosSpec,
 };
@@ -345,6 +348,12 @@ pub struct TenantHealth {
     pub served: u32,
     /// Launches never completed (dropped on quarantine / retry budget).
     pub dropped: u32,
+    /// Out of retries with launches still unserved, the tenant was
+    /// checkpoint-migrated: its in-flight state was captured just before
+    /// the first fault fired, pending faults were stripped from the
+    /// checkpoint, and the stream finished on a restored healthy machine
+    /// (see [`serve_with_failover`]).
+    pub migrated: bool,
 }
 
 /// Deterministic backoff before retry `attempt` (1-based) of `tenant`:
@@ -366,9 +375,19 @@ pub fn backoff_delay(fo: &FailoverConfig, tenant: usize, attempt: u32) -> u64 {
 /// alone on the chip, fault-free, arrivals pushed out by
 /// [`backoff_delay`] — up to `fo.max_retries` times. A tenant whose
 /// attempts keep failing is quarantined after `fo.quarantine_after`
-/// failures and its remaining launches are dropped. Returns the shared
-/// run's report plus one [`TenantHealth`] per tenant. Fully
-/// deterministic: same inputs, same report, same ledger.
+/// failures.
+///
+/// Launches still unserved after the retry budget get one **live
+/// migration**: the tenant's stream is replayed alone under the same
+/// fault schedule with a checkpoint armed at the first injection cycle —
+/// the capture runs *before* injection, so it holds the tenant's
+/// in-flight, still-healthy machine state at a CTA dispatch boundary —
+/// then the not-yet-fired faults are stripped from the checkpoint and
+/// the run restores onto a healthy machine that serves the stream to
+/// completion. Only launches the migrated run actually finished move out
+/// of the dropped column. Returns the shared run's report plus one
+/// [`TenantHealth`] per tenant. Fully deterministic: same inputs, same
+/// report, same ledger.
 pub fn serve_with_failover(
     cfg: &SystemConfig,
     streams: &[KernelStream],
@@ -389,13 +408,15 @@ pub fn serve_with_failover(
             quarantined: false,
             served: 0,
             dropped: 0,
+            migrated: false,
         };
         // LaunchStat.kernel is the launch's ordinal within its stream, so
-        // it indexes straight back into `stream.launches`.
-        let mut pending: Vec<StreamLaunch> = Vec::new();
+        // it indexes straight back into `stream.launches`; the ordinal
+        // rides along so the migration path can match completions.
+        let mut pending: Vec<(usize, StreamLaunch)> = Vec::new();
         for l in shared.launches.iter().filter(|l| l.tenant == ti as u32) {
             if l.finish == u64::MAX {
-                pending.push(stream.launches[l.kernel as usize].clone());
+                pending.push((l.kernel as usize, stream.launches[l.kernel as usize].clone()));
             } else {
                 h.served += 1;
             }
@@ -417,7 +438,7 @@ pub fn serve_with_failover(
                 slo_turnaround: stream.slo_turnaround,
                 launches: pending
                     .iter()
-                    .map(|l| StreamLaunch { arrival: delay, kernel: l.kernel.clone() })
+                    .map(|(_, l)| StreamLaunch { arrival: delay, kernel: l.kernel.clone() })
                     .collect(),
             };
             let rep = serve_streams(&cfg, &[retry], PartitionPolicy::Static)?;
@@ -426,11 +447,11 @@ pub fn serve_with_failover(
                 done[l.kernel as usize] = true;
             }
             let mut keep = Vec::new();
-            for (i, l) in pending.into_iter().enumerate() {
+            for (i, entry) in pending.into_iter().enumerate() {
                 if done[i] {
                     h.served += 1;
                 } else {
-                    keep.push(l);
+                    keep.push(entry);
                 }
             }
             pending = keep;
@@ -438,6 +459,51 @@ pub fn serve_with_failover(
                 h.failures += 1;
             }
         }
+
+        // Retry budget spent and launches still stranded: live-migrate.
+        // Replay the stream alone under the same fault schedule with a
+        // checkpoint armed at the first injection cycle (captured state
+        // is pre-injection, i.e. healthy), strip the faults that have
+        // not fired yet, and finish the stream on a restored machine.
+        if !pending.is_empty() && !faults.is_empty() {
+            let alone = alone_streams(streams, ti);
+            let first_fault = faults.events[0].cycle;
+            let dense = crate::sim::gpu::dense_env();
+            let (_, cp) = serve_streams_snapshot(
+                &cfg,
+                &alone,
+                PartitionPolicy::Static,
+                dense,
+                first_fault,
+                Some(faults),
+            )?;
+            if let Some(mut cp) = cp {
+                cp.strip_pending_faults()?;
+                let rep = serve_streams_resume(&cfg, &alone, PartitionPolicy::Static, dense, &cp)?;
+                // CTA conservation must survive the capture/restore seam.
+                debug_assert_eq!(
+                    rep.chip.ctas_dispatched,
+                    rep.sm.ctas_retired + rep.chip.ctas_requeued,
+                    "migrated run broke CTA conservation"
+                );
+                h.attempts += 1;
+                let mut keep = Vec::new();
+                for (ord, l) in pending.into_iter() {
+                    let done = rep
+                        .launches
+                        .iter()
+                        .any(|r| r.kernel as usize == ord && r.finish != u64::MAX);
+                    if done {
+                        h.served += 1;
+                        h.migrated = true;
+                    } else {
+                        keep.push((ord, l));
+                    }
+                }
+                pending = keep;
+            }
+        }
+
         h.dropped = pending.len() as u32;
         h.quarantined = h.failures >= fo.quarantine_after;
         health.push(h);
@@ -658,6 +724,35 @@ mod tests {
             assert!(h.failures >= 1);
             assert!(!h.quarantined, "one failure is below the quarantine bar");
             assert_eq!(h.dropped, 0, "fault-free retry must serve everything");
+            assert_eq!(h.served as usize, streams[ti].launches.len());
+        }
+        // Deterministic end to end.
+        let again = serve_with_failover(&cfg, &streams, PartitionPolicy::Static, &fo, &faults).unwrap();
+        assert_eq!(shared, again.0);
+        assert_eq!(health, again.1);
+    }
+
+    #[test]
+    fn migration_rescues_stranded_launches() {
+        use crate::sim::fault::{FaultEvent, FaultKind};
+        let (cfg, streams) = failover_streams();
+        // Kill the whole chip early and grant no retry budget: every
+        // unserved launch must be rescued by checkpoint migration —
+        // captured pre-fault, faults stripped, finished on a restored
+        // healthy machine.
+        let faults = FaultTrace::new(vec![
+            FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 0 } },
+            FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 1 } },
+        ]);
+        let fo = FailoverConfig { max_retries: 0, quarantine_after: 1, ..FailoverConfig::default() };
+        let (shared, health) =
+            serve_with_failover(&cfg, &streams, PartitionPolicy::Static, &fo, &faults).unwrap();
+        assert!(shared.deadline_hit, "dead chip must truncate the shared run");
+        for (ti, h) in health.iter().enumerate() {
+            assert!(h.quarantined, "no retry budget: failures hit the bar");
+            assert!(h.migrated, "tenant {ti} must have been migrated");
+            assert_eq!(h.attempts, 2, "shared attempt + the migration");
+            assert_eq!(h.dropped, 0, "migration must serve everything");
             assert_eq!(h.served as usize, streams[ti].launches.len());
         }
         // Deterministic end to end.

@@ -1,0 +1,210 @@
+//! Divergence bisection: a time-travel debugger for simulator runs.
+//!
+//! Two runs of the same workload that *should* agree (dense vs skip, with
+//! vs without an empty fault trace, two builds of the simulator) sometimes
+//! don't — and the first symptom is usually a counter mismatch millions of
+//! cycles after the actual divergence. [`bisect_benchmark`] binary-searches
+//! the **first main-loop cycle whose machine state differs**, using
+//! [`crate::sim::Checkpoint`]s as the comparison probe: a checkpoint is a
+//! canonical, complete serialization of the machine (every warp, cache
+//! line, router queue, and counter), so two checkpoints at the same cycle
+//! are byte-equal iff the machines are in the same state.
+//!
+//! The probe relies on the capture contract of
+//! [`crate::sim::gpu::run_benchmark_snapshot`]: both sides arm the same
+//! cycle, both fast-forward engines clamp to it, and both capture at the
+//! main-loop top *before* fault injection — so a fault trace injecting at
+//! cycle `F` first shows up in the checkpoint at `F + 1`, and the bisector
+//! reports exactly that cycle together with the differing sections
+//! (`cluster.3`, `noc`, `mc.0`, ...). Capture granularity is the main
+//! loop: nested drain loops run to completion inside one iteration, so a
+//! probe armed inside one lands at the next loop top — identically on
+//! both sides, which is all the bisection needs.
+
+use crate::config::{Scheme, SystemConfig};
+use crate::errors::Result;
+use crate::sim::fault::FaultTrace;
+use crate::sim::gpu::run_benchmark_snapshot;
+use crate::sim::snapshot::Checkpoint;
+use crate::workload::BenchProfile;
+
+/// One side of a bisection: an execution mode plus an optional fault
+/// schedule. The workload (config / profile / scheme / seed) is shared —
+/// bisection localizes *where* two runs of the same work diverge, not why
+/// two different workloads differ.
+#[derive(Debug, Clone, Default)]
+pub struct BisectSide {
+    /// Pin the dense reference loop (`true`) or the event-horizon skip
+    /// engine (`false`).
+    pub dense: bool,
+    /// Fault schedule injected on this side (`None` runs clean).
+    pub faults: Option<FaultTrace>,
+}
+
+/// Where two runs first disagree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BisectOutcome {
+    /// The two sides' final reports are byte-for-byte equal.
+    Identical,
+    /// First main-loop cycle whose machine state differs, plus the
+    /// checkpoint sections that differ at that cycle (`report` when the
+    /// divergence only manifests in the final report, `termination` when
+    /// one side ends before the probe cycle and the other doesn't).
+    Diverged { cycle: u64, sections: Vec<String> },
+}
+
+/// Probe both sides at `cycle` and diff the captured machine state.
+/// `None` means the sides agree at that cycle (including "both already
+/// finished"); `Some(sections)` names what differs.
+#[allow(clippy::too_many_arguments)]
+fn probe(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+    a: &BisectSide,
+    b: &BisectSide,
+    cycle: u64,
+) -> Result<Option<Vec<String>>> {
+    let snap = |side: &BisectSide| -> Result<Option<Checkpoint>> {
+        let (_, cp) = run_benchmark_snapshot(
+            cfg,
+            profile,
+            scheme,
+            seed,
+            side.dense,
+            cycle,
+            side.faults.as_ref(),
+        )?;
+        Ok(cp)
+    };
+    match (snap(a)?, snap(b)?) {
+        (None, None) => Ok(None),
+        (Some(ca), Some(cb)) => {
+            let d = ca.state_diff(&cb);
+            Ok(if d.is_empty() { None } else { Some(d) })
+        }
+        // One side still running at `cycle`, the other already done:
+        // identical machines finish at identical cycles, so this *is*
+        // the divergence.
+        _ => Ok(Some(vec!["termination".to_string()])),
+    }
+}
+
+/// Binary-search the first main-loop cycle at which runs `a` and `b` of
+/// the same workload hold different machine state.
+///
+/// Cost: two full runs up front (to compare reports and bound the search)
+/// plus `2 * log2(cycles)` partial runs for the probes — each probe run
+/// is re-executed from cycle 0, trading wall-clock for zero persistent
+/// state (the simulator re-runs deterministically by contract).
+pub fn bisect_benchmark(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+    a: &BisectSide,
+    b: &BisectSide,
+) -> Result<BisectOutcome> {
+    // Full runs, capture-free (`u64::MAX` is never reached): final
+    // reports + end cycles.
+    let (ra, _) =
+        run_benchmark_snapshot(cfg, profile, scheme, seed, a.dense, u64::MAX, a.faults.as_ref())?;
+    let (rb, _) =
+        run_benchmark_snapshot(cfg, profile, scheme, seed, b.dense, u64::MAX, b.faults.as_ref())?;
+    if ra == rb {
+        return Ok(BisectOutcome::Identical);
+    }
+
+    // Upper probe bound: the last cycle both runs still exist. When the
+    // end cycles agree, the final loop iteration may not reach another
+    // capture point, so probe strictly before it.
+    let hi_limit = ra.cycles.min(rb.cycles);
+    let mut hi = if ra.cycles == rb.cycles { hi_limit.saturating_sub(1) } else { hi_limit };
+
+    let mut sections_at_hi = match probe(cfg, profile, scheme, seed, a, b, hi)? {
+        Some(d) => d,
+        // State agrees as late as we can see, yet the reports differ:
+        // the divergence is in the final iterations past the last
+        // probe-able cycle.
+        None => {
+            return Ok(BisectOutcome::Diverged {
+                cycle: hi.saturating_add(1),
+                sections: vec!["report".to_string()],
+            })
+        }
+    };
+    if let Some(d) = probe(cfg, profile, scheme, seed, a, b, 0)? {
+        return Ok(BisectOutcome::Diverged { cycle: 0, sections: d });
+    }
+
+    // Invariant: state equal at `lo`, different at `hi`.
+    let mut lo = 0u64;
+    while lo + 1 < hi {
+        let mid = lo + (hi - lo) / 2;
+        match probe(cfg, profile, scheme, seed, a, b, mid)? {
+            Some(d) => {
+                hi = mid;
+                sections_at_hi = d;
+            }
+            None => lo = mid,
+        }
+    }
+    Ok(BisectOutcome::Diverged { cycle: hi, sections: sections_at_hi })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fault::{FaultEvent, FaultKind};
+    use crate::workload::bench;
+
+    fn tiny() -> (SystemConfig, BenchProfile) {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 1_500_000;
+        let mut p = bench("CP").unwrap();
+        p.num_ctas = 8;
+        p.insns_per_thread = 60;
+        p.num_kernels = 1;
+        (cfg, p)
+    }
+
+    #[test]
+    fn identical_sides_report_identical() {
+        let (cfg, p) = tiny();
+        let side = BisectSide { dense: false, faults: None };
+        let out = bisect_benchmark(&cfg, &p, Scheme::Baseline, 7, &side, &side).unwrap();
+        assert_eq!(out, BisectOutcome::Identical);
+    }
+
+    #[test]
+    fn dense_vs_skip_is_identical() {
+        let (cfg, p) = tiny();
+        let a = BisectSide { dense: true, faults: None };
+        let b = BisectSide { dense: false, faults: None };
+        let out = bisect_benchmark(&cfg, &p, Scheme::Baseline, 7, &a, &b).unwrap();
+        assert_eq!(out, BisectOutcome::Identical);
+    }
+
+    #[test]
+    fn fault_divergence_localized_to_injection_cycle() {
+        let (cfg, p) = tiny();
+        let f = FaultTrace {
+            events: vec![FaultEvent { cycle: 40, kind: FaultKind::Cluster { cluster: 0 } }],
+        };
+        let a = BisectSide { dense: false, faults: None };
+        let b = BisectSide { dense: false, faults: Some(f) };
+        let out = bisect_benchmark(&cfg, &p, Scheme::Baseline, 7, &a, &b).unwrap();
+        match out {
+            // Capture precedes injection: the fault at cycle 40 first
+            // appears in state at the next main-loop top. Nested drains
+            // can push the first differing *probe-able* cycle later, but
+            // never earlier than 41.
+            BisectOutcome::Diverged { cycle, ref sections } => {
+                assert!(cycle >= 41, "diverged at {cycle}, before the fault fired");
+                assert!(!sections.is_empty());
+            }
+            BisectOutcome::Identical => panic!("faulted run cannot match clean run"),
+        }
+    }
+}

@@ -1664,6 +1664,297 @@ impl SmCluster {
         self.flush_caches();
         lost
     }
+
+    // ------------------------------------------------------------------
+    // Checkpoint (sim::snapshot)
+    // ------------------------------------------------------------------
+
+    /// Serialize the cluster's full mutable state. Derived scheduler
+    /// structures (ready-warp index, stall-classification cache, pending
+    /// index, pooled scratch) are rebuilt on load; everything the machine
+    /// computes from is captured verbatim, including `sched_stamp` so a
+    /// restored machine re-saves byte-identically.
+    pub fn save_state(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        w.u8(match self.mode {
+            ClusterMode::PrivatePair => 0,
+            ClusterMode::Fused => 1,
+            ClusterMode::FusedSplit => 2,
+        });
+        w.usize(self.warps.len());
+        for wp in &self.warps {
+            wp.write_to(w);
+        }
+        w.usize(self.shadows.len());
+        for s in &self.shadows {
+            s.write_to(w);
+        }
+        w.usize(self.ctas.len());
+        for c in &self.ctas {
+            c.write_to(w);
+        }
+        for i in 0..2 {
+            self.l1d[i].save_state(w);
+            self.l1i[i].save_state(w);
+            self.l1c[i].save_state(w);
+            self.l1t[i].save_state(w);
+        }
+        w.usize(self.lsu.len());
+        for t in &self.lsu {
+            w.u64(t.line);
+            w.u8(t.kind as u8);
+            w.bool(t.is_write);
+            write_waiter(w, &t.waiter);
+            w.u8(t.half);
+            w.bool(t.needs_inject);
+        }
+        w.usize(self.pending.len());
+        for p in self.pending.iter() {
+            w.u64(p.key);
+            w.u64(p.line);
+            w.u8(p.kind as u8);
+            w.u8(p.half);
+            w.usize(p.waiters.len());
+            for wt in &p.waiters {
+                write_waiter(w, wt);
+            }
+            w.u64(p.sent);
+            w.bool(p.injected);
+        }
+        for s in &self.sched {
+            w.u64(s.busy_until);
+            write_opt_usize(w, s.greedy);
+            write_opt_usize(w, s.greedy_shadow);
+        }
+        w.u64(self.age_counter);
+        w.u64(self.sched_stamp);
+        self.stats.write_to(w);
+        match self.dead_half {
+            Some(h) => {
+                w.bool(true);
+                w.u8(h);
+            }
+            None => w.bool(false),
+        }
+        w.u64(self.frozen_until);
+        w.u8(match self.divergence_mode {
+            DivergenceMode::Serial => 0,
+            DivergenceMode::Shadowed => 1,
+        });
+        match self.split_policy {
+            Some(SplitPolicy::Direct) => {
+                w.bool(true);
+                w.u8(0);
+            }
+            Some(SplitPolicy::Regroup) => {
+                w.bool(true);
+                w.u8(1);
+            }
+            None => w.bool(false),
+        }
+        w.u32(self.cta_threads);
+        w.u32(self.cta_regs);
+        w.u32(self.cta_smem);
+    }
+
+    /// Inverse of [`SmCluster::save_state`] into a cluster built for the
+    /// same config. Validates every cross-reference (CTA slots, shadow
+    /// parents, waiter indices) so corrupt input errors here instead of
+    /// panicking mid-simulation.
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<()> {
+        use crate::errors::err;
+        let mode = match r.u8()? {
+            0 => ClusterMode::PrivatePair,
+            1 => ClusterMode::Fused,
+            2 => ClusterMode::FusedSplit,
+            t => return Err(err(format!("unknown cluster mode tag {t}"))),
+        };
+        // set_mode rebuilds the cache geometry across the merged/private
+        // boundary; the second cache index always keeps private geometry,
+        // so a fresh cluster reaches the saved shape from any start mode.
+        self.set_mode(mode);
+        let nw = r.seq_len(64)?;
+        self.warps.clear();
+        for _ in 0..nw {
+            self.warps.push(WarpCtx::read_from(r)?);
+        }
+        let ns = r.seq_len(40)?;
+        self.shadows.clear();
+        for _ in 0..ns {
+            self.shadows.push(ShadowWarp::read_from(r)?);
+        }
+        let nc = r.seq_len(21)?;
+        self.ctas.clear();
+        for _ in 0..nc {
+            self.ctas.push(CtaState::read_from(r)?);
+        }
+        for i in 0..2 {
+            self.l1d[i].load_state(r)?;
+            self.l1i[i].load_state(r)?;
+            self.l1c[i].load_state(r)?;
+            self.l1t[i].load_state(r)?;
+        }
+        let nl = r.seq_len(12)?;
+        self.lsu.clear();
+        for _ in 0..nl {
+            let line = r.u64()?;
+            let kind = read_cache_kind(r)?;
+            let is_write = r.bool()?;
+            let waiter = read_waiter(r)?;
+            let half = r.u8()?;
+            let needs_inject = r.bool()?;
+            self.lsu.push_back(Transaction { line, kind, is_write, waiter, half, needs_inject });
+        }
+        let np = r.seq_len(27)?;
+        self.pending.clear();
+        for _ in 0..np {
+            let key = r.u64()?;
+            let line = r.u64()?;
+            let kind = read_cache_kind(r)?;
+            let half = r.u8()?;
+            let nwt = r.seq_len(1)?;
+            let mut waiters = self.pending.waiter_pool.pop().unwrap_or_default();
+            waiters.clear();
+            for _ in 0..nwt {
+                waiters.push(read_waiter(r)?);
+            }
+            let sent = r.u64()?;
+            let injected = r.bool()?;
+            self.pending.index.insert(key, self.pending.entries.len() as u32);
+            self.pending.entries.push(PendingLine { key, line, kind, half, waiters, sent, injected });
+        }
+        for s in self.sched.iter_mut() {
+            s.busy_until = r.u64()?;
+            s.greedy = read_opt_usize(r)?;
+            s.greedy_shadow = read_opt_usize(r)?;
+        }
+        self.age_counter = r.u64()?;
+        let sched_stamp = r.u64()?;
+        self.stats = SmStats::read_from(r)?;
+        self.dead_half = if r.bool()? { Some(r.u8()?) } else { None };
+        self.frozen_until = r.u64()?;
+        self.divergence_mode = match r.u8()? {
+            0 => DivergenceMode::Serial,
+            1 => DivergenceMode::Shadowed,
+            t => return Err(err(format!("unknown divergence mode tag {t}"))),
+        };
+        self.split_policy = if r.bool()? {
+            Some(match r.u8()? {
+                0 => SplitPolicy::Direct,
+                1 => SplitPolicy::Regroup,
+                t => return Err(err(format!("unknown split policy tag {t}"))),
+            })
+        } else {
+            None
+        };
+        self.cta_threads = r.u32()?;
+        self.cta_regs = r.u32()?;
+        self.cta_smem = r.u32()?;
+        // Cross-reference validation: a panic-free contract for corrupt
+        // (but structurally parseable) input.
+        let check_waiter = |wt: &Waiter, nw: usize, ns: usize| -> bool {
+            match *wt {
+                Waiter::Warp(i) | Waiter::IFetchWarp(i) => i < nw,
+                Waiter::Shadow(i) | Waiter::IFetchShadow(i) => i < ns,
+                Waiter::None => true,
+            }
+        };
+        let (nw, ns) = (self.warps.len(), self.shadows.len());
+        for wp in &self.warps {
+            if wp.cta_slot >= self.ctas.len() {
+                return Err(err("checkpoint warp references a missing CTA slot"));
+            }
+        }
+        for s in &self.shadows {
+            if s.parent >= nw {
+                return Err(err("checkpoint shadow references a missing parent warp"));
+            }
+        }
+        for c in &self.ctas {
+            if c.warp_ids.iter().any(|&wi| wi as usize >= nw) {
+                return Err(err("checkpoint CTA references a missing warp"));
+            }
+        }
+        if self.lsu.iter().any(|t| !check_waiter(&t.waiter, nw, ns))
+            || self.pending.iter().any(|p| p.waiters.iter().any(|wt| !check_waiter(wt, nw, ns)))
+        {
+            return Err(err("checkpoint memory waiter references a missing warp/shadow"));
+        }
+        // Rebuild the derived scheduler state, then restore the stamp so a
+        // re-save is byte-identical to the original capture.
+        self.rebuild_sched();
+        self.sched_stamp = sched_stamp;
+        self.stall_cache = [(u64::MAX, StallReason::Idle); 2];
+        Ok(())
+    }
+}
+
+/// Serialize one memory waiter (checkpoint format).
+fn write_waiter(w: &mut crate::sim::snapshot::ByteWriter, wt: &Waiter) {
+    match *wt {
+        Waiter::Warp(i) => {
+            w.u8(0);
+            w.usize(i);
+        }
+        Waiter::Shadow(i) => {
+            w.u8(1);
+            w.usize(i);
+        }
+        Waiter::IFetchWarp(i) => {
+            w.u8(2);
+            w.usize(i);
+        }
+        Waiter::IFetchShadow(i) => {
+            w.u8(3);
+            w.usize(i);
+        }
+        Waiter::None => w.u8(4),
+    }
+}
+
+/// Inverse of [`write_waiter`].
+fn read_waiter(r: &mut crate::sim::snapshot::ByteReader<'_>) -> crate::errors::Result<Waiter> {
+    Ok(match r.u8()? {
+        0 => Waiter::Warp(r.usize()?),
+        1 => Waiter::Shadow(r.usize()?),
+        2 => Waiter::IFetchWarp(r.usize()?),
+        3 => Waiter::IFetchShadow(r.usize()?),
+        4 => Waiter::None,
+        t => return Err(crate::errors::err(format!("unknown waiter tag {t}"))),
+    })
+}
+
+/// Decode a cache-kind tag.
+fn read_cache_kind(
+    r: &mut crate::sim::snapshot::ByteReader<'_>,
+) -> crate::errors::Result<CacheKind> {
+    Ok(match r.u8()? {
+        0 => CacheKind::Data,
+        1 => CacheKind::Instr,
+        2 => CacheKind::Const,
+        3 => CacheKind::Texture,
+        t => return Err(crate::errors::err(format!("unknown cache kind tag {t}"))),
+    })
+}
+
+/// `Option<usize>` as a bool tag + value.
+fn write_opt_usize(w: &mut crate::sim::snapshot::ByteWriter, v: Option<usize>) {
+    match v {
+        Some(x) => {
+            w.bool(true);
+            w.usize(x);
+        }
+        None => w.bool(false),
+    }
+}
+
+/// Inverse of [`write_opt_usize`].
+fn read_opt_usize(
+    r: &mut crate::sim::snapshot::ByteReader<'_>,
+) -> crate::errors::Result<Option<usize>> {
+    Ok(if r.bool()? { Some(r.usize()?) } else { None })
 }
 
 /// Scheduler pick.

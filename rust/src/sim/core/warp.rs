@@ -153,6 +153,93 @@ impl WarpCtx {
             self.finished = true;
         }
     }
+
+    /// Serialize the full context (checkpoint format). Every field is
+    /// architectural or scheduler state; nothing is derived.
+    pub fn write_to(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        w.u32(self.id.kernel);
+        w.u32(self.id.cta);
+        w.u32(self.id.warp);
+        w.u32(self.subwarps[0]);
+        w.u32(self.subwarps[1]);
+        w.u8(self.n_subwarps);
+        w.usize(self.width);
+        w.u32(self.pc);
+        w.u32(self.trace_len);
+        w.u64(self.mask.0);
+        w.u64(self.full_mask.0);
+        w.u32(self.outstanding_loads);
+        w.bool(self.at_barrier);
+        w.bool(self.ifetch_pending);
+        w.bool(self.finished);
+        match self.replay {
+            Some(r) => {
+                w.bool(true);
+                w.u32(r.start_pc);
+                w.u32(r.end_pc);
+                w.u64(r.second_mask.0);
+                w.bool(r.in_second_pass);
+            }
+            None => w.bool(false),
+        }
+        w.bool(self.shadow_outstanding);
+        w.usize(self.cta_slot);
+        w.u64(self.age);
+        w.bool(self.divergent);
+        w.u8(self.home);
+        w.bool(self.sched_ready);
+        w.u8(self.sched_home);
+    }
+
+    /// Inverse of [`WarpCtx::write_to`].
+    pub fn read_from(
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<WarpCtx> {
+        let id = WarpId { kernel: r.u32()?, cta: r.u32()?, warp: r.u32()? };
+        let subwarps = [r.u32()?, r.u32()?];
+        let n_subwarps = r.u8()?;
+        let width = r.usize()?;
+        let pc = r.u32()?;
+        let trace_len = r.u32()?;
+        let mask = ActiveMask(r.u64()?);
+        let full_mask = ActiveMask(r.u64()?);
+        let outstanding_loads = r.u32()?;
+        let at_barrier = r.bool()?;
+        let ifetch_pending = r.bool()?;
+        let finished = r.bool()?;
+        let replay = if r.bool()? {
+            Some(Replay {
+                start_pc: r.u32()?,
+                end_pc: r.u32()?,
+                second_mask: ActiveMask(r.u64()?),
+                in_second_pass: r.bool()?,
+            })
+        } else {
+            None
+        };
+        Ok(WarpCtx {
+            id,
+            subwarps,
+            n_subwarps,
+            width,
+            pc,
+            trace_len,
+            mask,
+            full_mask,
+            outstanding_loads,
+            at_barrier,
+            ifetch_pending,
+            finished,
+            replay,
+            shadow_outstanding: r.bool()?,
+            cta_slot: r.usize()?,
+            age: r.u64()?,
+            divergent: r.bool()?,
+            home: r.u8()?,
+            sched_ready: r.bool()?,
+            sched_home: r.u8()?,
+        })
+    }
 }
 
 /// The slow-path pass of a divergent warp, scheduled independently
@@ -199,6 +286,38 @@ impl ShadowWarp {
         }
         self.done
     }
+
+    /// Serialize the shadow (checkpoint format).
+    pub fn write_to(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        w.usize(self.parent);
+        w.u32(self.cta);
+        w.u32(self.subwarp);
+        w.u32(self.pc);
+        w.u32(self.end_pc);
+        w.u64(self.mask.0);
+        w.usize(self.width);
+        w.u32(self.outstanding_loads);
+        w.bool(self.ifetch_pending);
+        w.bool(self.done);
+    }
+
+    /// Inverse of [`ShadowWarp::write_to`].
+    pub fn read_from(
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<ShadowWarp> {
+        Ok(ShadowWarp {
+            parent: r.usize()?,
+            cta: r.u32()?,
+            subwarp: r.u32()?,
+            pc: r.u32()?,
+            end_pc: r.u32()?,
+            mask: ActiveMask(r.u64()?),
+            width: r.usize()?,
+            outstanding_loads: r.u32()?,
+            ifetch_pending: r.bool()?,
+            done: r.bool()?,
+        })
+    }
 }
 
 /// A CTA resident on a cluster.
@@ -225,6 +344,36 @@ impl CtaState {
     /// All warps retired?
     pub fn complete(&self) -> bool {
         self.warps_done >= self.warps_total
+    }
+
+    /// Serialize the CTA record (checkpoint format).
+    pub fn write_to(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        w.u32(self.cta);
+        w.u32(self.warps_total);
+        w.u32(self.warps_done);
+        w.u32(self.barrier_count);
+        w.u8(self.home);
+        w.usize(self.warp_ids.len());
+        for &wi in &self.warp_ids {
+            w.u32(wi);
+        }
+    }
+
+    /// Inverse of [`CtaState::write_to`].
+    pub fn read_from(
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<CtaState> {
+        let cta = r.u32()?;
+        let warps_total = r.u32()?;
+        let warps_done = r.u32()?;
+        let barrier_count = r.u32()?;
+        let home = r.u8()?;
+        let n = r.seq_len(4)?;
+        let mut warp_ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            warp_ids.push(r.u32()?);
+        }
+        Ok(CtaState { cta, warps_total, warps_done, barrier_count, home, warp_ids })
     }
 }
 

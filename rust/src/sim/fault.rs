@@ -144,6 +144,85 @@ impl FaultTrace {
     }
 }
 
+// ---------------------------------------------------------------------
+// Checkpoint section layout for the fault schedule
+// ---------------------------------------------------------------------
+//
+// The "faults" section of a [`crate::sim::snapshot::Checkpoint`] is
+// `cursor, count, events...`. Both the GPU's state capture and
+// `Checkpoint::strip_pending_faults` (which rewrites the section for
+// tenant migration onto a healthy chip) go through this pair so the
+// layout has exactly one definition.
+
+/// Serialize one fault event.
+fn write_event(w: &mut crate::sim::snapshot::ByteWriter, e: &FaultEvent) {
+    w.u64(e.cycle);
+    match e.kind {
+        FaultKind::HalfSm { cluster, half } => {
+            w.u8(0);
+            w.u32(cluster);
+            w.u8(half);
+        }
+        FaultKind::Cluster { cluster } => {
+            w.u8(1);
+            w.u32(cluster);
+        }
+        FaultKind::NocDegrade { penalty } => {
+            w.u8(2);
+            w.u32(penalty);
+        }
+        FaultKind::McStall { mc, cycles } => {
+            w.u8(3);
+            w.u32(mc);
+            w.u64(cycles);
+        }
+    }
+}
+
+fn read_event(r: &mut crate::sim::snapshot::ByteReader<'_>) -> Result<FaultEvent> {
+    let cycle = r.u64()?;
+    let kind = match r.u8()? {
+        0 => FaultKind::HalfSm { cluster: r.u32()?, half: r.u8()? },
+        1 => FaultKind::Cluster { cluster: r.u32()? },
+        2 => FaultKind::NocDegrade { penalty: r.u32()? },
+        3 => FaultKind::McStall { mc: r.u32()?, cycles: r.u64()? },
+        t => return Err(err(format!("unknown fault kind tag {t}"))),
+    };
+    Ok(FaultEvent { cycle, kind })
+}
+
+/// Write a checkpoint "faults" section: injection cursor + schedule.
+pub fn write_fault_section(
+    w: &mut crate::sim::snapshot::ByteWriter,
+    events: &[FaultEvent],
+    cursor: usize,
+) {
+    w.usize(cursor);
+    w.usize(events.len());
+    for e in events {
+        write_event(w, e);
+    }
+}
+
+/// Parse a checkpoint "faults" section back into (events, cursor).
+pub fn read_fault_section(
+    r: &mut crate::sim::snapshot::ByteReader<'_>,
+) -> Result<(Vec<FaultEvent>, usize)> {
+    let cursor = r.usize()?;
+    let n = r.seq_len(9)?;
+    let mut events = Vec::with_capacity(n);
+    for _ in 0..n {
+        events.push(read_event(r)?);
+    }
+    if cursor > events.len() {
+        return Err(err(format!(
+            "fault cursor {cursor} beyond {} scheduled events",
+            events.len()
+        )));
+    }
+    Ok((events, cursor))
+}
+
 /// splitmix64 step (local copy: `workload::rng` is module-private).
 fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -224,5 +303,24 @@ mod tests {
         assert_eq!(FaultTrace::default(), FaultTrace::new(Vec::new()));
         assert!(FaultTrace::default().is_empty());
         FaultTrace::default().validate(1, 1).unwrap();
+    }
+
+    #[test]
+    fn fault_section_round_trips() {
+        let t = FaultTrace::seeded(0xFA11, 6, 4, 2, 100_000);
+        let mut w = crate::sim::snapshot::ByteWriter::new();
+        write_fault_section(&mut w, &t.events, 3);
+        let bytes = w.into_bytes();
+        let mut r = crate::sim::snapshot::ByteReader::new(&bytes);
+        let (events, cursor) = read_fault_section(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(events, t.events);
+        assert_eq!(cursor, 3);
+        // Truncations error, never panic (count is in the header, so any
+        // shorter prefix is missing event bytes).
+        for cut in 0..bytes.len() {
+            let mut r = crate::sim::snapshot::ByteReader::new(&bytes[..cut]);
+            assert!(read_fault_section(&mut r).is_err(), "prefix {cut}");
+        }
     }
 }

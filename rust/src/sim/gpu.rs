@@ -86,12 +86,13 @@ use crate::sim::fault::{FaultEvent, FaultKind, FaultTrace, RunOutcome};
 use crate::sim::mem::{MemPartition, PartitionReply};
 use crate::sim::noc::{ChipLayout, Noc, Packet, Payload, Subnet};
 use crate::sim::sched::ActiveSet;
+use crate::sim::snapshot::{ByteReader, ByteWriter, Checkpoint};
 use crate::stats::{ChipStats, SmStats};
 use crate::workload::{kernel_launches, BenchProfile, KernelStream, Priority, TraceGen};
 
 /// Cached `AMOEBA_DENSE` escape hatch: any non-empty value other than
 /// `0` forces the dense cycle loop (read once per process).
-fn dense_env() -> bool {
+pub(crate) fn dense_env() -> bool {
     static DENSE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
     *DENSE.get_or_init(|| {
         std::env::var("AMOEBA_DENSE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
@@ -150,6 +151,73 @@ impl SimReport {
         } else {
             self.sm.thread_insns as f64 / self.cycles as f64
         }
+    }
+
+    /// Serialize every field to the checkpoint byte format (the disk memo
+    /// uses this to spill sweep results; round-trips exactly, floats by
+    /// bit pattern).
+    pub fn write_to(&self, w: &mut ByteWriter) {
+        w.str(&self.bench);
+        w.str(&self.scheme.to_string());
+        w.u64(self.cycles);
+        self.sm.write_to(w);
+        self.chip.write_to(w);
+        w.usize(self.decisions.len());
+        for d in &self.decisions {
+            write_decision(w, d);
+        }
+        w.usize(self.phases.len());
+        for p in &self.phases {
+            write_phase_sample(w, p);
+        }
+        w.usize(self.samples.len());
+        for s in &self.samples {
+            s.write_to(w);
+        }
+        w.bool(self.deadline_hit);
+        write_opt_outcome(w, &self.outcome);
+    }
+
+    /// Inverse of [`SimReport::write_to`]. Errors (never panics) on
+    /// truncated or malformed bytes.
+    pub fn read_from(r: &mut ByteReader) -> crate::errors::Result<SimReport> {
+        let bench = r.str()?.to_string();
+        let scheme: Scheme = r
+            .str()?
+            .parse()
+            .map_err(|e| err(format!("report: bad scheme: {e}")))?;
+        let cycles = r.u64()?;
+        let sm = SmStats::read_from(r)?;
+        let chip = ChipStats::read_from(r)?;
+        let n_dec = r.seq_len(10)?;
+        let mut decisions = Vec::with_capacity(n_dec);
+        for _ in 0..n_dec {
+            decisions.push(read_decision(r)?);
+        }
+        let n_ph = r.seq_len(9)?;
+        let mut phases = Vec::with_capacity(n_ph);
+        for _ in 0..n_ph {
+            phases.push(read_phase_sample(r)?);
+        }
+        let n_samp = r.seq_len(80)?;
+        let mut samples = Vec::with_capacity(n_samp);
+        for _ in 0..n_samp {
+            samples.push(MetricsSample::read_from(r)?);
+        }
+        let deadline_hit = r.bool()?;
+        let outcome = read_opt_outcome(r)?;
+        Ok(SimReport {
+            bench,
+            scheme,
+            cycles,
+            sm,
+            chip,
+            decisions,
+            phases,
+            samples,
+            deadline_hit,
+            outcome,
+        })
     }
 }
 
@@ -272,6 +340,99 @@ impl StreamReport {
             t.sm.thread_insns as f64 / residency as f64
         }
     }
+
+    /// Serialize every field to the checkpoint byte format (see
+    /// [`SimReport::write_to`]).
+    pub fn write_to(&self, w: &mut ByteWriter) {
+        w.usize(self.tenants.len());
+        for t in &self.tenants {
+            t.write_to(w);
+        }
+        self.sm.write_to(w);
+        self.chip.write_to(w);
+        w.u64(self.cycles);
+        w.usize(self.phases.len());
+        for p in &self.phases {
+            write_phase_sample(w, p);
+        }
+        w.usize(self.launches.len());
+        for l in &self.launches {
+            write_launch_stat(w, l);
+        }
+        w.usize(self.partitions.len());
+        for part in &self.partitions {
+            w.usize(part.len());
+            for &ci in part {
+                w.usize(ci);
+            }
+        }
+        w.usize(self.ctas_by_cluster.len());
+        for row in &self.ctas_by_cluster {
+            w.usize(row.len());
+            for &c in row {
+                w.u64(c);
+            }
+        }
+        w.bool(self.deadline_hit);
+        write_opt_outcome(w, &self.outcome);
+    }
+
+    /// Inverse of [`StreamReport::write_to`]. Errors (never panics) on
+    /// truncated or malformed bytes.
+    pub fn read_from(r: &mut ByteReader) -> crate::errors::Result<StreamReport> {
+        let n_t = r.seq_len(60)?;
+        let mut tenants = Vec::with_capacity(n_t);
+        for _ in 0..n_t {
+            tenants.push(SimReport::read_from(r)?);
+        }
+        let sm = SmStats::read_from(r)?;
+        let chip = ChipStats::read_from(r)?;
+        let cycles = r.u64()?;
+        let n_ph = r.seq_len(9)?;
+        let mut phases = Vec::with_capacity(n_ph);
+        for _ in 0..n_ph {
+            phases.push(read_phase_sample(r)?);
+        }
+        let n_l = r.seq_len(48)?;
+        let mut launches = Vec::with_capacity(n_l);
+        for _ in 0..n_l {
+            launches.push(read_launch_stat(r)?);
+        }
+        let n_p = r.seq_len(8)?;
+        let mut partitions = Vec::with_capacity(n_p);
+        for _ in 0..n_p {
+            let n_ci = r.seq_len(8)?;
+            let mut part = Vec::with_capacity(n_ci);
+            for _ in 0..n_ci {
+                part.push(r.usize()?);
+            }
+            partitions.push(part);
+        }
+        let n_cbc = r.seq_len(8)?;
+        let mut ctas_by_cluster = Vec::with_capacity(n_cbc);
+        for _ in 0..n_cbc {
+            let n_row = r.seq_len(8)?;
+            let mut row = Vec::with_capacity(n_row);
+            for _ in 0..n_row {
+                row.push(r.u64()?);
+            }
+            ctas_by_cluster.push(row);
+        }
+        let deadline_hit = r.bool()?;
+        let outcome = read_opt_outcome(r)?;
+        Ok(StreamReport {
+            tenants,
+            sm,
+            chip,
+            cycles,
+            phases,
+            launches,
+            partitions,
+            ctas_by_cluster,
+            deadline_hit,
+            outcome,
+        })
+    }
 }
 
 /// Dispatch at most this many CTAs per cycle (kernel-launch engine rate).
@@ -373,6 +534,14 @@ pub struct Gpu {
     /// Watchdog state surfaced on the report.
     deadline_hit: bool,
     outcome: Option<RunOutcome>,
+    /// Armed checkpoint capture: the first main-loop cycle boundary with
+    /// `now >= snap_at` serializes the machine (see [`Gpu::arm_snapshot`]).
+    snap_at: Option<u64>,
+    /// The captured checkpoint, once the armed cycle is reached.
+    snap_buf: Option<Checkpoint>,
+    /// Workload seed of the current run, recorded in checkpoint meta so a
+    /// resume against a different workload instance is rejected.
+    run_seed: u64,
 }
 
 impl Gpu {
@@ -427,6 +596,9 @@ impl Gpu {
             last_reconfig: 0,
             deadline_hit: false,
             outcome: None,
+            snap_at: None,
+            snap_buf: None,
+            run_seed: 0,
         })
     }
 
@@ -436,6 +608,317 @@ impl Gpu {
     /// [`SimReport`]s; the dense loop is the auditing reference.
     pub fn set_dense(&mut self, dense: bool) {
         self.dense = dense;
+    }
+
+    // ------------------------------------------------------------------
+    // Checkpoint / restore
+    // ------------------------------------------------------------------
+
+    /// Arm a checkpoint capture: the first main-loop cycle boundary (in
+    /// [`Gpu::run`] or [`Gpu::run_streams`]) with `now >= cycle` snapshots
+    /// the full machine + loop state, *before* that cycle's fault
+    /// injection and CTA dispatch. Nested drain loops (profiling-complete
+    /// drains, post-fault forced splits) run to completion inside one
+    /// main-loop iteration, so the actual capture cycle can overshoot
+    /// `cycle`; the overshoot is identical in dense and skip mode, which
+    /// is what the restore bit-identity contract needs. Capture is pure
+    /// observation: the armed run's report is bit-identical to an
+    /// unarmed run's.
+    pub fn arm_snapshot(&mut self, cycle: u64) {
+        self.snap_at = Some(cycle);
+        self.snap_buf = None;
+    }
+
+    /// The checkpoint captured by the last armed snapshot (`None` when
+    /// the run completed before reaching the armed cycle).
+    pub fn take_snapshot(&mut self) -> Option<Checkpoint> {
+        self.snap_buf.take()
+    }
+
+    /// Serialize the full machine into the sectioned checkpoint format;
+    /// the caller passes its loop-local state pre-encoded. Must be called
+    /// with every component live and replayed (`wake_everything`) so
+    /// parked-accounting lag never leaks into the bytes — that is what
+    /// makes dense and skip captures byte-identical. Not serialized, and
+    /// rebuilt on load: the active-set scheduler (restored all-active),
+    /// `noc_seen_epoch` (reseeded from the fabric), scratch buffers, and
+    /// every config-derived field.
+    fn save_machine_sections(&mut self, mode_kind: u8, loop_bytes: Vec<u8>) -> Checkpoint {
+        let mut cp = Checkpoint::new();
+
+        let mut w = ByteWriter::new();
+        w.u8(mode_kind);
+        w.str(&self.scheme.to_string());
+        w.u64(self.now);
+        w.usize(self.cfg.num_sms);
+        w.usize(self.cfg.num_mcs);
+        w.u64(self.run_seed);
+        cp.push("meta", w.into_bytes());
+
+        let mut w = ByteWriter::new();
+        w.u64(self.now);
+        self.chip.write_to(&mut w);
+        w.usize(self.reply_retry.len());
+        for q in &self.reply_retry {
+            w.usize(q.len());
+            for rep in q {
+                w.u64(rep.line);
+                w.u64(rep.tag);
+                w.bool(rep.is_write);
+            }
+        }
+        w.usize(self.req_backlog.len());
+        for q in &self.req_backlog {
+            w.usize(q.len());
+            for pkt in q {
+                crate::sim::noc::write_packet(&mut w, pkt);
+            }
+        }
+        w.usize(self.retired.len());
+        for &b in &self.retired {
+            w.bool(b);
+        }
+        for &b in &self.half_faulty {
+            w.bool(b);
+        }
+        w.usize(self.mc_stall_until.len());
+        for &t in &self.mc_stall_until {
+            w.u64(t);
+        }
+        w.u64(self.last_reconfig);
+        w.bool(self.deadline_hit);
+        write_opt_outcome(&mut w, &self.outcome);
+        w.usize(self.phases.len());
+        for p in &self.phases {
+            write_phase_sample(&mut w, p);
+        }
+        w.usize(self.samples.len());
+        for s in &self.samples {
+            s.write_to(&mut w);
+        }
+        w.usize(self.decisions.len());
+        for d in &self.decisions {
+            write_decision(&mut w, d);
+        }
+        cp.push("gpu", w.into_bytes());
+
+        let mut w = ByteWriter::new();
+        self.layout.save_state(&mut w);
+        cp.push("layout", w.into_bytes());
+
+        let mut w = ByteWriter::new();
+        self.noc.save_state(&mut w);
+        cp.push("noc", w.into_bytes());
+
+        for (ci, c) in self.clusters.iter().enumerate() {
+            let mut w = ByteWriter::new();
+            c.save_state(&mut w);
+            cp.push(format!("cluster.{ci}"), w.into_bytes());
+        }
+        for (mc, p) in self.partitions.iter().enumerate() {
+            let mut w = ByteWriter::new();
+            p.save_state(&mut w);
+            cp.push(format!("mc.{mc}"), w.into_bytes());
+        }
+
+        let mut w = ByteWriter::new();
+        w.usize(self.controller.history.len());
+        for d in &self.controller.history {
+            write_decision(&mut w, d);
+        }
+        w.u8(match self.controller.force {
+            Some(false) => 0,
+            Some(true) => 1,
+            None => 2,
+        });
+        cp.push("controller", w.into_bytes());
+
+        let mut w = ByteWriter::new();
+        w.usize(self.dynsplits.len());
+        for ds in &self.dynsplits {
+            ds.save_state(&mut w);
+        }
+        cp.push("dynsplits", w.into_bytes());
+
+        let mut w = ByteWriter::new();
+        crate::sim::fault::write_fault_section(&mut w, &self.fault_events, self.fault_cursor);
+        cp.push("faults", w.into_bytes());
+
+        cp.push("loop", loop_bytes);
+        cp
+    }
+
+    /// Restore a machine serialized by [`Gpu::save_machine_sections`]
+    /// onto this freshly built machine (same config + scheme + seed).
+    /// Returns the opaque loop-state bytes for the caller's resume path.
+    /// Shape is validated everywhere against the receiving machine —
+    /// truncated, corrupt, or foreign input is an error, never a panic.
+    fn load_machine_sections(
+        &mut self,
+        cp: &Checkpoint,
+        mode_kind: u8,
+    ) -> crate::errors::Result<Vec<u8>> {
+        let sect = |name: &str| {
+            cp.section(name)
+                .ok_or_else(|| err(format!("checkpoint missing section '{name}'")))
+        };
+
+        let mut r = ByteReader::new(sect("meta")?);
+        let kind = r.u8()?;
+        if kind != mode_kind {
+            return Err(err(format!(
+                "checkpoint mode {kind} cannot resume into mode {mode_kind}"
+            )));
+        }
+        let scheme_s = r.str()?;
+        if scheme_s != self.scheme.to_string() {
+            return Err(err(format!(
+                "checkpoint scheme '{scheme_s}' != machine scheme '{}'",
+                self.scheme
+            )));
+        }
+        let _cap_cycle = r.u64()?;
+        let num_sms = r.usize()?;
+        let num_mcs = r.usize()?;
+        if num_sms != self.cfg.num_sms || num_mcs != self.cfg.num_mcs {
+            return Err(err(format!(
+                "checkpoint shape ({num_sms} SMs, {num_mcs} MCs) != machine ({}, {})",
+                self.cfg.num_sms, self.cfg.num_mcs
+            )));
+        }
+        let meta_seed = r.u64()?;
+        if meta_seed != self.run_seed {
+            return Err(err(format!(
+                "checkpoint seed {meta_seed} != run seed {}",
+                self.run_seed
+            )));
+        }
+        r.expect_end()?;
+
+        // Layout before NoC: the fabric is rebuilt against the restored
+        // geometry, then overlaid with the serialized router state.
+        let mut r = ByteReader::new(sect("layout")?);
+        let layout = ChipLayout::load(&mut r)?;
+        r.expect_end()?;
+        if layout.fused_flags().len() != self.clusters.len() {
+            return Err(err("checkpoint layout cluster count mismatch"));
+        }
+        self.layout = layout;
+        self.noc = Noc::new(&self.cfg, &self.layout);
+        let mut r = ByteReader::new(sect("noc")?);
+        self.noc.load_state(&mut r)?;
+        r.expect_end()?;
+
+        let nmc = self.partitions.len();
+        let mut r = ByteReader::new(sect("gpu")?);
+        self.now = r.u64()?;
+        self.chip = ChipStats::read_from(&mut r)?;
+        if r.seq_len(8)? != nmc {
+            return Err(err("checkpoint reply_retry MC count mismatch"));
+        }
+        for mc in 0..nmc {
+            self.reply_retry[mc].clear();
+            for _ in 0..r.seq_len(17)? {
+                self.reply_retry[mc].push_back(PartitionReply {
+                    line: r.u64()?,
+                    tag: r.u64()?,
+                    is_write: r.bool()?,
+                });
+            }
+        }
+        if r.seq_len(8)? != nmc {
+            return Err(err("checkpoint req_backlog MC count mismatch"));
+        }
+        for mc in 0..nmc {
+            self.req_backlog[mc].clear();
+            for _ in 0..r.seq_len(30)? {
+                self.req_backlog[mc].push_back(crate::sim::noc::read_packet(&mut r)?);
+            }
+        }
+        if r.seq_len(1)? != self.clusters.len() {
+            return Err(err("checkpoint retired-flag cluster count mismatch"));
+        }
+        for i in 0..self.clusters.len() {
+            self.retired[i] = r.bool()?;
+        }
+        for i in 0..self.clusters.len() {
+            self.half_faulty[i] = r.bool()?;
+        }
+        if r.seq_len(8)? != nmc {
+            return Err(err("checkpoint mc_stall MC count mismatch"));
+        }
+        for t in self.mc_stall_until.iter_mut() {
+            *t = r.u64()?;
+        }
+        self.last_reconfig = r.u64()?;
+        self.deadline_hit = r.bool()?;
+        self.outcome = read_opt_outcome(&mut r)?;
+        self.phases.clear();
+        for _ in 0..r.seq_len(16)? {
+            self.phases.push(read_phase_sample(&mut r)?);
+        }
+        self.samples.clear();
+        for _ in 0..r.seq_len(80)? {
+            self.samples.push(MetricsSample::read_from(&mut r)?);
+        }
+        self.decisions.clear();
+        for _ in 0..r.seq_len(14)? {
+            self.decisions.push(read_decision(&mut r)?);
+        }
+        r.expect_end()?;
+
+        for (ci, c) in self.clusters.iter_mut().enumerate() {
+            let mut r = ByteReader::new(sect(&format!("cluster.{ci}"))?);
+            c.load_state(&mut r)?;
+            r.expect_end()?;
+        }
+        for (mc, p) in self.partitions.iter_mut().enumerate() {
+            let mut r = ByteReader::new(sect(&format!("mc.{mc}"))?);
+            p.load_state(&mut r)?;
+            r.expect_end()?;
+        }
+
+        let mut r = ByteReader::new(sect("controller")?);
+        self.controller.history.clear();
+        for _ in 0..r.seq_len(14)? {
+            self.controller.history.push(read_decision(&mut r)?);
+        }
+        self.controller.force = match r.u8()? {
+            0 => Some(false),
+            1 => Some(true),
+            2 => None,
+            t => return Err(err(format!("unknown controller force tag {t}"))),
+        };
+        r.expect_end()?;
+
+        let mut r = ByteReader::new(sect("dynsplits")?);
+        if r.seq_len(8)? != self.dynsplits.len() {
+            return Err(err("checkpoint dynsplit cluster count mismatch"));
+        }
+        for ds in self.dynsplits.iter_mut() {
+            ds.load_state(&mut r)?;
+        }
+        r.expect_end()?;
+
+        let mut r = ByteReader::new(sect("faults")?);
+        let (events, cursor) = crate::sim::fault::read_fault_section(&mut r)?;
+        r.expect_end()?;
+        self.fault_events = events;
+        self.fault_cursor = cursor;
+
+        // Derived-state rebuilds. The scheduler comes back all-active
+        // (the dense-equivalent state — parking is pure wall-clock
+        // policy, so every component simply re-parks on its next quiet
+        // probe); the fabric's seen-epoch is reseeded so a live fabric
+        // never looks stale.
+        self.sched = ActiveSet::new(self.clusters.len() + nmc + 1);
+        self.noc_seen_epoch = self.noc.inject_epoch();
+        self.reply_scratch.clear();
+        self.wake_scratch.clear();
+        self.snap_at = None;
+        self.snap_buf = None;
+
+        Ok(sect("loop")?.to_vec())
     }
 
     // ------------------------------------------------------------------
@@ -1090,34 +1573,63 @@ impl Gpu {
 
     /// Execute one kernel to completion, including the per-kernel AMOEBA
     /// controller loop: profile -> predict -> reconfigure -> run (Fig 7).
-    fn run_kernel(&mut self, profile: &BenchProfile, kernel: &KernelLaunch) {
+    /// With `resume`, the kernel prologue is skipped and the loop
+    /// continues from the checkpointed loop-local state instead (the
+    /// machine itself was restored by [`Gpu::load_machine_sections`]).
+    fn run_kernel(
+        &mut self,
+        profile: &BenchProfile,
+        kernel: &KernelLaunch,
+        kidx: u32,
+        resume: Option<KernelResume>,
+    ) {
         let gen = TraceGen::new(profile, kernel);
         let gm = GenMap::Single(&gen);
-        let mut next_cta: u32 = 0;
         let total_ctas = kernel.num_ctas;
+        let mut next_cta: u32;
         // CTAs orphaned by a fault, awaiting re-dispatch onto a healthy
         // cluster (conservation: dispatched == retired + requeued).
-        let mut requeue: std::collections::VecDeque<u32> = std::collections::VecDeque::new();
-
-        // -------- Phase 1: profiling window (predictor schemes only).
-        let mut profiling = self.scheme.uses_predictor();
-        let profile_start = self.now;
-        let base_stats = self.aggregate_sm();
-        // Per-cluster baselines for the heterogeneous decision path: each
-        // cluster's window delta is taken against its own counters.
-        let base_per: Vec<SmStats> = if self.scheme.per_cluster() {
-            self.clusters.iter().map(|c| c.stats.clone()).collect()
+        let mut requeue: std::collections::VecDeque<u32>;
+        let mut profiling: bool;
+        let profile_start: u64;
+        let base_stats: SmStats;
+        let base_per: Vec<SmStats>;
+        let deadline: u64;
+        let mut split_check_at: u64;
+        if let Some(res) = resume {
+            next_cta = res.next_cta;
+            requeue = res.requeue;
+            profiling = res.profiling;
+            profile_start = res.profile_start;
+            base_stats = res.base_stats;
+            base_per = res.base_per;
+            deadline = res.deadline;
+            split_check_at = res.split_check_at;
         } else {
-            Vec::new()
-        };
+            next_cta = 0;
+            requeue = std::collections::VecDeque::new();
 
-        // Predictor schemes always profile in the scale-out layout.
-        if profiling && self.layout.any_fused() {
-            self.reconfigure_all(false);
+            // -------- Phase 1: profiling window (predictor schemes only).
+            profiling = self.scheme.uses_predictor();
+            profile_start = self.now;
+            base_stats = self.aggregate_sm();
+            // Per-cluster baselines for the heterogeneous decision path:
+            // each cluster's window delta is taken against its own
+            // counters.
+            base_per = if self.scheme.per_cluster() {
+                self.clusters.iter().map(|c| c.stats.clone()).collect()
+            } else {
+                Vec::new()
+            };
+
+            // Predictor schemes always profile in the scale-out layout.
+            if profiling && self.layout.any_fused() {
+                self.reconfigure_all(false);
+            }
+
+            deadline = self.now + self.cfg.max_cycles.max(1);
+            split_check_at = self.now + self.cfg.split_check_period;
         }
-
-        let deadline = self.now + self.cfg.max_cycles.max(1);
-        let mut split_check_at = self.now + self.cfg.split_check_period;
 
         // While profiling, only a probe wave of CTAs is dispatched (one per
         // cluster — §4.1.1: a CTA tracks its kernel's scaling behaviour);
@@ -1126,6 +1638,29 @@ impl Gpu {
         let probe_cap = self.clusters.len() as u32;
 
         loop {
+            // Armed checkpoint capture — before this cycle's fault
+            // injection and dispatch. Every parked component replays its
+            // lagged accounting first, so dense and skip captures are
+            // byte-identical (parking is pure wall-clock policy).
+            if self.snap_at.is_some_and(|at| self.now >= at) {
+                self.snap_at = None;
+                self.wake_everything(self.now);
+                let mut lw = ByteWriter::new();
+                write_kernel_resume(
+                    &mut lw,
+                    kidx,
+                    next_cta,
+                    &requeue,
+                    profiling,
+                    profile_start,
+                    &base_stats,
+                    &base_per,
+                    deadline,
+                    split_check_at,
+                );
+                self.snap_buf = Some(self.save_machine_sections(MODE_KERNEL, lw.into_bytes()));
+            }
+
             // Fault injection at the cycle boundary, before dispatch
             // (live ticks only: the ff cap below clamps to the next
             // pending event, so due events always land on live ticks).
@@ -1216,6 +1751,10 @@ impl Gpu {
                 // Pending fault events fire on live ticks at the top of
                 // the loop: never skip past one.
                 cap = cap.min(self.next_fault_cycle().saturating_sub(1));
+                // An armed snapshot captures at the loop top: land on it.
+                if let Some(at) = self.snap_at {
+                    cap = cap.min(at.saturating_sub(1));
+                }
                 self.try_fast_forward(cap);
             }
 
@@ -1371,8 +1910,24 @@ impl Gpu {
 
     /// Run a full application (all kernels) and report.
     pub fn run(&mut self, profile: &BenchProfile, seed: u64) -> SimReport {
-        for kernel in kernel_launches(profile, seed) {
-            self.run_kernel(profile, &kernel);
+        self.run_inner(profile, seed, None)
+    }
+
+    /// [`Gpu::run`] with an optional checkpoint resume: kernels before
+    /// the checkpointed one already ran (their effects live in the
+    /// restored machine state) and are skipped; the checkpointed kernel
+    /// continues from its captured loop-local state.
+    fn run_inner(
+        &mut self,
+        profile: &BenchProfile,
+        seed: u64,
+        resume: Option<KernelResume>,
+    ) -> SimReport {
+        self.run_seed = seed;
+        let start_k = resume.as_ref().map_or(0, |r| r.kidx as usize);
+        let mut resume = resume;
+        for (k, kernel) in kernel_launches(profile, seed).iter().enumerate().skip(start_k) {
+            self.run_kernel(profile, kernel, k as u32, resume.take());
         }
         self.fold_chip();
         SimReport {
@@ -1464,6 +2019,19 @@ impl Gpu {
         streams: &[KernelStream],
         policy: PartitionPolicy,
     ) -> crate::errors::Result<StreamReport> {
+        self.run_streams_inner(streams, policy, None)
+    }
+
+    /// [`Gpu::run_streams`] with an optional checkpoint resume: the
+    /// time-zero machine build is skipped (the machine was restored by
+    /// [`Gpu::load_machine_sections`]) and the serving loop continues
+    /// from the checkpointed loop-local state.
+    fn run_streams_inner(
+        &mut self,
+        streams: &[KernelStream],
+        policy: PartitionPolicy,
+        resume: Option<StreamResume>,
+    ) -> crate::errors::Result<StreamReport> {
         let n_clusters = self.clusters.len();
         let n = streams.len();
         if n == 0 {
@@ -1472,14 +2040,17 @@ impl Gpu {
         if n > n_clusters {
             return Err(err(format!("more tenants ({n}) than clusters ({n_clusters})")));
         }
-        assert_eq!(self.now, 0, "run_streams needs a fresh machine");
+        if resume.is_none() {
+            assert_eq!(self.now, 0, "run_streams needs a fresh machine");
+        }
         for s in streams {
             s.validate().map_err(|e| err(format!("invalid kernel stream: {e}")))?;
         }
 
-        // Initial spatial partition: contiguous near-even blocks, and the
-        // time-zero machine build (no reconfiguration cost — this is how
-        // the chip comes up, like `Gpu::new`'s scheme-dependent mode).
+        // Initial spatial partition: contiguous near-even blocks. This is
+        // also the report's `partitions` ledger — a pure function of the
+        // tenant/cluster counts, so a resumed run recomputes it (the
+        // *live* ownership vector is checkpointed separately).
         let mut owner = vec![0usize; n_clusters];
         let mut partitions: Vec<Vec<usize>> = Vec::with_capacity(n);
         for ti in 0..n {
@@ -1489,54 +2060,10 @@ impl Gpu {
             }
             partitions.push(part);
         }
-        let fused0: Vec<bool> =
-            (0..n_clusters).map(|ci| streams[owner[ci]].scheme == Scheme::ScaleUp).collect();
-        for (ci, c) in self.clusters.iter_mut().enumerate() {
-            let mode = if fused0[ci] { ClusterMode::Fused } else { ClusterMode::PrivatePair };
-            if c.mode() != mode {
-                c.set_mode(mode);
-            }
-            c.divergence_mode = if streams[owner[ci]].scheme == Scheme::Dws {
-                DivergenceMode::Shadowed
-            } else {
-                DivergenceMode::Serial
-            };
-            c.split_policy = None;
-        }
-        self.layout = ChipLayout::new(fused0, self.cfg.num_mcs);
-        self.noc = Noc::new(&self.cfg, &self.layout);
 
-        let mut tenants: Vec<TenantRun> = (0..n)
-            .map(|ti| TenantRun {
-                scheme: streams[ti].scheme,
-                partition: partitions[ti].clone(),
-                kidx: 0,
-                phase: TPhase::Waiting,
-                next_cta: 0,
-                profile_start: 0,
-                base_per: Vec::new(),
-                base_agg: SmStats::default(),
-                split_check_at: 0,
-                sm_acc: SmStats::default(),
-                sm_base: partitions[ti]
-                    .iter()
-                    .map(|&ci| self.clusters[ci].stats.clone())
-                    .collect(),
-                chip: ChipStats::default(),
-                decisions: Vec::new(),
-                samples: Vec::new(),
-                finish: 0,
-                deadline_hit: false,
-            })
-            .collect();
-
-        // Current kernel's trace generator per tenant. Initialised to
-        // kernel 0's (unused before the launch starts: the clusters are
-        // empty, so nothing resolves through it).
-        let mut gens: Vec<TraceGen> =
-            streams.iter().map(|s| TraceGen::new(&s.profile, &s.launches[0].kernel)).collect();
-
-        // Per-launch service records, grouped by tenant in stream order.
+        // Per-launch service records, grouped by tenant in stream order
+        // (the skeleton is a pure function of the streams; a resume
+        // overwrites it wholesale with the checkpointed records).
         let mut launch_base = vec![0usize; n];
         let mut launches: Vec<LaunchStat> = Vec::new();
         for (ti, s) in streams.iter().enumerate() {
@@ -1559,16 +2086,124 @@ impl Gpu {
         let deadline =
             last_arrival + self.cfg.max_cycles.max(1).saturating_mul(total_kernels.max(1));
 
-        let mut ctas_by_cluster = vec![vec![0u64; n_clusters]; n];
-        let mut phases: Vec<PhaseSample> = Vec::new();
+        let mut tenants: Vec<TenantRun>;
+        let mut gen_kidx: Vec<usize>;
+        let mut ctas_by_cluster: Vec<Vec<u64>>;
+        let mut phases: Vec<PhaseSample>;
         // Clusters released by finished tenants (Adaptive policy only).
-        let mut free_pool: Vec<usize> = Vec::new();
+        let mut free_pool: Vec<usize>;
         // Per-tenant queues of CTAs orphaned by faults, awaiting
         // re-dispatch onto a healthy owned cluster.
-        let mut requeues: Vec<std::collections::VecDeque<u32>> =
-            vec![std::collections::VecDeque::new(); n];
+        let mut requeues: Vec<std::collections::VecDeque<u32>>;
+        if let Some(res) = resume {
+            if res.tenants.len() != n
+                || res.owner.len() != n_clusters
+                || res.gen_kidx.len() != n
+                || res.requeues.len() != n
+                || res.ctas_by_cluster.len() != n
+                || res.ctas_by_cluster.iter().any(|v| v.len() != n_clusters)
+                || res.launches.len() != launches.len()
+            {
+                return Err(err("stream checkpoint shape does not match the streams"));
+            }
+            if res.gen_kidx.iter().zip(streams).any(|(&k, s)| k >= s.launches.len())
+                || res.tenants.iter().zip(streams).any(|(t, s)| t.kidx > s.launches.len())
+            {
+                return Err(err("stream checkpoint kernel index out of range"));
+            }
+            owner = res.owner;
+            tenants = res.tenants;
+            gen_kidx = res.gen_kidx;
+            launches = res.launches;
+            ctas_by_cluster = res.ctas_by_cluster;
+            phases = res.phases;
+            free_pool = res.free_pool;
+            requeues = res.requeues;
+        } else {
+            // Time-zero machine build (no reconfiguration cost — this is
+            // how the chip comes up, like `Gpu::new`'s scheme-dependent
+            // mode).
+            let fused0: Vec<bool> =
+                (0..n_clusters).map(|ci| streams[owner[ci]].scheme == Scheme::ScaleUp).collect();
+            for (ci, c) in self.clusters.iter_mut().enumerate() {
+                let mode = if fused0[ci] { ClusterMode::Fused } else { ClusterMode::PrivatePair };
+                if c.mode() != mode {
+                    c.set_mode(mode);
+                }
+                c.divergence_mode = if streams[owner[ci]].scheme == Scheme::Dws {
+                    DivergenceMode::Shadowed
+                } else {
+                    DivergenceMode::Serial
+                };
+                c.split_policy = None;
+            }
+            self.layout = ChipLayout::new(fused0, self.cfg.num_mcs);
+            self.noc = Noc::new(&self.cfg, &self.layout);
+
+            tenants = (0..n)
+                .map(|ti| TenantRun {
+                    scheme: streams[ti].scheme,
+                    partition: partitions[ti].clone(),
+                    kidx: 0,
+                    phase: TPhase::Waiting,
+                    next_cta: 0,
+                    profile_start: 0,
+                    base_per: Vec::new(),
+                    base_agg: SmStats::default(),
+                    split_check_at: 0,
+                    sm_acc: SmStats::default(),
+                    sm_base: partitions[ti]
+                        .iter()
+                        .map(|&ci| self.clusters[ci].stats.clone())
+                        .collect(),
+                    chip: ChipStats::default(),
+                    decisions: Vec::new(),
+                    samples: Vec::new(),
+                    finish: 0,
+                    deadline_hit: false,
+                })
+                .collect();
+            gen_kidx = vec![0; n];
+            ctas_by_cluster = vec![vec![0u64; n_clusters]; n];
+            phases = Vec::new();
+            free_pool = Vec::new();
+            requeues = vec![std::collections::VecDeque::new(); n];
+        }
+
+        // Current kernel's trace generator per tenant; `gen_kidx` names
+        // the launch each generator was built from (initially kernel 0's
+        // — unused before the launch starts: the clusters are empty, so
+        // nothing resolves through it). Tracked separately from
+        // `TenantRun::kidx`, which advances at kernel *completion*, ahead
+        // of the next launch's generator rebuild.
+        let mut gens: Vec<TraceGen> = streams
+            .iter()
+            .zip(&gen_kidx)
+            .map(|(s, &k)| TraceGen::new(&s.profile, &s.launches[k].kernel))
+            .collect();
 
         loop {
+            // Armed checkpoint capture — before this cycle's fault
+            // injection and dispatch, with every parked component's
+            // lagged accounting replayed (see the run_kernel hook).
+            if self.snap_at.is_some_and(|at| self.now >= at) {
+                self.snap_at = None;
+                self.wake_everything(self.now);
+                let mut lw = ByteWriter::new();
+                write_stream_resume(
+                    &mut lw,
+                    &tenants,
+                    &owner,
+                    &gen_kidx,
+                    &launches,
+                    &ctas_by_cluster,
+                    &phases,
+                    &free_pool,
+                    &requeues,
+                );
+                self.snap_buf = Some(self.save_machine_sections(MODE_STREAM, lw.into_bytes()));
+            }
+
             // ---- Fault injection at the cycle boundary (live ticks
             // only; the ff cap clamps to the next pending event).
             // Orphaned CTAs requeue to the cluster's owning tenant; a
@@ -1716,6 +2351,10 @@ impl Gpu {
                     // Pending fault events fire on live ticks at the top
                     // of the loop: never skip past one.
                     cap = cap.min(self.next_fault_cycle().saturating_sub(1));
+                    // An armed snapshot captures at the loop top: land on it.
+                    if let Some(at) = self.snap_at {
+                        cap = cap.min(at.saturating_sub(1));
+                    }
                     self.try_fast_forward(cap);
                 }
             }
@@ -1972,6 +2611,7 @@ impl Gpu {
                         &streams[ti].profile,
                         &streams[ti].launches[tenants[ti].kidx].kernel,
                     );
+                    gen_kidx[ti] = tenants[ti].kidx;
                     // Every kernel re-arms split policies after its own
                     // decision; clear leftovers from the previous kernel.
                     // (Kernel start also opens profiling baselines that
@@ -2235,6 +2875,56 @@ pub fn run_benchmark_faulted_dense(
     Ok(gpu.run(profile, seed))
 }
 
+/// [`run_benchmark_seeded_dense`] with a checkpoint armed at `snap_cycle`:
+/// the first main-loop cycle boundary at or past it serializes the whole
+/// machine (pre-injection, pre-dispatch). Returns the finished report and
+/// the captured checkpoint — `None` if the run ended before the armed
+/// cycle (arm at `u64::MAX` for a deliberately capture-free run).
+pub fn run_benchmark_snapshot(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+    dense: bool,
+    snap_cycle: u64,
+    faults: Option<&FaultTrace>,
+) -> crate::errors::Result<(SimReport, Option<Checkpoint>)> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, scheme, controller)?;
+    gpu.set_dense(dense);
+    if let Some(f) = faults {
+        gpu.set_fault_trace(f)?;
+    }
+    gpu.arm_snapshot(snap_cycle);
+    let report = gpu.run(profile, seed);
+    let cp = gpu.take_snapshot();
+    Ok((report, cp))
+}
+
+/// Restore a [`run_benchmark_snapshot`] checkpoint onto a fresh machine
+/// and run it to completion. With the same config/profile/scheme/seed the
+/// report is bit-identical to the uninterrupted run, in either execution
+/// mode (`tests/exec_determinism.rs` enforces this). The fault trace —
+/// including the already-fired prefix — rides inside the checkpoint.
+pub fn run_benchmark_resume(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+    dense: bool,
+    cp: &Checkpoint,
+) -> crate::errors::Result<SimReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, scheme, controller)?;
+    gpu.set_dense(dense);
+    gpu.run_seed = seed;
+    let loop_bytes = gpu.load_machine_sections(cp, MODE_KERNEL)?;
+    let mut r = ByteReader::new(&loop_bytes);
+    let resume = read_kernel_resume(&mut r)?;
+    r.expect_end()?;
+    Ok(gpu.run_inner(profile, seed, Some(resume)))
+}
+
 /// Execution phase of one tenant in [`Gpu::run_streams`].
 enum TPhase {
     /// Waiting for the next launch's arrival.
@@ -2287,6 +2977,469 @@ struct TenantRun {
     finish: u64,
     /// True when the chip deadline truncated this tenant mid-stream.
     deadline_hit: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint serialization of loop-local state
+// ---------------------------------------------------------------------------
+
+/// Checkpoint `meta` mode tag: single-benchmark run ([`Gpu::run`]).
+const MODE_KERNEL: u8 = 0;
+/// Checkpoint `meta` mode tag: serving run ([`Gpu::run_streams`]).
+const MODE_STREAM: u8 = 1;
+
+/// `ClusterMode` wire tags, shared with the per-cluster sections (see
+/// `SmCluster::save_state`): 0 = PrivatePair, 1 = Fused, 2 = FusedSplit.
+fn mode_tag(m: ClusterMode) -> u8 {
+    match m {
+        ClusterMode::PrivatePair => 0,
+        ClusterMode::Fused => 1,
+        ClusterMode::FusedSplit => 2,
+    }
+}
+
+fn mode_from_tag(t: u8) -> crate::errors::Result<ClusterMode> {
+    match t {
+        0 => Ok(ClusterMode::PrivatePair),
+        1 => Ok(ClusterMode::Fused),
+        2 => Ok(ClusterMode::FusedSplit),
+        _ => Err(err(format!("checkpoint: unknown cluster mode tag {t}"))),
+    }
+}
+
+fn write_decision(w: &mut ByteWriter, d: &KernelDecision) {
+    w.f64(d.probability);
+    w.bool(d.scale_up);
+    match d.cluster {
+        Some(c) => {
+            w.bool(true);
+            w.u32(c);
+        }
+        None => w.bool(false),
+    }
+}
+
+fn read_decision(r: &mut ByteReader) -> crate::errors::Result<KernelDecision> {
+    let probability = r.f64()?;
+    let scale_up = r.bool()?;
+    let cluster = if r.bool()? { Some(r.u32()?) } else { None };
+    Ok(KernelDecision { probability, scale_up, cluster })
+}
+
+fn write_phase_sample(w: &mut ByteWriter, s: &PhaseSample) {
+    w.u64(s.cycle);
+    w.usize(s.modes.len());
+    for &m in &s.modes {
+        w.u8(mode_tag(m));
+    }
+}
+
+fn read_phase_sample(r: &mut ByteReader) -> crate::errors::Result<PhaseSample> {
+    let cycle = r.u64()?;
+    let n = r.seq_len(1)?;
+    let mut modes = Vec::with_capacity(n);
+    for _ in 0..n {
+        modes.push(mode_from_tag(r.u8()?)?);
+    }
+    Ok(PhaseSample { cycle, modes })
+}
+
+fn write_opt_outcome(w: &mut ByteWriter, o: &Option<RunOutcome>) {
+    match o {
+        Some(o) => {
+            w.bool(true);
+            w.bool(o.deadline_hit);
+            w.bool(o.deadlock);
+            w.str(&o.dump);
+        }
+        None => w.bool(false),
+    }
+}
+
+fn read_opt_outcome(r: &mut ByteReader) -> crate::errors::Result<Option<RunOutcome>> {
+    if !r.bool()? {
+        return Ok(None);
+    }
+    let deadline_hit = r.bool()?;
+    let deadlock = r.bool()?;
+    let dump = r.str()?.to_string();
+    Ok(Some(RunOutcome { deadline_hit, deadlock, dump }))
+}
+
+fn write_launch_stat(w: &mut ByteWriter, l: &LaunchStat) {
+    w.u32(l.tenant);
+    w.u32(l.kernel);
+    w.u64(l.arrival);
+    w.u64(l.start);
+    w.u64(l.finish);
+    w.u64(l.queue_delay);
+    w.u64(l.slowdown_milli);
+}
+
+fn read_launch_stat(r: &mut ByteReader) -> crate::errors::Result<LaunchStat> {
+    Ok(LaunchStat {
+        tenant: r.u32()?,
+        kernel: r.u32()?,
+        arrival: r.u64()?,
+        start: r.u64()?,
+        finish: r.u64()?,
+        queue_delay: r.u64()?,
+        slowdown_milli: r.u64()?,
+    })
+}
+
+fn write_bools(w: &mut ByteWriter, bs: &[bool]) {
+    w.usize(bs.len());
+    for &b in bs {
+        w.bool(b);
+    }
+}
+
+fn read_bools(r: &mut ByteReader) -> crate::errors::Result<Vec<bool>> {
+    let n = r.seq_len(1)?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(r.bool()?);
+    }
+    Ok(v)
+}
+
+fn write_tphase(w: &mut ByteWriter, p: &TPhase) {
+    match p {
+        TPhase::Waiting => w.u8(0),
+        TPhase::Profiling => w.u8(1),
+        TPhase::Drain { target, then_profile } => {
+            w.u8(2);
+            write_bools(w, target);
+            w.bool(*then_profile);
+        }
+        TPhase::Quiesce { target, then_profile } => {
+            w.u8(3);
+            write_bools(w, target);
+            w.bool(*then_profile);
+        }
+        TPhase::Running => w.u8(4),
+        TPhase::Done => w.u8(5),
+    }
+}
+
+fn read_tphase(r: &mut ByteReader) -> crate::errors::Result<TPhase> {
+    match r.u8()? {
+        0 => Ok(TPhase::Waiting),
+        1 => Ok(TPhase::Profiling),
+        2 => {
+            let target = read_bools(r)?;
+            let then_profile = r.bool()?;
+            Ok(TPhase::Drain { target, then_profile })
+        }
+        3 => {
+            let target = read_bools(r)?;
+            let then_profile = r.bool()?;
+            Ok(TPhase::Quiesce { target, then_profile })
+        }
+        4 => Ok(TPhase::Running),
+        5 => Ok(TPhase::Done),
+        t => Err(err(format!("checkpoint: unknown tenant phase tag {t}"))),
+    }
+}
+
+fn write_tenant(w: &mut ByteWriter, t: &TenantRun) {
+    w.str(&t.scheme.to_string());
+    w.usize(t.partition.len());
+    for &ci in &t.partition {
+        w.usize(ci);
+    }
+    w.usize(t.kidx);
+    write_tphase(w, &t.phase);
+    w.u32(t.next_cta);
+    w.u64(t.profile_start);
+    w.usize(t.base_per.len());
+    for s in &t.base_per {
+        s.write_to(w);
+    }
+    t.base_agg.write_to(w);
+    w.u64(t.split_check_at);
+    t.sm_acc.write_to(w);
+    w.usize(t.sm_base.len());
+    for s in &t.sm_base {
+        s.write_to(w);
+    }
+    t.chip.write_to(w);
+    w.usize(t.decisions.len());
+    for d in &t.decisions {
+        write_decision(w, d);
+    }
+    w.usize(t.samples.len());
+    for s in &t.samples {
+        s.write_to(w);
+    }
+    w.u64(t.finish);
+    w.bool(t.deadline_hit);
+}
+
+fn read_tenant(r: &mut ByteReader) -> crate::errors::Result<TenantRun> {
+    let scheme: Scheme = r
+        .str()?
+        .parse()
+        .map_err(|e| err(format!("checkpoint: bad tenant scheme: {e}")))?;
+    let n_part = r.seq_len(8)?;
+    let mut partition = Vec::with_capacity(n_part);
+    for _ in 0..n_part {
+        partition.push(r.usize()?);
+    }
+    let kidx = r.usize()?;
+    let phase = read_tphase(r)?;
+    let next_cta = r.u32()?;
+    let profile_start = r.u64()?;
+    let n_bp = r.seq_len(8)?;
+    let mut base_per = Vec::with_capacity(n_bp);
+    for _ in 0..n_bp {
+        base_per.push(SmStats::read_from(r)?);
+    }
+    let base_agg = SmStats::read_from(r)?;
+    let split_check_at = r.u64()?;
+    let sm_acc = SmStats::read_from(r)?;
+    let n_sb = r.seq_len(8)?;
+    let mut sm_base = Vec::with_capacity(n_sb);
+    for _ in 0..n_sb {
+        sm_base.push(SmStats::read_from(r)?);
+    }
+    let chip = ChipStats::read_from(r)?;
+    let n_dec = r.seq_len(10)?;
+    let mut decisions = Vec::with_capacity(n_dec);
+    for _ in 0..n_dec {
+        decisions.push(read_decision(r)?);
+    }
+    let n_samp = r.seq_len(80)?;
+    let mut samples = Vec::with_capacity(n_samp);
+    for _ in 0..n_samp {
+        samples.push(MetricsSample::read_from(r)?);
+    }
+    let finish = r.u64()?;
+    let deadline_hit = r.bool()?;
+    Ok(TenantRun {
+        scheme,
+        partition,
+        kidx,
+        phase,
+        next_cta,
+        profile_start,
+        base_per,
+        base_agg,
+        split_check_at,
+        sm_acc,
+        sm_base,
+        chip,
+        decisions,
+        samples,
+        finish,
+        deadline_hit,
+    })
+}
+
+/// Loop-local state of [`Gpu::run_kernel`] at the capture cycle — the
+/// `loop` section payload for a `MODE_KERNEL` checkpoint.
+struct KernelResume {
+    kidx: u32,
+    next_cta: u32,
+    requeue: std::collections::VecDeque<u32>,
+    profiling: bool,
+    profile_start: u64,
+    base_stats: SmStats,
+    base_per: Vec<SmStats>,
+    deadline: u64,
+    split_check_at: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_kernel_resume(
+    w: &mut ByteWriter,
+    kidx: u32,
+    next_cta: u32,
+    requeue: &std::collections::VecDeque<u32>,
+    profiling: bool,
+    profile_start: u64,
+    base_stats: &SmStats,
+    base_per: &[SmStats],
+    deadline: u64,
+    split_check_at: u64,
+) {
+    w.u32(kidx);
+    w.u32(next_cta);
+    w.usize(requeue.len());
+    for &c in requeue {
+        w.u32(c);
+    }
+    w.bool(profiling);
+    w.u64(profile_start);
+    base_stats.write_to(w);
+    w.usize(base_per.len());
+    for s in base_per {
+        s.write_to(w);
+    }
+    w.u64(deadline);
+    w.u64(split_check_at);
+}
+
+fn read_kernel_resume(r: &mut ByteReader) -> crate::errors::Result<KernelResume> {
+    let kidx = r.u32()?;
+    let next_cta = r.u32()?;
+    let n_rq = r.seq_len(4)?;
+    let mut requeue = std::collections::VecDeque::with_capacity(n_rq);
+    for _ in 0..n_rq {
+        requeue.push_back(r.u32()?);
+    }
+    let profiling = r.bool()?;
+    let profile_start = r.u64()?;
+    let base_stats = SmStats::read_from(r)?;
+    let n_bp = r.seq_len(8)?;
+    let mut base_per = Vec::with_capacity(n_bp);
+    for _ in 0..n_bp {
+        base_per.push(SmStats::read_from(r)?);
+    }
+    let deadline = r.u64()?;
+    let split_check_at = r.u64()?;
+    Ok(KernelResume {
+        kidx,
+        next_cta,
+        requeue,
+        profiling,
+        profile_start,
+        base_stats,
+        base_per,
+        deadline,
+        split_check_at,
+    })
+}
+
+/// Loop-local state of [`Gpu::run_streams`] at the capture cycle — the
+/// `loop` section payload for a `MODE_STREAM` checkpoint. The launch
+/// skeleton, partition ledger, and deadline are *not* captured: they are
+/// pure functions of the streams and are recomputed on resume.
+struct StreamResume {
+    tenants: Vec<TenantRun>,
+    owner: Vec<usize>,
+    gen_kidx: Vec<usize>,
+    launches: Vec<LaunchStat>,
+    ctas_by_cluster: Vec<Vec<u64>>,
+    phases: Vec<PhaseSample>,
+    free_pool: Vec<usize>,
+    requeues: Vec<std::collections::VecDeque<u32>>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_stream_resume(
+    w: &mut ByteWriter,
+    tenants: &[TenantRun],
+    owner: &[usize],
+    gen_kidx: &[usize],
+    launches: &[LaunchStat],
+    ctas_by_cluster: &[Vec<u64>],
+    phases: &[PhaseSample],
+    free_pool: &[usize],
+    requeues: &[std::collections::VecDeque<u32>],
+) {
+    w.usize(tenants.len());
+    for t in tenants {
+        write_tenant(w, t);
+    }
+    w.usize(owner.len());
+    for &o in owner {
+        w.usize(o);
+    }
+    w.usize(gen_kidx.len());
+    for &k in gen_kidx {
+        w.usize(k);
+    }
+    w.usize(launches.len());
+    for l in launches {
+        write_launch_stat(w, l);
+    }
+    w.usize(ctas_by_cluster.len());
+    for row in ctas_by_cluster {
+        w.usize(row.len());
+        for &c in row {
+            w.u64(c);
+        }
+    }
+    w.usize(phases.len());
+    for p in phases {
+        write_phase_sample(w, p);
+    }
+    w.usize(free_pool.len());
+    for &ci in free_pool {
+        w.usize(ci);
+    }
+    w.usize(requeues.len());
+    for q in requeues {
+        w.usize(q.len());
+        for &c in q {
+            w.u32(c);
+        }
+    }
+}
+
+fn read_stream_resume(r: &mut ByteReader) -> crate::errors::Result<StreamResume> {
+    let n_t = r.seq_len(60)?;
+    let mut tenants = Vec::with_capacity(n_t);
+    for _ in 0..n_t {
+        tenants.push(read_tenant(r)?);
+    }
+    let n_own = r.seq_len(8)?;
+    let mut owner = Vec::with_capacity(n_own);
+    for _ in 0..n_own {
+        owner.push(r.usize()?);
+    }
+    let n_gk = r.seq_len(8)?;
+    let mut gen_kidx = Vec::with_capacity(n_gk);
+    for _ in 0..n_gk {
+        gen_kidx.push(r.usize()?);
+    }
+    let n_l = r.seq_len(48)?;
+    let mut launches = Vec::with_capacity(n_l);
+    for _ in 0..n_l {
+        launches.push(read_launch_stat(r)?);
+    }
+    let n_cbc = r.seq_len(8)?;
+    let mut ctas_by_cluster = Vec::with_capacity(n_cbc);
+    for _ in 0..n_cbc {
+        let n_row = r.seq_len(8)?;
+        let mut row = Vec::with_capacity(n_row);
+        for _ in 0..n_row {
+            row.push(r.u64()?);
+        }
+        ctas_by_cluster.push(row);
+    }
+    let n_ph = r.seq_len(9)?;
+    let mut phases = Vec::with_capacity(n_ph);
+    for _ in 0..n_ph {
+        phases.push(read_phase_sample(r)?);
+    }
+    let n_fp = r.seq_len(8)?;
+    let mut free_pool = Vec::with_capacity(n_fp);
+    for _ in 0..n_fp {
+        free_pool.push(r.usize()?);
+    }
+    let n_rq = r.seq_len(8)?;
+    let mut requeues = Vec::with_capacity(n_rq);
+    for _ in 0..n_rq {
+        let n_q = r.seq_len(4)?;
+        let mut q = std::collections::VecDeque::with_capacity(n_q);
+        for _ in 0..n_q {
+            q.push_back(r.u32()?);
+        }
+        requeues.push(q);
+    }
+    Ok(StreamResume {
+        tenants,
+        owner,
+        gen_kidx,
+        launches,
+        ctas_by_cluster,
+        phases,
+        free_pool,
+        requeues,
+    })
 }
 
 /// Serve `streams` on a fresh machine with the default (native-predictor)
@@ -2346,6 +3499,52 @@ pub fn serve_streams_faulted_dense(
     gpu.set_dense(dense);
     gpu.set_fault_trace(faults)?;
     gpu.run_streams(streams, policy)
+}
+
+/// [`serve_streams_faulted_dense`] with a checkpoint armed at
+/// `snap_cycle` (see [`run_benchmark_snapshot`] for the capture
+/// contract). `None` fault trace serves clean.
+pub fn serve_streams_snapshot(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    policy: PartitionPolicy,
+    dense: bool,
+    snap_cycle: u64,
+    faults: Option<&FaultTrace>,
+) -> crate::errors::Result<(StreamReport, Option<Checkpoint>)> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller)?;
+    gpu.set_dense(dense);
+    if let Some(f) = faults {
+        gpu.set_fault_trace(f)?;
+    }
+    gpu.arm_snapshot(snap_cycle);
+    let report = gpu.run_streams(streams, policy)?;
+    let cp = gpu.take_snapshot();
+    Ok((report, cp))
+}
+
+/// Restore a [`serve_streams_snapshot`] checkpoint onto a fresh machine
+/// and serve to completion — bit-identical to the uninterrupted run with
+/// the same config/streams/policy, in either execution mode. The streams
+/// passed here need not byte-match the capture-side streams beyond shape
+/// (tenant count, launch counts, cluster count): this is what live tenant
+/// migration exploits to replay in-flight work onto a healthy machine.
+pub fn serve_streams_resume(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    policy: PartitionPolicy,
+    dense: bool,
+    cp: &Checkpoint,
+) -> crate::errors::Result<StreamReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller)?;
+    gpu.set_dense(dense);
+    let loop_bytes = gpu.load_machine_sections(cp, MODE_STREAM)?;
+    let mut r = ByteReader::new(&loop_bytes);
+    let resume = read_stream_resume(&mut r)?;
+    r.expect_end()?;
+    gpu.run_streams_inner(streams, policy, Some(resume))
 }
 
 /// Simulate with a caller-supplied controller (e.g. the PJRT-HLO-backed

@@ -237,6 +237,66 @@ impl Cache {
         self.stamps.fill(0);
         self.mshrs.clear();
     }
+
+    // ------------------------------------------------------------------
+    // Checkpoint (sim::snapshot)
+    // ------------------------------------------------------------------
+
+    /// Serialize the mutable state: tags, LRU stamps, clock, MSHRs.
+    /// Geometry (sets/assoc/latency/capacity) is config-derived and is
+    /// rebuilt by the owning component's constructor, then validated on
+    /// load.
+    pub fn save_state(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        w.usize(self.tags.len());
+        for &t in &self.tags {
+            w.u64(t);
+        }
+        for &s in &self.stamps {
+            w.u64(s);
+        }
+        w.u64(self.clock);
+        w.usize(self.mshrs.len());
+        for m in &self.mshrs {
+            w.u64(m.line);
+            w.u32(m.merged);
+        }
+    }
+
+    /// Restore state saved by [`Cache::save_state`] into a cache of the
+    /// same geometry. A way-count mismatch means the checkpoint was taken
+    /// on a differently-configured machine: error, never a partial load.
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<()> {
+        use crate::errors::err;
+        let n = r.usize()?;
+        if n != self.tags.len() {
+            return Err(err(format!(
+                "cache geometry mismatch: checkpoint has {n} ways, machine has {}",
+                self.tags.len()
+            )));
+        }
+        for t in &mut self.tags {
+            *t = r.u64()?;
+        }
+        for s in &mut self.stamps {
+            *s = r.u64()?;
+        }
+        self.clock = r.u64()?;
+        let m = r.seq_len(12)?;
+        if m > self.mshr_capacity {
+            return Err(err(format!(
+                "checkpoint holds {m} MSHRs, machine capacity is {}",
+                self.mshr_capacity
+            )));
+        }
+        self.mshrs.clear();
+        for _ in 0..m {
+            self.mshrs.push(Mshr { line: r.u64()?, merged: r.u32()? });
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

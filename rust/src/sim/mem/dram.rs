@@ -209,6 +209,104 @@ impl MemoryController {
     pub fn has_reply(&self) -> bool {
         !self.ready.is_empty()
     }
+
+    // ------------------------------------------------------------------
+    // Checkpoint (sim::snapshot)
+    // ------------------------------------------------------------------
+
+    /// Serialize the mutable state: queue, banks, ready replies, and the
+    /// four scheduling counters. Config-derived fields (row geometry,
+    /// latencies, queue capacity) are rebuilt by the constructor.
+    pub fn save_state(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        let wr_req = |w: &mut crate::sim::snapshot::ByteWriter, r: &DramRequest| {
+            w.u64(r.addr);
+            w.bool(r.is_write);
+            w.u64(r.tag);
+        };
+        w.usize(self.queue.len());
+        for r in &self.queue {
+            wr_req(w, r);
+        }
+        w.usize(self.banks.len());
+        for b in &self.banks {
+            match b.open_row {
+                Some(row) => {
+                    w.bool(true);
+                    w.u64(row);
+                }
+                None => w.bool(false),
+            }
+            w.u64(b.busy_until);
+            match &b.in_service {
+                Some((req, finish)) => {
+                    w.bool(true);
+                    wr_req(w, req);
+                    w.u64(*finish);
+                }
+                None => w.bool(false),
+            }
+        }
+        w.usize(self.ready.len());
+        for r in &self.ready {
+            w.u64(r.addr);
+            w.bool(r.is_write);
+            w.u64(r.tag);
+        }
+        w.u64(self.row_hits);
+        w.u64(self.row_misses);
+        w.u64(self.reads);
+        w.u64(self.writes);
+    }
+
+    /// Restore state saved by [`MemoryController::save_state`] into a
+    /// controller built with the same configuration.
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<()> {
+        use crate::errors::err;
+        let rd_req = |r: &mut crate::sim::snapshot::ByteReader<'_>| -> crate::errors::Result<DramRequest> {
+            Ok(DramRequest { addr: r.u64()?, is_write: r.bool()?, tag: r.u64()? })
+        };
+        let nq = r.seq_len(17)?;
+        if nq > self.queue_capacity {
+            return Err(err(format!(
+                "checkpoint queues {nq} DRAM requests, machine capacity is {}",
+                self.queue_capacity
+            )));
+        }
+        self.queue.clear();
+        for _ in 0..nq {
+            self.queue.push(rd_req(r)?);
+        }
+        let nb = r.usize()?;
+        if nb != self.banks.len() {
+            return Err(err(format!(
+                "checkpoint has {nb} DRAM banks, machine has {}",
+                self.banks.len()
+            )));
+        }
+        for b in &mut self.banks {
+            b.open_row = if r.bool()? { Some(r.u64()?) } else { None };
+            b.busy_until = r.u64()?;
+            b.in_service = if r.bool()? {
+                let req = rd_req(r)?;
+                Some((req, r.u64()?))
+            } else {
+                None
+            };
+        }
+        let nr = r.seq_len(17)?;
+        self.ready.clear();
+        for _ in 0..nr {
+            self.ready.push_back(DramReply { addr: r.u64()?, is_write: r.bool()?, tag: r.u64()? });
+        }
+        self.row_hits = r.u64()?;
+        self.row_misses = r.u64()?;
+        self.reads = r.u64()?;
+        self.writes = r.u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

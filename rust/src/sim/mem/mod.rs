@@ -184,6 +184,56 @@ impl MemPartition {
         self.pending_fills.clear();
         self.hit_pipe.clear();
     }
+
+    /// Serialize the partition's mutable state (checkpoint format): L2
+    /// tags/MSHRs, DRAM controller, pending fills, hit pipeline, stats.
+    pub fn save_state(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        self.l2.save_state(w);
+        self.mc.save_state(w);
+        w.usize(self.pending_fills.len());
+        for &(line, n) in &self.pending_fills {
+            w.u64(line);
+            w.u32(n);
+        }
+        w.usize(self.hit_pipe.len());
+        for &(ready, line, tag, is_write) in &self.hit_pipe {
+            w.u64(ready);
+            w.u64(line);
+            w.u64(tag);
+            w.bool(is_write);
+        }
+        w.u64(self.accesses);
+        w.u64(self.misses);
+    }
+
+    /// Inverse of [`MemPartition::save_state`] into a partition built with
+    /// the same configuration.
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<()> {
+        self.l2.load_state(r)?;
+        self.mc.load_state(r)?;
+        let nf = r.seq_len(12)?;
+        self.pending_fills.clear();
+        for _ in 0..nf {
+            let line = r.u64()?;
+            let n = r.u32()?;
+            self.pending_fills.push((line, n));
+        }
+        let np = r.seq_len(25)?;
+        self.hit_pipe.clear();
+        for _ in 0..np {
+            let ready = r.u64()?;
+            let line = r.u64()?;
+            let tag = r.u64()?;
+            let is_write = r.bool()?;
+            self.hit_pipe.push((ready, line, tag, is_write));
+        }
+        self.accesses = r.u64()?;
+        self.misses = r.u64()?;
+        Ok(())
+    }
 }
 
 /// Which memory partition serves a line (low-order line-interleaving,

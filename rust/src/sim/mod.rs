@@ -1,6 +1,7 @@
 //! Simulation substrates: SM cores, memory system, NoC, and the top-level
 //! GPU cycle loop.
 
+pub mod bisect;
 pub mod core;
 pub mod event;
 pub mod fault;
@@ -8,6 +9,8 @@ pub mod gpu;
 pub mod mem;
 pub mod noc;
 pub mod sched;
+pub mod snapshot;
 
 pub use event::NextEvent;
 pub use sched::ActiveSet;
+pub use snapshot::Checkpoint;

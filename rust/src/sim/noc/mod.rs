@@ -114,6 +114,66 @@ impl ChipLayout {
         debug_assert!(mc < self.num_mcs);
         self.owner.len() + mc
     }
+
+    /// Serialize the layout (checkpoint format): the per-cluster fused
+    /// flags and MC count. Everything else is derived by the constructor.
+    pub fn save_state(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        w.usize(self.fused.len());
+        for &f in &self.fused {
+            w.bool(f);
+        }
+        w.usize(self.num_mcs);
+    }
+
+    /// Rebuild a layout saved by [`ChipLayout::save_state`].
+    pub fn load(r: &mut crate::sim::snapshot::ByteReader<'_>) -> crate::errors::Result<ChipLayout> {
+        let n = r.seq_len(1)?;
+        if n == 0 {
+            return Err(crate::errors::err("checkpoint layout has zero clusters"));
+        }
+        let mut fused = Vec::with_capacity(n);
+        for _ in 0..n {
+            fused.push(r.bool()?);
+        }
+        let num_mcs = r.usize()?;
+        Ok(ChipLayout::new(fused, num_mcs))
+    }
+}
+
+/// Serialize one packet (checkpoint format).
+pub(crate) fn write_packet(w: &mut crate::sim::snapshot::ByteWriter, p: &Packet) {
+    w.usize(p.src);
+    w.usize(p.dst);
+    w.u32(p.flits);
+    w.u64(p.born);
+    let (tag, line, requester, is_write) = match p.payload {
+        Payload::MemRequest { line, requester, is_write } => (0u8, line, requester, is_write),
+        Payload::MemReply { line, requester, is_write } => (1u8, line, requester, is_write),
+    };
+    w.u8(tag);
+    w.u64(line);
+    w.u32(requester);
+    w.bool(is_write);
+}
+
+/// Inverse of [`write_packet`].
+pub(crate) fn read_packet(
+    r: &mut crate::sim::snapshot::ByteReader<'_>,
+) -> crate::errors::Result<Packet> {
+    let src = r.usize()?;
+    let dst = r.usize()?;
+    let flits = r.u32()?;
+    let born = r.u64()?;
+    let tag = r.u8()?;
+    let line = r.u64()?;
+    let requester = r.u32()?;
+    let is_write = r.bool()?;
+    let payload = match tag {
+        0 => Payload::MemRequest { line, requester, is_write },
+        1 => Payload::MemReply { line, requester, is_write },
+        t => return Err(crate::errors::err(format!("unknown packet payload tag {t}"))),
+    };
+    Ok(Packet { src, dst, flits, born, payload })
 }
 
 /// What a packet carries.
@@ -493,6 +553,89 @@ impl Noc {
         self.eject_nonempty.iter().any(|&c| c > 0) || self.busy.iter().any(|b| !b.is_empty())
     }
 
+    /// Serialize the interconnect's mutable state: router queues, ejection
+    /// queues, stats, injection epoch, hop penalty and request gate.
+    /// Geometry and the busy/scratch bookkeeping are rebuilt on load (the
+    /// receiving NoC must have been constructed for the same layout).
+    pub fn save_state(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        for subnet in 0..2 {
+            w.usize(self.routers[subnet].len());
+            for rt in &self.routers[subnet] {
+                rt.save_state(w);
+            }
+            w.usize(self.eject[subnet].len());
+            for q in &self.eject[subnet] {
+                w.usize(q.len());
+                for p in q {
+                    write_packet(w, p);
+                }
+            }
+        }
+        w.u64(self.flits_routed);
+        w.u64(self.packets_delivered);
+        w.u64(self.inject_epoch);
+        w.u64(self.hop_penalty);
+        w.bool(self.req_gate);
+    }
+
+    /// Inverse of [`Noc::save_state`] into a NoC built for the same layout
+    /// and config. Rebuilds the busy sets and ejection counts from the
+    /// restored queues (sweep order is derived by sorting, so index-order
+    /// rebuild is behaviour-identical to the live insertion order).
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<()> {
+        use crate::errors::err;
+        for subnet in 0..2 {
+            let nr = r.usize()?;
+            if nr != self.routers[subnet].len() {
+                return Err(err(format!(
+                    "checkpoint has {nr} routers on subnet {subnet}, machine has {}",
+                    self.routers[subnet].len()
+                )));
+            }
+            for rt in &mut self.routers[subnet] {
+                rt.load_state(r)?;
+            }
+            let ne = r.usize()?;
+            if ne != self.eject[subnet].len() {
+                return Err(err(format!(
+                    "checkpoint has {ne} eject queues on subnet {subnet}, machine has {}",
+                    self.eject[subnet].len()
+                )));
+            }
+            for qi in 0..ne {
+                let n = r.seq_len(42)?;
+                let q = &mut self.eject[subnet][qi];
+                q.clear();
+                for _ in 0..n {
+                    q.push_back(read_packet(r)?);
+                }
+            }
+        }
+        self.flits_routed = r.u64()?;
+        self.packets_delivered = r.u64()?;
+        self.inject_epoch = r.u64()?;
+        self.hop_penalty = r.u64()?;
+        self.req_gate = r.bool()?;
+        for subnet in 0..2 {
+            self.busy[subnet].clear();
+            for f in self.in_busy[subnet].iter_mut() {
+                *f = false;
+            }
+            for ri in 0..self.routers[subnet].len() {
+                if self.routers[subnet][ri].busy() {
+                    self.in_busy[subnet][ri] = true;
+                    self.busy[subnet].push(ri as u32);
+                }
+            }
+            self.eject_nonempty[subnet] =
+                self.eject[subnet].iter().filter(|q| !q.is_empty()).count();
+        }
+        Ok(())
+    }
+
     /// Per-router queue occupancy summary (deadlock diagnostics).
     pub fn debug_state(&self) -> String {
         let mut out = String::new();
@@ -765,6 +908,62 @@ mod tests {
         assert!(ideal.inject(Subnet::Reply, pkt(0, 5, 1, 0)));
         ideal.set_request_gate(false);
         assert!(ideal.inject(Subnet::Request, pkt(0, 5, 1, 0)), "un-gated again");
+    }
+
+    #[test]
+    fn noc_state_round_trip_is_byte_identical() {
+        use crate::sim::snapshot::{ByteReader, ByteWriter};
+        // Load the fabric mid-flight: queued hops, parked ejections, gate
+        // and penalty all set.
+        let mut noc = Noc::with_nodes(&cfg(), 9);
+        for t in 0..20u64 {
+            for src in [0usize, 8, 3] {
+                let _ = noc.inject(Subnet::Request, pkt(src, 4, 2, t));
+            }
+            let _ = noc.inject(Subnet::Reply, pkt(4, 0, 1, t));
+            noc.tick(t);
+        }
+        noc.set_hop_penalty(3);
+        noc.set_request_gate(true);
+        let mut w = ByteWriter::new();
+        noc.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut fresh = Noc::with_nodes(&cfg(), 9);
+        let mut r = ByteReader::new(&bytes);
+        fresh.load_state(&mut r).unwrap();
+        r.expect_end().unwrap();
+        let mut w2 = ByteWriter::new();
+        fresh.save_state(&mut w2);
+        assert_eq!(w2.into_bytes(), bytes, "restore must re-save byte-identically");
+        assert_eq!(fresh.debug_state(), noc.debug_state());
+        assert_eq!(fresh.busy(), noc.busy());
+        assert_eq!(fresh.inject_epoch(), noc.inject_epoch());
+        // Every strict prefix must fail cleanly (the parse is prefix-
+        // decodable, so a cut always lands inside some field).
+        for cut in 0..bytes.len() {
+            let mut m = Noc::with_nodes(&cfg(), 9);
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(m.load_state(&mut r).is_err(), "prefix {cut}");
+        }
+    }
+
+    #[test]
+    fn layout_round_trips_through_checkpoint() {
+        use crate::sim::snapshot::{ByteReader, ByteWriter};
+        let l = ChipLayout::new(vec![false, true, false, true], 2);
+        let mut w = ByteWriter::new();
+        l.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let l2 = ChipLayout::load(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(l2, l);
+        // Zero-cluster input is a clean error, not an assert.
+        let mut w = ByteWriter::new();
+        w.usize(0);
+        w.usize(2);
+        let zero = w.into_bytes();
+        assert!(ChipLayout::load(&mut ByteReader::new(&zero)).is_err());
     }
 
     #[test]

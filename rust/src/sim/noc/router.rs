@@ -179,6 +179,40 @@ impl Router {
         ev
     }
 
+    /// Serialize the mutable state: the input queue (with per-packet ready
+    /// cycles) and output-port busy times. `capacity`/`stages` are config
+    /// and rebuilt by the constructor.
+    pub fn save_state(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        w.usize(self.queue.len());
+        for (ready, pkt) in &self.queue {
+            w.u64(*ready);
+            super::write_packet(w, pkt);
+        }
+        for b in self.out_busy {
+            w.u64(b);
+        }
+    }
+
+    /// Inverse of [`Router::save_state`]. Transit traffic may legally
+    /// exceed `capacity` (credits are not modelled), so queue length is
+    /// only bounded by the reader's allocation guard.
+    pub fn load_state(
+        &mut self,
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<()> {
+        let n = r.seq_len(42)?;
+        self.queue.clear();
+        for _ in 0..n {
+            let ready = r.u64()?;
+            let pkt = super::read_packet(r)?;
+            self.queue.push_back((ready, pkt));
+        }
+        for b in self.out_busy.iter_mut() {
+            *b = r.u64()?;
+        }
+        Ok(())
+    }
+
     /// Allocating convenience wrapper over [`Router::plan_moves_into`]
     /// (unit tests and diagnostics; the simulation loop uses the `_into`
     /// form).

@@ -1,0 +1,480 @@
+//! Checkpoint/restore of a running [`crate::sim::gpu::Gpu`].
+//!
+//! A [`Checkpoint`] is a versioned, sectioned binary container written by
+//! a hand-rolled little-endian byte writer — no serde, no external
+//! dependencies. Each machine component serializes into its own named
+//! section ("cluster.3", "noc", "mc.0", ...), which buys two things:
+//!
+//! * **Diffability.** Two checkpoints taken at the same cycle can be
+//!   compared section-by-section ([`Checkpoint::diff`]), so a divergence
+//!   names the component that diverged instead of a byte offset. The
+//!   `amoeba bisect` time-travel debugger is built on this.
+//! * **Forward evolution.** Unknown sections are carried opaquely;
+//!   the format version gates structural changes (see README
+//!   "Checkpoint & migration" for the version policy).
+//!
+//! The hard contract — enforced in `tests/exec_determinism.rs` — is that
+//! restoring a checkpoint and continuing is **bit-identical** to the
+//! uninterrupted run, in both the dense and the event-horizon execution
+//! modes. To make that hold, the capture canonicalizes first: every
+//! parked component is replayed to the capture cycle
+//! (`wake_everything`), so dense and active checkpoints of the same run
+//! at the same cycle are byte-comparable, and the restored machine
+//! starts from the all-active state both modes agree on.
+//!
+//! What is *not* captured (rebuilt instead): cache/NoC geometry and every
+//! config-derived constant (reconstructed from the caller's
+//! `SystemConfig`), the `ActiveSet` parking heap (restore starts
+//! all-active — the canonical state), scratch buffers, and derived
+//! indices (pending-table hash index, ready-warp counts). The workload
+//! (trace generators) is pure and is rebuilt from the same
+//! profile/stream inputs the original run was given.
+
+use crate::errors::{err, Result};
+
+/// Magic bytes opening every serialized checkpoint.
+pub const MAGIC: [u8; 4] = *b"AMBS";
+/// Current checkpoint format version. Bump on any incompatible change to
+/// a section layout; loaders reject other versions (never panic).
+pub const VERSION: u32 = 1;
+
+/// Hard caps the loader enforces before trusting length fields from the
+/// wire — corrupt input must fail fast, not allocate unbounded memory.
+const MAX_SECTIONS: usize = 65_536;
+const MAX_NAME_LEN: usize = 256;
+
+// ---------------------------------------------------------------------
+// Byte writer / reader
+// ---------------------------------------------------------------------
+
+/// Append-only little-endian byte sink.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` travels as u64 (the format is architecture-independent).
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// `f64` travels as its IEEE bit pattern — exact round trip, NaNs
+    /// included.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Length-prefixed UTF-8.
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Raw bytes, no length prefix (caller frames them).
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+}
+
+/// Checked little-endian byte source. Every read returns
+/// [`crate::errors::Result`] — truncated or corrupt input is an error,
+/// never a panic (fuzzed over all prefixes in `tests/prop_invariants.rs`).
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(err(format!(
+                "checkpoint truncated: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| err(format!("checkpoint length {v} overflows usize")))
+    }
+
+    /// Strict bool: anything but 0/1 is corruption.
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(err(format!("checkpoint bool field holds {v}"))),
+        }
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.usize()?;
+        if n > self.remaining() {
+            return Err(err(format!("checkpoint string length {n} exceeds remaining bytes")));
+        }
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| err(format!("checkpoint string: {e}")))
+    }
+
+    /// A length read from the wire that will drive a `Vec` reservation:
+    /// bounded by what the remaining bytes could possibly encode
+    /// (`min_elem_bytes` per element) so corrupt lengths cannot trigger
+    /// huge allocations.
+    pub fn seq_len(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let cap = self.remaining() / min_elem_bytes.max(1);
+        if n > cap {
+            return Err(err(format!(
+                "checkpoint sequence length {n} exceeds what {} remaining bytes can hold",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    /// All input consumed? Section decoders check this so trailing
+    /// garbage (a symptom of a layout mismatch) is caught loudly.
+    pub fn expect_end(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(err(format!(
+                "checkpoint section has {} trailing bytes",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint container
+// ---------------------------------------------------------------------
+
+/// One named section of machine state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Section {
+    pub name: String,
+    pub bytes: Vec<u8>,
+}
+
+/// A versioned, sectioned snapshot of a running simulator.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Checkpoint {
+    /// Sections in serialization order (order is part of the byte
+    /// format: `save(load(bytes)) == bytes`).
+    pub sections: Vec<Section>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Checkpoint { sections: Vec::new() }
+    }
+
+    /// Append a section (names must be unique; the writer controls them).
+    pub fn push(&mut self, name: impl Into<String>, bytes: Vec<u8>) {
+        self.sections.push(Section { name: name.into(), bytes });
+    }
+
+    /// Look up a section's bytes by name.
+    pub fn section(&self, name: &str) -> Option<&[u8]> {
+        self.sections.iter().find(|s| s.name == name).map(|s| s.bytes.as_slice())
+    }
+
+    /// Replace a section's bytes in place (e.g. the fault strip below).
+    fn section_mut(&mut self, name: &str) -> Option<&mut Vec<u8>> {
+        self.sections.iter_mut().find(|s| s.name == name).map(|s| &mut s.bytes)
+    }
+
+    /// Serialize: magic, version, section count, then each section as
+    /// (name, byte length, bytes).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.raw(&MAGIC);
+        w.u32(VERSION);
+        w.usize(self.sections.len());
+        for s in &self.sections {
+            w.str(&s.name);
+            w.usize(s.bytes.len());
+            w.raw(&s.bytes);
+        }
+        w.into_bytes()
+    }
+
+    /// Parse a serialized checkpoint. Truncated, corrupt, or
+    /// wrong-version input returns an error — never panics, for any
+    /// byte prefix (fuzzed in `tests/prop_invariants.rs`).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut r = ByteReader::new(bytes);
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            return Err(err("not a checkpoint: bad magic"));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(err(format!(
+                "checkpoint format version {version} unsupported (this build reads {VERSION})"
+            )));
+        }
+        let n = r.usize()?;
+        if n > MAX_SECTIONS {
+            return Err(err(format!("checkpoint claims {n} sections (cap {MAX_SECTIONS})")));
+        }
+        let mut sections = Vec::with_capacity(n.min(64));
+        for _ in 0..n {
+            let name = r.str()?;
+            if name.len() > MAX_NAME_LEN {
+                return Err(err("checkpoint section name too long"));
+            }
+            let len = r.usize()?;
+            if len > r.remaining() {
+                return Err(err(format!(
+                    "checkpoint section '{name}' claims {len} bytes, {} remain",
+                    r.remaining()
+                )));
+            }
+            let bytes = r.take(len)?.to_vec();
+            sections.push(Section { name, bytes });
+        }
+        r.expect_end()?;
+        Ok(Checkpoint { sections })
+    }
+
+    /// Write the checkpoint to a file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_bytes())
+            .map_err(|e| err(format!("write checkpoint {}: {e}", path.as_ref().display())))
+    }
+
+    /// Read a checkpoint from a file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path.as_ref())
+            .map_err(|e| err(format!("read checkpoint {}: {e}", path.as_ref().display())))?;
+        Checkpoint::from_bytes(&bytes)
+    }
+
+    /// Names of sections whose bytes differ between two checkpoints
+    /// (including sections present on only one side).
+    pub fn diff(&self, other: &Checkpoint) -> Vec<String> {
+        let mut out = Vec::new();
+        for s in &self.sections {
+            match other.section(&s.name) {
+                Some(b) if b == s.bytes.as_slice() => {}
+                _ => out.push(s.name.clone()),
+            }
+        }
+        for s in &other.sections {
+            if self.section(&s.name).is_none() {
+                out.push(s.name.clone());
+            }
+        }
+        out
+    }
+
+    /// [`Checkpoint::diff`] restricted to *machine state*: the "meta"
+    /// section (identity of the run) and the "faults" section (the
+    /// injected schedule) are excluded. Bisecting a faulted run against
+    /// a clean one must report the cycle the machines diverge, not the
+    /// cycle-0 difference in their fault schedules.
+    pub fn state_diff(&self, other: &Checkpoint) -> Vec<String> {
+        self.diff(other)
+            .into_iter()
+            .filter(|n| n != "meta" && n != "faults")
+            .collect()
+    }
+
+    /// Total serialized size in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.to_bytes().len()
+    }
+
+    /// Drop every fault event the captured machine had not yet injected
+    /// (events at or after the capture cursor). Used by live tenant
+    /// migration: the capture happens *before* the failing cycle's
+    /// injection, so stripping the pending tail yields the same machine
+    /// on a chip that will never fault.
+    pub fn strip_pending_faults(&mut self) -> Result<()> {
+        let bytes = self
+            .section("faults")
+            .ok_or_else(|| err("checkpoint has no faults section"))?;
+        let mut r = ByteReader::new(bytes);
+        let (events, cursor) = crate::sim::fault::read_fault_section(&mut r)?;
+        r.expect_end()?;
+        let kept: Vec<_> = events.into_iter().take(cursor).collect();
+        let mut w = ByteWriter::new();
+        crate::sim::fault::write_fault_section(&mut w, &kept, cursor);
+        *self.section_mut("faults").expect("section existed above") = w.into_bytes();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_round_trip() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 3);
+        w.usize(42);
+        w.bool(true);
+        w.bool(false);
+        w.f64(-1.5e300);
+        w.str("hello §nap");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.usize().unwrap(), 42);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.f64().unwrap(), -1.5e300);
+        assert_eq!(r.str().unwrap(), "hello §nap");
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error() {
+        let mut w = ByteWriter::new();
+        w.u64(5);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            assert!(r.u64().is_err(), "prefix {cut} must not parse");
+        }
+    }
+
+    #[test]
+    fn bad_bool_is_corruption() {
+        let mut r = ByteReader::new(&[2]);
+        assert!(r.bool().is_err());
+    }
+
+    fn sample() -> Checkpoint {
+        let mut c = Checkpoint::new();
+        c.push("meta", vec![1, 2, 3]);
+        c.push("cluster.0", vec![4, 5]);
+        c.push("noc", vec![]);
+        c
+    }
+
+    #[test]
+    fn container_round_trip_is_byte_identical() {
+        let c = sample();
+        let bytes = c.to_bytes();
+        let c2 = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(c, c2);
+        assert_eq!(c2.to_bytes(), bytes, "save(load(bytes)) == bytes");
+    }
+
+    #[test]
+    fn any_truncation_fails_cleanly() {
+        let bytes = sample().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "prefix {cut}");
+        }
+        // Full input parses.
+        assert!(Checkpoint::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn wrong_version_and_magic_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes[4] ^= 0xFF; // version field
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn diff_names_changed_sections() {
+        let a = sample();
+        let mut b = sample();
+        assert!(a.diff(&b).is_empty());
+        b.section_mut("cluster.0").unwrap().push(9);
+        b.push("extra", vec![1]);
+        let d = a.diff(&b);
+        assert!(d.contains(&"cluster.0".to_string()));
+        assert!(d.contains(&"extra".to_string()));
+        assert!(!d.contains(&"meta".to_string()));
+    }
+
+    #[test]
+    fn state_diff_ignores_meta_and_faults() {
+        let mut a = sample();
+        a.push("faults", vec![1]);
+        let mut b = sample();
+        b.push("faults", vec![2]);
+        b.section_mut("meta").unwrap().push(0);
+        assert!(a.state_diff(&b).is_empty());
+        assert_eq!(a.diff(&b).len(), 2);
+    }
+}

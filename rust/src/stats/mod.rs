@@ -187,6 +187,28 @@ impl SmStats {
         sm_counter_fields!(sub);
         d
     }
+
+    /// Serialize every counter in declaration order (checkpoint format).
+    /// Driven by the same field list as `absorb`/`delta`, so a new
+    /// counter can never be summed but silently dropped from snapshots.
+    pub fn write_to(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        macro_rules! emit {
+            ($($f:ident),+ $(,)?) => { $( w.u64(self.$f); )+ };
+        }
+        sm_counter_fields!(emit);
+    }
+
+    /// Inverse of [`SmStats::write_to`].
+    pub fn read_from(
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<SmStats> {
+        let mut s = SmStats::default();
+        macro_rules! load {
+            ($($f:ident),+ $(,)?) => { $( s.$f = r.u64()?; )+ };
+        }
+        sm_counter_fields!(load);
+        Ok(s)
+    }
 }
 
 /// Machine-wide counters outside the SMs.
@@ -242,6 +264,22 @@ pub struct ChipStats {
     pub ctas_preempted: u64,
 }
 
+/// Every counter of [`ChipStats`], in declaration order — feeds the
+/// checkpoint serializer the same way `sm_counter_fields!` feeds the
+/// [`SmStats`] one (exhaustive destructuring makes a newly added field a
+/// compile error until it is serialized too).
+macro_rules! chip_counter_fields {
+    ($apply:ident) => {
+        $apply!(
+            cycles, l2_accesses, l2_misses, dram_reads, dram_writes, dram_row_hits,
+            dram_row_misses, mc_inject_stall_cycles, mc_cycles, noc_flits_routed,
+            kernels_completed, reconfig_events, reconfig_cycles, predictor_scale_up,
+            predictor_scale_out, predictor_fallbacks, faults_injected, clusters_retired,
+            ctas_dispatched, ctas_requeued, preemptions, ctas_preempted,
+        );
+    };
+}
+
 impl ChipStats {
     /// Normalised MC injection stall rate (Fig 17).
     pub fn mc_inject_stall_rate(&self) -> f64 {
@@ -256,6 +294,31 @@ impl ChipStats {
     /// DRAM row-hit rate (FR-FCFS effectiveness).
     pub fn dram_row_hit_rate(&self) -> f64 {
         ratio(self.dram_row_hits, self.dram_row_hits + self.dram_row_misses)
+    }
+
+    /// Serialize every counter in declaration order (checkpoint format).
+    pub fn write_to(&self, w: &mut crate::sim::snapshot::ByteWriter) {
+        macro_rules! emit {
+            ($($f:ident),+ $(,)?) => {
+                // Exhaustive destructuring: adding a ChipStats field
+                // without extending chip_counter_fields! fails to build.
+                let ChipStats { $($f),+ } = *self;
+                $( w.u64($f); )+
+            };
+        }
+        chip_counter_fields!(emit);
+    }
+
+    /// Inverse of [`ChipStats::write_to`].
+    pub fn read_from(
+        r: &mut crate::sim::snapshot::ByteReader<'_>,
+    ) -> crate::errors::Result<ChipStats> {
+        let mut s = ChipStats::default();
+        macro_rules! load {
+            ($($f:ident),+ $(,)?) => { $( s.$f = r.u64()?; )+ };
+        }
+        chip_counter_fields!(load);
+        Ok(s)
     }
 }
 
@@ -326,6 +389,30 @@ mod tests {
         let mut acc = mid.delta(&base);
         acc.absorb(&cur2.delta(&mid));
         assert_eq!(acc, cur2.delta(&base));
+    }
+
+    #[test]
+    fn stats_serializers_round_trip() {
+        let mut s = SmStats::default();
+        s.cycles = 123;
+        s.warp_insns = 456;
+        s.split_events = u64::MAX;
+        let mut w = crate::sim::snapshot::ByteWriter::new();
+        s.write_to(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::sim::snapshot::ByteReader::new(&bytes);
+        assert_eq!(SmStats::read_from(&mut r).unwrap(), s);
+        r.expect_end().unwrap();
+
+        let mut c = ChipStats::default();
+        c.cycles = 9;
+        c.ctas_preempted = 77;
+        let mut w = crate::sim::snapshot::ByteWriter::new();
+        c.write_to(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::sim::snapshot::ByteReader::new(&bytes);
+        assert_eq!(ChipStats::read_from(&mut r).unwrap(), c);
+        r.expect_end().unwrap();
     }
 
     #[test]

@@ -13,8 +13,10 @@ use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::harness::{SimJob, StreamJob, SweepExec};
 use amoeba_gpu::sim::fault::{FaultEvent, FaultKind, FaultTrace};
 use amoeba_gpu::sim::gpu::{
-    run_benchmark_faulted_dense, run_benchmark_seeded, run_benchmark_seeded_dense,
-    serve_streams_dense, serve_streams_faulted_dense, PartitionPolicy, SimReport, StreamReport,
+    run_benchmark_faulted_dense, run_benchmark_resume, run_benchmark_seeded,
+    run_benchmark_seeded_dense, run_benchmark_snapshot, serve_streams_dense,
+    serve_streams_faulted_dense, serve_streams_resume, serve_streams_snapshot, PartitionPolicy,
+    SimReport, StreamReport,
 };
 use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace, KernelStream, Priority};
 
@@ -474,6 +476,186 @@ fn faulted_sweep_parallel_matches_serial() {
         assert_eq!(x.chip.faults_injected, 0, "healthy run is genuinely healthy");
         assert_ne!(x.chip.faults_injected, y.chip.faults_injected);
     }
+}
+
+/// Checkpoint/restore of a single-application run: capturing at an
+/// arbitrary cycle and resuming on a fresh machine must reproduce the
+/// uninterrupted report bit for bit — in both execution modes, across
+/// modes (a dense-captured checkpoint resumed under the skip engine and
+/// vice versa), and the checkpoints the two modes capture at the same
+/// cycle must be byte-identical (parking is pure wall-clock policy, so
+/// the canonical all-awake capture erases it).
+#[test]
+fn kernel_checkpoint_restore_is_bit_identical() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    let mut p = bench("BFS").unwrap();
+    p.num_ctas = 8;
+    p.insns_per_thread = 80;
+    p.num_kernels = 2; // cross a kernel boundary with checkpoints in play
+    for scheme in [Scheme::Baseline, Scheme::Hetero] {
+        // A capture armed past the end never fires and never perturbs:
+        // this run doubles as the uninterrupted reference.
+        let (full, none) =
+            run_benchmark_snapshot(&cfg, &p, scheme, 0xD37, false, u64::MAX, None).unwrap();
+        assert!(none.is_none(), "armed-past-the-end snapshot must not fire");
+        let end = full.cycles;
+        // Adversarial capture points: the very first loop top, inside
+        // the profiling window, mid-run (Drain/Quiesce under Hetero),
+        // and the closing cycles.
+        for at in [1, end / 8, end / 2, (end * 7) / 8, end.saturating_sub(2)] {
+            for dense in [false, true] {
+                let label = format!("{scheme} snap@{at} dense={dense}");
+                let (rep, cp) =
+                    run_benchmark_snapshot(&cfg, &p, scheme, 0xD37, dense, at, None).unwrap();
+                assert_reports_identical(&rep, &full, &format!("{label}: capture-side run"));
+                let cp = cp.expect("snapshot inside the run must fire");
+                let resumed = run_benchmark_resume(&cfg, &p, scheme, 0xD37, dense, &cp).unwrap();
+                assert_reports_identical(&resumed, &full, &format!("{label}: resumed run"));
+                let crossed = run_benchmark_resume(&cfg, &p, scheme, 0xD37, !dense, &cp).unwrap();
+                assert_reports_identical(&crossed, &full, &format!("{label}: cross-mode resume"));
+            }
+            // Dense and active capture the same machine, byte for byte.
+            let (_, ca) =
+                run_benchmark_snapshot(&cfg, &p, scheme, 0xD37, false, at, None).unwrap();
+            let (_, cd) = run_benchmark_snapshot(&cfg, &p, scheme, 0xD37, true, at, None).unwrap();
+            let (ca, cd) = (ca.unwrap(), cd.unwrap());
+            assert!(
+                ca.state_diff(&cd).is_empty(),
+                "snap@{at} under {scheme}: state differs across modes: {:?}",
+                ca.state_diff(&cd)
+            );
+            assert_eq!(ca.to_bytes(), cd.to_bytes(), "snap@{at} under {scheme}: bytes differ");
+        }
+    }
+}
+
+/// The same contract on a faulted run: checkpoints taken between fault
+/// events (mid-MC-stall, after a half-SM death, after a whole-cluster
+/// retirement) carry the pending-fault cursor, so the resumed run still
+/// injects exactly the remaining faults and lands on the reference
+/// report bit for bit.
+#[test]
+fn faulted_checkpoint_restore_is_bit_identical() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    let trace = mixed_fault_trace();
+    let mut p = bench("BFS").unwrap();
+    p.num_ctas = 8;
+    p.insns_per_thread = 80;
+    p.num_kernels = 1;
+    let (full, _) =
+        run_benchmark_snapshot(&cfg, &p, Scheme::Baseline, 0xD37, false, u64::MAX, Some(&trace))
+            .unwrap();
+    assert_eq!(full.chip.faults_injected, trace.len() as u64, "every fault lands");
+    // 300 = before any fault beyond the NoC degrade; 500 = inside the MC
+    // stall window; 1_000 = after the half-SM death; 1_600 = after the
+    // whole-cluster retirement.
+    for at in [300u64, 500, 1_000, 1_600] {
+        if at >= full.cycles.saturating_sub(1) {
+            continue;
+        }
+        for dense in [false, true] {
+            let label = format!("faulted snap@{at} dense={dense}");
+            let (rep, cp) =
+                run_benchmark_snapshot(&cfg, &p, Scheme::Baseline, 0xD37, dense, at, Some(&trace))
+                    .unwrap();
+            assert_reports_identical(&rep, &full, &format!("{label}: capture-side run"));
+            let cp = cp.expect("snapshot inside the run must fire");
+            let resumed =
+                run_benchmark_resume(&cfg, &p, Scheme::Baseline, 0xD37, dense, &cp).unwrap();
+            assert_reports_identical(&resumed, &full, &format!("{label}: resumed run"));
+        }
+    }
+}
+
+/// Checkpoint/restore of a concurrent multi-tenant run: the stream grid
+/// keeps a Hetero tenant (per-cluster Drain/Quiesce transitions) and a
+/// DynSplit-active tenant live, so mid-run captures land inside tenant
+/// phase machines — and the resumed run must still be bit-identical
+/// under both partition policies and both execution modes.
+#[test]
+fn stream_checkpoint_restore_is_bit_identical() {
+    let (cfg, streams) = stream_grid();
+    for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
+        let (full, none) =
+            serve_streams_snapshot(&cfg, &streams, policy, false, u64::MAX, None).unwrap();
+        assert!(none.is_none(), "armed-past-the-end snapshot must not fire");
+        assert!(full.launches.iter().all(|l| l.finish != u64::MAX), "all launches served");
+        let end = full.cycles;
+        for at in [1, end / 4, end / 2, (end * 3) / 4] {
+            for dense in [false, true] {
+                let label = format!("streams {policy} snap@{at} dense={dense}");
+                let (rep, cp) =
+                    serve_streams_snapshot(&cfg, &streams, policy, dense, at, None).unwrap();
+                assert_stream_reports_identical(&rep, &full, &format!("{label}: capture side"));
+                let cp = cp.expect("snapshot inside the run must fire");
+                let resumed = serve_streams_resume(&cfg, &streams, policy, dense, &cp).unwrap();
+                assert_stream_reports_identical(&resumed, &full, &format!("{label}: resumed"));
+            }
+            let (_, ca) = serve_streams_snapshot(&cfg, &streams, policy, false, at, None).unwrap();
+            let (_, cd) = serve_streams_snapshot(&cfg, &streams, policy, true, at, None).unwrap();
+            assert_eq!(
+                ca.unwrap().to_bytes(),
+                cd.unwrap().to_bytes(),
+                "streams {policy} snap@{at}: checkpoint bytes differ across modes"
+            );
+        }
+    }
+}
+
+/// Restore across a CTA-boundary preemption: capture just before the
+/// High-priority tenant arrives, inside the preemption window (victim
+/// CTAs requeued, stolen cluster frozen), and after — resuming from any
+/// of them reproduces the uninterrupted report, preemption counters
+/// included.
+#[test]
+fn preemption_checkpoint_restore_is_bit_identical() {
+    let (cfg, streams) = preemption_grid();
+    let policy = PartitionPolicy::Adaptive;
+    let (full, _) =
+        serve_streams_snapshot(&cfg, &streams, policy, false, u64::MAX, None).unwrap();
+    assert!(full.chip.preemptions >= 1, "the mix must actually preempt, or this pins nothing");
+    assert!(full.cycles > 5_200, "the run must outlive the preemption window");
+    // The High tenant arrives at 5_000; the preemption lands shortly after.
+    for at in [4_999u64, 5_001, 5_050, 5_200] {
+        for dense in [false, true] {
+            let label = format!("preemption snap@{at} dense={dense}");
+            let (rep, cp) =
+                serve_streams_snapshot(&cfg, &streams, policy, dense, at, None).unwrap();
+            assert_stream_reports_identical(&rep, &full, &format!("{label}: capture side"));
+            let cp = cp.expect("snapshot inside the run must fire");
+            let resumed = serve_streams_resume(&cfg, &streams, policy, dense, &cp).unwrap();
+            assert_stream_reports_identical(&resumed, &full, &format!("{label}: resumed"));
+        }
+    }
+}
+
+/// Restore refuses mismatched worlds instead of silently diverging: a
+/// kernel checkpoint fed to the stream entry point, a wrong-seed resume,
+/// and a wrong-shape machine are all structured errors.
+#[test]
+fn checkpoint_restore_rejects_mismatches() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    let mut p = bench("CP").unwrap();
+    p.num_ctas = 8;
+    p.insns_per_thread = 80;
+    p.num_kernels = 1;
+    let (_, cp) =
+        run_benchmark_snapshot(&cfg, &p, Scheme::Baseline, 0xD37, false, 50, None).unwrap();
+    let cp = cp.unwrap();
+    // Wrong mode: a kernel checkpoint is not a stream checkpoint.
+    let (_, streams) = stream_grid();
+    assert!(serve_streams_resume(&cfg, &streams, PartitionPolicy::Static, false, &cp).is_err());
+    // Wrong seed: the workload generator would not replay the same trace.
+    assert!(run_benchmark_resume(&cfg, &p, Scheme::Baseline, 0xD38, false, &cp).is_err());
+    // Wrong scheme: the controller would re-decide differently.
+    assert!(run_benchmark_resume(&cfg, &p, Scheme::ScaleUp, 0xD37, false, &cp).is_err());
+    // Wrong machine shape.
+    let mut big = cfg.clone();
+    big.num_sms *= 2;
+    assert!(run_benchmark_resume(&big, &p, Scheme::Baseline, 0xD37, false, &cp).is_err());
 }
 
 /// Running the same batch twice must be pure cache hits, and a serial

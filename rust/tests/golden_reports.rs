@@ -267,6 +267,80 @@ fn golden_priority_mix() {
     check_golden("stream_priority_mix", &fingerprint_stream(&r));
 }
 
+/// Mid-trace checkpoint migration under a bursty mixed-priority QoS
+/// trace: the whole chip dies at cycle 8k, the retry budget is zero,
+/// and every stranded tenant must be rescued by the checkpoint path —
+/// captured just before the first fault, pending faults stripped,
+/// finished on a restored healthy machine. Pins the shared (faulted)
+/// run and the per-tenant health ledger absolutely.
+#[test]
+fn golden_stream_migration() {
+    use amoeba_gpu::runtime::serve::{serve_with_failover, FailoverConfig};
+    use amoeba_gpu::sim::fault::{FaultEvent, FaultKind, FaultTrace};
+
+    let mut cfg = quick_cfg();
+    cfg.num_sms = 8;
+    cfg.num_mcs = 4;
+    cfg.max_cycles = 400_000;
+    let prios = [Priority::High, Priority::Normal, Priority::Low];
+    let specs: Vec<TenantQosSpec> = vec![
+        (bench("BFS").unwrap(), Scheme::Hetero),
+        (bench("RAY").unwrap(), Scheme::WarpRegroup),
+        (bench("CP").unwrap(), Scheme::Baseline),
+    ]
+    .into_iter()
+    .zip(prios)
+    .map(|((profile, scheme), priority)| TenantQosSpec {
+        profile,
+        scheme,
+        priority,
+        slo_turnaround: (priority == Priority::High).then_some(400_000),
+    })
+    .collect();
+    let mut streams = traffic_trace_qos(
+        &specs,
+        2,
+        10_000,
+        SEED,
+        TrafficPattern::Bursty { burst_len: 4, dilation: 8 },
+    );
+    shrink_streams(&mut streams, 6, 60);
+    // Kill every cluster mid-trace; with no retry budget only the
+    // checkpoint migration can rescue the stranded launches.
+    let faults = FaultTrace::new(
+        (0..4).map(|c| FaultEvent { cycle: 8_000, kind: FaultKind::Cluster { cluster: c } }).collect(),
+    );
+    let fo = FailoverConfig { max_retries: 0, quarantine_after: 1, ..FailoverConfig::default() };
+    let (shared, health) =
+        serve_with_failover(&cfg, &streams, PartitionPolicy::Adaptive, &fo, &faults).unwrap();
+    assert!(shared.deadline_hit, "dead chip must truncate the shared run");
+    for (ti, h) in health.iter().enumerate() {
+        assert!(h.migrated, "tenant {ti} must have been migrated");
+        assert_eq!(h.dropped, 0, "migration must serve everything");
+        assert_eq!(h.served as usize, streams[ti].launches.len());
+    }
+
+    let mut s = String::from("{\n");
+    push_kv(&mut s, "shared_cycles", shared.cycles);
+    push_kv(&mut s, "deadline_hit", shared.deadline_hit);
+    push_kv(&mut s, "faults_injected", shared.chip.faults_injected);
+    push_kv(&mut s, "clusters_retired", shared.chip.clusters_retired);
+    let hj: Vec<String> = health
+        .iter()
+        .map(|h| {
+            format!(
+                "{{\"tenant\": {}, \"attempts\": {}, \"failures\": {}, \"quarantined\": {}, \
+                 \"served\": {}, \"dropped\": {}, \"migrated\": {}}}",
+                h.tenant, h.attempts, h.failures, h.quarantined, h.served, h.dropped, h.migrated
+            )
+        })
+        .collect();
+    s.push_str(&format!("  \"health\": [{}],\n", hj.join(", ")));
+    s.push_str(&format!("  \"shared_fnv\": \"{:#018x}\",\n", fnv1a(&format!("{shared:?}"))));
+    s.push_str(&format!("  \"health_fnv\": \"{:#018x}\"\n}}\n", fnv1a(&format!("{health:?}"))));
+    check_golden("stream_migration", &s);
+}
+
 /// The fingerprint must be sensitive to single-counter perturbations —
 /// the property that makes a deliberate one-line change (e.g. an extra
 /// cache-clock bump) fail the suite.

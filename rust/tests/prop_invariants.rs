@@ -1012,6 +1012,162 @@ fn prop_empty_fault_trace_is_bit_identical_to_none() {
     }
 }
 
+/// A real checkpoint captured mid-run. Small profile, early capture:
+/// the fuzz loops below parse every byte prefix, so the byte count is
+/// the iteration count.
+fn fuzz_checkpoint() -> amoeba_gpu::sim::Checkpoint {
+    let cfg = SystemConfig::tiny();
+    let mut p = bench("CP").unwrap();
+    p.num_ctas = 4;
+    p.insns_per_thread = 40;
+    p.num_kernels = 1;
+    let (_, cp) =
+        amoeba_gpu::sim::gpu::run_benchmark_snapshot(&cfg, &p, Scheme::Baseline, 0xF2, false, 30, None)
+            .unwrap();
+    cp.expect("snapshot at cycle 30 must fire")
+}
+
+/// Byte-exact checkpoint round trip: parsing a serialized checkpoint
+/// and re-serializing it reproduces the input bytes exactly — section
+/// order, names, and payloads all survive (`save(load(x)) == x`), and
+/// the parsed container compares equal to the original.
+#[test]
+fn prop_checkpoint_bytes_round_trip() {
+    use amoeba_gpu::sim::Checkpoint;
+    let cp = fuzz_checkpoint();
+    let bytes = cp.to_bytes();
+    let parsed = Checkpoint::from_bytes(&bytes).unwrap();
+    assert_eq!(parsed, cp, "parsed checkpoint differs from the captured one");
+    assert_eq!(parsed.to_bytes(), bytes, "re-serialization is not byte-identical");
+    assert_eq!(cp.byte_len(), bytes.len());
+    // The file path round-trips through the same bytes.
+    let path = std::env::temp_dir().join(format!("amoeba-cp-fuzz-{}.bin", std::process::id()));
+    cp.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded, cp, "file round trip changed the checkpoint");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Truncation fuzz: every strict byte prefix of a valid checkpoint must
+/// parse to a structured error — never a panic, and never a silent
+/// partial success. The same holds for a handful of random single-byte
+/// corruptions at the container level (they may parse, since payload
+/// bytes are opaque to the container, but they must never panic).
+#[test]
+fn prop_checkpoint_truncation_never_panics() {
+    use amoeba_gpu::sim::Checkpoint;
+    let cp = fuzz_checkpoint();
+    let bytes = cp.to_bytes();
+    for n in 0..bytes.len() {
+        assert!(
+            Checkpoint::from_bytes(&bytes[..n]).is_err(),
+            "strict prefix of {n}/{} bytes parsed as a whole checkpoint",
+            bytes.len()
+        );
+    }
+    assert!(Checkpoint::from_bytes(&bytes).is_ok());
+    let mut rng = Pcg32::new(0xC4A0, 9);
+    for _ in 0..200 {
+        let mut corrupt = bytes.clone();
+        let i = rng.next_bounded(corrupt.len() as u32) as usize;
+        corrupt[i] ^= (1 + rng.next_bounded(255)) as u8;
+        let _ = Checkpoint::from_bytes(&corrupt); // must not panic
+    }
+}
+
+/// Section-level restore fuzz: truncating any one section's payload (to
+/// half, to one byte, to empty) must make the restore entry point return
+/// a structured error — the machine loaders validate shape and length
+/// before touching state, so corrupt state never restores partially.
+#[test]
+fn prop_checkpoint_section_truncation_is_an_error() {
+    let cfg = SystemConfig::tiny();
+    let mut p = bench("CP").unwrap();
+    p.num_ctas = 4;
+    p.insns_per_thread = 40;
+    p.num_kernels = 1;
+    let cp = fuzz_checkpoint();
+    let resume = |c: &amoeba_gpu::sim::Checkpoint| {
+        amoeba_gpu::sim::gpu::run_benchmark_resume(&cfg, &p, Scheme::Baseline, 0xF2, false, c)
+    };
+    assert!(resume(&cp).is_ok(), "the untouched checkpoint must restore");
+    for si in 0..cp.sections.len() {
+        let full_len = cp.sections[si].bytes.len();
+        for keep in [full_len / 2, 1.min(full_len), 0] {
+            if keep >= full_len {
+                continue;
+            }
+            let mut broken = cp.clone();
+            broken.sections[si].bytes.truncate(keep);
+            let name = &cp.sections[si].name;
+            assert!(
+                resume(&broken).is_err(),
+                "section '{name}' truncated to {keep}/{full_len} bytes restored anyway"
+            );
+        }
+        // Dropping the section entirely is an error too.
+        let mut missing = cp.clone();
+        missing.sections.remove(si);
+        assert!(
+            resume(&missing).is_err(),
+            "checkpoint without section '{}' restored anyway",
+            cp.sections[si].name
+        );
+    }
+}
+
+/// The disk-memo parsers obey the same contract: every strict byte
+/// prefix of a valid spill file is a structured error, never a panic —
+/// for both the single-application and the stream flavor.
+#[test]
+fn prop_memo_truncation_never_panics() {
+    use amoeba_gpu::harness::{parse_sim_memo, parse_stream_memo, SweepExec};
+    let dir = std::env::temp_dir().join(format!("amoeba-memo-fuzz-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let exec = SweepExec::new(1).with_disk_memo(&dir);
+
+    let cfg = SystemConfig::tiny();
+    let mut p = bench("CP").unwrap();
+    p.num_ctas = 4;
+    p.insns_per_thread = 40;
+    p.num_kernels = 1;
+    let job = amoeba_gpu::harness::SimJob::new(cfg.clone(), p, Scheme::Baseline, 5);
+    exec.run(&job.cfg, &job.profile, job.scheme, job.seed);
+
+    let tenants = vec![(bench("CP").unwrap(), Scheme::Baseline)];
+    let mut streams = traffic_trace(&tenants, 1, 0, 3);
+    shrink_streams(&mut streams, 4, 40);
+    let sjob =
+        amoeba_gpu::harness::StreamJob::new(cfg, streams, PartitionPolicy::Static);
+    exec.run_stream(&sjob);
+
+    let mut fuzzed = (0usize, 0usize);
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        let bytes = std::fs::read(&path).unwrap();
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        if name.starts_with("sim-") {
+            for n in 0..bytes.len() {
+                assert!(parse_sim_memo(&bytes[..n], &job.key()).is_err(), "{name} prefix {n}");
+            }
+            assert!(parse_sim_memo(&bytes, &job.key()).is_ok(), "{name}: full file parses");
+            // A stale key is an error even on intact bytes.
+            let mut other = job.key();
+            other.seed ^= 1;
+            assert!(parse_sim_memo(&bytes, &other).is_err(), "{name}: stale key accepted");
+            fuzzed.0 += 1;
+        } else if name.starts_with("stream-") {
+            for n in 0..bytes.len() {
+                assert!(parse_stream_memo(&bytes[..n], &sjob.key()).is_err(), "{name} prefix {n}");
+            }
+            assert!(parse_stream_memo(&bytes, &sjob.key()).is_ok(), "{name}: full file parses");
+            fuzzed.1 += 1;
+        }
+    }
+    assert_eq!(fuzzed, (1, 1), "expected exactly one spill file of each kind");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Active-mask algebra invariants under random masks.
 #[test]
 fn prop_mask_algebra() {
