@@ -91,6 +91,20 @@ run_timed "checkpoint restore (dense)" env AMOEBA_DENSE=1 \
 run_timed "checkpoint fuzz" env AMOEBA_DENSE=0 \
     cargo test -q --test prop_invariants checkpoint memo_truncation
 
+echo "== intra-sim parallel determinism pass (AMOEBA_TICK_JOBS=4, DENSE=0/1) =="
+# Fanning one simulation's live cluster set across worker threads must be
+# bit-identical to the serial walk for every thread count — in-process
+# the tick_jobs tests compare jobs 1 vs {2,4} directly, and this pass
+# additionally pins the whole determinism + property suites with the
+# env-driven fan-out engaged, under both execution modes (the dense loop
+# ignores tick jobs by design; that, too, is asserted).
+run_timed "tick-jobs determinism (active-set)" env AMOEBA_DENSE=0 AMOEBA_TICK_JOBS=4 \
+    cargo test -q --test exec_determinism tick_jobs
+run_timed "tick-jobs determinism (dense)" env AMOEBA_DENSE=1 AMOEBA_TICK_JOBS=4 \
+    cargo test -q --test exec_determinism tick_jobs
+run_timed "tick-jobs invariants (active-set)" env AMOEBA_DENSE=0 AMOEBA_TICK_JOBS=4 \
+    cargo test -q --test prop_invariants tick_jobs
+
 echo "== bisect smoke (artificial divergence must localize) =="
 # A clean run vs the same run with a cluster killed at cycle 200: the
 # bisector must report a divergence (at a cycle after the injection).
@@ -170,7 +184,13 @@ awk -v d="$da" 'BEGIN { exit !(d >= 1.5) }' || {
     echo "ERROR: dense_active_speedup = ${da}x, below the 1.5x acceptance bar" >&2
     exit 1
 }
-echo "acceptance: cycle_skip_best ${best}x >= 2x, dense_active ${da}x >= 1.5x, server_sweep recorded"
+# Intra-simulation parallel ticking must be measured (hot 64-SM chip,
+# jobs 1 vs N, bit-identity asserted in-process by the bench).
+grep -q '"intra_sim_speedup":' BENCH_sweep.json || {
+    echo "ERROR: BENCH_sweep.json has no measured intra_sim_speedup" >&2
+    exit 1
+}
+echo "acceptance: cycle_skip_best ${best}x >= 2x, dense_active ${da}x >= 1.5x, server_sweep + intra_sim recorded"
 
 echo "== per-step timing summary =="
 printf '%s' "$TIMING_SUMMARY"

@@ -20,8 +20,8 @@ use amoeba_gpu::harness::{SimJob, SweepExec};
 use amoeba_gpu::runtime::serve;
 use amoeba_gpu::sim::fault::FaultTrace;
 use amoeba_gpu::sim::gpu::{
-    run_benchmark_faulted, run_benchmark_seeded, run_benchmark_seeded_dense, serve_streams_dense,
-    PartitionPolicy,
+    run_benchmark_faulted, run_benchmark_seeded, run_benchmark_seeded_dense,
+    run_benchmark_seeded_jobs, serve_streams_dense, PartitionPolicy,
 };
 use amoeba_gpu::workload::{
     bench, shrink_streams, traffic_trace, traffic_trace_qos, BenchProfile, KernelStream, Priority,
@@ -336,8 +336,43 @@ fn main() {
         load_s * 1e6
     );
 
+    // -------- Intra-simulation parallelism: fan the live cluster set of
+    // ONE simulation across worker threads. A hot 64-SM chip (32
+    // clusters, enough CTAs to keep them all live) is the regime the
+    // per-cluster outbox targets — cluster ticks dominate the cycle and
+    // the fixed-index merge is cheap against them. Bit-identity against
+    // the single-worker walk is asserted; the reported speedup is the
+    // whole-run wall-clock ratio, so merge overhead and the serial NoC /
+    // MC phases are all priced in.
+    eprintln!("[bench_sweep] intra-simulation parallel ticking (hot 64-SM chip):");
+    let mut is_cfg = quick_cfg();
+    is_cfg.num_sms = 64; // 32 clusters
+    is_cfg.num_mcs = 16;
+    let mut is_p = bench("BFS").unwrap();
+    is_p.num_ctas = 128; // 4 CTAs per cluster: every cluster stays hot
+    is_p.insns_per_thread = 120;
+    is_p.num_kernels = 1;
+    let tick_jobs = std::thread::available_parallelism().map_or(2, |n| n.get()).clamp(2, 8);
+    let t_i1 = Instant::now();
+    let is_serial = run_benchmark_seeded_jobs(&is_cfg, &is_p, Scheme::Baseline, SEED, false, 1)
+        .unwrap();
+    let is_serial_s = t_i1.elapsed().as_secs_f64();
+    let t_in = Instant::now();
+    let is_fanned =
+        run_benchmark_seeded_jobs(&is_cfg, &is_p, Scheme::Baseline, SEED, false, tick_jobs)
+            .unwrap();
+    let is_fanned_s = t_in.elapsed().as_secs_f64();
+    assert_eq!(is_serial, is_fanned, "intra-sim fan-out must be bit-identical to 1 worker");
+    let intra_sim_speedup = is_serial_s / is_fanned_s.max(1e-9);
+    eprintln!(
+        "[bench_sweep]   1 job {is_serial_s:.3} s, {tick_jobs} jobs {is_fanned_s:.3} s -> \
+         {intra_sim_speedup:.2}x on {} clusters (cycles={}, reports identical)",
+        is_cfg.num_sms / 2,
+        is_serial.cycles
+    );
+
     let json = format!(
-        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }},\n  \"fault_sweep\": {{ \"no_trace_s\": {:.3}, \"empty_trace_s\": {:.3}, \"overhead\": {:.3}, \"identical\": true }},\n  \"qos_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"preemptions\": {}, \"ctas_preempted\": {}, \"identical\": true }},\n  \"snapshot_sweep\": {{ \"sms\": {}, \"capture_cycle\": {}, \"bytes\": {}, \"save_s\": {:.6}, \"load_s\": {:.6}, \"unfired_arm_identical\": true, \"resume_identical\": true }}\n}}\n",
+        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }},\n  \"fault_sweep\": {{ \"no_trace_s\": {:.3}, \"empty_trace_s\": {:.3}, \"overhead\": {:.3}, \"identical\": true }},\n  \"qos_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"preemptions\": {}, \"ctas_preempted\": {}, \"identical\": true }},\n  \"snapshot_sweep\": {{ \"sms\": {}, \"capture_cycle\": {}, \"bytes\": {}, \"save_s\": {:.6}, \"load_s\": {:.6}, \"unfired_arm_identical\": true, \"resume_identical\": true }},\n  \"intra_sim\": {{ \"sms\": {}, \"clusters\": {}, \"tick_jobs\": {}, \"serial_s\": {:.3}, \"fanned_s\": {:.3}, \"identical\": true }},\n  \"intra_sim_speedup\": {:.3}\n}}\n",
         jobs.len(),
         misses,
         threads,
@@ -375,6 +410,12 @@ fn main() {
         snapshot_bytes,
         save_s,
         load_s,
+        is_cfg.num_sms,
+        is_cfg.num_sms / 2,
+        tick_jobs,
+        is_serial_s,
+        is_fanned_s,
+        intra_sim_speedup,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => eprintln!("[bench_sweep] wrote BENCH_sweep.json"),

@@ -92,8 +92,12 @@ impl BenchResult {
         let total_ns: u128 = samples.iter().map(|d| d.as_nanos()).sum();
         let mean_ns = total_ns / n as u128;
         let mean = Duration::from_nanos(mean_ns.min(u64::MAX as u128) as u64);
-        // Nearest-rank p95: ceil(0.95 * n) in 1-based rank terms.
-        let p95 = samples[((n * 95).div_ceil(100)).saturating_sub(1).min(n - 1)];
+        // Nearest-rank p95, routed through the tested [`p95_u64`] helper
+        // (integer nanoseconds, exact for any realistic sample) so the
+        // two rank computations can't drift apart.
+        let ns: Vec<u64> =
+            samples.iter().map(|d| d.as_nanos().min(u64::MAX as u128) as u64).collect();
+        let p95 = Duration::from_nanos(p95_u64(&ns));
         BenchResult { label: format!("{group}/{name}"), min, median, mean, p95, n }
     }
 }
@@ -206,6 +210,19 @@ mod tests {
         // 100 samples: rank 95.
         let v: Vec<u64> = (1..=100).collect();
         assert_eq!(p95_u64(&v), 95);
+    }
+
+    #[test]
+    fn bench_p95_agrees_with_p95_u64_on_sub_microsecond_samples() {
+        // 20 samples of 1..=20 ns: nearest rank 19. The shared helper
+        // must see whole nanoseconds — a coarser unit would truncate
+        // these to zero and let p95 fall below the median.
+        let samples: Vec<Duration> = (1..=20u64).map(Duration::from_nanos).collect();
+        let ns: Vec<u64> = samples.iter().map(|d| d.as_nanos() as u64).collect();
+        let r = BenchResult::from_samples("test", "rank", samples);
+        assert_eq!(r.p95, Duration::from_nanos(19));
+        assert_eq!(r.p95.as_nanos() as u64, p95_u64(&ns));
+        assert!(r.p95 >= r.median);
     }
 
     #[test]

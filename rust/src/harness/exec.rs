@@ -365,16 +365,28 @@ impl SweepExec {
         self
     }
 
-    /// Executor sized from the environment: `AMOEBA_JOBS` if set (and a
-    /// positive integer), else the machine's available parallelism. The
-    /// disk memo is ON, at `target/amoeba-memo` — `AMOEBA_MEMO_DIR`
-    /// overrides the directory, and the values `0`, `off`, or the empty
-    /// string disable spilling entirely.
+    /// Parse a worker-count env value, clamped to >= 1. `AMOEBA_JOBS=0`
+    /// used to fall through to the machine-parallelism default — the
+    /// opposite of what an explicit zero asks for; it now means "one
+    /// worker", the smallest executor that exists. Unparsable values
+    /// stay `None` (caller falls back). The simulator applies the same
+    /// clamp to `AMOEBA_TICK_JOBS` (`crate::sim::gpu`); both knobs are
+    /// execution policy and, like `AMOEBA_DENSE`, deliberately stay
+    /// outside the sweep-memo keys ([`JobKey`]/[`StreamKey`] carry no
+    /// thread counts), so cached reports are valid under any setting.
+    pub(crate) fn parse_jobs(v: &str) -> Option<usize> {
+        v.parse::<usize>().ok().map(|n| n.max(1))
+    }
+
+    /// Executor sized from the environment: `AMOEBA_JOBS` if set (an
+    /// integer, clamped to >= 1), else the machine's available
+    /// parallelism. The disk memo is ON, at `target/amoeba-memo` —
+    /// `AMOEBA_MEMO_DIR` overrides the directory, and the values `0`,
+    /// `off`, or the empty string disable spilling entirely.
     pub fn from_env() -> Self {
         let threads = std::env::var("AMOEBA_JOBS")
             .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&n| n > 0)
+            .and_then(|v| Self::parse_jobs(&v))
             .unwrap_or_else(|| {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
             });
@@ -790,6 +802,20 @@ mod tests {
         assert_eq!(SweepExec::new(0).threads(), 1);
         assert_eq!(SweepExec::serial().threads(), 1);
         assert!(SweepExec::from_env().threads() >= 1);
+    }
+
+    #[test]
+    fn jobs_env_values_clamp_to_at_least_one_worker() {
+        // `AMOEBA_JOBS=0` means "one worker", not "machine default" —
+        // a zero-worker executor cannot exist and the machine-width
+        // fallback is the opposite of what an explicit 0 asks for.
+        assert_eq!(SweepExec::parse_jobs("0"), Some(1));
+        assert_eq!(SweepExec::parse_jobs("1"), Some(1));
+        assert_eq!(SweepExec::parse_jobs("8"), Some(8));
+        // Unparsable values fall through to the machine default.
+        assert_eq!(SweepExec::parse_jobs(""), None);
+        assert_eq!(SweepExec::parse_jobs("many"), None);
+        assert_eq!(SweepExec::parse_jobs("-2"), None);
     }
 
     #[test]

@@ -174,6 +174,24 @@ impl TenantQos {
     }
 }
 
+/// Mean of an integer sample set, rounded to nearest (half away from
+/// zero) rather than truncated. Truncation biased every reported mean
+/// low by up to one unit — at milli-slowdown scale that is exactly the
+/// granularity [`qos_objective`] scores on, so the bias leaked into
+/// policy choice. Returns 0 for an empty set.
+pub(crate) fn rounded_mean_u64(values: impl Iterator<Item = u64>) -> u64 {
+    let (mut sum, mut n) = (0u64, 0u64);
+    for v in values {
+        sum += v;
+        n += 1;
+    }
+    if n == 0 {
+        0
+    } else {
+        (sum + n / 2) / n
+    }
+}
+
 /// Summarise a shared run's per-launch service records into one
 /// [`TenantQos`] per tenant. `streams` must be the same streams the
 /// report was produced from (it carries the priority / SLO specs).
@@ -196,11 +214,8 @@ pub fn qos_summary(report: &StreamReport, streams: &[KernelStream]) -> Vec<Tenan
             } else {
                 delays.iter().sum::<u64>() as f64 / delays.len() as f64
             };
-            let mean_slowdown_milli = if served.is_empty() {
-                0
-            } else {
-                served.iter().map(|l| l.slowdown_milli).sum::<u64>() / served.len() as u64
-            };
+            let mean_slowdown_milli =
+                rounded_mean_u64(served.iter().map(|l| l.slowdown_milli));
             TenantQos {
                 tenant: ti,
                 priority: streams[ti].priority,
@@ -575,6 +590,21 @@ mod tests {
             assert!(q.mean_queue_delay >= 0.0);
             assert!(q.p95_queue_delay as f64 >= q.mean_queue_delay.floor() - f64::EPSILON || q.served <= 1);
         }
+    }
+
+    #[test]
+    fn mean_slowdown_rounds_to_nearest_milli() {
+        // True mean 1000.5 milli: truncating division reported 1000
+        // (indistinguishable from an unqueued tenant); nearest-rank
+        // rounding keeps the half-milli of real queueing visible.
+        assert_eq!(rounded_mean_u64([1000, 1001].into_iter()), 1001);
+        // Below the half-way point the mean still rounds down.
+        assert_eq!(rounded_mean_u64([1000, 1000, 1001].into_iter()), 1000);
+        // And above it, up: mean 1250.75 -> 1251.
+        assert_eq!(rounded_mean_u64([1000, 1001, 1001, 2001].into_iter()), 1251);
+        // Exact means are untouched, and an unserved tenant stays 0.
+        assert_eq!(rounded_mean_u64([3000, 1000].into_iter()), 2000);
+        assert_eq!(rounded_mean_u64(std::iter::empty()), 0);
     }
 
     #[test]

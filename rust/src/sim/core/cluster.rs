@@ -11,7 +11,7 @@
 use crate::config::{SplitPolicy, SystemConfig};
 use crate::isa::{ActiveMask, KernelLaunch, MemSpace, Op, WarpId};
 use crate::sim::mem::{coalesce_fused_into, coalesce_into, Access, Cache};
-use crate::sim::noc::{Noc, Packet, Payload, Subnet};
+use crate::sim::noc::{Noc, NocPort, Packet, Payload, Subnet};
 use crate::stats::{SmStats, StallReason};
 use crate::workload::TraceGen;
 
@@ -682,6 +682,16 @@ impl SmCluster {
     /// Advance one cycle. `noc_nodes` are this cluster's NoC endpoints
     /// ([half0, half1] in per-SM layouts; both equal in fused layouts).
     pub fn tick(&mut self, now: u64, noc: &mut Noc, noc_nodes: [usize; 2], gen: &TraceGen) {
+        self.tick_port(now, &mut NocPort::Direct(noc), noc_nodes, gen);
+    }
+
+    /// [`SmCluster::tick`] against an abstract interconnect port: the
+    /// serial loops pass the shared [`Noc`] directly, the intra-parallel
+    /// cluster phase a private [`crate::sim::noc::ClusterOutbox`]. The
+    /// cluster cannot observe the difference (buffered admission is
+    /// exact by the outbox snapshot-and-reserve contract), which is what
+    /// keeps thread-count a pure wall-clock knob.
+    pub fn tick_port(&mut self, now: u64, noc: &mut NocPort<'_>, noc_nodes: [usize; 2], gen: &TraceGen) {
         debug_assert!(self.sched_coherent(), "ready index diverged from warp state");
         self.stats.cycles += 1;
         match self.mode {
@@ -1334,7 +1344,7 @@ impl SmCluster {
 
     /// Process LSU transactions: exactly one `Cache::access` per
     /// transaction, with injection retried in a separate state.
-    fn process_lsu(&mut self, now: u64, noc: &mut Noc, noc_nodes: [usize; 2]) {
+    fn process_lsu(&mut self, now: u64, noc: &mut NocPort<'_>, noc_nodes: [usize; 2]) {
         for _ in 0..LSU_WIDTH {
             let Some(tx) = self.lsu.front().copied() else { break };
             let ci = self.cache_idx(tx.half);
@@ -1450,7 +1460,7 @@ impl SmCluster {
         }
     }
 
-    fn inject_request(&mut self, now: u64, noc: &mut Noc, node: usize, line: u64, is_write: bool) -> bool {
+    fn inject_request(&mut self, now: u64, noc: &mut NocPort<'_>, node: usize, line: u64, is_write: bool) -> bool {
         let num_mcs = self.cfg.num_mcs;
         let mc = crate::sim::mem::partition_of(line, self.cfg.line_bytes, num_mcs);
         let dst = noc.nodes() - num_mcs + mc;

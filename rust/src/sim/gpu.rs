@@ -84,7 +84,7 @@ use crate::isa::KernelLaunch;
 use crate::sim::core::{ClusterMode, DivergenceMode, SmCluster};
 use crate::sim::fault::{FaultEvent, FaultKind, FaultTrace, RunOutcome};
 use crate::sim::mem::{MemPartition, PartitionReply};
-use crate::sim::noc::{ChipLayout, Noc, Packet, Payload, Subnet};
+use crate::sim::noc::{ChipLayout, ClusterOutbox, Noc, NocPort, Packet, Payload, Subnet};
 use crate::sim::sched::ActiveSet;
 use crate::sim::snapshot::{ByteReader, ByteWriter, Checkpoint};
 use crate::stats::{ChipStats, SmStats};
@@ -96,6 +96,24 @@ pub(crate) fn dense_env() -> bool {
     static DENSE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
     *DENSE.get_or_init(|| {
         std::env::var("AMOEBA_DENSE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+    })
+}
+
+/// Cached `AMOEBA_TICK_JOBS` worker count for intra-simulation parallel
+/// ticking: how many threads [`Gpu::tick_active`] fans the live cluster
+/// set across *within one cycle*. Defaults to 1 (the serial loop);
+/// unparsable or zero values clamp to 1. Like `AMOEBA_DENSE`, this is
+/// pure execution policy — reports are bit-identical for any count
+/// (enforced in `tests/exec_determinism.rs`) — so it deliberately stays
+/// outside the sweep-memo fingerprints in [`crate::harness`].
+pub(crate) fn tick_jobs_env() -> usize {
+    static JOBS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *JOBS.get_or_init(|| {
+        std::env::var("AMOEBA_TICK_JOBS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(1)
+            .max(1)
     })
 }
 
@@ -507,6 +525,13 @@ pub struct Gpu {
     /// Force the dense cycle loop (no event-horizon skipping). Defaults
     /// to the `AMOEBA_DENSE` env var; see [`Gpu::set_dense`].
     dense: bool,
+    /// Intra-simulation worker count for the active-set cluster phase
+    /// (>= 1; 1 = serial). Defaults to `AMOEBA_TICK_JOBS`; see
+    /// [`Gpu::set_tick_jobs`]. The dense reference loop ignores it.
+    tick_jobs: usize,
+    /// Reusable per-cluster injection buffers for the parallel cluster
+    /// phase (scratch — rebuilt each cycle, never checkpointed).
+    outboxes: Vec<ClusterOutbox>,
     /// Active-set scheduler state: component ids are clusters
     /// `0..n_clusters`, then partitions, then the interconnect last.
     /// Unused (all components permanently active) in dense mode.
@@ -585,6 +610,8 @@ impl Gpu {
             decisions: Vec::new(),
             reply_scratch: Vec::with_capacity(MC_REPLY_BUDGET),
             dense: dense_env(),
+            tick_jobs: tick_jobs_env(),
+            outboxes: Vec::new(),
             sched: ActiveSet::new(n_clusters + cfg.num_mcs + 1),
             noc_seen_epoch: 0,
             wake_scratch: Vec::new(),
@@ -608,6 +635,15 @@ impl Gpu {
     /// [`SimReport`]s; the dense loop is the auditing reference.
     pub fn set_dense(&mut self, dense: bool) {
         self.dense = dense;
+    }
+
+    /// Select the intra-simulation worker count for the active-set
+    /// cluster phase (clamped to >= 1; default from `AMOEBA_TICK_JOBS`).
+    /// Pure wall-clock policy: any count produces bit-identical reports
+    /// by the outbox/fixed-merge-order contract, and the dense reference
+    /// loop ([`Gpu::set_dense`]) always ticks serially regardless.
+    pub fn set_tick_jobs(&mut self, jobs: usize) {
+        self.tick_jobs = jobs.max(1);
     }
 
     // ------------------------------------------------------------------
@@ -1454,15 +1490,23 @@ impl Gpu {
 
         self.chip.cycles += 1;
 
-        // 1. Live SM clusters (table order, as the dense loop).
-        for ci in 0..self.clusters.len() {
-            if !self.sched.is_active(ci) {
-                continue;
+        // 1. Live SM clusters (table order, as the dense loop). With
+        // `tick_jobs > 1` the live set is fanned across worker threads,
+        // each cluster injecting into a private outbox; the outboxes
+        // merge into the fabric in cluster-index order afterwards, so
+        // the NoC observes exactly the serial loop's sequence.
+        if self.tick_jobs > 1 {
+            self.tick_clusters_parallel(now, gens);
+        } else {
+            for ci in 0..self.clusters.len() {
+                if !self.sched.is_active(ci) {
+                    continue;
+                }
+                let nodes = self.nodes_of(ci);
+                self.clusters[ci].tick(now, &mut self.noc, nodes, gens.get(ci));
+                let ev = self.clusters[ci].next_event(now + 1, gens.get(ci));
+                self.maybe_park(ci, now, ev);
             }
-            let nodes = self.nodes_of(ci);
-            self.clusters[ci].tick(now, &mut self.noc, nodes, gens.get(ci));
-            let ev = self.clusters[ci].next_event(now + 1, gens.get(ci));
-            self.maybe_park(ci, now, ev);
         }
 
         // 2. Interconnect. A parked fabric is revived by any injection —
@@ -1545,6 +1589,94 @@ impl Gpu {
         }
 
         self.now += 1;
+    }
+
+    /// Phase 1 of [`Gpu::tick_active`] fanned across `self.tick_jobs`
+    /// scoped worker threads. Determinism is by construction:
+    ///
+    /// * each live cluster ticks against a private [`ClusterOutbox`]
+    ///   whose admission mirrors the shared fabric exactly — the free
+    ///   slots of the cluster's *own* source routers are snapshotted at
+    ///   phase start ([`Noc::begin_outbox`]), and source routers are
+    ///   disjoint across clusters, so a parallel accept/refuse decision
+    ///   equals the serial loop's;
+    /// * the cluster's post-tick horizon is probed inside the worker
+    ///   (`next_event` is `&self` and sees only cluster-local state,
+    ///   which the outbox keeps identical to the serial loop's);
+    /// * after the join, outboxes drain into the NoC in cluster-index
+    ///   order ([`Noc::drain_outbox`]) and parking decisions replay in
+    ///   the same order, so every shared-state mutation happens in the
+    ///   serial sequence bit-for-bit.
+    ///
+    /// Thread count is therefore a pure wall-clock knob, like
+    /// `AMOEBA_DENSE` — `tests/exec_determinism.rs` pins jobs-1 == jobs-N
+    /// on every scheme, stream, and fault path.
+    fn tick_clusters_parallel(&mut self, now: u64, gens: &GenMap) {
+        let n_clusters = self.clusters.len();
+        let mut outboxes = std::mem::take(&mut self.outboxes);
+        outboxes.resize_with(n_clusters, ClusterOutbox::default);
+        // Arm the live clusters' outboxes serially (cheap snapshots),
+        // pairing each with disjoint &mut borrows for the workers.
+        let sched = &self.sched;
+        let noc = &self.noc;
+        let layout = &self.layout;
+        let mut live: Vec<(usize, &mut SmCluster, &mut ClusterOutbox)> = Vec::new();
+        for (ci, (cl, ob)) in self.clusters.iter_mut().zip(outboxes.iter_mut()).enumerate() {
+            if !sched.is_active(ci) {
+                continue;
+            }
+            noc.begin_outbox(ob, layout.nodes_of(ci));
+            live.push((ci, cl, ob));
+        }
+        if !live.is_empty() {
+            let n_workers = self.tick_jobs.min(live.len());
+            let chunk = live.len().div_ceil(n_workers);
+            std::thread::scope(|s| {
+                // The spawn loop holds the last chunk for the current
+                // thread: with one worker this degenerates to an inline
+                // serial pass with zero spawns.
+                let mut chunks = live.chunks_mut(chunk);
+                let last = chunks.next_back();
+                let handles: Vec<_> = chunks
+                    .map(|batch| s.spawn(move || Self::tick_cluster_batch(batch, now, gens, layout)))
+                    .collect();
+                if let Some(batch) = last {
+                    Self::tick_cluster_batch(batch, now, gens, layout);
+                }
+                for h in handles {
+                    h.join().expect("intra-sim tick worker panicked");
+                }
+            });
+        }
+        drop(live);
+        // Merge in cluster-index order: park + drain per cluster, the
+        // exact interleaving of the serial loop.
+        for (ci, ob) in outboxes.iter_mut().enumerate() {
+            if !self.sched.is_active(ci) {
+                continue;
+            }
+            let ev = ob.ev;
+            self.maybe_park(ci, now, ev);
+            self.noc.drain_outbox(ob);
+        }
+        self.outboxes = outboxes;
+    }
+
+    /// One worker's share of the parallel cluster phase: tick each
+    /// cluster against its outbox and record its `now + 1` horizon for
+    /// the post-join merge loop.
+    fn tick_cluster_batch(
+        batch: &mut [(usize, &mut SmCluster, &mut ClusterOutbox)],
+        now: u64,
+        gens: &GenMap,
+        layout: &ChipLayout,
+    ) {
+        for (ci, cl, ob) in batch.iter_mut() {
+            let nodes = layout.nodes_of(*ci);
+            let gen = gens.get(*ci);
+            cl.tick_port(now, &mut NocPort::Buffered(&mut **ob), nodes, gen);
+            ob.ev = cl.next_event(now + 1, gen);
+        }
     }
 
     /// Is every cluster + partition + the NoC fully drained?
@@ -2875,6 +3007,45 @@ pub fn run_benchmark_faulted_dense(
     Ok(gpu.run(profile, seed))
 }
 
+/// [`run_benchmark_seeded_dense`] with the intra-simulation worker count
+/// also pinned explicitly, so tests and benches can compare tick-jobs 1
+/// vs N in-process, independent of the `AMOEBA_TICK_JOBS` environment.
+/// Bit-identical for any count by the outbox/fixed-merge-order contract
+/// (and the dense loop ignores `tick_jobs` entirely).
+pub fn run_benchmark_seeded_jobs(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+    dense: bool,
+    tick_jobs: usize,
+) -> crate::errors::Result<SimReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, scheme, controller)?;
+    gpu.set_dense(dense);
+    gpu.set_tick_jobs(tick_jobs);
+    Ok(gpu.run(profile, seed))
+}
+
+/// [`run_benchmark_faulted_dense`] with the intra-simulation worker
+/// count pinned explicitly (see [`run_benchmark_seeded_jobs`]).
+pub fn run_benchmark_faulted_jobs(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+    dense: bool,
+    tick_jobs: usize,
+    faults: &FaultTrace,
+) -> crate::errors::Result<SimReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, scheme, controller)?;
+    gpu.set_dense(dense);
+    gpu.set_tick_jobs(tick_jobs);
+    gpu.set_fault_trace(faults)?;
+    Ok(gpu.run(profile, seed))
+}
+
 /// [`run_benchmark_seeded_dense`] with a checkpoint armed at `snap_cycle`:
 /// the first main-loop cycle boundary at or past it serializes the whole
 /// machine (pre-injection, pre-dispatch). Returns the finished report and
@@ -3469,6 +3640,25 @@ pub fn serve_streams_dense(
     let controller = Controller::native(cfg);
     let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller)?;
     gpu.set_dense(dense);
+    gpu.run_streams(streams, policy)
+}
+
+/// [`serve_streams_dense`] with the intra-simulation worker count also
+/// pinned explicitly (see [`run_benchmark_seeded_jobs`]) — the server
+/// path shares [`Gpu::tick_active`], so multi-tenant runs (including
+/// preemption and partition-scoped drains) are equally thread-count
+/// invariant.
+pub fn serve_streams_jobs(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    policy: PartitionPolicy,
+    dense: bool,
+    tick_jobs: usize,
+) -> crate::errors::Result<StreamReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller)?;
+    gpu.set_dense(dense);
+    gpu.set_tick_jobs(tick_jobs);
     gpu.run_streams(streams, policy)
 }
 

@@ -209,6 +209,110 @@ pub enum Subnet {
     Reply = 1,
 }
 
+/// A cluster's private injection buffer for one intra-parallel cycle.
+///
+/// When `Gpu::tick_active` fans the live clusters across worker threads,
+/// each cluster injects into one of these instead of the shared [`Noc`].
+/// Admission is decided *locally but exactly*: the free slots of the
+/// cluster's own source routers are snapshotted at phase start
+/// ([`Noc::begin_outbox`]) and reserved per accepted packet. Source
+/// routers are disjoint across clusters and nothing else injects during
+/// the cluster phase, so the snapshot cannot go stale — every
+/// accept/refuse decision equals the serial loop's, and the reserved
+/// capacity guarantees the deferred [`Noc::inject`] succeeds when
+/// [`Noc::drain_outbox`] merges the buffers in cluster-index order
+/// (reproducing the serial injection sequence bit-for-bit).
+#[derive(Debug)]
+pub struct ClusterOutbox {
+    /// Endpoint count of the fabric (for [`NocPort::nodes`]).
+    nodes: usize,
+    /// Request-gate state at phase start (constant during the phase:
+    /// the gate only moves at reconfiguration boundaries).
+    req_gate: bool,
+    /// Perfect fabric (admission is unconditional)?
+    perfect: bool,
+    /// This cluster's NoC endpoints ([half0, half1]; equal when fused).
+    src_nodes: [usize; 2],
+    /// Remaining injection slots per source router, snapshotted at
+    /// phase start and decremented per accepted packet.
+    free: [usize; 2],
+    /// Accepted packets, in injection order.
+    pkts: Vec<(Subnet, Packet)>,
+    /// The cluster's post-tick horizon, carried back to the merge loop
+    /// (scratch for the parallel phase; not interconnect state).
+    pub ev: crate::sim::NextEvent,
+}
+
+impl Default for ClusterOutbox {
+    fn default() -> Self {
+        ClusterOutbox {
+            nodes: 0,
+            req_gate: false,
+            perfect: false,
+            src_nodes: [0; 2],
+            free: [0; 2],
+            pkts: Vec::new(),
+            ev: crate::sim::NextEvent::Idle,
+        }
+    }
+}
+
+impl ClusterOutbox {
+    /// Mirror of [`Noc::inject`]'s admission decision against the
+    /// snapshotted state. Clusters only source Request-subnet traffic,
+    /// which is what the free-slot snapshot covers.
+    fn inject(&mut self, subnet: Subnet, pkt: Packet) -> bool {
+        debug_assert!(pkt.src < self.nodes && pkt.dst < self.nodes);
+        if self.req_gate && subnet == Subnet::Request {
+            return false;
+        }
+        if self.perfect || pkt.src == pkt.dst {
+            self.pkts.push((subnet, pkt));
+            return true;
+        }
+        debug_assert_eq!(subnet, Subnet::Request, "outbox snapshot covers Request sources only");
+        let slot = usize::from(pkt.src == self.src_nodes[1] && self.src_nodes[1] != self.src_nodes[0]);
+        debug_assert_eq!(pkt.src, self.src_nodes[slot], "packet from a foreign source router");
+        if self.free[slot] == 0 {
+            return false;
+        }
+        self.free[slot] -= 1;
+        self.pkts.push((subnet, pkt));
+        true
+    }
+}
+
+/// How a cluster reaches the interconnect during its tick: directly (the
+/// serial loops) or through its private per-cycle [`ClusterOutbox`] (the
+/// intra-parallel cluster phase). Both expose the identical
+/// inject/nodes surface, and the buffered admission is exact by the
+/// snapshot-and-reserve contract — so a cluster cannot observe which
+/// port it was handed.
+pub enum NocPort<'a> {
+    /// Mutate the shared fabric immediately.
+    Direct(&'a mut Noc),
+    /// Buffer injections for an index-ordered merge after the join.
+    Buffered(&'a mut ClusterOutbox),
+}
+
+impl NocPort<'_> {
+    /// Endpoint count (see [`Noc::nodes`]).
+    pub fn nodes(&self) -> usize {
+        match self {
+            NocPort::Direct(noc) => noc.nodes(),
+            NocPort::Buffered(out) => out.nodes,
+        }
+    }
+
+    /// Try to inject `pkt` at its source node (see [`Noc::inject`]).
+    pub fn inject(&mut self, subnet: Subnet, pkt: Packet) -> bool {
+        match self {
+            NocPort::Direct(noc) => noc.inject(subnet, pkt),
+            NocPort::Buffered(out) => out.inject(subnet, pkt),
+        }
+    }
+}
+
 /// The interconnect: a mesh (or ideal fabric) over `nodes` endpoints.
 ///
 /// The router sweep is **active-set**: only routers with queued packets
@@ -400,6 +504,43 @@ impl Noc {
                     false
                 }
             }
+        }
+    }
+
+    /// Arm `out` as one cluster's injection buffer for this cycle's
+    /// parallel cluster phase: snapshot the request gate, the fabric
+    /// mode, and the free injection slots of the cluster's own source
+    /// routers (`src_nodes`). Valid while nothing else injects at those
+    /// routers — which the cluster phase guarantees, since source
+    /// routers are cluster-private and MCs inject only in later phases.
+    pub fn begin_outbox(&self, out: &mut ClusterOutbox, src_nodes: [usize; 2]) {
+        out.nodes = self.nodes;
+        out.req_gate = self.req_gate;
+        out.perfect = self.mode == NocMode::Perfect;
+        out.src_nodes = src_nodes;
+        out.pkts.clear();
+        out.ev = crate::sim::NextEvent::Idle;
+        if out.perfect {
+            out.free = [0; 2];
+        } else {
+            let req = &self.routers[Subnet::Request as usize];
+            out.free = [
+                req[src_nodes[0]].inject_free(self.inject_depth),
+                req[src_nodes[1]].inject_free(self.inject_depth),
+            ];
+        }
+    }
+
+    /// Merge one armed outbox into the fabric: replay its accepted
+    /// packets through [`Noc::inject`] in their original order. Called
+    /// in cluster-index order after the join, this reproduces exactly
+    /// the injection sequence the serial cluster loop would have
+    /// produced; the reserved free slots make every replayed inject
+    /// succeed.
+    pub fn drain_outbox(&mut self, out: &mut ClusterOutbox) {
+        for (subnet, pkt) in out.pkts.drain(..) {
+            let _accepted = self.inject(subnet, pkt);
+            debug_assert!(_accepted, "outbox reserved a slot the fabric then refused");
         }
     }
 

@@ -53,6 +53,14 @@ impl Router {
         self.queue.len() < depth.min(self.capacity)
     }
 
+    /// Number of injections [`Router::inject`] would currently accept —
+    /// the free-slot snapshot a [`super::ClusterOutbox`] reserves
+    /// against, so buffered admission decisions match the live queue
+    /// exactly.
+    pub fn inject_free(&self, depth: usize) -> usize {
+        depth.min(self.capacity).saturating_sub(self.queue.len())
+    }
+
     /// Accept a packet arriving from a neighbouring router at `ready`.
     /// Transit traffic may overflow `capacity` by a small margin — real
     /// meshes use credits; we allow the in-flight hop to land to avoid

@@ -13,10 +13,10 @@ use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::harness::{SimJob, StreamJob, SweepExec};
 use amoeba_gpu::sim::fault::{FaultEvent, FaultKind, FaultTrace};
 use amoeba_gpu::sim::gpu::{
-    run_benchmark_faulted_dense, run_benchmark_resume, run_benchmark_seeded,
-    run_benchmark_seeded_dense, run_benchmark_snapshot, serve_streams_dense,
-    serve_streams_faulted_dense, serve_streams_resume, serve_streams_snapshot, PartitionPolicy,
-    SimReport, StreamReport,
+    run_benchmark_faulted_dense, run_benchmark_faulted_jobs, run_benchmark_resume,
+    run_benchmark_seeded, run_benchmark_seeded_dense, run_benchmark_seeded_jobs,
+    run_benchmark_snapshot, serve_streams_dense, serve_streams_faulted_dense, serve_streams_jobs,
+    serve_streams_resume, serve_streams_snapshot, PartitionPolicy, SimReport, StreamReport,
 };
 use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace, KernelStream, Priority};
 
@@ -680,4 +680,136 @@ fn serial_and_parallel_executors_agree() {
     for (x, y) in a.iter().zip(&again) {
         assert!(std::sync::Arc::ptr_eq(x, y), "cached Arc must be returned");
     }
+}
+
+// ----------------------------------------------------------------------
+// Intra-simulation parallel ticking (`AMOEBA_TICK_JOBS`): fanning the
+// live cluster set across worker threads within one cycle is pure
+// wall-clock policy — per-cluster outboxes with snapshot-and-reserve
+// admission, merged in cluster-index order, reproduce the serial
+// injection sequence exactly, so reports are bit-identical for any
+// worker count.
+// ----------------------------------------------------------------------
+
+/// Threads-1 vs threads-N on the scheme grid: every counter, decision
+/// probability bit, and metric feature bit must survive the fan-out.
+#[test]
+fn tick_jobs_bit_identical_across_schemes() {
+    let (_cfg, jobs) = grid();
+    for job in &jobs {
+        let label = format!("tick-jobs {} under {}", job.profile.name, job.scheme);
+        let serial =
+            run_benchmark_seeded_jobs(&job.cfg, &job.profile, job.scheme, job.seed, false, 1)
+                .unwrap();
+        for threads in [2usize, 4] {
+            let fanned = run_benchmark_seeded_jobs(
+                &job.cfg, &job.profile, job.scheme, job.seed, false, threads,
+            )
+            .unwrap();
+            assert_reports_identical(&serial, &fanned, &format!("{label} x{threads}"));
+        }
+    }
+}
+
+/// The same contract with DynSplit transitions live: split/rebalance/
+/// re-fuse timers use absolute `now` arithmetic that must not notice the
+/// thread fan-out (the horizon probe runs inside the workers).
+#[test]
+fn tick_jobs_bit_identical_with_active_dynamic_splits() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    cfg.split_threshold = 0.05;
+    cfg.split_check_period = 128;
+    cfg.rebalance_period = 256;
+    let mut p = bench("RAY").unwrap();
+    p.num_ctas = 10;
+    p.insns_per_thread = 100;
+    p.num_kernels = 2;
+    for scheme in [Scheme::DirectSplit, Scheme::WarpRegroup, Scheme::Hetero] {
+        let label = format!("tick-jobs split-active RAY under {scheme}");
+        let serial = run_benchmark_seeded_jobs(&cfg, &p, scheme, 0xA7, false, 1).unwrap();
+        for threads in [2usize, 4] {
+            let fanned = run_benchmark_seeded_jobs(&cfg, &p, scheme, 0xA7, false, threads).unwrap();
+            assert_reports_identical(&serial, &fanned, &format!("{label} x{threads}"));
+        }
+    }
+}
+
+/// Multi-tenant streams with a CTA-boundary preemption in flight: the
+/// server loop shares `tick_active`, so the victim requeue, the frozen
+/// cluster, and every launch record must be thread-count invariant.
+#[test]
+fn tick_jobs_bit_identical_streams_with_preemption() {
+    let (cfg, streams) = preemption_grid();
+    let serial = serve_streams_jobs(&cfg, &streams, PartitionPolicy::Adaptive, false, 1).unwrap();
+    assert!(serial.chip.preemptions >= 1, "the mix must actually preempt, or this pins nothing");
+    for threads in [2usize, 4] {
+        let fanned =
+            serve_streams_jobs(&cfg, &streams, PartitionPolicy::Adaptive, false, threads).unwrap();
+        assert_stream_reports_identical(
+            &serial,
+            &fanned,
+            &format!("tick-jobs preemption streams x{threads}"),
+        );
+    }
+    // The mixed Hetero/DynSplit-active trace under both policies too.
+    let (cfg, streams) = stream_grid();
+    for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
+        let serial = serve_streams_jobs(&cfg, &streams, policy, false, 1).unwrap();
+        for threads in [2usize, 4] {
+            let fanned = serve_streams_jobs(&cfg, &streams, policy, false, threads).unwrap();
+            assert_stream_reports_identical(
+                &serial,
+                &fanned,
+                &format!("tick-jobs streams under {policy} x{threads}"),
+            );
+        }
+    }
+}
+
+/// Faulted runs: retirement, half-SM death, MC stalls and NoC degrade
+/// all mutate shared state at cycle boundaries — none of it may observe
+/// the worker count.
+#[test]
+fn tick_jobs_bit_identical_faulted() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    let trace = mixed_fault_trace();
+    for name in ["BFS", "RAY"] {
+        let mut p = bench(name).unwrap();
+        p.num_ctas = 8;
+        p.insns_per_thread = 80;
+        p.num_kernels = 1;
+        for scheme in [Scheme::Baseline, Scheme::Hetero] {
+            let label = format!("tick-jobs faulted {name} under {scheme}");
+            let serial =
+                run_benchmark_faulted_jobs(&cfg, &p, scheme, 0xD37, false, 1, &trace).unwrap();
+            assert_eq!(serial.chip.faults_injected, trace.len() as u64, "{label}: faults land");
+            for threads in [2usize, 4] {
+                let fanned =
+                    run_benchmark_faulted_jobs(&cfg, &p, scheme, 0xD37, false, threads, &trace)
+                        .unwrap();
+                assert_reports_identical(&serial, &fanned, &format!("{label} x{threads}"));
+            }
+        }
+    }
+}
+
+/// The dense reference loop ignores the worker count entirely (it is the
+/// auditing baseline and always ticks serially), and the fanned
+/// active-set run equals that dense reference — closing the triangle
+/// dense == skip == fanned-skip.
+#[test]
+fn tick_jobs_ignored_by_dense_and_matches_dense() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.max_cycles = 1_500_000;
+    let mut p = bench("BFS").unwrap();
+    p.num_ctas = 8;
+    p.insns_per_thread = 80;
+    p.num_kernels = 1;
+    let dense1 = run_benchmark_seeded_jobs(&cfg, &p, Scheme::Hetero, 0xD37, true, 1).unwrap();
+    let dense4 = run_benchmark_seeded_jobs(&cfg, &p, Scheme::Hetero, 0xD37, true, 4).unwrap();
+    assert_reports_identical(&dense1, &dense4, "dense loop must ignore tick-jobs");
+    let fanned = run_benchmark_seeded_jobs(&cfg, &p, Scheme::Hetero, 0xD37, false, 4).unwrap();
+    assert_reports_identical(&dense1, &fanned, "fanned active-set vs dense reference");
 }

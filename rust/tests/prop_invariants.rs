@@ -8,8 +8,8 @@ use amoeba_gpu::isa::{AccessPattern, ActiveMask};
 use amoeba_gpu::sim::core::{ClusterMode, SmCluster};
 use amoeba_gpu::sim::fault::{FaultEvent, FaultKind, FaultTrace};
 use amoeba_gpu::sim::gpu::{
-    run_benchmark_faulted, run_benchmark_seeded, serve_streams, serve_streams_dense,
-    serve_streams_faulted, PartitionPolicy,
+    run_benchmark_faulted, run_benchmark_seeded, run_benchmark_seeded_jobs, serve_streams,
+    serve_streams_dense, serve_streams_faulted, serve_streams_jobs, PartitionPolicy,
 };
 use amoeba_gpu::sim::mem::{
     coalesce, coalesce_fused, Access, Cache, DramRequest, MemPartition, MemoryController,
@@ -1009,6 +1009,56 @@ fn prop_empty_fault_trace_is_bit_identical_to_none() {
         let plain = run_benchmark_seeded(&cfg, &p, scheme, seed).unwrap();
         let empty = run_benchmark_faulted(&cfg, &p, scheme, seed, &FaultTrace::default()).unwrap();
         assert_eq!(plain, empty, "case {case}: {} under {scheme} seed {seed:#x}", p.name);
+    }
+}
+
+/// Randomised wake-completeness property under intra-simulation
+/// parallelism: for any profile / scheme / seed, fanning the active
+/// cluster set across worker threads leaves every report bit-identical
+/// to the serial walk, for every thread count. This is the contract the
+/// per-cluster outbox design rests on — parked-window replay (which
+/// clusters park, and when they wake) and NoC admission both depend
+/// only on the fixed cluster-index merge order, never on which worker
+/// ticked a cluster or when it finished.
+#[test]
+fn prop_tick_jobs_thread_count_invariance() {
+    let names = ["CP", "BFS", "RAY", "MUM"];
+    let mut rng = Pcg32::new(0x71C6, 24);
+    for case in 0..5 {
+        let cfg = SystemConfig::tiny();
+        let mut p = bench(names[rng.next_bounded(4) as usize]).unwrap();
+        p.num_ctas = 4 + rng.next_bounded(5);
+        p.insns_per_thread = 30 + rng.next_bounded(60);
+        p.num_kernels = 1;
+        let scheme = Scheme::ALL[rng.next_bounded(Scheme::ALL.len() as u32) as usize];
+        let seed = rng.next_u64();
+        let serial = run_benchmark_seeded_jobs(&cfg, &p, scheme, seed, false, 1).unwrap();
+        for jobs in [2usize, 3] {
+            let fanned = run_benchmark_seeded_jobs(&cfg, &p, scheme, seed, false, jobs).unwrap();
+            assert_eq!(
+                serial, fanned,
+                "case {case}: {} under {scheme} seed {seed:#x} diverged at {jobs} tick jobs",
+                p.name
+            );
+        }
+    }
+    // Multi-tenant serving parks and wakes clusters far more often than a
+    // single benchmark run — the replayed wake windows must also be
+    // thread-count-invariant.
+    let tenants =
+        vec![(bench("BFS").unwrap(), Scheme::Hetero), (bench("RAY").unwrap(), Scheme::Baseline)];
+    let mut cfg = SystemConfig::tiny();
+    cfg.num_sms = 8;
+    cfg.num_mcs = 4;
+    cfg.max_cycles = 1_500_000;
+    let mut streams = traffic_trace(&tenants, 2, 3_000, rng.next_u64());
+    shrink_streams(&mut streams, 5, 60);
+    for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
+        let serial = serve_streams_jobs(&cfg, &streams, policy, false, 1).unwrap();
+        for jobs in [2usize, 3] {
+            let fanned = serve_streams_jobs(&cfg, &streams, policy, false, jobs).unwrap();
+            assert_eq!(serial, fanned, "{policy:?} streams diverged at {jobs} tick jobs");
+        }
     }
 }
 
