@@ -105,6 +105,29 @@ run_timed "tick-jobs determinism (dense)" env AMOEBA_DENSE=1 AMOEBA_TICK_JOBS=4 
 run_timed "tick-jobs invariants (active-set)" env AMOEBA_DENSE=0 AMOEBA_TICK_JOBS=4 \
     cargo test -q --test prop_invariants tick_jobs
 
+echo "== adaptive tick-jobs pass (AMOEBA_TICK_JOBS=auto, DENSE=0/1) =="
+# The auto sizer picks the worker count from the live-cluster census each
+# cycle; bit-identity vs the 1-worker walk must hold for every census it
+# can produce, so the same tick_jobs suite runs again with the env knob
+# set to auto (the dense loop ignores tick jobs either way — asserted).
+run_timed "tick-jobs auto (active-set)" env AMOEBA_DENSE=0 AMOEBA_TICK_JOBS=auto \
+    cargo test -q --test exec_determinism tick_jobs
+run_timed "tick-jobs auto (dense)" env AMOEBA_DENSE=1 AMOEBA_TICK_JOBS=auto \
+    cargo test -q --test exec_determinism tick_jobs
+
+echo "== fleet determinism pass (serial vs parallel chips, DENSE=0/1) =="
+# The pool scheduler fans per-chip shards across the SweepExec; the fleet
+# tests compare 1-thread vs N-thread executors in-process, and this pass
+# pins the comparison under both execution modes, plus the conservation
+# property (every launch served exactly once, or honestly rejected or
+# dropped — never double-served, never silently lost).
+run_timed "fleet determinism (active-set)" env AMOEBA_DENSE=0 \
+    cargo test -q --test exec_determinism fleet
+run_timed "fleet determinism (dense)" env AMOEBA_DENSE=1 \
+    cargo test -q --test exec_determinism fleet
+run_timed "fleet conservation (active-set)" env AMOEBA_DENSE=0 \
+    cargo test -q --test prop_invariants fleet
+
 echo "== bisect smoke (artificial divergence must localize) =="
 # A clean run vs the same run with a cluster killed at cycle 200: the
 # bisector must report a divergence (at a cycle after the injection).
@@ -125,11 +148,24 @@ run_timed "figures --all --quick" ./target/release/figures --all --quick > /dev/
 echo "== qos figure (quick mode: priority mix x load, partition-scoped drain) =="
 run_timed "figures --fig qos --quick" ./target/release/figures --fig qos --quick > /dev/null
 
+echo "== fleet figure (quick mode: chips x tenants pool sweep + chip loss) =="
+run_timed "figures --fig fleet --quick" ./target/release/figures --fig fleet --quick > /dev/null
+
 echo "== serve-sim smoke =="
 run_timed "amoeba serve-sim --quick" ./target/release/amoeba serve-sim --quick > /dev/null
 run_timed "serve-sim qos smoke" ./target/release/amoeba serve-sim --quick \
     --policy adaptive --bursty \
     --tenants SM:hetero:high@400_000,BFS:warp_regrouping,CP:baseline:low > /dev/null
+
+echo "== serve-fleet smoke (healthy pool + chip-loss migration) =="
+run_timed "serve-fleet smoke" ./target/release/amoeba serve-fleet --quick > /dev/null
+# Chip 0 loses all four clusters at cycle 10 (the quick pool chip is
+# 8 SMs = 4 clusters): its tenants must migrate to a healthy peer or be
+# dropped honestly — the summary line always reports the migration count.
+run_timed "serve-fleet chip-loss smoke" bash -c \
+    "./target/release/amoeba serve-fleet --quick --chips 3 \
+     --faults '0:cluster0@10,cluster1@10,cluster2@10,cluster3@10' \
+     | grep -q 'migrations'"
 
 echo "== sweep + cycle-skip + server benchmark (writes BENCH_sweep.json) =="
 run_timed "bench_sweep" cargo bench --bench bench_sweep
@@ -190,7 +226,13 @@ grep -q '"intra_sim_speedup":' BENCH_sweep.json || {
     echo "ERROR: BENCH_sweep.json has no measured intra_sim_speedup" >&2
     exit 1
 }
-echo "acceptance: cycle_skip_best ${best}x >= 2x, dense_active ${da}x >= 1.5x, server_sweep + intra_sim recorded"
+# Fleet serving must be measured (chips-vs-tenants pool sweep; the bench
+# asserts serial-vs-parallel FleetReport bit-identity in-process).
+grep -q '"fleet_sweep": {' BENCH_sweep.json || {
+    echo "ERROR: BENCH_sweep.json has no measured fleet_sweep record" >&2
+    exit 1
+}
+echo "acceptance: cycle_skip_best ${best}x >= 2x, dense_active ${da}x >= 1.5x, server_sweep + intra_sim + fleet_sweep recorded"
 
 echo "== per-step timing summary =="
 printf '%s' "$TIMING_SUMMARY"

@@ -17,6 +17,7 @@ use std::time::Instant;
 
 use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::harness::{SimJob, SweepExec};
+use amoeba_gpu::runtime::fleet::{serve_fleet, FleetConfig};
 use amoeba_gpu::runtime::serve;
 use amoeba_gpu::sim::fault::FaultTrace;
 use amoeba_gpu::sim::gpu::{
@@ -371,8 +372,58 @@ fn main() {
         is_serial.cycles
     );
 
+    // -------- Fleet serving: chips-vs-tenants pool throughput, plus the
+    // determinism contract that makes the pool testable — the same
+    // FleetReport bit-for-bit whether the chip shards are served on a
+    // 1-thread executor or a multi-thread one. Fresh executors on both
+    // sides so the memo cache cannot mask a scheduling divergence; the
+    // per-pool row records how many of the 6 tenants a pool that size
+    // actually serves (capacity rejections are honest, so served counts
+    // climb with the chip count).
+    eprintln!("[bench_sweep] fleet serving (tiny-chip pool, 6 tenants):");
+    let mut fleet_chip = SystemConfig::tiny();
+    fleet_chip.max_cycles = 300_000;
+    let fleet_tenants: Vec<_> = serve::default_tenants().into_iter().cycle().take(6).collect();
+    let mut fleet_streams = traffic_trace(&fleet_tenants, 2, 5_000, SEED);
+    shrink_streams(&mut fleet_streams, 4, 40);
+    let fleet_faults = vec![FaultTrace::default(); 4];
+    let mut fleet_rows = String::new();
+    for pool in [1usize, 2, 4] {
+        let fc = FleetConfig::pool(fleet_chip.clone(), pool);
+        let f1_exec = SweepExec::serial();
+        let t_f1 = Instant::now();
+        let f1 = serve_fleet(&f1_exec, &fc, &fleet_streams, &fleet_faults[..pool]).unwrap();
+        let f1_s = t_f1.elapsed().as_secs_f64();
+        let fn_exec = SweepExec::new(threads.max(2));
+        let t_fn = Instant::now();
+        let fnn = serve_fleet(&fn_exec, &fc, &fleet_streams, &fleet_faults[..pool]).unwrap();
+        let fn_s = t_fn.elapsed().as_secs_f64();
+        assert_eq!(
+            f1, fnn,
+            "fleet({pool} chips): parallel chip serving must be bit-identical to serial"
+        );
+        let active = f1.chips.iter().filter(|c| c.activated).count();
+        eprintln!(
+            "[bench_sweep]   {pool} chips ({active} active): served {} dropped {} rejected {} \
+             tenants; serial {f1_s:.3} s, parallel {fn_s:.3} s (reports identical)",
+            f1.served, f1.dropped, f1.rejections
+        );
+        if !fleet_rows.is_empty() {
+            fleet_rows.push_str(",\n");
+        }
+        fleet_rows.push_str(&format!(
+            "    {{ \"chips\": {pool}, \"active\": {active}, \"served\": {}, \"dropped\": {}, \
+             \"rejected_tenants\": {}, \"makespan_kcyc\": {:.1}, \"serial_s\": {f1_s:.3}, \
+             \"parallel_s\": {fn_s:.3} }}",
+            f1.served,
+            f1.dropped,
+            f1.rejections,
+            f1.makespan as f64 / 1e3
+        ));
+    }
+
     let json = format!(
-        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }},\n  \"fault_sweep\": {{ \"no_trace_s\": {:.3}, \"empty_trace_s\": {:.3}, \"overhead\": {:.3}, \"identical\": true }},\n  \"qos_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"preemptions\": {}, \"ctas_preempted\": {}, \"identical\": true }},\n  \"snapshot_sweep\": {{ \"sms\": {}, \"capture_cycle\": {}, \"bytes\": {}, \"save_s\": {:.6}, \"load_s\": {:.6}, \"unfired_arm_identical\": true, \"resume_identical\": true }},\n  \"intra_sim\": {{ \"sms\": {}, \"clusters\": {}, \"tick_jobs\": {}, \"serial_s\": {:.3}, \"fanned_s\": {:.3}, \"identical\": true }},\n  \"intra_sim_speedup\": {:.3}\n}}\n",
+        "{{\n  \"benchmark\": \"figures_quick_sweep_replay\",\n  \"job_instances\": {},\n  \"unique_jobs\": {},\n  \"threads\": {},\n  \"serial_replay_s\": {:.3},\n  \"parallel_memo_s\": {:.3},\n  \"serial_memo_s\": {:.3},\n  \"speedup\": {:.3},\n  \"memo_only_speedup\": {:.3},\n  \"cycle_skip\": [\n{}\n  ],\n  \"cycle_skip_best\": {:.3},\n  \"cycle_skip_best_bench\": \"{}\",\n  \"dense_active\": {{ \"hot\": \"BFS\", \"tenants\": {}, \"clusters\": {}, \"dense_s\": {:.3}, \"active_s\": {:.3}, \"speedup\": {:.3} }},\n  \"dense_active_speedup\": {:.3},\n  \"server_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"batch_s\": {:.3}, \"worst_antt\": {:.3} }},\n  \"fault_sweep\": {{ \"no_trace_s\": {:.3}, \"empty_trace_s\": {:.3}, \"overhead\": {:.3}, \"identical\": true }},\n  \"qos_sweep\": {{ \"tenants\": {}, \"dense_s\": {:.3}, \"skip_s\": {:.3}, \"skip_speedup\": {:.3}, \"preemptions\": {}, \"ctas_preempted\": {}, \"identical\": true }},\n  \"snapshot_sweep\": {{ \"sms\": {}, \"capture_cycle\": {}, \"bytes\": {}, \"save_s\": {:.6}, \"load_s\": {:.6}, \"unfired_arm_identical\": true, \"resume_identical\": true }},\n  \"intra_sim\": {{ \"sms\": {}, \"clusters\": {}, \"tick_jobs\": {}, \"serial_s\": {:.3}, \"fanned_s\": {:.3}, \"identical\": true }},\n  \"intra_sim_speedup\": {:.3},\n  \"fleet_sweep\": {{ \"tenants\": {}, \"pools\": [1, 2, 4], \"rows\": [\n{}\n  ], \"identical\": true }}\n}}\n",
         jobs.len(),
         misses,
         threads,
@@ -416,6 +467,8 @@ fn main() {
         is_serial_s,
         is_fanned_s,
         intra_sim_speedup,
+        fleet_streams.len(),
+        fleet_rows,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => eprintln!("[bench_sweep] wrote BENCH_sweep.json"),

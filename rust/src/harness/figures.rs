@@ -683,6 +683,95 @@ pub fn qos_sweep(exec: &SweepExec, quick: bool) -> Table {
 }
 
 // ---------------------------------------------------------------------
+// Fleet sweep: tenants vs chips across a health-monitored GPU pool
+// ---------------------------------------------------------------------
+
+/// The fleet-serving headline sweep ("fleet"): a tenants-vs-chips grid
+/// served through [`crate::runtime::fleet::serve_fleet`], plus one
+/// chip-loss scenario on the widest pool (chip 0's clusters all retire
+/// early, forcing checkpoint migration onto the peers). Each row is one
+/// scenario and reports the chips the elastic scaler actually opened,
+/// fleet ANTT, mean queueing delay, launches served/dropped, tenants
+/// migrated/rejected, and mean per-chip utilisation (IPC over serving
+/// chips) — the honest-accounting picture: served + dropped + rejected
+/// launches always add up to the trace.
+pub fn fleet_sweep(exec: &SweepExec, quick: bool) -> Table {
+    use crate::runtime::fleet::{serve_fleet, FleetConfig};
+    use crate::sim::fault::{FaultEvent, FaultKind, FaultTrace};
+
+    let mut chip = SystemConfig::tiny();
+    if !quick {
+        chip.num_sms = 8;
+        chip.num_mcs = 4;
+    }
+    chip.max_cycles = 300_000;
+    let n_clusters = chip.num_sms / 2;
+
+    let fleet_streams = |n: usize| {
+        let picks = ["CP", "BFS", "SM"];
+        let tenants: Vec<_> = (0..n)
+            .map(|i| (bench(picks[i % picks.len()]).unwrap(), Scheme::Baseline))
+            .collect();
+        let mut streams = traffic_trace(&tenants, 2, 5_000, SEED);
+        shrink_streams(&mut streams, 4, 40);
+        streams
+    };
+    let kill_chip0 = || {
+        FaultTrace::new(
+            (0..n_clusters)
+                .map(|c| FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: c as u32 } })
+                .collect(),
+        )
+    };
+
+    let (pools, tenant_counts): (&[usize], &[usize]) =
+        if quick { (&[1, 2], &[2, 4]) } else { (&[1, 2, 4], &[4, 8]) };
+
+    let mut t = Table::new(
+        "Fleet sweep — tenants vs chips (pool serving, honest accounting)",
+        &["pool/tenants", "act", "antt", "qdel_kcyc", "served", "dropped", "migr", "rej", "ipc"],
+    );
+    let mut scenarios: Vec<(String, usize, usize, Vec<FaultTrace>)> = Vec::new();
+    for &p in pools {
+        for &n in tenant_counts {
+            scenarios.push((format!("{p}chips/{n}t"), p, n, Vec::new()));
+        }
+    }
+    // The chip-loss headline: widest pool, largest tenant count, chip 0
+    // dead almost immediately.
+    let (p, n) = (*pools.last().unwrap(), *tenant_counts.last().unwrap());
+    scenarios.push((format!("{p}chips/{n}t/kill0"), p, n, vec![kill_chip0()]));
+
+    for (label, p, n, faults) in scenarios {
+        let fc = FleetConfig::pool(chip.clone(), p);
+        let streams = fleet_streams(n);
+        let rep = serve_fleet(exec, &fc, &streams, &faults)
+            .expect("fleet sweep scenario must be valid");
+        let serving: Vec<f64> =
+            rep.chips.iter().filter(|c| c.report.is_some()).map(|c| c.ipc).collect();
+        let mean_ipc = if serving.is_empty() {
+            0.0
+        } else {
+            serving.iter().sum::<f64>() / serving.len() as f64
+        };
+        t.row(
+            label,
+            vec![
+                rep.chips.iter().filter(|c| c.activated).count() as f64,
+                rep.antt,
+                rep.mean_queue_delay / 1000.0,
+                rep.served as f64,
+                rep.dropped as f64,
+                rep.migrations as f64,
+                rep.rejections as f64,
+                mean_ipc,
+            ],
+        );
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
 // Tables
 // ---------------------------------------------------------------------
 
@@ -809,6 +898,34 @@ mod tests {
         // Priority ladder shows in the row labels.
         assert!(t.rows.iter().any(|(n, _)| n.ends_with(":high")));
         assert!(t.rows.iter().any(|(n, _)| n.ends_with(":low")));
+    }
+
+    #[test]
+    fn fleet_sweep_covers_grid_and_chip_loss() {
+        let exec = SweepExec::new(2);
+        let t = fleet_sweep(&exec, true);
+        // 2 pools x 2 tenant counts + the kill-chip-0 scenario.
+        assert_eq!(t.rows.len(), 5, "one row per fleet scenario");
+        for (name, vals) in &t.rows {
+            assert_eq!(vals.len(), 8, "{name}: eight metric columns");
+            assert!(vals.iter().all(|v| v.is_finite() && *v >= 0.0), "{name}: {vals:?}");
+            let (act, served) = (vals[0], vals[3]);
+            assert!(act >= 1.0, "{name}: at least one chip active");
+            assert!(served >= 1.0, "{name}: the fleet must serve something");
+        }
+        let kill = &t.rows.iter().find(|(n, _)| n.ends_with("kill0")).unwrap().1;
+        // The chip-loss scenario exercises the robustness path: stranded
+        // work is migrated or dropped/rejected, never silently lost.
+        assert!(
+            kill[5] >= 1.0 || kill[4] >= 1.0 || kill[6] >= 1.0,
+            "chip loss must surface as migrations, drops, or rejections: {kill:?}"
+        );
+        // Memoized: regenerating the sweep simulates nothing new.
+        let (_, misses_before) = exec.cache_stats();
+        let t2 = fleet_sweep(&exec, true);
+        let (_, misses_after) = exec.cache_stats();
+        assert_eq!(misses_before, misses_after, "regeneration must be pure cache hits");
+        assert_eq!(t.rows, t2.rows, "memoized fleet sweep is identical");
     }
 
     #[test]

@@ -26,14 +26,15 @@ use std::sync::OnceLock;
 use crate::stats::Table;
 
 /// All figure ids the harness can regenerate ("srv" is the server-mode
-/// concurrent-stream sweep, "fault" the graceful-degradation sweep, and
+/// concurrent-stream sweep, "fault" the graceful-degradation sweep,
 /// "qos" the priority-mix/load sweep of SLO attainment under
-/// partition-scoped drain + preemption — not paper figures, but the
-/// scenario classes the ROADMAP's serving and robustness north stars ask
-/// for).
-pub const ALL_FIGURES: [&str; 23] = [
+/// partition-scoped drain + preemption, and "fleet" the tenants-vs-chips
+/// pool-serving sweep with admission, elastic scaling, and chip-loss
+/// migration — not paper figures, but the scenario classes the ROADMAP's
+/// serving and robustness north stars ask for).
+pub const ALL_FIGURES: [&str; 24] = [
     "2", "3a", "3b", "4", "5", "6", "8", "12", "13", "14", "15", "16", "17", "18", "19", "19h",
-    "20", "21", "srv", "fault", "qos", "t1", "t2",
+    "20", "21", "srv", "fault", "qos", "fleet", "t1", "t2",
 ];
 
 /// The process-wide executor used by the [`figure`] convenience wrapper:
@@ -69,6 +70,7 @@ pub fn figure_with(exec: &SweepExec, id: &str, quick: bool) -> Option<Table> {
         "srv" => Some(server_sweep(exec, quick)),
         "fault" => Some(fault_sweep(exec, quick)),
         "qos" => Some(qos_sweep(exec, quick)),
+        "fleet" => Some(fleet_sweep(exec, quick)),
         "t1" => Some(table1_config()),
         "t2" => Some(table2_coefficients()),
         _ => None,

@@ -31,6 +31,11 @@ USAGE:
   amoeba serve-sim [--tenants SPEC] [--policy static|adaptive]
                    [--kernels N] [--gap CYCLES] [--seed N] [--sms N]
                    [--bursty] [--quick] [--jobs N]
+  amoeba serve-fleet [--chips N] [--tenants N] [--policy static|adaptive]
+                     [--kernels N] [--gap CYCLES] [--seed N] [--sms N]
+                     [--tenants-per-chip N] [--cooldown CYCLES]
+                     [--faults 'CHIP:SPEC[;CHIP:SPEC...]']
+                     [--bursty] [--quick] [--jobs N]
   amoeba bisect <BENCH> [--scheme S] [--seed N] [--sms N] [--quick]
                 [--dense-a] [--dense-b] [--faults-a SPEC] [--faults-b SPEC]
   amoeba list
@@ -60,6 +65,16 @@ High-priority tenants below their fair cluster share preempt
 lower-priority tenants at CTA boundaries. --bursty clumps each
 tenant's arrivals into noisy-neighbour bursts.
 
+serve-fleet serves a seeded multi-tenant trace across a POOL of chips:
+tenants are admitted to the least-loaded chip (SLO-gated, honest
+rejection), the active chip count scales elastically with live tenant
+load, per-chip fault schedules drive a health/quarantine ledger, and
+tenants stranded on a dead chip checkpoint-migrate onto a healthy
+peer. --faults assigns one fault SPEC (grammar above) per chip as
+semicolon-separated 'CHIP_INDEX:SPEC' entries, e.g.
+'0:cluster0@10,cluster1@10;2:noc+3@5_000'. Fully deterministic: the
+fleet report is bit-identical for any --jobs value.
+
 Sweeps run in parallel; --jobs (or the AMOEBA_JOBS env var) sets the
 worker count, defaulting to the machine's available parallelism."
 }
@@ -74,6 +89,7 @@ fn main() -> Result<()> {
         "run" => cmd_run(&args[1..]),
         "sweep" => cmd_sweep(&args[1..]),
         "serve-sim" => cmd_serve_sim(&args[1..]),
+        "serve-fleet" => cmd_serve_fleet(&args[1..]),
         "bisect" => cmd_bisect(&args[1..]),
         "list" => cmd_list(),
         "config" => {
@@ -373,6 +389,168 @@ fn cmd_serve_sim(args: &[String]) -> Result<()> {
             scale_ups,
             rep.chip.reconfig_events,
             shared.partitions[ti]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve_fleet(args: &[String]) -> Result<()> {
+    use amoeba_gpu::runtime::fleet::{serve_fleet, FleetConfig, RejectReason};
+    let quick = has_flag(args, "--quick");
+    let n_chips: usize = match opt_value(args, "--chips")? {
+        Some(s) => s.parse()?,
+        None => 2,
+    };
+    if n_chips == 0 {
+        return Err(err("--chips must be >= 1"));
+    }
+    let n_tenants: usize = match opt_value(args, "--tenants")? {
+        Some(s) => s.parse()?,
+        None => 4,
+    };
+    let policy: PartitionPolicy = match opt_value(args, "--policy")? {
+        Some(s) => s.parse().map_err(err)?,
+        None => PartitionPolicy::Static,
+    };
+    let seed: u64 = match opt_value(args, "--seed")? {
+        Some(s) => s.parse()?,
+        None => 0xA30EBA,
+    };
+    let kernels_each: u32 = match opt_value(args, "--kernels")? {
+        Some(s) => s.parse()?,
+        None => 2,
+    };
+    let mean_gap: u64 = match opt_value(args, "--gap")? {
+        Some(s) => s.parse()?,
+        None => {
+            if quick {
+                5_000
+            } else {
+                50_000
+            }
+        }
+    };
+    let tenants_per_chip: usize = match opt_value(args, "--tenants-per-chip")? {
+        Some(s) => s.parse()?,
+        None => 2,
+    };
+    let cooldown: u64 = match opt_value(args, "--cooldown")? {
+        Some(s) => s.trim().replace('_', "").parse()?,
+        None => 0,
+    };
+    let pattern = if has_flag(args, "--bursty") {
+        TrafficPattern::Bursty { burst_len: 4, dilation: 8 }
+    } else {
+        TrafficPattern::Uniform
+    };
+    let exec = match opt_value(args, "--jobs")? {
+        Some(n) => SweepExec::new(n.parse()?),
+        None => SweepExec::from_env(),
+    };
+    let mut cfg = SystemConfig::gtx480();
+    if quick {
+        cfg.num_sms = 8;
+        cfg.num_mcs = 4;
+        cfg.max_cycles = 2_000_000;
+        cfg.profile_window = 1_000;
+    }
+    if let Some(n) = opt_value(args, "--sms")? {
+        cfg = cfg.with_sm_count(n.parse()?);
+    }
+
+    // Per-chip fault schedules: 'CHIP_INDEX:SPEC' entries, ';'-separated
+    // (the SPEC grammar itself is parse_fault_spec's, colon-free).
+    let mut faults = vec![FaultTrace::default(); n_chips];
+    if let Some(spec) = opt_value(args, "--faults")? {
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (chip_s, fault_s) = entry
+                .split_once(':')
+                .ok_or_else(|| err(format!("fleet fault '{entry}' needs 'CHIP_INDEX:SPEC'")))?;
+            let chip: usize = chip_s
+                .trim()
+                .parse()
+                .map_err(|e| err(format!("bad chip index '{chip_s}': {e}")))?;
+            if chip >= n_chips {
+                return Err(err(format!("fault chip index {chip} >= pool size {n_chips}")));
+            }
+            faults[chip] = parse_fault_spec(fault_s)?;
+        }
+    }
+
+    let specs: Vec<TenantQosSpec> = {
+        let mix = serve::default_tenants();
+        (0..n_tenants)
+            .map(|i| {
+                let (p, s) = mix[i % mix.len()].clone();
+                TenantQosSpec::best_effort(p, s)
+            })
+            .collect()
+    };
+    let mut streams = traffic_trace_qos(&specs, kernels_each, mean_gap, seed, pattern);
+    if quick {
+        shrink_streams(&mut streams, 4, 40);
+    }
+
+    let mut fc = FleetConfig::pool(cfg, n_chips);
+    fc.policy = policy;
+    fc.tenants_per_chip = tenants_per_chip;
+    fc.scale_cooldown = cooldown;
+
+    eprintln!(
+        "[serve-fleet] {} tenants across a {}-chip pool, policy {policy}, {} threads...",
+        streams.len(),
+        n_chips,
+        exec.threads()
+    );
+    let rep = serve_fleet(&exec, &fc, &streams, &faults)?;
+
+    let mut t = Table::new(
+        format!("serve-fleet — {n_chips}-chip pool, {policy} partitions, seed {seed:#x}"),
+        &["chip", "tenants", "migr_in", "failures", "ipc", "cycles_kcyc"],
+    );
+    for c in &rep.chips {
+        let cycles = c.report.as_ref().map_or(0, |r| r.cycles);
+        t.row(
+            format!("chip{} ({}{})", c.chip, c.health, if c.quarantined { ", quarantined" } else { "" }),
+            vec![
+                c.tenants.len() as f64,
+                c.migrated_in.len() as f64,
+                c.failures as f64,
+                c.ipc,
+                cycles as f64 / 1000.0,
+            ],
+        );
+    }
+    println!("{}", t.render());
+    println!(
+        "fleet: {} served, {} dropped, {} rejected tenants ({} launches), {} migrations, \
+         ANTT {:.2}, queue delay mean {:.0} / p95 {} cyc, makespan {} cyc",
+        rep.served,
+        rep.dropped,
+        rep.rejections,
+        rep.rejected_launches,
+        rep.migrations,
+        rep.antt,
+        rep.mean_queue_delay,
+        rep.p95_queue_delay,
+        rep.makespan
+    );
+    for e in &rep.scaling {
+        println!("scale @{}: {} -> {} chips ({} live tenants)", e.cycle, e.from, e.to, e.live);
+    }
+    for ft in &rep.tenants {
+        let outcome = match (ft.rejected, ft.chip) {
+            (Some(RejectReason::Capacity), _) => "REJECTED (capacity)".to_string(),
+            (Some(RejectReason::Slo), _) => "REJECTED (slo)".to_string(),
+            (None, Some(c)) => match ft.migrated_to {
+                Some(d) => format!("chip {c} -> migrated to chip {d}"),
+                None => format!("chip {c}"),
+            },
+            (None, None) => "unplaced".to_string(),
+        };
+        println!(
+            "tenant {} ({}): {} — {} served, {} dropped",
+            ft.tenant, streams[ft.tenant].name, outcome, ft.served, ft.dropped
         );
     }
     Ok(())

@@ -1,0 +1,758 @@
+//! Fleet-scale serving: a health-monitored pool of simulated GPUs with
+//! SLO admission control, elastic scaling, and chip-to-chip live
+//! migration.
+//!
+//! [`serve_fleet`] shards a seeded multi-tenant trace across a pool of
+//! [`SystemConfig`] chips (heterogeneous shapes allowed). The scheduler
+//! is trace-driven and fully deterministic:
+//!
+//! * **Admission / placement** — tenants are processed in arrival order
+//!   (first-launch cycle, tenant index as the tie-break) and routed to
+//!   the least-loaded active chip with a free cluster. A tenant whose
+//!   turnaround SLO cannot be met at the destination's current load is
+//!   **rejected** with an honest [`RejectReason`] — never a fake
+//!   completion. The admission test is the fair-share projection
+//!   `alone_worst_turnaround * (residents + 1) <= slo`, where the
+//!   isolated reference run comes from the same memoized executor the
+//!   ANTT math uses.
+//! * **Elastic scaling** — the active chip count is a prefix of the pool
+//!   that grows/shrinks one step per arrival event as the live tenant
+//!   count (tenants whose arrival window covers the decision cycle)
+//!   crosses `tenants_per_chip` thresholds, gated by a cooldown so the
+//!   fleet cannot thrash. Every action lands in the [`ScaleEvent`]
+//!   ledger.
+//! * **Per-chip health** — each chip serves its shard under its own
+//!   [`FaultTrace`]. A chip whose clusters all retire, or whose run
+//!   deadline-hits with launches stranded, is **dead**; a chip that took
+//!   faults (or truncated) but kept serving is **degraded**. Failed
+//!   chips enter a quarantine/backoff ledger with the
+//!   [`FailoverConfig`] knobs of [`serve_with_failover`]
+//!   (`crate::runtime::serve::serve_with_failover`).
+//! * **Chip-to-chip migration** — tenants stranded on a dead/degraded
+//!   chip are checkpoint-migrated onto a shape-identical healthy peer:
+//!   the tenant's stream is replayed alone on the *source* chip's
+//!   config with a checkpoint armed at the first fault cycle (the
+//!   capture is pre-injection, i.e. healthy state), pending faults are
+//!   stripped, and the run restores onto the *destination* chip to
+//!   completion. Launches the migrated run did not finish are honestly
+//!   dropped, as are stranded launches with no eligible peer.
+//!
+//! Chip shards are served through the caller's [`SweepExec`] as one
+//! batch, so they fan across worker threads; the executor's memo
+//! contract makes the fleet report bit-identical for any thread count,
+//! and the underlying skip==dense contract of `serve_streams` makes it
+//! invariant under `AMOEBA_DENSE` (both enforced in
+//! `tests/exec_determinism.rs`).
+
+use crate::config::SystemConfig;
+use crate::errors::{err, Result};
+use crate::harness::{cfg_fingerprint, p95_u64, StreamJob, SweepExec};
+use crate::sim::fault::FaultTrace;
+use crate::sim::gpu::{
+    dense_env, serve_streams_resume, serve_streams_snapshot, PartitionPolicy, StreamReport,
+};
+use crate::workload::KernelStream;
+
+use super::serve::{alone_streams, antt_slowdown, backoff_delay, FailoverConfig};
+
+/// Knobs of the fleet scheduler (see [`serve_fleet`]).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// The chip pool in activation order (index = chip id). Heterogeneous
+    /// shapes are allowed; checkpoint migration needs a shape-identical
+    /// peer (same config fingerprint).
+    pub chips: Vec<SystemConfig>,
+    /// Cluster-partition policy every chip serves its shard under.
+    pub policy: PartitionPolicy,
+    /// Chips active before the first arrival (clamped to `[1, pool]`).
+    pub initial_active: usize,
+    /// Scaling threshold: the scheduler grows the active prefix when the
+    /// live tenant count exceeds `tenants_per_chip * active`, and shrinks
+    /// it when the count falls below the next-lower step and the top chip
+    /// is idle.
+    pub tenants_per_chip: usize,
+    /// Minimum cycles between scaling actions (thrash guard).
+    pub scale_cooldown: u64,
+    /// Quarantine/backoff knobs for the per-chip health ledger: a chip
+    /// with `quarantine_after` failed serve rounds is quarantined (it is
+    /// never a migration destination) and its retry backoff is computed
+    /// by [`backoff_delay`].
+    pub failover: FailoverConfig,
+}
+
+impl FleetConfig {
+    /// A homogeneous pool of `n` copies of `chip`, with the defaults the
+    /// fleet tests and CLI use: static partitions, one chip active,
+    /// two tenants per chip before scaling, no cooldown, and a one-strike
+    /// chip quarantine (a chip that stranded launches once is not a
+    /// migration destination).
+    pub fn pool(chip: SystemConfig, n: usize) -> Self {
+        FleetConfig {
+            chips: vec![chip; n],
+            policy: PartitionPolicy::Static,
+            initial_active: 1,
+            tenants_per_chip: 2,
+            scale_cooldown: 0,
+            failover: FailoverConfig { quarantine_after: 1, ..FailoverConfig::default() },
+        }
+    }
+}
+
+/// Why a tenant was refused admission (honest accounting: a rejected
+/// tenant is never placed and none of its launches are served).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// No active chip had a free cluster at the tenant's arrival.
+    Capacity,
+    /// The fair-share projection said the tenant's turnaround SLO cannot
+    /// be met at the destination chip's current load (or even alone).
+    Slo,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RejectReason::Capacity => "capacity",
+            RejectReason::Slo => "slo",
+        })
+    }
+}
+
+/// Per-tenant outcome ledger. Exactly one of `chip`/`rejected` is set;
+/// `served + dropped` equals the tenant's launch count when admitted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetTenant {
+    /// Tenant (stream) index in the fleet trace.
+    pub tenant: usize,
+    /// Chip the tenant was admitted to (`None` = rejected).
+    pub chip: Option<usize>,
+    /// Set when admission refused the tenant.
+    pub rejected: Option<RejectReason>,
+    /// Destination chip of the checkpoint migration, if stranded
+    /// launches were rescued onto a peer.
+    pub migrated_to: Option<usize>,
+    /// Launches that completed (in place or on the migration peer).
+    pub served: u32,
+    /// Launches never completed (stranded with no rescue).
+    pub dropped: u32,
+}
+
+/// Health verdict for one chip after its serve round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipHealth {
+    /// Served its shard cleanly (or sat idle).
+    Healthy,
+    /// Faults fired (or the deadline hit) but the chip kept serving.
+    Degraded,
+    /// Every cluster retired, or the run deadline-truncated with
+    /// launches stranded: candidates for migration off this chip.
+    Dead,
+}
+
+impl std::fmt::Display for ChipHealth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ChipHealth::Healthy => "healthy",
+            ChipHealth::Degraded => "degraded",
+            ChipHealth::Dead => "dead",
+        })
+    }
+}
+
+/// Per-chip serve record and health/quarantine ledger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipReport {
+    /// Chip id (index into [`FleetConfig::chips`]).
+    pub chip: usize,
+    /// Was the chip ever inside the active prefix?
+    pub activated: bool,
+    /// Tenants placed here (fleet indices, placement order — the chip's
+    /// local tenant `i` is `tenants[i]`).
+    pub tenants: Vec<usize>,
+    /// Health verdict from the serve round.
+    pub health: ChipHealth,
+    /// Serve rounds that stranded launches (0 or 1 per fleet run; the
+    /// ledger shape matches [`super::serve::TenantHealth`]).
+    pub failures: u32,
+    /// `failures >= failover.quarantine_after`: the chip takes no
+    /// migrated-in tenants.
+    pub quarantined: bool,
+    /// Backoff (cycles) before this chip would be retried, per
+    /// [`backoff_delay`]; 0 for clean chips.
+    pub backoff: u64,
+    /// Tenants checkpoint-migrated in from failed peers.
+    pub migrated_in: Vec<usize>,
+    /// The shard's serve run (`None` if the chip served no tenants).
+    pub report: Option<StreamReport>,
+    /// Shard IPC (thread instructions per cycle; 0 when idle) — the
+    /// per-chip utilisation figure the fleet sweep reports.
+    pub ipc: f64,
+}
+
+/// One elastic-scaling action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleEvent {
+    /// Arrival cycle that triggered the action.
+    pub cycle: u64,
+    /// Active chip count before the action.
+    pub from: usize,
+    /// Active chip count after.
+    pub to: usize,
+    /// Live tenant count at the decision point (incoming tenant included).
+    pub live: usize,
+}
+
+/// Everything one fleet run produced. `PartialEq` is the determinism
+/// equality the serial-vs-parallel tests assert.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    /// One entry per pool chip (including never-activated standbys).
+    pub chips: Vec<ChipReport>,
+    /// One entry per tenant in trace order.
+    pub tenants: Vec<FleetTenant>,
+    /// Elastic-scaling ledger in decision order.
+    pub scaling: Vec<ScaleEvent>,
+    /// Mean ANTT-style slowdown over tenants with served launches, each
+    /// against its isolated run on its own chip (1.0 = no interference).
+    pub antt: f64,
+    /// Mean queueing delay over served launches, fleet-wide.
+    pub mean_queue_delay: f64,
+    /// p95 queueing delay over served launches, fleet-wide.
+    pub p95_queue_delay: u64,
+    /// Launches completed (in place + migrated).
+    pub served: u32,
+    /// Launches stranded with no rescue.
+    pub dropped: u32,
+    /// Tenants checkpoint-migrated onto a peer chip.
+    pub migrations: u32,
+    /// Tenants refused admission.
+    pub rejections: u32,
+    /// Launches belonging to rejected tenants (never queued anywhere).
+    pub rejected_launches: u32,
+    /// Longest chip run (cycles) — the fleet's makespan.
+    pub makespan: u64,
+}
+
+fn clusters_of(cfg: &SystemConfig) -> usize {
+    cfg.num_sms / 2
+}
+
+/// Tenants of `chip` whose arrival window covers `t` (the load the
+/// placement and scaling decisions see).
+fn residents(assigned: &[Vec<usize>], windows: &[(u64, u64)], chip: usize, t: u64) -> usize {
+    assigned[chip].iter().filter(|&&o| windows[o].1 >= t).count()
+}
+
+/// Serve `streams` across the chip pool of `fc`, with `faults[c]` (if
+/// present) injected on chip `c`. See the module docs for the admission,
+/// scaling, health, and migration contracts. Deterministic end to end:
+/// same trace + pool + fault schedules produce a bit-identical
+/// [`FleetReport`] for any executor thread count and execution mode.
+pub fn serve_fleet(
+    exec: &SweepExec,
+    fc: &FleetConfig,
+    streams: &[KernelStream],
+    faults: &[FaultTrace],
+) -> Result<FleetReport> {
+    let pool = fc.chips.len();
+    if pool == 0 {
+        return Err(err("fleet needs at least one chip"));
+    }
+    if fc.tenants_per_chip == 0 {
+        return Err(err("fleet tenants_per_chip must be >= 1"));
+    }
+    if faults.len() > pool {
+        return Err(err(format!("{} fault traces for a {pool}-chip pool", faults.len())));
+    }
+    for (c, trace) in faults.iter().enumerate() {
+        trace
+            .validate(clusters_of(&fc.chips[c]), fc.chips[c].num_mcs)
+            .map_err(|e| err(format!("chip {c} fault trace: {e}")))?;
+    }
+    let trace_of = |c: usize| faults.get(c).cloned().unwrap_or_default();
+
+    // Tenant arrival windows: [first, last] launch arrival. Scaling and
+    // placement are trace-driven (open-loop): a tenant is "live" while
+    // its window covers the decision cycle. Service-time feedback would
+    // need the very simulations placement gates — the window model keeps
+    // the whole placement pass computable up front, hence deterministic.
+    let windows: Vec<(u64, u64)> = streams
+        .iter()
+        .map(|s| {
+            let first = s.launches.first().map(|l| l.arrival).unwrap_or(0);
+            let last = s.launches.last().map(|l| l.arrival).unwrap_or(0);
+            (first, last)
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..streams.len()).collect();
+    order.sort_by_key(|&ti| (windows[ti].0, ti));
+
+    let mut active = fc.initial_active.clamp(1, pool);
+    let mut max_active = active;
+    let mut last_scale: Option<u64> = None;
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); pool];
+    let mut scaling: Vec<ScaleEvent> = Vec::new();
+    let mut tenants: Vec<FleetTenant> = (0..streams.len())
+        .map(|ti| FleetTenant {
+            tenant: ti,
+            chip: None,
+            rejected: None,
+            migrated_to: None,
+            served: 0,
+            dropped: 0,
+        })
+        .collect();
+
+    for &ti in &order {
+        let t = windows[ti].0;
+        let live: usize =
+            (0..pool).map(|c| residents(&assigned, &windows, c, t)).sum::<usize>() + 1;
+
+        // Elastic scaling: one step per arrival event, cooldown-gated.
+        // The active set is a prefix of the pool; shrinking only closes
+        // the top chip for new placements (its past tenants keep their
+        // shard) and only when that chip is idle at the decision cycle.
+        let cooled = last_scale.map_or(true, |s| t.saturating_sub(s) >= fc.scale_cooldown);
+        let desired = live.div_ceil(fc.tenants_per_chip).clamp(1, pool);
+        if cooled && desired > active && active < pool {
+            scaling.push(ScaleEvent { cycle: t, from: active, to: active + 1, live });
+            active += 1;
+            max_active = max_active.max(active);
+            last_scale = Some(t);
+        } else if cooled
+            && desired < active
+            && active > 1
+            && residents(&assigned, &windows, active - 1, t) == 0
+        {
+            scaling.push(ScaleEvent { cycle: t, from: active, to: active - 1, live });
+            active -= 1;
+            last_scale = Some(t);
+        }
+
+        // Placement: least-loaded active chip with a free cluster (every
+        // resident tenant needs at least one cluster of its own).
+        let dest = (0..active)
+            .filter(|&c| residents(&assigned, &windows, c, t) < clusters_of(&fc.chips[c]))
+            .min_by_key(|&c| (residents(&assigned, &windows, c, t), c));
+        let Some(c) = dest else {
+            tenants[ti].rejected = Some(RejectReason::Capacity);
+            continue;
+        };
+
+        // SLO admission: the tenant's isolated run on the destination
+        // chip (memoized — it doubles as the ANTT reference) bounds the
+        // fair-share slowdown at `residents + 1` co-tenants. A launch
+        // the chip cannot finish even alone is unmeetable outright.
+        if let Some(slo) = streams[ti].slo_turnaround {
+            let alone = exec.run_stream(&StreamJob::new(
+                fc.chips[c].clone(),
+                alone_streams(streams, ti),
+                PartitionPolicy::Static,
+            ));
+            let worst = alone
+                .launches
+                .iter()
+                .map(|l| if l.finish == u64::MAX { u64::MAX } else { l.turnaround() })
+                .max()
+                .unwrap_or(0);
+            let share = residents(&assigned, &windows, c, t) as u64 + 1;
+            if worst.saturating_mul(share) > slo {
+                tenants[ti].rejected = Some(RejectReason::Slo);
+                continue;
+            }
+        }
+        tenants[ti].chip = Some(c);
+        assigned[c].push(ti);
+    }
+
+    // Serve every chip's shard plus every admitted tenant's isolated
+    // reference as ONE executor batch: the chip runs fan across worker
+    // threads, and the memo contract makes the fan-out bit-identical to
+    // the serial walk.
+    let serving: Vec<usize> = (0..pool).filter(|&c| !assigned[c].is_empty()).collect();
+    let mut jobs: Vec<StreamJob> = Vec::new();
+    for &c in &serving {
+        let shard: Vec<KernelStream> =
+            assigned[c].iter().map(|&ti| streams[ti].clone()).collect();
+        jobs.push(StreamJob::new(fc.chips[c].clone(), shard, fc.policy).with_fault(trace_of(c)));
+    }
+    let mut alone_ix = std::collections::HashMap::new();
+    for &c in &serving {
+        for &ti in &assigned[c] {
+            alone_ix.insert(ti, jobs.len());
+            jobs.push(StreamJob::new(
+                fc.chips[c].clone(),
+                alone_streams(streams, ti),
+                PartitionPolicy::Static,
+            ));
+        }
+    }
+    let out = exec.run_stream_batch(jobs);
+
+    // Health + quarantine/backoff ledger per serving chip.
+    let fo = &fc.failover;
+    let mut chips: Vec<ChipReport> = (0..pool)
+        .map(|c| ChipReport {
+            chip: c,
+            activated: c < max_active,
+            tenants: assigned[c].clone(),
+            health: ChipHealth::Healthy,
+            failures: 0,
+            quarantined: false,
+            backoff: 0,
+            migrated_in: Vec::new(),
+            report: None,
+            ipc: 0.0,
+        })
+        .collect();
+    for (bi, &c) in serving.iter().enumerate() {
+        let rep = (*out[bi]).clone();
+        let n_cl = clusters_of(&fc.chips[c]) as u64;
+        let stranded = rep.launches.iter().any(|l| l.finish == u64::MAX);
+        let health = if rep.chip.clusters_retired >= n_cl || (rep.deadline_hit && stranded) {
+            ChipHealth::Dead
+        } else if rep.chip.faults_injected > 0 || rep.deadline_hit {
+            ChipHealth::Degraded
+        } else {
+            ChipHealth::Healthy
+        };
+        let failures = stranded as u32;
+        let ch = &mut chips[c];
+        ch.health = health;
+        ch.failures = failures;
+        ch.quarantined = failures >= fo.quarantine_after;
+        ch.backoff = if failures > 0 { backoff_delay(fo, c, failures) } else { 0 };
+        ch.ipc = if rep.cycles > 0 { rep.sm.thread_insns as f64 / rep.cycles as f64 } else { 0.0 };
+        ch.report = Some(rep);
+    }
+
+    // Tenant accounting: completions in place, then chip-to-chip
+    // migration for launches stranded on failed chips.
+    struct Stranded {
+        ti: usize,
+        src: usize,
+        pending: Vec<usize>,
+    }
+    let mut stranded_list: Vec<Stranded> = Vec::new();
+    for &c in &serving {
+        let rep = chips[c].report.as_ref().expect("serving chip has a report");
+        for (local, &ti) in assigned[c].iter().enumerate() {
+            let mut pending = Vec::new();
+            for l in rep.launches.iter().filter(|l| l.tenant == local as u32) {
+                if l.finish == u64::MAX {
+                    pending.push(l.kernel as usize);
+                } else {
+                    tenants[ti].served += 1;
+                }
+            }
+            if !pending.is_empty() {
+                stranded_list.push(Stranded { ti, src: c, pending });
+            }
+        }
+    }
+    let dense = dense_env();
+    let mut migrations = 0u32;
+    for s in stranded_list {
+        // Destination: a healthy, non-quarantined, shape-identical peer
+        // (the checkpoint holds per-cluster and per-MC machine state, so
+        // restore needs the same config fingerprint) — least loaded,
+        // lowest index. Never-activated standby chips qualify: failover
+        // may recruit spare capacity the scaler has not opened yet.
+        let src_fp = cfg_fingerprint(&fc.chips[s.src]);
+        let dst = (0..pool)
+            .filter(|&d| {
+                d != s.src
+                    && chips[d].health == ChipHealth::Healthy
+                    && !chips[d].quarantined
+                    && cfg_fingerprint(&fc.chips[d]) == src_fp
+            })
+            .min_by_key(|&d| (chips[d].tenants.len() + chips[d].migrated_in.len(), d));
+        let trace = trace_of(s.src);
+        let mut rescued = 0usize;
+        // The migration recipe of `serve_with_failover`, chip-to-chip:
+        // capture the tenant alone on the SOURCE config pre-fault, strip
+        // the unfired faults, finish on the DESTINATION chip. Without a
+        // fault schedule there is no pre-fault cycle to arm (a deadline
+        // death has no healthy state to capture) — the launches drop.
+        if let Some(d) = dst {
+            if !trace.is_empty() {
+                let alone = alone_streams(streams, s.ti);
+                let first_fault = trace.events[0].cycle;
+                let (_, cp) = serve_streams_snapshot(
+                    &fc.chips[s.src],
+                    &alone,
+                    PartitionPolicy::Static,
+                    dense,
+                    first_fault,
+                    Some(&trace),
+                )?;
+                if let Some(mut cp) = cp {
+                    cp.strip_pending_faults()?;
+                    let rep = serve_streams_resume(
+                        &fc.chips[d],
+                        &alone,
+                        PartitionPolicy::Static,
+                        dense,
+                        &cp,
+                    )?;
+                    for &ord in &s.pending {
+                        if rep
+                            .launches
+                            .iter()
+                            .any(|r| r.kernel as usize == ord && r.finish != u64::MAX)
+                        {
+                            rescued += 1;
+                        }
+                    }
+                    if rescued > 0 {
+                        tenants[s.ti].migrated_to = Some(d);
+                        chips[d].migrated_in.push(s.ti);
+                        migrations += 1;
+                    }
+                }
+            }
+        }
+        tenants[s.ti].served += rescued as u32;
+        tenants[s.ti].dropped = (s.pending.len() - rescued) as u32;
+    }
+
+    // Fleet-wide service metrics over the in-place runs.
+    let mut delays: Vec<u64> = Vec::new();
+    let mut antt_sum = 0.0;
+    let mut antt_n = 0usize;
+    for &c in &serving {
+        let rep = chips[c].report.as_ref().expect("serving chip has a report");
+        delays.extend(rep.launches.iter().filter(|l| l.finish != u64::MAX).map(|l| l.queue_delay));
+        for (local, &ti) in assigned[c].iter().enumerate() {
+            if rep.launches.iter().any(|l| l.tenant == local as u32 && l.finish != u64::MAX) {
+                let alone = &out[alone_ix[&ti]];
+                antt_sum += antt_slowdown(rep, alone, local);
+                antt_n += 1;
+            }
+        }
+    }
+    let served: u32 = tenants.iter().map(|t| t.served).sum();
+    let dropped: u32 = tenants.iter().map(|t| t.dropped).sum();
+    let rejections = tenants.iter().filter(|t| t.rejected.is_some()).count() as u32;
+    let rejected_launches: u32 = tenants
+        .iter()
+        .filter(|t| t.rejected.is_some())
+        .map(|t| streams[t.tenant].launches.len() as u32)
+        .sum();
+    let makespan = serving
+        .iter()
+        .map(|&c| chips[c].report.as_ref().expect("serving chip has a report").cycles)
+        .max()
+        .unwrap_or(0);
+    let mean_queue_delay = if delays.is_empty() {
+        0.0
+    } else {
+        delays.iter().sum::<u64>() as f64 / delays.len() as f64
+    };
+    let p95_queue_delay = p95_u64(&delays);
+    Ok(FleetReport {
+        chips,
+        tenants,
+        scaling,
+        antt: if antt_n > 0 { antt_sum / antt_n as f64 } else { 0.0 },
+        mean_queue_delay,
+        p95_queue_delay,
+        served,
+        dropped,
+        migrations,
+        rejections,
+        rejected_launches,
+        makespan,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+    use crate::sim::fault::{FaultEvent, FaultKind};
+    use crate::workload::{bench, shrink_streams, traffic_trace};
+
+    fn tiny_chip() -> SystemConfig {
+        let mut cfg = SystemConfig::tiny();
+        cfg.max_cycles = 300_000;
+        cfg
+    }
+
+    fn fleet_streams(n: usize, mean_gap: u64, seed: u64) -> Vec<KernelStream> {
+        let picks = ["CP", "BFS"];
+        let tenants: Vec<_> = (0..n)
+            .map(|i| (bench(picks[i % picks.len()]).unwrap(), Scheme::Baseline))
+            .collect();
+        let mut streams = traffic_trace(&tenants, 2, mean_gap, seed);
+        shrink_streams(&mut streams, 4, 40);
+        streams
+    }
+
+    fn kill_both_clusters() -> FaultTrace {
+        FaultTrace::new(vec![
+            FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 0 } },
+            FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 1 } },
+        ])
+    }
+
+    #[test]
+    fn healthy_pool_serves_everything_deterministically() {
+        let fc = FleetConfig::pool(tiny_chip(), 2);
+        let streams = fleet_streams(3, 0, 17);
+        let exec = SweepExec::new(2);
+        let rep = serve_fleet(&exec, &fc, &streams, &[]).unwrap();
+        assert_eq!(rep.rejections, 0);
+        assert_eq!(rep.migrations, 0);
+        assert_eq!(rep.dropped, 0);
+        let total: u32 = streams.iter().map(|s| s.launches.len() as u32).sum();
+        assert_eq!(rep.served, total, "healthy fleet serves every launch");
+        for t in &rep.tenants {
+            assert!(t.chip.is_some());
+            assert_eq!(t.served as usize, streams[t.tenant].launches.len());
+        }
+        for c in &rep.chips {
+            assert_eq!(c.health, ChipHealth::Healthy);
+            assert!(!c.quarantined);
+            assert_eq!(c.failures, 0);
+        }
+        assert!(rep.antt >= 0.99, "antt {}", rep.antt);
+        // Bit-identical on a fresh executor (memo cold) and a re-run.
+        let again = serve_fleet(&SweepExec::new(1), &fc, &streams, &[]).unwrap();
+        assert_eq!(rep, again);
+    }
+
+    #[test]
+    fn placement_routes_to_least_loaded_chip() {
+        // 2 chips, 2 simultaneous tenants, threshold 1 tenant/chip: the
+        // scaler opens chip 1 and each tenant gets its own chip.
+        let mut fc = FleetConfig::pool(tiny_chip(), 2);
+        fc.tenants_per_chip = 1;
+        let streams = fleet_streams(2, 0, 17);
+        let rep = serve_fleet(&SweepExec::new(2), &fc, &streams, &[]).unwrap();
+        assert_eq!(rep.tenants[0].chip, Some(0));
+        assert_eq!(rep.tenants[1].chip, Some(1));
+        assert_eq!(rep.scaling.len(), 1, "one grow action");
+        assert_eq!((rep.scaling[0].from, rep.scaling[0].to), (1, 2));
+    }
+
+    #[test]
+    fn capacity_rejection_is_honest() {
+        // One tiny chip (2 clusters), 4 simultaneous tenants: two are
+        // admitted, two rejected — and the rejected launches are
+        // accounted, never faked as served.
+        let fc = FleetConfig::pool(tiny_chip(), 1);
+        let streams = fleet_streams(4, 0, 17);
+        let rep = serve_fleet(&SweepExec::new(2), &fc, &streams, &[]).unwrap();
+        assert_eq!(rep.rejections, 2);
+        for t in &rep.tenants[2..] {
+            assert_eq!(t.rejected, Some(RejectReason::Capacity));
+            assert_eq!(t.served, 0);
+            assert_eq!(t.chip, None);
+        }
+        let total: u32 = streams.iter().map(|s| s.launches.len() as u32).sum();
+        assert_eq!(rep.served + rep.dropped + rep.rejected_launches, total);
+        assert!(rep.rejected_launches > 0);
+    }
+
+    #[test]
+    fn slo_admission_rejects_the_unmeetable_and_admits_the_generous() {
+        let fc = FleetConfig::pool(tiny_chip(), 2);
+        let mut streams = fleet_streams(2, 0, 17);
+        streams[0].slo_turnaround = Some(1); // unmeetable even alone
+        streams[1].slo_turnaround = Some(u64::MAX); // trivially met
+        let rep = serve_fleet(&SweepExec::new(2), &fc, &streams, &[]).unwrap();
+        assert_eq!(rep.tenants[0].rejected, Some(RejectReason::Slo));
+        assert_eq!(rep.tenants[0].served, 0, "rejection is never a fake completion");
+        assert_eq!(rep.tenants[1].rejected, None);
+        assert_eq!(rep.tenants[1].served as usize, streams[1].launches.len());
+    }
+
+    #[test]
+    fn dead_chip_migrates_stranded_tenants_to_peer() {
+        // Both tenants land on chip 0 (threshold 2 keeps the fleet at one
+        // active chip); chip 0 dies at cycle 10. Every stranded launch
+        // must finish on the standby peer via checkpoint migration.
+        let fc = FleetConfig::pool(tiny_chip(), 2);
+        let streams = fleet_streams(2, 0, 17);
+        let faults = [kill_both_clusters()];
+        let exec = SweepExec::new(2);
+        let rep = serve_fleet(&exec, &fc, &streams, &faults).unwrap();
+        assert_eq!(rep.chips[0].health, ChipHealth::Dead);
+        assert!(rep.chips[0].quarantined, "one-strike quarantine");
+        assert!(rep.chips[0].backoff > 0);
+        assert_eq!(rep.chips[1].health, ChipHealth::Healthy);
+        assert_eq!(rep.migrations, 2);
+        assert_eq!(rep.dropped, 0, "migration must rescue every stranded launch");
+        assert_eq!(rep.chips[1].migrated_in, vec![0, 1]);
+        for t in &rep.tenants {
+            assert_eq!(t.chip, Some(0));
+            assert_eq!(t.migrated_to, Some(1));
+            assert_eq!(t.served as usize, streams[t.tenant].launches.len());
+        }
+        // Deterministic end to end, cold memo and serial executor.
+        let again = serve_fleet(&SweepExec::new(1), &fc, &streams, &faults).unwrap();
+        assert_eq!(rep, again);
+    }
+
+    #[test]
+    fn dead_chip_with_no_peer_drops_honestly() {
+        let fc = FleetConfig::pool(tiny_chip(), 1);
+        let streams = fleet_streams(2, 0, 17);
+        let faults = [kill_both_clusters()];
+        let rep = serve_fleet(&SweepExec::new(2), &fc, &streams, &faults).unwrap();
+        assert_eq!(rep.migrations, 0, "no peer to migrate to");
+        let total: u32 = streams.iter().map(|s| s.launches.len() as u32).sum();
+        assert_eq!(rep.served + rep.dropped, total, "every launch accounted");
+        assert!(rep.dropped > 0, "a dead single-chip fleet must drop");
+    }
+
+    #[test]
+    fn elastic_scaling_grows_and_shrinks_with_cooldown() {
+        let mut streams = fleet_streams(4, 0, 17);
+        // Overlapping windows for tenants 0-2 (arrivals 0/100/200, all
+        // lasting to ~50k), then a late loner at 300k.
+        for (ti, (first, second)) in
+            [(0u64, 50_000u64), (100, 50_100), (200, 50_200), (300_000, 300_001)]
+                .into_iter()
+                .enumerate()
+        {
+            streams[ti].launches[0].arrival = first;
+            streams[ti].launches[1].arrival = second;
+        }
+        let mut fc = FleetConfig::pool(tiny_chip(), 3);
+        fc.tenants_per_chip = 1;
+        let rep = serve_fleet(&SweepExec::new(2), &fc, &streams, &[]).unwrap();
+        let steps: Vec<(u64, usize, usize)> =
+            rep.scaling.iter().map(|e| (e.cycle, e.from, e.to)).collect();
+        assert_eq!(
+            steps,
+            vec![(100, 1, 2), (200, 2, 3), (300_000, 3, 2)],
+            "grow on overlap, shrink when the fleet drains"
+        );
+        assert!(rep.chips.iter().all(|c| c.activated), "all three chips were opened");
+        // A long cooldown suppresses the second grow and the shrink.
+        fc.scale_cooldown = 1_000_000;
+        let cooled = serve_fleet(&SweepExec::new(2), &fc, &streams, &[]).unwrap();
+        assert_eq!(cooled.scaling.len(), 1, "cooldown blocks back-to-back actions");
+        assert_eq!(cooled.rejections, 0, "capacity still absorbs everyone");
+    }
+
+    #[test]
+    fn fleet_rejects_bad_inputs() {
+        let fc = FleetConfig { chips: Vec::new(), ..FleetConfig::pool(tiny_chip(), 1) };
+        let streams = fleet_streams(1, 0, 17);
+        assert!(serve_fleet(&SweepExec::new(1), &fc, &streams, &[]).is_err());
+        let fc = FleetConfig { tenants_per_chip: 0, ..FleetConfig::pool(tiny_chip(), 1) };
+        assert!(serve_fleet(&SweepExec::new(1), &fc, &streams, &[]).is_err());
+        let fc = FleetConfig::pool(tiny_chip(), 1);
+        let two_traces = [FaultTrace::default(), FaultTrace::default()];
+        assert!(serve_fleet(&SweepExec::new(1), &fc, &streams, &two_traces).is_err());
+        // A fault trace naming a cluster the chip does not have.
+        let bad = [FaultTrace::new(vec![FaultEvent {
+            cycle: 5,
+            kind: FaultKind::Cluster { cluster: 99 },
+        }])];
+        assert!(serve_fleet(&SweepExec::new(1), &fc, &streams, &bad).is_err());
+    }
+}

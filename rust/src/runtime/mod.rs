@@ -1,7 +1,10 @@
 //! PJRT runtime: loads the AOT-compiled JAX/Pallas predictor artifacts and
 //! executes them from the rust request path. The [`serve`] submodule is
 //! the server-simulation front-end (tenant specs, service traces, ANTT
-//! math) shared by `amoeba serve-sim` and the harness's server sweep.
+//! math) shared by `amoeba serve-sim` and the harness's server sweep;
+//! [`fleet`] scales it out to a health-monitored pool of chips with
+//! admission control, elastic scaling, and chip-to-chip migration
+//! (`amoeba serve-fleet`, `figures --fig fleet`).
 //!
 //! Interchange format is HLO **text** (`artifacts/*.hlo.txt`), produced by
 //! `python/compile/aot.py`. Text is used instead of a serialized
@@ -25,6 +28,7 @@
 //! default build compiles and the simulator itself always runs on the
 //! native predictor.
 
+pub mod fleet;
 pub mod serve;
 
 use std::fmt;

@@ -323,7 +323,8 @@ pub struct FailoverConfig {
     /// unserved (deadline truncation on a faulted chip).
     pub max_retries: u32,
     /// Failed attempts (shared run included) before the tenant is
-    /// quarantined: no further retries, remaining launches dropped.
+    /// quarantined: no further retries, no migration, remaining launches
+    /// dropped.
     pub quarantine_after: u32,
     /// Base backoff in cycles; attempt `a` waits `base * 2^a` plus a
     /// seeded jitter below `base`.
@@ -384,6 +385,34 @@ pub fn backoff_delay(fo: &FailoverConfig, tenant: usize, attempt: u32) -> u64 {
     exp.saturating_add(jitter)
 }
 
+/// Build the retry stream for a tenant's `pending` launches: the batch
+/// is pushed out to `delay`, but each launch keeps its original
+/// inter-arrival offset relative to the earliest pending one
+/// (`delay + (arrival - first_pending_arrival)`), so the retry preserves
+/// the trace's shape and its `queue_delay` stats stay meaningful instead
+/// of every launch landing on the same cycle.
+pub(crate) fn retry_stream(
+    stream: &KernelStream,
+    pending: &[(usize, StreamLaunch)],
+    delay: u64,
+) -> KernelStream {
+    let first = pending.iter().map(|(_, l)| l.arrival).min().unwrap_or(0);
+    KernelStream {
+        name: stream.name.clone(),
+        profile: stream.profile.clone(),
+        scheme: stream.scheme,
+        priority: stream.priority,
+        slo_turnaround: stream.slo_turnaround,
+        launches: pending
+            .iter()
+            .map(|(_, l)| StreamLaunch {
+                arrival: delay + (l.arrival - first),
+                kernel: l.kernel.clone(),
+            })
+            .collect(),
+    }
+}
+
 /// Serve `streams` on a chip with `faults` injected, then heal: every
 /// launch the shared run left unserved (its cluster retired, or the
 /// deadline hit while degraded) is retried on spare healthy capacity —
@@ -393,7 +422,9 @@ pub fn backoff_delay(fo: &FailoverConfig, tenant: usize, attempt: u32) -> u64 {
 /// failures.
 ///
 /// Launches still unserved after the retry budget get one **live
-/// migration**: the tenant's stream is replayed alone under the same
+/// migration** — unless the tenant is already at the quarantine bar
+/// (`fo.quarantine_after` failures), which cuts it off from retries
+/// *and* migration alike: the tenant's stream is replayed alone under the same
 /// fault schedule with a checkpoint armed at the first injection cycle —
 /// the capture runs *before* injection, so it holds the tenant's
 /// in-flight, still-healthy machine state at a CTA dispatch boundary —
@@ -445,17 +476,7 @@ pub fn serve_with_failover(
             attempt += 1;
             h.attempts += 1;
             let delay = backoff_delay(fo, ti, attempt);
-            let retry = KernelStream {
-                name: stream.name.clone(),
-                profile: stream.profile.clone(),
-                scheme: stream.scheme,
-                priority: stream.priority,
-                slo_turnaround: stream.slo_turnaround,
-                launches: pending
-                    .iter()
-                    .map(|(_, l)| StreamLaunch { arrival: delay, kernel: l.kernel.clone() })
-                    .collect(),
-            };
+            let retry = retry_stream(stream, &pending, delay);
             let rep = serve_streams(&cfg, &[retry], PartitionPolicy::Static)?;
             let mut done = vec![false; pending.len()];
             for l in rep.launches.iter().filter(|l| l.finish != u64::MAX) {
@@ -480,7 +501,9 @@ pub fn serve_with_failover(
         // checkpoint armed at the first injection cycle (captured state
         // is pre-injection, i.e. healthy), strip the faults that have
         // not fired yet, and finish the stream on a restored machine.
-        if !pending.is_empty() && !faults.is_empty() {
+        // A tenant at the quarantine bar is cut off here too — the
+        // `quarantine_after` contract drops its remaining launches.
+        if !pending.is_empty() && !faults.is_empty() && h.failures < fo.quarantine_after {
             let alone = alone_streams(streams, ti);
             let first_fault = faults.events[0].cycle;
             let dense = crate::sim::gpu::dense_env();
@@ -774,12 +797,12 @@ mod tests {
             FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 0 } },
             FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 1 } },
         ]);
-        let fo = FailoverConfig { max_retries: 0, quarantine_after: 1, ..FailoverConfig::default() };
+        let fo = FailoverConfig { max_retries: 0, quarantine_after: 2, ..FailoverConfig::default() };
         let (shared, health) =
             serve_with_failover(&cfg, &streams, PartitionPolicy::Static, &fo, &faults).unwrap();
         assert!(shared.deadline_hit, "dead chip must truncate the shared run");
         for (ti, h) in health.iter().enumerate() {
-            assert!(h.quarantined, "no retry budget: failures hit the bar");
+            assert!(!h.quarantined, "one failure stays below the quarantine bar");
             assert!(h.migrated, "tenant {ti} must have been migrated");
             assert_eq!(h.attempts, 2, "shared attempt + the migration");
             assert_eq!(h.dropped, 0, "migration must serve everything");
@@ -789,6 +812,59 @@ mod tests {
         let again = serve_with_failover(&cfg, &streams, PartitionPolicy::Static, &fo, &faults).unwrap();
         assert_eq!(shared, again.0);
         assert_eq!(health, again.1);
+    }
+
+    #[test]
+    fn quarantined_tenant_is_never_migrated() {
+        use crate::sim::fault::{FaultEvent, FaultKind};
+        let (cfg, streams) = failover_streams();
+        // Same dead chip as the migration test, but a one-strike
+        // quarantine: the shared-run failure alone hits the bar, so the
+        // `quarantine_after` contract ("no further retries, no migration,
+        // remaining launches dropped") must hold — the migration block
+        // may not run for a quarantined tenant.
+        let faults = FaultTrace::new(vec![
+            FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 0 } },
+            FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 1 } },
+        ]);
+        let fo = FailoverConfig { max_retries: 0, quarantine_after: 1, ..FailoverConfig::default() };
+        let (shared, health) =
+            serve_with_failover(&cfg, &streams, PartitionPolicy::Static, &fo, &faults).unwrap();
+        assert!(shared.deadline_hit);
+        for (ti, h) in health.iter().enumerate() {
+            assert!(h.quarantined, "tenant {ti} hit the one-strike bar");
+            assert!(!h.migrated, "quarantine must cut off migration");
+            assert_eq!(h.attempts, 1, "the shared run only — no retry, no migration");
+            assert_eq!(h.served, 0);
+            assert_eq!(h.dropped as usize, streams[ti].launches.len(), "drops stay honest");
+        }
+    }
+
+    #[test]
+    fn retry_stream_preserves_inter_arrival_spacing() {
+        let (_, streams) = failover_streams();
+        let stream = &streams[0];
+        // Pending launches with distinct original arrivals 100/250/600.
+        let pending: Vec<(usize, StreamLaunch)> = [100u64, 250, 600]
+            .iter()
+            .enumerate()
+            .map(|(i, &arrival)| {
+                (i, StreamLaunch { arrival, kernel: stream.launches[0].kernel.clone() })
+            })
+            .collect();
+        let retry = retry_stream(stream, &pending, 5_000);
+        let arrivals: Vec<u64> = retry.launches.iter().map(|l| l.arrival).collect();
+        assert_eq!(
+            arrivals,
+            vec![5_000, 5_150, 5_500],
+            "batch starts at the backoff delay and keeps the trace shape"
+        );
+        // The tenant identity rides along unchanged.
+        assert_eq!(retry.name, stream.name);
+        assert_eq!(retry.scheme, stream.scheme);
+        // A single pending launch degenerates to the bare delay.
+        let solo = retry_stream(stream, &pending[1..2], 7_777);
+        assert_eq!(solo.launches[0].arrival, 7_777);
     }
 
     #[test]

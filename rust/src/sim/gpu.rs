@@ -99,22 +99,38 @@ pub(crate) fn dense_env() -> bool {
     })
 }
 
-/// Cached `AMOEBA_TICK_JOBS` worker count for intra-simulation parallel
+/// Cached `AMOEBA_TICK_JOBS` policy for intra-simulation parallel
 /// ticking: how many threads [`Gpu::tick_active`] fans the live cluster
-/// set across *within one cycle*. Defaults to 1 (the serial loop);
-/// unparsable or zero values clamp to 1. Like `AMOEBA_DENSE`, this is
-/// pure execution policy — reports are bit-identical for any count
-/// (enforced in `tests/exec_determinism.rs`) — so it deliberately stays
-/// outside the sweep-memo fingerprints in [`crate::harness`].
-pub(crate) fn tick_jobs_env() -> usize {
-    static JOBS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *JOBS.get_or_init(|| {
-        std::env::var("AMOEBA_TICK_JOBS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or(1)
-            .max(1)
+/// set across *within one cycle*. Returns `(fixed_count, auto)`:
+/// a numeric value pins the count (zero or unparsable values clamp to 1,
+/// the serial loop); the literal `auto` enables adaptive sizing, where
+/// the fan-out is derived from the live-set width every cycle (see
+/// [`Gpu::set_tick_jobs_auto`]). Like `AMOEBA_DENSE`, this is pure
+/// execution policy — reports are bit-identical for any count, fixed or
+/// adaptive (enforced in `tests/exec_determinism.rs`) — so it
+/// deliberately stays outside the sweep-memo fingerprints in
+/// [`crate::harness`].
+pub(crate) fn tick_jobs_env() -> (usize, bool) {
+    static JOBS: std::sync::OnceLock<(usize, bool)> = std::sync::OnceLock::new();
+    *JOBS.get_or_init(|| match std::env::var("AMOEBA_TICK_JOBS") {
+        Ok(v) if v.trim().eq_ignore_ascii_case("auto") => (1, true),
+        Ok(v) => (v.parse::<usize>().ok().unwrap_or(1).max(1), false),
+        Err(_) => (1, false),
     })
+}
+
+/// Live clusters per worker the adaptive (`auto`) tick-jobs policy aims
+/// for: chips at or below one batch stay on the plain serial loop, wider
+/// live sets get one worker per `AUTO_TICK_CLUSTERS_PER_JOB` clusters
+/// (capped at the machine's parallelism). The divisor keeps per-worker
+/// batches large enough that the outbox/merge overhead stays amortised.
+pub(crate) const AUTO_TICK_CLUSTERS_PER_JOB: usize = 8;
+
+/// Cached host parallelism cap for the adaptive tick-jobs policy (a
+/// wall-clock knob only: worker count never changes simulation results).
+fn host_parallelism() -> usize {
+    static PAR: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *PAR.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 /// One Fig 19 sample: cycle + per-cluster mode snapshot.
@@ -529,6 +545,11 @@ pub struct Gpu {
     /// (>= 1; 1 = serial). Defaults to `AMOEBA_TICK_JOBS`; see
     /// [`Gpu::set_tick_jobs`]. The dense reference loop ignores it.
     tick_jobs: usize,
+    /// Adaptive tick-jobs sizing (`AMOEBA_TICK_JOBS=auto` /
+    /// [`Gpu::set_tick_jobs_auto`]): the cluster-phase fan-out is derived
+    /// from the live-set width each cycle instead of the fixed
+    /// `tick_jobs` count. The dense reference loop ignores it too.
+    tick_jobs_auto: bool,
     /// Reusable per-cluster injection buffers for the parallel cluster
     /// phase (scratch — rebuilt each cycle, never checkpointed).
     outboxes: Vec<ClusterOutbox>,
@@ -592,6 +613,7 @@ impl Gpu {
             }
         }
         let layout = ChipLayout::homogeneous(n_clusters, initial_fused, cfg.num_mcs);
+        let (tick_jobs, tick_jobs_auto) = tick_jobs_env();
         Ok(Gpu {
             cfg: cfg.clone(),
             scheme,
@@ -610,7 +632,8 @@ impl Gpu {
             decisions: Vec::new(),
             reply_scratch: Vec::with_capacity(MC_REPLY_BUDGET),
             dense: dense_env(),
-            tick_jobs: tick_jobs_env(),
+            tick_jobs,
+            tick_jobs_auto,
             outboxes: Vec::new(),
             sched: ActiveSet::new(n_clusters + cfg.num_mcs + 1),
             noc_seen_epoch: 0,
@@ -642,8 +665,38 @@ impl Gpu {
     /// Pure wall-clock policy: any count produces bit-identical reports
     /// by the outbox/fixed-merge-order contract, and the dense reference
     /// loop ([`Gpu::set_dense`]) always ticks serially regardless.
+    /// Pinning a fixed count disables adaptive sizing
+    /// ([`Gpu::set_tick_jobs_auto`]).
     pub fn set_tick_jobs(&mut self, jobs: usize) {
         self.tick_jobs = jobs.max(1);
+        self.tick_jobs_auto = false;
+    }
+
+    /// Enable adaptive tick-job sizing (`AMOEBA_TICK_JOBS=auto`): instead
+    /// of a fixed count, the cluster-phase fan-out is derived from the
+    /// live-set width each cycle — one worker per
+    /// [`AUTO_TICK_CLUSTERS_PER_JOB`] live clusters, capped at the host's
+    /// parallelism — so a mostly-parked chip ticks serially (no spawn
+    /// overhead) and a hot wide chip fans out. Chips at or below one
+    /// batch of clusters stay on the plain serial loop outright. Like the
+    /// fixed count this is pure wall-clock policy: reports are
+    /// bit-identical to `tick_jobs = 1` (enforced in
+    /// `tests/exec_determinism.rs`), and the dense loop ignores it.
+    pub fn set_tick_jobs_auto(&mut self, auto: bool) {
+        self.tick_jobs_auto = auto;
+        if auto {
+            self.tick_jobs = 1;
+        }
+    }
+
+    /// Worker count for a cluster phase with `live` live clusters under
+    /// the current policy (fixed count, or live-width-derived in auto).
+    fn effective_tick_jobs(&self, live: usize) -> usize {
+        if self.tick_jobs_auto {
+            (live / AUTO_TICK_CLUSTERS_PER_JOB).clamp(1, host_parallelism())
+        } else {
+            self.tick_jobs
+        }
     }
 
     // ------------------------------------------------------------------
@@ -1491,11 +1544,17 @@ impl Gpu {
         self.chip.cycles += 1;
 
         // 1. Live SM clusters (table order, as the dense loop). With
-        // `tick_jobs > 1` the live set is fanned across worker threads,
-        // each cluster injecting into a private outbox; the outboxes
-        // merge into the fabric in cluster-index order afterwards, so
-        // the NoC observes exactly the serial loop's sequence.
-        if self.tick_jobs > 1 {
+        // `tick_jobs > 1` (or adaptive sizing on a chip wide enough to
+        // ever warrant fan-out) the live set is fanned across worker
+        // threads, each cluster injecting into a private outbox; the
+        // outboxes merge into the fabric in cluster-index order
+        // afterwards, so the NoC observes exactly the serial loop's
+        // sequence. The auto gate is static on the chip's cluster count:
+        // a chip at or below one batch takes the plain serial loop and
+        // never pays the outbox plumbing.
+        if self.tick_jobs > 1
+            || (self.tick_jobs_auto && self.clusters.len() > AUTO_TICK_CLUSTERS_PER_JOB)
+        {
             self.tick_clusters_parallel(now, gens);
         } else {
             for ci in 0..self.clusters.len() {
@@ -1591,8 +1650,10 @@ impl Gpu {
         self.now += 1;
     }
 
-    /// Phase 1 of [`Gpu::tick_active`] fanned across `self.tick_jobs`
-    /// scoped worker threads. Determinism is by construction:
+    /// Phase 1 of [`Gpu::tick_active`] fanned across scoped worker
+    /// threads — the fixed `self.tick_jobs` count, or a live-set-width
+    /// derived count under adaptive sizing ([`Gpu::effective_tick_jobs`]).
+    /// Determinism is by construction:
     ///
     /// * each live cluster ticks against a private [`ClusterOutbox`]
     ///   whose admission mirrors the shared fabric exactly — the free
@@ -1629,7 +1690,7 @@ impl Gpu {
             live.push((ci, cl, ob));
         }
         if !live.is_empty() {
-            let n_workers = self.tick_jobs.min(live.len());
+            let n_workers = self.effective_tick_jobs(live.len()).min(live.len());
             let chunk = live.len().div_ceil(n_workers);
             std::thread::scope(|s| {
                 // The spawn loop holds the last chunk for the current
@@ -3027,6 +3088,24 @@ pub fn run_benchmark_seeded_jobs(
     Ok(gpu.run(profile, seed))
 }
 
+/// [`run_benchmark_seeded_jobs`] with adaptive tick-job sizing pinned on
+/// ([`Gpu::set_tick_jobs_auto`]): the cluster-phase fan-out follows the
+/// live-set width each cycle. Bit-identical to any fixed count —
+/// adaptive sizing only moves work between threads.
+pub fn run_benchmark_seeded_auto(
+    cfg: &SystemConfig,
+    profile: &BenchProfile,
+    scheme: Scheme,
+    seed: u64,
+    dense: bool,
+) -> crate::errors::Result<SimReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, scheme, controller)?;
+    gpu.set_dense(dense);
+    gpu.set_tick_jobs_auto(true);
+    Ok(gpu.run(profile, seed))
+}
+
 /// [`run_benchmark_faulted_dense`] with the intra-simulation worker
 /// count pinned explicitly (see [`run_benchmark_seeded_jobs`]).
 pub fn run_benchmark_faulted_jobs(
@@ -3659,6 +3738,22 @@ pub fn serve_streams_jobs(
     let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller)?;
     gpu.set_dense(dense);
     gpu.set_tick_jobs(tick_jobs);
+    gpu.run_streams(streams, policy)
+}
+
+/// [`serve_streams_jobs`] with adaptive tick-job sizing pinned on
+/// ([`Gpu::set_tick_jobs_auto`]) instead of a fixed worker count — the
+/// multi-tenant analog of [`run_benchmark_seeded_auto`].
+pub fn serve_streams_auto(
+    cfg: &SystemConfig,
+    streams: &[KernelStream],
+    policy: PartitionPolicy,
+    dense: bool,
+) -> crate::errors::Result<StreamReport> {
+    let controller = Controller::native(cfg);
+    let mut gpu = Gpu::new(cfg, Scheme::Baseline, controller)?;
+    gpu.set_dense(dense);
+    gpu.set_tick_jobs_auto(true);
     gpu.run_streams(streams, policy)
 }
 

@@ -11,12 +11,14 @@
 
 use amoeba_gpu::config::{Scheme, SystemConfig};
 use amoeba_gpu::harness::{SimJob, StreamJob, SweepExec};
+use amoeba_gpu::runtime::fleet::{serve_fleet, ChipHealth, FleetConfig};
 use amoeba_gpu::sim::fault::{FaultEvent, FaultKind, FaultTrace};
 use amoeba_gpu::sim::gpu::{
     run_benchmark_faulted_dense, run_benchmark_faulted_jobs, run_benchmark_resume,
-    run_benchmark_seeded, run_benchmark_seeded_dense, run_benchmark_seeded_jobs,
-    run_benchmark_snapshot, serve_streams_dense, serve_streams_faulted_dense, serve_streams_jobs,
-    serve_streams_resume, serve_streams_snapshot, PartitionPolicy, SimReport, StreamReport,
+    run_benchmark_seeded, run_benchmark_seeded_auto, run_benchmark_seeded_dense,
+    run_benchmark_seeded_jobs, run_benchmark_snapshot, serve_streams_auto, serve_streams_dense,
+    serve_streams_faulted_dense, serve_streams_jobs, serve_streams_resume, serve_streams_snapshot,
+    PartitionPolicy, SimReport, StreamReport,
 };
 use amoeba_gpu::workload::{bench, shrink_streams, traffic_trace, KernelStream, Priority};
 
@@ -812,4 +814,186 @@ fn tick_jobs_ignored_by_dense_and_matches_dense() {
     assert_reports_identical(&dense1, &dense4, "dense loop must ignore tick-jobs");
     let fanned = run_benchmark_seeded_jobs(&cfg, &p, Scheme::Hetero, 0xD37, false, 4).unwrap();
     assert_reports_identical(&dense1, &fanned, "fanned active-set vs dense reference");
+}
+
+// ----------------------------------------------------------------------
+// Adaptive tick-job sizing (`AMOEBA_TICK_JOBS=auto` / set_tick_jobs_auto):
+// the sizer re-picks the worker count from the live-cluster census every
+// cycle, so the worker count *changes across the run* — the bit-identity
+// contract must hold for every census-driven count it can produce, not
+// just a fixed N.
+// ----------------------------------------------------------------------
+
+/// Auto-sized fan-out vs the 1-worker walk on a chip wide enough that
+/// the sizer genuinely picks multiple workers (20 clusters, hot
+/// occupancy), and on a narrow chip where it stays serial — both must
+/// be bit-identical to the fixed 1-worker reference.
+#[test]
+fn tick_jobs_auto_bit_identical_single_app() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.num_sms = 40; // 20 clusters: above the 8-clusters-per-job floor
+    cfg.num_mcs = 8;
+    cfg.max_cycles = 1_500_000;
+    let mut p = bench("BFS").unwrap();
+    p.num_ctas = 80; // ~4 CTAs per cluster: the census stays high
+    p.insns_per_thread = 60;
+    p.num_kernels = 1;
+    for scheme in [Scheme::Baseline, Scheme::Hetero] {
+        let label = format!("auto tick-jobs BFS under {scheme}");
+        let serial = run_benchmark_seeded_jobs(&cfg, &p, scheme, 0xD37, false, 1).unwrap();
+        let auto = run_benchmark_seeded_auto(&cfg, &p, scheme, 0xD37, false).unwrap();
+        assert_reports_identical(&serial, &auto, &label);
+    }
+    // Narrow chip: the sizer never crosses its floor, stays serial.
+    let narrow = SystemConfig::tiny();
+    let mut np = bench("CP").unwrap();
+    np.num_ctas = 8;
+    np.insns_per_thread = 80;
+    np.num_kernels = 1;
+    let serial = run_benchmark_seeded_jobs(&narrow, &np, Scheme::Baseline, 0xD37, false, 1).unwrap();
+    let auto = run_benchmark_seeded_auto(&narrow, &np, Scheme::Baseline, 0xD37, false).unwrap();
+    assert_reports_identical(&serial, &auto, "auto tick-jobs on a 2-cluster chip");
+}
+
+/// The dense reference loop ignores the auto sizer exactly as it ignores
+/// a fixed worker count — and the auto-fanned active-set run still equals
+/// that dense reference (dense == skip == auto-fanned-skip).
+#[test]
+fn tick_jobs_auto_ignored_by_dense() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.num_sms = 40;
+    cfg.num_mcs = 8;
+    cfg.max_cycles = 1_500_000;
+    let mut p = bench("BFS").unwrap();
+    p.num_ctas = 80;
+    p.insns_per_thread = 60;
+    p.num_kernels = 1;
+    let dense1 = run_benchmark_seeded_jobs(&cfg, &p, Scheme::Baseline, 0xD37, true, 1).unwrap();
+    let dense_auto = run_benchmark_seeded_auto(&cfg, &p, Scheme::Baseline, 0xD37, true).unwrap();
+    assert_reports_identical(&dense1, &dense_auto, "dense loop must ignore the auto sizer");
+    let auto = run_benchmark_seeded_auto(&cfg, &p, Scheme::Baseline, 0xD37, false).unwrap();
+    assert_reports_identical(&dense1, &auto, "auto-fanned active-set vs dense reference");
+}
+
+/// Multi-tenant streams under the auto sizer: the census swings as
+/// tenants arrive and drain (exactly the regime a fixed worker count
+/// can't follow), and every launch record must stay identical to the
+/// 1-worker walk under both partition policies.
+#[test]
+fn tick_jobs_auto_bit_identical_streams() {
+    let mut cfg = SystemConfig::tiny();
+    cfg.num_sms = 24; // 12 clusters: wide enough to engage the fan-out path
+    cfg.num_mcs = 8;
+    cfg.max_cycles = 1_500_000;
+    let tenants = [
+        (bench("BFS").unwrap(), Scheme::Baseline),
+        (bench("CP").unwrap(), Scheme::Baseline),
+        (bench("RAY").unwrap(), Scheme::WarpRegroup),
+    ];
+    let mut streams = traffic_trace(&tenants, 2, 5_000, 0xD37);
+    shrink_streams(&mut streams, 8, 80);
+    for policy in [PartitionPolicy::Static, PartitionPolicy::Adaptive] {
+        let label = format!("auto tick-jobs streams under {policy}");
+        let serial = serve_streams_jobs(&cfg, &streams, policy, false, 1).unwrap();
+        let auto = serve_streams_auto(&cfg, &streams, policy, false).unwrap();
+        assert_stream_reports_identical(&serial, &auto, &label);
+    }
+}
+
+// ----------------------------------------------------------------------
+// Fleet serving: the pool scheduler fans per-chip shards through the
+// sweep executor, so the chip-thread count must be invisible in the
+// FleetReport — for healthy pools AND through the health/migration
+// machinery a chip loss engages.
+// ----------------------------------------------------------------------
+
+fn fleet_chip() -> SystemConfig {
+    let mut c = SystemConfig::tiny();
+    c.max_cycles = 300_000;
+    c
+}
+
+fn fleet_trace(n: usize, seed: u64) -> Vec<KernelStream> {
+    let names = ["CP", "BFS"];
+    let tenants: Vec<_> =
+        (0..n).map(|i| (bench(names[i % names.len()]).unwrap(), Scheme::Baseline)).collect();
+    let mut streams = traffic_trace(&tenants, 2, 5_000, seed);
+    shrink_streams(&mut streams, 4, 40);
+    streams
+}
+
+/// Kills both clusters of a tiny chip at cycle 10 — total chip loss.
+fn chip_loss() -> FaultTrace {
+    FaultTrace::new(vec![
+        FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 0 } },
+        FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 1 } },
+    ])
+}
+
+/// Serial vs parallel chip serving with a chip loss in flight: the
+/// FleetReport — placements, health ledger, migrations, every per-chip
+/// StreamReport — must be bit-identical for any executor thread count,
+/// and re-serving the same fleet on a warm executor must be pure cache
+/// hits (migration replay happens outside the memo and is deterministic).
+#[test]
+fn fleet_serial_vs_parallel_chips_bit_identical() {
+    let fc = FleetConfig::pool(fleet_chip(), 3);
+    let streams = fleet_trace(4, 0xD37);
+    let faults = vec![chip_loss(), FaultTrace::default(), FaultTrace::default()];
+    let ser = SweepExec::new(1);
+    let par = SweepExec::new(4);
+    let a = serve_fleet(&ser, &fc, &streams, &faults).unwrap();
+    let b = serve_fleet(&par, &fc, &streams, &faults).unwrap();
+    assert!(
+        a.migrations >= 1 || a.dropped >= 1,
+        "the chip loss must actually strand work, or this pins nothing"
+    );
+    assert_eq!(a, b, "fleet report must be bit-identical across chip-thread counts");
+    let (_, misses_before) = par.cache_stats();
+    let again = serve_fleet(&par, &fc, &streams, &faults).unwrap();
+    let (_, misses_after) = par.cache_stats();
+    assert_eq!(misses_before, misses_after, "re-serving the fleet must not simulate");
+    assert_eq!(a, again, "re-served fleet report must be identical");
+}
+
+/// Chip-loss accounting is honest end to end: the dead chip is marked
+/// Dead and quarantined, every stranded tenant either lands on a healthy
+/// peer (migrated, zero drops) or is dropped with `finish == u64::MAX`
+/// semantics rolled up into the drop counters — and the fleet-level
+/// conservation equation holds exactly.
+#[test]
+fn fleet_chip_loss_accounting_is_honest() {
+    let fc = FleetConfig::pool(fleet_chip(), 2);
+    let streams = fleet_trace(2, 0xD37);
+    let faults = vec![chip_loss(), FaultTrace::default()];
+    let exec = SweepExec::new(4);
+    let rep = serve_fleet(&exec, &fc, &streams, &faults).unwrap();
+    let total: u32 = streams.iter().map(|s| s.launches.len() as u32).sum();
+    assert_eq!(
+        rep.served + rep.dropped + rep.rejected_launches,
+        total,
+        "every launch is served once, or honestly rejected/dropped"
+    );
+    assert_eq!(rep.chips[0].health, ChipHealth::Dead, "chip 0 lost every cluster");
+    assert!(rep.chips[0].quarantined, "a dead chip is quarantined");
+    for ft in &rep.tenants {
+        if ft.rejected.is_some() {
+            assert_eq!(ft.served + ft.dropped, 0, "rejected tenants never run");
+            continue;
+        }
+        let launches = streams[ft.tenant].launches.len() as u32;
+        assert_eq!(
+            ft.served + ft.dropped,
+            launches,
+            "tenant {}: per-tenant conservation",
+            ft.tenant
+        );
+        if ft.chip == Some(0) {
+            assert!(
+                ft.migrated_to.is_some() || ft.dropped > 0,
+                "tenant {} was stranded on the dead chip: it must migrate or drop honestly",
+                ft.tenant
+            );
+        }
+    }
 }

@@ -1218,6 +1218,135 @@ fn prop_memo_truncation_never_panics() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Fleet conservation under randomized pools, tenant mixes, and chip
+/// losses: every launch in the trace is served exactly once or honestly
+/// rejected/dropped — never double-served, never silently lost. The
+/// per-tenant ledgers roll up to the fleet totals exactly, no tenant is
+/// resident on two chips, and a migrated-in tenant always arrives from a
+/// non-healthy source chip onto a different, healthy one.
+#[test]
+fn prop_fleet_conservation() {
+    use amoeba_gpu::harness::SweepExec;
+    use amoeba_gpu::runtime::fleet::{serve_fleet, ChipHealth, FleetConfig};
+    let exec = SweepExec::new(2);
+    let mut rng = Pcg32::new(0xF1EE7, 11);
+    let names = ["CP", "BFS", "SM"];
+    for case in 0u64..5 {
+        let pool = 1 + rng.next_bounded(3) as usize;
+        let n_tenants = 2 + rng.next_bounded(4) as usize;
+        let mut chip = SystemConfig::tiny();
+        chip.max_cycles = 300_000;
+        let mut fc = FleetConfig::pool(chip, pool);
+        fc.tenants_per_chip = 1 + rng.next_bounded(2) as usize;
+        let tenants: Vec<_> = (0..n_tenants)
+            .map(|i| (bench(names[i % names.len()]).unwrap(), Scheme::Baseline))
+            .collect();
+        let gap = 2_000 + rng.next_bounded(8_000) as u64;
+        let mut streams = traffic_trace(&tenants, 2, gap, 0xD37 + case);
+        shrink_streams(&mut streams, 4, 40);
+        // Half the cases lose one random chip outright at cycle 10.
+        let mut faults = vec![FaultTrace::default(); pool];
+        if rng.chance(0.5) {
+            let victim = rng.next_bounded(pool as u32) as usize;
+            faults[victim] = FaultTrace::new(vec![
+                FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 0 } },
+                FaultEvent { cycle: 10, kind: FaultKind::Cluster { cluster: 1 } },
+            ]);
+        }
+        let rep = serve_fleet(&exec, &fc, &streams, &faults)
+            .unwrap_or_else(|e| panic!("case {case}: serve_fleet failed: {e}"));
+
+        // Fleet-level conservation.
+        let total: u32 = streams.iter().map(|s| s.launches.len() as u32).sum();
+        assert_eq!(
+            rep.served + rep.dropped + rep.rejected_launches,
+            total,
+            "case {case}: fleet conservation"
+        );
+
+        // Per-tenant ledgers roll up to the fleet totals exactly.
+        let (mut served, mut dropped, mut rejected) = (0u32, 0u32, 0u32);
+        for ft in &rep.tenants {
+            let launches = streams[ft.tenant].launches.len() as u32;
+            if ft.rejected.is_some() {
+                assert!(ft.chip.is_none(), "case {case}: rejected tenant {} holds a chip", ft.tenant);
+                assert_eq!(
+                    ft.served + ft.dropped,
+                    0,
+                    "case {case}: rejected tenant {} ran anyway",
+                    ft.tenant
+                );
+                rejected += launches;
+            } else {
+                assert!(ft.chip.is_some(), "case {case}: admitted tenant {} has no chip", ft.tenant);
+                assert_eq!(
+                    ft.served + ft.dropped,
+                    launches,
+                    "case {case}: tenant {} conservation",
+                    ft.tenant
+                );
+            }
+            served += ft.served;
+            dropped += ft.dropped;
+        }
+        assert_eq!(served, rep.served, "case {case}: served roll-up");
+        assert_eq!(dropped, rep.dropped, "case {case}: dropped roll-up");
+        assert_eq!(rejected, rep.rejected_launches, "case {case}: rejected-launch roll-up");
+        assert_eq!(
+            rep.tenants.iter().filter(|t| t.rejected.is_some()).count() as u32,
+            rep.rejections,
+            "case {case}: rejection count"
+        );
+        assert_eq!(
+            rep.tenants.iter().filter(|t| t.migrated_to.is_some()).count() as u32,
+            rep.migrations,
+            "case {case}: migration count"
+        );
+
+        // Residency: every admitted tenant lives on exactly one chip, and
+        // a migrated-in tenant arrives from a non-healthy source onto a
+        // different, healthy destination.
+        let mut seen = vec![0usize; streams.len()];
+        for c in &rep.chips {
+            for &ti in &c.tenants {
+                seen[ti] += 1;
+                assert_eq!(
+                    rep.tenants[ti].chip,
+                    Some(c.chip),
+                    "case {case}: tenant {ti} listed on a chip that is not its home"
+                );
+            }
+            for &ti in &c.migrated_in {
+                let src = rep.tenants[ti].chip.expect("migrated tenant was admitted");
+                assert_ne!(src, c.chip, "case {case}: tenant {ti} migrated onto its own chip");
+                assert_eq!(
+                    rep.tenants[ti].migrated_to,
+                    Some(c.chip),
+                    "case {case}: migrated_in/migrated_to disagree for tenant {ti}"
+                );
+                assert_ne!(
+                    rep.chips[src].health,
+                    ChipHealth::Healthy,
+                    "case {case}: tenant {ti} migrated off a healthy chip"
+                );
+                assert_eq!(
+                    c.health,
+                    ChipHealth::Healthy,
+                    "case {case}: tenant {ti} migrated onto a non-healthy chip"
+                );
+            }
+        }
+        for (ti, ft) in rep.tenants.iter().enumerate() {
+            let expected = usize::from(ft.rejected.is_none());
+            assert_eq!(
+                seen[ti], expected,
+                "case {case}: tenant {ti} resident on {} chips",
+                seen[ti]
+            );
+        }
+    }
+}
+
 /// Active-mask algebra invariants under random masks.
 #[test]
 fn prop_mask_algebra() {
